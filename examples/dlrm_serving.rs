@@ -1,0 +1,133 @@
+//! End-to-end driver (DESIGN.md deliverable): serve a DLRM model with
+//! the full three-layer stack on a real small workload.
+//!
+//!   * L1/L2 (build time): the Pallas SLS kernel + JAX MLP were AOT-
+//!     lowered to `artifacts/*.hlo.txt` by `make artifacts`.
+//!   * Runtime: the Rust coordinator routes + batches requests; the
+//!     embedding stage runs the Ember-compiled DLC program; the MLP
+//!     runs through PJRT. Python is never on the request path.
+//!
+//! The run (a) checks end-to-end numerics against the fused
+//! `dlrm_full` JAX oracle executed via PJRT, and (b) reports serving
+//! latency/throughput — the record goes in EXPERIMENTS.md.
+//!
+//! Run: `make artifacts && cargo run --release --example dlrm_serving`
+
+use ember::coordinator::{BatchOptions, Coordinator, DlrmModel, Request};
+use ember::runtime::{ArgData, Runtime};
+use ember::util::rng::Rng;
+use std::time::{Duration, Instant};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let mut rt = Runtime::new(&artifacts)?;
+    println!("PJRT platform: {}", rt.platform());
+    let loaded = rt.load_all()?;
+    println!("compiled {} artifacts: {:?}\n", loaded.len(), loaded);
+
+    let model = DlrmModel::from_manifest(&rt, 42)?;
+    let (batch, tables, rows, max_lookups, dense_n) = (
+        model.batch,
+        model.num_tables,
+        model.table_rows,
+        model.max_lookups,
+        model.dense,
+    );
+
+    // ---- numerics: coordinator path vs fused JAX dlrm_full oracle ----
+    let mut rng = Rng::new(7);
+    let requests: Vec<Request> = (0..batch)
+        .map(|i| Request {
+            id: i as u64,
+            lookups: (0..tables)
+                .map(|_| (0..24).map(|_| rng.below(rows as u64) as i32).collect())
+                .collect(),
+            dense: (0..dense_n).map(|_| rng.f32()).collect(),
+        })
+        .collect();
+
+    let ours = model.infer_batch(&mut rt, &requests)?;
+
+    // oracle: one fused PJRT call with the same tables/weights
+    let (idxs, lens): (Vec<Vec<i32>>, Vec<Vec<i32>>) = (0..tables)
+        .map(|t| {
+            let mut idx = vec![0i32; batch * max_lookups];
+            let mut len = vec![0i32; batch];
+            for (i, r) in requests.iter().enumerate() {
+                let l = &r.lookups[t];
+                len[i] = l.len() as i32;
+                idx[i * max_lookups..i * max_lookups + l.len()].copy_from_slice(l);
+            }
+            (idx, len)
+        })
+        .unzip();
+    let dense_flat: Vec<f32> = (0..batch)
+        .flat_map(|i| requests[i].dense.clone())
+        .collect();
+    let d_in = tables * model.emb + dense_n;
+    let oracle = rt.execute_f32(
+        "dlrm_full",
+        &[
+            ArgData::f32(model.tables[0].as_f32(), &[rows, model.emb]),
+            ArgData::f32(model.tables[1].as_f32(), &[rows, model.emb]),
+            ArgData::i32(idxs[0].clone(), &[batch, max_lookups]),
+            ArgData::i32(lens[0].clone(), &[batch]),
+            ArgData::i32(idxs[1].clone(), &[batch, max_lookups]),
+            ArgData::i32(lens[1].clone(), &[batch]),
+            ArgData::f32(dense_flat, &[batch, dense_n]),
+            ArgData::f32(model.w1.clone(), &[d_in, model.hidden]),
+            ArgData::f32(model.b1.clone(), &[model.hidden]),
+            ArgData::f32(model.w2.clone(), &[model.hidden, 1]),
+            ArgData::f32(model.b2.clone(), &[1]),
+        ],
+    )?;
+    let got: Vec<f32> = ours.iter().map(|r| r.score).collect();
+    ember::util::quick::allclose(&got, &oracle[..got.len()], 1e-4, 1e-5)
+        .map_err(std::io::Error::other)?;
+    println!(
+        "numerics: coordinator (DAE embedding + PJRT MLP) == fused JAX dlrm_full oracle ✓ \
+         (batch of {batch}, max |ctr| diff < 1e-4)\n"
+    );
+
+    // ---- serving benchmark ----
+    let n_requests = 2048usize;
+    let coord = Coordinator::start(
+        DlrmModel::from_manifest(&rt, 42)?,
+        Some(artifacts.clone().into()),
+        BatchOptions { max_batch: batch, max_wait: Duration::from_millis(1) },
+    );
+    // concurrent open-loop clients
+    let mut rng = Rng::new(11);
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for i in 0..n_requests {
+        let req = Request {
+            id: i as u64,
+            lookups: (0..tables)
+                .map(|_| (0..24).map(|_| rng.below(rows as u64) as i32).collect())
+                .collect(),
+            dense: (0..dense_n).map(|_| rng.f32()).collect(),
+        };
+        handles.push((Instant::now(), coord.submit(req)?));
+    }
+    let mut lat: Vec<Duration> = handles
+        .into_iter()
+        .map(|(t, rx)| {
+            let _ = rx.recv().unwrap().unwrap();
+            t.elapsed()
+        })
+        .collect();
+    let wall = t0.elapsed();
+    lat.sort();
+    let stats = coord.shutdown();
+    println!("served {} requests in {:.2?}", stats.requests, wall);
+    println!("throughput: {:.0} req/s", n_requests as f64 / wall.as_secs_f64());
+    println!(
+        "latency: p50 {:.2?}  p95 {:.2?}  p99 {:.2?}",
+        lat[lat.len() / 2],
+        lat[(lat.len() as f64 * 0.95) as usize],
+        lat[((lat.len() as f64 * 0.99) as usize).min(lat.len() - 1)]
+    );
+    println!("batches: {} (mean size {:.1})", stats.batches, n_requests as f64 / stats.batches as f64);
+    Ok(())
+}

@@ -1,0 +1,95 @@
+//! GNN inference (paper §3.3): alternate Ember-compiled embedding
+//! aggregation with PJRT dense layers on a synthetic arxiv-like graph,
+//! then compare simulated DAE vs GPU-class execution (Fig. 8 shape).
+//!
+//! Run: `make artifacts && cargo run --release --example gnn_inference`
+
+use ember::compiler::passes::pipeline::{compile, CompileOptions, OptLevel};
+use ember::dae::MachineConfig;
+use ember::data::Tensor;
+use ember::frontend::embedding_ops::OpClass;
+use ember::frontend::formats::Csr;
+use ember::harness::simulate;
+use ember::interp::run_program;
+use ember::runtime::{ArgData, Runtime};
+use ember::util::rng::Rng;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let mut rt = Runtime::new(&artifacts)?;
+    let nodes = rt.manifest_usize(&["gnn", "nodes"]).unwrap_or(1024);
+    let feat = rt.manifest_usize(&["gnn", "feat"]).unwrap_or(64);
+    let max_deg = rt.manifest_usize(&["gnn", "max_deg"]).unwrap_or(16);
+    let out_w = rt.manifest_usize(&["gnn", "out"]).unwrap_or(64);
+
+    // synthetic arxiv-like graph at the artifact's static shape
+    let mut rng = Rng::new(3);
+    let rows: Vec<Vec<i32>> = (0..nodes)
+        .map(|_| {
+            let deg = rng.below(max_deg as u64 + 1) as usize;
+            (0..deg).map(|_| rng.below(nodes as u64) as i32).collect()
+        })
+        .collect();
+    let csr = Csr::from_rows(nodes, &rows);
+    let feats = Tensor::f32(vec![nodes, feat], rng.normal_vec(nodes * feat, 0.3));
+    let w: Vec<f32> = rng.normal_vec(feat * out_w, 0.1);
+    let b = vec![0f32; out_w];
+
+    // ---- layer 1: DAE-compiled SpMM aggregation, then PJRT check ----
+    let program = compile(&OpClass::Spmm, CompileOptions::at(OptLevel::O3))?;
+    let mut env = csr.bind_sls_env(&feats, true);
+    let agg = run_program(&program.dlc, &mut env)?;
+
+    // dense transform on the host (out = relu(agg @ W + b))
+    let mut h1 = vec![0f32; nodes * out_w];
+    for n in 0..nodes {
+        for o in 0..out_w {
+            let mut acc = b[o];
+            for k in 0..feat {
+                acc += agg[n * feat + k] * w[k * out_w + o];
+            }
+            h1[n * out_w + o] = acc.max(0.0);
+        }
+    }
+
+    // oracle: the fused JAX gnn_layer (Pallas SpMM + dense) via PJRT
+    let (idxs, lens, vals) = csr.to_padded(max_deg);
+    let oracle = rt.execute_f32(
+        "gnn_layer",
+        &[
+            ArgData::f32(feats.as_f32(), &[nodes, feat]),
+            ArgData::i32(idxs, &[nodes, max_deg]),
+            ArgData::i32(lens, &[nodes]),
+            ArgData::f32(vals, &[nodes, max_deg]),
+            ArgData::f32(w.clone(), &[feat, out_w]),
+            ArgData::f32(b.clone(), &[out_w]),
+        ],
+    )?;
+    ember::util::quick::allclose(&h1, &oracle, 1e-3, 1e-3).map_err(std::io::Error::other)?;
+    println!("layer numerics: DAE aggregation + dense == fused JAX gnn_layer (PJRT) ✓");
+
+    // ---- layer 2 chained on layer-1 output ----
+    let feats2 = Tensor::f32(vec![nodes, out_w], h1);
+    let mut env2 = csr.bind_sls_env(&feats2, true);
+    let agg2 = run_program(&program.dlc, &mut env2)?;
+    println!(
+        "2-layer inference done: output sum {:.3} over {} nodes\n",
+        agg2.iter().sum::<f32>(),
+        nodes
+    );
+
+    // ---- Fig. 8-shaped comparison: DAE vs GPU-class embedding stage ----
+    let mut e_dae = csr.bind_sls_env(&feats, true);
+    let dae = simulate(&program, MachineConfig::dae_tmu(), &mut e_dae)?;
+    let coupled = compile(&OpClass::Spmm, CompileOptions::at(OptLevel::O1))?;
+    let mut e_t4 = csr.bind_sls_env(&feats, true);
+    let t4 = simulate(&coupled, MachineConfig::t4_like(), &mut e_t4)?;
+    println!("embedding stage, simulated per core slice:");
+    println!("  t4-class lane : {:>9} cycles, bw util {:.1}%", t4.cycles, t4.bw_util * 100.0);
+    println!("  DAE core+TMU  : {:>9} cycles, bw util {:.1}%", dae.cycles, dae.bw_util * 100.0);
+    println!(
+        "  embedding speedup {:.2}x (paper: 1.6x-6.3x per-op, 2.6x end-to-end)",
+        t4.cycles as f64 / dae.cycles as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,117 @@
+"""AOT lowering: JAX -> HLO *text* artifacts for the Rust PJRT runtime.
+
+HLO text (NOT `lowered.compile().serialize()` / proto bytes) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids, which xla_extension 0.5.1 (what the published `xla` 0.1.6
+crate links) rejects with `proto.id() <= INT_MAX`. The text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Run `python -m compile.aot --out ../artifacts` from `python/`; `make
+artifacts` does exactly that and is a no-op when inputs are unchanged.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import config, model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_artifacts():
+    """Return {filename: hlo_text} for every module the Rust side loads."""
+    c = config
+    f32, i32 = jnp.float32, jnp.int32
+    arts = {}
+
+    # --- standalone SLS (numerics oracle for compiled DLC programs) ---
+    table = _spec((c.DLRM_TABLE_ROWS, c.DLRM_EMB))
+    idxs = _spec((c.DLRM_BATCH, c.DLRM_MAX_LOOKUPS), i32)
+    lens = _spec((c.DLRM_BATCH,), i32)
+    arts["sls_rm1.hlo.txt"] = to_hlo_text(
+        jax.jit(lambda t, i, l: (model.sls_op(t, i, l),)).lower(table, idxs, lens)
+    )
+
+    weights = _spec((c.DLRM_BATCH, c.DLRM_MAX_LOOKUPS))
+    arts["sls_weighted.hlo.txt"] = to_hlo_text(
+        jax.jit(lambda t, i, l, w: (model.sls_weighted_op(t, i, l, w),)).lower(
+            table, idxs, lens, weights
+        )
+    )
+
+    # --- DLRM top MLP (the PJRT-executed DNN stage of the server) ---
+    d_in = c.DLRM_TABLES * c.DLRM_EMB + c.DLRM_DENSE
+    x = _spec((c.DLRM_BATCH, d_in))
+    w1, b1 = _spec((d_in, c.DLRM_HIDDEN)), _spec((c.DLRM_HIDDEN,))
+    w2, b2 = _spec((c.DLRM_HIDDEN, 1)), _spec((1,))
+    arts["dlrm_mlp.hlo.txt"] = to_hlo_text(
+        jax.jit(lambda *a: (model.dlrm_mlp(*a),)).lower(x, w1, b1, w2, b2)
+    )
+
+    # --- full DLRM (end-to-end oracle for the serving example) ---
+    dense = _spec((c.DLRM_BATCH, c.DLRM_DENSE))
+    arts["dlrm_full.hlo.txt"] = to_hlo_text(
+        jax.jit(lambda *a: (model.dlrm_full(*a),)).lower(
+            table, table, idxs, lens, idxs, lens, dense, w1, b1, w2, b2
+        )
+    )
+
+    # --- GNN layer ---
+    feats = _spec((c.GNN_NODES, c.GNN_FEAT))
+    gidxs = _spec((c.GNN_NODES, c.GNN_MAX_DEG), i32)
+    glens = _spec((c.GNN_NODES,), i32)
+    gvals = _spec((c.GNN_NODES, c.GNN_MAX_DEG))
+    gw, gb = _spec((c.GNN_FEAT, c.GNN_OUT)), _spec((c.GNN_OUT,))
+    arts["gnn_layer.hlo.txt"] = to_hlo_text(
+        jax.jit(lambda *a: (model.gnn_layer(*a),)).lower(
+            feats, gidxs, glens, gvals, gw, gb
+        )
+    )
+
+    # --- BigBird block gather ---
+    keys = _spec((c.SPATTN_KEYS, c.SPATTN_EMB))
+    bidx = _spec((c.SPATTN_GATHERS,), i32)
+    fn = functools.partial(model.bigbird_gather, block=c.SPATTN_BLOCK)
+    arts["bigbird_gather.hlo.txt"] = to_hlo_text(
+        jax.jit(lambda k, b: (fn(k, b),)).lower(keys, bidx)
+    )
+
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    arts = build_artifacts()
+    for name, text in arts.items():
+        path = os.path.join(args.out, name)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(config.manifest(), f, indent=2)
+    print(f"wrote {os.path.join(args.out, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

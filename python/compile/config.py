@@ -1,0 +1,119 @@
+"""Static shapes shared between the JAX build path and the Rust runtime.
+
+Everything the Rust side loads via PJRT is AOT-lowered with the fixed
+shapes below; `aot.py` also dumps them into ``artifacts/manifest.json`` so
+the Rust runtime never hard-codes a number that python owns.
+
+The DLRM shapes follow RM1 in Table 3 of the paper (per-core slice):
+64 segments/batch, 16K-entry tables, 32-element vectors, 2 tables,
+up to 64 lookups per segment.
+"""
+
+# ---- DLRM (RM1-shaped serving slice) ----
+DLRM_BATCH = 64            # segments per batch per core (Table 3, RM1)
+DLRM_TABLE_ROWS = 16384    # embedding entries per table
+DLRM_EMB = 32              # elements per embedding vector
+DLRM_TABLES = 2            # tables per core
+DLRM_MAX_LOOKUPS = 64      # lookups per segment (padded)
+DLRM_DENSE = 13            # dense features per query (Criteo-style)
+DLRM_HIDDEN = 64           # MLP hidden width
+
+# ---- GNN layer (arxiv-shaped, scaled) ----
+GNN_NODES = 1024
+GNN_FEAT = 64
+GNN_MAX_DEG = 16           # padded neighbourhood size
+GNN_OUT = 64
+
+# ---- BigBird block-sparse gather ----
+SPATTN_KEYS = 1024         # key rows
+SPATTN_EMB = 64
+SPATTN_BLOCK = 4           # rows per block
+SPATTN_GATHERS = 64        # blocks gathered per query batch
+
+
+def manifest() -> dict:
+    return {
+        "dlrm": {
+            "batch": DLRM_BATCH,
+            "table_rows": DLRM_TABLE_ROWS,
+            "emb": DLRM_EMB,
+            "tables": DLRM_TABLES,
+            "max_lookups": DLRM_MAX_LOOKUPS,
+            "dense": DLRM_DENSE,
+            "hidden": DLRM_HIDDEN,
+        },
+        "gnn": {
+            "nodes": GNN_NODES,
+            "feat": GNN_FEAT,
+            "max_deg": GNN_MAX_DEG,
+            "out": GNN_OUT,
+        },
+        "spattn": {
+            "keys": SPATTN_KEYS,
+            "emb": SPATTN_EMB,
+            "block": SPATTN_BLOCK,
+            "gathers": SPATTN_GATHERS,
+        },
+        "artifacts": {
+            "sls": {
+                "file": "sls_rm1.hlo.txt",
+                "args": ["table[16384,32]f32", "idxs[64,64]i32", "lens[64]i32"],
+                "out": "out[64,32]f32",
+            },
+            "sls_weighted": {
+                "file": "sls_weighted.hlo.txt",
+                "args": [
+                    "table[16384,32]f32",
+                    "idxs[64,64]i32",
+                    "lens[64]i32",
+                    "weights[64,64]f32",
+                ],
+                "out": "out[64,32]f32",
+            },
+            "dlrm_mlp": {
+                "file": "dlrm_mlp.hlo.txt",
+                "args": [
+                    "x[64,77]f32",
+                    "w1[77,64]f32",
+                    "b1[64]f32",
+                    "w2[64,1]f32",
+                    "b2[1]f32",
+                ],
+                "out": "out[64,1]f32",
+            },
+            "dlrm_full": {
+                "file": "dlrm_full.hlo.txt",
+                "args": [
+                    "table0[16384,32]f32",
+                    "table1[16384,32]f32",
+                    "idxs0[64,64]i32",
+                    "lens0[64]i32",
+                    "idxs1[64,64]i32",
+                    "lens1[64]i32",
+                    "dense[64,13]f32",
+                    "w1[77,64]f32",
+                    "b1[64]f32",
+                    "w2[64,1]f32",
+                    "b2[1]f32",
+                ],
+                "out": "out[64,1]f32",
+            },
+            "gnn_layer": {
+                "file": "gnn_layer.hlo.txt",
+                "args": [
+                    "feats[1024,64]f32",
+                    "idxs[1024,16]i32",
+                    "lens[1024]i32",
+                    "vals[1024,16]f32",
+                    "w[64,64]f32",
+                    "b[64]f32",
+                ],
+                "out": "out[1024,64]f32",
+            },
+            "bigbird_gather": {
+                "file": "bigbird_gather.hlo.txt",
+                "args": ["keys[1024,64]f32", "block_idxs[64]i32"],
+                "out": "out[256,64]f32",
+            },
+        },
+    }

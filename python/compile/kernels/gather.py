@@ -1,0 +1,39 @@
+"""Layer-1 Pallas kernel: BigBird block-sparse gather (§2.2.2, §7.4).
+
+The paper's SpAttn op has *no compute*: it replicates blocks of key rows
+into the query tensor. On the DAE machine Ember compiles it to pure
+store-stream traffic that never touches the core; the TPU analogue is a
+grid over gathered blocks where each step does one dynamic-slice copy
+HBM->VMEM->HBM, keeping indices scalar.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_kernel(block_idx_ref, keys_ref, out_ref, *, block):
+    b = block_idx_ref[0]
+    rows = pl.load(keys_ref, (pl.dslice(b * block, block), slice(None)))
+    out_ref[...] = rows
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def gather_blocks(keys, block_idxs, *, block):
+    """keys [R,E] f32, block_idxs [N] i32 -> out [N*block, E]."""
+    n = block_idxs.shape[0]
+    _, emb = keys.shape
+    kernel = functools.partial(_gather_kernel, block=block)
+    return pl.pallas_call(
+        kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec(keys.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, emb), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n * block, emb), keys.dtype),
+        interpret=True,
+    )(block_idxs.astype(jnp.int32), keys)

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the *correctness references* (the paper's "imperative code",
+Fig. 10b): straightforward, obviously-correct implementations of the
+embedding operations. Every Pallas kernel is tested against these, and the
+Rust DLC interpreter is tested against the AOT-lowered versions of these
+through PJRT.
+"""
+
+import jax.numpy as jnp
+
+
+def sls_ref(table, idxs, lens):
+    """Sparse-Lengths-Sum (nn.EmbeddingBag sum mode).
+
+    table: [rows, emb] f32
+    idxs:  [segments, max_lookups] i32, padded with any valid row id
+    lens:  [segments] i32, number of valid lookups per segment
+    returns [segments, emb] f32: per-segment sum of looked-up rows.
+    """
+    # gather: [segments, max_lookups, emb]
+    gathered = table[idxs]
+    pos = jnp.arange(idxs.shape[1], dtype=jnp.int32)[None, :]
+    mask = (pos < lens[:, None]).astype(table.dtype)[:, :, None]
+    return jnp.sum(gathered * mask, axis=1)
+
+
+def sls_weighted_ref(table, idxs, lens, weights):
+    """Weighted SLS == SpMM with CSR weights (GNN aggregation, KG rescale)."""
+    gathered = table[idxs]
+    pos = jnp.arange(idxs.shape[1], dtype=jnp.int32)[None, :]
+    mask = (pos < lens[:, None]).astype(table.dtype)
+    w = (weights * mask)[:, :, None]
+    return jnp.sum(gathered * w, axis=1)
+
+
+def spmm_ref(feats, idxs, lens, vals):
+    """SpMM-like GNN neighbour aggregation; alias of weighted SLS."""
+    return sls_weighted_ref(feats, idxs, lens, vals)
+
+
+def sddmm_spmm_ref(feats, idxs, lens):
+    """FusedMM-style message passing: edge score = <h_u, h_v> (SDDMM),
+    then aggregate neighbour vectors scaled by the score (SpMM).
+
+    feats: [nodes, emb]; idxs/lens: CSR neighbourhoods (padded).
+    """
+    neigh = feats[idxs]                       # [nodes, deg, emb]
+    scores = jnp.einsum("ne,nde->nd", feats, neigh)
+    pos = jnp.arange(idxs.shape[1], dtype=jnp.int32)[None, :]
+    mask = (pos < lens[:, None]).astype(feats.dtype)
+    return jnp.einsum("nd,nde->ne", scores * mask, neigh)
+
+
+def kg_ref(table, idxs, semiring="plus_times"):
+    """Knowledge-graph lookup: one non-zero per row, optional semiring.
+
+    plus_times degenerates to a plain gather; max_plus keeps elementwise
+    max against 0 after the gather (a representative exotic semiring).
+    """
+    rows = table[idxs]
+    if semiring == "plus_times":
+        return rows
+    if semiring == "max_plus":
+        return jnp.maximum(rows, 0.0)
+    raise ValueError(semiring)
+
+
+def gather_blocks_ref(keys, block_idxs, block):
+    """BigBird block gather: replicate blocks of `block` consecutive key
+    rows into the output. block_idxs holds block numbers.
+
+    keys: [rows, emb]; block_idxs: [n] i32 -> out [n*block, emb].
+    """
+    starts = block_idxs.astype(jnp.int32) * block
+    row_ids = (starts[:, None] + jnp.arange(block, dtype=jnp.int32)[None, :]).reshape(-1)
+    return keys[row_ids]
+
+
+def mlp_ref(x, w1, b1, w2, b2):
+    """DLRM top MLP: relu hidden layer + sigmoid output."""
+    h = jnp.maximum(x @ w1 + b1, 0.0)
+    return 1.0 / (1.0 + jnp.exp(-(h @ w2 + b2)))

@@ -1,0 +1,94 @@
+"""Layer-1 Pallas kernels: Sparse-Lengths-Sum (SLS) and weighted SLS.
+
+The SLS embedding bag is the paper's central compute hot-spot (Fig. 10).
+On the paper's DAE machine the *access unit* walks `idxs`/`lens` and
+marshals embedding rows through a queue; on a TPU-shaped machine the same
+insight maps to:
+
+  * grid over segments (the paper's segment traversal `s_tr`),
+  * rows gathered with dynamic slices into a VMEM accumulator — the VMEM
+    scratch plays the role of the marshaling buffer ("bufferization"),
+  * indices/lengths stay scalar while embedding rows move as whole vectors
+    ("queue alignment"),
+  * the reduction is a dense vector add the VPU vectorizes
+    ("vectorization").
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernels lower to plain HLO. Real-TPU perf is
+estimated from the BlockSpec footprint in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sls_kernel(idxs_ref, lens_ref, table_ref, out_ref):
+    """One grid step = one segment: sum `lens` rows of `table`."""
+    n = lens_ref[0]
+    emb = table_ref.shape[1]
+    max_lookups = idxs_ref.shape[1]
+
+    def body(j, acc):
+        row = idxs_ref[0, j]
+        vec = pl.load(table_ref, (pl.dslice(row, 1), slice(None)))[0]
+        return acc + jnp.where(j < n, vec, jnp.zeros_like(vec))
+
+    acc = jax.lax.fori_loop(0, max_lookups, body, jnp.zeros((emb,), table_ref.dtype))
+    out_ref[0, :] = acc
+
+
+def _sls_weighted_kernel(idxs_ref, lens_ref, w_ref, table_ref, out_ref):
+    n = lens_ref[0]
+    emb = table_ref.shape[1]
+    max_lookups = idxs_ref.shape[1]
+
+    def body(j, acc):
+        row = idxs_ref[0, j]
+        w = w_ref[0, j]
+        vec = pl.load(table_ref, (pl.dslice(row, 1), slice(None)))[0]
+        return acc + jnp.where(j < n, w * vec, jnp.zeros_like(vec))
+
+    acc = jax.lax.fori_loop(0, max_lookups, body, jnp.zeros((emb,), table_ref.dtype))
+    out_ref[0, :] = acc
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sls(table, idxs, lens):
+    """Pallas SLS: table [R,E] f32, idxs [S,L] i32, lens [S] i32 -> [S,E]."""
+    segments, max_lookups = idxs.shape
+    _, emb = table.shape
+    return pl.pallas_call(
+        _sls_kernel,
+        grid=(segments,),
+        in_specs=[
+            pl.BlockSpec((1, max_lookups), lambda s: (s, 0)),
+            pl.BlockSpec((1,), lambda s: (s,)),
+            pl.BlockSpec(table.shape, lambda s: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, emb), lambda s: (s, 0)),
+        out_shape=jax.ShapeDtypeStruct((segments, emb), table.dtype),
+        interpret=True,
+    )(idxs, lens, table)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sls_weighted(table, idxs, lens, weights):
+    """Weighted SLS (SpMM row aggregation): adds per-lookup scale factors."""
+    segments, max_lookups = idxs.shape
+    _, emb = table.shape
+    return pl.pallas_call(
+        _sls_weighted_kernel,
+        grid=(segments,),
+        in_specs=[
+            pl.BlockSpec((1, max_lookups), lambda s: (s, 0)),
+            pl.BlockSpec((1,), lambda s: (s,)),
+            pl.BlockSpec((1, max_lookups), lambda s: (s, 0)),
+            pl.BlockSpec(table.shape, lambda s: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, emb), lambda s: (s, 0)),
+        out_shape=jax.ShapeDtypeStruct((segments, emb), table.dtype),
+        interpret=True,
+    )(idxs, lens, weights, table)

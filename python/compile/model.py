@@ -1,0 +1,52 @@
+"""Layer-2 JAX compute graphs (build-time only; never on the request path).
+
+These are the model-side functions AOT-lowered to HLO text by `aot.py`:
+
+  * `sls_op` / `sls_weighted_op` — the embedding operation itself (calls
+    the Pallas kernel), used by the Rust side as the numerics oracle for
+    compiled DLC programs and as the embedding stage of the serving path.
+  * `dlrm_mlp` — the dense top MLP of a DLRM; the "execute unit" DNN the
+    coordinator runs through PJRT after the DAE embedding stage.
+  * `dlrm_full` — embedding + feature concat + MLP fused in one module,
+    the end-to-end oracle for the serving example.
+  * `gnn_layer` — one GraphSAGE-style layer: weighted-SLS neighbour
+    aggregation (Pallas) + dense transform + ReLU.
+  * `bigbird_gather` — the SpAttn block gather (Pallas).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import gather as gather_k
+from .kernels import sls as sls_k
+
+
+def sls_op(table, idxs, lens):
+    return sls_k.sls(table, idxs, lens)
+
+
+def sls_weighted_op(table, idxs, lens, weights):
+    return sls_k.sls_weighted(table, idxs, lens, weights)
+
+
+def dlrm_mlp(x, w1, b1, w2, b2):
+    """Top MLP: x [B, D] -> CTR prediction [B, 1]."""
+    h = jnp.maximum(x @ w1 + b1, 0.0)
+    return 1.0 / (1.0 + jnp.exp(-(h @ w2 + b2)))
+
+
+def dlrm_full(table0, table1, idxs0, lens0, idxs1, lens1, dense, w1, b1, w2, b2):
+    """Full DLRM slice: two embedding bags + dense features -> MLP."""
+    e0 = sls_k.sls(table0, idxs0, lens0)
+    e1 = sls_k.sls(table1, idxs1, lens1)
+    x = jnp.concatenate([e0, e1, dense], axis=1)
+    return dlrm_mlp(x, w1, b1, w2, b2)
+
+
+def gnn_layer(feats, idxs, lens, vals, w, b):
+    """GraphSAGE-style layer: h' = relu(SpMM(A, h) @ W + b)."""
+    agg = sls_k.sls_weighted(feats, idxs, lens, vals)
+    return jnp.maximum(agg @ w + b, 0.0)
+
+
+def bigbird_gather(keys, block_idxs, *, block):
+    return gather_k.gather_blocks(keys, block_idxs, block=block)

@@ -1,0 +1,68 @@
+"""Hypothesis sweeps over the Pallas kernels' shape/value space.
+
+The system contract: for *any* table/index/length configuration the
+Pallas SLS kernel must agree with the pure-jnp oracle, including
+degenerate shapes (single segment, lookup counts of 0, emb lengths not
+multiples of any vector width).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gather as gather_k
+from compile.kernels import ref
+from compile.kernels import sls as sls_k
+
+shape_st = st.tuples(
+    st.integers(min_value=1, max_value=64),   # table rows
+    st.integers(min_value=1, max_value=40),   # emb len (incl. non-pow2)
+    st.integers(min_value=1, max_value=8),    # segments
+    st.integers(min_value=1, max_value=12),   # max lookups
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=shape_st, seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_sls_matches_ref_any_shape(shape, seed):
+    rows, emb, segments, max_lookups = shape
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.standard_normal((rows, emb)), jnp.float32)
+    idxs = jnp.asarray(rng.integers(0, rows, (segments, max_lookups)), jnp.int32)
+    lens = jnp.asarray(rng.integers(0, max_lookups + 1, (segments,)), jnp.int32)
+    got = sls_k.sls(table, idxs, lens)
+    want = ref.sls_ref(table, idxs, lens)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(shape=shape_st, seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_sls_weighted_matches_ref_any_shape(shape, seed):
+    rows, emb, segments, max_lookups = shape
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.standard_normal((rows, emb)), jnp.float32)
+    idxs = jnp.asarray(rng.integers(0, rows, (segments, max_lookups)), jnp.int32)
+    lens = jnp.asarray(rng.integers(0, max_lookups + 1, (segments,)), jnp.int32)
+    w = jnp.asarray(rng.standard_normal((segments, max_lookups)), jnp.float32)
+    got = sls_k.sls_weighted(table, idxs, lens, w)
+    want = ref.sls_weighted_ref(table, idxs, lens, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    block=st.sampled_from([1, 2, 4, 8]),
+    n_rows_blocks=st.integers(min_value=1, max_value=16),
+    n_gather=st.integers(min_value=1, max_value=12),
+    emb=st.integers(min_value=1, max_value=24),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_gather_blocks_matches_ref_any_shape(block, n_rows_blocks, n_gather, emb, seed):
+    rng = np.random.default_rng(seed)
+    keys = jnp.asarray(
+        rng.standard_normal((n_rows_blocks * block, emb)), jnp.float32
+    )
+    bidx = jnp.asarray(rng.integers(0, n_rows_blocks, (n_gather,)), jnp.int32)
+    got = gather_k.gather_blocks(keys, bidx, block=block)
+    want = ref.gather_blocks_ref(keys, bidx, block)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

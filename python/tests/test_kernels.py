@@ -1,0 +1,108 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import gather as gather_k
+from compile.kernels import ref
+from compile.kernels import sls as sls_k
+
+
+def _mk_sls(seed, rows, emb, segments, max_lookups):
+    rng = np.random.default_rng(seed)
+    table = jnp.asarray(rng.standard_normal((rows, emb)), jnp.float32)
+    idxs = jnp.asarray(rng.integers(0, rows, (segments, max_lookups)), jnp.int32)
+    lens = jnp.asarray(rng.integers(0, max_lookups + 1, (segments,)), jnp.int32)
+    return table, idxs, lens
+
+
+class TestSls:
+    @pytest.mark.parametrize("emb", [8, 32, 128])
+    def test_matches_ref(self, emb):
+        table, idxs, lens = _mk_sls(0, 256, emb, 16, 24)
+        got = sls_k.sls(table, idxs, lens)
+        want = ref.sls_ref(table, idxs, lens)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_empty_segments(self):
+        table, idxs, _ = _mk_sls(1, 64, 16, 8, 8)
+        lens = jnp.zeros((8,), jnp.int32)
+        got = sls_k.sls(table, idxs, lens)
+        np.testing.assert_array_equal(np.asarray(got), np.zeros((8, 16), np.float32))
+
+    def test_full_segments(self):
+        table, idxs, _ = _mk_sls(2, 64, 16, 8, 8)
+        lens = jnp.full((8,), 8, jnp.int32)
+        got = sls_k.sls(table, idxs, lens)
+        want = ref.sls_ref(table, idxs, lens)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_single_segment_single_lookup(self):
+        table = jnp.asarray(np.arange(32, dtype=np.float32).reshape(4, 8))
+        idxs = jnp.asarray([[2]], jnp.int32)
+        lens = jnp.asarray([1], jnp.int32)
+        got = sls_k.sls(table, idxs, lens)
+        np.testing.assert_allclose(got[0], table[2])
+
+    def test_duplicate_indices_accumulate(self):
+        table = jnp.ones((4, 8), jnp.float32)
+        idxs = jnp.asarray([[3, 3, 3, 3]], jnp.int32)
+        lens = jnp.asarray([4], jnp.int32)
+        got = sls_k.sls(table, idxs, lens)
+        np.testing.assert_allclose(got[0], 4.0 * table[3])
+
+
+class TestSlsWeighted:
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_matches_ref(self, seed):
+        table, idxs, lens = _mk_sls(seed, 128, 16, 12, 10)
+        rng = np.random.default_rng(seed + 100)
+        w = jnp.asarray(rng.standard_normal((12, 10)), jnp.float32)
+        got = sls_k.sls_weighted(table, idxs, lens, w)
+        want = ref.sls_weighted_ref(table, idxs, lens, w)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_unit_weights_equal_plain_sls(self):
+        table, idxs, lens = _mk_sls(7, 128, 16, 12, 10)
+        w = jnp.ones((12, 10), jnp.float32)
+        np.testing.assert_allclose(
+            sls_k.sls_weighted(table, idxs, lens, w),
+            sls_k.sls(table, idxs, lens),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+    def test_zero_weights_zero_output(self):
+        table, idxs, lens = _mk_sls(8, 128, 16, 12, 10)
+        w = jnp.zeros((12, 10), jnp.float32)
+        got = sls_k.sls_weighted(table, idxs, lens, w)
+        np.testing.assert_array_equal(np.asarray(got), np.zeros((12, 16), np.float32))
+
+
+class TestGatherBlocks:
+    @pytest.mark.parametrize("block", [1, 2, 4, 8])
+    def test_matches_ref(self, block):
+        rng = np.random.default_rng(3)
+        keys = jnp.asarray(rng.standard_normal((128, 16)), jnp.float32)
+        n_blocks = 128 // block
+        bidx = jnp.asarray(rng.integers(0, n_blocks, (10,)), jnp.int32)
+        got = gather_k.gather_blocks(keys, bidx, block=block)
+        want = ref.gather_blocks_ref(keys, bidx, block)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_identity_gather(self):
+        keys = jnp.asarray(np.arange(64, dtype=np.float32).reshape(8, 8))
+        bidx = jnp.arange(4, dtype=jnp.int32)
+        got = gather_k.gather_blocks(keys, bidx, block=2)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(keys))
+
+    def test_repeated_blocks(self):
+        keys = jnp.asarray(np.arange(64, dtype=np.float32).reshape(8, 8))
+        bidx = jnp.asarray([1, 1, 1], jnp.int32)
+        got = gather_k.gather_blocks(keys, bidx, block=2)
+        for i in range(3):
+            np.testing.assert_array_equal(
+                np.asarray(got[2 * i : 2 * i + 2]), np.asarray(keys[2:4])
+            )

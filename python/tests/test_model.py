@@ -1,0 +1,84 @@
+"""L2 model shape/numerics tests + AOT round-trip sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, config, model
+from compile.kernels import ref
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+class TestDlrm:
+    def test_mlp_matches_ref(self):
+        r = _rng(0)
+        x = jnp.asarray(r.standard_normal((8, 77)), jnp.float32)
+        w1 = jnp.asarray(r.standard_normal((77, 64)) * 0.1, jnp.float32)
+        b1 = jnp.zeros((64,), jnp.float32)
+        w2 = jnp.asarray(r.standard_normal((64, 1)) * 0.1, jnp.float32)
+        b2 = jnp.zeros((1,), jnp.float32)
+        got = model.dlrm_mlp(x, w1, b1, w2, b2)
+        want = ref.mlp_ref(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+        assert got.shape == (8, 1)
+        assert bool(jnp.all((got > 0) & (got < 1)))
+
+    def test_full_composes_sls_and_mlp(self):
+        r = _rng(1)
+        rows, emb, segs, lk = 64, 8, 4, 6
+        t0 = jnp.asarray(r.standard_normal((rows, emb)), jnp.float32)
+        t1 = jnp.asarray(r.standard_normal((rows, emb)), jnp.float32)
+        i0 = jnp.asarray(r.integers(0, rows, (segs, lk)), jnp.int32)
+        i1 = jnp.asarray(r.integers(0, rows, (segs, lk)), jnp.int32)
+        l0 = jnp.asarray(r.integers(0, lk + 1, (segs,)), jnp.int32)
+        l1 = jnp.asarray(r.integers(0, lk + 1, (segs,)), jnp.int32)
+        dense = jnp.asarray(r.standard_normal((segs, 3)), jnp.float32)
+        d_in = 2 * emb + 3
+        w1 = jnp.asarray(r.standard_normal((d_in, 16)) * 0.1, jnp.float32)
+        b1 = jnp.zeros((16,), jnp.float32)
+        w2 = jnp.asarray(r.standard_normal((16, 1)) * 0.1, jnp.float32)
+        b2 = jnp.zeros((1,), jnp.float32)
+        got = model.dlrm_full(t0, t1, i0, l0, i1, l1, dense, w1, b1, w2, b2)
+        x = jnp.concatenate(
+            [ref.sls_ref(t0, i0, l0), ref.sls_ref(t1, i1, l1), dense], axis=1
+        )
+        want = ref.mlp_ref(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+class TestGnn:
+    def test_layer_matches_ref(self):
+        r = _rng(2)
+        nodes, feat, deg, out = 32, 8, 4, 8
+        feats = jnp.asarray(r.standard_normal((nodes, feat)), jnp.float32)
+        idxs = jnp.asarray(r.integers(0, nodes, (nodes, deg)), jnp.int32)
+        lens = jnp.asarray(r.integers(0, deg + 1, (nodes,)), jnp.int32)
+        vals = jnp.asarray(r.standard_normal((nodes, deg)), jnp.float32)
+        w = jnp.asarray(r.standard_normal((feat, out)) * 0.1, jnp.float32)
+        b = jnp.zeros((out,), jnp.float32)
+        got = model.gnn_layer(feats, idxs, lens, vals, w, b)
+        agg = ref.spmm_ref(feats, idxs, lens, vals)
+        want = jnp.maximum(agg @ w + b, 0.0)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+        assert bool(jnp.all(got >= 0))
+
+
+class TestAot:
+    def test_builds_all_artifacts_as_hlo_text(self):
+        arts = aot.build_artifacts()
+        names = set(config.manifest()["artifacts"][k]["file"] for k in config.manifest()["artifacts"])
+        assert set(arts.keys()) == names
+        for name, text in arts.items():
+            assert "HloModule" in text, name
+            # fused pallas interpret output must not contain TPU custom-calls
+            assert "tpu" not in text.lower() or "custom-call" not in text.lower(), name
+
+    def test_manifest_consistent(self):
+        m = config.manifest()
+        assert m["dlrm"]["batch"] == config.DLRM_BATCH
+        d_in = m["dlrm"]["tables"] * m["dlrm"]["emb"] + m["dlrm"]["dense"]
+        assert f"x[{config.DLRM_BATCH},{d_in}]f32" == m["artifacts"]["dlrm_mlp"]["args"][0]

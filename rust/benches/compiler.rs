@@ -1,0 +1,65 @@
+//! Compiler micro-benchmarks: the full SCF→SLC→DLC pipeline per op
+//! class and opt level (in-tree bench clock; criterion is unavailable
+//! offline).
+
+use ember::compiler::passes::pipeline::{compile, CompileOptions, OptLevel};
+use ember::frontend::embedding_ops::{OpClass, Semiring};
+use ember::util::bench::Bench;
+
+fn main() {
+    println!("== compiler benchmarks ==");
+    let ops = [
+        OpClass::Sls,
+        OpClass::Spmm,
+        OpClass::Mp,
+        OpClass::Kg(Semiring::PlusTimes),
+        OpClass::SpAttn { block: 4 },
+    ];
+    for op in &ops {
+        for opt in OptLevel::ALL {
+            let name = format!("compile/{}/{}", op.name(), opt.name());
+            let report =
+                Bench::new(&name).run(|| compile(op, CompileOptions::at(opt)).unwrap());
+            println!("{report}");
+        }
+    }
+
+    // individual passes
+    use ember::compiler::decouple::decouple;
+    use ember::compiler::lower_dlc::lower_to_dlc;
+    use ember::compiler::passes::{bufferize, queue_align, vectorize};
+    let scf = OpClass::Sls.to_scf();
+    println!("{}", Bench::new("pass/decouple(sls)").run(|| decouple(&scf).unwrap()));
+    let base = decouple(&scf).unwrap();
+    println!(
+        "{}",
+        Bench::new("pass/vectorize(sls)").run(|| {
+            let mut f = base.clone();
+            vectorize::vectorize(&mut f, 4).unwrap();
+            f
+        })
+    );
+    let mut vecd = base.clone();
+    vectorize::vectorize(&mut vecd, 4).unwrap();
+    println!(
+        "{}",
+        Bench::new("pass/bufferize(sls)").run(|| {
+            let mut f = vecd.clone();
+            bufferize::bufferize(&mut f).unwrap();
+            f
+        })
+    );
+    let mut bufd = vecd.clone();
+    bufferize::bufferize(&mut bufd).unwrap();
+    println!(
+        "{}",
+        Bench::new("pass/queue_align(sls)").run(|| {
+            let mut f = bufd.clone();
+            queue_align::queue_align(&mut f).unwrap();
+            f
+        })
+    );
+    let mut aligned = bufd.clone();
+    queue_align::queue_align(&mut aligned).unwrap();
+    println!("{}", Bench::new("pass/lower_dlc(sls)").run(|| lower_to_dlc(&aligned).unwrap()));
+}

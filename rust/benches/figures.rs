@@ -1,0 +1,35 @@
+//! `cargo bench --bench figures` — regenerates every table and figure
+//! of the paper's evaluation into `results/` and prints them. This is
+//! the end-to-end benchmark harness deliverable: one row/series per
+//! table/figure the paper reports (DESIGN.md §4 maps each to modules).
+
+use std::time::Instant;
+
+fn main() {
+    let seed = std::env::var("EMBER_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(1u64);
+    let out = std::env::var("EMBER_RESULTS").unwrap_or_else(|_| "results".into());
+    let exps = [
+        "table1", "table2", "table3", "table4", "fig1", "fig3", "fig4", "fig6", "fig7",
+        "fig8", "fig16", "fig17", "fig18", "fig19",
+    ];
+    let t0 = Instant::now();
+    for exp in exps {
+        let t = Instant::now();
+        match ember::harness::run_experiment(exp, seed) {
+            Ok(reports) => {
+                for r in &reports {
+                    println!("{r}");
+                    if let Err(e) = r.save(&out) {
+                        eprintln!("warning: could not save {}: {e}", r.name);
+                    }
+                }
+                println!("[{exp} done in {:.1?}]\n", t.elapsed());
+            }
+            Err(e) => {
+                eprintln!("FAILED {exp}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+    println!("all experiments regenerated into {out}/ in {:.1?}", t0.elapsed());
+}

@@ -1,0 +1,83 @@
+//! Simulator + interpreter throughput benchmarks — the L3 hot path.
+//! Reports simulated-events/s and lookups/s; the §Perf targets in
+//! EXPERIMENTS.md are tracked against these numbers.
+
+use ember::compiler::passes::pipeline::{compile, CompileOptions, OptLevel};
+use ember::dae::{DaeSim, MachineConfig};
+use ember::data::Tensor;
+use ember::frontend::embedding_ops::OpClass;
+use ember::frontend::formats::Csr;
+use ember::interp::{Interp, NullSink};
+use ember::util::bench::Bench;
+use ember::util::rng::Rng;
+
+fn workload(rows: usize, lookups: usize, emb: usize) -> (Csr, Tensor) {
+    let mut rng = Rng::new(3);
+    let cols = 16384;
+    let table = Tensor::f32(vec![cols, emb], rng.normal_vec(cols * emb, 0.5));
+    let lists: Vec<Vec<i32>> = (0..rows)
+        .map(|_| (0..lookups).map(|_| rng.below(cols as u64) as i32).collect())
+        .collect();
+    (Csr::from_rows(cols, &lists), table)
+}
+
+fn main() {
+    println!("== simulator / interpreter benchmarks ==");
+    let (csr, table) = workload(64, 64, 32);
+    let total_lookups = (csr.nnz()) as u64;
+
+    for opt in [OptLevel::O0, OptLevel::O3] {
+        let prog = compile(&OpClass::Sls, CompileOptions::at(opt)).unwrap();
+
+        // pure numerics (interpreter only)
+        let name = format!("interp/sls/{}", opt.name());
+        let rep = Bench::new(&name).run(|| {
+            let mut env = csr.bind_sls_env(&table, false);
+            let mut i = Interp::new(&prog.dlc).unwrap();
+            i.run(&mut env, &mut NullSink).unwrap();
+        });
+        println!("{rep}  [{:.2} Mlookups/s]", rep.throughput(total_lookups) / 1e6);
+
+        // full timing simulation
+        for cfg in [MachineConfig::dae_tmu(), MachineConfig::traditional_core()] {
+            let name = format!("sim/sls/{}/{}", opt.name(), cfg.name);
+            let rep = Bench::new(&name).run(|| {
+                let mut env = csr.bind_sls_env(&table, false);
+                let mut sim = DaeSim::new(cfg);
+                let mut i = Interp::new(&prog.dlc).unwrap();
+                i.run(&mut env, &mut sim).unwrap();
+                sim.cycles()
+            });
+            println!("{rep}  [{:.2} Mlookups/s]", rep.throughput(total_lookups) / 1e6);
+        }
+    }
+
+    // cache model in isolation
+    {
+        use ember::dae::cache::Cache;
+        use ember::dae::config::CacheConfig;
+        let mut rng = Rng::new(9);
+        let addrs: Vec<u64> = (0..100_000).map(|_| rng.below(1 << 18)).collect();
+        let rep = Bench::new("cache/lru-access-100k").run(|| {
+            let mut c =
+                Cache::new(CacheConfig { size_bytes: 1 << 20, assoc: 8, latency: 10 }, 64);
+            let mut hits = 0u64;
+            for &a in &addrs {
+                if c.access(a, true) {
+                    hits += 1;
+                }
+            }
+            hits
+        });
+        println!("{rep}  [{:.2} Maccess/s]", rep.throughput(100_000) / 1e6);
+    }
+
+    // reuse profiler
+    {
+        use ember::workloads::reuse::reuse_profile;
+        let mut rng = Rng::new(11);
+        let trace: Vec<u32> = (0..200_000).map(|_| rng.below(20_000) as u32).collect();
+        let rep = Bench::new("reuse/fenwick-200k").run(|| reuse_profile(&trace).cdf(1024));
+        println!("{rep}  [{:.2} Maccess/s]", rep.throughput(200_000) / 1e6);
+    }
+}

@@ -1,0 +1,547 @@
+//! SCF → SLC decoupling (paper §6.2, Fig. 13).
+//!
+//! Recursively traverses the SCF loop hierarchy selecting *offloading
+//! candidates*: loops whose (1) iteration bounds are static/symbolic or
+//! computed by another offloading candidate, and (2) subtree loads at
+//! least one read-only memory pattern that has not been read before
+//! (excludes workspace loops, which only re-touch already-read or
+//! partial data). Offloaded loops become `slc.for` loops; read-only
+//! loads and index arithmetic become streams hoisted before their
+//! callback; everything else (stores, f32 compute, workspace loops)
+//! moves into `slc.callback` regions with `slc.to_val` conversions.
+
+use crate::error::{EmberError, Result};
+use crate::ir::compute::{CExpr, CStmt};
+use crate::ir::scf::{Expr, ScfFunc, ScfStmt};
+use crate::ir::slc::{SlcBound, SlcCallback, SlcFor, SlcFunc, SlcIdx, SlcOp};
+use crate::ir::types::{Event, MemHint, Scalar};
+use crate::ir::verify::verify_slc;
+use std::collections::{HashMap, HashSet};
+
+/// How an SCF variable is realized after decoupling.
+#[derive(Debug, Clone, PartialEq)]
+enum Binding {
+    /// Became an access-unit stream with this name.
+    Stream(String),
+    /// Loop induction variable of an offloaded loop (stream name).
+    LoopIv(String),
+    /// Stays a core (execute-unit) variable.
+    Core,
+}
+
+struct Ctx {
+    /// Normalized read patterns already consumed (freshness check).
+    read_patterns: HashSet<String>,
+    /// pattern -> stream name, so the same load pattern in one loop
+    /// body reuses a single stream.
+    pattern_streams: HashMap<String, String>,
+    /// SCF var -> binding.
+    bindings: HashMap<String, Binding>,
+    /// Loop induction vars currently in scope (SCF names).
+    loop_ivs: Vec<String>,
+    /// Unique-name counter for generated streams.
+    counter: usize,
+}
+
+impl Ctx {
+    fn fresh(&mut self, base: &str) -> String {
+        self.counter += 1;
+        format!("{base}_{}", self.counter)
+    }
+}
+
+/// Decouple an SCF function into SLC (the emb-opt0 starting point).
+pub fn decouple(func: &ScfFunc) -> Result<SlcFunc> {
+    func.check_write_flags().map_err(EmberError::Lowering)?;
+    let root = match func.body.as_slice() {
+        [ScfStmt::For { .. }] => match &func.body[0] {
+            ScfStmt::For { var, lb, ub, step, body } => (var, lb, ub, *step, body),
+            _ => unreachable!(),
+        },
+        _ => {
+            return Err(EmberError::Lowering(
+                "decouple expects a single root loop".into(),
+            ))
+        }
+    };
+
+    let mut ctx = Ctx {
+        read_patterns: HashSet::new(),
+        pattern_streams: HashMap::new(),
+        bindings: HashMap::new(),
+        loop_ivs: Vec::new(),
+        counter: 0,
+    };
+
+    let (var, lb, ub, step, body) = root;
+    let mut top_ops = Vec::new();
+    lower_for(func, &mut ctx, var, lb, ub, step, body, &mut top_ops)?;
+
+    let out = SlcFunc { name: func.name.clone(), args: func.args.clone(), body: top_ops };
+    verify_slc(&out)?;
+    Ok(out)
+}
+
+/// Normalize a load pattern for the freshness check: loop induction
+/// variables become `<iv>`, other vars keep their names.
+fn pattern_key(mem: &str, indices: &[Expr], loop_ivs: &[String]) -> String {
+    fn norm(e: &Expr, ivs: &[String]) -> String {
+        match e {
+            Expr::Var(v) if ivs.contains(v) => "<iv>".into(),
+            Expr::Var(v) => v.clone(),
+            Expr::ConstI(c) => c.to_string(),
+            Expr::ConstF(c) => format!("{c}"),
+            Expr::Sym(s) => format!("${s}"),
+            Expr::Load { mem, indices } => {
+                format!("{mem}[{}]", indices.iter().map(|i| norm(i, ivs)).collect::<Vec<_>>().join(","))
+            }
+            Expr::Bin { op, lhs, rhs } => {
+                format!("({} {op} {})", norm(lhs, ivs), norm(rhs, ivs))
+            }
+        }
+    }
+    format!("{mem}[{}]", indices.iter().map(|i| norm(i, loop_ivs)).collect::<Vec<_>>().join(","))
+}
+
+/// Collect every read-only load pattern in an expression.
+fn expr_load_patterns(func: &ScfFunc, e: &Expr, ivs: &[String], out: &mut Vec<String>) {
+    e.walk(&mut |n| {
+        if let Expr::Load { mem, indices } = n {
+            if func.memref(mem).is_some_and(|m| !m.written) {
+                out.push(pattern_key(mem, indices, ivs));
+            }
+        }
+    });
+}
+
+/// All read-only load patterns in a loop subtree (including child-loop
+/// bounds and store values).
+fn subtree_load_patterns(func: &ScfFunc, body: &[ScfStmt], ivs: &mut Vec<String>, out: &mut Vec<String>) {
+    for s in body {
+        match s {
+            ScfStmt::For { var, lb, ub, body, .. } => {
+                expr_load_patterns(func, lb, ivs, out);
+                expr_load_patterns(func, ub, ivs, out);
+                ivs.push(var.clone());
+                subtree_load_patterns(func, body, ivs, out);
+                ivs.pop();
+            }
+            ScfStmt::Let { value, .. } => expr_load_patterns(func, value, ivs, out),
+            ScfStmt::Store { indices, value, .. } => {
+                for i in indices {
+                    expr_load_patterns(func, i, ivs, out);
+                }
+                expr_load_patterns(func, value, ivs, out);
+            }
+        }
+    }
+}
+
+/// Condition (1): a bound is offloadable if constant/symbolic or a load
+/// whose indices are already streams (computed by an offloading
+/// candidate).
+fn bound_offloadable(func: &ScfFunc, ctx: &Ctx, e: &Expr) -> bool {
+    match e {
+        Expr::ConstI(_) | Expr::Sym(_) => true,
+        Expr::Load { mem, indices } => {
+            func.memref(mem).is_some_and(|m| !m.written)
+                && indices.iter().all(|i| index_offloadable(ctx, i))
+        }
+        _ => false,
+    }
+}
+
+/// An index expression the access unit can compute: const, sym, stream
+/// var, or integer arithmetic over those.
+fn index_offloadable(ctx: &Ctx, e: &Expr) -> bool {
+    match e {
+        Expr::ConstI(_) | Expr::Sym(_) => true,
+        Expr::Var(v) => matches!(
+            ctx.bindings.get(v),
+            Some(Binding::Stream(_)) | Some(Binding::LoopIv(_))
+        ),
+        Expr::Bin { lhs, rhs, .. } => index_offloadable(ctx, lhs) && index_offloadable(ctx, rhs),
+        Expr::Load { .. } | Expr::ConstF(_) => false,
+    }
+}
+
+/// Lower an index expression to an `SlcIdx`, emitting `alu_str` ops for
+/// compound arithmetic (paper Fig. 10c lines 4-5).
+fn lower_index(ctx: &mut Ctx, e: &Expr, ops: &mut Vec<SlcOp>) -> Result<SlcIdx> {
+    match e {
+        Expr::ConstI(c) => Ok(SlcIdx::Imm(*c)),
+        Expr::Sym(s) => Ok(SlcIdx::Sym(s.clone())),
+        Expr::Var(v) => match ctx.bindings.get(v) {
+            Some(Binding::Stream(s)) | Some(Binding::LoopIv(s)) => Ok(SlcIdx::Stream(s.clone())),
+            _ => Err(EmberError::Lowering(format!("index var `{v}` is not a stream"))),
+        },
+        Expr::Bin { op, lhs, rhs } => {
+            let l = lower_index(ctx, lhs, ops)?;
+            let r = lower_index(ctx, rhs, ops)?;
+            let dst = ctx.fresh("s_alu");
+            ops.push(SlcOp::AluStr { dst: dst.clone(), op: *op, lhs: l, rhs: r });
+            Ok(SlcIdx::Stream(dst))
+        }
+        _ => Err(EmberError::Lowering(format!("unsupported index expr `{e}`"))),
+    }
+}
+
+/// Lower a bound to an `SlcBound`, emitting bound streams into `ops`
+/// (which is the PARENT body — e.g. `s_beg = slc.mem_str(ptrs[s_b])`).
+fn lower_bound(
+    func: &ScfFunc,
+    ctx: &mut Ctx,
+    loop_var: &str,
+    which: &str,
+    e: &Expr,
+    ops: &mut Vec<SlcOp>,
+) -> Result<SlcBound> {
+    match e {
+        Expr::ConstI(c) => Ok(SlcBound::Imm(*c)),
+        Expr::Sym(s) => Ok(SlcBound::Sym(s.clone())),
+        Expr::Load { mem, indices } => {
+            let mut idx = Vec::new();
+            for i in indices {
+                idx.push(lower_index(ctx, i, ops)?);
+            }
+            ctx.read_patterns.insert(pattern_key(mem, indices, &ctx.loop_ivs));
+            let dst = format!("s_{which}_{loop_var}");
+            ops.push(SlcOp::MemStr {
+                dst: dst.clone(),
+                mem: mem.clone(),
+                indices: idx,
+                vlen: 1,
+                masked: false,
+                hint: MemHint::default(),
+            });
+            let _ = func;
+            Ok(SlcBound::Stream(dst))
+        }
+        _ => Err(EmberError::Lowering(format!("unsupported bound `{e}`"))),
+    }
+}
+
+/// Convert a core-side SCF expression into a CExpr. Read-only loads
+/// with access-unit-computable indices are extracted into `mem_str`
+/// streams (the paper offloads ALL read-only loads + index arithmetic);
+/// everything else stays core-side.
+fn core_expr(
+    func: &ScfFunc,
+    ctx: &mut Ctx,
+    ops: &mut Vec<SlcOp>,
+    e: &Expr,
+) -> Result<CExpr> {
+    match e {
+        Expr::Var(v) => match ctx.bindings.get(v) {
+            Some(Binding::Stream(s)) | Some(Binding::LoopIv(s)) => {
+                Ok(CExpr::ToVal { stream: s.clone(), lane: None })
+            }
+            _ => Ok(CExpr::Var(v.clone())),
+        },
+        Expr::ConstI(c) => Ok(CExpr::ConstI(*c)),
+        Expr::ConstF(c) => Ok(CExpr::ConstF(*c)),
+        Expr::Sym(s) => Ok(CExpr::Sym(s.clone())),
+        Expr::Load { mem, indices } => {
+            let offloadable = func.memref(mem).is_some_and(|m| !m.written)
+                && indices.iter().all(|i| index_offloadable(ctx, i));
+            if offloadable {
+                let key = pattern_key(mem, indices, &ctx.loop_ivs);
+                if let Some(stream) = ctx.pattern_streams.get(&key) {
+                    return Ok(CExpr::ToVal { stream: stream.clone(), lane: None });
+                }
+                let mut idx = Vec::new();
+                for i in indices {
+                    idx.push(lower_index(ctx, i, ops)?);
+                }
+                ctx.read_patterns.insert(key.clone());
+                let dst = ctx.fresh(&format!("s_{mem}"));
+                ctx.pattern_streams.insert(key, dst.clone());
+                ops.push(SlcOp::MemStr {
+                    dst: dst.clone(),
+                    mem: mem.clone(),
+                    indices: idx,
+                    vlen: 1,
+                    masked: false,
+                    hint: MemHint::default(),
+                });
+                Ok(CExpr::ToVal { stream: dst, lane: None })
+            } else {
+                let mut cidx = Vec::new();
+                for i in indices {
+                    cidx.push(core_expr(func, ctx, ops, i)?);
+                }
+                Ok(CExpr::Load { mem: mem.clone(), indices: cidx })
+            }
+        }
+        Expr::Bin { op, lhs, rhs } => Ok(CExpr::Bin {
+            op: *op,
+            lhs: Box::new(core_expr(func, ctx, ops, lhs)?),
+            rhs: Box::new(core_expr(func, ctx, ops, rhs)?),
+            vlen: 1,
+        }),
+    }
+}
+
+/// Convert a non-offloaded SCF statement to core CStmts.
+/// `let v = v + X` accumulations become `Inc` statements so later
+/// vectorization can recognize reductions.
+fn core_stmt(
+    func: &ScfFunc,
+    ctx: &mut Ctx,
+    ops: &mut Vec<SlcOp>,
+    s: &ScfStmt,
+) -> Result<CStmt> {
+    match s {
+        ScfStmt::Let { var, value, .. } => {
+            if let Expr::Bin { op: crate::ir::types::BinOp::Add, lhs, rhs } = value {
+                if matches!(lhs.as_ref(), Expr::Var(v) if v == var) {
+                    return Ok(CStmt::Inc {
+                        var: var.clone(),
+                        by: core_expr(func, ctx, ops, rhs)?,
+                    });
+                }
+            }
+            Ok(CStmt::Let { var: var.clone(), value: core_expr(func, ctx, ops, value)?, vlen: 1 })
+        }
+        ScfStmt::Store { mem, indices, value } => {
+            let mut cidx = Vec::new();
+            for i in indices {
+                cidx.push(core_expr(func, ctx, ops, i)?);
+            }
+            Ok(CStmt::Store {
+                mem: mem.clone(),
+                indices: cidx,
+                value: core_expr(func, ctx, ops, value)?,
+            })
+        }
+        ScfStmt::For { var, lb, ub, step, body } => {
+            ctx.bindings.insert(var.clone(), Binding::Core);
+            let clb = core_expr(func, ctx, ops, lb)?;
+            let cub = core_expr(func, ctx, ops, ub)?;
+            let mut cbody = Vec::new();
+            for b in body {
+                cbody.push(core_stmt(func, ctx, ops, b)?);
+            }
+            Ok(CStmt::For { var: var.clone(), lb: clb, ub: cub, step: *step, body: cbody })
+        }
+    }
+}
+
+/// Hoist duplicate `to_val` reads in a callback into leading `Let`s
+/// (Fig. 13b lines 12-15) so each stream is converted exactly once.
+fn hoist_to_vals(ctx: &Ctx, body: Vec<CStmt>) -> Vec<CStmt> {
+    // ordered list of distinct streams read
+    let mut order: Vec<String> = Vec::new();
+    for s in &body {
+        s.walk_exprs(&mut |e| {
+            if let CExpr::ToVal { stream, .. } = e {
+                if !order.contains(stream) {
+                    order.push(stream.clone());
+                }
+            }
+        });
+    }
+    // stream -> SCF var name (reverse bindings) for readable names
+    let mut names: HashMap<&String, String> = HashMap::new();
+    for (v, b) in &ctx.bindings {
+        if let Binding::Stream(s) | Binding::LoopIv(s) = b {
+            names.insert(s, v.clone());
+        }
+    }
+    let mut out = Vec::new();
+    for s in &order {
+        let var = names.get(s).cloned().unwrap_or_else(|| format!("v_{s}"));
+        out.push(CStmt::Let {
+            var,
+            value: CExpr::ToVal { stream: s.clone(), lane: None },
+            vlen: 1,
+        });
+    }
+    let subst = |e: CExpr| -> CExpr {
+        if let CExpr::ToVal { stream, .. } = &e {
+            if let Some(v) = names.get(stream) {
+                return CExpr::Var(v.clone());
+            }
+            return CExpr::Var(format!("v_{stream}"));
+        }
+        e
+    };
+    for s in body {
+        out.push(s.rewrite_exprs(&subst));
+    }
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn lower_for(
+    func: &ScfFunc,
+    ctx: &mut Ctx,
+    var: &str,
+    lb: &Expr,
+    ub: &Expr,
+    step: i64,
+    body: &[ScfStmt],
+    parent_ops: &mut Vec<SlcOp>,
+) -> Result<()> {
+    // --- offloadability ---
+    let bounds_ok = bound_offloadable(func, ctx, lb) && bound_offloadable(func, ctx, ub);
+    let mut pats = Vec::new();
+    let mut ivs = ctx.loop_ivs.clone();
+    ivs.push(var.to_string());
+    subtree_load_patterns(func, body, &mut ivs, &mut pats);
+    let has_fresh = pats.iter().any(|p| !ctx.read_patterns.contains(p));
+    if !(bounds_ok && has_fresh) {
+        return Err(EmberError::Lowering(format!(
+            "loop `{var}` is not an offloading candidate (bounds_ok={bounds_ok}, fresh={has_fresh}) — \
+             workspace loops must be handled by the caller"
+        )));
+    }
+
+    // --- bounds (streams go into the parent body) ---
+    let slb = lower_bound(func, ctx, var, "beg", lb, parent_ops)?;
+    let sub = lower_bound(func, ctx, var, "end", ub, parent_ops)?;
+
+    let stream = format!("s_{var}");
+    ctx.bindings.insert(var.to_string(), Binding::LoopIv(stream.clone()));
+    ctx.loop_ivs.push(var.to_string());
+
+    let mut sfor = SlcFor::new(&stream, slb, sub);
+    sfor.step = step;
+
+    // --- body ---
+    let mut pending: Vec<CStmt> = Vec::new();
+    let flush = |pending: &mut Vec<CStmt>, ops: &mut Vec<SlcOp>, ctx: &Ctx| {
+        if !pending.is_empty() {
+            let body = hoist_to_vals(ctx, std::mem::take(pending));
+            ops.push(SlcOp::Callback(SlcCallback { event: Event::Ite, body }));
+        }
+    };
+
+    for stmt in body {
+        match stmt {
+            ScfStmt::Let { var: v, ty, value } => {
+                let is_offloadable_load = matches!(value, Expr::Load { mem, .. }
+                    if func.memref(mem).is_some_and(|m| !m.written))
+                    && match value {
+                        Expr::Load { indices, .. } => {
+                            indices.iter().all(|i| index_offloadable(ctx, i))
+                        }
+                        _ => false,
+                    };
+                let is_offloadable_arith =
+                    *ty != Scalar::F32 && index_offloadable(ctx, value);
+
+                if is_offloadable_load {
+                    if let Expr::Load { mem, indices } = value {
+                        let mut idx = Vec::new();
+                        for i in indices {
+                            idx.push(lower_index(ctx, i, &mut sfor.body)?);
+                        }
+                        ctx.read_patterns.insert(pattern_key(mem, indices, &ctx.loop_ivs));
+                        let dst = format!("s_{v}");
+                        sfor.body.push(SlcOp::MemStr {
+                            dst: dst.clone(),
+                            mem: mem.clone(),
+                            indices: idx,
+                            vlen: 1,
+                            masked: false,
+                            hint: MemHint::default(),
+                        });
+                        ctx.bindings.insert(v.clone(), Binding::Stream(dst));
+                    }
+                } else if is_offloadable_arith {
+                    let s = lower_index(ctx, value, &mut sfor.body)?;
+                    match s {
+                        SlcIdx::Stream(name) => {
+                            ctx.bindings.insert(v.clone(), Binding::Stream(name));
+                        }
+                        SlcIdx::Imm(_) | SlcIdx::Sym(_) | SlcIdx::Var(_) => {
+                            // constant-valued let: keep on core
+                            ctx.bindings.insert(v.clone(), Binding::Core);
+                            pending.push(core_stmt(func, ctx, &mut sfor.body, stmt)?);
+                        }
+                    }
+                } else {
+                    ctx.bindings.insert(v.clone(), Binding::Core);
+                    pending.push(core_stmt(func, ctx, &mut sfor.body, stmt)?);
+                }
+            }
+            ScfStmt::Store { .. } => pending.push(core_stmt(func, ctx, &mut sfor.body, stmt)?),
+            ScfStmt::For { var: cv, lb: clb, ub: cub, step: cstep, body: cbody } => {
+                // decide: offloading candidate or workspace?
+                let bounds_ok =
+                    bound_offloadable(func, ctx, clb) && bound_offloadable(func, ctx, cub);
+                let mut pats = Vec::new();
+                let mut ivs = ctx.loop_ivs.clone();
+                ivs.push(cv.clone());
+                subtree_load_patterns(func, cbody, &mut ivs, &mut pats);
+                let fresh = pats.iter().any(|p| !ctx.read_patterns.contains(p));
+                if bounds_ok && fresh {
+                    flush(&mut pending, &mut sfor.body, ctx);
+                    lower_for(func, ctx, cv, clb, cub, *cstep, cbody, &mut sfor.body)?;
+                } else {
+                    // workspace loop: stays on the execute unit
+                    ctx.bindings.insert(cv.clone(), Binding::Core);
+                    pending.push(core_stmt(func, ctx, &mut sfor.body, stmt)?);
+                }
+            }
+        }
+    }
+    flush(&mut pending, &mut sfor.body, ctx);
+
+    ctx.loop_ivs.pop();
+    parent_ops.push(SlcOp::For(sfor));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::embedding_ops::{OpClass, Semiring};
+
+    #[test]
+    fn sls_decouples_like_fig13() {
+        let slc = decouple(&OpClass::Sls.to_scf()).unwrap();
+        let c = slc.count_ops();
+        assert_eq!(c.loops, 3, "{slc}");
+        // ptrs[b], ptrs[b+1], idxs[p], table[i,e]
+        assert_eq!(c.mem_streams, 4, "{slc}");
+        assert_eq!(c.callbacks, 1, "{slc}");
+        assert!(c.alu_streams >= 1, "b+1 must be an alu stream: {slc}");
+        // callback sits in the innermost loop
+        let root = slc.root().unwrap();
+        assert!(root.innermost().callbacks().count() == 1, "{slc}");
+        let printed = slc.to_string();
+        assert!(printed.contains("slc.for"), "{printed}");
+        assert!(printed.contains("to_val"), "{printed}");
+    }
+
+    #[test]
+    fn mp_keeps_workspace_loop_on_core() {
+        let slc = decouple(&OpClass::Mp.to_scf()).unwrap();
+        let c = slc.count_ops();
+        // i, p, e offloaded; e2 workspace loop must NOT be an slc.for
+        assert_eq!(c.loops, 3, "{slc}");
+        let printed = slc.to_string();
+        assert!(printed.contains("for(e2"), "workspace loop must appear in a callback: {printed}");
+    }
+
+    #[test]
+    fn kg_and_spattn_decouple() {
+        for op in [
+            OpClass::Kg(Semiring::PlusTimes),
+            OpClass::Kg(Semiring::MaxPlus),
+            OpClass::SpAttn { block: 4 },
+        ] {
+            let slc = decouple(&op.to_scf()).unwrap();
+            assert!(slc.count_ops().loops >= 2, "{}", slc);
+            assert!(slc.count_ops().callbacks >= 1, "{}", slc);
+        }
+    }
+
+    #[test]
+    fn spmm_marshals_weights() {
+        let slc = decouple(&OpClass::Spmm.to_scf()).unwrap();
+        assert_eq!(slc.count_ops().mem_streams, 5, "{slc}"); // + weights[p]
+    }
+}

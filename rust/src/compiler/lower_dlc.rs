@@ -1,0 +1,340 @@
+//! SLC → DLC lowering (paper §6.3).
+//!
+//! SLC for-loops and streams lower to DLC traversal operators and
+//! streams. Callbacks move into the compute while-loop: each callback
+//! gets a control token (named after the loop and event, e.g. `e_i`,
+//! `e_e`, `s_e`), a `callback(tu, event)` marshaling op, and one
+//! `push_op` per stream the callback converts with `to_val` — pop order
+//! in the handler matches push order exactly.
+
+use crate::error::{EmberError, Result};
+use crate::ir::compute::{CExpr, CStmt};
+use crate::ir::dlc::{DlcOp, DlcProgram, DlcVal, PushSrc, TokenHandler};
+use crate::ir::slc::{SlcBound, SlcFor, SlcFunc, SlcIdx, SlcOp};
+use crate::ir::types::{Event, Scalar, Token};
+use crate::ir::verify::verify_dlc;
+use std::collections::HashMap;
+
+/// Type info tracked per lookup stream.
+#[derive(Debug, Clone, Copy)]
+struct StreamTy {
+    elem: Scalar,
+    vlen: u32,
+}
+
+struct Lowerer<'a> {
+    func: &'a SlcFunc,
+    ops: Vec<DlcOp>,
+    handlers: Vec<TokenHandler>,
+    core_vars: Vec<(String, i64)>,
+    types: HashMap<String, StreamTy>,
+    tok_counter: HashMap<String, usize>,
+}
+
+/// Lower a (possibly optimized) SLC function to a DLC program.
+pub fn lower_to_dlc(func: &SlcFunc) -> Result<DlcProgram> {
+    let mut l = Lowerer {
+        func,
+        ops: Vec::new(),
+        handlers: Vec::new(),
+        core_vars: Vec::new(),
+        types: HashMap::new(),
+        tok_counter: HashMap::new(),
+    };
+    // top-level ops (bound streams of the root loop) belong to the root
+    // loop's traversal; handle by first locating the root loop name.
+    let root = func
+        .root()
+        .ok_or_else(|| EmberError::Lowering("SLC function has no root loop".into()))?;
+    let root_id = root.stream.clone();
+
+    // Pre-root streams (e.g. none today, bounds of root are imm/sym) —
+    // attach them to the root traversal unit.
+    for op in &func.body {
+        match op {
+            SlcOp::For(f) => l.lower_loop(f, None)?,
+            other => l.lower_stream_op(other, &root_id)?,
+        }
+    }
+
+    let prog = DlcProgram {
+        name: func.name.clone(),
+        args: func.args.clone(),
+        lookup: l.ops,
+        compute: l.handlers,
+        core_vars: l.core_vars,
+    };
+    verify_dlc(&prog)?;
+    Ok(prog)
+}
+
+impl<'a> Lowerer<'a> {
+    fn val(&self, idx: &SlcIdx) -> DlcVal {
+        match idx {
+            SlcIdx::Stream(s) => DlcVal::Str(s.clone()),
+            SlcIdx::Imm(i) => DlcVal::Imm(*i),
+            SlcIdx::Sym(s) => DlcVal::Sym(s.clone()),
+            SlcIdx::Var(v) => DlcVal::Sym(format!("%{v}")),
+        }
+    }
+
+    fn bound(&self, b: &SlcBound) -> DlcVal {
+        match b {
+            SlcBound::Imm(i) => DlcVal::Imm(*i),
+            SlcBound::Sym(s) => DlcVal::Sym(s.clone()),
+            SlcBound::Stream(s) => DlcVal::Str(s.clone()),
+        }
+    }
+
+    /// Token for a callback of loop `stream` at `event`: `b_i`, `e_e`...
+    /// (loop streams are named `s_<var>`; the token drops the prefix).
+    fn token_for(&mut self, stream: &str, event: Event) -> Token {
+        let var = stream.strip_prefix("s_").unwrap_or(stream);
+        let suffix = match event {
+            Event::Beg => "b",
+            Event::Ite => "i",
+            Event::End => "e",
+        };
+        let base = format!("{var}_{suffix}");
+        let n = self.tok_counter.entry(base.clone()).or_insert(0);
+        *n += 1;
+        if *n == 1 {
+            Token(base)
+        } else {
+            Token(format!("{base}{n}"))
+        }
+    }
+
+    fn stream_ty(&self, s: &str) -> StreamTy {
+        self.types.get(s).copied().unwrap_or(StreamTy { elem: Scalar::Index, vlen: 1 })
+    }
+
+    fn lower_stream_op(&mut self, op: &SlcOp, at: &str) -> Result<()> {
+        match op {
+            SlcOp::MemStr { dst, mem, indices, vlen, masked, hint } => {
+                let elem = self
+                    .func
+                    .memref(mem)
+                    .map(|m| m.elem)
+                    .unwrap_or(Scalar::F32);
+                self.types.insert(dst.clone(), StreamTy { elem, vlen: *vlen });
+                let indices = indices.iter().map(|i| self.val(i)).collect();
+                self.ops.push(DlcOp::MemStr {
+                    id: dst.clone(),
+                    at: at.to_string(),
+                    mem: mem.clone(),
+                    indices,
+                    elem,
+                    vlen: *vlen,
+                    masked: *masked,
+                    hint: *hint,
+                });
+            }
+            SlcOp::AluStr { dst, op, lhs, rhs } => {
+                self.types.insert(dst.clone(), StreamTy { elem: Scalar::Index, vlen: 1 });
+                self.ops.push(DlcOp::AluStr {
+                    id: dst.clone(),
+                    at: at.to_string(),
+                    op: *op,
+                    lhs: self.val(lhs),
+                    rhs: self.val(rhs),
+                });
+            }
+            SlcOp::BufStr { dst, vlen } => {
+                self.types.insert(dst.clone(), StreamTy { elem: Scalar::F32, vlen: *vlen });
+                self.ops.push(DlcOp::BufStr {
+                    id: dst.clone(),
+                    at: at.to_string(),
+                    vlen: *vlen,
+                });
+            }
+            SlcOp::Push { buf, src } => {
+                self.ops.push(DlcOp::BufPush {
+                    buf: buf.clone(),
+                    src: src.clone(),
+                    at: at.to_string(),
+                });
+            }
+            SlcOp::StoreStr { mem, indices, src, hint } => {
+                let vlen = self.stream_ty(src).vlen;
+                let indices = indices.iter().map(|i| self.val(i)).collect();
+                self.ops.push(DlcOp::StoreStr {
+                    src: src.clone(),
+                    at: at.to_string(),
+                    mem: mem.clone(),
+                    indices,
+                    vlen,
+                    hint: *hint,
+                });
+            }
+            SlcOp::Callback(_) | SlcOp::For(_) => unreachable!("handled by lower_loop"),
+        }
+        Ok(())
+    }
+
+    fn lower_loop(&mut self, l: &SlcFor, parent: Option<&str>) -> Result<()> {
+        self.types
+            .insert(l.stream.clone(), StreamTy { elem: Scalar::Index, vlen: l.vlen });
+        self.ops.push(DlcOp::LoopTr {
+            id: l.stream.clone(),
+            lb: self.bound(&l.lb),
+            ub: self.bound(&l.ub),
+            stride: l.step,
+            vlen: l.vlen,
+            parent: parent.map(|s| s.to_string()),
+        });
+        if let Some(cv) = &l.core_var {
+            self.core_vars.push((cv.clone(), 0));
+        }
+
+        for op in &l.body {
+            match op {
+                SlcOp::For(child) => self.lower_loop(child, Some(&l.stream))?,
+                SlcOp::Callback(cb) => {
+                    self.lower_callback(&l.stream, cb.event, &cb.body)?;
+                }
+                other => self.lower_stream_op(other, &l.stream)?,
+            }
+        }
+        Ok(())
+    }
+
+    /// Lower one callback: marshal each `to_val`-read stream via
+    /// `push_op` (in first-use order), push the control token, and
+    /// rewrite the body with `pop`s.
+    fn lower_callback(&mut self, tu: &str, event: Event, body: &[CStmt]) -> Result<()> {
+        // ordered distinct streams read by this callback
+        let mut order: Vec<(String, Option<u32>)> = Vec::new();
+        for s in body {
+            s.walk_exprs(&mut |e| {
+                if let CExpr::ToVal { stream, lane } = e {
+                    if !order.iter().any(|(s2, _)| s2 == stream) {
+                        order.push((stream.clone(), *lane));
+                    }
+                }
+            });
+        }
+
+        for (stream, _) in &order {
+            let ty = self.stream_ty(stream);
+            let is_buf = self
+                .ops
+                .iter()
+                .any(|o| matches!(o, DlcOp::BufStr { id, .. } if id == stream));
+            let src = if is_buf {
+                PushSrc::Buffer(stream.clone())
+            } else {
+                PushSrc::Stream(stream.clone())
+            };
+            self.ops.push(DlcOp::PushOp {
+                src,
+                tu: tu.to_string(),
+                event,
+                elem: ty.elem,
+                vlen: ty.vlen,
+            });
+        }
+
+        let token = self.token_for(tu, event);
+        self.ops.push(DlcOp::CallbackTok {
+            token: token.clone(),
+            tu: tu.to_string(),
+            event,
+        });
+
+        // rewrite to_val -> pop (the Lets hoisted by decouple guarantee
+        // each stream is converted exactly once, so pop order == push
+        // order)
+        let types = self.types.clone();
+        let new_body: Vec<CStmt> = body
+            .iter()
+            .cloned()
+            .map(|s| {
+                s.rewrite_exprs(&|e| {
+                    if let CExpr::ToVal { stream, lane } = &e {
+                        let ty = types
+                            .get(stream)
+                            .copied()
+                            .unwrap_or(StreamTy { elem: Scalar::Index, vlen: 1 });
+                        CExpr::Pop { ty: ty.elem, vlen: ty.vlen, lane: *lane }
+                    } else {
+                        e
+                    }
+                })
+            })
+            .collect();
+
+        self.handlers.push(TokenHandler { token, body: new_body });
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::decouple::decouple;
+    use crate::frontend::embedding_ops::{OpClass, Semiring};
+
+    #[test]
+    fn sls_lowers_to_dlc_fig10() {
+        let slc = decouple(&OpClass::Sls.to_scf()).unwrap();
+        let dlc = lower_to_dlc(&slc).unwrap();
+        // 3 traversal operators, chained
+        assert_eq!(dlc.loop_chain().len(), 3, "{dlc}");
+        // one control token, handled
+        assert_eq!(dlc.compute.len(), 1, "{dlc}");
+        // SLS callback reads b, e, val -> 3 pushes (Fig. 10d)
+        let pushes = dlc
+            .lookup
+            .iter()
+            .filter(|o| matches!(o, DlcOp::PushOp { .. }))
+            .count();
+        assert_eq!(pushes, 3, "{dlc}");
+        let printed = dlc.to_string();
+        assert!(printed.contains("while((tkn = ctrlQ.pop()) != done)"), "{printed}");
+        assert!(printed.contains("dataQ.pop"), "{printed}");
+    }
+
+    #[test]
+    fn all_op_classes_lower_and_verify() {
+        for op in [
+            OpClass::Sls,
+            OpClass::Spmm,
+            OpClass::Mp,
+            OpClass::Kg(Semiring::PlusTimes),
+            OpClass::Kg(Semiring::MaxPlus),
+            OpClass::SpAttn { block: 4 },
+        ] {
+            let slc = decouple(&op.to_scf()).unwrap();
+            let dlc = lower_to_dlc(&slc).unwrap();
+            assert!(!dlc.lookup.is_empty(), "{}", dlc.name);
+        }
+    }
+
+    #[test]
+    fn pop_order_matches_push_order() {
+        let slc = decouple(&OpClass::Sls.to_scf()).unwrap();
+        let dlc = lower_to_dlc(&slc).unwrap();
+        // pushes in lookup order
+        let pushed: Vec<String> = dlc
+            .lookup
+            .iter()
+            .filter_map(|o| match o {
+                DlcOp::PushOp { src: PushSrc::Stream(s), .. } => Some(s.clone()),
+                _ => None,
+            })
+            .collect();
+        // pops in handler body order
+        let mut popped = 0usize;
+        for h in &dlc.compute {
+            for s in &h.body {
+                s.walk_exprs(&mut |e| {
+                    if matches!(e, CExpr::Pop { .. }) {
+                        popped += 1;
+                    }
+                });
+            }
+        }
+        assert_eq!(pushed.len(), popped);
+    }
+}

@@ -1,0 +1,10 @@
+//! The Ember compiler: SCF → SLC (decoupling) → optimization passes →
+//! DLC → DAE targets (paper Fig. 11).
+
+pub mod decouple;
+pub mod lower_dlc;
+pub mod passes;
+
+pub use decouple::decouple;
+pub use lower_dlc::lower_to_dlc;
+pub use passes::pipeline::{compile, CompileOptions, CompiledProgram, OptLevel};

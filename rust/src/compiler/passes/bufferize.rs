@@ -1,0 +1,364 @@
+//! Bufferization (paper §7.2, Fig. 15c).
+//!
+//! Marshals whole embedding vectors as compound payloads: the inner
+//! (vectorized) loop pushes each loaded vector chunk into a *buffer
+//! stream* instead of triggering a callback per chunk; the parent loop
+//! gains one callback per embedding vector (`e_e` token) that converts
+//! the buffer once and iterates it core-side. This collapses
+//! `emb_len/vlen` control tokens + coordinate payloads per vector into
+//! a single token, the big marshaling-efficiency win for long vectors.
+
+use crate::error::{EmberError, Result};
+use crate::ir::compute::{CExpr, CStmt};
+use crate::ir::slc::{SlcBound, SlcCallback, SlcFunc, SlcOp};
+use crate::ir::types::{BinOp, Event};
+use crate::ir::verify::verify_slc;
+use std::collections::HashMap;
+
+/// Apply bufferization. Requires a vectorized inner loop (§7.1 first).
+pub fn bufferize(func: &mut SlcFunc) -> Result<()> {
+    let name = func.name.clone();
+    let root = func.root_mut().ok_or_else(|| EmberError::Pass {
+        pass: "bufferize".into(),
+        msg: "no root loop".into(),
+    })?;
+
+    // locate parent of the innermost loop
+    let parent = parent_of_innermost(root);
+    let Some(parent) = parent else {
+        return Err(EmberError::Pass {
+            pass: "bufferize".into(),
+            msg: format!("`{name}` has a single-level nest; nothing to bufferize"),
+        });
+    };
+
+    // --- inspect the inner loop ---
+    let inner_pos = parent
+        .body
+        .iter()
+        .position(|op| matches!(op, SlcOp::For(f) if f.vlen > 1))
+        .ok_or_else(|| EmberError::Pass {
+            pass: "bufferize".into(),
+            msg: "inner loop is not vectorized (run vectorize first)".into(),
+        })?;
+
+    let (inner_iv, inner_ub, vlen, vec_streams, callbacks) = {
+        let SlcOp::For(inner) = &parent.body[inner_pos] else { unreachable!() };
+        let vec_streams: Vec<String> = inner
+            .body
+            .iter()
+            .filter_map(|op| match op {
+                SlcOp::MemStr { dst, vlen, .. } if *vlen > 1 => Some(dst.clone()),
+                _ => None,
+            })
+            .collect();
+        let callbacks: Vec<SlcCallback> = inner.callbacks().cloned().collect();
+        (
+            inner.stream.clone(),
+            inner.ub.clone(),
+            inner.vlen,
+            vec_streams,
+            callbacks,
+        )
+    };
+    if vec_streams.is_empty() {
+        return Err(EmberError::Pass {
+            pass: "bufferize".into(),
+            msg: "no vectorized mem streams to buffer".into(),
+        });
+    }
+    if callbacks.is_empty() {
+        return Err(EmberError::Pass {
+            pass: "bufferize".into(),
+            msg: "inner loop has no callbacks (already bufferized or store-stream code)".into(),
+        });
+    }
+    let ub_expr = match &inner_ub {
+        SlcBound::Imm(i) => CExpr::ConstI(*i),
+        SlcBound::Sym(s) => CExpr::Sym(s.clone()),
+        SlcBound::Stream(_) => {
+            return Err(EmberError::Pass {
+                pass: "bufferize".into(),
+                msg: "inner loop bound is data-dependent; cannot size the buffer".into(),
+            })
+        }
+    };
+
+    // --- 1. declare buffer streams in the parent, before the inner loop ---
+    let bufs: HashMap<String, String> = vec_streams
+        .iter()
+        .map(|s| (s.clone(), format!("buf_{s}")))
+        .collect();
+    let mut insert_at = inner_pos;
+    for s in &vec_streams {
+        parent
+            .body
+            .insert(insert_at, SlcOp::BufStr { dst: bufs[s].clone(), vlen });
+        insert_at += 1;
+    }
+    let inner_pos = insert_at;
+
+    // --- 2. inner loop: push into buffers, drop callbacks ---
+    {
+        let SlcOp::For(inner) = &mut parent.body[inner_pos] else { unreachable!() };
+        let mut new_body = Vec::new();
+        for op in inner.body.drain(..) {
+            match op {
+                SlcOp::Callback(_) => {} // dropped; reconstructed in parent
+                SlcOp::MemStr { dst, mem, indices, vlen, masked, hint } => {
+                    let push = bufs.get(&dst).cloned();
+                    new_body.push(SlcOp::MemStr { dst: dst.clone(), mem, indices, vlen, masked, hint });
+                    if let Some(buf) = push {
+                        new_body.push(SlcOp::Push { buf, src: dst });
+                    }
+                }
+                other => new_body.push(other),
+            }
+        }
+        inner.body = new_body;
+    }
+
+    // --- 3. build the per-vector callback after the inner loop ---
+    // partition the old callback statements
+    let mut preamble: Vec<CStmt> = Vec::new();
+    let mut chunk_body: Vec<CStmt> = Vec::new();
+    let mut subst: HashMap<String, CExpr> = HashMap::new();
+    let mut chunk_var: Option<String> = None;
+
+    for cb in callbacks {
+        for stmt in cb.body {
+            match &stmt {
+                CStmt::Let { var, value: CExpr::ToVal { stream, lane }, .. } => {
+                    if *stream == inner_iv && *lane == Some(0) {
+                        // the chunk-base index: becomes the core loop var
+                        chunk_var = Some(var.clone());
+                    } else if let Some(buf) = bufs.get(stream) {
+                        // buffered value: uses become buffer elements
+                        let bufvec = format!("vec_{buf}");
+                        let cv = chunk_var.clone().unwrap_or_else(|| "e".to_string());
+                        subst.insert(
+                            var.clone(),
+                            CExpr::BufElem {
+                                buf: bufvec,
+                                idx: Box::new(CExpr::Bin {
+                                    op: BinOp::Div,
+                                    lhs: Box::new(CExpr::Var(cv)),
+                                    rhs: Box::new(CExpr::ConstI(vlen as i64)),
+                                    vlen: 1,
+                                }),
+                            },
+                        );
+                    } else {
+                        // outer scalar (segment id, weight...): once per vector
+                        preamble.push(stmt.clone());
+                    }
+                }
+                _ => chunk_body.push(stmt.clone()),
+            }
+        }
+    }
+    let chunk_var = chunk_var.unwrap_or_else(|| "e".to_string());
+
+    // buffer conversions
+    for s in &vec_streams {
+        let buf = &bufs[s];
+        preamble.push(CStmt::Let {
+            var: format!("vec_{buf}"),
+            value: CExpr::ToVal { stream: buf.clone(), lane: None },
+            vlen,
+        });
+    }
+
+    // rewrite chunk body: buffered vars -> BufElem, keep chunk var name
+    let subst2 = subst.clone();
+    let chunk_body: Vec<CStmt> = chunk_body
+        .into_iter()
+        .map(|s| {
+            s.rewrite_exprs(&|e| {
+                if let CExpr::Var(v) = &e {
+                    if let Some(r) = subst2.get(v) {
+                        return r.clone();
+                    }
+                }
+                e
+            })
+        })
+        .collect();
+
+    let mut new_cb_body = preamble;
+    new_cb_body.push(CStmt::For {
+        var: chunk_var,
+        lb: CExpr::ConstI(0),
+        ub: ub_expr,
+        step: vlen as i64,
+        body: chunk_body,
+    });
+    parent
+        .body
+        .insert(inner_pos + 1, SlcOp::Callback(SlcCallback { event: Event::Ite, body: new_cb_body }));
+
+    // --- 4. rewrite later parent callbacks that re-load buffered data
+    //        (MP workspace loop: vload(h[j,e2]) -> buffer element) ---
+    // map: var -> stream for Lets in those callbacks
+    let buffered_srcs: Vec<(String, Vec<crate::ir::slc::SlcIdx>, String)> = {
+        let SlcOp::For(inner) = &parent.body[inner_pos] else { unreachable!() };
+        inner
+            .body
+            .iter()
+            .filter_map(|op| match op {
+                SlcOp::MemStr { dst, mem, indices, vlen, .. } if *vlen > 1 => bufs
+                    .get(dst)
+                    .map(|b| (mem.clone(), indices.clone(), format!("vec_{b}"))),
+                _ => None,
+            })
+            .collect()
+    };
+    for op in parent.body.iter_mut().skip(inner_pos + 2) {
+        if let SlcOp::Callback(cb) = op {
+            // var -> stream bindings local to this callback
+            let mut v2s: HashMap<String, String> = HashMap::new();
+            for s in &cb.body {
+                if let CStmt::Let { var, value: CExpr::ToVal { stream, .. }, .. } = s {
+                    v2s.insert(var.clone(), stream.clone());
+                }
+            }
+            let srcs = buffered_srcs.clone();
+            cb.body = std::mem::take(&mut cb.body)
+                .into_iter()
+                .map(|s| {
+                    let v2s = v2s.clone();
+                    let srcs = srcs.clone();
+                    s.rewrite_exprs(&move |e| {
+                        if let CExpr::VLoad { mem, indices, vlen } = &e {
+                            for (smem, sidx, bufvec) in &srcs {
+                                if mem == smem && prefix_matches(indices, sidx, &v2s) {
+                                    let last = indices.last().unwrap().clone();
+                                    return CExpr::BufElem {
+                                        buf: bufvec.clone(),
+                                        idx: Box::new(CExpr::Bin {
+                                            op: BinOp::Div,
+                                            lhs: Box::new(last),
+                                            rhs: Box::new(CExpr::ConstI(*vlen as i64)),
+                                            vlen: 1,
+                                        }),
+                                    };
+                                }
+                            }
+                        }
+                        e
+                    })
+                })
+                .collect();
+        }
+    }
+
+    verify_slc(func)?;
+    Ok(())
+}
+
+/// Do the leading indices of a core load match the stream op's leading
+/// indices (via the callback's var->stream bindings)?
+fn prefix_matches(
+    load_idx: &[CExpr],
+    stream_idx: &[crate::ir::slc::SlcIdx],
+    v2s: &HashMap<String, String>,
+) -> bool {
+    use crate::ir::slc::SlcIdx;
+    if load_idx.len() != stream_idx.len() {
+        return false;
+    }
+    for (l, s) in load_idx.iter().zip(stream_idx).take(load_idx.len() - 1) {
+        let ok = match (l, s) {
+            (CExpr::Var(v), SlcIdx::Stream(st)) => v2s.get(v) == Some(st),
+            (CExpr::ConstI(a), SlcIdx::Imm(b)) => a == b,
+            _ => false,
+        };
+        if !ok {
+            return false;
+        }
+    }
+    true
+}
+
+/// Find the parent loop of the innermost loop (None if depth 1).
+fn parent_of_innermost(root: &mut crate::ir::slc::SlcFor) -> Option<&mut crate::ir::slc::SlcFor> {
+    // recursion with borrow checker appeasement: find depth first
+    fn depth_of(l: &crate::ir::slc::SlcFor) -> usize {
+        l.depth()
+    }
+    let d = depth_of(root);
+    if d < 2 {
+        return None;
+    }
+    // descend d-2 levels
+    let mut cur = root;
+    for _ in 0..d - 2 {
+        let next = cur.body.iter_mut().find_map(|op| match op {
+            SlcOp::For(f) => Some(f),
+            _ => None,
+        });
+        cur = next?;
+    }
+    Some(cur)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::decouple::decouple;
+    use crate::compiler::passes::vectorize::vectorize;
+    use crate::frontend::embedding_ops::{OpClass, Semiring};
+
+    fn buf_slc(op: OpClass, vlen: u32) -> SlcFunc {
+        let mut f = decouple(&op.to_scf()).unwrap();
+        vectorize(&mut f, vlen).unwrap();
+        bufferize(&mut f).unwrap();
+        f
+    }
+
+    #[test]
+    fn sls_buffers_value_stream() {
+        let f = buf_slc(OpClass::Sls, 4);
+        let c = f.count_ops();
+        assert_eq!(c.buf_streams, 1, "{f}");
+        assert_eq!(c.pushes, 1, "{f}");
+        // inner loop now has no callbacks; parent has the vector callback
+        let root = f.root().unwrap();
+        assert_eq!(root.innermost().callbacks().count(), 0, "{f}");
+        let p = f.to_string();
+        assert!(p.contains("buf_str"), "{p}");
+        assert!(p.contains("slc.push"), "{p}");
+        assert!(p.contains("for(e ="), "{p}");
+    }
+
+    #[test]
+    fn mp_buffers_both_dot_operands_and_rewrites_workspace() {
+        let f = buf_slc(OpClass::Mp, 4);
+        let c = f.count_ops();
+        assert_eq!(c.buf_streams, 2, "{f}");
+        let p = f.to_string();
+        // workspace loop must now read buffer elements, not reload h
+        assert!(p.contains("vec_buf_"), "{p}");
+        assert!(!p.contains("vload<4>(h"), "workspace reload should be gone: {p}");
+    }
+
+    #[test]
+    fn all_classes_bufferize() {
+        for op in [
+            OpClass::Sls,
+            OpClass::Spmm,
+            OpClass::Mp,
+            OpClass::Kg(Semiring::PlusTimes),
+            OpClass::SpAttn { block: 4 },
+        ] {
+            let f = buf_slc(op.clone(), 8);
+            assert!(f.count_ops().buf_streams >= 1, "{}", f.name);
+        }
+    }
+
+    #[test]
+    fn requires_vectorization_first() {
+        let mut f = decouple(&OpClass::Sls.to_scf()).unwrap();
+        assert!(bufferize(&mut f).is_err());
+    }
+}

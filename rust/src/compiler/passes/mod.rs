@@ -1,0 +1,7 @@
+//! Global SLC optimizations (paper §7) and the pass pipeline.
+
+pub mod bufferize;
+pub mod model_specific;
+pub mod pipeline;
+pub mod queue_align;
+pub mod vectorize;

@@ -1,0 +1,245 @@
+//! Model-specific optimizations (paper §7.4) — block-sparse attention.
+//!
+//! SpAttn has (1) large structured reuse inside each block, (2) low
+//! reuse across blocks, and (3) no computation. Ember therefore:
+//!   * adds *store streams* so gathered blocks flow access-unit →
+//!     memory without touching the core at all,
+//!   * reads key blocks with an L2 cache-level hint (high intra-block
+//!     reuse wants a close cache),
+//!   * reads index arrays non-temporally (used once, don't pollute).
+//!
+//! After this pass the SpAttn program has no callbacks: the control
+//! queue only carries `done` and the core idles (the paper's fully-
+//! offloaded 17× case).
+
+use crate::error::{EmberError, Result};
+use crate::ir::compute::{CExpr, CStmt};
+use crate::ir::slc::{SlcFor, SlcFunc, SlcIdx, SlcOp};
+use crate::ir::types::MemHint;
+use crate::ir::verify::verify_slc;
+use std::collections::HashMap;
+
+/// Configuration for the SpAttn store-stream transform (the Fig. 18
+/// "TMU configuration" axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpAttnConfig {
+    /// Cache level embedding blocks are fetched into (2 = L2, 3 = LLC).
+    pub value_level: u8,
+    /// Load index arrays non-temporally.
+    pub nt_indexes: bool,
+}
+
+impl Default for SpAttnConfig {
+    fn default() -> Self {
+        SpAttnConfig { value_level: 2, nt_indexes: true }
+    }
+}
+
+/// Convert copy-only callbacks into store streams and set cache hints.
+/// Errors if the function has compute (not a pure gather).
+pub fn store_streams(func: &mut SlcFunc, cfg: SpAttnConfig) -> Result<()> {
+    let name = func.name.clone();
+    let root = func.root_mut().ok_or_else(|| EmberError::Pass {
+        pass: "model_specific".into(),
+        msg: "no root loop".into(),
+    })?;
+    let changed = convert_loop(root, cfg)?;
+    if !changed {
+        return Err(EmberError::Pass {
+            pass: "model_specific".into(),
+            msg: format!("`{name}` has no copy-only callbacks (store streams need a pure gather)"),
+        });
+    }
+    // hint the index loads non-temporal
+    if cfg.nt_indexes {
+        hint_index_loads(func.root_mut().unwrap());
+    }
+    verify_slc(func)?;
+    Ok(())
+}
+
+fn convert_loop(l: &mut SlcFor, cfg: SpAttnConfig) -> Result<bool> {
+    let mut changed = false;
+    // First recurse (inner loops converted first).
+    for op in &mut l.body {
+        if let SlcOp::For(child) = op {
+            changed |= convert_loop(child, cfg)?;
+        }
+    }
+
+    // A copy-only callback stores exactly stream values (directly or via
+    // a buffer loop) to one memref, with no arithmetic on f32 data.
+    let mut new_body: Vec<SlcOp> = Vec::new();
+    // var -> stream bindings visible to callbacks of this loop (from
+    // sibling callbacks' Lets AND ancestor alignment is not needed:
+    // store indices referencing core vars cannot offload; this pass
+    // must run BEFORE queue_align for SpAttn).
+    for op in l.body.drain(..) {
+        match op {
+            SlcOp::Callback(cb) => {
+                match copy_only_target(&cb.body, &mut new_body) {
+                    Some((mem, indices, src, _vlen)) => {
+                        changed = true;
+                        new_body.push(SlcOp::StoreStr {
+                            mem,
+                            indices,
+                            src,
+                            hint: MemHint { level: cfg.value_level, non_temporal: false },
+                        });
+                    }
+                    None if cb.body.is_empty() => changed = true,
+                    None => new_body.push(SlcOp::Callback(cb)),
+                }
+            }
+            other => new_body.push(other),
+        }
+    }
+    // apply the value-level hint to vector mem streams feeding store
+    // streams in this loop
+    let store_srcs: Vec<String> = new_body
+        .iter()
+        .filter_map(|op| match op {
+            SlcOp::StoreStr { src, .. } => Some(src.clone()),
+            _ => None,
+        })
+        .collect();
+    for op in &mut new_body {
+        if let SlcOp::MemStr { dst, hint, .. } = op {
+            if store_srcs.contains(dst) {
+                *hint = MemHint { level: cfg.value_level, non_temporal: false };
+            }
+        }
+    }
+    l.body = new_body;
+    Ok(changed)
+}
+
+/// Recognize a copy-only callback: Lets binding to_vals, then a single
+/// (V)Store whose value is exactly one of the bound vars / to_vals.
+/// Returns (mem, store indices as SlcIdx, source stream, vlen).
+fn copy_only_target(
+    body: &[CStmt],
+    ops: &mut Vec<SlcOp>,
+) -> Option<(String, Vec<SlcIdx>, String, u32)> {
+    let mut v2s: HashMap<String, String> = HashMap::new();
+    let mut store: Option<(&String, &Vec<CExpr>, &CExpr, u32)> = None;
+    for s in body {
+        match s {
+            CStmt::Let { var, value: CExpr::ToVal { stream, .. }, .. } => {
+                // lane-0 reads of the vectorized inner induction stream
+                // map back to the stream itself: as a store index it is
+                // exactly the chunk base the access unit iterates.
+                v2s.insert(var.clone(), stream.clone());
+            }
+            CStmt::Store { mem, indices, value } => {
+                if store.is_some() {
+                    return None;
+                }
+                store = Some((mem, indices, value, 1));
+            }
+            CStmt::VStore { mem, indices, value, vlen } => {
+                if store.is_some() {
+                    return None;
+                }
+                store = Some((mem, indices, value, *vlen));
+            }
+            _ => return None,
+        }
+    }
+    let (mem, indices, value, vlen) = store?;
+    // the stored value must be a pure stream read
+    let src = match value {
+        CExpr::Var(v) => v2s.get(v)?.clone(),
+        CExpr::ToVal { stream, lane: None } => stream.clone(),
+        _ => return None,
+    };
+    // indices must be expressible on the access unit: vars bound to
+    // streams, consts, or integer arith over those
+    let mark = ops.len();
+    let mut out_idx = Vec::new();
+    for i in indices {
+        match cexpr_to_slcidx(i, &v2s, ops) {
+            Some(x) => out_idx.push(x),
+            None => {
+                // roll back any partially-emitted alu streams
+                ops.truncate(mark);
+                return None;
+            }
+        }
+    }
+    Some((mem.clone(), out_idx, src, vlen))
+}
+
+/// Convert a core index expression back to an access-unit index,
+/// emitting `alu_str` ops for compound integer arithmetic (the paper's
+/// "offload full index calculation" — §7.3 last paragraph).
+fn cexpr_to_slcidx(
+    e: &CExpr,
+    v2s: &HashMap<String, String>,
+    ops: &mut Vec<SlcOp>,
+) -> Option<SlcIdx> {
+    match e {
+        CExpr::Var(v) => v2s.get(v).map(|s| SlcIdx::Stream(s.clone())),
+        CExpr::ToVal { stream, lane: None } => Some(SlcIdx::Stream(stream.clone())),
+        CExpr::ConstI(c) => Some(SlcIdx::Imm(*c)),
+        CExpr::Sym(s) => Some(SlcIdx::Sym(s.clone())),
+        CExpr::Bin { op, lhs, rhs, .. } => {
+            let l = cexpr_to_slcidx(lhs, v2s, ops)?;
+            let r = cexpr_to_slcidx(rhs, v2s, ops)?;
+            let dst = format!("s_addr_{}", ops.len());
+            ops.push(SlcOp::AluStr { dst: dst.clone(), op: *op, lhs: l, rhs: r });
+            Some(SlcIdx::Stream(dst))
+        }
+        _ => None,
+    }
+}
+
+/// Mark scalar index-array loads (i32 streams) non-temporal.
+fn hint_index_loads(l: &mut SlcFor) {
+    for op in &mut l.body {
+        match op {
+            SlcOp::For(child) => hint_index_loads(child),
+            SlcOp::MemStr { vlen, hint, mem, .. } => {
+                // index arrays are the scalar streams feeding traversal
+                if *vlen == 1 && (mem.contains("idx") || mem.contains("ptr")) {
+                    *hint = MemHint::non_temporal();
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::decouple::decouple;
+    use crate::frontend::embedding_ops::OpClass;
+
+    #[test]
+    fn spattn_becomes_pure_store_streams() {
+        let mut f = decouple(&OpClass::SpAttn { block: 4 }.to_scf()).unwrap();
+        store_streams(&mut f, SpAttnConfig::default()).unwrap();
+        let c = f.count_ops();
+        assert_eq!(c.callbacks, 0, "no callbacks may remain: {f}");
+        assert_eq!(c.store_streams, 1, "{f}");
+        let p = f.to_string();
+        assert!(p.contains("store_str"), "{p}");
+        assert!(p.contains("L2"), "value loads must hint L2: {p}");
+        assert!(p.contains("nt"), "index loads must be non-temporal: {p}");
+    }
+
+    #[test]
+    fn spattn_llc_config() {
+        let mut f = decouple(&OpClass::SpAttn { block: 2 }.to_scf()).unwrap();
+        store_streams(&mut f, SpAttnConfig { value_level: 3, nt_indexes: false }).unwrap();
+        let p = f.to_string();
+        assert!(!p.contains("nt"), "{p}");
+    }
+
+    #[test]
+    fn sls_is_not_a_pure_gather() {
+        let mut f = decouple(&OpClass::Sls.to_scf()).unwrap();
+        assert!(store_streams(&mut f, SpAttnConfig::default()).is_err());
+    }
+}

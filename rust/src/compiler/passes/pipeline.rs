@@ -1,0 +1,178 @@
+//! Pass pipeline: the emb-opt0..3 levels of Table 4.
+//!
+//! * `O0` — decoupling only (unoptimized Ember DAE code)
+//! * `O1` — O0 + inner-loop vectorization (§7.1)
+//! * `O2` — O1 + bufferization (§7.2)
+//! * `O3` — O2 + queue alignment (§7.3) and, for pure gathers (SpAttn),
+//!   the model-specific store-stream transform (§7.4)
+
+use super::{bufferize, model_specific, queue_align, vectorize};
+use crate::compiler::{decouple, lower_dlc};
+use crate::error::Result;
+use crate::frontend::embedding_ops::OpClass;
+use crate::ir::dlc::DlcProgram;
+use crate::ir::scf::ScfFunc;
+use crate::ir::slc::SlcFunc;
+use std::fmt;
+
+/// Optimization level (Table 4: emb-opt0 .. emb-opt3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum OptLevel {
+    O0,
+    O1,
+    O2,
+    O3,
+}
+
+impl OptLevel {
+    pub const ALL: [OptLevel; 4] = [OptLevel::O0, OptLevel::O1, OptLevel::O2, OptLevel::O3];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptLevel::O0 => "emb-opt0",
+            OptLevel::O1 => "emb-opt1",
+            OptLevel::O2 => "emb-opt2",
+            OptLevel::O3 => "emb-opt3",
+        }
+    }
+}
+
+impl fmt::Display for OptLevel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+impl std::str::FromStr for OptLevel {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, String> {
+        match s {
+            "0" | "O0" | "emb-opt0" => Ok(OptLevel::O0),
+            "1" | "O1" | "emb-opt1" => Ok(OptLevel::O1),
+            "2" | "O2" | "emb-opt2" => Ok(OptLevel::O2),
+            "3" | "O3" | "emb-opt3" => Ok(OptLevel::O3),
+            other => Err(format!("unknown opt level `{other}`")),
+        }
+    }
+}
+
+/// Compilation options.
+#[derive(Debug, Clone, Copy)]
+pub struct CompileOptions {
+    pub opt: OptLevel,
+    /// SIMD vector length in elements (Arm SVE-ish default: 4 f32).
+    pub vlen: u32,
+    /// Apply the SpAttn store-stream transform at O3.
+    pub spattn_store_streams: bool,
+    /// SpAttn TMU configuration (Fig. 18 axis).
+    pub spattn: model_specific::SpAttnConfig,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        CompileOptions {
+            opt: OptLevel::O3,
+            vlen: 4,
+            spattn_store_streams: true,
+            spattn: model_specific::SpAttnConfig::default(),
+        }
+    }
+}
+
+impl CompileOptions {
+    pub fn at(opt: OptLevel) -> Self {
+        CompileOptions { opt, ..Default::default() }
+    }
+}
+
+/// A fully compiled embedding operation, retaining every IR stage for
+/// inspection, testing, and the simulator/interpreter backends.
+#[derive(Debug, Clone)]
+pub struct CompiledProgram {
+    pub op: OpClass,
+    pub options_opt: OptLevel,
+    pub vlen: u32,
+    pub scf: ScfFunc,
+    pub slc: SlcFunc,
+    pub dlc: DlcProgram,
+}
+
+/// Compile an embedding op through the full pipeline.
+pub fn compile(op: &OpClass, opts: CompileOptions) -> Result<CompiledProgram> {
+    let scf = op.to_scf();
+    let mut slc = decouple::decouple(&scf)?;
+
+    // Pure gathers (SpAttn) at O3 take the model-specific path: store
+    // streams subsume bufferization and marshaling entirely (§7.4), so
+    // they are applied to the vectorized form directly.
+    let gather_path = matches!(op, OpClass::SpAttn { .. })
+        && opts.opt >= OptLevel::O3
+        && opts.spattn_store_streams;
+
+    if opts.opt >= OptLevel::O1 {
+        vectorize::vectorize(&mut slc, opts.vlen)?;
+    }
+    if opts.opt >= OptLevel::O2 && !gather_path {
+        bufferize::bufferize(&mut slc)?;
+    }
+    if opts.opt >= OptLevel::O3 {
+        if gather_path {
+            model_specific::store_streams(&mut slc, opts.spattn)?;
+        }
+        // queue alignment is a no-op when no callbacks remain
+        queue_align::queue_align(&mut slc)?;
+    }
+
+    let dlc = lower_dlc::lower_to_dlc(&slc)?;
+    Ok(CompiledProgram {
+        op: op.clone(),
+        options_opt: opts.opt,
+        vlen: opts.vlen,
+        scf,
+        slc,
+        dlc,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::embedding_ops::Semiring;
+
+    #[test]
+    fn every_class_compiles_at_every_level() {
+        for op in [
+            OpClass::Sls,
+            OpClass::Spmm,
+            OpClass::Mp,
+            OpClass::Kg(Semiring::PlusTimes),
+            OpClass::Kg(Semiring::MaxPlus),
+            OpClass::SpAttn { block: 4 },
+        ] {
+            for opt in OptLevel::ALL {
+                let p = compile(&op, CompileOptions { opt, ..Default::default() });
+                assert!(p.is_ok(), "{:?} at {opt}: {:?}", op, p.err());
+            }
+        }
+    }
+
+    #[test]
+    fn opt_levels_are_monotone_in_structure() {
+        let o0 = compile(&OpClass::Sls, CompileOptions::at(OptLevel::O0)).unwrap();
+        let o1 = compile(&OpClass::Sls, CompileOptions::at(OptLevel::O1)).unwrap();
+        let o2 = compile(&OpClass::Sls, CompileOptions::at(OptLevel::O2)).unwrap();
+        let o3 = compile(&OpClass::Sls, CompileOptions::at(OptLevel::O3)).unwrap();
+        assert_eq!(o0.slc.count_ops().vector_loops, 0);
+        assert_eq!(o1.slc.count_ops().vector_loops, 1);
+        assert_eq!(o2.slc.count_ops().buf_streams, 1);
+        let mut aligned = false;
+        o3.slc.walk_loops(&mut |l| aligned |= l.core_var.is_some());
+        assert!(aligned);
+    }
+
+    #[test]
+    fn spattn_o3_has_no_compute() {
+        let p = compile(&OpClass::SpAttn { block: 4 }, CompileOptions::at(OptLevel::O3)).unwrap();
+        assert!(p.dlc.compute.is_empty(), "{}", p.dlc);
+    }
+}

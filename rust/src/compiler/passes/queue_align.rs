@@ -1,0 +1,213 @@
+//! Queue alignment (paper §7.3, Fig. 15d).
+//!
+//! Scalar coordinates that are just loop induction variables do not
+//! need to be marshaled at all: the core can mirror them with a local
+//! counter bumped by the *end* token of the child loop (the `s_e`
+//! segment-end token in Fig. 14d). Removing these scalars from the data
+//! queue leaves only cache-line-aligned embedding payloads — the point
+//! of the optimization — and shrinks both marshaling and pop work.
+
+use crate::error::{EmberError, Result};
+use crate::ir::compute::{CExpr, CStmt};
+use crate::ir::slc::{SlcCallback, SlcFor, SlcFunc, SlcOp};
+use crate::ir::types::Event;
+use crate::ir::verify::verify_slc;
+use std::collections::{HashMap, HashSet};
+
+/// Apply queue alignment to every callback in the function.
+pub fn queue_align(func: &mut SlcFunc) -> Result<()> {
+    let root = func.root_mut().ok_or_else(|| EmberError::Pass {
+        pass: "queue_align".into(),
+        msg: "no root loop".into(),
+    })?;
+
+    // collect the loop-iv stream names in nest order (outer..inner)
+    let mut chain: Vec<String> = Vec::new();
+    {
+        let mut cur: Option<&SlcFor> = Some(root);
+        while let Some(l) = cur {
+            chain.push(l.stream.clone());
+            cur = l.body.iter().find_map(|op| match op {
+                SlcOp::For(f) => Some(f),
+                _ => None,
+            });
+        }
+    }
+    let iv_set: HashSet<String> = chain.iter().cloned().collect();
+
+    // For each loop level, find callbacks reading ancestor/own loop-iv
+    // streams as plain scalars; replace with core vars.
+    let mut aligned: Vec<(String, String)> = Vec::new(); // (loop stream, var)
+    align_loop(root, &iv_set, &mut aligned)?;
+
+    // Register core vars + add increment callbacks.
+    let root = func.root_mut().unwrap();
+    for (loop_stream, var) in &aligned {
+        set_core_var(root, loop_stream, var);
+        add_increment(root, loop_stream, var);
+    }
+
+    verify_slc(func)?;
+    Ok(())
+}
+
+/// Remove `Let v = to_val(s_iv)` reads (scalar, lane-0 or plain) from
+/// callbacks, recording (loop, var) pairs to mirror core-side.
+fn align_loop(
+    l: &mut SlcFor,
+    ivs: &HashSet<String>,
+    aligned: &mut Vec<(String, String)>,
+) -> Result<()> {
+    for op in &mut l.body {
+        match op {
+            SlcOp::For(child) => align_loop(child, ivs, aligned)?,
+            SlcOp::Callback(cb) => {
+                let mut kept = Vec::new();
+                for stmt in cb.body.drain(..) {
+                    match &stmt {
+                        CStmt::Let { var, value: CExpr::ToVal { stream, lane }, .. }
+                            if ivs.contains(stream)
+                                && (lane.is_none() || *lane == Some(0)) =>
+                        {
+                            // lane-0 reads of the vectorized inner loop
+                            // are chunk bases, not trip counters — skip
+                            // those (bufferization already removed them
+                            // in the O2 pipeline).
+                            if lane.is_some() {
+                                kept.push(stmt);
+                                continue;
+                            }
+                            if !aligned.iter().any(|(s, _)| s == stream) {
+                                aligned.push((stream.clone(), var.clone()));
+                            }
+                            // drop the Let: uses now read the core var
+                            // of the same name.
+                        }
+                        _ => kept.push(stmt),
+                    }
+                }
+                cb.body = kept;
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+fn set_core_var(l: &mut SlcFor, loop_stream: &str, var: &str) {
+    if l.stream == loop_stream {
+        l.core_var = Some(var.to_string());
+        return;
+    }
+    for op in &mut l.body {
+        if let SlcOp::For(child) = op {
+            set_core_var(child, loop_stream, var);
+        }
+    }
+}
+
+/// Add `var += step` once per iteration of `loop_stream`, *after* every
+/// reader: as the loop's final Ite callback (this is the paper's
+/// segment-end `s_e` token — it fires exactly once per iteration of the
+/// mirrored loop, after the child traversal and any trailing callbacks
+/// of the same iteration have marshaled).
+fn add_increment(l: &mut SlcFor, loop_stream: &str, var: &str) {
+    if l.stream == loop_stream {
+        let step = l.step;
+        let inc = CStmt::Inc { var: var.to_string(), by: CExpr::ConstI(step) };
+        // merge into an existing trailing Ite callback when the very
+        // last op is one (saves a token), else append a fresh End-styled
+        // callback at the end of the body.
+        if let Some(SlcOp::Callback(cb)) = l.body.last_mut() {
+            if cb.event == Event::Ite {
+                cb.body.push(inc);
+                return;
+            }
+        }
+        l.body
+            .push(SlcOp::Callback(SlcCallback { event: Event::Ite, body: vec![inc] }));
+        return;
+    }
+    for op in &mut l.body {
+        if let SlcOp::For(child) = op {
+            add_increment(child, loop_stream, var);
+        }
+    }
+}
+
+/// Map var -> ancestor-iv alignment candidates of a callback body
+/// (used by tests and the cost model).
+pub fn alignable_vars(func: &SlcFunc) -> HashMap<String, String> {
+    let mut ivs = HashSet::new();
+    func.walk_loops(&mut |l| {
+        ivs.insert(l.stream.clone());
+    });
+    let mut out = HashMap::new();
+    func.walk_loops(&mut |l| {
+        for cb in l.body.iter().filter_map(|op| match op {
+            SlcOp::Callback(cb) => Some(cb),
+            _ => None,
+        }) {
+            for s in &cb.body {
+                if let CStmt::Let { var, value: CExpr::ToVal { stream, lane: None }, .. } = s {
+                    if ivs.contains(stream) {
+                        out.insert(var.clone(), stream.clone());
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::decouple::decouple;
+    use crate::compiler::passes::{bufferize::bufferize, vectorize::vectorize};
+    use crate::frontend::embedding_ops::{OpClass, Semiring};
+
+    fn opt3(op: OpClass, vlen: u32) -> SlcFunc {
+        let mut f = decouple(&op.to_scf()).unwrap();
+        vectorize(&mut f, vlen).unwrap();
+        bufferize(&mut f).unwrap();
+        queue_align(&mut f).unwrap();
+        f
+    }
+
+    #[test]
+    fn sls_aligns_segment_id() {
+        let f = opt3(OpClass::Sls, 4);
+        let p = f.to_string();
+        // b is no longer marshaled: no `to_val(s_b)` left
+        assert!(!p.contains("to_val(s_b)"), "{p}");
+        // a trailing callback increments the mirror counter
+        assert!(p.contains("+= 1"), "{p}");
+        // the loop carries the core var annotation
+        let root = f.root().unwrap();
+        assert!(root.core_var.is_some(), "{p}");
+    }
+
+    #[test]
+    fn kg_aligns_query_id() {
+        let f = opt3(OpClass::Kg(Semiring::PlusTimes), 4);
+        let p = f.to_string();
+        assert!(!p.contains("to_val(s_q)"), "{p}");
+    }
+
+    #[test]
+    fn all_classes_align() {
+        for op in [
+            OpClass::Sls,
+            OpClass::Spmm,
+            OpClass::Mp,
+            OpClass::Kg(Semiring::MaxPlus),
+            OpClass::SpAttn { block: 4 },
+        ] {
+            let f = opt3(op.clone(), 8);
+            let mut any = false;
+            f.walk_loops(&mut |l| any |= l.core_var.is_some());
+            assert!(any, "{} should align at least one scalar", f.name);
+        }
+    }
+}

@@ -1,0 +1,333 @@
+//! Inner-loop vectorization (paper §7.1, Fig. 15b).
+//!
+//! Following the paper (and the MLIR sparsifier), Ember only attempts
+//! inner-loop vectorization: the innermost offloaded loop and its
+//! streams become SLCV duals (vector induction stream + mask), and its
+//! callbacks are vectorized — loads/stores on the inner index become
+//! vector ops, reads of the inner induction variable become lane-0
+//! extractions, and reductions across lanes gain a horizontal add.
+//! Core-side workspace loops over the same inner dimension (MP) are
+//! vectorized too.
+
+use crate::error::{EmberError, Result};
+use crate::ir::compute::{CExpr, CStmt};
+use crate::ir::slc::{SlcFor, SlcFunc, SlcIdx, SlcOp};
+use crate::ir::verify::verify_slc;
+use std::collections::HashSet;
+
+/// Vectorize the innermost loop with vector length `vlen`.
+/// Returns Err if the scheme is illegal (a callback cannot vectorize).
+pub fn vectorize(func: &mut SlcFunc, vlen: u32) -> Result<()> {
+    if vlen < 2 {
+        return Err(EmberError::Pass {
+            pass: "vectorize".into(),
+            msg: format!("vlen must be >= 2, got {vlen}"),
+        });
+    }
+    let root = func.root_mut().ok_or_else(|| EmberError::Pass {
+        pass: "vectorize".into(),
+        msg: "no root loop".into(),
+    })?;
+    let inner = root.innermost_mut();
+    if inner.vlen > 1 {
+        return Err(EmberError::Pass {
+            pass: "vectorize".into(),
+            msg: "inner loop already vectorized".into(),
+        });
+    }
+
+    let iv = inner.stream.clone();
+    inner.vlen = vlen;
+    inner.mask = Some(format!("msk_{}", iv.strip_prefix("s_").unwrap_or(&iv)));
+
+    // 1. vectorize streams whose last index is the inner induction
+    //    stream (contiguous along the vectorized dimension)
+    let mut vec_streams: HashSet<String> = HashSet::new();
+    vec_streams.insert(iv.clone());
+    for op in &mut inner.body {
+        if let SlcOp::MemStr { dst, indices, vlen: v, masked, .. } = op {
+            if matches!(indices.last(), Some(SlcIdx::Stream(s)) if *s == iv) {
+                *v = vlen;
+                *masked = true;
+                vec_streams.insert(dst.clone());
+            }
+        }
+    }
+
+    // 2. vectorize callbacks
+    for op in &mut inner.body {
+        if let SlcOp::Callback(cb) = op {
+            cb.body = vectorize_callback(std::mem::take(&mut cb.body), &iv, &vec_streams, vlen)?;
+        }
+    }
+
+    // 3. vectorize contiguous core-side loops in OUTER callbacks too
+    //    (MP's workspace loop re-walks the embedding dimension on the
+    //    core; its stores/loads are contiguous and take the same vlen)
+    let root = func.root_mut().unwrap();
+    vectorize_outer_callbacks(root, vlen);
+
+    verify_slc(func)?;
+    Ok(())
+}
+
+/// Vectorize core `For` loops found in callbacks of non-inner loops.
+fn vectorize_outer_callbacks(l: &mut SlcFor, vlen: u32) {
+    let is_inner = !l.body.iter().any(|op| matches!(op, SlcOp::For(_)));
+    for op in &mut l.body {
+        match op {
+            SlcOp::For(child) => vectorize_outer_callbacks(child, vlen),
+            SlcOp::Callback(cb) if !is_inner => {
+                cb.body = std::mem::take(&mut cb.body)
+                    .into_iter()
+                    .map(|s| vectorize_core_for(s, vlen))
+                    .collect();
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Rewrite a core `For` into its vector form when every store is
+/// contiguous in the loop's own induction variable.
+fn vectorize_core_for(s: CStmt, vlen: u32) -> CStmt {
+    let CStmt::For { var, lb, ub, step, body } = s else { return s };
+    let contiguous = step == 1
+        && body.iter().all(|st| match st {
+            CStmt::Store { indices, .. } => {
+                matches!(indices.last(), Some(CExpr::Var(v)) if *v == var)
+            }
+            CStmt::Let { .. } | CStmt::Inc { .. } => true,
+            _ => false,
+        })
+        && body.iter().any(|st| matches!(st, CStmt::Store { .. }));
+    if !contiguous {
+        return CStmt::For { var, lb, ub, step, body };
+    }
+    let var2 = var.clone();
+    let body = body
+        .into_iter()
+        .map(|st| match st {
+            CStmt::Store { mem, indices, value } => {
+                let value = value.rewrite(&|e| match e {
+                    CExpr::Load { mem, indices }
+                        if matches!(indices.last(), Some(CExpr::Var(v)) if *v == var2) =>
+                    {
+                        CExpr::VLoad { mem, indices, vlen }
+                    }
+                    other => other,
+                });
+                CStmt::VStore { mem, indices, value, vlen }
+            }
+            other => other,
+        })
+        .collect();
+    CStmt::For { var, lb, ub, step: vlen as i64, body }
+}
+
+/// Vectorize the statements of an inner-loop callback.
+fn vectorize_callback(
+    body: Vec<CStmt>,
+    iv: &str,
+    vec_streams: &HashSet<String>,
+    vlen: u32,
+) -> Result<Vec<CStmt>> {
+    // classify variables: vars Let-bound from vectorized streams carry
+    // vectors; the var bound from the induction stream becomes the
+    // scalar chunk-base index (lane 0).
+    let mut vec_vars: HashSet<String> = HashSet::new();
+    let mut base_var: Option<String> = None;
+    for s in &body {
+        if let CStmt::Let { var, value, .. } = s {
+            if let CExpr::ToVal { stream, .. } = value {
+                if stream == iv {
+                    base_var = Some(var.clone());
+                } else if vec_streams.contains(stream) {
+                    vec_vars.insert(var.clone());
+                }
+            }
+        }
+    }
+
+    let mut out = Vec::new();
+    for s in body {
+        out.push(vectorize_stmt(s, iv, vec_streams, &vec_vars, base_var.as_deref(), vlen)?);
+    }
+    Ok(out)
+}
+
+fn is_vector_expr(e: &CExpr, vec_vars: &HashSet<String>) -> bool {
+    let mut any = false;
+    e.walk(&mut |n| match n {
+        CExpr::Var(v) if vec_vars.contains(v) => any = true,
+        CExpr::VLoad { .. } => any = true,
+        CExpr::ToVal { .. } => {} // resolved via vec_vars
+        _ => {}
+    });
+    any
+}
+
+fn vectorize_stmt(
+    s: CStmt,
+    iv: &str,
+    vec_streams: &HashSet<String>,
+    vec_vars: &HashSet<String>,
+    base_var: Option<&str>,
+    vlen: u32,
+) -> Result<CStmt> {
+    match s {
+        CStmt::Let { var, value, .. } => match &value {
+            CExpr::ToVal { stream, .. } if stream == iv => {
+                // index e = slcv.to_val(s_e)[0]
+                Ok(CStmt::Let {
+                    var,
+                    value: CExpr::ToVal { stream: stream.clone(), lane: Some(0) },
+                    vlen: 1,
+                })
+            }
+            CExpr::ToVal { stream, .. } if vec_streams.contains(stream) => Ok(CStmt::Let {
+                var,
+                value: CExpr::ToVal { stream: stream.clone(), lane: None },
+                vlen,
+            }),
+            _ => Ok(CStmt::Let {
+                var,
+                vlen: if is_vector_expr(&value, vec_vars) { vlen } else { 1 },
+                value,
+            }),
+        },
+        CStmt::Store { mem, indices, value } => {
+            // store indexed by the inner variable -> vector store; loads
+            // of the same last index inside the value -> vector loads.
+            let is_inner_store = matches!(
+                (indices.last(), base_var),
+                (Some(CExpr::Var(v)), Some(b)) if v == b
+            );
+            if is_inner_store {
+                let value = value.rewrite(&|e| match e {
+                    CExpr::Load { mem, indices }
+                        if matches!(
+                            (indices.last(), base_var),
+                            (Some(CExpr::Var(v)), Some(b)) if v == b
+                        ) =>
+                    {
+                        CExpr::VLoad { mem, indices, vlen }
+                    }
+                    other => other,
+                });
+                Ok(CStmt::VStore { mem, indices, value, vlen })
+            } else if is_vector_expr(&value, vec_vars) {
+                Err(EmberError::Pass {
+                    pass: "vectorize".into(),
+                    msg: format!("store to {mem} mixes vector value with scalar indexing"),
+                })
+            } else {
+                Ok(CStmt::Store { mem, indices, value })
+            }
+        }
+        CStmt::VStore { .. } => Err(EmberError::Pass {
+            pass: "vectorize".into(),
+            msg: "already vectorized".into(),
+        }),
+        CStmt::Inc { var, by } => {
+            // reduction accumulation: wrap vector contributions in a
+            // horizontal add (MP dot product).
+            if is_vector_expr(&by, vec_vars) {
+                Ok(CStmt::Inc { var, by: CExpr::HAdd { v: Box::new(by), vlen } })
+            } else {
+                Ok(CStmt::Inc { var, by })
+            }
+        }
+        CStmt::For { var, lb, ub, step, body } => {
+            // core-side workspace loop: vectorize if its stores/loads
+            // are contiguous in its own induction variable.
+            let contiguous = body.iter().all(|st| match st {
+                CStmt::Store { indices, .. } => {
+                    matches!(indices.last(), Some(CExpr::Var(v)) if *v == var)
+                }
+                _ => true,
+            });
+            if contiguous && step == 1 {
+                let var2 = var.clone();
+                let body = body
+                    .into_iter()
+                    .map(|st| match st {
+                        CStmt::Store { mem, indices, value } => {
+                            let value = value.rewrite(&|e| match e {
+                                CExpr::Load { mem, indices }
+                                    if matches!(
+                                        indices.last(),
+                                        Some(CExpr::Var(v)) if *v == var2
+                                    ) =>
+                                {
+                                    CExpr::VLoad { mem, indices, vlen }
+                                }
+                                other => other,
+                            });
+                            CStmt::VStore { mem, indices, value, vlen }
+                        }
+                        other => other,
+                    })
+                    .collect();
+                Ok(CStmt::For { var, lb, ub, step: vlen as i64, body })
+            } else {
+                Ok(CStmt::For { var, lb, ub, step, body })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::decouple::decouple;
+    use crate::frontend::embedding_ops::{OpClass, Semiring};
+
+    fn vec_slc(op: OpClass, vlen: u32) -> SlcFunc {
+        let mut f = decouple(&op.to_scf()).unwrap();
+        vectorize(&mut f, vlen).unwrap();
+        f
+    }
+
+    #[test]
+    fn sls_inner_loop_becomes_slcv() {
+        let f = vec_slc(OpClass::Sls, 4);
+        let c = f.count_ops();
+        assert_eq!(c.vector_loops, 1, "{f}");
+        assert_eq!(c.vector_mem_streams, 1, "{f}");
+        let p = f.to_string();
+        assert!(p.contains("slcv.for<4>"), "{p}");
+        assert!(p.contains("slcv.mem_str<4>"), "{p}");
+        assert!(p.contains("vstore<4>"), "{p}");
+        assert!(p.contains("to_val(s_e)[0]"), "{p}");
+    }
+
+    #[test]
+    fn mp_dot_gets_horizontal_add_and_ws_loop_vectorizes() {
+        let f = vec_slc(OpClass::Mp, 4);
+        let p = f.to_string();
+        assert!(p.contains("hadd<4>") || p.contains("Inc"), "{p}");
+        assert!(p.contains("vstore<4>"), "workspace loop must vectorize: {p}");
+    }
+
+    #[test]
+    fn all_classes_vectorize() {
+        for op in [
+            OpClass::Sls,
+            OpClass::Spmm,
+            OpClass::Mp,
+            OpClass::Kg(Semiring::PlusTimes),
+            OpClass::SpAttn { block: 4 },
+        ] {
+            let f = vec_slc(op.clone(), 8);
+            assert_eq!(f.count_ops().vector_loops, 1, "{}", f.name);
+        }
+    }
+
+    #[test]
+    fn rejects_double_vectorization() {
+        let mut f = decouple(&OpClass::Sls.to_scf()).unwrap();
+        vectorize(&mut f, 4).unwrap();
+        assert!(vectorize(&mut f, 4).is_err());
+    }
+}

@@ -1,0 +1,134 @@
+//! Dynamic batcher: groups requests into model-sized batches under a
+//! latency bound (classic serving tradeoff). Pure state machine —
+//! thread plumbing lives in `server.rs` so this is unit-testable.
+
+use super::Request;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Copy)]
+pub struct BatchOptions {
+    /// Flush when this many requests are waiting (= compiled batch).
+    pub max_batch: usize,
+    /// Flush a non-empty batch this long after its first request.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchOptions {
+    fn default() -> Self {
+        BatchOptions { max_batch: 64, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Accumulates requests; `push`/`poll` report when a batch is ready.
+pub struct Batcher {
+    opts: BatchOptions,
+    pending: Vec<Request>,
+    oldest: Option<Instant>,
+    pub batches_emitted: u64,
+    pub requests_seen: u64,
+}
+
+impl Batcher {
+    pub fn new(opts: BatchOptions) -> Self {
+        Batcher {
+            opts,
+            pending: Vec::new(),
+            oldest: None,
+            batches_emitted: 0,
+            requests_seen: 0,
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Add a request; returns a full batch if this push filled one.
+    pub fn push(&mut self, req: Request, now: Instant) -> Option<Vec<Request>> {
+        if self.pending.is_empty() {
+            self.oldest = Some(now);
+        }
+        self.pending.push(req);
+        self.requests_seen += 1;
+        if self.pending.len() >= self.opts.max_batch {
+            return Some(self.flush());
+        }
+        None
+    }
+
+    /// Time-based flush check.
+    pub fn poll(&mut self, now: Instant) -> Option<Vec<Request>> {
+        match self.oldest {
+            Some(t0) if !self.pending.is_empty() && now.duration_since(t0) >= self.opts.max_wait => {
+                Some(self.flush())
+            }
+            _ => None,
+        }
+    }
+
+    /// Deadline for the next time-based flush (for channel timeouts).
+    pub fn deadline(&self) -> Option<Instant> {
+        self.oldest.map(|t0| t0 + self.opts.max_wait)
+    }
+
+    pub fn flush(&mut self) -> Vec<Request> {
+        self.oldest = None;
+        self.batches_emitted += 1;
+        std::mem::take(&mut self.pending)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64) -> Request {
+        Request { id, lookups: vec![vec![1]], dense: vec![0.0] }
+    }
+
+    #[test]
+    fn flushes_on_size() {
+        let mut b = Batcher::new(BatchOptions { max_batch: 3, max_wait: Duration::from_secs(10) });
+        let t = Instant::now();
+        assert!(b.push(req(0), t).is_none());
+        assert!(b.push(req(1), t).is_none());
+        let batch = b.push(req(2), t).expect("full");
+        assert_eq!(batch.len(), 3);
+        assert_eq!(b.pending(), 0);
+        assert_eq!(b.batches_emitted, 1);
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let mut b = Batcher::new(BatchOptions { max_batch: 100, max_wait: Duration::from_millis(5) });
+        let t0 = Instant::now();
+        b.push(req(0), t0);
+        assert!(b.poll(t0 + Duration::from_millis(1)).is_none());
+        let batch = b.poll(t0 + Duration::from_millis(6)).expect("deadline");
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn every_request_in_exactly_one_batch() {
+        let mut b = Batcher::new(BatchOptions { max_batch: 4, max_wait: Duration::from_millis(1) });
+        let t0 = Instant::now();
+        let mut seen = Vec::new();
+        for i in 0..10 {
+            if let Some(batch) = b.push(req(i), t0) {
+                seen.extend(batch.iter().map(|r| r.id));
+            }
+        }
+        if let Some(batch) = b.poll(t0 + Duration::from_millis(2)) {
+            seen.extend(batch.iter().map(|r| r.id));
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_batcher_never_flushes_on_poll() {
+        let mut b = Batcher::new(BatchOptions::default());
+        assert!(b.poll(Instant::now() + Duration::from_secs(1)).is_none());
+        assert!(b.deadline().is_none());
+    }
+}

@@ -1,0 +1,102 @@
+//! Request router: dispatches requests to named model coordinators
+//! (the vllm-router-shaped front door; one `Coordinator` per model).
+
+use super::server::Coordinator;
+use super::{Request, Response};
+use crate::error::{EmberError, Result};
+use std::collections::HashMap;
+
+#[derive(Default)]
+pub struct Router {
+    models: HashMap<String, Coordinator>,
+    /// Round-robin replica groups: model -> replica names.
+    replicas: HashMap<String, Vec<String>>,
+    rr: HashMap<String, usize>,
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a coordinator under `name`. Registering several
+    /// replicas as `name#k` + `add_replica_group` round-robins them.
+    pub fn register(&mut self, name: &str, coord: Coordinator) {
+        self.models.insert(name.to_string(), coord);
+    }
+
+    pub fn add_replica_group(&mut self, name: &str, members: Vec<String>) {
+        self.replicas.insert(name.to_string(), members);
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+
+    fn resolve(&mut self, model: &str) -> Result<&Coordinator> {
+        let target = if let Some(group) = self.replicas.get(model) {
+            if group.is_empty() {
+                return Err(EmberError::Runtime(format!("empty replica group `{model}`")));
+            }
+            let k = self.rr.entry(model.to_string()).or_insert(0);
+            let t = group[*k % group.len()].clone();
+            *k += 1;
+            t
+        } else {
+            model.to_string()
+        };
+        self.models
+            .get(&target)
+            .ok_or_else(|| EmberError::Runtime(format!("unknown model `{target}`")))
+    }
+
+    /// Route one request synchronously.
+    pub fn infer(&mut self, model: &str, req: Request) -> Result<Response> {
+        self.resolve(model)?.infer(req)
+    }
+
+    /// Shut everything down.
+    pub fn shutdown(self) {
+        for (_, c) in self.models {
+            c.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BatchOptions, DlrmModel};
+    use std::time::Duration;
+
+    fn tiny_coord() -> Coordinator {
+        Coordinator::start(
+            DlrmModel::new(4, 64, 8, 1, 6, 3, 16, 1).unwrap(),
+            None,
+            BatchOptions { max_batch: 2, max_wait: Duration::from_millis(1) },
+        )
+    }
+
+    #[test]
+    fn routes_by_name_and_rejects_unknown() {
+        let mut r = Router::new();
+        r.register("dlrm", tiny_coord());
+        let req = Request { id: 1, lookups: vec![vec![3, 4]], dense: vec![0.1, 0.2, 0.3] };
+        assert!(r.infer("dlrm", req.clone()).is_ok());
+        assert!(r.infer("nope", req).is_err());
+        r.shutdown();
+    }
+
+    #[test]
+    fn round_robins_replicas() {
+        let mut r = Router::new();
+        r.register("dlrm#0", tiny_coord());
+        r.register("dlrm#1", tiny_coord());
+        r.add_replica_group("dlrm", vec!["dlrm#0".into(), "dlrm#1".into()]);
+        let req = Request { id: 1, lookups: vec![vec![3]], dense: vec![0.0; 3] };
+        for _ in 0..4 {
+            assert!(r.infer("dlrm", req.clone()).is_ok());
+        }
+        r.shutdown();
+    }
+}

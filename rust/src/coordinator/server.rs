@@ -1,0 +1,216 @@
+//! Serving loop: one worker thread owns the model + PJRT runtime (the
+//! xla client is not Sync) and drains a request channel through the
+//! batcher. Callers get responses over per-request channels.
+
+use super::batcher::{BatchOptions, Batcher};
+use super::{DlrmModel, Request, Response};
+use crate::error::{EmberError, Result};
+use crate::runtime::Runtime;
+use std::path::PathBuf;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+type Envelope = (Request, Sender<Result<Response>>);
+
+/// Serving statistics (snapshot via `stats`).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub errors: u64,
+}
+
+/// A running DLRM coordinator.
+pub struct Coordinator {
+    tx: Option<Sender<Envelope>>,
+    handle: Option<JoinHandle<ServeStats>>,
+}
+
+impl Coordinator {
+    /// Spawn the worker. The PJRT client is not `Send`, so the worker
+    /// constructs its own `Runtime` from `artifacts_dir`; `None` uses
+    /// the pure-Rust MLP (useful where PJRT is unavailable).
+    pub fn start(model: DlrmModel, artifacts_dir: Option<PathBuf>, opts: BatchOptions) -> Self {
+        let (tx, rx) = mpsc::channel::<Envelope>();
+        let handle = std::thread::spawn(move || {
+            let runtime = artifacts_dir.and_then(|d| Runtime::new(d).ok());
+            worker(model, runtime, opts, rx)
+        });
+        Coordinator { tx: Some(tx), handle: Some(handle) }
+    }
+
+    /// Async submit: returns the response channel.
+    pub fn submit(&self, req: Request) -> Result<Receiver<Result<Response>>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .ok_or_else(|| EmberError::Runtime("coordinator stopped".into()))?
+            .send((req, rtx))
+            .map_err(|_| EmberError::Runtime("coordinator worker gone".into()))?;
+        Ok(rrx)
+    }
+
+    /// Sync convenience: submit + wait.
+    pub fn infer(&self, req: Request) -> Result<Response> {
+        let rx = self.submit(req)?;
+        rx.recv()
+            .map_err(|_| EmberError::Runtime("worker dropped response".into()))?
+    }
+
+    /// Stop the worker and return its stats.
+    pub fn shutdown(mut self) -> ServeStats {
+        drop(self.tx.take());
+        self.handle
+            .take()
+            .map(|h| h.join().unwrap_or_default())
+            .unwrap_or_default()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker(
+    model: DlrmModel,
+    mut runtime: Option<Runtime>,
+    opts: BatchOptions,
+    rx: Receiver<Envelope>,
+) -> ServeStats {
+    let mut stats = ServeStats::default();
+    let mut batcher = Batcher::new(opts);
+    let mut waiting: Vec<Sender<Result<Response>>> = Vec::new();
+    let mut inflight: Vec<Vec<Sender<Result<Response>>>> = Vec::new();
+
+    let mut run_batch = |model: &DlrmModel,
+                         runtime: &mut Option<Runtime>,
+                         batch: Vec<Request>,
+                         senders: Vec<Sender<Result<Response>>>,
+                         stats: &mut ServeStats| {
+        stats.batches += 1;
+        let result = match runtime {
+            Some(rt) => model.infer_batch(rt, &batch),
+            None => model.infer_batch_cpu(&batch),
+        };
+        match result {
+            Ok(responses) => {
+                for (resp, tx) in responses.into_iter().zip(senders) {
+                    let _ = tx.send(Ok(resp));
+                }
+            }
+            Err(e) => {
+                stats.errors += 1;
+                let msg = e.to_string();
+                for tx in senders {
+                    let _ = tx.send(Err(EmberError::Runtime(msg.clone())));
+                }
+            }
+        }
+    };
+
+    loop {
+        // wait for work, bounded by the batcher's flush deadline
+        let timeout = batcher
+            .deadline()
+            .map(|d| d.saturating_duration_since(Instant::now()))
+            .unwrap_or(std::time::Duration::from_millis(50));
+        match rx.recv_timeout(timeout) {
+            Ok((req, rtx)) => {
+                stats.requests += 1;
+                waiting.push(rtx);
+                if let Some(batch) = batcher.push(req, Instant::now()) {
+                    let senders = std::mem::take(&mut waiting);
+                    inflight.push(Vec::new());
+                    run_batch(&model, &mut runtime, batch, senders, &mut stats);
+                    inflight.pop();
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                if let Some(batch) = batcher.poll(Instant::now()) {
+                    let senders = std::mem::take(&mut waiting);
+                    run_batch(&model, &mut runtime, batch, senders, &mut stats);
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                // drain the final partial batch
+                let batch = batcher.flush();
+                if !batch.is_empty() {
+                    let senders = std::mem::take(&mut waiting);
+                    run_batch(&model, &mut runtime, batch, senders, &mut stats);
+                }
+                break;
+            }
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::time::Duration;
+
+    fn tiny() -> DlrmModel {
+        DlrmModel::new(4, 64, 8, 2, 6, 3, 16, 42).unwrap()
+    }
+
+    fn req(id: u64, rng: &mut Rng, m: &DlrmModel) -> Request {
+        Request {
+            id,
+            lookups: (0..m.num_tables)
+                .map(|_| (0..4).map(|_| rng.below(m.table_rows as u64) as i32).collect())
+                .collect(),
+            dense: (0..m.dense).map(|_| rng.f32()).collect(),
+        }
+    }
+
+    #[test]
+    fn serves_and_matches_direct_inference() {
+        let m = tiny();
+        let mut rng = Rng::new(9);
+        let reqs: Vec<Request> = (0..8).map(|i| req(i, &mut rng, &m)).collect();
+        let direct: Vec<Response> = reqs
+            .chunks(4)
+            .flat_map(|c| tiny().infer_batch_cpu(c).unwrap())
+            .collect();
+
+        let coord = Coordinator::start(
+            tiny(),
+            None,
+            BatchOptions { max_batch: 4, max_wait: Duration::from_millis(1) },
+        );
+        let rxs: Vec<_> = reqs.iter().map(|r| coord.submit(r.clone()).unwrap()).collect();
+        let mut got: Vec<Response> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+        got.sort_by_key(|r| r.id);
+        let stats = coord.shutdown();
+        assert_eq!(stats.requests, 8);
+        assert!(stats.batches >= 2);
+        for (g, d) in got.iter().zip(&direct) {
+            assert_eq!(g.id, d.id);
+            assert!((g.score - d.score).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn partial_batch_flushes_on_shutdown_or_timer() {
+        let m = tiny();
+        let mut rng = Rng::new(10);
+        let coord = Coordinator::start(
+            m,
+            None,
+            BatchOptions { max_batch: 64, max_wait: Duration::from_millis(1) },
+        );
+        let m2 = tiny();
+        let r = coord.infer(req(1, &mut rng, &m2)).unwrap();
+        assert!(r.score > 0.0 && r.score < 1.0);
+        coord.shutdown();
+    }
+}

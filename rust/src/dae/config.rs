@@ -1,0 +1,304 @@
+//! Machine configurations for the DAE simulator.
+//!
+//! These replace the paper's gem5 system configurations (Fig. 5b) and
+//! the measured GPUs. All numbers are in *core cycles* at the core's
+//! frequency; the access unit's lower frequency is expressed as a cost
+//! multiplier on its per-op throughput (the TMU runs slower but tracks
+//! 8× more outstanding requests — §3.2).
+
+/// One cache level.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CacheConfig {
+    pub size_bytes: usize,
+    pub assoc: usize,
+    /// Hit latency in core cycles.
+    pub latency: u64,
+}
+
+/// Memory hierarchy + HBM.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemConfig {
+    pub l1: CacheConfig,
+    pub l2: CacheConfig,
+    pub llc: CacheConfig,
+    /// Line size in bytes.
+    pub line: usize,
+    /// DRAM latency (core cycles) after LLC miss.
+    pub dram_latency: u64,
+    /// DRAM bandwidth in bytes per core cycle available to this unit's
+    /// slice of the chip.
+    pub dram_bytes_per_cycle: f64,
+}
+
+/// The unit that issues memory requests and computes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct UnitConfig {
+    /// Maximum outstanding memory requests (MSHRs for a core, request
+    /// slots for a TMU).
+    pub max_outstanding: usize,
+    /// Instructions/ops issued per cycle.
+    pub issue_width: f64,
+    /// Out-of-order window in ops (ROB proxy). Loads older than the
+    /// window must complete before new ops issue. `usize::MAX` for
+    /// dataflow units (TMU) with no ROB.
+    pub ooo_window: usize,
+    /// Per-op cost multiplier (1.0 = core frequency; the TMU's 2.0
+    /// means it runs at half the core clock).
+    pub cost_scale: f64,
+    /// SIMD lanes the unit can retire per vector op.
+    pub simd_lanes: u32,
+}
+
+/// Queue configuration (control + data queues of Fig. 9).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QueueConfig {
+    /// Data queue capacity in bytes.
+    pub data_bytes: usize,
+    /// Control queue capacity in tokens.
+    pub ctrl_tokens: usize,
+}
+
+/// Energy coefficients (pJ per event) + static power, loosely scaled
+/// from McPAT-class numbers; only *ratios* matter for the paper's
+/// perf/W claims.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerConfig {
+    pub pj_per_op: f64,
+    pub pj_per_simd_lane: f64,
+    pub pj_per_l1: f64,
+    pub pj_per_l2: f64,
+    pub pj_per_llc: f64,
+    pub pj_per_dram_byte: f64,
+    pub pj_per_queue_byte: f64,
+    /// Static power of the whole unit complex in watts.
+    pub static_watts: f64,
+    /// Core clock in GHz (converts cycles to seconds).
+    pub ghz: f64,
+}
+
+/// A full machine: execute unit, optional access unit, queues, memory.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MachineConfig {
+    pub name: &'static str,
+    pub core: UnitConfig,
+    /// `None` = coupled (traditional) machine: the core issues its own
+    /// lookups and the queues are unused.
+    pub access: Option<UnitConfig>,
+    pub queues: QueueConfig,
+    pub mem: MemConfig,
+    pub power: PowerConfig,
+    /// Extra dispatch cycles per control token on the execute unit
+    /// (hand-optimized code reduces this — §8.3).
+    pub dispatch_cost: u64,
+    /// Number of core(+TMU) pairs on the chip (workloads are sharded).
+    pub num_cores: usize,
+}
+
+const DEFAULT_POWER: PowerConfig = PowerConfig {
+    pj_per_op: 8.0,
+    pj_per_simd_lane: 2.0,
+    pj_per_l1: 10.0,
+    pj_per_l2: 25.0,
+    pj_per_llc: 60.0,
+    pj_per_dram_byte: 15.0,
+    pj_per_queue_byte: 0.8,
+    static_watts: 1.2,
+    ghz: 2.5,
+};
+
+const DEFAULT_MEM: MemConfig = MemConfig {
+    l1: CacheConfig { size_bytes: 64 << 10, assoc: 8, latency: 4 },
+    l2: CacheConfig { size_bytes: 1 << 20, assoc: 8, latency: 14 },
+    llc: CacheConfig { size_bytes: 2 << 20, assoc: 16, latency: 40 },
+    line: 64,
+    dram_latency: 240,
+    // A single core/TMU sees the full HBM2 stack (~320 GB/s @2.5GHz):
+    // saturation requires many traditional cores (Fig. 3d: 43-72) or a
+    // few TMUs (§3.3: 8 DAE cores saturate the stack).
+    dram_bytes_per_cycle: 128.0,
+};
+
+impl MachineConfig {
+    /// Traditional out-of-order core (1R.1L.1M in Fig. 4).
+    pub fn traditional_core() -> Self {
+        MachineConfig {
+            name: "core-1R.1L.1M",
+            core: UnitConfig {
+                max_outstanding: 10,
+                issue_width: 4.0,
+                ooo_window: 192,
+                cost_scale: 1.0,
+                simd_lanes: 4,
+            },
+            access: None,
+            queues: QueueConfig { data_bytes: 0, ctrl_tokens: 0 },
+            mem: DEFAULT_MEM,
+            power: DEFAULT_POWER,
+            dispatch_cost: 0,
+            num_cores: 1,
+        }
+    }
+
+    /// Scaled-up traditional core: 2x ROB, 2x LSQ, 2x MSHRs (Fig. 4).
+    /// ~21% more power for the enlarged structures.
+    pub fn scaled_core_2x() -> Self {
+        let mut m = Self::traditional_core();
+        m.name = "core-2R.2L.2M";
+        m.core.max_outstanding = 20;
+        m.core.ooo_window = 384;
+        m.power.pj_per_op *= 1.35;
+        m.power.static_watts *= 1.21;
+        m
+    }
+
+    /// DAE pair: traditional core + TMU access unit (Fig. 5).
+    /// The TMU runs at half frequency but tracks 8x the requests, with
+    /// <2% static power overhead (§3.2).
+    pub fn dae_tmu() -> Self {
+        let base = Self::traditional_core();
+        MachineConfig {
+            name: "dae-tmu",
+            core: base.core,
+            access: Some(UnitConfig {
+                max_outstanding: 80, // 8x the core's 10 MSHRs
+                // The TMU runs at half the core clock but is specialized
+                // dataflow hardware: parallel traversal/stream units give
+                // it *higher* net request-issue throughput than the core
+                // (§3.2: 5.7x reqs/s) — modeled as full-rate issue.
+                issue_width: 4.0,
+                ooo_window: usize::MAX,
+                cost_scale: 1.0,
+                simd_lanes: 4,
+            }),
+            queues: QueueConfig { data_bytes: 8 << 10, ctrl_tokens: 512 },
+            mem: DEFAULT_MEM,
+            power: PowerConfig {
+                static_watts: DEFAULT_POWER.static_watts * 1.02,
+                ..DEFAULT_POWER
+            },
+            dispatch_cost: 2,
+            num_cores: 1,
+        }
+    }
+
+    /// DAE pair with hand-optimized dispatch (ref-dae, §8.3).
+    pub fn dae_tmu_handopt() -> Self {
+        let mut m = Self::dae_tmu();
+        m.name = "dae-tmu-handopt";
+        m.dispatch_cost = 1;
+        m
+    }
+
+    /// 8-core DAE processor (the paper's end-to-end configuration —
+    /// saturates one HBM stack with 8 cores, §3.3).
+    pub fn dae_multicore(n: usize) -> Self {
+        let mut m = Self::dae_tmu();
+        m.name = "dae-multicore";
+        m.num_cores = n;
+        m
+    }
+
+    /// T4-class GPU: same peak BW as the DAE chip, many weak lanes.
+    /// Modeled as `num_cores` in-order lanes with few outstanding
+    /// requests each, sharing the same DRAM (§3.3: GPUs would need
+    /// 2-12x more warps to hide HBM latency).
+    pub fn t4_like() -> Self {
+        MachineConfig {
+            name: "gpu-t4",
+            core: UnitConfig {
+                max_outstanding: 4,
+                issue_width: 1.0,
+                ooo_window: 32,
+                cost_scale: 1.6, // ~1.5 GHz SM clock vs 2.5 GHz core
+                simd_lanes: 32,
+            },
+            access: None,
+            queues: QueueConfig { data_bytes: 0, ctrl_tokens: 0 },
+            mem: MemConfig {
+                l1: CacheConfig { size_bytes: 64 << 10, assoc: 4, latency: 28 },
+                l2: CacheConfig { size_bytes: 4 << 20, assoc: 16, latency: 190 },
+                llc: CacheConfig { size_bytes: 6 << 20, assoc: 16, latency: 210 },
+                line: 64,
+                dram_latency: 450,
+                dram_bytes_per_cycle: 4.0, // 320 GB/s / 40 SMs / 2.5GHz
+            },
+            power: PowerConfig {
+                pj_per_op: 10.0,
+                pj_per_simd_lane: 2.4,
+                pj_per_l1: 14.0,
+                pj_per_l2: 40.0,
+                pj_per_llc: 80.0,
+                pj_per_dram_byte: 18.0,
+                pj_per_queue_byte: 0.0,
+                static_watts: 1.75, // 70W TDP / 40 SMs
+                ghz: 1.5,
+            },
+            dispatch_cost: 0,
+            num_cores: 40,
+        }
+    }
+
+    /// H100-class GPU: far higher bandwidth and compute, proportional
+    /// power (700W). Perf/W on lookup-bound code is what Fig. 8c tests.
+    pub fn h100_like() -> Self {
+        MachineConfig {
+            name: "gpu-h100",
+            core: UnitConfig {
+                max_outstanding: 8,
+                issue_width: 2.0,
+                ooo_window: 64,
+                cost_scale: 1.4,
+                simd_lanes: 32,
+            },
+            access: None,
+            queues: QueueConfig { data_bytes: 0, ctrl_tokens: 0 },
+            mem: MemConfig {
+                l1: CacheConfig { size_bytes: 256 << 10, assoc: 8, latency: 22 },
+                l2: CacheConfig { size_bytes: 16 << 20, assoc: 16, latency: 160 },
+                llc: CacheConfig { size_bytes: 50 << 20, assoc: 16, latency: 180 },
+                line: 64,
+                dram_latency: 400,
+                dram_bytes_per_cycle: 10.0, // 3.3 TB/s / 132 SMs / 2.5GHz
+            },
+            power: PowerConfig {
+                pj_per_op: 9.0,
+                pj_per_simd_lane: 2.0,
+                pj_per_l1: 12.0,
+                pj_per_l2: 35.0,
+                pj_per_llc: 70.0,
+                pj_per_dram_byte: 14.0,
+                pj_per_queue_byte: 0.0,
+                static_watts: 5.3, // 700W / 132 SMs
+                ghz: 1.8,
+            },
+            dispatch_cost: 0,
+            num_cores: 132,
+        }
+    }
+
+    /// Cycles -> seconds for this machine.
+    pub fn seconds(&self, cycles: u64) -> f64 {
+        cycles as f64 / (self.power.ghz * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_are_consistent() {
+        let core = MachineConfig::traditional_core();
+        let dae = MachineConfig::dae_tmu();
+        let scaled = MachineConfig::scaled_core_2x();
+        assert!(dae.access.is_some());
+        assert!(core.access.is_none());
+        // TMU tracks 8x the outstanding requests of the core
+        assert_eq!(dae.access.unwrap().max_outstanding, 8 * core.core.max_outstanding);
+        // scaled core doubles MSHRs + window and costs more power
+        assert_eq!(scaled.core.max_outstanding, 2 * core.core.max_outstanding);
+        assert!(scaled.power.static_watts > core.power.static_watts);
+        // TMU static overhead is small (<2%)
+        assert!(dae.power.static_watts <= core.power.static_watts * 1.02 + 1e-9);
+    }
+}

@@ -1,0 +1,606 @@
+//! The DAE timing engine: a `DaeSink` that attaches cycles, energy and
+//! queue backpressure to the interpreter's event stream.
+//!
+//! Two clock domains — the access unit and the execute unit — advance
+//! independently and couple only through the bounded control/data
+//! queues, exactly the Fig. 9 abstraction:
+//!
+//!   * producer (access) stalls when a queue is full — it waits for the
+//!     pop that frees space (whose time is already known, because FIFO
+//!     order makes all earlier pops appear earlier in the event
+//!     stream);
+//!   * consumer (execute) stalls when popping data that has not been
+//!     pushed yet.
+//!
+//! Memory-level parallelism is modeled per unit with an outstanding-
+//! request budget (MSHRs / TMU slots) and an out-of-order window (ROB
+//! proxy; dataflow access units use an unbounded window). Pointer-
+//! chasing serialization comes from the `deps` stream ids on each
+//! event: a request cannot issue before the streams its address
+//! depends on have completed.
+//!
+//! Coupled (traditional / GPU-lane) machines run the same event stream
+//! on a single unit with zero-cost queues — the fused original loop.
+
+use super::config::{MachineConfig, UnitConfig};
+use super::memory::Memory;
+use crate::interp::{DaeSink, Unit};
+use crate::ir::types::MemHint;
+use std::collections::VecDeque;
+
+/// Latency histogram buckets (in core cycles) for Fig. 3a.
+pub const LAT_BUCKETS: [u64; 6] = [8, 16, 64, 128, 512, u64::MAX];
+
+#[derive(Debug, Clone, Default)]
+pub struct UnitStats {
+    pub ops: u64,
+    pub mem_reads: u64,
+    pub mem_read_bytes: u64,
+    pub mem_writes: u64,
+    /// Latency histogram of this unit's loads.
+    pub lat_hist: [u64; 6],
+    /// Sum of outstanding-queue occupancy sampled at each issue (for
+    /// mean in-flight requests, Fig. 3b).
+    pub outstanding_sum: u64,
+    pub outstanding_max: usize,
+}
+
+/// One timing domain. Dataflow-style: the pipeline clock only rate-
+/// limits issue; *value availability* (`ready` times held by `DaeSim`)
+/// carries memory latency through dependence chains, so independent
+/// requests overlap up to the outstanding budget — a TMU hides latency,
+/// while a coupled core is throttled by its OOO window + MSHRs.
+struct UnitClock {
+    cfg: UnitConfig,
+    /// Issue-slot clock (rate limit).
+    clock: f64,
+    /// Latest value-completion time seen (for end-of-run accounting).
+    horizon: f64,
+    /// Completion times of in-flight memory requests.
+    outstanding: Vec<f64>,
+    /// (op_index, completion) of loads inside the OOO window.
+    window: VecDeque<(u64, f64)>,
+    op_index: u64,
+    stats: UnitStats,
+}
+
+impl UnitClock {
+    fn new(cfg: UnitConfig) -> Self {
+        UnitClock {
+            cfg,
+            clock: 0.0,
+            horizon: 0.0,
+            outstanding: Vec::new(),
+            window: VecDeque::new(),
+            op_index: 0,
+            stats: UnitStats::default(),
+        }
+    }
+
+    /// Charge one issued op (possibly multi-lane); returns its slot time.
+    fn issue(&mut self, lanes: u32) -> f64 {
+        let slot = self.clock;
+        let vec_ops = lanes.div_ceil(self.cfg.simd_lanes).max(1) as f64;
+        self.clock += vec_ops * self.cfg.cost_scale / self.cfg.issue_width;
+        self.op_index += 1;
+        self.stats.ops += 1;
+        slot
+    }
+
+    /// Enforce the OOO window: loads older than `window` ops must have
+    /// completed before the pipeline can continue issuing.
+    fn retire_window(&mut self) {
+        if self.cfg.ooo_window == usize::MAX {
+            return;
+        }
+        while let Some(&(idx, comp)) = self.window.front() {
+            if self.op_index.saturating_sub(idx) > self.cfg.ooo_window as u64 {
+                if comp > self.clock {
+                    self.clock = comp;
+                }
+                self.window.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Earliest time a new request can occupy an outstanding slot,
+    /// given the candidate issue time `t`.
+    fn slot_time(&mut self, t: f64) -> f64 {
+        // drop requests that completed by t
+        self.outstanding.retain(|&c| c > t);
+        let mut t = t;
+        while self.outstanding.len() >= self.cfg.max_outstanding {
+            let min = self.outstanding.iter().cloned().fold(f64::MAX, f64::min);
+            t = t.max(min);
+            self.outstanding.retain(|&c| c > t);
+        }
+        self.stats.outstanding_sum += self.outstanding.len() as u64;
+        self.stats.outstanding_max = self.stats.outstanding_max.max(self.outstanding.len() + 1);
+        t
+    }
+}
+
+/// Queue timing state (data or control).
+struct QueueClock {
+    /// Capacity in bytes (data) or entries (ctrl).
+    cap: u64,
+    cum_pushed: u64,
+    cum_popped: u64,
+    /// Push completion times of entries not yet popped (FIFO).
+    push_times: VecDeque<(u64, f64)>, // (bytes, time)
+    /// (cum_popped_after, pop_time) history for backpressure.
+    pops: VecDeque<(u64, f64)>,
+    pub pushes: u64,
+    pub push_bytes: u64,
+}
+
+impl QueueClock {
+    fn new(cap: u64) -> Self {
+        QueueClock {
+            cap: cap.max(1),
+            cum_pushed: 0,
+            cum_popped: 0,
+            push_times: VecDeque::new(),
+            pops: VecDeque::new(),
+            pushes: 0,
+            push_bytes: 0,
+        }
+    }
+
+    /// Earliest time `bytes` can be pushed given producer time `now`.
+    fn push(&mut self, bytes: u64, now: f64) -> f64 {
+        let mut t = now;
+        let need = (self.cum_pushed + bytes).saturating_sub(self.cap);
+        if need > 0 {
+            // find the pop that freed enough space
+            while let Some(&(cum, pt)) = self.pops.front() {
+                if cum >= need {
+                    if pt > t {
+                        t = pt;
+                    }
+                    break;
+                }
+                self.pops.pop_front();
+            }
+            // if pops history exhausted but cum_popped >= need, space
+            // already freed; if not, the queue is smaller than a single
+            // marshaled payload — documented approximation: no stall.
+        }
+        self.cum_pushed += bytes;
+        self.push_times.push_back((bytes, t));
+        self.pushes += 1;
+        self.push_bytes += bytes;
+        t
+    }
+
+    /// Pop `bytes` at consumer time `now`; returns data-ready time.
+    fn pop(&mut self, mut bytes: u64, now: f64) -> f64 {
+        let mut ready = now;
+        while bytes > 0 {
+            match self.push_times.front_mut() {
+                Some((b, t)) => {
+                    if *t > ready {
+                        ready = *t;
+                    }
+                    let take = bytes.min(*b);
+                    *b -= take;
+                    bytes -= take;
+                    self.cum_popped += take;
+                    if *b == 0 {
+                        self.push_times.pop_front();
+                    }
+                }
+                None => break, // tolerate byte-accounting skew
+            }
+        }
+        ready
+    }
+
+    fn record_pop_done(&mut self, t: f64) {
+        self.pops.push_back((self.cum_popped, t));
+        if self.pops.len() > 4096 {
+            self.pops.pop_front();
+        }
+    }
+}
+
+/// The simulator.
+pub struct DaeSim {
+    pub cfg: MachineConfig,
+    access: UnitClock,
+    exec: UnitClock,
+    /// In-order marshaling pipeline of the access unit (pushes
+    /// serialize here, NOT on the load-issue pipeline — the TMU keeps
+    /// issuing lookups while a push waits for its value).
+    marshal_clock: f64,
+    decoupled: bool,
+    data_q: QueueClock,
+    ctrl_q: QueueClock,
+    pub memory: Memory,
+    /// Per-stream ready times (indexed by interned id).
+    ready: Vec<f64>,
+    /// Energy accumulated (pJ).
+    energy_pj: f64,
+    /// Tokens dispatched.
+    pub tokens: u64,
+    pub pops: u64,
+}
+
+impl DaeSim {
+    pub fn new(cfg: MachineConfig) -> Self {
+        let access_cfg = cfg.access.unwrap_or(cfg.core);
+        DaeSim {
+            access: UnitClock::new(access_cfg),
+            exec: UnitClock::new(cfg.core),
+            marshal_clock: 0.0,
+            decoupled: cfg.access.is_some(),
+            data_q: QueueClock::new(cfg.queues.data_bytes as u64),
+            ctrl_q: QueueClock::new(cfg.queues.ctrl_tokens as u64),
+            memory: Memory::new(cfg.mem),
+            ready: Vec::new(),
+            energy_pj: 0.0,
+            tokens: 0,
+            pops: 0,
+            cfg,
+        }
+    }
+
+    #[inline]
+    fn ready_of(&self, id: u32) -> f64 {
+        if id == crate::interp::NO_STREAM {
+            return 0.0;
+        }
+        self.ready.get(id as usize).copied().unwrap_or(0.0)
+    }
+
+    #[inline]
+    fn set_ready(&mut self, id: u32, t: f64) {
+        if id == crate::interp::NO_STREAM {
+            return;
+        }
+        let idx = id as usize;
+        if idx >= self.ready.len() {
+            self.ready.resize(idx + 1, 0.0);
+        }
+        self.ready[idx] = t;
+    }
+
+    fn wait_deps(clock: &mut f64, ready: &[f64], deps: &[u32]) {
+        for &d in deps {
+            if d != crate::interp::NO_STREAM {
+                if let Some(&t) = ready.get(d as usize) {
+                    if t > *clock {
+                        *clock = t;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Total simulated cycles.
+    pub fn cycles(&self) -> u64 {
+        self.access
+            .clock
+            .max(self.exec.clock)
+            .max(self.access.horizon)
+            .max(self.exec.horizon)
+            .ceil() as u64
+    }
+
+    pub fn seconds(&self) -> f64 {
+        self.cfg.seconds(self.cycles())
+    }
+
+    /// Dynamic + static power in watts over the simulated interval.
+    pub fn watts(&self) -> f64 {
+        let secs = self.seconds().max(1e-12);
+        self.energy_pj * 1e-12 / secs + self.cfg.power.static_watts
+    }
+
+    /// Energy in joules.
+    pub fn joules(&self) -> f64 {
+        self.energy_pj * 1e-12 + self.cfg.power.static_watts * self.seconds()
+    }
+
+    pub fn access_stats(&self) -> &UnitStats {
+        &self.access.stats
+    }
+
+    /// Queue conservation counters: (bytes pushed, bytes popped,
+    /// ctrl tokens pushed, ctrl tokens popped).
+    pub fn queue_conservation(&self) -> (u64, u64, u64, u64) {
+        (
+            self.data_q.cum_pushed,
+            self.data_q.cum_popped,
+            self.ctrl_q.cum_pushed,
+            self.ctrl_q.cum_popped,
+        )
+    }
+    pub fn exec_stats(&self) -> &UnitStats {
+        &self.exec.stats
+    }
+
+    /// Mean in-flight requests on the lookup-issuing unit (Fig. 3b).
+    pub fn mean_inflight(&self) -> f64 {
+        let u = if self.decoupled { &self.access } else { &self.exec };
+        if u.stats.mem_reads == 0 {
+            0.0
+        } else {
+            u.stats.outstanding_sum as f64 / u.stats.mem_reads as f64
+        }
+    }
+
+    /// Loads per cycle on the lookup-issuing unit (Fig. 3c).
+    pub fn loads_per_cycle(&self) -> f64 {
+        let u = if self.decoupled { &self.access } else { &self.exec };
+        u.stats.mem_reads as f64 / (self.cycles().max(1) as f64)
+    }
+
+    /// Data-queue write/read throughput in bytes/cycle (Fig. 17 axes).
+    pub fn queue_write_throughput(&self) -> f64 {
+        self.data_q.push_bytes as f64 / (self.access.clock.max(1.0))
+    }
+    pub fn queue_read_throughput(&self) -> f64 {
+        self.data_q.push_bytes as f64 / (self.exec.clock.max(1.0))
+    }
+
+    /// DRAM bandwidth utilization in [0, 1].
+    pub fn bw_utilization(&self) -> f64 {
+        (self.memory.achieved_bw(self.cycles()) / self.memory.peak_bw()).min(1.0)
+    }
+
+    fn lat_bucket(stats: &mut UnitStats, lat: u64) {
+        for (i, &b) in LAT_BUCKETS.iter().enumerate() {
+            if lat <= b {
+                stats.lat_hist[i] += 1;
+                break;
+            }
+        }
+    }
+}
+
+impl DaeSink for DaeSim {
+    fn mem_read(&mut self, unit: Unit, addr: u64, bytes: u32, hint: MemHint, produces: u32, deps: &[u32]) {
+        let decoupled = self.decoupled;
+        // value-ready time of the address computation
+        let mut dep_t = 0.0f64;
+        for &d in deps {
+            dep_t = dep_t.max(self.ready_of(d));
+        }
+        let (u, use_l1) = match unit {
+            Unit::Access if decoupled => (&mut self.access, false),
+            _ => (&mut self.exec, true),
+        };
+        let slot = u.issue(1);
+        u.retire_window();
+        let t = u.slot_time(slot.max(dep_t).max(u.clock - 1.0));
+        let r = self.memory.access(addr, bytes, hint, use_l1, t as u64);
+        let completion = t + r.latency as f64;
+        u.outstanding.push(completion);
+        u.window.push_back((u.op_index, completion));
+        u.horizon = u.horizon.max(completion);
+        u.stats.mem_reads += 1;
+        u.stats.mem_read_bytes += bytes as u64;
+        Self::lat_bucket(&mut u.stats, r.latency);
+        self.set_ready(produces, completion);
+        // energy
+        let p = &self.cfg.power;
+        self.energy_pj += p.pj_per_op
+            + match r.level {
+                1 => p.pj_per_l1,
+                2 => p.pj_per_l2,
+                3 => p.pj_per_llc,
+                _ => p.pj_per_llc + p.pj_per_dram_byte * self.memory.line() as f64,
+            };
+    }
+
+    fn mem_write(&mut self, unit: Unit, addr: u64, bytes: u32, deps: &[u32]) {
+        let decoupled = self.decoupled;
+        let mut dep_t = 0.0f64;
+        for &d in deps {
+            dep_t = dep_t.max(self.ready_of(d));
+        }
+        let (u, use_l1) = match unit {
+            Unit::Access if decoupled => (&mut self.access, false),
+            _ => (&mut self.exec, true),
+        };
+        let slot = u.issue(1);
+        let t = slot.max(dep_t);
+        let r = self.memory.access(addr, bytes, MemHint::default(), use_l1, t as u64);
+        u.horizon = u.horizon.max(t + r.latency as f64);
+        u.stats.mem_writes += 1;
+        let p = &self.cfg.power;
+        self.energy_pj += p.pj_per_op + p.pj_per_l1;
+    }
+
+    fn alu_step(&mut self, produces: u32, deps: &[u32]) {
+        let mut dep_t = 0.0f64;
+        for &d in deps {
+            dep_t = dep_t.max(self.ready_of(d));
+        }
+        let u = if self.decoupled { &mut self.access } else { &mut self.exec };
+        let slot = u.issue(1);
+        self.set_ready(produces, slot.max(dep_t));
+        self.energy_pj += self.cfg.power.pj_per_op;
+    }
+
+    fn loop_iter(&mut self, iv: u32, deps: &[u32]) {
+        let mut dep_t = 0.0f64;
+        for &d in deps {
+            dep_t = dep_t.max(self.ready_of(d));
+        }
+        let u = if self.decoupled { &mut self.access } else { &mut self.exec };
+        let slot = u.issue(1);
+        u.retire_window();
+        self.set_ready(iv, slot.max(dep_t));
+        self.energy_pj += self.cfg.power.pj_per_op;
+    }
+
+    fn buf_push(&mut self, buf: u32, src: u32) {
+        // buffer append is access-unit bookkeeping; the buffer becomes
+        // ready when its last chunk is
+        let clock = {
+            let u = if self.decoupled { &mut self.access } else { &mut self.exec };
+            u.issue(1);
+            u.clock
+        };
+        let t = self.ready_of(buf).max(self.ready_of(src)).max(clock);
+        self.set_ready(buf, t);
+        self.energy_pj += self.cfg.power.pj_per_op;
+    }
+
+    fn queue_data(&mut self, bytes: u32, src: u32) {
+        if !self.decoupled {
+            return; // fused loop: no marshaling
+        }
+        let ready = self.ready_of(src);
+        let slot = self.access.issue(1);
+        // marshaling is in-order: the push completes when the value is
+        // ready AND the queue has space — on the marshal pipeline, so
+        // lookup issue continues underneath
+        let cost = self.access.cfg.cost_scale / self.access.cfg.issue_width;
+        let t0 = self.marshal_clock.max(ready).max(slot);
+        let t = self.data_q.push(bytes as u64, t0) + cost;
+        self.marshal_clock = t;
+        self.access.horizon = self.access.horizon.max(t);
+        self.energy_pj +=
+            self.cfg.power.pj_per_op + self.cfg.power.pj_per_queue_byte * bytes as f64;
+    }
+
+    fn queue_ctrl(&mut self, _token: u32) {
+        if !self.decoupled {
+            return;
+        }
+        let slot = self.access.issue(1);
+        let cost = self.access.cfg.cost_scale / self.access.cfg.issue_width;
+        let t = self.ctrl_q.push(1, self.marshal_clock.max(slot)) + cost;
+        self.marshal_clock = t;
+        self.access.horizon = self.access.horizon.max(t);
+        self.energy_pj += self.cfg.power.pj_per_op;
+    }
+
+    fn pop_data(&mut self, bytes: u32) {
+        if !self.decoupled {
+            return;
+        }
+        self.exec.issue(1);
+        self.pops += 1;
+        let ready = self.data_q.pop(bytes as u64, self.exec.clock);
+        if ready > self.exec.clock {
+            self.exec.clock = ready;
+        }
+        self.data_q.record_pop_done(self.exec.clock);
+        self.energy_pj +=
+            self.cfg.power.pj_per_op + self.cfg.power.pj_per_queue_byte * bytes as f64;
+    }
+
+    fn exec_op(&mut self, lanes: u32) {
+        self.exec.issue(lanes);
+        self.energy_pj +=
+            self.cfg.power.pj_per_op + self.cfg.power.pj_per_simd_lane * lanes as f64;
+    }
+
+    fn exec_dispatch(&mut self, _token: u32) {
+        self.tokens += 1;
+        if !self.decoupled {
+            return;
+        }
+        self.exec.issue(1);
+        let ready = self.ctrl_q.pop(1, self.exec.clock);
+        if ready > self.exec.clock {
+            self.exec.clock = ready;
+        }
+        self.ctrl_q.record_pop_done(self.exec.clock);
+        self.exec.clock += self.cfg.dispatch_cost as f64 * self.exec.cfg.cost_scale;
+        self.energy_pj += self.cfg.power.pj_per_op * (1 + self.cfg.dispatch_cost) as f64;
+    }
+
+    fn exec_step(&mut self) {
+        self.exec.issue(1);
+        self.energy_pj += self.cfg.power.pj_per_op;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::passes::pipeline::{compile, CompileOptions, OptLevel};
+    use crate::data::Tensor;
+    use crate::frontend::embedding_ops::OpClass;
+    use crate::frontend::formats::Csr;
+    use crate::interp::Interp;
+    use crate::util::rng::Rng;
+
+    fn sim_sls(cfg: MachineConfig, opt: OptLevel, rows: usize, lookups: usize) -> DaeSim {
+        let mut rng = Rng::new(3);
+        let table = Tensor::f32(vec![4096, 32], rng.normal_vec(4096 * 32, 1.0));
+        let r: Vec<Vec<i32>> = (0..rows)
+            .map(|_| (0..lookups).map(|_| rng.below(4096) as i32).collect())
+            .collect();
+        let csr = Csr::from_rows(4096, &r);
+        let prog = compile(&OpClass::Sls, CompileOptions::at(opt)).unwrap();
+        let mut env = csr.bind_sls_env(&table, false);
+        let mut sim = DaeSim::new(cfg);
+        let mut interp = Interp::new(&prog.dlc).unwrap();
+        interp.run(&mut env, &mut sim).unwrap();
+        sim
+    }
+
+    #[test]
+    fn dae_beats_traditional_core_on_random_lookups() {
+        let coupled = sim_sls(MachineConfig::traditional_core(), OptLevel::O1, 32, 48);
+        let dae = sim_sls(MachineConfig::dae_tmu(), OptLevel::O3, 32, 48);
+        assert!(
+            dae.cycles() * 2 < coupled.cycles(),
+            "dae {} vs coupled {}",
+            dae.cycles(),
+            coupled.cycles()
+        );
+    }
+
+    #[test]
+    fn tmu_tracks_more_inflight_requests() {
+        let coupled = sim_sls(MachineConfig::traditional_core(), OptLevel::O1, 32, 48);
+        let dae = sim_sls(MachineConfig::dae_tmu(), OptLevel::O3, 32, 48);
+        assert!(
+            dae.mean_inflight() > 2.0 * coupled.mean_inflight(),
+            "dae {} vs coupled {}",
+            dae.mean_inflight(),
+            coupled.mean_inflight()
+        );
+    }
+
+    #[test]
+    fn scaled_core_gains_are_modest() {
+        let base = sim_sls(MachineConfig::traditional_core(), OptLevel::O1, 32, 48);
+        let scaled = sim_sls(MachineConfig::scaled_core_2x(), OptLevel::O1, 32, 48);
+        let speedup = base.cycles() as f64 / scaled.cycles() as f64;
+        assert!(speedup >= 1.0, "{speedup}");
+        assert!(speedup < 1.8, "doubling ROB/MSHR should not double perf: {speedup}");
+        // and it costs more power
+        assert!(scaled.watts() > base.watts() * 1.05);
+    }
+
+    #[test]
+    fn opt_levels_monotonically_improve_dae_cycles() {
+        let cfg = MachineConfig::dae_tmu();
+        let c0 = sim_sls(cfg, OptLevel::O0, 16, 64).cycles();
+        let c1 = sim_sls(cfg, OptLevel::O1, 16, 64).cycles();
+        let c2 = sim_sls(cfg, OptLevel::O2, 16, 64).cycles();
+        let c3 = sim_sls(cfg, OptLevel::O3, 16, 64).cycles();
+        assert!(c1 < c0, "vectorize: {c1} !< {c0}");
+        assert!(c2 <= c1, "bufferize: {c2} !<= {c1}");
+        assert!(c3 <= c2, "queue align: {c3} !<= {c2}");
+        // overall ablation should be a multiple, like Fig. 16
+        assert!(c0 as f64 / c3 as f64 > 2.0, "{c0} / {c3}");
+    }
+
+    #[test]
+    fn conservation_pushes_equal_pops() {
+        let sim = sim_sls(MachineConfig::dae_tmu(), OptLevel::O3, 16, 32);
+        assert_eq!(sim.data_q.cum_pushed, sim.data_q.cum_popped);
+        assert!(sim.tokens > 0);
+    }
+}

@@ -1,0 +1,183 @@
+//! Memory hierarchy model: L1/L2/LLC LRU caches + DRAM with a
+//! bandwidth server. Returns per-access latency and tracks traffic
+//! statistics (the APKE counters of Fig. 18 come from here).
+
+use super::cache::Cache;
+use super::config::MemConfig;
+use crate::ir::types::MemHint;
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct MemStats {
+    pub accesses: u64,
+    pub l1_hits: u64,
+    pub l2_hits: u64,
+    pub llc_hits: u64,
+    pub dram_accesses: u64,
+    pub dram_bytes: u64,
+    /// Accesses that reached at least the LLC lookup (Fig. 18's "L3
+    /// accesses").
+    pub llc_lookups: u64,
+}
+
+/// The hierarchy. One instance is shared by the access + execute units
+/// of a DAE pair (the TMU sits next to the core).
+pub struct Memory {
+    cfg: MemConfig,
+    l1: Cache,
+    l2: Cache,
+    llc: Cache,
+    /// Next cycle at which DRAM can accept another line transfer.
+    dram_free: f64,
+    pub stats: MemStats,
+}
+
+/// Result of one line access.
+#[derive(Debug, Clone, Copy)]
+pub struct AccessResult {
+    pub latency: u64,
+    /// 1 = L1 hit, 2 = L2, 3 = LLC, 4 = DRAM.
+    pub level: u8,
+}
+
+impl Memory {
+    pub fn new(cfg: MemConfig) -> Self {
+        Memory {
+            l1: Cache::new(cfg.l1, cfg.line),
+            l2: Cache::new(cfg.l2, cfg.line),
+            llc: Cache::new(cfg.llc, cfg.line),
+            cfg,
+            dram_free: 0.0,
+            stats: MemStats::default(),
+        }
+    }
+
+    pub fn line(&self) -> usize {
+        self.cfg.line
+    }
+
+    /// Access `bytes` at `addr` at time `now`; returns worst-case line
+    /// latency. `hint.level` bounds the highest cache level used
+    /// (2 = skip L1; 3 = skip L1+L2 for fills); `hint.non_temporal`
+    /// never allocates.
+    ///
+    /// `use_l1` distinguishes the execute unit (has an L1) from access
+    /// units that fetch directly into L2/LLC.
+    pub fn access(&mut self, addr: u64, bytes: u32, hint: MemHint, use_l1: bool, now: u64) -> AccessResult {
+        let line = self.cfg.line as u64;
+        let first = addr / line;
+        let last = (addr + bytes.max(1) as u64 - 1) / line;
+        let mut worst = AccessResult { latency: 0, level: 1 };
+        for tag in first..=last {
+            let r = self.access_line(tag, hint, use_l1, now);
+            if r.latency > worst.latency {
+                worst = r;
+            }
+        }
+        worst
+    }
+
+    fn access_line(&mut self, tag: u64, hint: MemHint, use_l1: bool, now: u64) -> AccessResult {
+        self.stats.accesses += 1;
+        let alloc = !hint.non_temporal;
+        let l1_ok = use_l1 && hint.level <= 1;
+
+        if use_l1 && self.l1.access(tag, alloc && l1_ok) {
+            self.stats.l1_hits += 1;
+            return AccessResult { latency: self.cfg.l1.latency, level: 1 };
+        }
+        if self.l2.access(tag, alloc && hint.level <= 2) {
+            self.stats.l2_hits += 1;
+            return AccessResult { latency: self.cfg.l2.latency, level: 2 };
+        }
+        self.stats.llc_lookups += 1;
+        if self.llc.access(tag, alloc) {
+            self.stats.llc_hits += 1;
+            return AccessResult { latency: self.cfg.llc.latency, level: 3 };
+        }
+
+        // DRAM: bandwidth server — each line occupies line/bw cycles.
+        self.stats.dram_accesses += 1;
+        self.stats.dram_bytes += self.cfg.line as u64;
+        let service = self.cfg.line as f64 / self.cfg.dram_bytes_per_cycle;
+        let start = self.dram_free.max(now as f64);
+        self.dram_free = start + service;
+        let queue_delay = (start - now as f64).max(0.0) as u64;
+        AccessResult {
+            latency: self.cfg.dram_latency + queue_delay + service as u64,
+            level: 4,
+        }
+    }
+
+    /// Reset caches + stats (fresh run), keeping configuration.
+    pub fn reset(&mut self) {
+        *self = Memory::new(self.cfg);
+    }
+
+    /// Achieved DRAM bandwidth in bytes/cycle over `cycles`.
+    pub fn achieved_bw(&self, cycles: u64) -> f64 {
+        if cycles == 0 {
+            0.0
+        } else {
+            self.stats.dram_bytes as f64 / cycles as f64
+        }
+    }
+
+    pub fn peak_bw(&self) -> f64 {
+        self.cfg.dram_bytes_per_cycle
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dae::config::MachineConfig;
+
+    #[test]
+    fn repeated_access_hits_l1() {
+        let mut m = Memory::new(MachineConfig::traditional_core().mem);
+        let a = m.access(0x1000, 4, MemHint::default(), true, 0);
+        assert_eq!(a.level, 4);
+        let b = m.access(0x1000, 4, MemHint::default(), true, 10);
+        assert_eq!(b.level, 1);
+        assert!(b.latency < a.latency);
+    }
+
+    #[test]
+    fn l2_hint_skips_l1_fill() {
+        let mut m = Memory::new(MachineConfig::dae_tmu().mem);
+        m.access(0x2000, 4, MemHint::l2(), true, 0);
+        // second access with L1 allowed: must miss L1, hit L2
+        let b = m.access(0x2000, 4, MemHint::default(), true, 10);
+        assert_eq!(b.level, 2);
+    }
+
+    #[test]
+    fn non_temporal_never_fills() {
+        let mut m = Memory::new(MachineConfig::traditional_core().mem);
+        m.access(0x3000, 4, MemHint::non_temporal(), true, 0);
+        let b = m.access(0x3000, 4, MemHint::non_temporal(), true, 10);
+        assert_eq!(b.level, 4);
+    }
+
+    #[test]
+    fn bandwidth_queueing_delays_bursts() {
+        let mut m = Memory::new(MachineConfig::traditional_core().mem);
+        // blast 100 distinct lines at t=0: later ones queue behind DRAM
+        let mut last = 0;
+        for i in 0..100u64 {
+            let r = m.access(0x10_0000 + i * 64, 4, MemHint::default(), true, 0);
+            last = r.latency;
+        }
+        let service = 64.0 / m.peak_bw();
+        assert!(last as f64 >= 99.0 * service, "{last}");
+    }
+
+    #[test]
+    fn spans_multiple_lines() {
+        let mut m = Memory::new(MachineConfig::traditional_core().mem);
+        m.access(0x4000, 128, MemHint::default(), true, 0);
+        // both lines must now be resident
+        assert_eq!(m.access(0x4000, 4, MemHint::default(), true, 10).level, 1);
+        assert_eq!(m.access(0x4040, 4, MemHint::default(), true, 10).level, 1);
+    }
+}

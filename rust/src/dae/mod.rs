@@ -1,0 +1,13 @@
+//! The DAE architecture simulator — the substrate standing in for the
+//! paper's gem5 + McPAT testbed (see DESIGN.md §2 for the substitution
+//! argument). `DaeSim` implements `interp::DaeSink`, so timing always
+//! follows the exact event stream of the validated functional run.
+
+pub mod cache;
+pub mod config;
+pub mod engine;
+pub mod memory;
+
+pub use config::{CacheConfig, MachineConfig, MemConfig, PowerConfig, QueueConfig, UnitConfig};
+pub use engine::{DaeSim, UnitStats, LAT_BUCKETS};
+pub use memory::{Memory, MemStats};

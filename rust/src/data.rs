@@ -1,0 +1,185 @@
+//! Runtime tensor data bound to IR memrefs when interpreting or
+//! simulating a compiled program.
+
+use crate::error::{EmberError, Result};
+use std::collections::HashMap;
+
+/// Flat, row-major tensor buffer.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Buf {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Buf {
+    pub fn len(&self) -> usize {
+        match self {
+            Buf::F32(v) => v.len(),
+            Buf::I32(v) => v.len(),
+        }
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    pub fn get_f(&self, i: usize) -> f32 {
+        match self {
+            Buf::F32(v) => v[i],
+            Buf::I32(v) => v[i] as f32,
+        }
+    }
+    pub fn get_i(&self, i: usize) -> i64 {
+        match self {
+            Buf::F32(v) => v[i] as i64,
+            Buf::I32(v) => v[i] as i64,
+        }
+    }
+    pub fn set_f(&mut self, i: usize, x: f32) {
+        match self {
+            Buf::F32(v) => v[i] = x,
+            Buf::I32(v) => v[i] = x as i32,
+        }
+    }
+}
+
+/// A named tensor: shape + buffer + a base "address" used by the memory
+/// model to map element accesses onto a flat byte address space.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub buf: Buf,
+    /// Byte address of element 0 in the simulated address space.
+    pub base_addr: u64,
+    /// Element size in bytes.
+    pub elem_bytes: u64,
+}
+
+impl Tensor {
+    pub fn f32(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor { dims, buf: Buf::F32(data), base_addr: 0, elem_bytes: 4 }
+    }
+    pub fn i32(dims: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len());
+        Tensor { dims, buf: Buf::I32(data), base_addr: 0, elem_bytes: 4 }
+    }
+    pub fn zeros(dims: Vec<usize>) -> Self {
+        let n = dims.iter().product();
+        Tensor::f32(dims, vec![0.0; n])
+    }
+
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Row-major flat offset of a multi-index.
+    pub fn offset(&self, idx: &[i64]) -> Result<usize> {
+        if idx.len() != self.dims.len() {
+            return Err(EmberError::Interp(format!(
+                "rank mismatch: {} indices into rank-{} tensor",
+                idx.len(),
+                self.dims.len()
+            )));
+        }
+        let mut off = 0usize;
+        for (k, &i) in idx.iter().enumerate() {
+            if i < 0 || i as usize >= self.dims[k] {
+                return Err(EmberError::Interp(format!(
+                    "index {i} out of bounds for dim {k} (size {})",
+                    self.dims[k]
+                )));
+            }
+            off = off * self.dims[k] + i as usize;
+        }
+        Ok(off)
+    }
+
+    pub fn addr_of(&self, flat: usize) -> u64 {
+        self.base_addr + flat as u64 * self.elem_bytes
+    }
+
+    pub fn as_f32(&self) -> Vec<f32> {
+        match &self.buf {
+            Buf::F32(v) => v.clone(),
+            Buf::I32(v) => v.iter().map(|&x| x as f32).collect(),
+        }
+    }
+}
+
+/// Binding environment: tensors by memref name + symbolic dims.
+#[derive(Debug, Clone, Default)]
+pub struct Env {
+    pub tensors: HashMap<String, Tensor>,
+    pub syms: HashMap<String, i64>,
+}
+
+impl Env {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn bind_tensor(&mut self, name: &str, t: Tensor) -> &mut Self {
+        self.tensors.insert(name.to_string(), t);
+        self
+    }
+    pub fn bind_sym(&mut self, name: &str, v: i64) -> &mut Self {
+        self.syms.insert(name.to_string(), v);
+        self
+    }
+
+    pub fn tensor(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| EmberError::Interp(format!("unbound memref `{name}`")))
+    }
+    pub fn tensor_mut(&mut self, name: &str) -> Result<&mut Tensor> {
+        self.tensors
+            .get_mut(name)
+            .ok_or_else(|| EmberError::Interp(format!("unbound memref `{name}`")))
+    }
+    pub fn sym(&self, name: &str) -> Result<i64> {
+        self.syms
+            .get(name)
+            .copied()
+            .ok_or_else(|| EmberError::Interp(format!("unbound symbol `{name}`")))
+    }
+
+    /// Assign non-overlapping base addresses (4 KiB aligned) so the
+    /// memory model sees a realistic flat layout.
+    pub fn assign_addresses(&mut self) {
+        let mut names: Vec<String> = self.tensors.keys().cloned().collect();
+        names.sort();
+        let mut addr = 0x1_0000u64;
+        for n in names {
+            let t = self.tensors.get_mut(&n).unwrap();
+            t.base_addr = addr;
+            let sz = (t.numel() as u64 * t.elem_bytes).max(1);
+            addr = (addr + sz + 0xFFF) & !0xFFF;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn offsets_row_major() {
+        let t = Tensor::f32(vec![2, 3], (0..6).map(|x| x as f32).collect());
+        assert_eq!(t.offset(&[1, 2]).unwrap(), 5);
+        assert_eq!(t.buf.get_f(t.offset(&[0, 1]).unwrap()), 1.0);
+        assert!(t.offset(&[2, 0]).is_err());
+        assert!(t.offset(&[0, -1]).is_err());
+    }
+
+    #[test]
+    fn addresses_do_not_overlap() {
+        let mut env = Env::new();
+        env.bind_tensor("a", Tensor::zeros(vec![100]));
+        env.bind_tensor("b", Tensor::zeros(vec![100]));
+        env.assign_addresses();
+        let a = env.tensor("a").unwrap();
+        let b = env.tensor("b").unwrap();
+        let (lo, hi) = if a.base_addr < b.base_addr { (a, b) } else { (b, a) };
+        assert!(lo.base_addr + lo.numel() as u64 * 4 <= hi.base_addr);
+    }
+}

@@ -1,0 +1,27 @@
+//! Library-wide error type.
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum EmberError {
+    #[error("IR verification failed: {0}")]
+    Verify(String),
+    #[error("lowering failed: {0}")]
+    Lowering(String),
+    #[error("pass `{pass}` failed: {msg}")]
+    Pass { pass: String, msg: String },
+    #[error("interpreter error: {0}")]
+    Interp(String),
+    #[error("simulation error: {0}")]
+    Sim(String),
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    #[error("workload error: {0}")]
+    Workload(String),
+    #[error("parse error: {0}")]
+    Parse(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, EmberError>;

@@ -1,0 +1,318 @@
+//! Frontend op classes → SCF IR (the paper's Table 1 rows).
+//!
+//! These play the role torch-mlir / MPACT play for the paper's Ember:
+//! each embedding operation, interpreted as a sparse-dense tensor
+//! algebra expression (§4), is emitted as a structured SCF loop nest.
+
+use crate::ir::scf::{Expr, ScfFunc, ScfStmt};
+use crate::ir::types::{MemRef, Scalar};
+
+use std::collections::HashMap;
+
+/// Semiring for KG lookups (§4: "KGs are SLS functions that use
+/// semirings").
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Semiring {
+    PlusTimes,
+    MaxPlus,
+}
+
+/// The class of embedding operation being compiled.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpClass {
+    /// EmbeddingBag / SparseLengthsSum: SpMM with implicit-1 values,
+    /// CSR segments (dlrm).
+    Sls,
+    /// Weighted SLS == SpMM with explicit values (gnn aggregation).
+    Spmm,
+    /// Fused SDDMM+SpMM message passing (FusedMM): highest
+    /// compute-per-lookup, contains a workspace loop.
+    Mp,
+    /// Knowledge-graph lookup: one non-zero per row, semiring compute.
+    Kg(Semiring),
+    /// BigBird block-sparse attention gather: blocked, no compute.
+    SpAttn { block: usize },
+}
+
+impl OpClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpClass::Sls => "sls",
+            OpClass::Spmm => "spmm",
+            OpClass::Mp => "mp",
+            OpClass::Kg(Semiring::PlusTimes) => "kg",
+            OpClass::Kg(Semiring::MaxPlus) => "kg_maxplus",
+            OpClass::SpAttn { .. } => "spattn",
+        }
+    }
+
+    /// Compute-per-lookup ratio class (Table 1 column 3).
+    pub fn compute_per_lookup(&self) -> f64 {
+        match self {
+            OpClass::Sls => 1.0,
+            OpClass::Spmm => 2.0,
+            OpClass::Mp => 4.0,
+            OpClass::Kg(_) => 1.0,
+            OpClass::SpAttn { .. } => 0.0,
+        }
+    }
+
+    /// Build the SCF function for this op class.
+    pub fn to_scf(&self) -> ScfFunc {
+        match self {
+            OpClass::Sls => sls_scf(false),
+            OpClass::Spmm => sls_scf(true),
+            OpClass::Mp => mp_scf(),
+            OpClass::Kg(s) => kg_scf(*s),
+            OpClass::SpAttn { .. } => spattn_scf(),
+        }
+    }
+}
+
+/// Fig. 10b — the SLS function. `weighted` adds the SpMM value rescale.
+fn sls_scf(weighted: bool) -> ScfFunc {
+    let mut args = vec![
+        MemRef::read_only("idxs", vec![None], Scalar::I32),
+        MemRef::read_only("ptrs", vec![None], Scalar::I32),
+        MemRef::read_only("table", vec![None, None], Scalar::F32),
+        MemRef::output("out", vec![None, None], Scalar::F32),
+    ];
+    if weighted {
+        args.insert(2, MemRef::read_only("weights", vec![None], Scalar::F32));
+    }
+
+    // innermost: out[b,e] += (w *) table[i,e]
+    let val = Expr::load("table", vec![Expr::var("i"), Expr::var("e")]);
+    let contrib = if weighted { Expr::mul(Expr::var("w"), val) } else { val };
+    let acc = Expr::add(
+        Expr::load("out", vec![Expr::var("b"), Expr::var("e")]),
+        contrib,
+    );
+    let e_loop = ScfStmt::for_loop(
+        "e",
+        Expr::ConstI(0),
+        Expr::sym("emb_len"),
+        vec![ScfStmt::store("out", vec![Expr::var("b"), Expr::var("e")], acc)],
+    );
+
+    let mut p_body = vec![ScfStmt::let_(
+        "i",
+        Scalar::Index,
+        Expr::load("idxs", vec![Expr::var("p")]),
+    )];
+    if weighted {
+        p_body.push(ScfStmt::let_(
+            "w",
+            Scalar::F32,
+            Expr::load("weights", vec![Expr::var("p")]),
+        ));
+    }
+    p_body.push(e_loop);
+
+    let p_loop = ScfStmt::For {
+        var: "p".into(),
+        lb: Expr::load("ptrs", vec![Expr::var("b")]),
+        ub: Expr::load("ptrs", vec![Expr::add(Expr::var("b"), Expr::ConstI(1))]),
+        step: 1,
+        body: p_body,
+    };
+
+    let b_loop =
+        ScfStmt::for_loop("b", Expr::ConstI(0), Expr::sym("num_batches"), vec![p_loop]);
+
+    ScfFunc {
+        name: if weighted { "spmm".into() } else { "sls".into() },
+        args,
+        sym_defaults: HashMap::from([("num_batches".into(), 16), ("emb_len".into(), 32)]),
+        body: vec![b_loop],
+    }
+}
+
+/// FusedMM message passing: SDDMM (dot of h[i], h[j]) fused with SpMM
+/// (accumulate s * h[j]). The second e-loop re-reads `h[j]` (already
+/// loaded) and accumulates into `out` — a workspace loop (§6.2) that
+/// must stay on the execute unit.
+fn mp_scf() -> ScfFunc {
+    let args = vec![
+        MemRef::read_only("idxs", vec![None], Scalar::I32),
+        MemRef::read_only("ptrs", vec![None], Scalar::I32),
+        MemRef::read_only("h", vec![None, None], Scalar::F32),
+        MemRef::output("out", vec![None, None], Scalar::F32),
+    ];
+
+    // s += h[i,e] * h[j,e]   (SDDMM dot; h[j,e] is the fresh lookup)
+    let dot_body = ScfStmt::let_(
+        "s",
+        Scalar::F32,
+        Expr::add(
+            Expr::var("s"),
+            Expr::mul(
+                Expr::load("h", vec![Expr::var("i"), Expr::var("e")]),
+                Expr::load("h", vec![Expr::var("j"), Expr::var("e")]),
+            ),
+        ),
+    );
+    let e_loop = ScfStmt::for_loop("e", Expr::ConstI(0), Expr::sym("emb_len"), vec![dot_body]);
+
+    // workspace loop: out[i,e2] += s * h[j,e2]
+    let ws_body = ScfStmt::store(
+        "out",
+        vec![Expr::var("i"), Expr::var("e2")],
+        Expr::add(
+            Expr::load("out", vec![Expr::var("i"), Expr::var("e2")]),
+            Expr::mul(
+                Expr::var("s"),
+                Expr::load("h", vec![Expr::var("j"), Expr::var("e2")]),
+            ),
+        ),
+    );
+    let ws_loop = ScfStmt::for_loop("e2", Expr::ConstI(0), Expr::sym("emb_len"), vec![ws_body]);
+
+    let p_loop = ScfStmt::For {
+        var: "p".into(),
+        lb: Expr::load("ptrs", vec![Expr::var("i")]),
+        ub: Expr::load("ptrs", vec![Expr::add(Expr::var("i"), Expr::ConstI(1))]),
+        step: 1,
+        body: vec![
+            ScfStmt::let_("j", Scalar::Index, Expr::load("idxs", vec![Expr::var("p")])),
+            ScfStmt::let_("s", Scalar::F32, Expr::ConstF(0.0)),
+            e_loop,
+            ws_loop,
+        ],
+    };
+
+    let i_loop =
+        ScfStmt::for_loop("i", Expr::ConstI(0), Expr::sym("num_nodes"), vec![p_loop]);
+
+    ScfFunc {
+        name: "mp".into(),
+        args,
+        sym_defaults: HashMap::from([("num_nodes".into(), 16), ("emb_len".into(), 32)]),
+        body: vec![i_loop],
+    }
+}
+
+/// KG lookup: one non-zero per row — no segment pointers (§4).
+fn kg_scf(semiring: Semiring) -> ScfFunc {
+    let args = vec![
+        MemRef::read_only("idxs", vec![None], Scalar::I32),
+        MemRef::read_only("table", vec![None, None], Scalar::F32),
+        MemRef::output("out", vec![None, None], Scalar::F32),
+    ];
+    let val = Expr::load("table", vec![Expr::var("i"), Expr::var("e")]);
+    let result = match semiring {
+        Semiring::PlusTimes => val,
+        Semiring::MaxPlus => Expr::Bin {
+            op: crate::ir::types::BinOp::Max,
+            lhs: Box::new(val),
+            rhs: Box::new(Expr::ConstF(0.0)),
+        },
+    };
+    let e_loop = ScfStmt::for_loop(
+        "e",
+        Expr::ConstI(0),
+        Expr::sym("emb_len"),
+        vec![ScfStmt::store("out", vec![Expr::var("q"), Expr::var("e")], result)],
+    );
+    let q_loop = ScfStmt::for_loop(
+        "q",
+        Expr::ConstI(0),
+        Expr::sym("num_queries"),
+        vec![
+            ScfStmt::let_("i", Scalar::Index, Expr::load("idxs", vec![Expr::var("q")])),
+            e_loop,
+        ],
+    );
+    ScfFunc {
+        name: if semiring == Semiring::PlusTimes { "kg".into() } else { "kg_maxplus".into() },
+        args,
+        sym_defaults: HashMap::from([("num_queries".into(), 16), ("emb_len".into(), 64)]),
+        body: vec![q_loop],
+    }
+}
+
+/// BigBird SpAttn gather: blocked format, zero compute (§2.2.2).
+fn spattn_scf() -> ScfFunc {
+    let args = vec![
+        MemRef::read_only("bidx", vec![None], Scalar::I32),
+        MemRef::read_only("keys", vec![None, None], Scalar::F32),
+        MemRef::output("out", vec![None, None], Scalar::F32),
+    ];
+    // out[g*block + r, e] = keys[blk*block + r, e]
+    let src_row = Expr::add(
+        Expr::mul(Expr::var("blk"), Expr::sym("block")),
+        Expr::var("r"),
+    );
+    let dst_row = Expr::add(
+        Expr::mul(Expr::var("g"), Expr::sym("block")),
+        Expr::var("r"),
+    );
+    let e_loop = ScfStmt::for_loop(
+        "e",
+        Expr::ConstI(0),
+        Expr::sym("emb_len"),
+        vec![ScfStmt::store(
+            "out",
+            vec![dst_row, Expr::var("e")],
+            Expr::Load { mem: "keys".into(), indices: vec![src_row, Expr::var("e")] },
+        )],
+    );
+    let r_loop = ScfStmt::for_loop("r", Expr::ConstI(0), Expr::sym("block"), vec![e_loop]);
+    let g_loop = ScfStmt::for_loop(
+        "g",
+        Expr::ConstI(0),
+        Expr::sym("num_gathers"),
+        vec![
+            ScfStmt::let_("blk", Scalar::Index, Expr::load("bidx", vec![Expr::var("g")])),
+            r_loop,
+        ],
+    );
+    ScfFunc {
+        name: "spattn".into(),
+        args,
+        sym_defaults: HashMap::from([
+            ("num_gathers".into(), 16),
+            ("block".into(), 4),
+            ("emb_len".into(), 64),
+        ]),
+        body: vec![g_loop],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_classes_build_consistent_scf() {
+        for op in [
+            OpClass::Sls,
+            OpClass::Spmm,
+            OpClass::Mp,
+            OpClass::Kg(Semiring::PlusTimes),
+            OpClass::Kg(Semiring::MaxPlus),
+            OpClass::SpAttn { block: 4 },
+        ] {
+            let f = op.to_scf();
+            assert!(f.check_write_flags().is_ok(), "{}", f.name);
+            assert_eq!(f.written_mems(), vec!["out".to_string()], "{}", f.name);
+        }
+    }
+
+    #[test]
+    fn sls_has_three_nested_loops() {
+        let f = OpClass::Sls.to_scf();
+        let s = f.to_string();
+        assert_eq!(s.matches("for(").count(), 3);
+        assert!(s.contains("ptrs[b]"));
+        assert!(s.contains("table[i,e]"));
+    }
+
+    #[test]
+    fn mp_has_workspace_loop() {
+        let f = OpClass::Mp.to_scf();
+        let s = f.to_string();
+        assert_eq!(s.matches("for(").count(), 4);
+        assert!(s.contains("out[i,e2]"));
+    }
+}

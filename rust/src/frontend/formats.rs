@@ -1,0 +1,195 @@
+//! Sparse operand formats (paper §4): CSR segments for SLS/SpMM/MP,
+//! flat index lists for KG, blocked index lists for SpAttn — plus
+//! conversion into the `Env` tensors the compiled programs consume.
+
+use crate::data::{Env, Tensor};
+
+/// CSR-encoded sparse matrix rows: `ptrs[b]..ptrs[b+1]` indexes `idxs`
+/// (column ids) and optionally `vals` (non-zero values).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub num_rows: usize,
+    pub num_cols: usize,
+    pub ptrs: Vec<i32>,
+    pub idxs: Vec<i32>,
+    /// Non-zero values; empty means implicit 1.0 (pure lookup+sum).
+    pub vals: Vec<f32>,
+}
+
+impl Csr {
+    pub fn nnz(&self) -> usize {
+        self.idxs.len()
+    }
+
+    pub fn validate(&self) -> bool {
+        self.ptrs.len() == self.num_rows + 1
+            && *self.ptrs.last().unwrap_or(&0) as usize == self.idxs.len()
+            && self.ptrs.windows(2).all(|w| w[0] <= w[1])
+            && self.idxs.iter().all(|&i| (i as usize) < self.num_cols)
+            && (self.vals.is_empty() || self.vals.len() == self.idxs.len())
+    }
+
+    /// Build from per-row index lists.
+    pub fn from_rows(num_cols: usize, rows: &[Vec<i32>]) -> Self {
+        let mut ptrs = Vec::with_capacity(rows.len() + 1);
+        let mut idxs = Vec::new();
+        ptrs.push(0i32);
+        for r in rows {
+            idxs.extend_from_slice(r);
+            ptrs.push(idxs.len() as i32);
+        }
+        Csr { num_rows: rows.len(), num_cols, ptrs, idxs, vals: Vec::new() }
+    }
+
+    pub fn with_vals(mut self, vals: Vec<f32>) -> Self {
+        assert_eq!(vals.len(), self.idxs.len());
+        self.vals = vals;
+        self
+    }
+
+    /// Convert to the padded `[segments, max_lookups]` form used by the
+    /// JAX/Pallas kernels (pad index 0, masked off by `lens`).
+    pub fn to_padded(&self, max_lookups: usize) -> (Vec<i32>, Vec<i32>, Vec<f32>) {
+        let mut idxs = vec![0i32; self.num_rows * max_lookups];
+        let mut lens = vec![0i32; self.num_rows];
+        let mut vals = vec![0f32; self.num_rows * max_lookups];
+        for b in 0..self.num_rows {
+            let (s, e) = (self.ptrs[b] as usize, self.ptrs[b + 1] as usize);
+            let n = (e - s).min(max_lookups);
+            lens[b] = n as i32;
+            for j in 0..n {
+                idxs[b * max_lookups + j] = self.idxs[s + j];
+                vals[b * max_lookups + j] =
+                    if self.vals.is_empty() { 1.0 } else { self.vals[s + j] };
+            }
+        }
+        (idxs, lens, vals)
+    }
+
+    /// Bind this CSR and an embedding table into an `Env` using the
+    /// canonical memref names of the SLS/SpMM SCF functions.
+    pub fn bind_sls_env(&self, table: &Tensor, weighted: bool) -> Env {
+        let mut env = Env::new();
+        env.bind_tensor("ptrs", Tensor::i32(vec![self.ptrs.len()], self.ptrs.clone()));
+        env.bind_tensor("idxs", Tensor::i32(vec![self.idxs.len().max(1)], {
+            if self.idxs.is_empty() { vec![0] } else { self.idxs.clone() }
+        }));
+        if weighted {
+            let vals = if self.vals.is_empty() {
+                vec![1.0f32; self.idxs.len().max(1)]
+            } else {
+                self.vals.clone()
+            };
+            env.bind_tensor("weights", Tensor::f32(vec![vals.len()], vals));
+        }
+        env.bind_tensor("table", table.clone());
+        env.bind_tensor(
+            "out",
+            Tensor::zeros(vec![self.num_rows, table.dims[1]]),
+        );
+        env.bind_sym("num_batches", self.num_rows as i64);
+        env.bind_sym("emb_len", table.dims[1] as i64);
+        env.assign_addresses();
+        env
+    }
+}
+
+/// Flat lookup list (knowledge graphs: exactly one non-zero per row).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlatLookups {
+    pub idxs: Vec<i32>,
+    pub num_rows: usize,
+}
+
+impl FlatLookups {
+    pub fn bind_kg_env(&self, table: &Tensor) -> Env {
+        let mut env = Env::new();
+        env.bind_tensor("idxs", Tensor::i32(vec![self.idxs.len()], self.idxs.clone()));
+        env.bind_tensor("table", table.clone());
+        env.bind_tensor("out", Tensor::zeros(vec![self.idxs.len(), table.dims[1]]));
+        env.bind_sym("num_queries", self.idxs.len() as i64);
+        env.bind_sym("emb_len", table.dims[1] as i64);
+        env.assign_addresses();
+        env
+    }
+}
+
+/// Blocked gather list (BigBird SpAttn): block ids into a key tensor
+/// partitioned into blocks of `block` consecutive rows.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockGathers {
+    pub block_idxs: Vec<i32>,
+    pub block: usize,
+    pub num_key_blocks: usize,
+}
+
+impl BlockGathers {
+    pub fn bind_spattn_env(&self, keys: &Tensor) -> Env {
+        assert_eq!(keys.dims[0], self.num_key_blocks * self.block);
+        let mut env = Env::new();
+        env.bind_tensor(
+            "bidx",
+            Tensor::i32(vec![self.block_idxs.len()], self.block_idxs.clone()),
+        );
+        env.bind_tensor("keys", keys.clone());
+        env.bind_tensor(
+            "out",
+            Tensor::zeros(vec![self.block_idxs.len() * self.block, keys.dims[1]]),
+        );
+        env.bind_sym("num_gathers", self.block_idxs.len() as i64);
+        env.bind_sym("block", self.block as i64);
+        env.bind_sym("emb_len", keys.dims[1] as i64);
+        env.assign_addresses();
+        env
+    }
+}
+
+/// MP (FusedMM message passing) shares the CSR layout; its env also
+/// needs the feature matrix under the `h` name.
+pub fn bind_mp_env(csr: &Csr, feats: &Tensor) -> Env {
+    let mut env = Env::new();
+    env.bind_tensor("ptrs", Tensor::i32(vec![csr.ptrs.len()], csr.ptrs.clone()));
+    env.bind_tensor("idxs", Tensor::i32(vec![csr.idxs.len().max(1)], {
+        if csr.idxs.is_empty() { vec![0] } else { csr.idxs.clone() }
+    }));
+    env.bind_tensor("h", feats.clone());
+    env.bind_tensor("out", Tensor::zeros(vec![csr.num_rows, feats.dims[1]]));
+    env.bind_sym("num_nodes", csr.num_rows as i64);
+    env.bind_sym("emb_len", feats.dims[1] as i64);
+    env.assign_addresses();
+    env
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csr_from_rows_valid() {
+        let csr = Csr::from_rows(8, &[vec![1, 2], vec![], vec![7]]);
+        assert!(csr.validate());
+        assert_eq!(csr.nnz(), 3);
+        assert_eq!(csr.ptrs, vec![0, 2, 2, 3]);
+    }
+
+    #[test]
+    fn padded_form_masks_tail() {
+        let csr = Csr::from_rows(8, &[vec![1, 2, 3], vec![4]]);
+        let (idxs, lens, vals) = csr.to_padded(4);
+        assert_eq!(lens, vec![3, 1]);
+        assert_eq!(&idxs[0..4], &[1, 2, 3, 0]);
+        assert_eq!(&idxs[4..8], &[4, 0, 0, 0]);
+        assert_eq!(vals[0], 1.0);
+    }
+
+    #[test]
+    fn sls_env_binds_all() {
+        let csr = Csr::from_rows(4, &[vec![0, 1], vec![2]]);
+        let table = Tensor::f32(vec![4, 2], vec![0.; 8]);
+        let env = csr.bind_sls_env(&table, false);
+        for name in ["ptrs", "idxs", "table", "out"] {
+            assert!(env.tensor(name).is_ok(), "{name}");
+        }
+        assert_eq!(env.sym("num_batches").unwrap(), 2);
+    }
+}

@@ -1,0 +1,9 @@
+//! Frontend: framework-level op declarations and sparse formats → SCF IR.
+
+pub mod embedding_ops;
+pub mod formats;
+pub mod torch_like;
+
+pub use embedding_ops::{OpClass, Semiring};
+pub use formats::{bind_mp_env, BlockGathers, Csr, FlatLookups};
+pub use torch_like::{BlockGather, EmbeddingBag, GraphAggregate, KgLookup, SparseLengthsSum};

@@ -1,0 +1,126 @@
+//! PyTorch/TensorFlow-shaped entry points (paper Fig. 11 inputs).
+//!
+//! A downstream user doesn't write SCF — they declare the framework op
+//! they already use (`nn.EmbeddingBag`, Caffe2 `SparseLengthsSum`,
+//! `tf.gather`, PyG `propagate`) and Ember produces the SCF function the
+//! compiler consumes plus default symbol bindings for the declared
+//! shapes.
+
+use super::embedding_ops::{OpClass, Semiring};
+use crate::ir::scf::ScfFunc;
+
+
+/// `torch.nn.EmbeddingBag(num_embeddings, embedding_dim, mode="sum")`.
+#[derive(Debug, Clone)]
+pub struct EmbeddingBag {
+    pub num_embeddings: usize,
+    pub embedding_dim: usize,
+    /// `per_sample_weights` given → weighted (SpMM) form.
+    pub weighted: bool,
+}
+
+impl EmbeddingBag {
+    pub fn new(num_embeddings: usize, embedding_dim: usize) -> Self {
+        EmbeddingBag { num_embeddings, embedding_dim, weighted: false }
+    }
+    pub fn with_per_sample_weights(mut self) -> Self {
+        self.weighted = true;
+        self
+    }
+    pub fn op_class(&self) -> OpClass {
+        if self.weighted { OpClass::Spmm } else { OpClass::Sls }
+    }
+    pub fn to_scf(&self, num_batches: usize) -> ScfFunc {
+        let mut f = self.op_class().to_scf();
+        f.sym_defaults.insert("num_batches".into(), num_batches as i64);
+        f.sym_defaults.insert("emb_len".into(), self.embedding_dim as i64);
+        f
+    }
+}
+
+/// Caffe2's `SparseLengthsSum` — identical lowering to EmbeddingBag sum.
+pub type SparseLengthsSum = EmbeddingBag;
+
+/// PyG-style GNN aggregation (`propagate` with `aggr="add"`).
+#[derive(Debug, Clone)]
+pub struct GraphAggregate {
+    pub num_nodes: usize,
+    pub feature_dim: usize,
+    /// FusedMM message passing (edge score = dot) instead of plain SpMM.
+    pub fused_sddmm: bool,
+}
+
+impl GraphAggregate {
+    pub fn op_class(&self) -> OpClass {
+        if self.fused_sddmm { OpClass::Mp } else { OpClass::Spmm }
+    }
+    pub fn to_scf(&self) -> ScfFunc {
+        let mut f = self.op_class().to_scf();
+        let n = if self.fused_sddmm { "num_nodes" } else { "num_batches" };
+        f.sym_defaults.insert(n.into(), self.num_nodes as i64);
+        f.sym_defaults.insert("emb_len".into(), self.feature_dim as i64);
+        f
+    }
+}
+
+/// KG embedding lookup (one relation/entity id per query).
+#[derive(Debug, Clone)]
+pub struct KgLookup {
+    pub num_entities: usize,
+    pub embedding_dim: usize,
+    pub semiring: Semiring,
+}
+
+impl KgLookup {
+    pub fn op_class(&self) -> OpClass {
+        OpClass::Kg(self.semiring)
+    }
+    pub fn to_scf(&self, num_queries: usize) -> ScfFunc {
+        let mut f = self.op_class().to_scf();
+        f.sym_defaults.insert("num_queries".into(), num_queries as i64);
+        f.sym_defaults.insert("emb_len".into(), self.embedding_dim as i64);
+        f
+    }
+}
+
+/// BigBird-style blocked `tf.gather` (§2.2.2).
+#[derive(Debug, Clone)]
+pub struct BlockGather {
+    pub block: usize,
+    pub embedding_dim: usize,
+}
+
+impl BlockGather {
+    pub fn op_class(&self) -> OpClass {
+        OpClass::SpAttn { block: self.block }
+    }
+    pub fn to_scf(&self, num_gathers: usize) -> ScfFunc {
+        let mut f = self.op_class().to_scf();
+        f.sym_defaults.insert("num_gathers".into(), num_gathers as i64);
+        f.sym_defaults.insert("block".into(), self.block as i64);
+        f.sym_defaults.insert("emb_len".into(), self.embedding_dim as i64);
+        f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn embedding_bag_binds_shapes() {
+        let eb = EmbeddingBag::new(16384, 32);
+        let f = eb.to_scf(64);
+        assert_eq!(f.sym_defaults["num_batches"], 64);
+        assert_eq!(f.sym_defaults["emb_len"], 32);
+        assert_eq!(f.name, "sls");
+        let w = EmbeddingBag::new(16384, 32).with_per_sample_weights();
+        assert_eq!(w.to_scf(64).name, "spmm");
+    }
+
+    #[test]
+    fn graph_aggregate_selects_fused() {
+        let g = GraphAggregate { num_nodes: 100, feature_dim: 128, fused_sddmm: true };
+        assert_eq!(g.to_scf().name, "mp");
+    }
+}

@@ -1,0 +1,181 @@
+//! DAE-potential figures (paper §3): Fig. 6, Fig. 7, Fig. 8.
+
+use super::motivation::{run_dlrm, run_gnn, run_kg, run_mp, run_spattn, ROW_CAP};
+use super::{f2, fpct, fx, geomean, Report};
+use crate::compiler::passes::pipeline::OptLevel;
+use crate::dae::MachineConfig;
+use crate::error::Result;
+use crate::workloads::dlrm::{Locality, ALL_RM};
+use crate::workloads::graphs::spec;
+
+/// Fig. 6: TMU vs traditional core: request rate, request rate per
+/// watt, and HBM bandwidth utilization on GNN embedding operations.
+pub fn fig6(seed: u64) -> Result<Report> {
+    let mut r = Report::new(
+        "fig6",
+        "Access-unit advantage: reqs/s, reqs/s/W, HBM utilization",
+        &["config", "Mreqs/s", "Mreqs/s/W", "hbm util", "mean inflight"],
+    );
+    let inputs = ["arxiv", "mag", "products", "proteins"];
+    for (label, cfg, opt) in [
+        ("core-1R.1L.1M", MachineConfig::traditional_core(), OptLevel::O1),
+        ("core-2R.2L.2M", MachineConfig::scaled_core_2x(), OptLevel::O1),
+        ("dae-tmu", MachineConfig::dae_tmu(), OptLevel::O3),
+    ] {
+        let mut reqs_s = Vec::new();
+        let mut reqs_s_w = Vec::new();
+        let mut util = Vec::new();
+        let mut inflight = Vec::new();
+        for name in inputs {
+            let g = spec(name).unwrap();
+            let res = run_gnn(g, cfg, opt, seed)?;
+            let rs = res.mem_reads as f64 / res.seconds;
+            reqs_s.push(rs / 1e6);
+            reqs_s_w.push(rs / res.watts / 1e6);
+            util.push(res.bw_util);
+            inflight.push(res.mean_inflight);
+        }
+        r.row(vec![
+            label.into(),
+            f2(geomean(&reqs_s)),
+            f2(geomean(&reqs_s_w)),
+            fpct(geomean(&util)),
+            f2(geomean(&inflight)),
+        ]);
+    }
+    r.note("paper: TMU 5.7x reqs/s, 5.6x reqs/s/W over core; 4-8x more bandwidth");
+    Ok(r)
+}
+
+/// Fig. 7: DAE speedup over a traditional core per embedding op class.
+pub fn fig7(seed: u64) -> Result<Report> {
+    let mut r = Report::new(
+        "fig7",
+        "DAE offload speedup per embedding operation",
+        &["workload", "coupled cycles", "dae cycles", "speedup"],
+    );
+    let core = MachineConfig::traditional_core();
+    let dae = MachineConfig::dae_tmu();
+    let mut speedups = Vec::new();
+    let mut add = |r: &mut Report, name: String, c: u64, d: u64| {
+        let s = c as f64 / d as f64;
+        speedups.push(s);
+        r.row(vec![name, c.to_string(), d.to_string(), fx(s)]);
+    };
+
+    // DLRMs: RM1-3 x L0-2
+    for rm in &ALL_RM {
+        for loc in Locality::ALL {
+            let c = run_dlrm(core, rm, loc, OptLevel::O1, seed)?;
+            let d = run_dlrm(dae, rm, loc, OptLevel::O3, seed)?;
+            add(&mut r, format!("dlrm_{}_{}", rm.name, loc.name()), c.cycles, d.cycles);
+        }
+    }
+    // GNN
+    for name in ["arxiv", "mag", "products", "proteins"] {
+        let g = spec(name).unwrap();
+        let c = run_gnn(g, core, OptLevel::O1, seed)?;
+        let d = run_gnn(g, dae, OptLevel::O3, seed)?;
+        add(&mut r, format!("gnn_{name}"), c.cycles, d.cycles);
+    }
+    // MP
+    for name in ["com-Youtube", "roadNet-CA", "web-Google", "wiki-Talk"] {
+        let g = spec(name).unwrap();
+        let c = run_mp(g, core, OptLevel::O1, seed)?;
+        let d = run_mp(g, dae, OptLevel::O3, seed)?;
+        add(&mut r, format!("mp_{name}"), c.cycles, d.cycles);
+    }
+    // KG
+    for name in ["biokg", "wikikg2"] {
+        let g = spec(name).unwrap();
+        let c = run_kg(g, core, OptLevel::O1, seed)?;
+        let d = run_kg(g, dae, OptLevel::O3, seed)?;
+        add(&mut r, format!("kg_{name}"), c.cycles, d.cycles);
+    }
+    // SpAttn blocks
+    for block in [1usize, 2, 4, 8] {
+        let c = run_spattn(block, core, OptLevel::O1, seed)?;
+        let d = run_spattn(block, dae, OptLevel::O3, seed)?;
+        add(&mut r, format!("spattn_b{block}"), c.cycles, d.cycles);
+    }
+
+    r.note(format!(
+        "geomean speedup {:.2}x (paper: average 5.8x, up to 17x for SpAttn)",
+        geomean(&speedups)
+    ));
+    Ok(r)
+}
+
+/// Analytic dense-layer cycles for the GNN DNN stage: both machines
+/// have similar peak compute (the paper picked the T4 for exactly this
+/// reason), so DNN time mostly cancels in the comparison.
+fn dnn_cycles(g: &crate::workloads::graphs::GraphSpec, cfg: &MachineConfig) -> f64 {
+    let rows = g.scaled_nodes().min(ROW_CAP) as f64;
+    let flops = rows * g.feat as f64 * 256.0 * 2.0;
+    flops / (cfg.core.simd_lanes as f64 * 2.0) * cfg.core.cost_scale / cfg.num_cores as f64
+}
+
+/// Fig. 8: end-to-end GNN inference: DAE multicore vs T4-class GPU
+/// (latency + perf/W) and H100-class perf/W.
+pub fn fig8(seed: u64) -> Result<Report> {
+    let mut r = Report::new(
+        "fig8",
+        "End-to-end GNN: DAE vs GPUs (latency breakdown, perf/W)",
+        &[
+            "input",
+            "dae emb+dnn (cyc)",
+            "t4 emb+dnn (cyc)",
+            "dae speedup",
+            "perf/W vs t4",
+            "perf/W vs h100",
+        ],
+    );
+    // per-core slice configs; latency uses per-core shard of rows
+    let dae = MachineConfig::dae_multicore(8);
+    let t4 = MachineConfig::t4_like();
+    let h100 = MachineConfig::h100_like();
+    let mut speedups = Vec::new();
+    let mut ppw_t4_all = Vec::new();
+    let mut ppw_h100_all = Vec::new();
+
+    for name in ["arxiv", "mag", "proteins"] {
+        let g = spec(name).unwrap();
+        // embedding stage on one core-slice of each machine
+        let de = run_gnn(g, dae, OptLevel::O3, seed)?;
+        let te = run_gnn(g, t4, OptLevel::O1, seed)?;
+        let he = run_gnn(g, h100, OptLevel::O1, seed)?;
+        // per-chip latency: embedding sharded across cores/SMs
+        let d_total = de.cycles as f64 / dae.num_cores as f64 + dnn_cycles(g, &dae);
+        let t_total = te.cycles as f64 / t4.num_cores as f64 + dnn_cycles(g, &t4);
+        let h_total = he.cycles as f64 / h100.num_cores as f64 + dnn_cycles(g, &h100);
+        let d_secs = d_total / (dae.power.ghz * 1e9);
+        let t_secs = t_total / (t4.power.ghz * 1e9);
+        let h_secs = h_total / (h100.power.ghz * 1e9);
+        // chip power = per-slice watts * cores
+        let d_w = de.watts * dae.num_cores as f64;
+        let t_w = te.watts * t4.num_cores as f64;
+        let h_w = he.watts * h100.num_cores as f64;
+        let speed = t_secs / d_secs;
+        let ppw_t4 = (1.0 / (d_secs * d_w)) / (1.0 / (t_secs * t_w));
+        let ppw_h100 = (1.0 / (d_secs * d_w)) / (1.0 / (h_secs * h_w));
+        speedups.push(speed);
+        ppw_t4_all.push(ppw_t4);
+        ppw_h100_all.push(ppw_h100);
+        r.row(vec![
+            name.into(),
+            format!("{:.0}", d_total),
+            format!("{:.0}", t_total),
+            fx(speed),
+            fx(ppw_t4),
+            fx(ppw_h100),
+        ]);
+    }
+    r.note(format!(
+        "geomean: {:.2}x faster than T4-class, {:.2}x perf/W vs T4, {:.2}x vs H100 \
+         (paper: 2.6x, 6.4x, 4x)",
+        geomean(&speedups),
+        geomean(&ppw_t4_all),
+        geomean(&ppw_h100_all)
+    ));
+    Ok(r)
+}

@@ -1,0 +1,239 @@
+//! Benchmark harness: regenerates every table and figure of the
+//! paper's evaluation (see DESIGN.md §4 for the experiment index).
+//!
+//! Each experiment produces a [`Report`] (printable text table +
+//! JSON), written to `results/` by the CLI (`ember bench --exp ...`)
+//! and the `figures` bench target.
+
+pub mod dae_potential;
+pub mod evaluation;
+pub mod motivation;
+pub mod tables;
+
+use crate::compiler::passes::pipeline::{compile, CompileOptions, CompiledProgram, OptLevel};
+use crate::dae::engine::DaeSim;
+use crate::dae::MachineConfig;
+use crate::data::Env;
+use crate::error::{EmberError, Result};
+use crate::frontend::embedding_ops::OpClass;
+use crate::interp::Interp;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// A regenerated table/figure.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub name: String,
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(name: &str, title: &str, header: &[&str]) -> Self {
+        Report {
+            name: name.into(),
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    /// Find a numeric cell by row label (col 0) + column name.
+    pub fn value(&self, row_label: &str, col: &str) -> Option<f64> {
+        let ci = self.header.iter().position(|h| h == col)?;
+        let row = self.rows.iter().find(|r| r[0] == row_label)?;
+        row.get(ci)?.trim_end_matches('%').trim_end_matches('x').parse().ok()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("name".into(), Json::str(&self.name));
+        obj.insert("title".into(), Json::str(&self.title));
+        obj.insert(
+            "header".into(),
+            Json::Arr(self.header.iter().map(|h| Json::str(h)).collect()),
+        );
+        obj.insert(
+            "rows".into(),
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|r| Json::Arr(r.iter().map(|c| Json::str(c)).collect()))
+                    .collect(),
+            ),
+        );
+        obj.insert(
+            "notes".into(),
+            Json::Arr(self.notes.iter().map(|n| Json::str(n)).collect()),
+        );
+        Json::Obj(obj)
+    }
+
+    /// Write `<out>/<name>.txt` and `<out>/<name>.json`.
+    pub fn save(&self, out_dir: impl AsRef<Path>) -> Result<()> {
+        let dir = out_dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{}.txt", self.name)), self.to_string())?;
+        std::fs::write(dir.join(format!("{}.json", self.name)), self.to_json().to_string())?;
+        Ok(())
+    }
+}
+
+impl fmt::Display for Report {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "== {} — {} ==", self.name, self.title)?;
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(c.len());
+                }
+            }
+        }
+        for (i, h) in self.header.iter().enumerate() {
+            write!(f, "{:w$}  ", h, w = widths[i])?;
+        }
+        writeln!(f)?;
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                write!(f, "{:w$}  ", c, w = widths.get(i).copied().unwrap_or(0))?;
+            }
+            writeln!(f)?;
+        }
+        for n in &self.notes {
+            writeln!(f, "  note: {n}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Measured outcome of one simulated run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub cycles: u64,
+    pub seconds: f64,
+    pub watts: f64,
+    pub joules: f64,
+    pub bw_util: f64,
+    pub loads_per_cycle: f64,
+    pub mean_inflight: f64,
+    pub lat_hist: [u64; 6],
+    pub mem_reads: u64,
+    pub queue_write_bps: f64,
+    pub queue_read_bps: f64,
+    pub llc_lookups: u64,
+    pub l2_hits: u64,
+    pub tokens: u64,
+    pub dram_bytes: u64,
+}
+
+/// Run a compiled program on a machine over an environment.
+pub fn simulate(prog: &CompiledProgram, cfg: MachineConfig, env: &mut Env) -> Result<RunResult> {
+    let mut sim = DaeSim::new(cfg);
+    let mut interp = Interp::new(&prog.dlc)?;
+    interp.run(env, &mut sim)?;
+    let lookup_unit =
+        if cfg.access.is_some() { sim.access_stats() } else { sim.exec_stats() };
+    Ok(RunResult {
+        cycles: sim.cycles(),
+        seconds: sim.seconds(),
+        watts: sim.watts(),
+        joules: sim.joules(),
+        bw_util: sim.bw_utilization(),
+        loads_per_cycle: sim.loads_per_cycle(),
+        mean_inflight: sim.mean_inflight(),
+        lat_hist: lookup_unit.lat_hist,
+        mem_reads: lookup_unit.mem_reads,
+        queue_write_bps: sim.queue_write_throughput(),
+        queue_read_bps: sim.queue_read_throughput(),
+        llc_lookups: sim.memory.stats.llc_lookups,
+        l2_hits: sim.memory.stats.l2_hits,
+        tokens: sim.tokens,
+        dram_bytes: sim.memory.stats.dram_bytes,
+    })
+}
+
+/// Compile + run an op on a machine. Coupled machines (no access unit)
+/// execute the vectorized-but-not-decoupled event stream (emb-opt1),
+/// matching the paper's "high-performance implementations from the
+/// literature" baseline; DAE machines run the requested level.
+pub fn run_op(
+    op: &OpClass,
+    opt: OptLevel,
+    cfg: MachineConfig,
+    env: &mut Env,
+) -> Result<RunResult> {
+    let effective = if cfg.access.is_none() && opt > OptLevel::O1 { OptLevel::O1 } else { opt };
+    let prog = compile(op, CompileOptions::at(effective))?;
+    simulate(&prog, cfg, env)
+}
+
+/// Geometric mean helper.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|x| x.max(1e-12).ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Format helpers.
+pub fn fx(x: f64) -> String {
+    format!("{x:.2}x")
+}
+pub fn fpct(x: f64) -> String {
+    format!("{:.1}%", 100.0 * x)
+}
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+/// Run one experiment by id ("table1".."table4", "fig1".."fig19",
+/// "all"); returns the reports generated.
+pub fn run_experiment(exp: &str, seed: u64) -> Result<Vec<Report>> {
+    let mut out = Vec::new();
+    let mut push = |r: Report| out.push(r);
+    match exp {
+        "table1" => push(tables::table1_report(seed)),
+        "table2" => push(tables::table2_report()),
+        "table3" => push(tables::table3_report()),
+        "table4" => push(tables::table4_report()),
+        "fig1" => push(motivation::fig1(seed)?),
+        "fig3" => push(motivation::fig3(seed)?),
+        "fig4" => push(motivation::fig4(seed)?),
+        "fig6" => push(dae_potential::fig6(seed)?),
+        "fig7" => push(dae_potential::fig7(seed)?),
+        "fig8" => push(dae_potential::fig8(seed)?),
+        "fig16" => push(evaluation::fig16(seed)?),
+        "fig17" => push(evaluation::fig17(seed)?),
+        "fig18" => push(evaluation::fig18(seed)?),
+        "fig19" => push(evaluation::fig19(seed)?),
+        "all" => {
+            for e in [
+                "table1", "table2", "table3", "table4", "fig1", "fig3", "fig4", "fig6",
+                "fig7", "fig8", "fig16", "fig17", "fig18", "fig19",
+            ] {
+                out.extend(run_experiment(e, seed)?);
+            }
+        }
+        other => {
+            return Err(EmberError::Workload(format!("unknown experiment `{other}`")));
+        }
+    }
+    Ok(out)
+}

@@ -1,0 +1,967 @@
+//! Functional interpreter for DLC programs.
+//!
+//! Executes the decoupled program on real tensors (`Env`), producing
+//! exact numerics — validated against the PJRT-executed JAX oracle —
+//! while emitting an *event stream* through a [`DaeSink`]. The cycle
+//! simulator (`dae/`) implements `DaeSink` to attach timing, energy and
+//! queue backpressure to the same event stream, so functional and
+//! timing behaviour can never diverge.
+//!
+//! Queue semantics: control/data queues are FIFO, so the execute unit
+//! observes tokens and operands in exactly marshaling order. The
+//! interpreter therefore runs each token handler synchronously at its
+//! push point; the simulator reconstructs the true overlap from the
+//! event stream.
+
+pub mod handopt;
+
+use crate::data::{Buf, Env};
+use crate::error::{EmberError, Result};
+use crate::ir::compute::{CExpr, CStmt};
+use crate::ir::dlc::{DlcOp, DlcProgram, DlcVal, PushSrc};
+use crate::ir::types::{BinOp, Event, MemHint, Scalar};
+use std::collections::{HashMap, VecDeque};
+
+/// Which unit performed a memory access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Unit {
+    Access,
+    Execute,
+}
+
+/// Sentinel stream id: "no stream" (interned ids are dense u32s).
+pub const NO_STREAM: u32 = u32::MAX;
+
+/// Event consumer: the simulator attaches timing/energy to these.
+/// Default impls are no-ops so the pure-numerics path costs nothing.
+///
+/// Streams are referred to by dense interned ids (`Interp::stream_id`)
+/// so the hot path never allocates; `deps` lists the streams whose
+/// values the event's address/operand computation consumed — the
+/// simulator uses them to model pointer-chasing serialization.
+pub trait DaeSink {
+    /// A memory read of `bytes` at `addr` filling stream `produces`
+    /// (element-granular; the memory model splits cache lines).
+    fn mem_read(
+        &mut self,
+        _unit: Unit,
+        _addr: u64,
+        _bytes: u32,
+        _hint: MemHint,
+        _produces: u32,
+        _deps: &[u32],
+    ) {
+    }
+    /// A memory write (store streams / core stores).
+    fn mem_write(&mut self, _unit: Unit, _addr: u64, _bytes: u32, _deps: &[u32]) {}
+    /// Access-unit integer ALU stream step.
+    fn alu_step(&mut self, _produces: u32, _deps: &[u32]) {}
+    /// One traversal iteration of loop stream `iv` (deps = bound streams).
+    fn loop_iter(&mut self, _iv: u32, _deps: &[u32]) {}
+    /// Append stream `src` to marshaling buffer `buf`.
+    fn buf_push(&mut self, _buf: u32, _src: u32) {}
+    /// Access unit pushes `bytes` of operand data (from `src`) into the
+    /// data queue.
+    fn queue_data(&mut self, _bytes: u32, _src: u32) {}
+    /// Access unit pushes a control token (dense handler index).
+    fn queue_ctrl(&mut self, _token: u32) {}
+    /// Execute unit pops `bytes` from the data queue.
+    fn pop_data(&mut self, _bytes: u32) {}
+    /// Execute unit performs one arithmetic op over `lanes` lanes.
+    fn exec_op(&mut self, _lanes: u32) {}
+    /// Execute unit dispatches a control token (branch on token id).
+    fn exec_dispatch(&mut self, _token: u32) {}
+    /// Execute unit scalar bookkeeping step (core loop overhead).
+    fn exec_step(&mut self) {}
+}
+
+/// No-op sink: pure numerics.
+pub struct NullSink;
+impl DaeSink for NullSink {}
+
+/// A runtime value flowing through streams, queues, and core variables.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Val {
+    I(i64),
+    F(f32),
+    VI(Vec<i64>),
+    VF(Vec<f32>),
+    /// Marshaling buffer: a sequence of vector chunks.
+    Buffer(Vec<Vec<f32>>),
+}
+
+impl Val {
+    pub fn as_i(&self) -> Result<i64> {
+        match self {
+            Val::I(i) => Ok(*i),
+            Val::F(f) => Ok(*f as i64),
+            Val::VI(v) if !v.is_empty() => Ok(v[0]),
+            other => Err(EmberError::Interp(format!("expected scalar int, got {other:?}"))),
+        }
+    }
+    pub fn as_f(&self) -> Result<f32> {
+        match self {
+            Val::F(f) => Ok(*f),
+            Val::I(i) => Ok(*i as f32),
+            other => Err(EmberError::Interp(format!("expected scalar f32, got {other:?}"))),
+        }
+    }
+    pub fn bytes(&self) -> u32 {
+        match self {
+            Val::I(_) => 8,
+            Val::F(_) => 4,
+            Val::VI(v) => 8 * v.len() as u32,
+            Val::VF(v) => 4 * v.len() as u32,
+            Val::Buffer(b) => b.iter().map(|c| 4 * c.len() as u32).sum(),
+        }
+    }
+    fn lanes(&self) -> u32 {
+        match self {
+            Val::VI(v) => v.len() as u32,
+            Val::VF(v) => v.len() as u32,
+            _ => 1,
+        }
+    }
+}
+
+/// One lookup-tree node: a loop with its body ops in order.
+#[derive(Debug)]
+struct LoopNode {
+    op_idx: usize,
+    body: Vec<BodyItem>,
+}
+
+#[derive(Debug)]
+enum BodyItem {
+    Op(usize),
+    Loop(LoopNode),
+}
+
+/// Interpreter state.
+pub struct Interp<'p> {
+    prog: &'p DlcProgram,
+    root: LoopNode,
+    /// Current stream values (access side), indexed by interned id.
+    streams: Vec<Option<Val>>,
+    /// Buffers indexed by interned id.
+    buffers: Vec<Vec<Vec<f32>>>,
+    /// Core variables (execute side, persistent across handlers).
+    pub core: HashMap<String, Val>,
+    data_q: VecDeque<Val>,
+    /// Statistics: tokens processed, by dense handler index.
+    pub token_counts_v: Vec<u64>,
+    /// Interned stream ids.
+    ids: HashMap<String, u32>,
+    /// Per-lookup-op dependency ids (index streams / operands).
+    op_deps: Vec<Vec<u32>>,
+    /// Per-lookup-op produced stream id.
+    op_prod: Vec<u32>,
+    /// Token name -> dense handler index.
+    token_ids: HashMap<String, u32>,
+    /// Per-lookup-op compiled operand lists (bounds / indices), so the
+    /// hot path never hashes stream names.
+    op_args: Vec<Vec<Arg>>,
+}
+
+/// A compiled operand: immediate, symbolic dim (resolved through the
+/// Env — cold), or interned stream id (hot).
+#[derive(Debug, Clone)]
+enum Arg {
+    Imm(i64),
+    Sym(String),
+    Str(u32),
+}
+
+impl<'p> Interp<'p> {
+    pub fn new(prog: &'p DlcProgram) -> Result<Self> {
+        let root = build_tree(prog)?;
+        let mut core = HashMap::new();
+        for (v, init) in &prog.core_vars {
+            core.insert(v.clone(), Val::I(*init));
+        }
+        // intern stream names + precompute per-op dependency id lists
+        let mut ids: HashMap<String, u32> = HashMap::new();
+        let mut intern = |m: &mut HashMap<String, u32>, n: &str| -> u32 {
+            let next = m.len() as u32;
+            *m.entry(n.to_string()).or_insert(next)
+        };
+        let mut op_deps = Vec::with_capacity(prog.lookup.len());
+        let mut op_prod = Vec::with_capacity(prog.lookup.len());
+        for op in &prog.lookup {
+            let mut deps = Vec::new();
+            let mut dep_val = |m: &mut HashMap<String, u32>, v: &DlcVal, deps: &mut Vec<u32>| {
+                if let DlcVal::Str(s) = v {
+                    deps.push(intern(m, s));
+                }
+            };
+            let prod = match op {
+                DlcOp::LoopTr { id, lb, ub, .. } => {
+                    dep_val(&mut ids, lb, &mut deps);
+                    dep_val(&mut ids, ub, &mut deps);
+                    intern(&mut ids, id)
+                }
+                DlcOp::MemStr { id, indices, .. } => {
+                    for ix in indices {
+                        dep_val(&mut ids, ix, &mut deps);
+                    }
+                    intern(&mut ids, id)
+                }
+                DlcOp::AluStr { id, lhs, rhs, .. } => {
+                    dep_val(&mut ids, lhs, &mut deps);
+                    dep_val(&mut ids, rhs, &mut deps);
+                    intern(&mut ids, id)
+                }
+                DlcOp::BufStr { id, .. } => intern(&mut ids, id),
+                DlcOp::BufPush { buf, src, .. } => {
+                    deps.push(intern(&mut ids, src));
+                    intern(&mut ids, buf)
+                }
+                DlcOp::PushOp { src, .. } => match src {
+                    PushSrc::Stream(s) | PushSrc::Buffer(s) | PushSrc::Address(s) => {
+                        intern(&mut ids, s)
+                    }
+                },
+                DlcOp::CallbackTok { .. } => NO_STREAM,
+                DlcOp::StoreStr { src, indices, .. } => {
+                    for ix in indices {
+                        dep_val(&mut ids, ix, &mut deps);
+                    }
+                    intern(&mut ids, src)
+                }
+            };
+            op_deps.push(deps);
+            op_prod.push(prod);
+        }
+        let token_ids: HashMap<String, u32> = prog
+            .compute
+            .iter()
+            .enumerate()
+            .map(|(i, h)| (h.token.0.clone(), i as u32))
+            .collect();
+        // compile operand lists (no name hashing on the hot path)
+        let mut op_args: Vec<Vec<Arg>> = Vec::with_capacity(prog.lookup.len());
+        {
+            let mut arg = |m: &mut HashMap<String, u32>, v: &DlcVal| -> Arg {
+                match v {
+                    DlcVal::Imm(i) => Arg::Imm(*i),
+                    DlcVal::Sym(s) => Arg::Sym(s.clone()),
+                    DlcVal::Str(s) => {
+                        let next = m.len() as u32;
+                        Arg::Str(*m.entry(s.clone()).or_insert(next))
+                    }
+                }
+            };
+            for op in &prog.lookup {
+                let list = match op {
+                    DlcOp::LoopTr { lb, ub, .. } => vec![arg(&mut ids, lb), arg(&mut ids, ub)],
+                    DlcOp::MemStr { indices, .. } | DlcOp::StoreStr { indices, .. } => {
+                        indices.iter().map(|i| arg(&mut ids, i)).collect()
+                    }
+                    DlcOp::AluStr { lhs, rhs, .. } => {
+                        vec![arg(&mut ids, lhs), arg(&mut ids, rhs)]
+                    }
+                    _ => Vec::new(),
+                };
+                op_args.push(list);
+            }
+        }
+        let n_streams = ids.len();
+        Ok(Interp {
+            prog,
+            root,
+            streams: vec![None; n_streams],
+            buffers: vec![Vec::new(); n_streams],
+            core,
+            data_q: VecDeque::new(),
+            token_counts_v: vec![0; prog.compute.len()],
+            ids,
+            op_deps,
+            op_prod,
+            token_ids,
+            op_args,
+        })
+    }
+
+    /// Tokens processed per token name (test/diagnostic API).
+    pub fn token_counts(&self) -> HashMap<String, u64> {
+        self.prog
+            .compute
+            .iter()
+            .enumerate()
+            .map(|(i, h)| (h.token.0.clone(), self.token_counts_v[i]))
+            .collect()
+    }
+
+    /// Dense id of a stream name (for sinks that track per-stream state).
+    pub fn stream_id(&self, name: &str) -> Option<u32> {
+        self.ids.get(name).copied()
+    }
+    /// Number of interned streams.
+    pub fn num_streams(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// Run the program over `env`, emitting events into `sink`.
+    pub fn run(&mut self, env: &mut Env, sink: &mut impl DaeSink) -> Result<()> {
+        let root = std::mem::replace(
+            &mut self.root,
+            LoopNode { op_idx: usize::MAX, body: Vec::new() },
+        );
+        let r = self.exec_loop(&root, env, sink);
+        self.root = root;
+        r?;
+        if !self.data_q.is_empty() {
+            return Err(EmberError::Interp(format!(
+                "data queue not drained: {} values left",
+                self.data_q.len()
+            )));
+        }
+        Ok(())
+    }
+
+    #[inline]
+    fn stream_val(&self, id: u32) -> Result<&Val> {
+        self.streams
+            .get(id as usize)
+            .and_then(|v| v.as_ref())
+            .ok_or_else(|| EmberError::Interp(format!("stream #{id} has no value")))
+    }
+
+    #[inline]
+    fn resolve_arg(&self, a: &Arg, env: &Env) -> Result<i64> {
+        match a {
+            Arg::Imm(i) => Ok(*i),
+            Arg::Sym(s) => env.sym(s),
+            Arg::Str(id) => self.stream_val(*id)?.as_i(),
+        }
+    }
+
+    fn exec_loop(&mut self, node: &LoopNode, env: &mut Env, sink: &mut impl DaeSink) -> Result<()> {
+        let DlcOp::LoopTr { stride, vlen, .. } = &self.prog.lookup[node.op_idx] else {
+            return Err(EmberError::Interp("loop node is not a LoopTr".into()));
+        };
+        let (stride, vlen) = (*stride, *vlen);
+        let args = &self.op_args[node.op_idx];
+        let (lo, hi) = (self.resolve_arg(&args[0], env)?, self.resolve_arg(&args[1], env)?);
+
+        // Beg events
+        self.run_events(node, Event::Beg, env, sink)?;
+
+        let iv_id = self.op_prod[node.op_idx];
+        let bound_deps = self.op_deps[node.op_idx].clone();
+        let step = if vlen > 1 { vlen as i64 } else { stride };
+        let mut i = lo;
+        while i < hi {
+            sink.loop_iter(iv_id, &bound_deps);
+            if vlen > 1 {
+                let lanes = ((hi - i).min(vlen as i64)) as usize;
+                self.streams[iv_id as usize] =
+                    Some(Val::VI((0..lanes).map(|k| i + k as i64).collect()));
+            } else {
+                self.streams[iv_id as usize] = Some(Val::I(i));
+            }
+            for item in &node.body {
+                match item {
+                    BodyItem::Op(idx) => self.exec_op(*idx, env, sink)?,
+                    BodyItem::Loop(child) => self.exec_loop(child, env, sink)?,
+                }
+            }
+            i += step;
+        }
+
+        // End events
+        self.run_events(node, Event::End, env, sink)?;
+        Ok(())
+    }
+
+    /// Run PushOp/CallbackTok items of `node` whose event matches
+    /// (Beg/End only; Ite ops run inline in body order).
+    fn run_events(
+        &mut self,
+        node: &LoopNode,
+        event: Event,
+        env: &mut Env,
+        sink: &mut impl DaeSink,
+    ) -> Result<()> {
+        for item in &node.body {
+            if let BodyItem::Op(idx) = item {
+                match &self.prog.lookup[*idx] {
+                    DlcOp::PushOp { event: e, .. } | DlcOp::CallbackTok { event: e, .. }
+                        if *e == event =>
+                    {
+                        self.exec_op_forced(*idx, env, sink)?;
+                    }
+                    _ => {}
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn exec_op(&mut self, idx: usize, env: &mut Env, sink: &mut impl DaeSink) -> Result<()> {
+        // Ite-event marshaling ops run inline; Beg/End are skipped here
+        // and handled by run_events.
+        match &self.prog.lookup[idx] {
+            DlcOp::PushOp { event, .. } | DlcOp::CallbackTok { event, .. }
+                if *event != Event::Ite =>
+            {
+                return Ok(());
+            }
+            _ => {}
+        }
+        self.exec_op_forced(idx, env, sink)
+    }
+
+    fn exec_op_forced(&mut self, idx: usize, env: &mut Env, sink: &mut impl DaeSink) -> Result<()> {
+        let op = &self.prog.lookup[idx];
+        match op {
+            DlcOp::LoopTr { .. } => unreachable!("loops run via exec_loop"),
+            DlcOp::MemStr { mem, vlen, hint, .. } => {
+                let t = env.tensor(mem)?;
+                let args = &self.op_args[idx];
+                // resolve leading indices as scalars; the last index may
+                // be a vectorized chunk base
+                let mut idxv: Vec<i64> = Vec::with_capacity(args.len());
+                let mut lanes = 1usize;
+                for (k, ix) in args.iter().enumerate() {
+                    let scalar = match ix {
+                        Arg::Str(sid) => {
+                            let v = self.stream_val(*sid)?;
+                            match v {
+                                Val::VI(vv) => {
+                                    if k + 1 == args.len() {
+                                        lanes = vv.len().min(*vlen as usize).max(1);
+                                    }
+                                    vv[0]
+                                }
+                                other => other.as_i()?,
+                            }
+                        }
+                        other => self.resolve_arg(other, env)?,
+                    };
+                    idxv.push(scalar);
+                }
+                if *vlen > 1 {
+                    // clamp to the last dimension (mask semantics)
+                    let last_dim = *t.dims.last().unwrap() as i64;
+                    let base = *idxv.last().unwrap();
+                    lanes = lanes.min((last_dim - base).max(0) as usize).max(1).min(*vlen as usize);
+                    // also clamp to the real lane count from the iv
+                } else {
+                    lanes = 1;
+                }
+                let flat = t.offset(&idxv)?;
+                let addr = t.addr_of(flat);
+                sink.mem_read(
+                    Unit::Access,
+                    addr,
+                    (lanes as u32) * t.elem_bytes as u32,
+                    *hint,
+                    self.op_prod[idx],
+                    &self.op_deps[idx],
+                );
+                let val = match (&t.buf, lanes) {
+                    (Buf::F32(d), 1) => Val::F(d[flat]),
+                    (Buf::I32(d), 1) => Val::I(d[flat] as i64),
+                    (Buf::F32(d), n) => Val::VF(d[flat..flat + n].to_vec()),
+                    (Buf::I32(d), n) => {
+                        Val::VI(d[flat..flat + n].iter().map(|&x| x as i64).collect())
+                    }
+                };
+                self.streams[self.op_prod[idx] as usize] = Some(val);
+            }
+            DlcOp::AluStr { op, .. } => {
+                sink.alu_step(self.op_prod[idx], &self.op_deps[idx]);
+                let args = &self.op_args[idx];
+                let a = self.resolve_arg(&args[0], env)?;
+                let b = self.resolve_arg(&args[1], env)?;
+                self.streams[self.op_prod[idx] as usize] = Some(Val::I(op.eval_i(a, b)));
+            }
+            DlcOp::BufStr { .. } => {
+                self.buffers[self.op_prod[idx] as usize].clear();
+            }
+            DlcOp::BufPush { .. } => {
+                let src = self.op_deps[idx][0];
+                let chunk = match self.stream_val(src)? {
+                    Val::VF(v) => v.clone(),
+                    Val::F(f) => vec![*f],
+                    other => {
+                        return Err(EmberError::Interp(format!(
+                            "cannot buffer non-f32 value {other:?}"
+                        )))
+                    }
+                };
+                self.buffers[self.op_prod[idx] as usize].push(chunk);
+                sink.buf_push(self.op_prod[idx], src);
+            }
+            DlcOp::PushOp { src, .. } => {
+                let sid = self.op_prod[idx] as usize;
+                let v = match src {
+                    PushSrc::Stream(_) | PushSrc::Address(_) => {
+                        self.stream_val(sid as u32)?.clone()
+                    }
+                    PushSrc::Buffer(_) => Val::Buffer(self.buffers[sid].clone()),
+                };
+                sink.queue_data(v.bytes(), self.op_prod[idx]);
+                self.data_q.push_back(v);
+            }
+            DlcOp::CallbackTok { token, .. } => {
+                let tid = *self.token_ids.get(&token.0).ok_or_else(|| {
+                    EmberError::Interp(format!("no handler for token `{}`", token.0))
+                })?;
+                sink.queue_ctrl(tid);
+                sink.exec_dispatch(tid);
+                self.token_counts_v[tid as usize] += 1;
+                // `prog` outlives &mut self — no handler clone needed
+                let prog: &'p DlcProgram = self.prog;
+                let handler = &prog.compute[tid as usize];
+                for stmt in &handler.body {
+                    self.exec_cstmt(stmt, env, sink)?;
+                }
+            }
+            DlcOp::StoreStr { mem, hint, .. } => {
+                let v = self.stream_val(self.op_prod[idx])?.clone();
+                let args = &self.op_args[idx];
+                let mut idxv = Vec::with_capacity(args.len());
+                for ix in args {
+                    let scalar = match ix {
+                        Arg::Str(sid) => match self.stream_val(*sid)? {
+                            Val::VI(vv) => vv[0],
+                            other => other.as_i()?,
+                        },
+                        other => self.resolve_arg(other, env)?,
+                    };
+                    idxv.push(scalar);
+                }
+                let t = env.tensor_mut(mem)?;
+                let flat = t.offset(&idxv)?;
+                let vals: Vec<f32> = match &v {
+                    Val::VF(v) => v.clone(),
+                    Val::F(f) => vec![*f],
+                    other => {
+                        return Err(EmberError::Interp(format!("store_str of {other:?}")))
+                    }
+                };
+                let last_dim = *t.dims.last().unwrap();
+                let base = *idxv.last().unwrap() as usize;
+                let n = vals.len().min(last_dim - base);
+                let addr = t.addr_of(flat);
+                for (k, x) in vals.iter().take(n).enumerate() {
+                    t.buf.set_f(flat + k, *x);
+                }
+                let _ = hint;
+                sink.mem_write(Unit::Access, addr, (n as u32) * 4, &self.op_deps[idx]);
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------ execute-unit side
+
+    fn exec_cstmt(&mut self, s: &CStmt, env: &mut Env, sink: &mut impl DaeSink) -> Result<()> {
+        match s {
+            CStmt::Let { var, value, .. } => {
+                let v = self.eval(value, env, sink)?;
+                self.core.insert(var.clone(), v);
+            }
+            CStmt::Store { mem, indices, value } => {
+                let v = self.eval(value, env, sink)?.as_f()?;
+                let idxv = self.eval_indices(indices, env, sink)?;
+                let t = env.tensor_mut(mem)?;
+                let flat = t.offset(&idxv)?;
+                let addr = t.addr_of(flat);
+                t.buf.set_f(flat, v);
+                sink.mem_write(Unit::Execute, addr, 4, &[]);
+            }
+            CStmt::VStore { mem, indices, value, vlen } => {
+                let v = self.eval(value, env, sink)?;
+                let vals: Vec<f32> = match v {
+                    Val::VF(v) => v,
+                    Val::F(f) => vec![f; *vlen as usize],
+                    other => {
+                        return Err(EmberError::Interp(format!("vstore of {other:?}")))
+                    }
+                };
+                let idxv = self.eval_indices(indices, env, sink)?;
+                let t = env.tensor_mut(mem)?;
+                let flat = t.offset(&idxv)?;
+                let last_dim = *t.dims.last().unwrap();
+                let base = *idxv.last().unwrap() as usize;
+                let n = vals.len().min(*vlen as usize).min(last_dim - base);
+                let addr = t.addr_of(flat);
+                for k in 0..n {
+                    t.buf.set_f(flat + k, vals[k]);
+                }
+                sink.mem_write(Unit::Execute, addr, (n as u32) * 4, &[]);
+            }
+            CStmt::For { var, lb, ub, step, body } => {
+                let lo = self.eval(lb, env, sink)?.as_i()?;
+                let hi = self.eval(ub, env, sink)?.as_i()?;
+                let mut i = lo;
+                while i < hi {
+                    sink.exec_step();
+                    self.core.insert(var.clone(), Val::I(i));
+                    for st in body {
+                        self.exec_cstmt(st, env, sink)?;
+                    }
+                    i += *step;
+                }
+            }
+            CStmt::Inc { var, by } => {
+                let delta = self.eval(by, env, sink)?;
+                sink.exec_op(delta.lanes());
+                let cur = self.core.get(var).cloned().unwrap_or(Val::I(0));
+                let next = match (cur, delta) {
+                    (Val::I(a), Val::I(b)) => Val::I(a + b),
+                    (Val::I(a), Val::F(b)) => Val::F(a as f32 + b),
+                    (Val::F(a), d) => Val::F(a + d.as_f()?),
+                    (a, b) => {
+                        return Err(EmberError::Interp(format!("inc of {a:?} by {b:?}")))
+                    }
+                };
+                self.core.insert(var.clone(), next);
+            }
+        }
+        Ok(())
+    }
+
+    fn eval_indices(
+        &mut self,
+        indices: &[CExpr],
+        env: &mut Env,
+        sink: &mut impl DaeSink,
+    ) -> Result<Vec<i64>> {
+        let mut out = Vec::with_capacity(indices.len());
+        for i in indices {
+            out.push(self.eval(i, env, sink)?.as_i()?);
+        }
+        Ok(out)
+    }
+
+    fn eval(&mut self, e: &CExpr, env: &mut Env, sink: &mut impl DaeSink) -> Result<Val> {
+        match e {
+            CExpr::Var(v) => self
+                .core
+                .get(v)
+                .cloned()
+                .ok_or_else(|| EmberError::Interp(format!("core var `{v}` unset"))),
+            CExpr::ConstI(c) => Ok(Val::I(*c)),
+            CExpr::ConstF(c) => Ok(Val::F(*c)),
+            CExpr::Sym(s) => Ok(Val::I(env.sym(s)?)),
+            CExpr::ToVal { .. } => Err(EmberError::Interp(
+                "to_val must be lowered to pop before interpretation".into(),
+            )),
+            CExpr::Pop { vlen, lane, .. } => {
+                let v = self
+                    .data_q
+                    .pop_front()
+                    .ok_or_else(|| EmberError::Interp("pop from empty data queue".into()))?;
+                sink.pop_data(v.bytes());
+                let _ = vlen;
+                match lane {
+                    Some(l) => match &v {
+                        Val::VI(vv) => Ok(Val::I(vv[*l as usize])),
+                        Val::VF(vv) => Ok(Val::F(vv[*l as usize])),
+                        other => Ok(other.clone()),
+                    },
+                    None => Ok(v),
+                }
+            }
+            CExpr::Load { mem, indices } => {
+                let idxv = self.eval_indices(indices, env, sink)?;
+                let t = env.tensor(mem)?;
+                let flat = t.offset(&idxv)?;
+                sink.mem_read(Unit::Execute, t.addr_of(flat), 4, MemHint::default(), NO_STREAM, &[]);
+                Ok(match &t.buf {
+                    Buf::F32(d) => Val::F(d[flat]),
+                    Buf::I32(d) => Val::I(d[flat] as i64),
+                })
+            }
+            CExpr::VLoad { mem, indices, vlen } => {
+                let idxv = self.eval_indices(indices, env, sink)?;
+                let t = env.tensor(mem)?;
+                let flat = t.offset(&idxv)?;
+                let last_dim = *t.dims.last().unwrap();
+                let base = *idxv.last().unwrap() as usize;
+                let n = (*vlen as usize).min(last_dim - base);
+                sink.mem_read(
+                    Unit::Execute,
+                    t.addr_of(flat),
+                    (n as u32) * 4,
+                    MemHint::default(),
+                    NO_STREAM,
+                    &[],
+                );
+                Ok(match &t.buf {
+                    Buf::F32(d) => Val::VF(d[flat..flat + n].to_vec()),
+                    Buf::I32(d) => Val::VI(d[flat..flat + n].iter().map(|&x| x as i64).collect()),
+                })
+            }
+            CExpr::BufElem { buf, idx } => {
+                let k = self.eval(idx, env, sink)?.as_i()? as usize;
+                match self.core.get(buf) {
+                    Some(Val::Buffer(chunks)) => {
+                        Ok(Val::VF(chunks.get(k).cloned().unwrap_or_default()))
+                    }
+                    Some(other) => Err(EmberError::Interp(format!(
+                        "`{buf}` is not a buffer: {other:?}"
+                    ))),
+                    None => Err(EmberError::Interp(format!("buffer var `{buf}` unset"))),
+                }
+            }
+            CExpr::Bin { op, lhs, rhs, .. } => {
+                let a = self.eval(lhs, env, sink)?;
+                let b = self.eval(rhs, env, sink)?;
+                let lanes = a.lanes().max(b.lanes());
+                sink.exec_op(lanes);
+                bin_val(*op, a, b)
+            }
+            CExpr::Fma { a, b, c, .. } => {
+                let av = self.eval(a, env, sink)?;
+                let bv = self.eval(b, env, sink)?;
+                let cv = self.eval(c, env, sink)?;
+                let lanes = av.lanes().max(bv.lanes()).max(cv.lanes());
+                sink.exec_op(lanes);
+                bin_val(BinOp::Add, bin_val(BinOp::Mul, av, bv)?, cv)
+            }
+            CExpr::HAdd { v, .. } => {
+                let x = self.eval(v, env, sink)?;
+                sink.exec_op(x.lanes());
+                match x {
+                    Val::VF(v) => Ok(Val::F(v.iter().sum())),
+                    Val::VI(v) => Ok(Val::I(v.iter().sum())),
+                    s => Ok(s),
+                }
+            }
+        }
+    }
+}
+
+/// Elementwise binary op with scalar broadcast.
+fn bin_val(op: BinOp, a: Val, b: Val) -> Result<Val> {
+    use Val::*;
+    Ok(match (a, b) {
+        (I(x), I(y)) => I(op.eval_i(x, y)),
+        (F(x), F(y)) => F(op.eval_f(x, y)),
+        (I(x), F(y)) => F(op.eval_f(x as f32, y)),
+        (F(x), I(y)) => F(op.eval_f(x, y as f32)),
+        (VF(x), VF(y)) => {
+            let n = x.len().min(y.len());
+            VF((0..n).map(|i| op.eval_f(x[i], y[i])).collect())
+        }
+        (VF(x), F(y)) => VF(x.into_iter().map(|v| op.eval_f(v, y)).collect()),
+        (F(x), VF(y)) => VF(y.into_iter().map(|v| op.eval_f(x, v)).collect()),
+        (VF(x), I(y)) => VF(x.into_iter().map(|v| op.eval_f(v, y as f32)).collect()),
+        (I(x), VF(y)) => VF(y.into_iter().map(|v| op.eval_f(x as f32, v)).collect()),
+        (VI(x), VI(y)) => {
+            let n = x.len().min(y.len());
+            VI((0..n).map(|i| op.eval_i(x[i], y[i])).collect())
+        }
+        (VI(x), I(y)) => VI(x.into_iter().map(|v| op.eval_i(v, y)).collect()),
+        (I(x), VI(y)) => VI(y.into_iter().map(|v| op.eval_i(x, v)).collect()),
+        (a, b) => return Err(EmberError::Interp(format!("bad binop operands {a:?} {b:?}"))),
+    })
+}
+
+/// Build the loop tree from the flat op list (list order = body order).
+fn build_tree(prog: &DlcProgram) -> Result<LoopNode> {
+    // find root
+    let root_idx = prog
+        .lookup
+        .iter()
+        .position(|op| matches!(op, DlcOp::LoopTr { parent: None, .. }))
+        .ok_or_else(|| EmberError::Interp("no root loop".into()))?;
+
+    fn collect(prog: &DlcProgram, loop_idx: usize) -> LoopNode {
+        let loop_id = prog.lookup[loop_idx].id().unwrap();
+        let mut body = Vec::new();
+        for (i, op) in prog.lookup.iter().enumerate() {
+            match op {
+                DlcOp::LoopTr { parent: Some(p), .. } if p == loop_id => {
+                    body.push(BodyItem::Loop(collect(prog, i)));
+                }
+                DlcOp::LoopTr { .. } => {}
+                other => {
+                    if other.attached_to() == Some(loop_id) {
+                        body.push(BodyItem::Op(i));
+                    }
+                }
+            }
+        }
+        // order body items by their index in the flat list (loops sort
+        // by their LoopTr position)
+        body.sort_by_key(|item| match item {
+            BodyItem::Op(i) => *i,
+            BodyItem::Loop(n) => n.op_idx,
+        });
+        LoopNode { op_idx: loop_idx, body }
+    }
+
+    Ok(collect(prog, root_idx))
+}
+
+/// Convenience: compile-and-run helper returning the `out` tensor data.
+pub fn run_program(prog: &DlcProgram, env: &mut Env) -> Result<Vec<f32>> {
+    let mut interp = Interp::new(prog)?;
+    interp.run(env, &mut NullSink)?;
+    Ok(env.tensor("out")?.as_f32())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::passes::pipeline::{compile, CompileOptions, OptLevel};
+    use crate::data::Tensor;
+    use crate::frontend::embedding_ops::{OpClass, Semiring};
+    use crate::frontend::formats::{bind_mp_env, BlockGathers, Csr, FlatLookups};
+    use crate::util::rng::Rng;
+
+    fn rand_csr(rng: &mut Rng, rows: usize, cols: usize, max_deg: usize) -> Csr {
+        let r: Vec<Vec<i32>> = (0..rows)
+            .map(|_| {
+                let d = rng.below(max_deg as u64 + 1) as usize;
+                (0..d).map(|_| rng.below(cols as u64) as i32).collect()
+            })
+            .collect();
+        Csr::from_rows(cols, &r)
+    }
+
+    /// Dense SLS reference.
+    fn sls_ref(csr: &Csr, table: &Tensor, weighted: bool) -> Vec<f32> {
+        let emb = table.dims[1];
+        let mut out = vec![0f32; csr.num_rows * emb];
+        for b in 0..csr.num_rows {
+            for p in csr.ptrs[b] as usize..csr.ptrs[b + 1] as usize {
+                let i = csr.idxs[p] as usize;
+                let w = if weighted {
+                    if csr.vals.is_empty() { 1.0 } else { csr.vals[p] }
+                } else {
+                    1.0
+                };
+                for e in 0..emb {
+                    out[b * emb + e] += w * table.buf.get_f(i * emb + e);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn sls_matches_reference_at_every_opt_level() {
+        let mut rng = Rng::new(11);
+        let table = Tensor::f32(vec![64, 12], rng.normal_vec(64 * 12, 1.0));
+        let csr = rand_csr(&mut rng, 10, 64, 7);
+        let want = sls_ref(&csr, &table, false);
+        for opt in OptLevel::ALL {
+            let prog = compile(&OpClass::Sls, CompileOptions::at(opt)).unwrap();
+            let mut env = csr.bind_sls_env(&table, false);
+            let got = run_program(&prog.dlc, &mut env).unwrap();
+            crate::util::quick::allclose(&got, &want, 1e-5, 1e-5)
+                .unwrap_or_else(|e| panic!("{opt}: {e}"));
+        }
+    }
+
+    #[test]
+    fn spmm_weighted_matches_reference() {
+        let mut rng = Rng::new(5);
+        let table = Tensor::f32(vec![32, 10], rng.normal_vec(320, 1.0));
+        let mut csr = rand_csr(&mut rng, 8, 32, 5);
+        let vals = rng.normal_vec(csr.nnz(), 1.0);
+        csr = csr.with_vals(vals);
+        let want = sls_ref(&csr, &table, true);
+        for opt in OptLevel::ALL {
+            let prog = compile(&OpClass::Spmm, CompileOptions::at(opt)).unwrap();
+            let mut env = csr.bind_sls_env(&table, true);
+            let got = run_program(&prog.dlc, &mut env).unwrap();
+            crate::util::quick::allclose(&got, &want, 1e-4, 1e-4)
+                .unwrap_or_else(|e| panic!("{opt}: {e}"));
+        }
+    }
+
+    #[test]
+    fn mp_matches_reference() {
+        let mut rng = Rng::new(7);
+        let n = 12usize;
+        let emb = 9usize;
+        let feats = Tensor::f32(vec![n, emb], rng.normal_vec(n * emb, 1.0));
+        let csr = rand_csr(&mut rng, n, n, 4);
+        // reference: out[i] += (h[i]·h[j]) * h[j]
+        let mut want = vec![0f32; n * emb];
+        for i in 0..n {
+            for p in csr.ptrs[i] as usize..csr.ptrs[i + 1] as usize {
+                let j = csr.idxs[p] as usize;
+                let s: f32 = (0..emb)
+                    .map(|e| feats.buf.get_f(i * emb + e) * feats.buf.get_f(j * emb + e))
+                    .sum();
+                for e in 0..emb {
+                    want[i * emb + e] += s * feats.buf.get_f(j * emb + e);
+                }
+            }
+        }
+        for opt in OptLevel::ALL {
+            let prog = compile(&OpClass::Mp, CompileOptions::at(opt)).unwrap();
+            let mut env = bind_mp_env(&csr, &feats);
+            let got = run_program(&prog.dlc, &mut env).unwrap();
+            crate::util::quick::allclose(&got, &want, 1e-3, 1e-3)
+                .unwrap_or_else(|e| panic!("{opt}: {e}"));
+        }
+    }
+
+    #[test]
+    fn kg_semirings_match() {
+        let mut rng = Rng::new(9);
+        let table = Tensor::f32(vec![40, 8], rng.normal_vec(320, 1.0));
+        let idxs: Vec<i32> = (0..15).map(|_| rng.below(40) as i32).collect();
+        let fl = FlatLookups { idxs: idxs.clone(), num_rows: 40 };
+        for (sem, f) in [
+            (Semiring::PlusTimes, None),
+            (Semiring::MaxPlus, Some(0.0f32)),
+        ] {
+            let mut want = vec![0f32; idxs.len() * 8];
+            for (q, &i) in idxs.iter().enumerate() {
+                for e in 0..8 {
+                    let v = table.buf.get_f(i as usize * 8 + e);
+                    want[q * 8 + e] = match f {
+                        None => v,
+                        Some(z) => v.max(z),
+                    };
+                }
+            }
+            for opt in OptLevel::ALL {
+                let prog = compile(&OpClass::Kg(sem), CompileOptions::at(opt)).unwrap();
+                let mut env = fl.bind_kg_env(&table);
+                let got = run_program(&prog.dlc, &mut env).unwrap();
+                crate::util::quick::allclose(&got, &want, 1e-6, 1e-6)
+                    .unwrap_or_else(|e| panic!("{sem:?} {opt}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn spattn_matches_reference_including_store_streams() {
+        let mut rng = Rng::new(13);
+        let block = 4usize;
+        let nblocks = 16usize;
+        let emb = 10usize;
+        let keys = Tensor::f32(vec![nblocks * block, emb], rng.normal_vec(nblocks * block * emb, 1.0));
+        let bidx: Vec<i32> = (0..9).map(|_| rng.below(nblocks as u64) as i32).collect();
+        let bg = BlockGathers { block_idxs: bidx.clone(), block, num_key_blocks: nblocks };
+        let mut want = vec![0f32; bidx.len() * block * emb];
+        for (g, &bi) in bidx.iter().enumerate() {
+            for r in 0..block {
+                for e in 0..emb {
+                    want[(g * block + r) * emb + e] =
+                        keys.buf.get_f((bi as usize * block + r) * emb + e);
+                }
+            }
+        }
+        for opt in OptLevel::ALL {
+            let prog =
+                compile(&OpClass::SpAttn { block }, CompileOptions::at(opt)).unwrap();
+            let mut env = bg.bind_spattn_env(&keys);
+            let got = run_program(&prog.dlc, &mut env).unwrap();
+            crate::util::quick::allclose(&got, &want, 1e-6, 1e-6)
+                .unwrap_or_else(|e| panic!("{opt}: {e}"));
+        }
+    }
+}

@@ -1,0 +1,279 @@
+//! Compute statements — the imperative code that runs on the execute
+//! unit. Shared between SLC callbacks (where stream values are read with
+//! `to_val`) and DLC compute code (where they arrive as queue `pop`s).
+
+use super::types::{BinOp, Scalar};
+
+use std::fmt;
+
+/// Expressions evaluated on the execute unit. `vlen` on ops > 1 means the
+/// operation is vectorized with that vector length.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CExpr {
+    /// Scalar variable reference.
+    Var(String),
+    ConstI(i64),
+    ConstF(f32),
+    /// Symbolic dimension (bound from the Env at execution).
+    Sym(String),
+    /// SLC only: stream-to-value conversion (`slc.to_val(s)`), resolved
+    /// to a `Pop` when lowering to DLC. `lane` selects one lane of a
+    /// vectorized stream (`slcv.to_val(s)[0]`).
+    ToVal { stream: String, lane: Option<u32> },
+    /// DLC only: pop a value from the data queue. `lane` extracts one
+    /// lane of a vectorized payload (pre-queue-alignment coordinate
+    /// reads, Fig. 15b).
+    Pop { ty: Scalar, vlen: u32, lane: Option<u32> },
+    /// Load from a memref with index expressions (scalar load).
+    Load { mem: String, indices: Vec<CExpr> },
+    /// Vector load of `vlen` contiguous elements starting at the index.
+    VLoad { mem: String, indices: Vec<CExpr>, vlen: u32 },
+    /// Read one vector element out of a marshaled buffer variable.
+    BufElem { buf: String, idx: Box<CExpr> },
+    Bin { op: BinOp, lhs: Box<CExpr>, rhs: Box<CExpr>, vlen: u32 },
+    /// Fused multiply-add a*b + c (the paper's `fma`/`v_fma`).
+    Fma { a: Box<CExpr>, b: Box<CExpr>, c: Box<CExpr>, vlen: u32 },
+    /// Horizontal add: reduce the lanes of a vector to a scalar
+    /// (vectorized reductions, e.g. the MP dot product).
+    HAdd { v: Box<CExpr>, vlen: u32 },
+}
+
+impl CExpr {
+    pub fn var(n: &str) -> Self {
+        CExpr::Var(n.to_string())
+    }
+    pub fn to_val(s: &str) -> Self {
+        CExpr::ToVal { stream: s.to_string(), lane: None }
+    }
+    pub fn add(lhs: CExpr, rhs: CExpr) -> Self {
+        CExpr::Bin { op: BinOp::Add, lhs: Box::new(lhs), rhs: Box::new(rhs), vlen: 1 }
+    }
+    pub fn mul(lhs: CExpr, rhs: CExpr) -> Self {
+        CExpr::Bin { op: BinOp::Mul, lhs: Box::new(lhs), rhs: Box::new(rhs), vlen: 1 }
+    }
+    pub fn load(mem: &str, indices: Vec<CExpr>) -> Self {
+        CExpr::Load { mem: mem.to_string(), indices }
+    }
+
+    /// Recursively visit all sub-expressions (self included).
+    pub fn walk(&self, f: &mut impl FnMut(&CExpr)) {
+        f(self);
+        match self {
+            CExpr::Load { indices, .. } | CExpr::VLoad { indices, .. } => {
+                for i in indices {
+                    i.walk(f);
+                }
+            }
+            CExpr::BufElem { idx, .. } => idx.walk(f),
+            CExpr::Bin { lhs, rhs, .. } => {
+                lhs.walk(f);
+                rhs.walk(f);
+            }
+            CExpr::Fma { a, b, c, .. } => {
+                a.walk(f);
+                b.walk(f);
+                c.walk(f);
+            }
+            CExpr::HAdd { v, .. } => v.walk(f),
+            _ => {}
+        }
+    }
+
+    /// Rewrite the tree bottom-up with `f`.
+    pub fn rewrite(self, f: &impl Fn(CExpr) -> CExpr) -> CExpr {
+        let node = match self {
+            CExpr::Load { mem, indices } => CExpr::Load {
+                mem,
+                indices: indices.into_iter().map(|i| i.rewrite(f)).collect(),
+            },
+            CExpr::VLoad { mem, indices, vlen } => CExpr::VLoad {
+                mem,
+                indices: indices.into_iter().map(|i| i.rewrite(f)).collect(),
+                vlen,
+            },
+            CExpr::BufElem { buf, idx } => {
+                CExpr::BufElem { buf, idx: Box::new(idx.rewrite(f)) }
+            }
+            CExpr::Bin { op, lhs, rhs, vlen } => CExpr::Bin {
+                op,
+                lhs: Box::new(lhs.rewrite(f)),
+                rhs: Box::new(rhs.rewrite(f)),
+                vlen,
+            },
+            CExpr::Fma { a, b, c, vlen } => CExpr::Fma {
+                a: Box::new(a.rewrite(f)),
+                b: Box::new(b.rewrite(f)),
+                c: Box::new(c.rewrite(f)),
+                vlen,
+            },
+            CExpr::HAdd { v, vlen } => {
+                CExpr::HAdd { v: Box::new(v.rewrite(f)), vlen }
+            }
+            other => other,
+        };
+        f(node)
+    }
+}
+
+/// Statements executed on the execute unit.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CStmt {
+    /// `let var = expr` (vlen > 1 means the variable is a vector).
+    Let { var: String, value: CExpr, vlen: u32 },
+    /// Scalar store `mem[indices] = value`.
+    Store { mem: String, indices: Vec<CExpr>, value: CExpr },
+    /// Vector store of `vlen` contiguous elements.
+    VStore { mem: String, indices: Vec<CExpr>, value: CExpr, vlen: u32 },
+    /// Core-side counted loop (used by bufferized compute code).
+    For { var: String, lb: CExpr, ub: CExpr, step: i64, body: Vec<CStmt> },
+    /// `var += by` — queue-alignment counter bumps.
+    Inc { var: String, by: CExpr },
+}
+
+impl CStmt {
+    /// Visit every expression in this statement tree.
+    pub fn walk_exprs(&self, f: &mut impl FnMut(&CExpr)) {
+        match self {
+            CStmt::Let { value, .. } => value.walk(f),
+            CStmt::Store { indices, value, .. } | CStmt::VStore { indices, value, .. } => {
+                for i in indices {
+                    i.walk(f);
+                }
+                value.walk(f);
+            }
+            CStmt::For { lb, ub, body, .. } => {
+                lb.walk(f);
+                ub.walk(f);
+                for s in body {
+                    s.walk_exprs(f);
+                }
+            }
+            CStmt::Inc { by, .. } => by.walk(f),
+        }
+    }
+
+    /// Rewrite every expression in this statement tree bottom-up.
+    pub fn rewrite_exprs(self, f: &impl Fn(CExpr) -> CExpr) -> CStmt {
+        match self {
+            CStmt::Let { var, value, vlen } => {
+                CStmt::Let { var, value: value.rewrite(f), vlen }
+            }
+            CStmt::Store { mem, indices, value } => CStmt::Store {
+                mem,
+                indices: indices.into_iter().map(|i| i.rewrite(f)).collect(),
+                value: value.rewrite(f),
+            },
+            CStmt::VStore { mem, indices, value, vlen } => CStmt::VStore {
+                mem,
+                indices: indices.into_iter().map(|i| i.rewrite(f)).collect(),
+                value: value.rewrite(f),
+                vlen,
+            },
+            CStmt::For { var, lb, ub, step, body } => CStmt::For {
+                var,
+                lb: lb.rewrite(f),
+                ub: ub.rewrite(f),
+                step,
+                body: body.into_iter().map(|s| s.rewrite_exprs(f)).collect(),
+            },
+            CStmt::Inc { var, by } => CStmt::Inc { var, by: by.rewrite(f) },
+        }
+    }
+}
+
+fn fmt_indices(f: &mut fmt::Formatter<'_>, indices: &[CExpr]) -> fmt::Result {
+    write!(f, "[")?;
+    for (i, e) in indices.iter().enumerate() {
+        if i > 0 {
+            write!(f, ",")?;
+        }
+        write!(f, "{e}")?;
+    }
+    write!(f, "]")
+}
+
+impl fmt::Display for CExpr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CExpr::Var(v) => write!(f, "{v}"),
+            CExpr::Sym(s) => write!(f, "${s}"),
+            CExpr::ConstI(c) => write!(f, "{c}"),
+            CExpr::ConstF(c) => write!(f, "{c:?}"),
+            CExpr::ToVal { stream, lane: None } => write!(f, "to_val({stream})"),
+            CExpr::ToVal { stream, lane: Some(l) } => write!(f, "to_val({stream})[{l}]"),
+            CExpr::Pop { ty, vlen, lane: None } => write!(f, "dataQ.pop<{vlen} x {ty}>()"),
+            CExpr::Pop { ty, vlen, lane: Some(l) } => {
+                write!(f, "dataQ.pop<{vlen} x {ty}>()[{l}]")
+            }
+            CExpr::Load { mem, indices } => {
+                write!(f, "{mem}")?;
+                fmt_indices(f, indices)
+            }
+            CExpr::VLoad { mem, indices, vlen } => {
+                write!(f, "vload<{vlen}>({mem}")?;
+                fmt_indices(f, indices)?;
+                write!(f, ")")
+            }
+            CExpr::BufElem { buf, idx } => write!(f, "{buf}[{idx}]"),
+            CExpr::Bin { op, lhs, rhs, vlen } => {
+                if *vlen > 1 {
+                    write!(f, "v{vlen}({lhs} {op} {rhs})")
+                } else {
+                    write!(f, "({lhs} {op} {rhs})")
+                }
+            }
+            CExpr::Fma { a, b, c, vlen } => {
+                if *vlen > 1 {
+                    write!(f, "v_fma<{vlen}>({a},{b},{c})")
+                } else {
+                    write!(f, "fma({a},{b},{c})")
+                }
+            }
+            CExpr::HAdd { v, vlen } => write!(f, "hadd<{vlen}>({v})"),
+        }
+    }
+}
+
+fn indent(f: &mut fmt::Formatter<'_>, depth: usize) -> fmt::Result {
+    write!(f, "{}", "  ".repeat(depth))
+}
+
+impl CStmt {
+    pub fn fmt_depth(&self, f: &mut fmt::Formatter<'_>, depth: usize) -> fmt::Result {
+        indent(f, depth)?;
+        match self {
+            CStmt::Let { var, value, vlen } => {
+                if *vlen > 1 {
+                    writeln!(f, "vec<{vlen}> {var} = {value};")
+                } else {
+                    writeln!(f, "{var} = {value};")
+                }
+            }
+            CStmt::Store { mem, indices, value } => {
+                write!(f, "{mem}")?;
+                fmt_indices(f, indices)?;
+                writeln!(f, " = {value};")
+            }
+            CStmt::VStore { mem, indices, value, vlen } => {
+                write!(f, "vstore<{vlen}>({mem}")?;
+                fmt_indices(f, indices)?;
+                writeln!(f, ", {value});")
+            }
+            CStmt::For { var, lb, ub, step, body } => {
+                writeln!(f, "for({var} = {lb}; {var} < {ub}; {var} += {step}) {{")?;
+                for s in body {
+                    s.fmt_depth(f, depth + 1)?;
+                }
+                indent(f, depth)?;
+                writeln!(f, "}}")
+            }
+            CStmt::Inc { var, by } => writeln!(f, "{var} += {by};"),
+        }
+    }
+}
+
+impl fmt::Display for CStmt {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.fmt_depth(f, 0)
+    }
+}

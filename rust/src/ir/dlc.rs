@@ -1,0 +1,272 @@
+//! DLC — Decoupled Lookup-Compute IR (paper §4, Fig. 10c-e).
+//!
+//! The low-level DAE abstraction: lookup code is streaming dataflow for
+//! the access unit; compute code is an imperative token-dispatch loop for
+//! the execute unit; the two communicate only through the control queue
+//! (tokens) and the data queue (operands).
+
+use super::compute::CStmt;
+use super::types::{BinOp, Event, MemHint, MemRef, Scalar, Token};
+
+use std::fmt;
+
+/// Value operand on the lookup side: immediate, symbolic dim, or the
+/// output stream of another operator (`loop_tr.0`, a `mem_str`, ...).
+#[derive(Debug, Clone, PartialEq)]
+pub enum DlcVal {
+    Imm(i64),
+    Sym(String),
+    Str(String),
+}
+
+impl fmt::Display for DlcVal {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DlcVal::Imm(i) => write!(f, "{i}"),
+            DlcVal::Sym(s) => write!(f, "${s}"),
+            DlcVal::Str(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+/// What a `push_op` marshals into the data queue.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PushSrc {
+    /// The value stream `s_id` (one element, or a vector if the stream
+    /// is vectorized).
+    Stream(String),
+    /// A whole marshaled buffer (bufferization §7.2): all elements
+    /// accumulated since the last flush.
+    Buffer(String),
+    /// A precomputed *address* (queue alignment for complex models §7.3:
+    /// the access unit performs full index calculation and sends output
+    /// addresses, relieving core ALUs).
+    Address(String),
+}
+
+impl fmt::Display for PushSrc {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PushSrc::Stream(s) => write!(f, "{s}"),
+            PushSrc::Buffer(b) => write!(f, "buf:{b}"),
+            PushSrc::Address(a) => write!(f, "addr:{a}"),
+        }
+    }
+}
+
+/// Lookup-side dataflow operators. `tu` fields name the traversal unit
+/// (loop) the op is attached to; list order within a (tu, event) pair is
+/// the marshaling order.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DlcOp {
+    /// `loop_tr(lb, ub, stride)` — traversal operator. `loop_tr.0` (the
+    /// induction stream) is named by `id`. `parent` is the enclosing
+    /// traversal (None for the root).
+    LoopTr {
+        id: String,
+        lb: DlcVal,
+        ub: DlcVal,
+        stride: i64,
+        vlen: u32,
+        parent: Option<String>,
+    },
+    /// `mem_str(base, idx...)` — loads `base[idx...]` into stream `id`,
+    /// evaluated at each iteration of loop `at`.
+    MemStr {
+        id: String,
+        at: String,
+        mem: String,
+        indices: Vec<DlcVal>,
+        elem: Scalar,
+        vlen: u32,
+        masked: bool,
+        hint: MemHint,
+    },
+    /// `alu_str(op, op1, op2)` — integer stream ALU.
+    AluStr { id: String, at: String, op: BinOp, lhs: DlcVal, rhs: DlcVal },
+    /// Marshaling buffer accumulating vector elements (§7.2).
+    BufStr { id: String, at: String, vlen: u32 },
+    /// Append stream `src` into buffer `buf` each iteration of `at`.
+    BufPush { buf: String, src: String, at: String },
+    /// `push_op(src, tu, event)` — marshal into the **data queue**.
+    PushOp { src: PushSrc, tu: String, event: Event, elem: Scalar, vlen: u32 },
+    /// `callback(tu, event)` — marshal `token` into the **control queue**.
+    CallbackTok { token: Token, tu: String, event: Event },
+    /// Store stream (§7.4): write stream `src` to `mem[indices]` without
+    /// involving the execute unit.
+    StoreStr {
+        src: String,
+        at: String,
+        mem: String,
+        indices: Vec<DlcVal>,
+        vlen: u32,
+        hint: MemHint,
+    },
+}
+
+impl DlcOp {
+    pub fn id(&self) -> Option<&str> {
+        match self {
+            DlcOp::LoopTr { id, .. }
+            | DlcOp::MemStr { id, .. }
+            | DlcOp::AluStr { id, .. }
+            | DlcOp::BufStr { id, .. } => Some(id),
+            _ => None,
+        }
+    }
+
+    /// The traversal unit this op is evaluated under (None for root loop).
+    pub fn attached_to(&self) -> Option<&str> {
+        match self {
+            DlcOp::LoopTr { parent, .. } => parent.as_deref(),
+            DlcOp::MemStr { at, .. }
+            | DlcOp::AluStr { at, .. }
+            | DlcOp::BufStr { at, .. }
+            | DlcOp::BufPush { at, .. }
+            | DlcOp::StoreStr { at, .. } => Some(at),
+            DlcOp::PushOp { tu, .. } | DlcOp::CallbackTok { tu, .. } => Some(tu),
+        }
+    }
+}
+
+/// One arm of the compute-side token dispatch: `if (tkn == token) { body }`.
+/// Order in `DlcProgram::compute` is dispatch order (hand-optimized code
+/// reorders by taken frequency — §8.3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TokenHandler {
+    pub token: Token,
+    pub body: Vec<CStmt>,
+}
+
+/// A complete DLC program: the decoupled form of one embedding operation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DlcProgram {
+    pub name: String,
+    pub args: Vec<MemRef>,
+    /// Lookup (access-unit) dataflow, in marshaling order.
+    pub lookup: Vec<DlcOp>,
+    /// Compute (execute-unit) token handlers.
+    pub compute: Vec<TokenHandler>,
+    /// Core-side variables initialized before the while loop
+    /// (queue-aligned counters, output pointers): (name, init).
+    pub core_vars: Vec<(String, i64)>,
+}
+
+impl DlcProgram {
+    /// Loops in nest order (outermost first). Assumes the single-chain
+    /// property of embedding operations (§6.2).
+    pub fn loop_chain(&self) -> Vec<&DlcOp> {
+        let mut chain = Vec::new();
+        let mut parent: Option<String> = None;
+        loop {
+            let next = self.lookup.iter().find(|op| {
+                matches!(op, DlcOp::LoopTr { parent: p, .. } if *p == parent)
+            });
+            match next {
+                Some(op) => {
+                    parent = op.id().map(|s| s.to_string());
+                    chain.push(op);
+                }
+                None => break,
+            }
+        }
+        chain
+    }
+
+    pub fn handler(&self, token: &str) -> Option<&TokenHandler> {
+        self.compute.iter().find(|h| h.token.0 == token)
+    }
+
+    /// Ops attached to traversal unit `tu` with the given event, in order.
+    pub fn ops_at(&self, tu: &str, event: Event) -> Vec<&DlcOp> {
+        self.lookup
+            .iter()
+            .filter(|op| match op {
+                DlcOp::PushOp { tu: t, event: e, .. }
+                | DlcOp::CallbackTok { tu: t, event: e, .. } => t == tu && *e == event,
+                _ => false,
+            })
+            .collect()
+    }
+}
+
+impl fmt::Display for DlcProgram {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "// DLC program: {}", self.name)?;
+        writeln!(f, "// ---- lookup (access unit) ----")?;
+        for op in &self.lookup {
+            match op {
+                DlcOp::LoopTr { id, lb, ub, stride, vlen, parent } => {
+                    let p = parent.as_deref().unwrap_or("root");
+                    if *vlen > 1 {
+                        writeln!(f, "{id} = loop_tr<{vlen}>({lb}, {ub}, {stride}) in {p}")?;
+                    } else {
+                        writeln!(f, "{id} = loop_tr({lb}, {ub}, {stride}) in {p}")?;
+                    }
+                }
+                DlcOp::MemStr { id, at, mem, indices, vlen, masked, hint, .. } => {
+                    write!(f, "{id} = mem_str({mem}, [")?;
+                    for (i, v) in indices.iter().enumerate() {
+                        if i > 0 {
+                            write!(f, ",")?;
+                        }
+                        write!(f, "{v}")?;
+                    }
+                    write!(f, "]) at {at}")?;
+                    if *vlen > 1 {
+                        write!(f, " vlen={vlen}")?;
+                    }
+                    if *masked {
+                        write!(f, " masked")?;
+                    }
+                    if *hint != MemHint::default() {
+                        write!(f, " hint={hint}")?;
+                    }
+                    writeln!(f)?;
+                }
+                DlcOp::AluStr { id, at, op, lhs, rhs } => {
+                    writeln!(f, "{id} = alu_str({op}, {lhs}, {rhs}) at {at}")?;
+                }
+                DlcOp::BufStr { id, at, vlen } => {
+                    writeln!(f, "{id} = buf_str<{vlen}>() at {at}")?;
+                }
+                DlcOp::BufPush { buf, src, at } => {
+                    writeln!(f, "buf_push({buf}, {src}) at {at}")?;
+                }
+                DlcOp::PushOp { src, tu, event, vlen, .. } => {
+                    if *vlen > 1 {
+                        writeln!(f, "push_op<{vlen}>({src}, {tu}, {event})")?;
+                    } else {
+                        writeln!(f, "push_op({src}, {tu}, {event})")?;
+                    }
+                }
+                DlcOp::CallbackTok { token, tu, event } => {
+                    writeln!(f, "callback({tu}, {event}) -> tok {token}")?;
+                }
+                DlcOp::StoreStr { src, at, mem, indices, vlen, hint } => {
+                    write!(f, "store_str({mem}, [")?;
+                    for (i, v) in indices.iter().enumerate() {
+                        if i > 0 {
+                            write!(f, ",")?;
+                        }
+                        write!(f, "{v}")?;
+                    }
+                    writeln!(f, "], {src}) at {at} vlen={vlen} hint={hint}")?;
+                }
+            }
+        }
+        writeln!(f, "// ---- compute (execute unit) ----")?;
+        for (v, init) in &self.core_vars {
+            writeln!(f, "{v} = {init}")?;
+        }
+        writeln!(f, "while((tkn = ctrlQ.pop()) != done) {{")?;
+        for h in &self.compute {
+            writeln!(f, "  if (tkn == {}) {{", h.token)?;
+            for s in &h.body {
+                s.fmt_depth(f, 2)?;
+            }
+            writeln!(f, "  }}")?;
+        }
+        writeln!(f, "}}")
+    }
+}

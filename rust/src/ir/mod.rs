@@ -1,0 +1,24 @@
+//! Ember's intermediate representations.
+//!
+//! The lowering pipeline (paper Fig. 11):
+//!
+//! ```text
+//! frontend (EmbeddingBag / tensor-algebra signatures)
+//!    └─> SCF   (scf.rs)    structured imperative loops
+//!    └─> SLC   (slc.rs)    structured lookup-compute — global opts here
+//!    └─> DLC   (dlc.rs)    decoupled dataflow + token-dispatch compute
+//!    └─> DAE targets: functional interpreter, cycle simulator
+//! ```
+
+pub mod compute;
+pub mod dlc;
+pub mod scf;
+pub mod slc;
+pub mod types;
+pub mod verify;
+
+pub use compute::{CExpr, CStmt};
+pub use dlc::{DlcOp, DlcProgram, DlcVal, PushSrc, TokenHandler};
+pub use scf::{Expr, ScfFunc, ScfStmt};
+pub use slc::{SlcBound, SlcCallback, SlcFor, SlcFunc, SlcIdx, SlcOp};
+pub use types::{BinOp, Event, MemHint, MemRef, Scalar, Token, DONE};

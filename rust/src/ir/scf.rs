@@ -1,0 +1,242 @@
+//! SCF-like structured input IR (the paper's Fig. 13a).
+//!
+//! This is what the frontend produces from embedding-op signatures — the
+//! same role torch-mlir's SCF output plays for the paper's Ember. Loops
+//! are structured operations; loads, index arithmetic, and stores are
+//! plain statements referencing named memrefs.
+
+use super::types::{BinOp, MemRef, Scalar};
+
+use std::collections::HashMap;
+use std::fmt;
+
+/// Scalar expression in SCF code.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    /// Reference to a loop induction variable or a previously-let value.
+    Var(String),
+    ConstI(i64),
+    ConstF(f32),
+    /// A symbolic dimension (e.g. `num_batches`), bound at run time.
+    Sym(String),
+    Load { mem: String, indices: Vec<Expr> },
+    Bin { op: BinOp, lhs: Box<Expr>, rhs: Box<Expr> },
+}
+
+impl Expr {
+    pub fn var(n: &str) -> Self {
+        Expr::Var(n.to_string())
+    }
+    pub fn sym(n: &str) -> Self {
+        Expr::Sym(n.to_string())
+    }
+    pub fn load(mem: &str, indices: Vec<Expr>) -> Self {
+        Expr::Load { mem: mem.to_string(), indices }
+    }
+    pub fn add(lhs: Expr, rhs: Expr) -> Self {
+        Expr::Bin { op: BinOp::Add, lhs: Box::new(lhs), rhs: Box::new(rhs) }
+    }
+    pub fn mul(lhs: Expr, rhs: Expr) -> Self {
+        Expr::Bin { op: BinOp::Mul, lhs: Box::new(lhs), rhs: Box::new(rhs) }
+    }
+
+    pub fn walk(&self, f: &mut impl FnMut(&Expr)) {
+        f(self);
+        match self {
+            Expr::Load { indices, .. } => {
+                for i in indices {
+                    i.walk(f);
+                }
+            }
+            Expr::Bin { lhs, rhs, .. } => {
+                lhs.walk(f);
+                rhs.walk(f);
+            }
+            _ => {}
+        }
+    }
+
+    /// Memrefs this expression loads from.
+    pub fn loaded_mems(&self) -> Vec<String> {
+        let mut v = Vec::new();
+        self.walk(&mut |e| {
+            if let Expr::Load { mem, .. } = e {
+                v.push(mem.clone());
+            }
+        });
+        v
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScfStmt {
+    For {
+        var: String,
+        lb: Expr,
+        ub: Expr,
+        step: i64,
+        body: Vec<ScfStmt>,
+    },
+    /// `let var: ty = value`.
+    Let { var: String, ty: Scalar, value: Expr },
+    /// `mem[indices] = value` (value may read `mem` for accumulations).
+    Store { mem: String, indices: Vec<Expr>, value: Expr },
+}
+
+impl ScfStmt {
+    pub fn for_loop(var: &str, lb: Expr, ub: Expr, body: Vec<ScfStmt>) -> Self {
+        ScfStmt::For { var: var.to_string(), lb, ub, step: 1, body }
+    }
+    pub fn let_(var: &str, ty: Scalar, value: Expr) -> Self {
+        ScfStmt::Let { var: var.to_string(), ty, value }
+    }
+    pub fn store(mem: &str, indices: Vec<Expr>, value: Expr) -> Self {
+        ScfStmt::Store { mem: mem.to_string(), indices, value }
+    }
+}
+
+/// An SCF function: the unit of compilation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScfFunc {
+    pub name: String,
+    pub args: Vec<MemRef>,
+    /// Default bindings for symbolic dims (workload generators override).
+    pub sym_defaults: HashMap<String, i64>,
+    pub body: Vec<ScfStmt>,
+}
+
+impl ScfFunc {
+    pub fn memref(&self, name: &str) -> Option<&MemRef> {
+        self.args.iter().find(|m| m.name == name)
+    }
+
+    /// All memrefs stored to anywhere in the body.
+    pub fn written_mems(&self) -> Vec<String> {
+        fn rec(stmts: &[ScfStmt], out: &mut Vec<String>) {
+            for s in stmts {
+                match s {
+                    ScfStmt::Store { mem, .. } => {
+                        if !out.contains(mem) {
+                            out.push(mem.clone());
+                        }
+                    }
+                    ScfStmt::For { body, .. } => rec(body, out),
+                    _ => {}
+                }
+            }
+        }
+        let mut out = Vec::new();
+        rec(&self.body, &mut out);
+        out
+    }
+
+    /// Sanity: every memref marked `written` is actually stored to and
+    /// vice versa.
+    pub fn check_write_flags(&self) -> Result<(), String> {
+        let written = self.written_mems();
+        for m in &self.args {
+            if m.written != written.contains(&m.name) {
+                return Err(format!(
+                    "memref {} written flag {} inconsistent with body",
+                    m.name, m.written
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Expr::Var(v) => write!(f, "{v}"),
+            Expr::ConstI(c) => write!(f, "{c}"),
+            Expr::ConstF(c) => write!(f, "{c:?}"),
+            Expr::Sym(s) => write!(f, "${s}"),
+            Expr::Load { mem, indices } => {
+                write!(f, "{mem}[")?;
+                for (i, e) in indices.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ",")?;
+                    }
+                    write!(f, "{e}")?;
+                }
+                write!(f, "]")
+            }
+            Expr::Bin { op, lhs, rhs } => write!(f, "({lhs} {op} {rhs})"),
+        }
+    }
+}
+
+fn fmt_stmt(s: &ScfStmt, f: &mut fmt::Formatter<'_>, depth: usize) -> fmt::Result {
+    let pad = "  ".repeat(depth);
+    match s {
+        ScfStmt::For { var, lb, ub, step, body } => {
+            writeln!(f, "{pad}for({var} = {lb}; {var} < {ub}; {var} += {step}) {{")?;
+            for st in body {
+                fmt_stmt(st, f, depth + 1)?;
+            }
+            writeln!(f, "{pad}}}")
+        }
+        ScfStmt::Let { var, ty, value } => writeln!(f, "{pad}{ty} {var} = {value};"),
+        ScfStmt::Store { mem, indices, value } => {
+            write!(f, "{pad}{mem}[")?;
+            for (i, e) in indices.iter().enumerate() {
+                if i > 0 {
+                    write!(f, ",")?;
+                }
+                write!(f, "{e}")?;
+            }
+            writeln!(f, "] = {value};")
+        }
+    }
+}
+
+impl fmt::Display for ScfFunc {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "void {}(", self.name)?;
+        for (i, a) in self.args.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{a}")?;
+        }
+        writeln!(f, ") {{")?;
+        for s in &self.body {
+            fmt_stmt(s, f, 1)?;
+        }
+        writeln!(f, "}}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_roundtrips_structure() {
+        let func = ScfFunc {
+            name: "sls".into(),
+            args: vec![
+                MemRef::read_only("idxs", vec![None], Scalar::Index),
+                MemRef::output("out", vec![None, None], Scalar::F32),
+            ],
+            sym_defaults: HashMap::new(),
+            body: vec![ScfStmt::for_loop(
+                "b",
+                Expr::ConstI(0),
+                Expr::sym("num_batches"),
+                vec![ScfStmt::store(
+                    "out",
+                    vec![Expr::var("b"), Expr::ConstI(0)],
+                    Expr::ConstF(1.0),
+                )],
+            )],
+        };
+        let s = func.to_string();
+        assert!(s.contains("for(b = 0; b < $num_batches; b += 1)"));
+        assert!(s.contains("out[b,0] = 1.0;"));
+        assert_eq!(func.written_mems(), vec!["out".to_string()]);
+        assert!(func.check_write_flags().is_ok());
+    }
+}

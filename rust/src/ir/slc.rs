@@ -1,0 +1,366 @@
+//! SLC — Structured Lookup-Compute IR (paper §6.1, Fig. 12/13b), plus
+//! its vectorized SLCV duals (§7.1, Fig. 15b-d).
+//!
+//! SLC preserves the structured loop nest of the input while already
+//! classifying work: loops / streams belong to the access unit, callback
+//! regions belong to the execute unit, and `to_val` conversions keep the
+//! data flow connected so global optimizations (vectorization,
+//! bufferization, queue alignment, code motion) stay possible — the
+//! paper's key argument against optimizing already-decoupled code.
+
+use super::compute::CStmt;
+use super::types::{BinOp, Event, MemHint, MemRef};
+
+use std::fmt;
+
+/// Index operand of a stream op: another stream, a core variable
+/// (queue-aligned counters), or an immediate.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SlcIdx {
+    Stream(String),
+    Var(String),
+    Imm(i64),
+    /// Symbolic dimension (e.g. `$block`).
+    Sym(String),
+}
+
+impl SlcIdx {
+    pub fn s(name: &str) -> Self {
+        SlcIdx::Stream(name.to_string())
+    }
+}
+
+/// Loop bound: immediate, symbolic dim, or a (scalar) stream produced by
+/// an outer loop level (e.g. `ptrs[s_b]`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SlcBound {
+    Imm(i64),
+    Sym(String),
+    Stream(String),
+}
+
+impl fmt::Display for SlcBound {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SlcBound::Imm(i) => write!(f, "{i}"),
+            SlcBound::Sym(s) => write!(f, "${s}"),
+            SlcBound::Stream(s) => write!(f, "{s}"),
+        }
+    }
+}
+
+/// Operations inside an SLC loop body (and at function top level).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SlcOp {
+    For(SlcFor),
+    /// `stream dst = slc.mem_str(mem[indices])`. With `vlen > 1` this is
+    /// the SLCV dual `slcv.mem_str<vlen>(..., msk)`.
+    MemStr {
+        dst: String,
+        mem: String,
+        indices: Vec<SlcIdx>,
+        vlen: u32,
+        masked: bool,
+        hint: MemHint,
+    },
+    /// `stream dst = alu_str(op, lhs, rhs)` — offloaded index arithmetic.
+    AluStr { dst: String, op: BinOp, lhs: SlcIdx, rhs: SlcIdx },
+    /// Bufferization (§7.2): `stream<vec> dst = slcv.buf_str()`.
+    BufStr { dst: String, vlen: u32 },
+    /// `slc.push(buf, src)` — append a loaded vector to a buffer stream.
+    Push { buf: String, src: String },
+    /// Model-specific (§7.4): store stream writing loaded data straight
+    /// back to memory, bypassing the execute unit entirely.
+    StoreStr { mem: String, indices: Vec<SlcIdx>, src: String, hint: MemHint },
+    /// Execute-unit code region.
+    Callback(SlcCallback),
+}
+
+/// A callback region: compute statements triggered on a traversal event
+/// of the enclosing loop (`Ite` = each iteration — the common case —
+/// `End` = after the last iteration, used by bufferization and queue
+/// alignment).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlcCallback {
+    pub event: Event,
+    pub body: Vec<CStmt>,
+}
+
+/// `slc.for` / `slcv.for<vlen>`: a loop offloaded to the access unit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlcFor {
+    /// Name of the induction stream (`s_b`, `s_ptr`, `s_e`...).
+    pub stream: String,
+    pub lb: SlcBound,
+    pub ub: SlcBound,
+    pub step: i64,
+    /// > 1 after vectorization (SLCV); induction stream then carries
+    /// vectors of indices and `mask` handles the loop tail.
+    pub vlen: u32,
+    /// Mask stream name when vectorized.
+    pub mask: Option<String>,
+    /// Queue alignment (§7.3): a core-side variable mirroring this
+    /// loop's trip position, incremented by the child loop's `End`
+    /// callback instead of being marshaled per iteration.
+    pub core_var: Option<String>,
+    pub body: Vec<SlcOp>,
+}
+
+impl SlcFor {
+    pub fn new(stream: &str, lb: SlcBound, ub: SlcBound) -> Self {
+        SlcFor {
+            stream: stream.to_string(),
+            lb,
+            ub,
+            step: 1,
+            vlen: 1,
+            mask: None,
+            core_var: None,
+            body: Vec::new(),
+        }
+    }
+
+    /// Innermost loop of this nest (following the single offloaded-loop
+    /// chain, §6.2).
+    pub fn innermost(&self) -> &SlcFor {
+        for op in &self.body {
+            if let SlcOp::For(f) = op {
+                return f.innermost();
+            }
+        }
+        self
+    }
+
+    pub fn innermost_mut(&mut self) -> &mut SlcFor {
+        let has_child = self.body.iter().any(|op| matches!(op, SlcOp::For(_)));
+        if !has_child {
+            return self;
+        }
+        for op in &mut self.body {
+            if let SlcOp::For(f) = op {
+                return f.innermost_mut();
+            }
+        }
+        unreachable!()
+    }
+
+    /// Depth of the offloaded loop nest rooted here.
+    pub fn depth(&self) -> usize {
+        1 + self
+            .body
+            .iter()
+            .filter_map(|op| match op {
+                SlcOp::For(f) => Some(f.depth()),
+                _ => None,
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// All callbacks in this loop (not descendants).
+    pub fn callbacks(&self) -> impl Iterator<Item = &SlcCallback> {
+        self.body.iter().filter_map(|op| match op {
+            SlcOp::Callback(cb) => Some(cb),
+            _ => None,
+        })
+    }
+}
+
+/// An SLC function.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlcFunc {
+    pub name: String,
+    pub args: Vec<MemRef>,
+    /// Top-level ops — normally a single root `SlcOp::For`.
+    pub body: Vec<SlcOp>,
+}
+
+impl SlcFunc {
+    pub fn memref(&self, name: &str) -> Option<&MemRef> {
+        self.args.iter().find(|m| m.name == name)
+    }
+
+    pub fn root(&self) -> Option<&SlcFor> {
+        self.body.iter().find_map(|op| match op {
+            SlcOp::For(f) => Some(f),
+            _ => None,
+        })
+    }
+    pub fn root_mut(&mut self) -> Option<&mut SlcFor> {
+        self.body.iter_mut().find_map(|op| match op {
+            SlcOp::For(f) => Some(f),
+            _ => None,
+        })
+    }
+
+    /// Visit every loop in the nest, outer to inner.
+    pub fn walk_loops(&self, f: &mut impl FnMut(&SlcFor)) {
+        fn rec(l: &SlcFor, f: &mut impl FnMut(&SlcFor)) {
+            f(l);
+            for op in &l.body {
+                if let SlcOp::For(c) = op {
+                    rec(c, f);
+                }
+            }
+        }
+        for op in &self.body {
+            if let SlcOp::For(l) = op {
+                rec(l, f);
+            }
+        }
+    }
+
+    /// Count ops of each kind (used by pass tests).
+    pub fn count_ops(&self) -> OpCounts {
+        let mut c = OpCounts::default();
+        fn rec(ops: &[SlcOp], c: &mut OpCounts) {
+            for op in ops {
+                match op {
+                    SlcOp::For(f) => {
+                        c.loops += 1;
+                        if f.vlen > 1 {
+                            c.vector_loops += 1;
+                        }
+                        rec(&f.body, c);
+                    }
+                    SlcOp::MemStr { vlen, .. } => {
+                        c.mem_streams += 1;
+                        if *vlen > 1 {
+                            c.vector_mem_streams += 1;
+                        }
+                    }
+                    SlcOp::AluStr { .. } => c.alu_streams += 1,
+                    SlcOp::BufStr { .. } => c.buf_streams += 1,
+                    SlcOp::Push { .. } => c.pushes += 1,
+                    SlcOp::StoreStr { .. } => c.store_streams += 1,
+                    SlcOp::Callback(_) => c.callbacks += 1,
+                }
+            }
+        }
+        rec(&self.body, &mut c);
+        c
+    }
+}
+
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct OpCounts {
+    pub loops: usize,
+    pub vector_loops: usize,
+    pub mem_streams: usize,
+    pub vector_mem_streams: usize,
+    pub alu_streams: usize,
+    pub buf_streams: usize,
+    pub pushes: usize,
+    pub store_streams: usize,
+    pub callbacks: usize,
+}
+
+// ---------------------------------------------------------------- printing
+
+impl fmt::Display for SlcIdx {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SlcIdx::Stream(s) => write!(f, "{s}"),
+            SlcIdx::Var(v) => write!(f, "%{v}"),
+            SlcIdx::Imm(i) => write!(f, "{i}"),
+            SlcIdx::Sym(s) => write!(f, "${s}"),
+        }
+    }
+}
+
+fn fmt_idxs(f: &mut fmt::Formatter<'_>, idxs: &[SlcIdx]) -> fmt::Result {
+    for (i, e) in idxs.iter().enumerate() {
+        if i > 0 {
+            write!(f, ",")?;
+        }
+        write!(f, "{e}")?;
+    }
+    Ok(())
+}
+
+fn fmt_op(op: &SlcOp, f: &mut fmt::Formatter<'_>, depth: usize) -> fmt::Result {
+    let pad = "  ".repeat(depth);
+    match op {
+        SlcOp::For(l) => {
+            if l.vlen > 1 {
+                write!(
+                    f,
+                    "{pad}slcv.for<{}>((stream {}, stream {}) from {} to {}",
+                    l.vlen,
+                    l.stream,
+                    l.mask.as_deref().unwrap_or("msk"),
+                    l.lb,
+                    l.ub
+                )?;
+            } else {
+                write!(f, "{pad}slc.for(stream {} from {} to {}", l.stream, l.lb, l.ub)?;
+            }
+            if let Some(cv) = &l.core_var {
+                write!(f, ")(%{cv} = 0) {{")?;
+            } else {
+                write!(f, ") {{")?;
+            }
+            writeln!(f)?;
+            for o in &l.body {
+                fmt_op(o, f, depth + 1)?;
+            }
+            writeln!(f, "{pad}}}")
+        }
+        SlcOp::MemStr { dst, mem, indices, vlen, masked, hint } => {
+            if *vlen > 1 {
+                write!(f, "{pad}stream {dst} = slcv.mem_str<{vlen}>({mem}[")?;
+            } else {
+                write!(f, "{pad}stream {dst} = slc.mem_str({mem}[")?;
+            }
+            fmt_idxs(f, indices)?;
+            write!(f, "]")?;
+            if *masked {
+                write!(f, ", msk")?;
+            }
+            if *hint != MemHint::default() {
+                write!(f, ", {hint}")?;
+            }
+            writeln!(f, ");")
+        }
+        SlcOp::AluStr { dst, op, lhs, rhs } => {
+            writeln!(f, "{pad}stream {dst} = alu_str({op}, {lhs}, {rhs});")
+        }
+        SlcOp::BufStr { dst, vlen } => {
+            writeln!(f, "{pad}stream<vec<{vlen} x f32>> {dst} = slcv.buf_str();")
+        }
+        SlcOp::Push { buf, src } => writeln!(f, "{pad}slc.push({buf}, {src});"),
+        SlcOp::StoreStr { mem, indices, src, hint } => {
+            write!(f, "{pad}slc.store_str({mem}[")?;
+            fmt_idxs(f, indices)?;
+            writeln!(f, "], {src}, {hint});")
+        }
+        SlcOp::Callback(cb) => {
+            let ev = match cb.event {
+                Event::Ite => "".to_string(),
+                e => format!("<{e}>"),
+            };
+            writeln!(f, "{pad}slc.callback{ev} {{")?;
+            for s in &cb.body {
+                s.fmt_depth(f, depth + 1)?;
+            }
+            writeln!(f, "{pad}}}")
+        }
+    }
+}
+
+impl fmt::Display for SlcFunc {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "void {}(", self.name)?;
+        for (i, a) in self.args.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{a}")?;
+        }
+        writeln!(f, ") {{")?;
+        for op in &self.body {
+            fmt_op(op, f, 1)?;
+        }
+        writeln!(f, "}}")
+    }
+}

@@ -1,0 +1,188 @@
+//! Shared type vocabulary for all Ember IRs (SCF, SLC/SLCV, DLC).
+
+
+use std::fmt;
+
+/// Element types carried by memrefs, streams, and queue payloads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scalar {
+    F32,
+    I32,
+    /// Loop/iteration index type (paper's `idx`/`index`).
+    Index,
+}
+
+impl Scalar {
+    /// Payload width in bytes when marshaled through the data queue.
+    pub fn bytes(self) -> usize {
+        match self {
+            Scalar::F32 | Scalar::I32 => 4,
+            Scalar::Index => 8,
+        }
+    }
+}
+
+impl fmt::Display for Scalar {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Scalar::F32 => write!(f, "f32"),
+            Scalar::I32 => write!(f, "i32"),
+            Scalar::Index => write!(f, "index"),
+        }
+    }
+}
+
+/// A memory reference (tensor operand). `dims` entries of `None` are
+/// dynamic (`?` in the paper's `mref<? x f32>`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MemRef {
+    pub name: String,
+    pub dims: Vec<Option<usize>>,
+    pub elem: Scalar,
+    /// True if the function may write to this memref (excludes it from
+    /// offloading per §6.2 condition 2).
+    pub written: bool,
+}
+
+impl MemRef {
+    pub fn read_only(name: &str, dims: Vec<Option<usize>>, elem: Scalar) -> Self {
+        MemRef { name: name.to_string(), dims, elem, written: false }
+    }
+    pub fn output(name: &str, dims: Vec<Option<usize>>, elem: Scalar) -> Self {
+        MemRef { name: name.to_string(), dims, elem, written: true }
+    }
+}
+
+impl fmt::Display for MemRef {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: mref<", self.name)?;
+        for d in &self.dims {
+            match d {
+                Some(n) => write!(f, "{n} x ")?,
+                None => write!(f, "? x ")?,
+            }
+        }
+        write!(f, "{}>", self.elem)
+    }
+}
+
+/// Integer binary ops usable in ALU streams and index arithmetic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Rem,
+    Max,
+    Min,
+}
+
+impl BinOp {
+    pub fn eval_i(self, a: i64, b: i64) -> i64 {
+        match self {
+            BinOp::Add => a + b,
+            BinOp::Sub => a - b,
+            BinOp::Mul => a * b,
+            BinOp::Div => a / b,
+            BinOp::Rem => a % b,
+            BinOp::Max => a.max(b),
+            BinOp::Min => a.min(b),
+        }
+    }
+    pub fn eval_f(self, a: f32, b: f32) -> f32 {
+        match self {
+            BinOp::Add => a + b,
+            BinOp::Sub => a - b,
+            BinOp::Mul => a * b,
+            BinOp::Div => a / b,
+            BinOp::Rem => a % b,
+            BinOp::Max => a.max(b),
+            BinOp::Min => a.min(b),
+        }
+    }
+}
+
+impl fmt::Display for BinOp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            BinOp::Add => "+",
+            BinOp::Sub => "-",
+            BinOp::Mul => "*",
+            BinOp::Div => "/",
+            BinOp::Rem => "%",
+            BinOp::Max => "max",
+            BinOp::Min => "min",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Traversal events the access unit can react to (§4: beg, ite, end).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Event {
+    Beg,
+    Ite,
+    End,
+}
+
+impl fmt::Display for Event {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Event::Beg => write!(f, "beg"),
+            Event::Ite => write!(f, "ite"),
+            Event::End => write!(f, "end"),
+        }
+    }
+}
+
+/// Memory access hints added by model-specific optimizations (§7.4):
+/// which cache level to fetch into, and temporal vs non-temporal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MemHint {
+    /// Target cache level for the fill (1 = L1, 2 = L2, 3 = LLC).
+    pub level: u8,
+    /// Non-temporal: do not allocate in any cache.
+    pub non_temporal: bool,
+}
+
+impl Default for MemHint {
+    fn default() -> Self {
+        // level 1 = normal cached load (allocate at every level)
+        MemHint { level: 1, non_temporal: false }
+    }
+}
+
+impl MemHint {
+    pub fn l2() -> Self {
+        MemHint { level: 2, non_temporal: false }
+    }
+    pub fn non_temporal() -> Self {
+        MemHint { level: 3, non_temporal: true }
+    }
+}
+
+impl fmt::Display for MemHint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.non_temporal {
+            write!(f, "nt")
+        } else {
+            write!(f, "L{}", self.level)
+        }
+    }
+}
+
+/// Control tokens streamed through the control queue. The paper names
+/// them after the traversal unit and event (e.g. `e_i` = embedding-loop
+/// iteration, `e_e` = embedding-vector end, `s_e` = segment end).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Token(pub String);
+
+impl fmt::Display for Token {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+/// The `done` sentinel closing the control queue.
+pub const DONE: &str = "done";

@@ -1,0 +1,270 @@
+//! Structural verifiers for the Ember IRs.
+//!
+//! Each lowering stage verifies its output; passes verify before/after.
+//! Violations are compiler bugs, so messages are precise.
+
+use super::dlc::{DlcOp, DlcProgram, PushSrc};
+use super::slc::{SlcFor, SlcFunc, SlcIdx, SlcOp};
+use super::types::Event;
+use crate::error::EmberError;
+use std::collections::HashSet;
+
+/// Verify an SLC function:
+/// * at most one offloaded child loop per level (§6.2 — embedding ops
+///   have a single offloading candidate per level),
+/// * streams are defined before use,
+/// * vectorized loops carry a mask, scalar loops do not,
+/// * pushes target declared buffer streams,
+/// * core_var names are unique.
+pub fn verify_slc(func: &SlcFunc) -> Result<(), EmberError> {
+    let mut defined: HashSet<String> = HashSet::new();
+    let mut core_vars: HashSet<String> = HashSet::new();
+    for op in &func.body {
+        verify_slc_op(op, &mut defined, &mut core_vars, func)?;
+    }
+    Ok(())
+}
+
+fn check_idx(idx: &SlcIdx, defined: &HashSet<String>, ctx: &str) -> Result<(), EmberError> {
+    if let SlcIdx::Stream(s) = idx {
+        if !defined.contains(s) {
+            return Err(EmberError::Verify(format!("{ctx}: stream `{s}` used before definition")));
+        }
+    }
+    Ok(())
+}
+
+fn verify_slc_op(
+    op: &SlcOp,
+    defined: &mut HashSet<String>,
+    core_vars: &mut HashSet<String>,
+    func: &SlcFunc,
+) -> Result<(), EmberError> {
+    match op {
+        SlcOp::For(l) => verify_slc_for(l, defined, core_vars, func),
+        SlcOp::MemStr { dst, mem, indices, .. } => {
+            if func.memref(mem).is_none() {
+                return Err(EmberError::Verify(format!("mem_str reads unknown memref `{mem}`")));
+            }
+            if func.memref(mem).is_some_and(|m| m.written) {
+                return Err(EmberError::Verify(format!(
+                    "mem_str reads memref `{mem}` that the function writes — offloading \
+                     condition (2) of §6.2 violated"
+                )));
+            }
+            for i in indices {
+                check_idx(i, defined, "mem_str")?;
+            }
+            defined.insert(dst.clone());
+            Ok(())
+        }
+        SlcOp::AluStr { dst, lhs, rhs, .. } => {
+            check_idx(lhs, defined, "alu_str")?;
+            check_idx(rhs, defined, "alu_str")?;
+            defined.insert(dst.clone());
+            Ok(())
+        }
+        SlcOp::BufStr { dst, vlen } => {
+            if *vlen == 0 {
+                return Err(EmberError::Verify("buf_str vlen must be >= 1".into()));
+            }
+            defined.insert(dst.clone());
+            Ok(())
+        }
+        SlcOp::Push { buf, src } => {
+            for s in [buf, src] {
+                if !defined.contains(s) {
+                    return Err(EmberError::Verify(format!("push references undefined stream `{s}`")));
+                }
+            }
+            Ok(())
+        }
+        SlcOp::StoreStr { mem, indices, src, .. } => {
+            if func.memref(mem).is_none() {
+                return Err(EmberError::Verify(format!("store_str writes unknown memref `{mem}`")));
+            }
+            if !defined.contains(src) {
+                return Err(EmberError::Verify(format!("store_str reads undefined stream `{src}`")));
+            }
+            for i in indices {
+                check_idx(i, defined, "store_str")?;
+            }
+            Ok(())
+        }
+        SlcOp::Callback(_) => Ok(()),
+    }
+}
+
+fn verify_slc_for(
+    l: &SlcFor,
+    defined: &mut HashSet<String>,
+    core_vars: &mut HashSet<String>,
+    func: &SlcFunc,
+) -> Result<(), EmberError> {
+    let child_loops = l.body.iter().filter(|o| matches!(o, SlcOp::For(_))).count();
+    if child_loops > 1 {
+        return Err(EmberError::Verify(format!(
+            "loop `{}` has {child_loops} offloaded child loops; embedding operations \
+             have at most one offloading candidate per level (§6.2)",
+            l.stream
+        )));
+    }
+    if l.vlen > 1 && l.mask.is_none() {
+        return Err(EmberError::Verify(format!(
+            "vectorized loop `{}` (vlen={}) has no mask stream",
+            l.stream, l.vlen
+        )));
+    }
+    if l.vlen <= 1 && l.mask.is_some() {
+        return Err(EmberError::Verify(format!("scalar loop `{}` carries a mask", l.stream)));
+    }
+    if let Some(cv) = &l.core_var {
+        if !core_vars.insert(cv.clone()) {
+            return Err(EmberError::Verify(format!("duplicate core_var `{cv}`")));
+        }
+    }
+    if let super::slc::SlcBound::Stream(s) = &l.lb {
+        if !defined.contains(s) {
+            return Err(EmberError::Verify(format!(
+                "loop `{}` lower bound stream `{s}` undefined",
+                l.stream
+            )));
+        }
+    }
+    if let super::slc::SlcBound::Stream(s) = &l.ub {
+        if !defined.contains(s) {
+            return Err(EmberError::Verify(format!(
+                "loop `{}` upper bound stream `{s}` undefined",
+                l.stream
+            )));
+        }
+    }
+    defined.insert(l.stream.clone());
+    if let Some(m) = &l.mask {
+        defined.insert(m.clone());
+    }
+    for op in &l.body {
+        verify_slc_op(op, defined, core_vars, func)?;
+    }
+    Ok(())
+}
+
+/// Verify a DLC program:
+/// * exactly one root loop, single loop chain,
+/// * every op attaches to a declared traversal unit,
+/// * every control token pushed has a compute handler and vice versa,
+/// * pushes reference declared streams/buffers.
+pub fn verify_dlc(prog: &DlcProgram) -> Result<(), EmberError> {
+    let mut tus: HashSet<&str> = HashSet::new();
+    let mut streams: HashSet<&str> = HashSet::new();
+    let mut roots = 0usize;
+    for op in &prog.lookup {
+        if let DlcOp::LoopTr { id, parent, .. } = op {
+            if parent.is_none() {
+                roots += 1;
+            } else if !tus.contains(parent.as_deref().unwrap()) {
+                return Err(EmberError::Verify(format!(
+                    "loop `{id}` attached to undeclared parent `{}`",
+                    parent.as_deref().unwrap()
+                )));
+            }
+            tus.insert(id);
+            streams.insert(id);
+        }
+    }
+    if roots != 1 {
+        return Err(EmberError::Verify(format!("expected exactly 1 root loop, found {roots}")));
+    }
+
+    for op in &prog.lookup {
+        match op {
+            DlcOp::LoopTr { .. } => {}
+            DlcOp::MemStr { id, at, indices, .. } => {
+                if !tus.contains(at.as_str()) {
+                    return Err(EmberError::Verify(format!("mem_str `{id}` at unknown tu `{at}`")));
+                }
+                for v in indices {
+                    if let super::dlc::DlcVal::Str(s) = v {
+                        if !streams.contains(s.as_str()) {
+                            return Err(EmberError::Verify(format!(
+                                "mem_str `{id}` index uses undefined stream `{s}`"
+                            )));
+                        }
+                    }
+                }
+                streams.insert(id);
+            }
+            DlcOp::AluStr { id, at, .. } | DlcOp::BufStr { id, at, .. } => {
+                if !tus.contains(at.as_str()) {
+                    return Err(EmberError::Verify(format!("`{id}` at unknown tu `{at}`")));
+                }
+                streams.insert(id);
+            }
+            DlcOp::BufPush { buf, src, at } => {
+                for s in [buf, src] {
+                    if !streams.contains(s.as_str()) {
+                        return Err(EmberError::Verify(format!("buf_push uses undefined `{s}`")));
+                    }
+                }
+                if !tus.contains(at.as_str()) {
+                    return Err(EmberError::Verify(format!("buf_push at unknown tu `{at}`")));
+                }
+            }
+            DlcOp::PushOp { src, tu, .. } => {
+                if !tus.contains(tu.as_str()) {
+                    return Err(EmberError::Verify(format!("push_op at unknown tu `{tu}`")));
+                }
+                let name = match src {
+                    PushSrc::Stream(s) | PushSrc::Buffer(s) | PushSrc::Address(s) => s,
+                };
+                if !streams.contains(name.as_str()) {
+                    return Err(EmberError::Verify(format!(
+                        "push_op marshals undefined stream `{name}`"
+                    )));
+                }
+            }
+            DlcOp::CallbackTok { tu, .. } => {
+                if !tus.contains(tu.as_str()) {
+                    return Err(EmberError::Verify(format!("callback at unknown tu `{tu}`")));
+                }
+            }
+            DlcOp::StoreStr { src, at, .. } => {
+                if !streams.contains(src.as_str()) {
+                    return Err(EmberError::Verify(format!("store_str of undefined `{src}`")));
+                }
+                if !tus.contains(at.as_str()) {
+                    return Err(EmberError::Verify(format!("store_str at unknown tu `{at}`")));
+                }
+            }
+        }
+    }
+
+    // token <-> handler bijection
+    let pushed: HashSet<&str> = prog
+        .lookup
+        .iter()
+        .filter_map(|op| match op {
+            DlcOp::CallbackTok { token, .. } => Some(token.0.as_str()),
+            _ => None,
+        })
+        .collect();
+    let handled: HashSet<&str> = prog.compute.iter().map(|h| h.token.0.as_str()).collect();
+    for t in &pushed {
+        if !handled.contains(t) {
+            return Err(EmberError::Verify(format!("token `{t}` pushed but has no handler")));
+        }
+    }
+    for t in &handled {
+        if !pushed.contains(t) {
+            return Err(EmberError::Verify(format!("handler for token `{t}` never pushed")));
+        }
+    }
+
+    // events sane: Beg/End callbacks allowed; Ite default.
+    for op in &prog.lookup {
+        if let DlcOp::PushOp { event, .. } | DlcOp::CallbackTok { event, .. } = op {
+            let _ = matches!(event, Event::Beg | Event::Ite | Event::End);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,23 @@
+//! # Ember — embedding-operation compiler for DAE architectures
+//!
+//! A reproduction of *"Ember: A Compiler for Efficient Embedding
+//! Operations on Decoupled Access-Execute Architectures"* as a
+//! three-layer Rust + JAX + Pallas system. See DESIGN.md for the system
+//! inventory and substitutions, EXPERIMENTS.md for paper-vs-measured.
+
+pub mod dae;
+pub mod data;
+pub mod error;
+pub mod compiler;
+pub mod coordinator;
+pub mod frontend;
+pub mod harness;
+pub mod interp;
+pub mod ir;
+pub mod runtime;
+pub mod util;
+pub mod workloads;
+
+pub use error::{EmberError, Result};
+
+pub fn version() -> &'static str { "0.1.0" }

@@ -1,0 +1,219 @@
+//! `ember` CLI — compile embedding ops, run DAE simulations, regenerate
+//! the paper's tables/figures, and serve a DLRM model.
+//!
+//! (Arg parsing is hand-rolled: the offline image has no clap.)
+
+use ember::compiler::passes::pipeline::{compile, CompileOptions, OptLevel};
+use ember::coordinator::{BatchOptions, Coordinator, DlrmModel, Request};
+use ember::dae::MachineConfig;
+use ember::error::Result;
+use ember::frontend::embedding_ops::{OpClass, Semiring};
+use ember::harness;
+use ember::runtime::Runtime;
+use ember::util::rng::Rng;
+use std::collections::HashMap;
+use std::time::Instant;
+
+fn usage() -> ! {
+    eprintln!(
+        "ember — compiler for embedding operations on DAE architectures
+
+USAGE:
+  ember compile --op <sls|spmm|mp|kg|kg_maxplus|spattn> [--opt 0..3] [--vlen N] [--emit scf|slc|dlc|all]
+  ember simulate --op <op> [--opt 0..3] [--machine core|core2x|dae|t4|h100]
+  ember bench --exp <table1..4|fig1|fig3|fig4|fig6|fig7|fig8|fig16..19|all> [--out results] [--seed N]
+  ember serve [--requests N] [--artifacts artifacts]
+  ember info
+"
+    );
+    std::process::exit(2);
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(k) = args[i].strip_prefix("--") {
+            let v = args.get(i + 1).cloned().unwrap_or_default();
+            m.insert(k.to_string(), v);
+            i += 2;
+        } else {
+            i += 1;
+        }
+    }
+    m
+}
+
+fn parse_op(s: &str) -> OpClass {
+    match s {
+        "sls" => OpClass::Sls,
+        "spmm" => OpClass::Spmm,
+        "mp" => OpClass::Mp,
+        "kg" => OpClass::Kg(Semiring::PlusTimes),
+        "kg_maxplus" => OpClass::Kg(Semiring::MaxPlus),
+        "spattn" => OpClass::SpAttn { block: 4 },
+        other => {
+            eprintln!("unknown op `{other}`");
+            usage()
+        }
+    }
+}
+
+fn parse_machine(s: &str) -> MachineConfig {
+    match s {
+        "core" => MachineConfig::traditional_core(),
+        "core2x" => MachineConfig::scaled_core_2x(),
+        "dae" => MachineConfig::dae_tmu(),
+        "dae-handopt" => MachineConfig::dae_tmu_handopt(),
+        "t4" => MachineConfig::t4_like(),
+        "h100" => MachineConfig::h100_like(),
+        other => {
+            eprintln!("unknown machine `{other}`");
+            usage()
+        }
+    }
+}
+
+fn cmd_compile(flags: &HashMap<String, String>) -> Result<()> {
+    let op = parse_op(flags.get("op").map(String::as_str).unwrap_or("sls"));
+    let opt: OptLevel = flags
+        .get("opt")
+        .map(String::as_str)
+        .unwrap_or("3")
+        .parse()
+        .unwrap_or(OptLevel::O3);
+    let vlen: u32 = flags.get("vlen").and_then(|v| v.parse().ok()).unwrap_or(4);
+    let emit = flags.get("emit").map(String::as_str).unwrap_or("all");
+    let p = compile(&op, CompileOptions { opt, vlen, ..Default::default() })?;
+    if emit == "scf" || emit == "all" {
+        println!("// ===== SCF IR =====\n{}", p.scf);
+    }
+    if emit == "slc" || emit == "all" {
+        println!("// ===== SLC IR ({}) =====\n{}", opt.name(), p.slc);
+    }
+    if emit == "dlc" || emit == "all" {
+        println!("// ===== DLC IR =====\n{}", p.dlc);
+    }
+    Ok(())
+}
+
+fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
+    use ember::harness::motivation::{run_dlrm, run_gnn, run_kg, run_mp, run_spattn};
+    use ember::workloads::dlrm::{Locality, RM1};
+    use ember::workloads::graphs::spec;
+    let op = flags.get("op").map(String::as_str).unwrap_or("sls");
+    let opt: OptLevel = flags
+        .get("opt")
+        .map(String::as_str)
+        .unwrap_or("3")
+        .parse()
+        .unwrap_or(OptLevel::O3);
+    let machine = parse_machine(flags.get("machine").map(String::as_str).unwrap_or("dae"));
+    let seed = flags.get("seed").and_then(|v| v.parse().ok()).unwrap_or(1u64);
+    let res = match op {
+        "sls" => run_dlrm(machine, &RM1, Locality::L1, opt, seed)?,
+        "spmm" => run_gnn(spec("arxiv").unwrap(), machine, opt, seed)?,
+        "mp" => run_mp(spec("web-Google").unwrap(), machine, opt, seed)?,
+        "kg" => run_kg(spec("biokg").unwrap(), machine, opt, seed)?,
+        "spattn" => run_spattn(4, machine, opt, seed)?,
+        other => {
+            eprintln!("unknown op `{other}`");
+            usage()
+        }
+    };
+    println!("machine           {}", machine.name);
+    println!("opt level         {}", opt.name());
+    println!("cycles            {}", res.cycles);
+    println!("time              {:.3} us", res.seconds * 1e6);
+    println!("power             {:.2} W", res.watts);
+    println!("bw utilization    {:.1}%", res.bw_util * 100.0);
+    println!("loads/cycle       {:.3}", res.loads_per_cycle);
+    println!("mean in-flight    {:.2}", res.mean_inflight);
+    println!("tokens            {}", res.tokens);
+    println!("queue write       {:.2} B/cyc", res.queue_write_bps);
+    println!("queue read        {:.2} B/cyc", res.queue_read_bps);
+    Ok(())
+}
+
+fn cmd_bench(flags: &HashMap<String, String>) -> Result<()> {
+    let exp = flags.get("exp").map(String::as_str).unwrap_or("all");
+    let out = flags.get("out").map(String::as_str).unwrap_or("results");
+    let seed = flags.get("seed").and_then(|v| v.parse().ok()).unwrap_or(1u64);
+    let t0 = Instant::now();
+    let reports = harness::run_experiment(exp, seed)?;
+    for r in &reports {
+        println!("{r}");
+        r.save(out)?;
+    }
+    println!("[{} report(s) written to {out}/ in {:.1?}]", reports.len(), t0.elapsed());
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let n: usize = flags.get("requests").and_then(|v| v.parse().ok()).unwrap_or(256);
+    let artifacts = flags.get("artifacts").map(String::as_str).unwrap_or("artifacts");
+    let rt = Runtime::new(artifacts)?;
+    println!("PJRT platform: {}", rt.platform());
+    let model = DlrmModel::from_manifest(&rt, 42)?;
+    let (tables, rows) = (model.num_tables, model.table_rows);
+    let coord = Coordinator::start(model, Some(artifacts.into()), BatchOptions::default());
+    let mut rng = Rng::new(7);
+    let t0 = Instant::now();
+    let mut latencies = Vec::with_capacity(n);
+    for i in 0..n {
+        let req = Request {
+            id: i as u64,
+            lookups: (0..tables)
+                .map(|_| (0..32).map(|_| rng.below(rows as u64) as i32).collect())
+                .collect(),
+            dense: (0..13).map(|_| rng.f32()).collect(),
+        };
+        let t = Instant::now();
+        let resp = coord.infer(req)?;
+        latencies.push(t.elapsed());
+        if i < 3 {
+            println!("req {:3} -> ctr {:.4}", resp.id, resp.score);
+        }
+    }
+    let wall = t0.elapsed();
+    latencies.sort();
+    let stats = coord.shutdown();
+    println!(
+        "served {} requests in {:.2?} ({:.0} req/s), p50 {:.2?}, p99 {:.2?}, batches {}",
+        stats.requests,
+        wall,
+        n as f64 / wall.as_secs_f64(),
+        latencies[latencies.len() / 2],
+        latencies[((latencies.len() as f64 * 0.99) as usize).min(latencies.len() - 1)],
+        stats.batches
+    );
+    Ok(())
+}
+
+fn cmd_info() {
+    println!("ember {} — Ember reproduction (three-layer Rust+JAX+Pallas)", ember::version());
+    println!("machines: core, core2x, dae, dae-handopt, t4, h100");
+    println!("ops: sls, spmm, mp, kg, kg_maxplus, spattn");
+    println!("experiments: table1-4, fig1, fig3, fig4, fig6, fig7, fig8, fig16-19, all");
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("");
+    let flags = parse_flags(&args[1.min(args.len())..]);
+    let r = match cmd {
+        "compile" => cmd_compile(&flags),
+        "simulate" => cmd_simulate(&flags),
+        "bench" => cmd_bench(&flags),
+        "serve" => cmd_serve(&flags),
+        "info" => {
+            cmd_info();
+            Ok(())
+        }
+        _ => usage(),
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

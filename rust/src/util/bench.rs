@@ -1,0 +1,91 @@
+//! Micro-benchmark clock (criterion is unavailable offline).
+//!
+//! Usage from a `harness = false` bench binary:
+//! ```no_run
+//! use ember::util::bench::Bench;
+//! let mut b = Bench::new("decouple_sls");
+//! let report = b.run(|| { /* workload */ });
+//! println!("{report}");
+//! ```
+
+use std::fmt;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl Report {
+    pub fn mean_ns(&self) -> f64 {
+        self.mean.as_nanos() as f64
+    }
+    /// Throughput in ops/s given `n` work items per iteration.
+    pub fn throughput(&self, n: u64) -> f64 {
+        n as f64 / self.mean.as_secs_f64()
+    }
+}
+
+impl fmt::Display for Report {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{:40} {:>10.2?} mean  {:>10.2?} p50  {:>10.2?} p95  {:>10.2?} min  ({} iters)",
+            self.name, self.mean, self.p50, self.p95, self.min, self.iters
+        )
+    }
+}
+
+pub struct Bench {
+    name: String,
+    /// Target wall time for the measurement phase.
+    pub target: Duration,
+    /// Minimum iterations regardless of target time.
+    pub min_iters: u64,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Bench {
+            name: name.to_string(),
+            target: Duration::from_millis(300),
+            min_iters: 10,
+        }
+    }
+
+    pub fn with_target(mut self, d: Duration) -> Self {
+        self.target = d;
+        self
+    }
+
+    pub fn run<R>(&mut self, mut f: impl FnMut() -> R) -> Report {
+        // Warmup + calibration.
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        let probe = t0.elapsed().max(Duration::from_nanos(50));
+        let iters = ((self.target.as_secs_f64() / probe.as_secs_f64()) as u64)
+            .clamp(self.min_iters, 1_000_000);
+
+        let mut samples = Vec::with_capacity(iters as usize);
+        for _ in 0..iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t.elapsed());
+        }
+        samples.sort();
+        let total: Duration = samples.iter().sum();
+        Report {
+            name: self.name.clone(),
+            iters,
+            mean: total / iters as u32,
+            p50: samples[samples.len() / 2],
+            p95: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
+            min: samples[0],
+        }
+    }
+}

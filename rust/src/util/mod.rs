@@ -1,0 +1,11 @@
+//! In-tree replacements for crates unavailable in this offline image:
+//! deterministic PRNG (`rng`), minimal JSON (`json`), micro-bench
+//! clock (`bench`), and a tiny property-testing driver (`quick`).
+
+pub mod bench;
+pub mod json;
+pub mod quick;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::{Rng, Zipf};

@@ -1,0 +1,78 @@
+//! Tiny property-testing driver (proptest is unavailable offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a property closure over `cases`
+//! deterministic seeds. On failure it reports the failing seed so the
+//! case can be replayed exactly (`EMBER_QUICK_SEED=<n>` re-runs just
+//! that seed).
+
+use super::rng::Rng;
+
+/// Run `prop` for `cases` seeds; panic with the failing seed on error.
+pub fn check(name: &str, cases: u64, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    if let Ok(s) = std::env::var("EMBER_QUICK_SEED") {
+        let seed: u64 = s.parse().expect("EMBER_QUICK_SEED must be a u64");
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property `{name}` failed for replayed seed {seed}: {msg}");
+        }
+        return;
+    }
+    for case in 0..cases {
+        // Decorrelate consecutive case seeds.
+        let seed = 0x9E3779B97F4A7C15u64
+            .wrapping_mul(case + 1)
+            .wrapping_add(0xD1B54A32D192ED03);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property `{name}` failed on case {case} (seed {seed}): {msg}\n\
+                 replay with EMBER_QUICK_SEED={seed}"
+            );
+        }
+    }
+}
+
+/// Assert two f32 slices match within tolerance; returns Err with the
+/// first mismatch for `check` to report.
+pub fn allclose(got: &[f32], want: &[f32], rtol: f32, atol: f32) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!("length mismatch: {} vs {}", got.len(), want.len()));
+    }
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        let tol = atol + rtol * w.abs();
+        if (g - w).abs() > tol {
+            return Err(format!("mismatch at {i}: got {g}, want {w} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("trivial", 20, |rng| {
+            let x = rng.below(100);
+            if x < 100 {
+                Ok(())
+            } else {
+                Err(format!("{x} >= 100"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `failing`")]
+    fn check_reports_failure() {
+        check("failing", 5, |_| Err("always".into()));
+    }
+
+    #[test]
+    fn allclose_catches_mismatch() {
+        assert!(allclose(&[1.0, 2.0], &[1.0, 2.0], 1e-6, 1e-6).is_ok());
+        assert!(allclose(&[1.0, 2.1], &[1.0, 2.0], 1e-3, 1e-3).is_err());
+        assert!(allclose(&[1.0], &[1.0, 2.0], 1e-3, 1e-3).is_err());
+    }
+}

@@ -1,0 +1,148 @@
+//! Table 1 characterization: loop structure, compute-per-lookup,
+//! footprint, reuse-distance CDF, and spatial locality per model class.
+
+use super::dlrm::{DlrmConfig, Locality, RM1};
+use super::graphs::{GraphClass, TABLE2};
+use super::reuse::reuse_profile;
+use super::spattn::SpAttnSpec;
+use crate::frontend::embedding_ops::{OpClass, Semiring};
+
+/// CDF support points (vectors held by a cache) used across Table 1.
+pub const CDF_POINTS: [usize; 4] = [64, 1024, 4096, 16384];
+
+/// Cap on trace length fed to the reuse profiler: the CDF converges
+/// long before this many accesses, and it keeps debug-mode tests fast.
+const TRACE_CAP: usize = 400_000;
+
+fn capped(mut t: Vec<u32>) -> Vec<u32> {
+    t.truncate(TRACE_CAP);
+    t
+}
+
+#[derive(Debug, Clone)]
+pub struct CharRow {
+    pub model: String,
+    pub op: OpClass,
+    pub loops: &'static str,
+    pub compute_per_lookup: f64,
+    pub footprint_bytes: usize,
+    /// CDF at `CDF_POINTS`.
+    pub cdf: Vec<f64>,
+    /// Elements per embedding vector (spatial locality).
+    pub emb_len: usize,
+}
+
+/// Characterize a DLRM configuration at a locality level.
+pub fn characterize_dlrm(cfg: &DlrmConfig, loc: Locality, seed: u64) -> CharRow {
+    let trace = capped(cfg.lookup_trace(loc, seed));
+    let p = reuse_profile(&trace);
+    CharRow {
+        model: format!("dlrm_{}_{}", cfg.name, loc.name()),
+        op: OpClass::Sls,
+        loops: "batch > segment > vector (b_tr, s_tr, e_tr)",
+        compute_per_lookup: OpClass::Sls.compute_per_lookup(),
+        footprint_bytes: cfg.footprint_bytes(),
+        cdf: p.cdf_at(&CDF_POINTS),
+        emb_len: cfg.emb_len,
+    }
+}
+
+/// Characterize a BigBird gather at a block size.
+pub fn characterize_spattn(block: usize, seed: u64) -> CharRow {
+    let spec = SpAttnSpec::bigbird(block);
+    let trace = capped(spec.lookup_trace(256, seed));
+    let p = reuse_profile(&trace);
+    CharRow {
+        model: format!("spattn_b{block}"),
+        op: OpClass::SpAttn { block },
+        loops: "gather > block > vector (no compute)",
+        compute_per_lookup: 0.0,
+        footprint_bytes: spec.seq_len * spec.emb * 4,
+        cdf: p.cdf_at(&CDF_POINTS),
+        emb_len: spec.block * spec.emb,
+    }
+}
+
+/// Characterize every Table 2 graph input.
+pub fn characterize_graphs(seed: u64) -> Vec<CharRow> {
+    TABLE2
+        .iter()
+        .map(|g| {
+            let trace = capped(g.lookup_trace(seed));
+            let p = reuse_profile(&trace);
+            let (op, loops) = match g.class {
+                GraphClass::Gnn => (
+                    OpClass::Spmm,
+                    "node > neighbor > vector (SpMM)",
+                ),
+                GraphClass::Mp => (
+                    OpClass::Mp,
+                    "node > neighbor > (dot; workspace) (SDDMM+SpMM)",
+                ),
+                GraphClass::Kg => (
+                    OpClass::Kg(Semiring::PlusTimes),
+                    "query > vector (1 nz/row)",
+                ),
+            };
+            CharRow {
+                model: g.name.to_string(),
+                op: op.clone(),
+                loops,
+                compute_per_lookup: op.compute_per_lookup(),
+                footprint_bytes: g.footprint_bytes(),
+                cdf: p.cdf_at(&CDF_POINTS),
+                emb_len: g.feat,
+            }
+        })
+        .collect()
+}
+
+/// Full Table 1 (scaled inputs; see DESIGN.md for the substitution).
+pub fn table1(seed: u64) -> Vec<CharRow> {
+    let mut rows = Vec::new();
+    for loc in Locality::ALL {
+        rows.push(characterize_dlrm(&RM1, loc, seed));
+    }
+    for block in [1usize, 8] {
+        rows.push(characterize_spattn(block, seed));
+    }
+    rows.extend(characterize_graphs(seed));
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_covers_all_model_classes() {
+        let rows = table1(1);
+        assert!(rows.iter().any(|r| r.model.starts_with("dlrm")));
+        assert!(rows.iter().any(|r| r.model.starts_with("spattn")));
+        assert!(rows.iter().any(|r| r.model == "wiki-Talk"));
+        assert!(rows.iter().any(|r| r.model == "biokg"));
+        for r in &rows {
+            assert_eq!(r.cdf.len(), CDF_POINTS.len());
+            assert!(r.cdf.windows(2).all(|w| w[0] <= w[1] + 1e-12), "{}", r.model);
+        }
+    }
+
+    #[test]
+    fn mp_has_highest_compute_per_lookup() {
+        let rows = table1(1);
+        let mp = rows.iter().find(|r| r.model == "wiki-Talk").unwrap();
+        let sls = rows.iter().find(|r| r.model.starts_with("dlrm")).unwrap();
+        let sp = rows.iter().find(|r| r.model.starts_with("spattn")).unwrap();
+        assert!(mp.compute_per_lookup > sls.compute_per_lookup);
+        assert_eq!(sp.compute_per_lookup, 0.0);
+    }
+
+    #[test]
+    fn graph_models_have_lower_locality_than_high_locality_dlrm() {
+        // §2.2.3: graph-learning models often have flatter CDFs
+        let rows = table1(2);
+        let dlrm_l2 = rows.iter().find(|r| r.model == "dlrm_RM1_L2").unwrap();
+        let gnn = rows.iter().find(|r| r.model == "arxiv").unwrap();
+        assert!(dlrm_l2.cdf[1] > gnn.cdf[1], "{} vs {}", dlrm_l2.cdf[1], gnn.cdf[1]);
+    }
+}

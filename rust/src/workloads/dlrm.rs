@@ -1,0 +1,174 @@
+//! DLRM workload generator — Table 3 configurations (RM1-3) with the
+//! low/medium/high locality inputs (L0/L1/L2) of Gupta et al. [18].
+//!
+//! Locality is controlled by the Zipf exponent of the per-lookup
+//! category distribution; the reuse-distance CDFs of the generated
+//! traces are verified against the Criteo-style shapes of Table 1 by
+//! `reuse.rs` tests.
+
+use crate::frontend::formats::Csr;
+use crate::util::rng::{Rng, Zipf};
+
+/// One DLRM model configuration (Table 3 row).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DlrmConfig {
+    pub name: &'static str,
+    /// Segments per batch per core.
+    pub segments: usize,
+    /// Embedding entries per table.
+    pub table_rows: usize,
+    /// Elements per embedding vector.
+    pub emb_len: usize,
+    /// Tables per core.
+    pub tables: usize,
+    /// Lookups per segment.
+    pub lookups: usize,
+}
+
+/// Table 3: RM1, RM2, RM3.
+pub const RM1: DlrmConfig = DlrmConfig {
+    name: "RM1",
+    segments: 64,
+    table_rows: 16384,
+    emb_len: 32,
+    tables: 2,
+    lookups: 64,
+};
+pub const RM2: DlrmConfig = DlrmConfig {
+    name: "RM2",
+    segments: 32,
+    table_rows: 16384,
+    emb_len: 64,
+    tables: 2,
+    lookups: 128,
+};
+pub const RM3: DlrmConfig = DlrmConfig {
+    name: "RM3",
+    segments: 16,
+    table_rows: 16384,
+    emb_len: 128,
+    tables: 2,
+    lookups: 256,
+};
+
+pub const ALL_RM: [DlrmConfig; 3] = [RM1, RM2, RM3];
+
+/// Input locality class (Gupta et al. [18]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Locality {
+    /// Low: near-uniform category popularity.
+    L0,
+    /// Medium: Zipf(0.8).
+    L1,
+    /// High: Zipf(1.2) — hot categories dominate.
+    L2,
+}
+
+impl Locality {
+    pub const ALL: [Locality; 3] = [Locality::L0, Locality::L1, Locality::L2];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Locality::L0 => "L0",
+            Locality::L1 => "L1",
+            Locality::L2 => "L2",
+        }
+    }
+
+    fn zipf_s(&self) -> Option<f64> {
+        match self {
+            Locality::L0 => None,
+            Locality::L1 => Some(0.8),
+            Locality::L2 => Some(1.2),
+        }
+    }
+}
+
+impl DlrmConfig {
+    /// Embedding-table memory footprint per core in bytes.
+    pub fn footprint_bytes(&self) -> usize {
+        self.tables * self.table_rows * self.emb_len * 4
+    }
+
+    /// Generate one batch of multi-hot queries for each table.
+    /// Category ranks are randomly mapped to row ids (deterministic by
+    /// seed) so hot rows are scattered across the table.
+    pub fn gen_batch(&self, loc: Locality, seed: u64) -> Vec<Csr> {
+        let mut out = Vec::with_capacity(self.tables);
+        for t in 0..self.tables {
+            let mut rng = Rng::new(seed ^ (0x9E37 + t as u64 * 0x1F123BB5));
+            // rank -> row permutation
+            let mut perm: Vec<i32> = (0..self.table_rows as i32).collect();
+            rng.shuffle(&mut perm);
+            let zipf = loc.zipf_s().map(|s| Zipf::new(self.table_rows as u64, s));
+            let rows: Vec<Vec<i32>> = (0..self.segments)
+                .map(|_| {
+                    (0..self.lookups)
+                        .map(|_| {
+                            let rank = match &zipf {
+                                Some(z) => z.sample(&mut rng) as usize,
+                                None => rng.below(self.table_rows as u64) as usize,
+                            };
+                            perm[rank]
+                        })
+                        .collect()
+                })
+                .collect();
+            out.push(Csr::from_rows(self.table_rows, &rows));
+        }
+        out
+    }
+
+    /// Flat lookup trace (row ids in access order) for reuse analysis.
+    pub fn lookup_trace(&self, loc: Locality, seed: u64) -> Vec<u32> {
+        self.gen_batch(loc, seed)
+            .iter()
+            .flat_map(|csr| csr.idxs.iter().map(|&i| i as u32))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_shapes() {
+        assert_eq!(RM1.lookups, 64);
+        assert_eq!(RM2.emb_len, 64);
+        assert_eq!(RM3.segments, 16);
+        for rm in ALL_RM {
+            assert_eq!(rm.table_rows, 16384);
+            assert_eq!(rm.tables, 2);
+        }
+        // RM1: 2 tables * 16K rows * 32 elems * 4B = 4 MiB
+        assert_eq!(RM1.footprint_bytes(), 4 << 20);
+    }
+
+    #[test]
+    fn batch_is_deterministic_and_valid() {
+        let a = RM1.gen_batch(Locality::L1, 7);
+        let b = RM1.gen_batch(Locality::L1, 7);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 2);
+        for csr in &a {
+            assert!(csr.validate());
+            assert_eq!(csr.num_rows, 64);
+            assert_eq!(csr.nnz(), 64 * 64);
+        }
+    }
+
+    #[test]
+    fn higher_locality_means_fewer_unique_rows() {
+        let uniq = |l: Locality| {
+            let tr = RM1.lookup_trace(l, 3);
+            let mut s: Vec<u32> = tr;
+            s.sort_unstable();
+            s.dedup();
+            s.len()
+        };
+        let (u0, u1, u2) = (uniq(Locality::L0), uniq(Locality::L1), uniq(Locality::L2));
+        assert!(u0 > u1, "{u0} {u1}");
+        assert!(u1 > u2, "{u1} {u2}");
+    }
+}

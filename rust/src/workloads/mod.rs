@@ -1,0 +1,14 @@
+//! Workload generators + characterization standing in for the paper's
+//! datasets (Criteo, OGB, SNAP, BigBird traces) — see DESIGN.md §2.
+
+pub mod characterize;
+pub mod dlrm;
+pub mod graphs;
+pub mod reuse;
+pub mod spattn;
+
+pub use characterize::{table1, CharRow, CDF_POINTS};
+pub use dlrm::{DlrmConfig, Locality, ALL_RM, RM1, RM2, RM3};
+pub use graphs::{GraphClass, GraphSpec, TABLE2};
+pub use reuse::{reuse_profile, ReuseProfile};
+pub use spattn::SpAttnSpec;

@@ -1,0 +1,114 @@
+//! BigBird block-sparse attention gather patterns (§2.2.2, Fig. 18).
+//!
+//! Each query row attends to: a local window of blocks, a set of global
+//! blocks (shared across all queries — the structured reuse), and a few
+//! random blocks (the low-reuse component). The gather op replicates
+//! the selected key blocks into the query tensor.
+
+use crate::frontend::formats::BlockGathers;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpAttnSpec {
+    /// Sequence length in tokens.
+    pub seq_len: usize,
+    /// Rows per block (the Fig. 18 sweep: 1, 2, 4, 8).
+    pub block: usize,
+    /// Random blocks gathered per query element (BigBird r=3 default;
+    /// Fig. 1 quotes up to 8).
+    pub random_per_query: usize,
+    /// Window radius in blocks.
+    pub window: usize,
+    /// Number of global blocks.
+    pub global: usize,
+    /// Embedding width.
+    pub emb: usize,
+}
+
+impl SpAttnSpec {
+    /// The original BigBird base setting (§8: "original BigBird
+    /// setting while varying the block sizes").
+    pub fn bigbird(block: usize) -> Self {
+        SpAttnSpec {
+            seq_len: 16384,
+            block,
+            random_per_query: 3,
+            window: 1,
+            global: 2,
+            emb: 64,
+        }
+    }
+
+    pub fn num_key_blocks(&self) -> usize {
+        self.seq_len / self.block
+    }
+
+    /// Generate the flattened block-gather list for `queries` query
+    /// blocks.
+    pub fn gen_gathers(&self, queries: usize, seed: u64) -> BlockGathers {
+        let nb = self.num_key_blocks();
+        let mut rng = Rng::new(seed ^ 0xB16B_00B5);
+        let globals: Vec<i32> = (0..self.global).map(|_| rng.below(nb as u64) as i32).collect();
+        let mut idxs = Vec::new();
+        for q in 0..queries {
+            // global blocks (reused by every query)
+            idxs.extend_from_slice(&globals);
+            // local window around the query's own block
+            let qb = (q % nb) as i64;
+            for w in -(self.window as i64)..=(self.window as i64) {
+                idxs.push((qb + w).rem_euclid(nb as i64) as i32);
+            }
+            // random blocks
+            for _ in 0..self.random_per_query {
+                idxs.push(rng.below(nb as u64) as i32);
+            }
+        }
+        BlockGathers { block_idxs: idxs, block: self.block, num_key_blocks: nb }
+    }
+
+    /// Flat key-row trace (for reuse CDFs: larger blocks => longer
+    /// horizontal CDF steps, Table 1).
+    pub fn lookup_trace(&self, queries: usize, seed: u64) -> Vec<u32> {
+        let g = self.gen_gathers(queries, seed);
+        let mut out = Vec::with_capacity(g.block_idxs.len() * self.block);
+        for &b in &g.block_idxs {
+            for r in 0..self.block {
+                out.push((b as usize * self.block + r) as u32);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_partitioning_is_exact() {
+        for block in [1, 2, 4, 8] {
+            let s = SpAttnSpec::bigbird(block);
+            assert_eq!(s.num_key_blocks() * block, s.seq_len);
+        }
+    }
+
+    #[test]
+    fn gathers_per_query_match_spec() {
+        let s = SpAttnSpec::bigbird(4);
+        let g = s.gen_gathers(10, 1);
+        let per_q = s.global + (2 * s.window + 1) + s.random_per_query;
+        assert_eq!(g.block_idxs.len(), 10 * per_q);
+        assert!(g.block_idxs.iter().all(|&b| (b as usize) < s.num_key_blocks()));
+    }
+
+    #[test]
+    fn global_blocks_repeat_across_queries() {
+        let s = SpAttnSpec::bigbird(2);
+        let g = s.gen_gathers(50, 2);
+        let per_q = s.global + (2 * s.window + 1) + s.random_per_query;
+        let g0 = (g.block_idxs[0], g.block_idxs[1]);
+        for q in 1..50 {
+            assert_eq!((g.block_idxs[q * per_q], g.block_idxs[q * per_q + 1]), g0);
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! Smoke tests over the figure/table regeneration harness: every
+//! experiment must run and produce rows with the paper's qualitative
+//! shape (fast subset; the full sweep runs under `cargo bench` /
+//! `ember bench --exp all`).
+
+use ember::harness;
+
+#[test]
+fn tables_regenerate() {
+    for exp in ["table1", "table2", "table3", "table4"] {
+        let reports = harness::run_experiment(exp, 1).unwrap();
+        assert_eq!(reports.len(), 1, "{exp}");
+        assert!(!reports[0].rows.is_empty(), "{exp}");
+    }
+}
+
+#[test]
+fn table1_shape_holds() {
+    let r = &harness::run_experiment("table1", 1).unwrap()[0];
+    // CDF columns are monotone per row and dlrm L2 > L0 at 1K
+    let cdf = |label: &str| r.value(label, "CDF(1K)").unwrap();
+    assert!(cdf("dlrm_RM1_L2") > cdf("dlrm_RM1_L0"));
+}
+
+#[test]
+fn fig4_scaling_is_modest() {
+    let r = &harness::run_experiment("fig4", 1).unwrap()[0];
+    for row in &r.rows {
+        let speed: f64 = row[1].trim_end_matches('x').parse().unwrap();
+        assert!(speed >= 0.95, "{row:?}");
+        assert!(speed < 2.0, "doubling MLP resources must not double perf: {row:?}");
+    }
+}
+
+#[test]
+fn fig18_l2_read_filters_llc_accesses() {
+    let r = &harness::run_experiment("fig18", 1).unwrap()[0];
+    // for each block size, APKE(read-L2) < APKE(read-LLC)
+    for pair in r.rows.chunks(2) {
+        let base: f64 = pair[0][2].parse().unwrap();
+        let opt: f64 = pair[1][2].parse().unwrap();
+        assert!(
+            opt < base * 0.6,
+            "L2 read must filter most LLC accesses: {base} -> {opt}"
+        );
+    }
+}
+
+#[test]
+fn fig19_ember_matches_handopt_within_10pct() {
+    let r = &harness::run_experiment("fig19", 1).unwrap()[0];
+    for row in &r.rows {
+        let rel: f64 = row[3].trim_end_matches('%').parse().unwrap();
+        assert!(
+            (85.0..=115.0).contains(&rel),
+            "emb-opt3 must be within 15% of ref-dae: {row:?}"
+        );
+    }
+}

@@ -1,0 +1,165 @@
+//! Integration tests across the full stack:
+//! compiler → interpreter → simulator → runtime (PJRT) → coordinator.
+//!
+//! PJRT-dependent tests skip gracefully when `artifacts/` has not been
+//! built (`make artifacts`); CI always builds artifacts first.
+
+use ember::compiler::passes::pipeline::{compile, CompileOptions, OptLevel};
+use ember::coordinator::{BatchOptions, Coordinator, DlrmModel, Request, Router};
+use ember::dae::MachineConfig;
+use ember::data::Tensor;
+use ember::frontend::embedding_ops::OpClass;
+use ember::frontend::formats::Csr;
+use ember::harness::simulate;
+use ember::runtime::{ArgData, Runtime};
+use ember::util::rng::Rng;
+use std::path::Path;
+use std::time::Duration;
+
+fn artifacts_dir() -> Option<&'static str> {
+    if Path::new("artifacts/manifest.json").exists() {
+        Some("artifacts")
+    } else {
+        eprintln!("skipping PJRT test: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn pjrt_sls_artifact_matches_compiled_program() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::new(dir).unwrap();
+    let rows = rt.manifest_usize(&["dlrm", "table_rows"]).unwrap();
+    let emb = rt.manifest_usize(&["dlrm", "emb"]).unwrap();
+    let batch = rt.manifest_usize(&["dlrm", "batch"]).unwrap();
+    let maxl = rt.manifest_usize(&["dlrm", "max_lookups"]).unwrap();
+
+    let mut rng = Rng::new(77);
+    let table = Tensor::f32(vec![rows, emb], rng.normal_vec(rows * emb, 0.5));
+    let lists: Vec<Vec<i32>> = (0..batch)
+        .map(|_| (0..(1 + rng.below(maxl as u64 - 1) as usize))
+            .map(|_| rng.below(rows as u64) as i32)
+            .collect())
+        .collect();
+    let csr = Csr::from_rows(rows, &lists);
+
+    // PJRT path: the Pallas SLS kernel AOT-lowered to HLO
+    let (idxs, lens, _) = csr.to_padded(maxl);
+    let oracle = rt
+        .execute_f32(
+            "sls",
+            &[
+                ArgData::f32(table.as_f32(), &[rows, emb]),
+                ArgData::i32(idxs, &[batch, maxl]),
+                ArgData::i32(lens, &[batch]),
+            ],
+        )
+        .unwrap();
+
+    // Ember path: compiled DLC program interpreted on the same data
+    for opt in OptLevel::ALL {
+        let prog = compile(&OpClass::Sls, CompileOptions::at(opt)).unwrap();
+        let mut env = csr.bind_sls_env(&table, false);
+        let got = ember::interp::run_program(&prog.dlc, &mut env).unwrap();
+        ember::util::quick::allclose(&got, &oracle, 1e-4, 1e-4)
+            .unwrap_or_else(|e| panic!("{opt}: {e}"));
+    }
+}
+
+#[test]
+fn coordinator_through_pjrt_matches_cpu_path() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(dir).unwrap();
+    let model = DlrmModel::from_manifest(&rt, 42).unwrap();
+    let tables = model.num_tables;
+    let rows = model.table_rows;
+    let dense = model.dense;
+    let mut rng = Rng::new(5);
+    let reqs: Vec<Request> = (0..8)
+        .map(|i| Request {
+            id: i,
+            lookups: (0..tables)
+                .map(|_| (0..10).map(|_| rng.below(rows as u64) as i32).collect())
+                .collect(),
+            dense: (0..dense).map(|_| rng.f32()).collect(),
+        })
+        .collect();
+
+    let cpu = model.infer_batch_cpu(&reqs).unwrap();
+
+    let coord = Coordinator::start(
+        DlrmModel::from_manifest(&rt, 42).unwrap(),
+        Some(dir.into()),
+        BatchOptions { max_batch: 8, max_wait: Duration::from_millis(1) },
+    );
+    let mut got: Vec<_> = reqs
+        .iter()
+        .map(|r| coord.infer(r.clone()).unwrap())
+        .collect();
+    got.sort_by_key(|r| r.id);
+    coord.shutdown();
+    for (g, c) in got.iter().zip(&cpu) {
+        assert_eq!(g.id, c.id);
+        assert!((g.score - c.score).abs() < 1e-4, "{} vs {}", g.score, c.score);
+    }
+}
+
+#[test]
+fn router_dispatches_to_multiple_models() {
+    let mk = || {
+        Coordinator::start(
+            DlrmModel::new(4, 64, 8, 1, 6, 3, 16, 7).unwrap(),
+            None,
+            BatchOptions { max_batch: 2, max_wait: Duration::from_millis(1) },
+        )
+    };
+    let mut router = Router::new();
+    router.register("a", mk());
+    router.register("b", mk());
+    let req = Request { id: 1, lookups: vec![vec![5, 6]], dense: vec![0.5; 3] };
+    let ra = router.infer("a", req.clone()).unwrap();
+    let rb = router.infer("b", req).unwrap();
+    // same weights (same seed) => same score
+    assert!((ra.score - rb.score).abs() < 1e-6);
+    router.shutdown();
+}
+
+#[test]
+fn end_to_end_dae_advantage_holds_across_opclasses() {
+    // the paper's headline shape: decoupling wins on every op class
+    let mut rng = Rng::new(12);
+    let table = Tensor::f32(vec![2048, 64], rng.normal_vec(2048 * 64, 0.5));
+    let lists: Vec<Vec<i32>> =
+        (0..32).map(|_| (0..24).map(|_| rng.below(2048) as i32).collect()).collect();
+    let csr = Csr::from_rows(2048, &lists);
+
+    for op in [OpClass::Sls, OpClass::Spmm] {
+        let weighted = matches!(op, OpClass::Spmm);
+        let coupled = compile(&op, CompileOptions::at(OptLevel::O1)).unwrap();
+        let dae = compile(&op, CompileOptions::at(OptLevel::O3)).unwrap();
+        let mut e1 = csr.bind_sls_env(&table, weighted);
+        let mut e2 = csr.bind_sls_env(&table, weighted);
+        let c = simulate(&coupled, MachineConfig::traditional_core(), &mut e1).unwrap();
+        let d = simulate(&dae, MachineConfig::dae_tmu(), &mut e2).unwrap();
+        assert!(
+            d.cycles < c.cycles,
+            "{:?}: dae {} !< coupled {}",
+            op,
+            d.cycles,
+            c.cycles
+        );
+    }
+}
+
+#[test]
+fn compile_cli_pipeline_emits_all_irs() {
+    // exercise the same path as `ember compile`
+    let p = compile(&OpClass::Sls, CompileOptions::at(OptLevel::O3)).unwrap();
+    let scf = p.scf.to_string();
+    let slc = p.slc.to_string();
+    let dlc = p.dlc.to_string();
+    assert!(scf.contains("for("));
+    assert!(slc.contains("slcv.for"));
+    assert!(dlc.contains("loop_tr"));
+    assert!(dlc.contains("ctrlQ.pop()"));
+}

@@ -1,0 +1,370 @@
+//! Property-based tests over compiler/simulator/coordinator invariants
+//! (via the in-tree `util::quick` driver — proptest is unavailable in
+//! this offline image; failing seeds are replayable with
+//! `EMBER_QUICK_SEED=<n>`).
+
+use ember::compiler::passes::pipeline::{compile, CompileOptions, OptLevel};
+use ember::coordinator::batcher::{BatchOptions, Batcher};
+use ember::coordinator::Request;
+use ember::dae::{DaeSim, MachineConfig};
+use ember::data::Tensor;
+use ember::frontend::embedding_ops::{OpClass, Semiring};
+use ember::frontend::formats::{bind_mp_env, BlockGathers, Csr, FlatLookups};
+use ember::interp::{run_program, Interp};
+use ember::util::quick::{allclose, check};
+use ember::util::rng::Rng;
+use ember::workloads::reuse::reuse_profile;
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+fn rand_csr(rng: &mut Rng, rows: usize, cols: usize, max_deg: usize) -> Csr {
+    let r: Vec<Vec<i32>> = (0..rows)
+        .map(|_| {
+            let d = rng.below(max_deg as u64 + 1) as usize;
+            (0..d).map(|_| rng.below(cols as u64) as i32).collect()
+        })
+        .collect();
+    Csr::from_rows(cols, &r)
+}
+
+/// Dense SLS/SpMM reference.
+fn sls_ref(csr: &Csr, table: &Tensor, weighted: bool) -> Vec<f32> {
+    let emb = table.dims[1];
+    let mut out = vec![0f32; csr.num_rows * emb];
+    for b in 0..csr.num_rows {
+        for p in csr.ptrs[b] as usize..csr.ptrs[b + 1] as usize {
+            let i = csr.idxs[p] as usize;
+            let w = if weighted && !csr.vals.is_empty() { csr.vals[p] } else { 1.0 };
+            for e in 0..emb {
+                out[b * emb + e] += w * table.buf.get_f(i * emb + e);
+            }
+        }
+    }
+    out
+}
+
+/// Property 1: compiled-program numerics equal the dense reference for
+/// every opt level, on random shapes (including emb lengths that are
+/// not multiples of the vector length and empty segments).
+#[test]
+fn prop_sls_numerics_all_levels() {
+    check("sls numerics", 24, |rng| {
+        let rows = 2 + rng.below(20) as usize;
+        let cols = 8 + rng.below(120) as usize;
+        let emb = 1 + rng.below(37) as usize;
+        let deg = rng.below(12) as usize;
+        let table = Tensor::f32(vec![cols, emb], rng.normal_vec(cols * emb, 1.0));
+        let csr = rand_csr(rng, rows, cols, deg);
+        let want = sls_ref(&csr, &table, false);
+        for opt in OptLevel::ALL {
+            let prog = compile(&OpClass::Sls, CompileOptions::at(opt))
+                .map_err(|e| e.to_string())?;
+            let mut env = csr.bind_sls_env(&table, false);
+            let got = run_program(&prog.dlc, &mut env).map_err(|e| e.to_string())?;
+            allclose(&got, &want, 1e-4, 1e-4).map_err(|e| format!("{opt}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_spmm_numerics_all_levels() {
+    check("spmm numerics", 16, |rng| {
+        let rows = 2 + rng.below(12) as usize;
+        let cols = 8 + rng.below(60) as usize;
+        let emb = 2 + rng.below(21) as usize;
+        let table = Tensor::f32(vec![cols, emb], rng.normal_vec(cols * emb, 1.0));
+        let csr = rand_csr(rng, rows, cols, 8);
+        let vals = rng.normal_vec(csr.nnz(), 1.0);
+        let csr = csr.with_vals(vals);
+        let want = sls_ref(&csr, &table, true);
+        for opt in [OptLevel::O0, OptLevel::O3] {
+            let prog = compile(&OpClass::Spmm, CompileOptions::at(opt))
+                .map_err(|e| e.to_string())?;
+            let mut env = csr.bind_sls_env(&table, true);
+            let got = run_program(&prog.dlc, &mut env).map_err(|e| e.to_string())?;
+            allclose(&got, &want, 1e-3, 1e-3).map_err(|e| format!("{opt}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mp_numerics_all_levels() {
+    check("mp numerics", 12, |rng| {
+        let n = 3 + rng.below(10) as usize;
+        let emb = 2 + rng.below(15) as usize;
+        let feats = Tensor::f32(vec![n, emb], rng.normal_vec(n * emb, 0.7));
+        let csr = rand_csr(rng, n, n, 5);
+        let mut want = vec![0f32; n * emb];
+        for i in 0..n {
+            for p in csr.ptrs[i] as usize..csr.ptrs[i + 1] as usize {
+                let j = csr.idxs[p] as usize;
+                let s: f32 = (0..emb)
+                    .map(|e| feats.buf.get_f(i * emb + e) * feats.buf.get_f(j * emb + e))
+                    .sum();
+                for e in 0..emb {
+                    want[i * emb + e] += s * feats.buf.get_f(j * emb + e);
+                }
+            }
+        }
+        for opt in [OptLevel::O0, OptLevel::O2, OptLevel::O3] {
+            let prog =
+                compile(&OpClass::Mp, CompileOptions::at(opt)).map_err(|e| e.to_string())?;
+            let mut env = bind_mp_env(&csr, &feats);
+            let got = run_program(&prog.dlc, &mut env).map_err(|e| e.to_string())?;
+            allclose(&got, &want, 1e-2, 1e-2).map_err(|e| format!("{opt}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kg_and_spattn_numerics() {
+    check("kg/spattn numerics", 12, |rng| {
+        // KG
+        let n = 8 + rng.below(60) as usize;
+        let emb = 1 + rng.below(16) as usize;
+        let table = Tensor::f32(vec![n, emb], rng.normal_vec(n * emb, 1.0));
+        let q = 1 + rng.below(20) as usize;
+        let idxs: Vec<i32> = (0..q).map(|_| rng.below(n as u64) as i32).collect();
+        let fl = FlatLookups { idxs: idxs.clone(), num_rows: n };
+        let prog = compile(&OpClass::Kg(Semiring::MaxPlus), CompileOptions::at(OptLevel::O3))
+            .map_err(|e| e.to_string())?;
+        let mut env = fl.bind_kg_env(&table);
+        let got = run_program(&prog.dlc, &mut env).map_err(|e| e.to_string())?;
+        for (qi, &i) in idxs.iter().enumerate() {
+            for e in 0..emb {
+                let want = table.buf.get_f(i as usize * emb + e).max(0.0);
+                if (got[qi * emb + e] - want).abs() > 1e-5 {
+                    return Err(format!("kg mismatch at ({qi},{e})"));
+                }
+            }
+        }
+        // SpAttn
+        let block = 1 + rng.below(6) as usize;
+        let nb = 2 + rng.below(16) as usize;
+        let keys = Tensor::f32(vec![nb * block, emb], rng.normal_vec(nb * block * emb, 1.0));
+        let g = BlockGathers {
+            block_idxs: (0..4).map(|_| rng.below(nb as u64) as i32).collect(),
+            block,
+            num_key_blocks: nb,
+        };
+        let prog = compile(&OpClass::SpAttn { block }, CompileOptions::at(OptLevel::O3))
+            .map_err(|e| e.to_string())?;
+        let mut env = g.bind_spattn_env(&keys);
+        let got = run_program(&prog.dlc, &mut env).map_err(|e| e.to_string())?;
+        for (gi, &b) in g.block_idxs.iter().enumerate() {
+            for r in 0..block {
+                for e in 0..emb {
+                    let want = keys.buf.get_f((b as usize * block + r) * emb + e);
+                    if (got[(gi * block + r) * emb + e] - want).abs() > 1e-6 {
+                        return Err(format!("spattn mismatch at ({gi},{r},{e})"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Property 2: simulator conservation — every byte pushed is popped,
+/// every control token is dispatched, and the clock is finite, for
+/// random machine parameters (no deadlock under any queue/MSHR sizing).
+#[test]
+fn prop_simulator_conservation() {
+    check("simulator conservation", 16, |rng| {
+        let mut cfg = MachineConfig::dae_tmu();
+        let a = cfg.access.as_mut().unwrap();
+        a.max_outstanding = 1 + rng.below(128) as usize;
+        cfg.queues.data_bytes = 64 << rng.below(8); // 64B .. 8KB
+        cfg.queues.ctrl_tokens = 1 + rng.below(512) as usize;
+
+        let rows = 2 + rng.below(12) as usize;
+        let cols = 32 + rng.below(200) as usize;
+        let emb = 4 + rng.below(28) as usize;
+        let table = Tensor::f32(vec![cols, emb], rng.normal_vec(cols * emb, 1.0));
+        let csr = rand_csr(rng, rows, cols, 10);
+        let opt = [OptLevel::O0, OptLevel::O1, OptLevel::O2, OptLevel::O3]
+            [rng.below(4) as usize];
+        let prog = compile(&OpClass::Sls, CompileOptions::at(opt)).map_err(|e| e.to_string())?;
+        let mut env = csr.bind_sls_env(&table, false);
+        let mut sim = DaeSim::new(cfg);
+        let mut interp = Interp::new(&prog.dlc).map_err(|e| e.to_string())?;
+        interp.run(&mut env, &mut sim).map_err(|e| e.to_string())?;
+        let (dp, dq, cp, cq) = sim.queue_conservation();
+        if dp != dq {
+            return Err(format!("data bytes pushed {dp} != popped {dq}"));
+        }
+        if cp != cq {
+            return Err(format!("ctrl tokens pushed {cp} != popped {cq}"));
+        }
+        if sim.cycles() == 0 && csr.nnz() > 0 {
+            return Err("zero cycles for non-empty workload".into());
+        }
+        Ok(())
+    });
+}
+
+/// Property 3: numerics are machine-independent — timing configs can
+/// never change results.
+#[test]
+fn prop_results_machine_independent() {
+    check("machine independence", 8, |rng| {
+        let cols = 32 + rng.below(100) as usize;
+        let emb = 3 + rng.below(20) as usize;
+        let table = Tensor::f32(vec![cols, emb], rng.normal_vec(cols * emb, 1.0));
+        let csr = rand_csr(rng, 6, cols, 8);
+        let prog =
+            compile(&OpClass::Sls, CompileOptions::at(OptLevel::O3)).map_err(|e| e.to_string())?;
+        let mut outs = Vec::new();
+        for cfg in [
+            MachineConfig::traditional_core(),
+            MachineConfig::dae_tmu(),
+            MachineConfig::h100_like(),
+        ] {
+            let mut env = csr.bind_sls_env(&table, false);
+            let mut sim = DaeSim::new(cfg);
+            let mut interp = Interp::new(&prog.dlc).map_err(|e| e.to_string())?;
+            interp.run(&mut env, &mut sim).map_err(|e| e.to_string())?;
+            outs.push(env.tensors.get("out").unwrap().as_f32());
+        }
+        if outs[0] != outs[1] || outs[1] != outs[2] {
+            return Err("results differ across machines".into());
+        }
+        Ok(())
+    });
+}
+
+/// Property 4: batcher routes every request into exactly one batch and
+/// preserves submission order.
+#[test]
+fn prop_batcher_partition() {
+    check("batcher partition", 20, |rng| {
+        let max_batch = 1 + rng.below(16) as usize;
+        let n = 1 + rng.below(100) as usize;
+        let mut b = Batcher::new(BatchOptions {
+            max_batch,
+            max_wait: Duration::from_millis(1),
+        });
+        let t0 = Instant::now();
+        let mut emitted: Vec<u64> = Vec::new();
+        for i in 0..n as u64 {
+            let r = Request { id: i, lookups: vec![vec![0]], dense: vec![] };
+            if let Some(batch) = b.push(r, t0) {
+                if batch.len() > max_batch {
+                    return Err(format!("oversized batch {}", batch.len()));
+                }
+                emitted.extend(batch.iter().map(|r| r.id));
+            }
+        }
+        emitted.extend(b.flush().iter().map(|r| r.id));
+        if emitted != (0..n as u64).collect::<Vec<_>>() {
+            return Err(format!("requests lost/duplicated/reordered: {emitted:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// Property 5: the Fenwick reuse profiler matches a naive LRU stack.
+#[test]
+fn prop_reuse_matches_naive() {
+    check("reuse distance", 16, |rng| {
+        let n = 50 + rng.below(400) as usize;
+        let span = 1 + rng.below(60) as u64;
+        let trace: Vec<u32> = (0..n).map(|_| rng.below(span) as u32).collect();
+        let p = reuse_profile(&trace);
+        // naive
+        let mut stack: Vec<u32> = Vec::new();
+        let mut naive: HashMap<usize, u64> = HashMap::new();
+        let mut cold = 0u64;
+        for &x in &trace {
+            match stack.iter().position(|&y| y == x) {
+                Some(pos) => {
+                    *naive.entry(pos).or_insert(0) += 1;
+                    stack.remove(pos);
+                }
+                None => cold += 1,
+            }
+            stack.insert(0, x);
+        }
+        if p.cold != cold {
+            return Err(format!("cold {} != {}", p.cold, cold));
+        }
+        for x in [0usize, 1, 2, 5, 10, 50] {
+            let naive_cdf: u64 =
+                naive.iter().filter(|(d, _)| **d <= x).map(|(_, c)| *c).sum();
+            let want = naive_cdf as f64 / trace.len() as f64;
+            if (p.cdf(x) - want).abs() > 1e-9 {
+                return Err(format!("cdf({x}) {} != {}", p.cdf(x), want));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Property 6: JSON round-trips arbitrary generated documents.
+#[test]
+fn prop_json_roundtrip() {
+    use ember::util::json::Json;
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 1),
+            2 => Json::Num((rng.below(100000) as f64) / 4.0 - 5000.0),
+            3 => Json::Str(format!("s{}", rng.below(1000))),
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check("json roundtrip", 40, |rng| {
+        let doc = gen(rng, 3);
+        let text = doc.to_string();
+        let back = Json::parse(&text).map_err(|e| e.to_string())?;
+        if back != doc {
+            return Err(format!("roundtrip mismatch: {text}"));
+        }
+        Ok(())
+    });
+}
+
+/// Property 7: decoupling legality — compiled lookup code never reads a
+/// memref the function writes (§6.2 condition 2), at any opt level.
+#[test]
+fn prop_lookup_never_reads_written_memrefs() {
+    check("lookup read-only", 6, |rng| {
+        let ops = [
+            OpClass::Sls,
+            OpClass::Spmm,
+            OpClass::Mp,
+            OpClass::Kg(Semiring::PlusTimes),
+            OpClass::SpAttn { block: 2 },
+        ];
+        let op = &ops[rng.below(5) as usize];
+        for opt in OptLevel::ALL {
+            let prog = compile(op, CompileOptions::at(opt)).map_err(|e| e.to_string())?;
+            let written: Vec<&str> = prog
+                .dlc
+                .args
+                .iter()
+                .filter(|m| m.written)
+                .map(|m| m.name.as_str())
+                .collect();
+            for lop in &prog.dlc.lookup {
+                if let ember::ir::dlc::DlcOp::MemStr { mem, .. } = lop {
+                    if written.contains(&mem.as_str()) {
+                        return Err(format!(
+                            "{} at {opt}: lookup reads written memref `{mem}`",
+                            prog.dlc.name
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
