@@ -6,15 +6,16 @@
 //! Run: `make artifacts && cargo run --release --example bigbird_gather`
 
 use ember::compiler::passes::model_specific::SpAttnConfig;
-use ember::compiler::passes::pipeline::{compile, CompileOptions, OptLevel};
 use ember::dae::MachineConfig;
 use ember::data::Tensor;
-use ember::frontend::embedding_ops::OpClass;
+use ember::frontend::BlockGather;
 use ember::harness::simulate;
 use ember::interp::run_program;
 use ember::runtime::{ArgData, Runtime};
+use ember::session::EmberSession;
 use ember::util::rng::Rng;
 use ember::workloads::spattn::SpAttnSpec;
+use ember::{CompileOptions, OptLevel};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
@@ -36,22 +37,30 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     // compile with store streams: the DLC program has ZERO compute
     // handlers — the core never touches the data (the 17x case).
-    let prog = compile(&OpClass::SpAttn { block }, CompileOptions::at(OptLevel::O3))?;
+    let gather = BlockGather::new(block, emb).with_gathers(gathers);
+    let mut session = EmberSession::default();
+    let prog = session.compile(&gather)?;
     assert!(prog.dlc.compute.is_empty(), "store-stream SpAttn must have no callbacks");
     println!("compiled SpAttn: {} lookup ops, 0 compute handlers (full offload)\n", prog.dlc.lookup.len());
 
-    // numerics vs the Pallas gather kernel through PJRT
+    // numerics vs the Pallas gather kernel through PJRT (skipped when
+    // the runtime is the no-`pjrt` stub or artifacts are absent)
     let mut env = bg.bind_spattn_env(&keys);
     let got = run_program(&prog.dlc, &mut env)?;
-    let oracle = rt.execute_f32(
+    match rt.execute_f32(
         "bigbird_gather",
         &[
             ArgData::f32(keys.as_f32(), &[keys_n, emb]),
             ArgData::i32(bidx, &[gathers]),
         ],
-    )?;
-    ember::util::quick::allclose(&got, &oracle, 1e-6, 1e-6).map_err(std::io::Error::other)?;
-    println!("numerics: store-stream DAE gather == Pallas gather kernel (PJRT) ✓\n");
+    ) {
+        Ok(oracle) => {
+            ember::util::quick::allclose(&got, &oracle, 1e-6, 1e-6)
+                .map_err(std::io::Error::other)?;
+            println!("numerics: store-stream DAE gather == Pallas gather kernel (PJRT) ✓\n");
+        }
+        Err(e) => println!("skipping PJRT oracle check: {e}\n"),
+    }
 
     // Fig. 18-shaped ablation: value fetch level + non-temporal indexes
     println!("cache-hint ablation on the DAE machine (Fig. 18):");
@@ -61,9 +70,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         ("read-L2,  temporal idx", SpAttnConfig { value_level: 2, nt_indexes: false }),
         ("read-L2,  nt idx", SpAttnConfig { value_level: 2, nt_indexes: true }),
     ] {
-        let p = compile(
-            &OpClass::SpAttn { block },
-            CompileOptions { opt: OptLevel::O3, spattn: cfg, ..Default::default() },
+        let p = session.compile_with(
+            &gather,
+            CompileOptions::with_opt(OptLevel::O3).with_spattn(cfg),
         )?;
         let spec = SpAttnSpec::bigbird(block);
         let g = spec.gen_gathers(128, 7);

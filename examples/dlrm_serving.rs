@@ -4,12 +4,14 @@
 //!   * L1/L2 (build time): the Pallas SLS kernel + JAX MLP were AOT-
 //!     lowered to `artifacts/*.hlo.txt` by `make artifacts`.
 //!   * Runtime: the Rust coordinator routes + batches requests; the
-//!     embedding stage runs the Ember-compiled DLC program; the MLP
-//!     runs through PJRT. Python is never on the request path.
+//!     embedding stage runs the Ember-compiled DLC program (compiled
+//!     once through the coordinator's `EmberSession`); the MLP runs
+//!     through PJRT. Python is never on the request path.
 //!
-//! The run (a) checks end-to-end numerics against the fused
-//! `dlrm_full` JAX oracle executed via PJRT, and (b) reports serving
-//! latency/throughput — the record goes in EXPERIMENTS.md.
+//! When PJRT is unavailable (default build without the `pjrt` feature,
+//! or no `artifacts/`), the example degrades to the pure-Rust MLP path:
+//! the fused-oracle numerics check is skipped, the serving benchmark
+//! still runs.
 //!
 //! Run: `make artifacts && cargo run --release --example dlrm_serving`
 
@@ -22,10 +24,26 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
     let mut rt = Runtime::new(&artifacts)?;
     println!("PJRT platform: {}", rt.platform());
-    let loaded = rt.load_all()?;
-    println!("compiled {} artifacts: {:?}\n", loaded.len(), loaded);
+    let pjrt = match rt.load_all() {
+        Ok(loaded) if rt.manifest_usize(&["dlrm", "batch"]).is_some() => {
+            println!("compiled {} artifacts: {:?}\n", loaded.len(), loaded);
+            true
+        }
+        Ok(_) => {
+            println!("no dlrm artifacts found; serving with the pure-Rust MLP\n");
+            false
+        }
+        Err(e) => {
+            println!("PJRT unavailable ({e}); serving with the pure-Rust MLP\n");
+            false
+        }
+    };
 
-    let model = DlrmModel::from_manifest(&rt, 42)?;
+    let model = if pjrt {
+        DlrmModel::from_manifest(&rt, 42)?
+    } else {
+        DlrmModel::new(8, 4096, 16, 2, 24, 13, 64, 42)?
+    };
     let (batch, tables, rows, max_lookups, dense_n) = (
         model.batch,
         model.num_tables,
@@ -46,54 +64,69 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         })
         .collect();
 
-    let ours = model.infer_batch(&mut rt, &requests)?;
+    if pjrt {
+        let ours = model.infer_batch(&mut rt, &requests)?;
 
-    // oracle: one fused PJRT call with the same tables/weights
-    let (idxs, lens): (Vec<Vec<i32>>, Vec<Vec<i32>>) = (0..tables)
-        .map(|t| {
-            let mut idx = vec![0i32; batch * max_lookups];
-            let mut len = vec![0i32; batch];
-            for (i, r) in requests.iter().enumerate() {
-                let l = &r.lookups[t];
-                len[i] = l.len() as i32;
-                idx[i * max_lookups..i * max_lookups + l.len()].copy_from_slice(l);
-            }
-            (idx, len)
-        })
-        .unzip();
-    let dense_flat: Vec<f32> = (0..batch)
-        .flat_map(|i| requests[i].dense.clone())
-        .collect();
-    let d_in = tables * model.emb + dense_n;
-    let oracle = rt.execute_f32(
-        "dlrm_full",
-        &[
-            ArgData::f32(model.tables[0].as_f32(), &[rows, model.emb]),
-            ArgData::f32(model.tables[1].as_f32(), &[rows, model.emb]),
-            ArgData::i32(idxs[0].clone(), &[batch, max_lookups]),
-            ArgData::i32(lens[0].clone(), &[batch]),
-            ArgData::i32(idxs[1].clone(), &[batch, max_lookups]),
-            ArgData::i32(lens[1].clone(), &[batch]),
-            ArgData::f32(dense_flat, &[batch, dense_n]),
-            ArgData::f32(model.w1.clone(), &[d_in, model.hidden]),
-            ArgData::f32(model.b1.clone(), &[model.hidden]),
-            ArgData::f32(model.w2.clone(), &[model.hidden, 1]),
-            ArgData::f32(model.b2.clone(), &[1]),
-        ],
-    )?;
-    let got: Vec<f32> = ours.iter().map(|r| r.score).collect();
-    ember::util::quick::allclose(&got, &oracle[..got.len()], 1e-4, 1e-5)
-        .map_err(std::io::Error::other)?;
-    println!(
-        "numerics: coordinator (DAE embedding + PJRT MLP) == fused JAX dlrm_full oracle ✓ \
-         (batch of {batch}, max |ctr| diff < 1e-4)\n"
-    );
+        // oracle: one fused PJRT call with the same tables/weights
+        let (idxs, lens): (Vec<Vec<i32>>, Vec<Vec<i32>>) = (0..tables)
+            .map(|t| {
+                let mut idx = vec![0i32; batch * max_lookups];
+                let mut len = vec![0i32; batch];
+                for (i, r) in requests.iter().enumerate() {
+                    let l = &r.lookups[t];
+                    len[i] = l.len() as i32;
+                    idx[i * max_lookups..i * max_lookups + l.len()].copy_from_slice(l);
+                }
+                (idx, len)
+            })
+            .unzip();
+        let dense_flat: Vec<f32> = (0..batch)
+            .flat_map(|i| requests[i].dense.clone())
+            .collect();
+        let d_in = tables * model.emb + dense_n;
+        let oracle = rt.execute_f32(
+            "dlrm_full",
+            &[
+                ArgData::f32(model.tables[0].as_f32(), &[rows, model.emb]),
+                ArgData::f32(model.tables[1].as_f32(), &[rows, model.emb]),
+                ArgData::i32(idxs[0].clone(), &[batch, max_lookups]),
+                ArgData::i32(lens[0].clone(), &[batch]),
+                ArgData::i32(idxs[1].clone(), &[batch, max_lookups]),
+                ArgData::i32(lens[1].clone(), &[batch]),
+                ArgData::f32(dense_flat, &[batch, dense_n]),
+                ArgData::f32(model.w1.clone(), &[d_in, model.hidden]),
+                ArgData::f32(model.b1.clone(), &[model.hidden]),
+                ArgData::f32(model.w2.clone(), &[model.hidden, 1]),
+                ArgData::f32(model.b2.clone(), &[1]),
+            ],
+        )?;
+        let got: Vec<f32> = ours.iter().map(|r| r.score).collect();
+        ember::util::quick::allclose(&got, &oracle[..got.len()], 1e-4, 1e-5)
+            .map_err(std::io::Error::other)?;
+        println!(
+            "numerics: coordinator (DAE embedding + PJRT MLP) == fused JAX dlrm_full oracle ✓ \
+             (batch of {batch}, max |ctr| diff < 1e-4)\n"
+        );
+    } else {
+        let ours = model.infer_batch_cpu(&requests)?;
+        println!(
+            "CPU path: served a warm-up batch of {} (first ctr {:.4}); \
+             fused-oracle check skipped without PJRT\n",
+            ours.len(),
+            ours[0].score
+        );
+    }
 
     // ---- serving benchmark ----
     let n_requests = 2048usize;
+    let worker_model = if pjrt {
+        DlrmModel::from_manifest(&rt, 42)?
+    } else {
+        DlrmModel::new(8, 4096, 16, 2, 24, 13, 64, 42)?
+    };
     let coord = Coordinator::start(
-        DlrmModel::from_manifest(&rt, 42)?,
-        Some(artifacts.clone().into()),
+        worker_model,
+        if pjrt { Some(artifacts.clone().into()) } else { None },
         BatchOptions { max_batch: batch, max_wait: Duration::from_millis(1) },
     );
     // concurrent open-loop clients
@@ -128,6 +161,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         lat[(lat.len() as f64 * 0.95) as usize],
         lat[((lat.len() as f64 * 0.99) as usize).min(lat.len() - 1)]
     );
-    println!("batches: {} (mean size {:.1})", stats.batches, n_requests as f64 / stats.batches as f64);
+    println!(
+        "batches: {} (mean size {:.1})",
+        stats.batches,
+        n_requests as f64 / stats.batches as f64
+    );
     Ok(())
 }

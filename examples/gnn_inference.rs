@@ -4,15 +4,16 @@
 //!
 //! Run: `make artifacts && cargo run --release --example gnn_inference`
 
-use ember::compiler::passes::pipeline::{compile, CompileOptions, OptLevel};
 use ember::dae::MachineConfig;
 use ember::data::Tensor;
-use ember::frontend::embedding_ops::OpClass;
 use ember::frontend::formats::Csr;
+use ember::frontend::GraphAggregate;
 use ember::harness::simulate;
 use ember::interp::run_program;
 use ember::runtime::{ArgData, Runtime};
+use ember::session::EmberSession;
 use ember::util::rng::Rng;
+use ember::{CompileOptions, OptLevel};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
@@ -36,7 +37,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let b = vec![0f32; out_w];
 
     // ---- layer 1: DAE-compiled SpMM aggregation, then PJRT check ----
-    let program = compile(&OpClass::Spmm, CompileOptions::at(OptLevel::O3))?;
+    // declare the PyG-shaped aggregation; the session compiles it
+    let aggregate = GraphAggregate { num_nodes: nodes, feature_dim: feat, fused_sddmm: false };
+    let mut session = EmberSession::default();
+    let program = session.compile(&aggregate)?;
     let mut env = csr.bind_sls_env(&feats, true);
     let agg = run_program(&program.dlc, &mut env)?;
 
@@ -53,8 +57,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     }
 
     // oracle: the fused JAX gnn_layer (Pallas SpMM + dense) via PJRT
+    // (skipped when the runtime is the no-`pjrt` stub or artifacts are absent)
     let (idxs, lens, vals) = csr.to_padded(max_deg);
-    let oracle = rt.execute_f32(
+    match rt.execute_f32(
         "gnn_layer",
         &[
             ArgData::f32(feats.as_f32(), &[nodes, feat]),
@@ -64,9 +69,14 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             ArgData::f32(w.clone(), &[feat, out_w]),
             ArgData::f32(b.clone(), &[out_w]),
         ],
-    )?;
-    ember::util::quick::allclose(&h1, &oracle, 1e-3, 1e-3).map_err(std::io::Error::other)?;
-    println!("layer numerics: DAE aggregation + dense == fused JAX gnn_layer (PJRT) ✓");
+    ) {
+        Ok(oracle) => {
+            ember::util::quick::allclose(&h1, &oracle, 1e-3, 1e-3)
+                .map_err(std::io::Error::other)?;
+            println!("layer numerics: DAE aggregation + dense == fused JAX gnn_layer (PJRT) ✓");
+        }
+        Err(e) => println!("skipping PJRT oracle check: {e}"),
+    }
 
     // ---- layer 2 chained on layer-1 output ----
     let feats2 = Tensor::f32(vec![nodes, out_w], h1);
@@ -81,7 +91,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     // ---- Fig. 8-shaped comparison: DAE vs GPU-class embedding stage ----
     let mut e_dae = csr.bind_sls_env(&feats, true);
     let dae = simulate(&program, MachineConfig::dae_tmu(), &mut e_dae)?;
-    let coupled = compile(&OpClass::Spmm, CompileOptions::at(OptLevel::O1))?;
+    let coupled = session.compile_with(&aggregate, CompileOptions::with_opt(OptLevel::O1))?;
     let mut e_t4 = csr.bind_sls_env(&feats, true);
     let t4 = simulate(&coupled, MachineConfig::t4_like(), &mut e_t4)?;
     println!("embedding stage, simulated per core slice:");

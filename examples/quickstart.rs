@@ -3,27 +3,56 @@
 //! dense reference, and compare simulated DAE vs traditional-core
 //! performance.
 //!
+//! ## The compilation API
+//!
+//! Compilation goes through an [`EmberSession`]: a cached, multi-op
+//! driver over the declarative pass pipeline. The one-op path is one
+//! line — before / after:
+//!
+//! ```ignore
+//! // old (deprecated shim, still works):
+//! let program = compile(&bag.op_class(), CompileOptions::at(OptLevel::O3))?;
+//! // new:
+//! let program = EmberSession::default().compile(&bag)?;
+//! ```
+//!
+//! The session also exposes what the old API could not:
+//! * `session.traces()` — per-pass timing and op-count deltas,
+//! * `session.set_dump_ir(..)` — print the SLC after every pass,
+//! * `session.add(..)` + `session.compile_all()` — multi-op modules
+//!   with `(OpClass, CompileOptions)` deduplication.
+//!
 //! Run: `cargo run --release --example quickstart`
 
-use ember::compiler::passes::pipeline::{compile, CompileOptions, OptLevel};
 use ember::dae::MachineConfig;
 use ember::data::Tensor;
 use ember::frontend::torch_like::EmbeddingBag;
-use ember::frontend::formats::Csr;
+use ember::frontend::{Csr, Frontend};
 use ember::harness::simulate;
 use ember::interp::run_program;
+use ember::session::EmberSession;
 use ember::util::rng::Rng;
+use ember::{CompileOptions, OptLevel};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     // 1. Declare the framework op a user already has.
-    let bag = EmbeddingBag::new(4096, 32); // 4096 categories, 32-dim
+    let bag = EmbeddingBag::new(4096, 32).with_batches(64); // 4096 categories, 32-dim
     println!("op class: {:?}\n", bag.op_class());
 
     // 2. Compile through SCF -> SLC -> (vectorize/bufferize/align) -> DLC.
-    let program = compile(&bag.op_class(), CompileOptions::at(OptLevel::O3))?;
+    //    The dump hook prints the SLC after every pass — no re-plumbing.
+    let mut session = EmberSession::default();
+    session.set_dump_ir(std::sync::Arc::new(|stage, func| {
+        println!("// SLC after `{stage}`\n{func}");
+    }));
+    let program = session.compile(&bag)?;
     println!("// SCF (frontend output)\n{}", program.scf);
-    println!("// SLC after all optimizations\n{}", program.slc);
     println!("// DLC (decoupled lookup + compute)\n{}", program.dlc);
+
+    // ...and the pass manager recorded what each pass did:
+    for trace in session.traces() {
+        println!("{trace}");
+    }
 
     // 3. Build a workload and validate numerics against a dense loop.
     let mut rng = Rng::new(42);
@@ -48,10 +77,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     ember::util::quick::allclose(&got, &want, 1e-4, 1e-4).map_err(std::io::Error::other)?;
     println!("numerics: compiled DAE program == dense reference ✓\n");
 
-    // 4. Simulate on a DAE machine vs a traditional core.
+    // 4. Simulate on a DAE machine vs a traditional core. Compiling the
+    //    same op at another level goes through the same session cache.
     let mut env_dae = csr.bind_sls_env(&table, false);
     let dae = simulate(&program, MachineConfig::dae_tmu(), &mut env_dae)?;
-    let coupled_prog = compile(&bag.op_class(), CompileOptions::at(OptLevel::O1))?;
+    let coupled_prog =
+        session.compile_with(&bag, CompileOptions::with_opt(OptLevel::O1))?;
     let mut env_core = csr.bind_sls_env(&table, false);
     let core = simulate(&coupled_prog, MachineConfig::traditional_core(), &mut env_core)?;
 

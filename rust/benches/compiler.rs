@@ -1,10 +1,11 @@
 //! Compiler micro-benchmarks: the full SCF→SLC→DLC pipeline per op
-//! class and opt level (in-tree bench clock; criterion is unavailable
-//! offline).
+//! class and opt level, the session cache, and the individual passes
+//! (in-tree bench clock; criterion is unavailable offline).
 
-use ember::compiler::passes::pipeline::{compile, CompileOptions, OptLevel};
 use ember::frontend::embedding_ops::{OpClass, Semiring};
+use ember::session::EmberSession;
 use ember::util::bench::Bench;
+use ember::{CompileOptions, OptLevel};
 
 fn main() {
     println!("== compiler benchmarks ==");
@@ -18,11 +19,23 @@ fn main() {
     for op in &ops {
         for opt in OptLevel::ALL {
             let name = format!("compile/{}/{}", op.name(), opt.name());
-            let report =
-                Bench::new(&name).run(|| compile(op, CompileOptions::at(opt)).unwrap());
+            // fresh session per iteration: measures a cold pipeline run
+            let report = Bench::new(&name).run(|| {
+                EmberSession::with_options(CompileOptions::with_opt(opt))
+                    .compile(op)
+                    .unwrap()
+            });
             println!("{report}");
         }
     }
+
+    // session cache hit: the serving-path steady state
+    let mut session = EmberSession::default();
+    session.compile(&OpClass::Sls).unwrap();
+    println!(
+        "{}",
+        Bench::new("session/cache_hit(sls)").run(|| session.compile(&OpClass::Sls).unwrap())
+    );
 
     // individual passes
     use ember::compiler::decouple::decouple;

@@ -2,14 +2,15 @@
 //! Reports simulated-events/s and lookups/s; the §Perf targets in
 //! EXPERIMENTS.md are tracked against these numbers.
 
-use ember::compiler::passes::pipeline::{compile, CompileOptions, OptLevel};
 use ember::dae::{DaeSim, MachineConfig};
 use ember::data::Tensor;
 use ember::frontend::embedding_ops::OpClass;
 use ember::frontend::formats::Csr;
 use ember::interp::{Interp, NullSink};
+use ember::session::EmberSession;
 use ember::util::bench::Bench;
 use ember::util::rng::Rng;
+use ember::{CompileOptions, OptLevel};
 
 fn workload(rows: usize, lookups: usize, emb: usize) -> (Csr, Tensor) {
     let mut rng = Rng::new(3);
@@ -26,8 +27,11 @@ fn main() {
     let (csr, table) = workload(64, 64, 32);
     let total_lookups = (csr.nnz()) as u64;
 
+    let mut session = EmberSession::default();
     for opt in [OptLevel::O0, OptLevel::O3] {
-        let prog = compile(&OpClass::Sls, CompileOptions::at(opt)).unwrap();
+        let prog = session
+            .compile_with(&OpClass::Sls, CompileOptions::with_opt(opt))
+            .unwrap();
 
         // pure numerics (interpreter only)
         let name = format!("interp/sls/{}", opt.name());

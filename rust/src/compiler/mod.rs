@@ -1,10 +1,18 @@
 //! The Ember compiler: SCF → SLC (decoupling) → optimization passes →
 //! DLC → DAE targets (paper Fig. 11).
+//!
+//! Passes are named units registered with a [`PassManager`]; whole-op
+//! compilation goes through [`crate::session::EmberSession`] (cached)
+//! or [`passes::pipeline::compile_with_trace`] (one-shot).
 
 pub mod decouple;
 pub mod lower_dlc;
+pub mod pass_manager;
 pub mod passes;
 
 pub use decouple::decouple;
 pub use lower_dlc::lower_to_dlc;
-pub use passes::pipeline::{compile, CompileOptions, CompiledProgram, OptLevel};
+pub use pass_manager::{DumpHook, Pass, PassContext, PassManager, PassReport, PassTrace};
+#[allow(deprecated)]
+pub use passes::pipeline::compile;
+pub use passes::pipeline::{compile_with_trace, CompileOptions, CompiledProgram, OptLevel};

@@ -1,0 +1,296 @@
+//! The pass manager: SLC optimization passes as named, declaratively
+//! registered units.
+//!
+//! The paper's Table 4 levels (emb-opt0..3) are *pipelines* — ordered
+//! selections from the pass registry — rather than a hard-coded
+//! if-chain. [`PassManager::for_options`] builds the standard pipeline
+//! for an [`OptLevel`]; [`PassManager::add_pass`] builds a custom one
+//! pass-by-pass. The manager re-verifies the IR between passes
+//! (debug-gated by default), records per-pass timing and op-count
+//! deltas into a [`PassTrace`], and supports a `dump_ir` hook so
+//! examples and tests can print every stage without re-plumbing the
+//! pipeline.
+
+use crate::compiler::passes::pipeline::{CompileOptions, OptLevel};
+use crate::error::Result;
+use crate::frontend::embedding_ops::OpClass;
+use crate::ir::slc::{OpCounts, SlcFunc};
+use crate::ir::verify::verify_slc;
+use std::fmt;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Read-only context handed to every pass: the op being compiled and
+/// the options the pipeline was built from.
+#[derive(Debug, Clone)]
+pub struct PassContext {
+    pub op: OpClass,
+    pub options: CompileOptions,
+}
+
+impl PassContext {
+    pub fn new(op: &OpClass, options: CompileOptions) -> Self {
+        PassContext { op: op.clone(), options }
+    }
+}
+
+/// What one pass did to one function: wall time plus SLC op counts
+/// before and after (the structural delta the §7 levels are defined
+/// by).
+#[derive(Debug, Clone)]
+pub struct PassReport {
+    pub pass: &'static str,
+    pub duration: Duration,
+    pub ops_before: OpCounts,
+    pub ops_after: OpCounts,
+}
+
+impl PassReport {
+    /// Signed delta of one `OpCounts` field, e.g.
+    /// `report.delta(|c| c.vector_loops)`.
+    pub fn delta(&self, field: impl Fn(&OpCounts) -> usize) -> i64 {
+        field(&self.ops_after) as i64 - field(&self.ops_before) as i64
+    }
+}
+
+impl fmt::Display for PassReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{:<14} {:>8.1?}  vloops {:+}  mem {:+}  buf {:+}  store {:+}  cb {:+}",
+            self.pass,
+            self.duration,
+            self.delta(|c| c.vector_loops),
+            self.delta(|c| c.mem_streams + c.vector_mem_streams),
+            self.delta(|c| c.buf_streams),
+            self.delta(|c| c.store_streams),
+            self.delta(|c| c.callbacks),
+        )
+    }
+}
+
+/// The full record of one pipeline run over one function.
+#[derive(Debug, Clone)]
+pub struct PassTrace {
+    /// Name of the compiled SLC function (op class name).
+    pub func: String,
+    pub opt: OptLevel,
+    pub reports: Vec<PassReport>,
+}
+
+impl PassTrace {
+    pub fn report(&self, pass: &str) -> Option<&PassReport> {
+        self.reports.iter().find(|r| r.pass == pass)
+    }
+
+    /// Total wall time across all passes.
+    pub fn total(&self) -> Duration {
+        self.reports.iter().map(|r| r.duration).sum()
+    }
+}
+
+impl fmt::Display for PassTrace {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "pass trace `{}` at {} ({} passes, {:.1?}):",
+            self.func,
+            self.opt,
+            self.reports.len(),
+            self.total()
+        )?;
+        for r in &self.reports {
+            writeln!(f, "  {r}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Stage observer: `(stage_name, function_after_stage)`. Stage `"input"`
+/// fires before any pass runs.
+pub type DumpHook = Arc<dyn Fn(&str, &SlcFunc) + Send + Sync>;
+
+/// A named SLC-to-SLC transformation unit.
+pub trait Pass {
+    /// Stable registry name (also the `PassReport` key).
+    fn name(&self) -> &'static str;
+
+    /// Transform the function in place.
+    fn transform(&self, func: &mut SlcFunc, cx: &PassContext) -> Result<()>;
+
+    /// Run with instrumentation: wall time + op-count deltas.
+    fn run(&self, func: &mut SlcFunc, cx: &PassContext) -> Result<PassReport> {
+        let ops_before = func.count_ops();
+        let start = Instant::now();
+        self.transform(func, cx)?;
+        Ok(PassReport {
+            pass: self.name(),
+            duration: start.elapsed(),
+            ops_before,
+            ops_after: func.count_ops(),
+        })
+    }
+}
+
+/// An ordered pipeline of passes over one SLC function.
+pub struct PassManager {
+    passes: Vec<Box<dyn Pass>>,
+    verify_between: bool,
+    dump: Option<DumpHook>,
+}
+
+impl Default for PassManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PassManager {
+    /// An empty pipeline. IR verification between passes defaults to on
+    /// in debug builds and off in release builds.
+    pub fn new() -> Self {
+        PassManager { passes: Vec::new(), verify_between: cfg!(debug_assertions), dump: None }
+    }
+
+    /// The standard pipeline for `opts` (Table 4). Pure gathers
+    /// (SpAttn) at O3 take the model-specific store-stream path, which
+    /// subsumes bufferization and marshaling entirely (§7.4).
+    pub fn for_options(op: &OpClass, opts: &CompileOptions) -> Self {
+        use crate::compiler::passes::{
+            bufferize::Bufferize, model_specific::StoreStreams, queue_align::QueueAlign,
+            vectorize::Vectorize,
+        };
+        let gather_path = matches!(op, OpClass::SpAttn { .. })
+            && opts.opt >= OptLevel::O3
+            && opts.spattn_store_streams;
+
+        let mut pm = PassManager::new();
+        if opts.opt >= OptLevel::O1 {
+            pm.add_pass(Box::new(Vectorize));
+        }
+        if opts.opt >= OptLevel::O2 && !gather_path {
+            pm.add_pass(Box::new(Bufferize));
+        }
+        if opts.opt >= OptLevel::O3 {
+            if gather_path {
+                pm.add_pass(Box::new(StoreStreams));
+            }
+            // queue alignment is a no-op when no callbacks remain
+            pm.add_pass(Box::new(QueueAlign));
+        }
+        pm
+    }
+
+    /// Append a pass (builder-by-mutation; see `with_pass`).
+    pub fn add_pass(&mut self, pass: Box<dyn Pass>) -> &mut Self {
+        self.passes.push(pass);
+        self
+    }
+
+    /// Append a pass (chainable).
+    pub fn with_pass(mut self, pass: Box<dyn Pass>) -> Self {
+        self.passes.push(pass);
+        self
+    }
+
+    /// Force IR verification between passes on or off.
+    pub fn verify_between(mut self, on: bool) -> Self {
+        self.verify_between = on;
+        self
+    }
+
+    /// Install a stage observer called with `"input"` and then after
+    /// every pass.
+    pub fn dump_ir(mut self, hook: DumpHook) -> Self {
+        self.dump = Some(hook);
+        self
+    }
+
+    /// Registered pass names, in run order.
+    pub fn pass_names(&self) -> Vec<&'static str> {
+        self.passes.iter().map(|p| p.name()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.passes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.passes.is_empty()
+    }
+
+    /// Run every pass in order, verifying (when enabled) and dumping
+    /// after each stage.
+    pub fn run(&self, func: &mut SlcFunc, cx: &PassContext) -> Result<PassTrace> {
+        if let Some(hook) = &self.dump {
+            hook("input", func);
+        }
+        let mut trace =
+            PassTrace { func: func.name.clone(), opt: cx.options.opt, reports: Vec::new() };
+        for pass in &self.passes {
+            let report = pass.run(func, cx)?;
+            if self.verify_between {
+                verify_slc(func)?;
+            }
+            if let Some(hook) = &self.dump {
+                hook(pass.name(), func);
+            }
+            trace.reports.push(report);
+        }
+        Ok(trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::decouple::decouple;
+    use crate::compiler::passes::vectorize::Vectorize;
+    use std::sync::Mutex;
+
+    #[test]
+    fn for_options_builds_table4_pipelines() {
+        let op = OpClass::Sls;
+        let at = |o| PassManager::for_options(&op, &CompileOptions::with_opt(o)).pass_names();
+        assert!(at(OptLevel::O0).is_empty());
+        assert_eq!(at(OptLevel::O1), vec!["vectorize"]);
+        assert_eq!(at(OptLevel::O2), vec!["vectorize", "bufferize"]);
+        assert_eq!(at(OptLevel::O3), vec!["vectorize", "bufferize", "queue_align"]);
+        // the SpAttn gather path swaps bufferize for store streams
+        let sp = OpClass::SpAttn { block: 4 };
+        let pm = PassManager::for_options(&sp, &CompileOptions::with_opt(OptLevel::O3));
+        assert_eq!(pm.pass_names(), vec!["vectorize", "store_streams", "queue_align"]);
+    }
+
+    #[test]
+    fn custom_pipeline_runs_and_traces() {
+        let op = OpClass::Sls;
+        let mut f = decouple(&op.to_scf()).unwrap();
+        let opts = CompileOptions::with_opt(OptLevel::O1);
+        let pm = PassManager::new().with_pass(Box::new(Vectorize)).verify_between(true);
+        let trace = pm.run(&mut f, &PassContext::new(&op, opts)).unwrap();
+        assert_eq!(trace.reports.len(), 1);
+        assert_eq!(trace.reports[0].pass, "vectorize");
+        assert_eq!(trace.reports[0].delta(|c| c.vector_loops), 1);
+        assert_eq!(f.count_ops().vector_loops, 1);
+    }
+
+    #[test]
+    fn dump_hook_sees_every_stage() {
+        let op = OpClass::Sls;
+        let mut f = decouple(&op.to_scf()).unwrap();
+        let opts = CompileOptions::with_opt(OptLevel::O3);
+        let stages: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = stages.clone();
+        let pm = PassManager::for_options(&op, &opts)
+            .dump_ir(Arc::new(move |stage, func| {
+                sink.lock().unwrap().push(format!("{stage}:{}", func.name));
+            }));
+        pm.run(&mut f, &PassContext::new(&op, opts)).unwrap();
+        let got = stages.lock().unwrap().clone();
+        assert_eq!(
+            got,
+            vec!["input:sls", "vectorize:sls", "bufferize:sls", "queue_align:sls"]
+        );
+    }
+}

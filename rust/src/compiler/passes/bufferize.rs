@@ -8,12 +8,25 @@
 //! `emb_len/vlen` control tokens + coordinate payloads per vector into
 //! a single token, the big marshaling-efficiency win for long vectors.
 
+use crate::compiler::pass_manager::{Pass, PassContext};
 use crate::error::{EmberError, Result};
 use crate::ir::compute::{CExpr, CStmt};
 use crate::ir::slc::{SlcBound, SlcCallback, SlcFunc, SlcOp};
 use crate::ir::types::{BinOp, Event};
 use crate::ir::verify::verify_slc;
 use std::collections::HashMap;
+
+/// Registry unit for bufferization (§7.2).
+pub struct Bufferize;
+
+impl Pass for Bufferize {
+    fn name(&self) -> &'static str {
+        "bufferize"
+    }
+    fn transform(&self, func: &mut SlcFunc, _cx: &PassContext) -> Result<()> {
+        bufferize(func)
+    }
+}
 
 /// Apply bufferization. Requires a vectorized inner loop (§7.1 first).
 pub fn bufferize(func: &mut SlcFunc) -> Result<()> {

@@ -1,7 +1,16 @@
 //! Global SLC optimizations (paper §7) and the pass pipeline.
+//!
+//! Each module exports both the raw transformation function and a
+//! [`crate::compiler::pass_manager::Pass`] registry unit so pipelines
+//! can be assembled declaratively.
 
 pub mod bufferize;
 pub mod model_specific;
 pub mod pipeline;
 pub mod queue_align;
 pub mod vectorize;
+
+pub use bufferize::Bufferize;
+pub use model_specific::StoreStreams;
+pub use queue_align::QueueAlign;
+pub use vectorize::Vectorize;

@@ -12,6 +12,7 @@
 //! queue only carries `done` and the core idles (the paper's fully-
 //! offloaded 17× case).
 
+use crate::compiler::pass_manager::{Pass, PassContext};
 use crate::error::{EmberError, Result};
 use crate::ir::compute::{CExpr, CStmt};
 use crate::ir::slc::{SlcFor, SlcFunc, SlcIdx, SlcOp};
@@ -19,9 +20,22 @@ use crate::ir::types::MemHint;
 use crate::ir::verify::verify_slc;
 use std::collections::HashMap;
 
+/// Registry unit for the SpAttn store-stream transform (§7.4). The
+/// `SpAttnConfig` comes from the pass context's compile options.
+pub struct StoreStreams;
+
+impl Pass for StoreStreams {
+    fn name(&self) -> &'static str {
+        "store_streams"
+    }
+    fn transform(&self, func: &mut SlcFunc, cx: &PassContext) -> Result<()> {
+        store_streams(func, cx.options.spattn)
+    }
+}
+
 /// Configuration for the SpAttn store-stream transform (the Fig. 18
 /// "TMU configuration" axis).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct SpAttnConfig {
     /// Cache level embedding blocks are fetched into (2 = L2, 3 = LLC).
     pub value_level: u8,

@@ -5,8 +5,16 @@
 //! * `O2` — O1 + bufferization (§7.2)
 //! * `O3` — O2 + queue alignment (§7.3) and, for pure gathers (SpAttn),
 //!   the model-specific store-stream transform (§7.4)
+//!
+//! The levels are declarative pipelines over the pass registry: see
+//! [`crate::compiler::pass_manager::PassManager::for_options`]. The
+//! preferred entry points are [`crate::session::EmberSession`] (cached,
+//! multi-op) and [`compile_with_trace`] (one-shot, returns the
+//! [`PassTrace`]); the historical [`compile`] free function remains as
+//! a deprecated shim.
 
-use super::{bufferize, model_specific, queue_align, vectorize};
+use super::model_specific;
+use crate::compiler::pass_manager::{PassContext, PassManager, PassTrace};
 use crate::compiler::{decouple, lower_dlc};
 use crate::error::Result;
 use crate::frontend::embedding_ops::OpClass;
@@ -57,7 +65,9 @@ impl std::str::FromStr for OptLevel {
 }
 
 /// Compilation options.
-#[derive(Debug, Clone, Copy)]
+///
+/// Eq/Hash so `(OpClass, CompileOptions)` keys the session cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct CompileOptions {
     pub opt: OptLevel,
     /// SIMD vector length in elements (Arm SVE-ish default: 4 f32).
@@ -80,8 +90,26 @@ impl Default for CompileOptions {
 }
 
 impl CompileOptions {
-    pub fn at(opt: OptLevel) -> Self {
+    /// Defaults at the given optimization level.
+    pub fn with_opt(opt: OptLevel) -> Self {
         CompileOptions { opt, ..Default::default() }
+    }
+
+    /// Builder: set the SIMD vector length.
+    pub fn with_vlen(mut self, vlen: u32) -> Self {
+        self.vlen = vlen;
+        self
+    }
+
+    /// Builder: set the SpAttn TMU configuration.
+    pub fn with_spattn(mut self, cfg: model_specific::SpAttnConfig) -> Self {
+        self.spattn = cfg;
+        self
+    }
+
+    #[deprecated(since = "0.2.0", note = "use `CompileOptions::with_opt`")]
+    pub fn at(opt: OptLevel) -> Self {
+        CompileOptions::with_opt(opt)
     }
 }
 
@@ -97,47 +125,64 @@ pub struct CompiledProgram {
     pub dlc: DlcProgram,
 }
 
-/// Compile an embedding op through the full pipeline.
-pub fn compile(op: &OpClass, opts: CompileOptions) -> Result<CompiledProgram> {
-    let scf = op.to_scf();
+/// Compile an already-lowered SCF function through the standard pass
+/// pipeline for `opts`. This is the single underlying driver: the
+/// session, [`compile_with_trace`], and the deprecated [`compile`] shim
+/// all funnel here. `dump` forwards to the pass manager's stage hook.
+pub fn compile_scf(
+    op: &OpClass,
+    scf: ScfFunc,
+    opts: CompileOptions,
+    dump: Option<crate::compiler::pass_manager::DumpHook>,
+) -> Result<(CompiledProgram, PassTrace)> {
     let mut slc = decouple::decouple(&scf)?;
-
-    // Pure gathers (SpAttn) at O3 take the model-specific path: store
-    // streams subsume bufferization and marshaling entirely (§7.4), so
-    // they are applied to the vectorized form directly.
-    let gather_path = matches!(op, OpClass::SpAttn { .. })
-        && opts.opt >= OptLevel::O3
-        && opts.spattn_store_streams;
-
-    if opts.opt >= OptLevel::O1 {
-        vectorize::vectorize(&mut slc, opts.vlen)?;
+    let mut pm = PassManager::for_options(op, &opts);
+    if let Some(hook) = dump {
+        pm = pm.dump_ir(hook);
     }
-    if opts.opt >= OptLevel::O2 && !gather_path {
-        bufferize::bufferize(&mut slc)?;
-    }
-    if opts.opt >= OptLevel::O3 {
-        if gather_path {
-            model_specific::store_streams(&mut slc, opts.spattn)?;
-        }
-        // queue alignment is a no-op when no callbacks remain
-        queue_align::queue_align(&mut slc)?;
-    }
-
+    let cx = PassContext::new(op, opts);
+    let trace = pm.run(&mut slc, &cx)?;
     let dlc = lower_dlc::lower_to_dlc(&slc)?;
-    Ok(CompiledProgram {
-        op: op.clone(),
-        options_opt: opts.opt,
-        vlen: opts.vlen,
-        scf,
-        slc,
-        dlc,
-    })
+    Ok((
+        CompiledProgram {
+            op: op.clone(),
+            options_opt: opts.opt,
+            vlen: opts.vlen,
+            scf,
+            slc,
+            dlc,
+        },
+        trace,
+    ))
+}
+
+/// Compile an embedding op through the full pipeline, returning the
+/// per-pass [`PassTrace`] alongside the program. One-shot and uncached;
+/// prefer [`crate::session::EmberSession`] when compiling repeatedly.
+pub fn compile_with_trace(
+    op: &OpClass,
+    opts: CompileOptions,
+) -> Result<(CompiledProgram, PassTrace)> {
+    compile_scf(op, op.to_scf(), opts, None)
+}
+
+/// Compile an embedding op through the full pipeline.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `session::EmberSession::compile` (cached) or `compile_with_trace`"
+)]
+pub fn compile(op: &OpClass, opts: CompileOptions) -> Result<CompiledProgram> {
+    compile_with_trace(op, opts).map(|(p, _)| p)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::frontend::embedding_ops::Semiring;
+
+    fn build(op: &OpClass, opts: CompileOptions) -> Result<CompiledProgram> {
+        compile_with_trace(op, opts).map(|(p, _)| p)
+    }
 
     #[test]
     fn every_class_compiles_at_every_level() {
@@ -150,7 +195,7 @@ mod tests {
             OpClass::SpAttn { block: 4 },
         ] {
             for opt in OptLevel::ALL {
-                let p = compile(&op, CompileOptions { opt, ..Default::default() });
+                let p = build(&op, CompileOptions { opt, ..Default::default() });
                 assert!(p.is_ok(), "{:?} at {opt}: {:?}", op, p.err());
             }
         }
@@ -158,10 +203,10 @@ mod tests {
 
     #[test]
     fn opt_levels_are_monotone_in_structure() {
-        let o0 = compile(&OpClass::Sls, CompileOptions::at(OptLevel::O0)).unwrap();
-        let o1 = compile(&OpClass::Sls, CompileOptions::at(OptLevel::O1)).unwrap();
-        let o2 = compile(&OpClass::Sls, CompileOptions::at(OptLevel::O2)).unwrap();
-        let o3 = compile(&OpClass::Sls, CompileOptions::at(OptLevel::O3)).unwrap();
+        let o0 = build(&OpClass::Sls, CompileOptions::with_opt(OptLevel::O0)).unwrap();
+        let o1 = build(&OpClass::Sls, CompileOptions::with_opt(OptLevel::O1)).unwrap();
+        let o2 = build(&OpClass::Sls, CompileOptions::with_opt(OptLevel::O2)).unwrap();
+        let o3 = build(&OpClass::Sls, CompileOptions::with_opt(OptLevel::O3)).unwrap();
         assert_eq!(o0.slc.count_ops().vector_loops, 0);
         assert_eq!(o1.slc.count_ops().vector_loops, 1);
         assert_eq!(o2.slc.count_ops().buf_streams, 1);
@@ -171,8 +216,53 @@ mod tests {
     }
 
     #[test]
+    fn pass_trace_deltas_match_structural_expectations() {
+        // the PassTrace must tell the same story per pass that
+        // `opt_levels_are_monotone_in_structure` reads off the final IR
+        let (p, trace) =
+            compile_with_trace(&OpClass::Sls, CompileOptions::with_opt(OptLevel::O3)).unwrap();
+        assert_eq!(trace.func, "sls");
+        assert_eq!(trace.opt, OptLevel::O3);
+
+        let vec = trace.report("vectorize").expect("vectorize ran");
+        assert_eq!(vec.ops_before.vector_loops, 0);
+        assert_eq!(vec.delta(|c| c.vector_loops), 1);
+
+        let buf = trace.report("bufferize").expect("bufferize ran");
+        assert_eq!(buf.delta(|c| c.buf_streams), 1);
+        assert_eq!(buf.ops_after.pushes, 1);
+
+        let qa = trace.report("queue_align").expect("queue_align ran");
+        // alignment rewrites callbacks but adds no streams
+        assert_eq!(qa.delta(|c| c.buf_streams), 0);
+        assert_eq!(qa.delta(|c| c.vector_loops), 0);
+        let mut aligned = false;
+        p.slc.walk_loops(&mut |l| aligned |= l.core_var.is_some());
+        assert!(aligned);
+
+        // O0 runs an empty pipeline: trace with zero reports
+        let (_, t0) =
+            compile_with_trace(&OpClass::Sls, CompileOptions::with_opt(OptLevel::O0)).unwrap();
+        assert!(t0.reports.is_empty());
+    }
+
+    #[test]
+    fn opt_level_roundtrips_through_display_and_fromstr() {
+        for o in OptLevel::ALL {
+            // Display form ("emb-optN") parses back
+            assert_eq!(o.to_string().parse::<OptLevel>(), Ok(o));
+            // short forms parse too
+            assert_eq!(format!("O{}", o as u8).parse::<OptLevel>(), Ok(o));
+            assert_eq!(format!("{}", o as u8).parse::<OptLevel>(), Ok(o));
+        }
+        assert!("emb-opt4".parse::<OptLevel>().is_err());
+        assert!("".parse::<OptLevel>().is_err());
+    }
+
+    #[test]
     fn spattn_o3_has_no_compute() {
-        let p = compile(&OpClass::SpAttn { block: 4 }, CompileOptions::at(OptLevel::O3)).unwrap();
+        let p =
+            build(&OpClass::SpAttn { block: 4 }, CompileOptions::with_opt(OptLevel::O3)).unwrap();
         assert!(p.dlc.compute.is_empty(), "{}", p.dlc);
     }
 }

@@ -7,12 +7,25 @@
 //! queue leaves only cache-line-aligned embedding payloads — the point
 //! of the optimization — and shrinks both marshaling and pop work.
 
+use crate::compiler::pass_manager::{Pass, PassContext};
 use crate::error::{EmberError, Result};
 use crate::ir::compute::{CExpr, CStmt};
 use crate::ir::slc::{SlcCallback, SlcFor, SlcFunc, SlcOp};
 use crate::ir::types::Event;
 use crate::ir::verify::verify_slc;
 use std::collections::{HashMap, HashSet};
+
+/// Registry unit for queue alignment (§7.3).
+pub struct QueueAlign;
+
+impl Pass for QueueAlign {
+    fn name(&self) -> &'static str {
+        "queue_align"
+    }
+    fn transform(&self, func: &mut SlcFunc, _cx: &PassContext) -> Result<()> {
+        queue_align(func)
+    }
+}
 
 /// Apply queue alignment to every callback in the function.
 pub fn queue_align(func: &mut SlcFunc) -> Result<()> {

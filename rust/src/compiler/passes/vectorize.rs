@@ -9,11 +9,25 @@
 //! Core-side workspace loops over the same inner dimension (MP) are
 //! vectorized too.
 
+use crate::compiler::pass_manager::{Pass, PassContext};
 use crate::error::{EmberError, Result};
 use crate::ir::compute::{CExpr, CStmt};
 use crate::ir::slc::{SlcFor, SlcFunc, SlcIdx, SlcOp};
 use crate::ir::verify::verify_slc;
 use std::collections::HashSet;
+
+/// Registry unit for inner-loop vectorization (`vlen` comes from the
+/// pass context's [`crate::compiler::passes::pipeline::CompileOptions`]).
+pub struct Vectorize;
+
+impl Pass for Vectorize {
+    fn name(&self) -> &'static str {
+        "vectorize"
+    }
+    fn transform(&self, func: &mut SlcFunc, cx: &PassContext) -> Result<()> {
+        vectorize(func, cx.options.vlen)
+    }
+}
 
 /// Vectorize the innermost loop with vector length `vlen`.
 /// Returns Err if the scheme is illegal (a callback cannot vectorize).

@@ -12,14 +12,16 @@ pub mod batcher;
 pub mod router;
 pub mod server;
 
-use crate::compiler::passes::pipeline::{compile, CompileOptions, CompiledProgram, OptLevel};
+use crate::compiler::passes::pipeline::CompiledProgram;
 use crate::data::{Env, Tensor};
 use crate::error::{EmberError, Result};
 use crate::frontend::embedding_ops::OpClass;
 use crate::frontend::formats::Csr;
 use crate::interp::{Interp, NullSink};
 use crate::runtime::{ArgData, Runtime};
+use crate::session::EmberSession;
 use crate::util::rng::Rng;
+use std::sync::Arc;
 
 pub use batcher::{BatchOptions, Batcher};
 pub use router::Router;
@@ -56,7 +58,7 @@ pub struct DlrmModel {
     pub b1: Vec<f32>,
     pub w2: Vec<f32>,
     pub b2: Vec<f32>,
-    pub program: CompiledProgram,
+    pub program: Arc<CompiledProgram>,
 }
 
 impl DlrmModel {
@@ -90,12 +92,40 @@ impl DlrmModel {
         hidden: usize,
         seed: u64,
     ) -> Result<Self> {
+        Self::with_session(
+            &mut EmberSession::default(),
+            batch,
+            table_rows,
+            emb,
+            num_tables,
+            max_lookups,
+            dense,
+            hidden,
+            seed,
+        )
+    }
+
+    /// Build a model compiling through a shared [`EmberSession`]: a
+    /// router serving many models gets one `(OpClass, CompileOptions)`
+    /// program instead of one compile per model.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_session(
+        session: &mut EmberSession,
+        batch: usize,
+        table_rows: usize,
+        emb: usize,
+        num_tables: usize,
+        max_lookups: usize,
+        dense: usize,
+        hidden: usize,
+        seed: u64,
+    ) -> Result<Self> {
         let mut rng = Rng::new(seed);
         let tables = (0..num_tables)
             .map(|_| Tensor::f32(vec![table_rows, emb], rng.normal_vec(table_rows * emb, 0.1)))
             .collect();
         let d_in = num_tables * emb + dense;
-        let program = compile(&OpClass::Sls, CompileOptions::at(OptLevel::O3))?;
+        let program = session.compile(&OpClass::Sls)?;
         Ok(DlrmModel {
             batch,
             table_rows,
@@ -252,6 +282,15 @@ mod tests {
         // padded slot (request 3 absent) must be zero
         let base = 3 * m.num_tables * m.emb;
         assert!(emb[base..base + m.emb].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn models_share_compiled_program_via_session() {
+        let mut s = EmberSession::default();
+        let a = DlrmModel::with_session(&mut s, 4, 64, 8, 2, 6, 3, 16, 1).unwrap();
+        let b = DlrmModel::with_session(&mut s, 4, 64, 8, 2, 6, 3, 16, 2).unwrap();
+        assert!(Arc::ptr_eq(&a.program, &b.program), "same (op, options) must share");
+        assert_eq!(s.traces().len(), 1, "one pipeline run serves both models");
     }
 
     #[test]

@@ -526,7 +526,7 @@ impl DaeSink for DaeSim {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compiler::passes::pipeline::{compile, CompileOptions, OptLevel};
+    use crate::compiler::passes::pipeline::{compile_with_trace, CompileOptions, OptLevel};
     use crate::data::Tensor;
     use crate::frontend::embedding_ops::OpClass;
     use crate::frontend::formats::Csr;
@@ -540,7 +540,7 @@ mod tests {
             .map(|_| (0..lookups).map(|_| rng.below(4096) as i32).collect())
             .collect();
         let csr = Csr::from_rows(4096, &r);
-        let prog = compile(&OpClass::Sls, CompileOptions::at(opt)).unwrap();
+        let prog = compile_with_trace(&OpClass::Sls, CompileOptions::with_opt(opt)).unwrap().0;
         let mut env = csr.bind_sls_env(&table, false);
         let mut sim = DaeSim::new(cfg);
         let mut interp = Interp::new(&prog.dlc).unwrap();

@@ -1,27 +1,52 @@
 //! Library-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls: the offline build image has no
+//! crates.io access, so `thiserror` is not available.
 
-use thiserror::Error;
+use std::fmt;
 
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum EmberError {
-    #[error("IR verification failed: {0}")]
     Verify(String),
-    #[error("lowering failed: {0}")]
     Lowering(String),
-    #[error("pass `{pass}` failed: {msg}")]
     Pass { pass: String, msg: String },
-    #[error("interpreter error: {0}")]
     Interp(String),
-    #[error("simulation error: {0}")]
     Sim(String),
-    #[error("runtime error: {0}")]
     Runtime(String),
-    #[error("workload error: {0}")]
     Workload(String),
-    #[error("parse error: {0}")]
     Parse(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for EmberError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EmberError::Verify(m) => write!(f, "IR verification failed: {m}"),
+            EmberError::Lowering(m) => write!(f, "lowering failed: {m}"),
+            EmberError::Pass { pass, msg } => write!(f, "pass `{pass}` failed: {msg}"),
+            EmberError::Interp(m) => write!(f, "interpreter error: {m}"),
+            EmberError::Sim(m) => write!(f, "simulation error: {m}"),
+            EmberError::Runtime(m) => write!(f, "runtime error: {m}"),
+            EmberError::Workload(m) => write!(f, "workload error: {m}"),
+            EmberError::Parse(m) => write!(f, "parse error: {m}"),
+            EmberError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for EmberError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            EmberError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for EmberError {
+    fn from(e: std::io::Error) -> Self {
+        EmberError::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, EmberError>;

@@ -18,7 +18,9 @@ pub enum Semiring {
 }
 
 /// The class of embedding operation being compiled.
-#[derive(Debug, Clone, PartialEq)]
+///
+/// Eq/Hash so `(OpClass, CompileOptions)` keys the session cache.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub enum OpClass {
     /// EmbeddingBag / SparseLengthsSum: SpMM with implicit-1 values,
     /// CSR segments (dlrm).

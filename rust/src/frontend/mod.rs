@@ -7,3 +7,38 @@ pub mod torch_like;
 pub use embedding_ops::{OpClass, Semiring};
 pub use formats::{bind_mp_env, BlockGathers, Csr, FlatLookups};
 pub use torch_like::{BlockGather, EmbeddingBag, GraphAggregate, KgLookup, SparseLengthsSum};
+
+use crate::ir::scf::ScfFunc;
+
+/// Anything the compiler can take as input: a framework-shaped op
+/// declaration (`EmbeddingBag`, `GraphAggregate`, `KgLookup`,
+/// `BlockGather`) or a bare [`OpClass`].
+///
+/// This is the session's single entry shape: one `op_class()`, one
+/// no-argument `to_scf()`, and one symbol-binding hook. Runtime shapes
+/// are still bound per call through the `Env`
+/// (see [`formats`]); `bind_shape_syms` only seeds the SCF symbol
+/// *defaults* from the shapes the frontend declares.
+pub trait Frontend {
+    /// The op class this frontend lowers to (Table 1 row).
+    fn op_class(&self) -> OpClass;
+
+    /// Bind this frontend's declared shapes as SCF symbol defaults.
+    /// The single binding entry point — `to_scf` calls it.
+    fn bind_shape_syms(&self, _f: &mut ScfFunc) {}
+
+    /// Lower to SCF: the op-class loop skeleton with this frontend's
+    /// shape symbols bound.
+    fn to_scf(&self) -> ScfFunc {
+        let mut f = self.op_class().to_scf();
+        self.bind_shape_syms(&mut f);
+        f
+    }
+}
+
+/// A bare op class compiles with its default symbol bindings.
+impl Frontend for OpClass {
+    fn op_class(&self) -> OpClass {
+        self.clone()
+    }
+}

@@ -5,10 +5,19 @@
 //! `tf.gather`, PyG `propagate`) and Ember produces the SCF function the
 //! compiler consumes plus default symbol bindings for the declared
 //! shapes.
+//!
+//! Every type here implements [`Frontend`], so it plugs straight into
+//! `EmberSession::compile(&op)`. The declared shapes only seed SCF
+//! symbol *defaults*; actual shapes are bound per run through the
+//! `Env` (see [`super::formats`]).
 
 use super::embedding_ops::{OpClass, Semiring};
+use super::Frontend;
 use crate::ir::scf::ScfFunc;
 
+fn bind(f: &mut ScfFunc, sym: &str, v: usize) {
+    f.sym_defaults.insert(sym.into(), v as i64);
+}
 
 /// `torch.nn.EmbeddingBag(num_embeddings, embedding_dim, mode="sum")`.
 #[derive(Debug, Clone)]
@@ -17,24 +26,34 @@ pub struct EmbeddingBag {
     pub embedding_dim: usize,
     /// `per_sample_weights` given → weighted (SpMM) form.
     pub weighted: bool,
+    /// Declared batch size (SCF `num_batches` default).
+    pub num_batches: usize,
 }
 
 impl EmbeddingBag {
     pub fn new(num_embeddings: usize, embedding_dim: usize) -> Self {
-        EmbeddingBag { num_embeddings, embedding_dim, weighted: false }
+        EmbeddingBag { num_embeddings, embedding_dim, weighted: false, num_batches: 16 }
     }
     pub fn with_per_sample_weights(mut self) -> Self {
         self.weighted = true;
         self
     }
-    pub fn op_class(&self) -> OpClass {
+    /// Declared batch size. Compile-time SCF symbol default only —
+    /// runtime shapes always come from the bound `Env`, and the
+    /// session cache keys on `(OpClass, CompileOptions)`, not shapes.
+    pub fn with_batches(mut self, num_batches: usize) -> Self {
+        self.num_batches = num_batches;
+        self
+    }
+}
+
+impl Frontend for EmbeddingBag {
+    fn op_class(&self) -> OpClass {
         if self.weighted { OpClass::Spmm } else { OpClass::Sls }
     }
-    pub fn to_scf(&self, num_batches: usize) -> ScfFunc {
-        let mut f = self.op_class().to_scf();
-        f.sym_defaults.insert("num_batches".into(), num_batches as i64);
-        f.sym_defaults.insert("emb_len".into(), self.embedding_dim as i64);
-        f
+    fn bind_shape_syms(&self, f: &mut ScfFunc) {
+        bind(f, "num_batches", self.num_batches);
+        bind(f, "emb_len", self.embedding_dim);
     }
 }
 
@@ -50,16 +69,14 @@ pub struct GraphAggregate {
     pub fused_sddmm: bool,
 }
 
-impl GraphAggregate {
-    pub fn op_class(&self) -> OpClass {
+impl Frontend for GraphAggregate {
+    fn op_class(&self) -> OpClass {
         if self.fused_sddmm { OpClass::Mp } else { OpClass::Spmm }
     }
-    pub fn to_scf(&self) -> ScfFunc {
-        let mut f = self.op_class().to_scf();
+    fn bind_shape_syms(&self, f: &mut ScfFunc) {
         let n = if self.fused_sddmm { "num_nodes" } else { "num_batches" };
-        f.sym_defaults.insert(n.into(), self.num_nodes as i64);
-        f.sym_defaults.insert("emb_len".into(), self.feature_dim as i64);
-        f
+        bind(f, n, self.num_nodes);
+        bind(f, "emb_len", self.feature_dim);
     }
 }
 
@@ -69,17 +86,29 @@ pub struct KgLookup {
     pub num_entities: usize,
     pub embedding_dim: usize,
     pub semiring: Semiring,
+    /// Declared query count (SCF `num_queries` default).
+    pub num_queries: usize,
 }
 
 impl KgLookup {
-    pub fn op_class(&self) -> OpClass {
+    pub fn new(num_entities: usize, embedding_dim: usize, semiring: Semiring) -> Self {
+        KgLookup { num_entities, embedding_dim, semiring, num_queries: 16 }
+    }
+    /// Declared query count. Compile-time SCF symbol default only —
+    /// runtime shapes always come from the bound `Env`.
+    pub fn with_queries(mut self, num_queries: usize) -> Self {
+        self.num_queries = num_queries;
+        self
+    }
+}
+
+impl Frontend for KgLookup {
+    fn op_class(&self) -> OpClass {
         OpClass::Kg(self.semiring)
     }
-    pub fn to_scf(&self, num_queries: usize) -> ScfFunc {
-        let mut f = self.op_class().to_scf();
-        f.sym_defaults.insert("num_queries".into(), num_queries as i64);
-        f.sym_defaults.insert("emb_len".into(), self.embedding_dim as i64);
-        f
+    fn bind_shape_syms(&self, f: &mut ScfFunc) {
+        bind(f, "num_queries", self.num_queries);
+        bind(f, "emb_len", self.embedding_dim);
     }
 }
 
@@ -88,18 +117,30 @@ impl KgLookup {
 pub struct BlockGather {
     pub block: usize,
     pub embedding_dim: usize,
+    /// Declared gather count (SCF `num_gathers` default).
+    pub num_gathers: usize,
 }
 
 impl BlockGather {
-    pub fn op_class(&self) -> OpClass {
+    pub fn new(block: usize, embedding_dim: usize) -> Self {
+        BlockGather { block, embedding_dim, num_gathers: 16 }
+    }
+    /// Declared gather count. Compile-time SCF symbol default only —
+    /// runtime shapes always come from the bound `Env`.
+    pub fn with_gathers(mut self, num_gathers: usize) -> Self {
+        self.num_gathers = num_gathers;
+        self
+    }
+}
+
+impl Frontend for BlockGather {
+    fn op_class(&self) -> OpClass {
         OpClass::SpAttn { block: self.block }
     }
-    pub fn to_scf(&self, num_gathers: usize) -> ScfFunc {
-        let mut f = self.op_class().to_scf();
-        f.sym_defaults.insert("num_gathers".into(), num_gathers as i64);
-        f.sym_defaults.insert("block".into(), self.block as i64);
-        f.sym_defaults.insert("emb_len".into(), self.embedding_dim as i64);
-        f
+    fn bind_shape_syms(&self, f: &mut ScfFunc) {
+        bind(f, "num_gathers", self.num_gathers);
+        bind(f, "block", self.block);
+        bind(f, "emb_len", self.embedding_dim);
     }
 }
 
@@ -109,18 +150,40 @@ mod tests {
 
     #[test]
     fn embedding_bag_binds_shapes() {
-        let eb = EmbeddingBag::new(16384, 32);
-        let f = eb.to_scf(64);
+        let eb = EmbeddingBag::new(16384, 32).with_batches(64);
+        let f = eb.to_scf();
         assert_eq!(f.sym_defaults["num_batches"], 64);
         assert_eq!(f.sym_defaults["emb_len"], 32);
         assert_eq!(f.name, "sls");
-        let w = EmbeddingBag::new(16384, 32).with_per_sample_weights();
-        assert_eq!(w.to_scf(64).name, "spmm");
+        let w = EmbeddingBag::new(16384, 32).with_per_sample_weights().with_batches(64);
+        assert_eq!(w.to_scf().name, "spmm");
     }
 
     #[test]
     fn graph_aggregate_selects_fused() {
         let g = GraphAggregate { num_nodes: 100, feature_dim: 128, fused_sddmm: true };
         assert_eq!(g.to_scf().name, "mp");
+        assert_eq!(g.to_scf().sym_defaults["num_nodes"], 100);
+    }
+
+    #[test]
+    fn kg_and_block_gather_bind_their_counts() {
+        let kg = KgLookup::new(100_000, 64, Semiring::MaxPlus).with_queries(32);
+        let f = kg.to_scf();
+        assert_eq!(f.name, "kg_maxplus");
+        assert_eq!(f.sym_defaults["num_queries"], 32);
+
+        let bg = BlockGather::new(8, 64).with_gathers(128);
+        let f = bg.to_scf();
+        assert_eq!(f.name, "spattn");
+        assert_eq!(f.sym_defaults["block"], 8);
+        assert_eq!(f.sym_defaults["num_gathers"], 128);
+    }
+
+    #[test]
+    fn bare_op_class_is_a_frontend() {
+        let f = Frontend::to_scf(&OpClass::Sls);
+        assert_eq!(f.name, "sls");
+        assert_eq!(Frontend::op_class(&OpClass::Mp), OpClass::Mp);
     }
 }

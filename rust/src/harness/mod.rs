@@ -10,7 +10,9 @@ pub mod evaluation;
 pub mod motivation;
 pub mod tables;
 
-use crate::compiler::passes::pipeline::{compile, CompileOptions, CompiledProgram, OptLevel};
+use crate::compiler::passes::pipeline::{
+    compile_with_trace, CompileOptions, CompiledProgram, OptLevel,
+};
 use crate::dae::engine::DaeSim;
 use crate::dae::MachineConfig;
 use crate::data::Env;
@@ -177,7 +179,7 @@ pub fn run_op(
     env: &mut Env,
 ) -> Result<RunResult> {
     let effective = if cfg.access.is_none() && opt > OptLevel::O1 { OptLevel::O1 } else { opt };
-    let prog = compile(op, CompileOptions::at(effective))?;
+    let (prog, _) = compile_with_trace(op, CompileOptions::with_opt(effective))?;
     simulate(&prog, cfg, env)
 }
 

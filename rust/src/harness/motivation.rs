@@ -81,7 +81,7 @@ pub fn run_spattn_cfg(
     seed: u64,
     spattn: crate::compiler::passes::model_specific::SpAttnConfig,
 ) -> Result<RunResult> {
-    use crate::compiler::passes::pipeline::{compile, CompileOptions};
+    use crate::compiler::passes::pipeline::{compile_with_trace, CompileOptions};
     let mut rng = Rng::new(seed ^ 2);
     let s = SpAttnSpec::bigbird(block);
     let keys = Tensor::f32(
@@ -91,7 +91,7 @@ pub fn run_spattn_cfg(
     let g = s.gen_gathers(128, seed);
     let mut env = g.bind_spattn_env(&keys);
     let effective = if cfg.access.is_none() && opt > OptLevel::O1 { OptLevel::O1 } else { opt };
-    let prog = compile(
+    let (prog, _) = compile_with_trace(
         &OpClass::SpAttn { block },
         CompileOptions { opt: effective, spattn, ..Default::default() },
     )?;

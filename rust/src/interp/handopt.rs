@@ -11,14 +11,16 @@
 //! Numerics are identical to emb-opt3 by construction (the transform
 //! only permutes dispatch arms), which the tests pin down.
 
-use crate::compiler::passes::pipeline::{compile, CompileOptions, CompiledProgram, OptLevel};
+use crate::compiler::passes::pipeline::{
+    compile_with_trace, CompileOptions, CompiledProgram, OptLevel,
+};
 use crate::error::Result;
 use crate::frontend::embedding_ops::OpClass;
 use crate::ir::dlc::{DlcOp, DlcProgram};
 
 /// Build the hand-optimized reference program for an op class.
 pub fn ref_dae(op: &OpClass, vlen: u32) -> Result<CompiledProgram> {
-    let mut p = compile(
+    let (mut p, _) = compile_with_trace(
         op,
         CompileOptions { opt: OptLevel::O3, vlen, ..Default::default() },
     )?;
@@ -71,7 +73,8 @@ mod tests {
             (0..8).map(|_| (0..5).map(|_| rng.below(64) as i32).collect()).collect();
         let csr = Csr::from_rows(64, &rows);
 
-        let opt3 = compile(&OpClass::Sls, CompileOptions::at(OptLevel::O3)).unwrap();
+        let opt3 =
+            compile_with_trace(&OpClass::Sls, CompileOptions::with_opt(OptLevel::O3)).unwrap().0;
         let handopt = ref_dae(&OpClass::Sls, 4).unwrap();
 
         let mut e1 = csr.bind_sls_env(&table, false);

@@ -810,11 +810,18 @@ pub fn run_program(prog: &DlcProgram, env: &mut Env) -> Result<Vec<f32>> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compiler::passes::pipeline::{compile, CompileOptions, OptLevel};
+    use crate::compiler::passes::pipeline::{
+        compile_with_trace, CompileOptions, CompiledProgram, OptLevel,
+    };
     use crate::data::Tensor;
     use crate::frontend::embedding_ops::{OpClass, Semiring};
     use crate::frontend::formats::{bind_mp_env, BlockGathers, Csr, FlatLookups};
     use crate::util::rng::Rng;
+
+    /// One-shot pipeline helper (the old `compile` free function).
+    fn compile(op: &OpClass, opts: CompileOptions) -> crate::error::Result<CompiledProgram> {
+        compile_with_trace(op, opts).map(|(p, _)| p)
+    }
 
     fn rand_csr(rng: &mut Rng, rows: usize, cols: usize, max_deg: usize) -> Csr {
         let r: Vec<Vec<i32>> = (0..rows)
@@ -853,7 +860,7 @@ mod tests {
         let csr = rand_csr(&mut rng, 10, 64, 7);
         let want = sls_ref(&csr, &table, false);
         for opt in OptLevel::ALL {
-            let prog = compile(&OpClass::Sls, CompileOptions::at(opt)).unwrap();
+            let prog = compile(&OpClass::Sls, CompileOptions::with_opt(opt)).unwrap();
             let mut env = csr.bind_sls_env(&table, false);
             let got = run_program(&prog.dlc, &mut env).unwrap();
             crate::util::quick::allclose(&got, &want, 1e-5, 1e-5)
@@ -870,7 +877,7 @@ mod tests {
         csr = csr.with_vals(vals);
         let want = sls_ref(&csr, &table, true);
         for opt in OptLevel::ALL {
-            let prog = compile(&OpClass::Spmm, CompileOptions::at(opt)).unwrap();
+            let prog = compile(&OpClass::Spmm, CompileOptions::with_opt(opt)).unwrap();
             let mut env = csr.bind_sls_env(&table, true);
             let got = run_program(&prog.dlc, &mut env).unwrap();
             crate::util::quick::allclose(&got, &want, 1e-4, 1e-4)
@@ -899,7 +906,7 @@ mod tests {
             }
         }
         for opt in OptLevel::ALL {
-            let prog = compile(&OpClass::Mp, CompileOptions::at(opt)).unwrap();
+            let prog = compile(&OpClass::Mp, CompileOptions::with_opt(opt)).unwrap();
             let mut env = bind_mp_env(&csr, &feats);
             let got = run_program(&prog.dlc, &mut env).unwrap();
             crate::util::quick::allclose(&got, &want, 1e-3, 1e-3)
@@ -928,7 +935,7 @@ mod tests {
                 }
             }
             for opt in OptLevel::ALL {
-                let prog = compile(&OpClass::Kg(sem), CompileOptions::at(opt)).unwrap();
+                let prog = compile(&OpClass::Kg(sem), CompileOptions::with_opt(opt)).unwrap();
                 let mut env = fl.bind_kg_env(&table);
                 let got = run_program(&prog.dlc, &mut env).unwrap();
                 crate::util::quick::allclose(&got, &want, 1e-6, 1e-6)
@@ -957,7 +964,7 @@ mod tests {
         }
         for opt in OptLevel::ALL {
             let prog =
-                compile(&OpClass::SpAttn { block }, CompileOptions::at(opt)).unwrap();
+                compile(&OpClass::SpAttn { block }, CompileOptions::with_opt(opt)).unwrap();
             let mut env = bg.bind_spattn_env(&keys);
             let got = run_program(&prog.dlc, &mut env).unwrap();
             crate::util::quick::allclose(&got, &want, 1e-6, 1e-6)

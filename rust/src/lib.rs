@@ -2,8 +2,21 @@
 //!
 //! A reproduction of *"Ember: A Compiler for Efficient Embedding
 //! Operations on Decoupled Access-Execute Architectures"* as a
-//! three-layer Rust + JAX + Pallas system. See DESIGN.md for the system
-//! inventory and substitutions, EXPERIMENTS.md for paper-vs-measured.
+//! three-layer Rust + JAX + Pallas system. See DESIGN.md (repo root)
+//! for the system inventory, the session/pass-manager architecture,
+//! and the offline-build substitutions.
+//!
+//! Compilation enters through [`session::EmberSession`] — a cached,
+//! multi-op driver over the [`compiler::PassManager`] pipeline:
+//!
+//! ```
+//! use ember::EmberSession;
+//! use ember::frontend::EmbeddingBag;
+//!
+//! let mut session = EmberSession::default();
+//! let program = session.compile(&EmbeddingBag::new(4096, 32)).unwrap();
+//! assert!(!program.dlc.lookup.is_empty());
+//! ```
 
 pub mod dae;
 pub mod data;
@@ -15,9 +28,13 @@ pub mod harness;
 pub mod interp;
 pub mod ir;
 pub mod runtime;
+pub mod session;
 pub mod util;
 pub mod workloads;
 
+pub use compiler::{CompileOptions, OptLevel, PassManager, PassTrace};
 pub use error::{EmberError, Result};
+pub use frontend::Frontend;
+pub use session::{EmberSession, OpHandle};
 
-pub fn version() -> &'static str { "0.1.0" }
+pub fn version() -> &'static str { "0.2.0" }

@@ -3,13 +3,14 @@
 //!
 //! (Arg parsing is hand-rolled: the offline image has no clap.)
 
-use ember::compiler::passes::pipeline::{compile, CompileOptions, OptLevel};
+use ember::compiler::passes::pipeline::{CompileOptions, OptLevel};
 use ember::coordinator::{BatchOptions, Coordinator, DlrmModel, Request};
 use ember::dae::MachineConfig;
 use ember::error::Result;
 use ember::frontend::embedding_ops::{OpClass, Semiring};
 use ember::harness;
 use ember::runtime::Runtime;
+use ember::session::EmberSession;
 use ember::util::rng::Rng;
 use std::collections::HashMap;
 use std::time::Instant;
@@ -19,7 +20,7 @@ fn usage() -> ! {
         "ember — compiler for embedding operations on DAE architectures
 
 USAGE:
-  ember compile --op <sls|spmm|mp|kg|kg_maxplus|spattn> [--opt 0..3] [--vlen N] [--emit scf|slc|dlc|all]
+  ember compile --op <sls|spmm|mp|kg|kg_maxplus|spattn> [--opt 0..3] [--vlen N] [--emit scf|slc|dlc|all] [--trace] [--dump-passes]
   ember simulate --op <op> [--opt 0..3] [--machine core|core2x|dae|t4|h100]
   ember bench --exp <table1..4|fig1|fig3|fig4|fig6|fig7|fig8|fig16..19|all> [--out results] [--seed N]
   ember serve [--requests N] [--artifacts artifacts]
@@ -34,9 +35,18 @@ fn parse_flags(args: &[String]) -> HashMap<String, String> {
     let mut i = 0;
     while i < args.len() {
         if let Some(k) = args[i].strip_prefix("--") {
-            let v = args.get(i + 1).cloned().unwrap_or_default();
+            // boolean flags: next token is another --flag (or absent)
+            let v = match args.get(i + 1) {
+                Some(next) if !next.starts_with("--") => {
+                    i += 2;
+                    next.clone()
+                }
+                _ => {
+                    i += 1;
+                    String::new()
+                }
+            };
             m.insert(k.to_string(), v);
-            i += 2;
         } else {
             i += 1;
         }
@@ -84,7 +94,15 @@ fn cmd_compile(flags: &HashMap<String, String>) -> Result<()> {
         .unwrap_or(OptLevel::O3);
     let vlen: u32 = flags.get("vlen").and_then(|v| v.parse().ok()).unwrap_or(4);
     let emit = flags.get("emit").map(String::as_str).unwrap_or("all");
-    let p = compile(&op, CompileOptions { opt, vlen, ..Default::default() })?;
+    let mut session =
+        EmberSession::with_options(CompileOptions { opt, vlen, ..Default::default() });
+    if flags.contains_key("dump-passes") {
+        // per-stage SLC dump through the session's pass-manager hook
+        session.set_dump_ir(std::sync::Arc::new(|stage, func| {
+            println!("// ----- SLC after `{stage}` -----\n{func}");
+        }));
+    }
+    let p = session.compile(&op)?;
     if emit == "scf" || emit == "all" {
         println!("// ===== SCF IR =====\n{}", p.scf);
     }
@@ -93,6 +111,11 @@ fn cmd_compile(flags: &HashMap<String, String>) -> Result<()> {
     }
     if emit == "dlc" || emit == "all" {
         println!("// ===== DLC IR =====\n{}", p.dlc);
+    }
+    if flags.contains_key("trace") {
+        for t in session.traces() {
+            println!("{t}");
+        }
     }
     Ok(())
 }

@@ -1,14 +1,21 @@
 //! PJRT runtime: loads the AOT artifacts produced by `python/compile/`
 //! and executes them on the request path. Python never runs here.
 //!
-//! Interchange format is HLO *text* (see `python/compile/aot.py` and
-//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` →
-//! `XlaComputation::from_proto` → `PjRtClient::compile`.
+//! Interchange format is HLO *text* (see `python/compile/aot.py`):
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile`.
+//!
+//! The real backend needs the `xla` crate, which the offline build
+//! image does not ship. It is therefore gated behind the `pjrt`
+//! feature; the default build uses a stub `Runtime` with the identical
+//! API that reads manifests but reports a runtime error on `load` /
+//! `execute_f32`. Callers degrade explicitly: the coordinator serves
+//! through the pure-Rust MLP when its worker has no runtime,
+//! integration tests gate on `cfg!(feature = "pjrt")` + artifacts
+//! presence, and the examples catch `execute_f32` errors and skip
+//! their PJRT oracle checks.
 
-use crate::error::{EmberError, Result};
 use crate::util::json::Json;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
 
 /// Argument data passed to an executable.
 #[derive(Debug, Clone)]
@@ -24,112 +31,192 @@ impl ArgData {
     pub fn i32(data: Vec<i32>, dims: &[usize]) -> Self {
         ArgData::I32 { data, dims: dims.iter().map(|&d| d as i64).collect() }
     }
+}
 
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let lit = match self {
-            ArgData::F32 { data, dims } => xla::Literal::vec1(data)
-                .reshape(dims)
-                .map_err(|e| EmberError::Runtime(format!("reshape f32: {e}")))?,
-            ArgData::I32 { data, dims } => xla::Literal::vec1(data)
-                .reshape(dims)
-                .map_err(|e| EmberError::Runtime(format!("reshape i32: {e}")))?,
-        };
-        Ok(lit)
+/// Read `<dir>/manifest.json`, tolerating its absence.
+fn read_manifest(dir: &std::path::Path) -> crate::error::Result<Json> {
+    let manifest_path = dir.join("manifest.json");
+    if manifest_path.exists() {
+        Json::parse(&std::fs::read_to_string(&manifest_path)?)
+    } else {
+        Ok(Json::Obj(Default::default()))
     }
 }
 
-/// The PJRT runtime: one compiled executable per artifact.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
-    pub manifest: Json,
-    dir: PathBuf,
-}
+#[cfg(feature = "pjrt")]
+mod backend {
+    use super::{read_manifest, ArgData};
+    use crate::error::{EmberError, Result};
+    use crate::util::json::Json;
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
 
-impl Runtime {
-    /// Create a CPU PJRT client and read the manifest. Executables are
-    /// compiled lazily (first use) or eagerly via `load_all`.
-    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = artifacts_dir.as_ref().to_path_buf();
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| EmberError::Runtime(format!("PjRtClient::cpu: {e}")))?;
-        let manifest_path = dir.join("manifest.json");
-        let manifest = if manifest_path.exists() {
-            Json::parse(&std::fs::read_to_string(&manifest_path)?)?
-        } else {
-            Json::Obj(Default::default())
-        };
-        Ok(Runtime { client, executables: HashMap::new(), manifest, dir })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (and cache) the artifact registered under `name` in the
-    /// manifest (e.g. "dlrm_mlp"), or a raw `<name>.hlo.txt` file.
-    pub fn load(&mut self, name: &str) -> Result<()> {
-        if self.executables.contains_key(name) {
-            return Ok(());
+    impl ArgData {
+        fn to_literal(&self) -> Result<xla::Literal> {
+            let lit = match self {
+                ArgData::F32 { data, dims } => xla::Literal::vec1(data)
+                    .reshape(dims)
+                    .map_err(|e| EmberError::Runtime(format!("reshape f32: {e}")))?,
+                ArgData::I32 { data, dims } => xla::Literal::vec1(data)
+                    .reshape(dims)
+                    .map_err(|e| EmberError::Runtime(format!("reshape i32: {e}")))?,
+            };
+            Ok(lit)
         }
-        let file = self
-            .manifest
-            .at(&["artifacts", name, "file"])
-            .and_then(|j| j.as_str().map(|s| s.to_string()))
-            .unwrap_or_else(|| format!("{name}.hlo.txt"));
-        let path = self.dir.join(&file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| EmberError::Runtime("bad path".into()))?,
-        )
-        .map_err(|e| EmberError::Runtime(format!("parse {file}: {e}")))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| EmberError::Runtime(format!("compile {file}: {e}")))?;
-        self.executables.insert(name.to_string(), exe);
-        Ok(())
     }
 
-    /// Eagerly compile every artifact in the manifest.
-    pub fn load_all(&mut self) -> Result<Vec<String>> {
-        let names: Vec<String> = match self.manifest.get("artifacts") {
-            Some(Json::Obj(m)) => m.keys().cloned().collect(),
-            _ => Vec::new(),
-        };
-        for n in &names {
-            self.load(n)?;
+    /// The PJRT runtime: one compiled executable per artifact.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        executables: HashMap<String, xla::PjRtLoadedExecutable>,
+        pub manifest: Json,
+        dir: PathBuf,
+    }
+
+    impl Runtime {
+        /// Create a CPU PJRT client and read the manifest. Executables
+        /// are compiled lazily (first use) or eagerly via `load_all`.
+        pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+            let dir = artifacts_dir.as_ref().to_path_buf();
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| EmberError::Runtime(format!("PjRtClient::cpu: {e}")))?;
+            let manifest = read_manifest(&dir)?;
+            Ok(Runtime { client, executables: HashMap::new(), manifest, dir })
         }
-        Ok(names)
-    }
 
-    pub fn is_loaded(&self, name: &str) -> bool {
-        self.executables.contains_key(name)
-    }
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
 
-    /// Execute `name` with `args`; returns the flattened f32 output
-    /// (all modules are lowered with `return_tuple=True` and a single
-    /// result).
-    pub fn execute_f32(&mut self, name: &str, args: &[ArgData]) -> Result<Vec<f32>> {
-        self.load(name)?;
-        let exe = self.executables.get(name).unwrap();
-        let literals: Vec<xla::Literal> =
-            args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| EmberError::Runtime(format!("execute {name}: {e}")))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| EmberError::Runtime(format!("to_literal {name}: {e}")))?;
-        let out = lit
-            .to_tuple1()
-            .map_err(|e| EmberError::Runtime(format!("to_tuple1 {name}: {e}")))?;
-        out.to_vec::<f32>()
-            .map_err(|e| EmberError::Runtime(format!("to_vec {name}: {e}")))
-    }
+        /// Compile (and cache) the artifact registered under `name` in
+        /// the manifest (e.g. "dlrm_mlp"), or a raw `<name>.hlo.txt`.
+        pub fn load(&mut self, name: &str) -> Result<()> {
+            if self.executables.contains_key(name) {
+                return Ok(());
+            }
+            let file = self
+                .manifest
+                .at(&["artifacts", name, "file"])
+                .and_then(|j| j.as_str().map(|s| s.to_string()))
+                .unwrap_or_else(|| format!("{name}.hlo.txt"));
+            let path = self.dir.join(&file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| EmberError::Runtime("bad path".into()))?,
+            )
+            .map_err(|e| EmberError::Runtime(format!("parse {file}: {e}")))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| EmberError::Runtime(format!("compile {file}: {e}")))?;
+            self.executables.insert(name.to_string(), exe);
+            Ok(())
+        }
 
-    /// Manifest lookup helper: `shape("dlrm", "batch")`.
-    pub fn manifest_usize(&self, path: &[&str]) -> Option<usize> {
-        self.manifest.at(path).and_then(|j| j.as_usize())
+        /// Eagerly compile every artifact in the manifest.
+        pub fn load_all(&mut self) -> Result<Vec<String>> {
+            let names: Vec<String> = match self.manifest.get("artifacts") {
+                Some(Json::Obj(m)) => m.keys().cloned().collect(),
+                _ => Vec::new(),
+            };
+            for n in &names {
+                self.load(n)?;
+            }
+            Ok(names)
+        }
+
+        pub fn is_loaded(&self, name: &str) -> bool {
+            self.executables.contains_key(name)
+        }
+
+        /// Execute `name` with `args`; returns the flattened f32 output
+        /// (all modules are lowered with `return_tuple=True` and a
+        /// single result).
+        pub fn execute_f32(&mut self, name: &str, args: &[ArgData]) -> Result<Vec<f32>> {
+            self.load(name)?;
+            let exe = self.executables.get(name).unwrap();
+            let literals: Vec<xla::Literal> =
+                args.iter().map(|a| a.to_literal()).collect::<Result<_>>()?;
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| EmberError::Runtime(format!("execute {name}: {e}")))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| EmberError::Runtime(format!("to_literal {name}: {e}")))?;
+            let out = lit
+                .to_tuple1()
+                .map_err(|e| EmberError::Runtime(format!("to_tuple1 {name}: {e}")))?;
+            out.to_vec::<f32>()
+                .map_err(|e| EmberError::Runtime(format!("to_vec {name}: {e}")))
+        }
+
+        /// Manifest lookup helper: `manifest_usize(&["dlrm", "batch"])`.
+        pub fn manifest_usize(&self, path: &[&str]) -> Option<usize> {
+            self.manifest.at(path).and_then(|j| j.as_usize())
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    use super::{read_manifest, ArgData};
+    use crate::error::{EmberError, Result};
+    use crate::util::json::Json;
+    use std::path::{Path, PathBuf};
+
+    /// Stub runtime (the `pjrt` feature is disabled): reads manifests so
+    /// shape queries work, but cannot compile or execute HLO artifacts.
+    pub struct Runtime {
+        pub manifest: Json,
+        #[allow(dead_code)]
+        dir: PathBuf,
+    }
+
+    impl Runtime {
+        pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+            let dir = artifacts_dir.as_ref().to_path_buf();
+            let manifest = read_manifest(&dir)?;
+            Ok(Runtime { manifest, dir })
+        }
+
+        pub fn platform(&self) -> String {
+            "stub (build without `pjrt` feature)".to_string()
+        }
+
+        pub fn load(&mut self, name: &str) -> Result<()> {
+            Err(EmberError::Runtime(format!(
+                "cannot load artifact `{name}`: this build has no PJRT backend \
+                 (enable the `pjrt` cargo feature with the `xla` crate vendored)"
+            )))
+        }
+
+        pub fn load_all(&mut self) -> Result<Vec<String>> {
+            let names: Vec<String> = match self.manifest.get("artifacts") {
+                Some(Json::Obj(m)) => m.keys().cloned().collect(),
+                _ => Vec::new(),
+            };
+            for n in &names {
+                self.load(n)?;
+            }
+            Ok(names)
+        }
+
+        pub fn is_loaded(&self, _name: &str) -> bool {
+            false
+        }
+
+        pub fn execute_f32(&mut self, name: &str, _args: &[ArgData]) -> Result<Vec<f32>> {
+            Err(EmberError::Runtime(format!(
+                "cannot execute `{name}`: this build has no PJRT backend \
+                 (enable the `pjrt` cargo feature with the `xla` crate vendored)"
+            )))
+        }
+
+        /// Manifest lookup helper: `manifest_usize(&["dlrm", "batch"])`.
+        pub fn manifest_usize(&self, path: &[&str]) -> Option<usize> {
+            self.manifest.at(path).and_then(|j| j.as_usize())
+        }
+    }
+}
+
+pub use backend::Runtime;

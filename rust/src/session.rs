@@ -1,0 +1,273 @@
+//! `EmberSession`: the unified, multi-op compilation API.
+//!
+//! A session owns default [`CompileOptions`], a program cache keyed by
+//! `(OpClass, CompileOptions)`, and the [`PassTrace`] record of every
+//! pipeline that actually ran. Anything implementing
+//! [`Frontend`] — the torch-like op declarations or a bare
+//! [`OpClass`] — compiles through it:
+//!
+//! ```
+//! use ember::frontend::EmbeddingBag;
+//! use ember::session::EmberSession;
+//!
+//! let mut session = EmberSession::default();
+//! let bag = EmbeddingBag::new(4096, 32);
+//! let program = session.compile(&bag).unwrap();
+//! assert!(!program.dlc.lookup.is_empty());
+//! // identical (op, options) hit the cache: no second PassTrace
+//! let again = session.compile(&bag).unwrap();
+//! assert_eq!(session.traces().len(), 1);
+//! assert!(std::sync::Arc::ptr_eq(&program, &again));
+//! ```
+//!
+//! Multi-op modules queue ops with [`EmberSession::add`] and compile
+//! them in one sweep with [`EmberSession::compile_all`] — the shape a
+//! DLRM serving worker with dozens of tables wants, where most tables
+//! share one `(OpClass, CompileOptions)` program.
+
+use crate::compiler::pass_manager::{DumpHook, PassTrace};
+use crate::compiler::passes::pipeline::{compile_scf, CompileOptions, CompiledProgram};
+use crate::error::{EmberError, Result};
+use crate::frontend::embedding_ops::OpClass;
+use crate::frontend::Frontend;
+use crate::ir::scf::ScfFunc;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Handle to an op queued in a session with [`EmberSession::add`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct OpHandle(usize);
+
+struct PendingOp {
+    op: OpClass,
+    scf: ScfFunc,
+    opts: CompileOptions,
+    compiled: Option<Arc<CompiledProgram>>,
+}
+
+/// A compilation session: default options + program cache + traces.
+#[derive(Default)]
+pub struct EmberSession {
+    options: CompileOptions,
+    cache: HashMap<(OpClass, CompileOptions), Arc<CompiledProgram>>,
+    traces: Vec<PassTrace>,
+    ops: Vec<PendingOp>,
+    dump: Option<DumpHook>,
+}
+
+impl EmberSession {
+    /// A session with the default options (emb-opt3, vlen 4).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A session whose `compile`/`add` default to `options`.
+    pub fn with_options(options: CompileOptions) -> Self {
+        EmberSession { options, ..Default::default() }
+    }
+
+    /// The session's default compile options.
+    pub fn options(&self) -> &CompileOptions {
+        &self.options
+    }
+
+    /// Install an IR stage observer forwarded to every pipeline this
+    /// session runs (`"input"`, then one call per pass). Lets examples
+    /// and tests print every stage without re-plumbing the pipeline.
+    pub fn set_dump_ir(&mut self, hook: DumpHook) -> &mut Self {
+        self.dump = Some(hook);
+        self
+    }
+
+    // ---------------------------------------------------- one-op path
+
+    /// Compile one frontend op with the session's default options.
+    /// Cached: recompiling an identical `(OpClass, CompileOptions)`
+    /// returns the same program without re-running the pipeline.
+    ///
+    /// Caching is sound because runtime shapes resolve through the
+    /// `Env` at execution time; a frontend's declared shapes only seed
+    /// the SCF symbol *defaults*, so a cache hit may return a program
+    /// whose `scf.sym_defaults` were seeded by an earlier frontend of
+    /// the same op class.
+    pub fn compile<F: Frontend + ?Sized>(&mut self, front: &F) -> Result<Arc<CompiledProgram>> {
+        self.compile_with(front, self.options)
+    }
+
+    /// Compile one frontend op with explicit options (still cached).
+    pub fn compile_with<F: Frontend + ?Sized>(
+        &mut self,
+        front: &F,
+        opts: CompileOptions,
+    ) -> Result<Arc<CompiledProgram>> {
+        let op = front.op_class();
+        if let Some(hit) = self.cache.get(&(op.clone(), opts)) {
+            return Ok(hit.clone());
+        }
+        self.compile_uncached(op, front.to_scf(), opts)
+    }
+
+    fn compile_uncached(
+        &mut self,
+        op: OpClass,
+        scf: ScfFunc,
+        opts: CompileOptions,
+    ) -> Result<Arc<CompiledProgram>> {
+        let (program, trace) = compile_scf(&op, scf, opts, self.dump.clone())?;
+        let program = Arc::new(program);
+        self.cache.insert((op, opts), program.clone());
+        self.traces.push(trace);
+        Ok(program)
+    }
+
+    // -------------------------------------------------- multi-op path
+
+    /// Queue an op for module compilation with the session defaults.
+    pub fn add<F: Frontend + ?Sized>(&mut self, front: &F) -> OpHandle {
+        self.add_with(front, self.options)
+    }
+
+    /// Queue an op for module compilation with explicit options.
+    pub fn add_with<F: Frontend + ?Sized>(
+        &mut self,
+        front: &F,
+        opts: CompileOptions,
+    ) -> OpHandle {
+        self.ops.push(PendingOp {
+            op: front.op_class(),
+            scf: front.to_scf(),
+            opts,
+            compiled: None,
+        });
+        OpHandle(self.ops.len() - 1)
+    }
+
+    /// Compile every queued op (cache-aware), returning the programs in
+    /// handle order. Already-compiled handles are kept as-is.
+    pub fn compile_all(&mut self) -> Result<Vec<Arc<CompiledProgram>>> {
+        for i in 0..self.ops.len() {
+            if self.ops[i].compiled.is_some() {
+                continue;
+            }
+            let (op, opts) = (self.ops[i].op.clone(), self.ops[i].opts);
+            let program = match self.cache.get(&(op.clone(), opts)) {
+                Some(hit) => hit.clone(),
+                None => {
+                    let scf = self.ops[i].scf.clone();
+                    self.compile_uncached(op, scf, opts)?
+                }
+            };
+            self.ops[i].compiled = Some(program);
+        }
+        Ok(self.ops.iter().map(|p| p.compiled.clone().unwrap()).collect())
+    }
+
+    /// The compiled program behind a handle (after `compile_all`).
+    pub fn program(&self, h: OpHandle) -> Result<Arc<CompiledProgram>> {
+        self.ops
+            .get(h.0)
+            .and_then(|p| p.compiled.clone())
+            .ok_or_else(|| {
+                EmberError::Runtime(format!(
+                    "op handle #{} is not compiled (run `compile_all` first)",
+                    h.0
+                ))
+            })
+    }
+
+    /// Number of ops queued via `add`.
+    pub fn num_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    // ------------------------------------------------- introspection
+
+    /// One `PassTrace` per pipeline that actually ran: cache hits add
+    /// nothing here, which is how tests observe the cache.
+    pub fn traces(&self) -> &[PassTrace] {
+        &self.traces
+    }
+
+    /// Number of distinct `(OpClass, CompileOptions)` programs cached.
+    pub fn cached_programs(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Drop all cached programs (keeps queued ops and traces).
+    pub fn clear_cache(&mut self) {
+        self.cache.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::passes::pipeline::OptLevel;
+    use crate::frontend::torch_like::{EmbeddingBag, GraphAggregate, KgLookup};
+    use crate::frontend::Semiring;
+
+    #[test]
+    fn cache_hit_compiles_once() {
+        let mut s = EmberSession::default();
+        let a = s.compile(&OpClass::Sls).unwrap();
+        let b = s.compile(&OpClass::Sls).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(s.traces().len(), 1, "second compile must be a cache hit");
+        assert_eq!(s.cached_programs(), 1);
+
+        // different options miss
+        let c = s.compile_with(&OpClass::Sls, CompileOptions::with_opt(OptLevel::O1)).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(s.traces().len(), 2);
+    }
+
+    #[test]
+    fn frontends_sharing_an_op_class_share_a_program() {
+        let mut s = EmberSession::default();
+        // two different tables, same (Sls, opts) program
+        let t1 = s.compile(&EmbeddingBag::new(1 << 20, 32)).unwrap();
+        let t2 = s.compile(&EmbeddingBag::new(1 << 14, 64)).unwrap();
+        assert!(Arc::ptr_eq(&t1, &t2));
+        assert_eq!(s.traces().len(), 1);
+    }
+
+    #[test]
+    fn multi_op_module_compiles_all_and_dedups() {
+        let mut s = EmberSession::default();
+        let h1 = s.add(&EmbeddingBag::new(4096, 32));
+        let h2 = s.add(&GraphAggregate { num_nodes: 128, feature_dim: 64, fused_sddmm: true });
+        let h3 = s.add(&KgLookup::new(1000, 64, Semiring::PlusTimes));
+        let h4 = s.add(&EmbeddingBag::new(8192, 32)); // dup op class of h1
+        assert!(s.program(h1).is_err(), "not compiled yet");
+
+        let programs = s.compile_all().unwrap();
+        assert_eq!(programs.len(), 4);
+        assert_eq!(s.num_ops(), 4);
+        // 3 distinct (OpClass, opts) pipelines ran, 4 handles resolved
+        assert_eq!(s.traces().len(), 3);
+        assert_eq!(s.cached_programs(), 3);
+        assert!(Arc::ptr_eq(&programs[0], &programs[3]));
+        assert_eq!(s.program(h2).unwrap().op, OpClass::Mp);
+        assert_eq!(s.program(h3).unwrap().op, OpClass::Kg(Semiring::PlusTimes));
+
+        // compile_all is idempotent
+        let again = s.compile_all().unwrap();
+        assert_eq!(again.len(), 4);
+        assert_eq!(s.traces().len(), 3);
+    }
+
+    #[test]
+    fn session_programs_match_one_shot_pipeline() {
+        use crate::compiler::passes::pipeline::compile_with_trace;
+        let mut s = EmberSession::default();
+        for op in [OpClass::Sls, OpClass::Mp, OpClass::SpAttn { block: 4 }] {
+            for opt in OptLevel::ALL {
+                let opts = CompileOptions::with_opt(opt);
+                let a = s.compile_with(&op, opts).unwrap();
+                let (b, _) = compile_with_trace(&op, opts).unwrap();
+                assert_eq!(a.slc.to_string(), b.slc.to_string(), "{op:?} {opt}");
+                assert_eq!(a.dlc.to_string(), b.dlc.to_string(), "{op:?} {opt}");
+            }
+        }
+    }
+}

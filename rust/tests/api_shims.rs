@@ -1,0 +1,95 @@
+//! API-redesign guarantees:
+//! * the deprecated `compile()` / `CompileOptions::at()` shims produce
+//!   byte-identical programs to the `EmberSession` path,
+//! * the session cache actually dedups `(OpClass, CompileOptions)`,
+//! * the pass manager's trace matches what the shims silently did.
+
+use ember::frontend::embedding_ops::{OpClass, Semiring};
+use ember::session::EmberSession;
+use ember::{CompileOptions, OptLevel};
+use std::sync::Arc;
+
+fn all_ops() -> Vec<OpClass> {
+    vec![
+        OpClass::Sls,
+        OpClass::Spmm,
+        OpClass::Mp,
+        OpClass::Kg(Semiring::PlusTimes),
+        OpClass::Kg(Semiring::MaxPlus),
+        OpClass::SpAttn { block: 4 },
+    ]
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_compile_shim_is_byte_identical_to_session() {
+    use ember::compiler::passes::pipeline::compile;
+    for op in all_ops() {
+        for opt in OptLevel::ALL {
+            let old = compile(&op, CompileOptions::at(opt)).unwrap();
+            let new = EmberSession::with_options(CompileOptions::with_opt(opt))
+                .compile(&op)
+                .unwrap();
+            assert_eq!(
+                old.scf.to_string(),
+                new.scf.to_string(),
+                "{op:?} at {opt}: SCF diverged"
+            );
+            assert_eq!(
+                old.slc.to_string(),
+                new.slc.to_string(),
+                "{op:?} at {opt}: SLC diverged"
+            );
+            assert_eq!(
+                old.dlc.to_string(),
+                new.dlc.to_string(),
+                "{op:?} at {opt}: DLC diverged"
+            );
+            assert_eq!(old.options_opt, new.options_opt);
+            assert_eq!(old.vlen, new.vlen);
+        }
+    }
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_options_at_equals_with_opt() {
+    for opt in OptLevel::ALL {
+        assert_eq!(CompileOptions::at(opt), CompileOptions::with_opt(opt));
+    }
+}
+
+#[test]
+fn session_cache_compiles_identical_requests_once() {
+    // acceptance: compiling the same (OpClass, CompileOptions) twice
+    // observes exactly one PassTrace
+    let mut session = EmberSession::default();
+    let first = session.compile(&OpClass::Sls).unwrap();
+    let second = session.compile(&OpClass::Sls).unwrap();
+    assert!(Arc::ptr_eq(&first, &second), "cache must return the same program");
+    assert_eq!(session.traces().len(), 1, "one pipeline run for two identical requests");
+
+    // a different op class is a miss...
+    session.compile(&OpClass::Mp).unwrap();
+    assert_eq!(session.traces().len(), 2);
+    // ...and so are different options for a cached op class
+    session.compile_with(&OpClass::Sls, CompileOptions::with_opt(OptLevel::O1)).unwrap();
+    assert_eq!(session.traces().len(), 3);
+    assert_eq!(session.cached_programs(), 3);
+}
+
+#[test]
+fn pass_trace_names_follow_the_opt_level() {
+    let mut session = EmberSession::with_options(CompileOptions::with_opt(OptLevel::O2));
+    session.compile(&OpClass::Sls).unwrap();
+    let names: Vec<&str> =
+        session.traces()[0].reports.iter().map(|r| r.pass).collect();
+    assert_eq!(names, vec!["vectorize", "bufferize"]);
+
+    // SpAttn at O3 takes the store-stream path
+    let mut session = EmberSession::with_options(CompileOptions::with_opt(OptLevel::O3));
+    session.compile(&OpClass::SpAttn { block: 4 }).unwrap();
+    let names: Vec<&str> =
+        session.traces()[0].reports.iter().map(|r| r.pass).collect();
+    assert_eq!(names, vec!["vectorize", "store_streams", "queue_align"]);
+}

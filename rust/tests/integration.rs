@@ -4,7 +4,6 @@
 //! PJRT-dependent tests skip gracefully when `artifacts/` has not been
 //! built (`make artifacts`); CI always builds artifacts first.
 
-use ember::compiler::passes::pipeline::{compile, CompileOptions, OptLevel};
 use ember::coordinator::{BatchOptions, Coordinator, DlrmModel, Request, Router};
 use ember::dae::MachineConfig;
 use ember::data::Tensor;
@@ -12,11 +11,17 @@ use ember::frontend::embedding_ops::OpClass;
 use ember::frontend::formats::Csr;
 use ember::harness::simulate;
 use ember::runtime::{ArgData, Runtime};
+use ember::session::EmberSession;
 use ember::util::rng::Rng;
+use ember::{CompileOptions, OptLevel};
 use std::path::Path;
 use std::time::Duration;
 
 fn artifacts_dir() -> Option<&'static str> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("skipping PJRT test: built without the `pjrt` feature (stub runtime)");
+        return None;
+    }
     if Path::new("artifacts/manifest.json").exists() {
         Some("artifacts")
     } else {
@@ -57,8 +62,9 @@ fn pjrt_sls_artifact_matches_compiled_program() {
         .unwrap();
 
     // Ember path: compiled DLC program interpreted on the same data
+    let mut session = EmberSession::default();
     for opt in OptLevel::ALL {
-        let prog = compile(&OpClass::Sls, CompileOptions::at(opt)).unwrap();
+        let prog = session.compile_with(&OpClass::Sls, CompileOptions::with_opt(opt)).unwrap();
         let mut env = csr.bind_sls_env(&table, false);
         let got = ember::interp::run_program(&prog.dlc, &mut env).unwrap();
         ember::util::quick::allclose(&got, &oracle, 1e-4, 1e-4)
@@ -133,10 +139,12 @@ fn end_to_end_dae_advantage_holds_across_opclasses() {
         (0..32).map(|_| (0..24).map(|_| rng.below(2048) as i32).collect()).collect();
     let csr = Csr::from_rows(2048, &lists);
 
+    let mut session = EmberSession::default();
     for op in [OpClass::Sls, OpClass::Spmm] {
         let weighted = matches!(op, OpClass::Spmm);
-        let coupled = compile(&op, CompileOptions::at(OptLevel::O1)).unwrap();
-        let dae = compile(&op, CompileOptions::at(OptLevel::O3)).unwrap();
+        let coupled =
+            session.compile_with(&op, CompileOptions::with_opt(OptLevel::O1)).unwrap();
+        let dae = session.compile_with(&op, CompileOptions::with_opt(OptLevel::O3)).unwrap();
         let mut e1 = csr.bind_sls_env(&table, weighted);
         let mut e2 = csr.bind_sls_env(&table, weighted);
         let c = simulate(&coupled, MachineConfig::traditional_core(), &mut e1).unwrap();
@@ -154,7 +162,7 @@ fn end_to_end_dae_advantage_holds_across_opclasses() {
 #[test]
 fn compile_cli_pipeline_emits_all_irs() {
     // exercise the same path as `ember compile`
-    let p = compile(&OpClass::Sls, CompileOptions::at(OptLevel::O3)).unwrap();
+    let p = EmberSession::default().compile(&OpClass::Sls).unwrap();
     let scf = p.scf.to_string();
     let slc = p.slc.to_string();
     let dlc = p.dlc.to_string();

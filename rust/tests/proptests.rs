@@ -3,7 +3,7 @@
 //! this offline image; failing seeds are replayable with
 //! `EMBER_QUICK_SEED=<n>`).
 
-use ember::compiler::passes::pipeline::{compile, CompileOptions, OptLevel};
+use ember::compiler::passes::pipeline::{compile_with_trace, CompiledProgram};
 use ember::coordinator::batcher::{BatchOptions, Batcher};
 use ember::coordinator::Request;
 use ember::dae::{DaeSim, MachineConfig};
@@ -14,8 +14,14 @@ use ember::interp::{run_program, Interp};
 use ember::util::quick::{allclose, check};
 use ember::util::rng::Rng;
 use ember::workloads::reuse::reuse_profile;
+use ember::{CompileOptions, OptLevel};
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
+
+/// One-shot pipeline helper (the old `compile` free function).
+fn compile(op: &OpClass, opts: CompileOptions) -> ember::Result<CompiledProgram> {
+    compile_with_trace(op, opts).map(|(p, _)| p)
+}
 
 fn rand_csr(rng: &mut Rng, rows: usize, cols: usize, max_deg: usize) -> Csr {
     let r: Vec<Vec<i32>> = (0..rows)
@@ -57,7 +63,7 @@ fn prop_sls_numerics_all_levels() {
         let csr = rand_csr(rng, rows, cols, deg);
         let want = sls_ref(&csr, &table, false);
         for opt in OptLevel::ALL {
-            let prog = compile(&OpClass::Sls, CompileOptions::at(opt))
+            let prog = compile(&OpClass::Sls, CompileOptions::with_opt(opt))
                 .map_err(|e| e.to_string())?;
             let mut env = csr.bind_sls_env(&table, false);
             let got = run_program(&prog.dlc, &mut env).map_err(|e| e.to_string())?;
@@ -79,7 +85,7 @@ fn prop_spmm_numerics_all_levels() {
         let csr = csr.with_vals(vals);
         let want = sls_ref(&csr, &table, true);
         for opt in [OptLevel::O0, OptLevel::O3] {
-            let prog = compile(&OpClass::Spmm, CompileOptions::at(opt))
+            let prog = compile(&OpClass::Spmm, CompileOptions::with_opt(opt))
                 .map_err(|e| e.to_string())?;
             let mut env = csr.bind_sls_env(&table, true);
             let got = run_program(&prog.dlc, &mut env).map_err(|e| e.to_string())?;
@@ -110,7 +116,7 @@ fn prop_mp_numerics_all_levels() {
         }
         for opt in [OptLevel::O0, OptLevel::O2, OptLevel::O3] {
             let prog =
-                compile(&OpClass::Mp, CompileOptions::at(opt)).map_err(|e| e.to_string())?;
+                compile(&OpClass::Mp, CompileOptions::with_opt(opt)).map_err(|e| e.to_string())?;
             let mut env = bind_mp_env(&csr, &feats);
             let got = run_program(&prog.dlc, &mut env).map_err(|e| e.to_string())?;
             allclose(&got, &want, 1e-2, 1e-2).map_err(|e| format!("{opt}: {e}"))?;
@@ -129,7 +135,7 @@ fn prop_kg_and_spattn_numerics() {
         let q = 1 + rng.below(20) as usize;
         let idxs: Vec<i32> = (0..q).map(|_| rng.below(n as u64) as i32).collect();
         let fl = FlatLookups { idxs: idxs.clone(), num_rows: n };
-        let prog = compile(&OpClass::Kg(Semiring::MaxPlus), CompileOptions::at(OptLevel::O3))
+        let prog = compile(&OpClass::Kg(Semiring::MaxPlus), CompileOptions::with_opt(OptLevel::O3))
             .map_err(|e| e.to_string())?;
         let mut env = fl.bind_kg_env(&table);
         let got = run_program(&prog.dlc, &mut env).map_err(|e| e.to_string())?;
@@ -150,7 +156,7 @@ fn prop_kg_and_spattn_numerics() {
             block,
             num_key_blocks: nb,
         };
-        let prog = compile(&OpClass::SpAttn { block }, CompileOptions::at(OptLevel::O3))
+        let prog = compile(&OpClass::SpAttn { block }, CompileOptions::with_opt(OptLevel::O3))
             .map_err(|e| e.to_string())?;
         let mut env = g.bind_spattn_env(&keys);
         let got = run_program(&prog.dlc, &mut env).map_err(|e| e.to_string())?;
@@ -187,7 +193,8 @@ fn prop_simulator_conservation() {
         let csr = rand_csr(rng, rows, cols, 10);
         let opt = [OptLevel::O0, OptLevel::O1, OptLevel::O2, OptLevel::O3]
             [rng.below(4) as usize];
-        let prog = compile(&OpClass::Sls, CompileOptions::at(opt)).map_err(|e| e.to_string())?;
+        let prog =
+            compile(&OpClass::Sls, CompileOptions::with_opt(opt)).map_err(|e| e.to_string())?;
         let mut env = csr.bind_sls_env(&table, false);
         let mut sim = DaeSim::new(cfg);
         let mut interp = Interp::new(&prog.dlc).map_err(|e| e.to_string())?;
@@ -215,8 +222,8 @@ fn prop_results_machine_independent() {
         let emb = 3 + rng.below(20) as usize;
         let table = Tensor::f32(vec![cols, emb], rng.normal_vec(cols * emb, 1.0));
         let csr = rand_csr(rng, 6, cols, 8);
-        let prog =
-            compile(&OpClass::Sls, CompileOptions::at(OptLevel::O3)).map_err(|e| e.to_string())?;
+        let prog = compile(&OpClass::Sls, CompileOptions::with_opt(OptLevel::O3))
+            .map_err(|e| e.to_string())?;
         let mut outs = Vec::new();
         for cfg in [
             MachineConfig::traditional_core(),
@@ -346,7 +353,7 @@ fn prop_lookup_never_reads_written_memrefs() {
         ];
         let op = &ops[rng.below(5) as usize];
         for opt in OptLevel::ALL {
-            let prog = compile(op, CompileOptions::at(opt)).map_err(|e| e.to_string())?;
+            let prog = compile(op, CompileOptions::with_opt(opt)).map_err(|e| e.to_string())?;
             let written: Vec<&str> = prog
                 .dlc
                 .args
