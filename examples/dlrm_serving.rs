@@ -4,9 +4,14 @@
 //!   * L1/L2 (build time): the Pallas SLS kernel + JAX MLP were AOT-
 //!     lowered to `artifacts/*.hlo.txt` by `make artifacts`.
 //!   * Runtime: the Rust coordinator routes + batches requests; the
-//!     embedding stage runs the Ember-compiled DLC program (compiled
-//!     once through the coordinator's `EmberSession`); the MLP runs
-//!     through PJRT. Python is never on the request path.
+//!     embedding stage runs the Ember-compiled DLC program across a
+//!     table-sharded worker pool; the MLP runs through PJRT. Python is
+//!     never on the request path.
+//!
+//! The serving benchmark is a closed-loop load generator
+//! (`coordinator::run_closed_loop`): it first compares single-worker
+//! vs sharded-pool throughput, then sweeps target QPS against the
+//! sharded engine and prints the latency/throughput curve.
 //!
 //! When PJRT is unavailable (default build without the `pjrt` feature,
 //! or no `artifacts/`), the example degrades to the pure-Rust MLP path:
@@ -14,14 +19,32 @@
 //! still runs.
 //!
 //! Run: `make artifacts && cargo run --release --example dlrm_serving`
+//! Flags: `--smoke` shrinks the load so CI finishes in seconds; a bare
+//! argument is the artifacts dir (default `artifacts`).
 
-use ember::coordinator::{BatchOptions, Coordinator, DlrmModel, Request};
+use ember::coordinator::{
+    run_closed_loop, synthetic_request, BatchOptions, Coordinator, DlrmModel, LoadReport,
+    LoadSpec, Request, ServeOptions,
+};
 use ember::runtime::{ArgData, Runtime};
-use ember::util::rng::Rng;
-use std::time::{Duration, Instant};
+use ember::EmberSession;
+use std::time::Duration;
+
+fn synthetic_model(session: &mut EmberSession) -> Result<DlrmModel, ember::EmberError> {
+    // 16-table DLRM: the shape the sharded pool is built for
+    DlrmModel::with_session(session, 8, 4096, 16, 16, 24, 13, 64, 42)
+}
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
-    let artifacts = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let mut smoke = false;
+    let mut artifacts = "artifacts".to_string();
+    for arg in std::env::args().skip(1) {
+        if arg == "--smoke" {
+            smoke = true;
+        } else if !arg.starts_with("--") {
+            artifacts = arg;
+        }
+    }
     let mut rt = Runtime::new(&artifacts)?;
     println!("PJRT platform: {}", rt.platform());
     let pjrt = match rt.load_all() {
@@ -39,10 +62,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         }
     };
 
+    // one session: all models of the run share one compiled program
+    let mut session = EmberSession::default();
     let model = if pjrt {
-        DlrmModel::from_manifest(&rt, 42)?
+        DlrmModel::from_manifest_with_session(&mut session, &rt, 42)?
     } else {
-        DlrmModel::new(8, 4096, 16, 2, 24, 13, 64, 42)?
+        synthetic_model(&mut session)?
     };
     let (batch, tables, rows, max_lookups, dense_n) = (
         model.batch,
@@ -53,15 +78,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     );
 
     // ---- numerics: coordinator path vs fused JAX dlrm_full oracle ----
-    let mut rng = Rng::new(7);
+    // max_lookups-wide lookup lists: the oracle's padded [batch,
+    // max_lookups] index rows depend on this width
     let requests: Vec<Request> = (0..batch)
-        .map(|i| Request {
-            id: i as u64,
-            lookups: (0..tables)
-                .map(|_| (0..24).map(|_| rng.below(rows as u64) as i32).collect())
-                .collect(),
-            dense: (0..dense_n).map(|_| rng.f32()).collect(),
-        })
+        .map(|i| synthetic_request(tables, rows, dense_n, max_lookups, 0, i))
         .collect();
 
     if pjrt {
@@ -117,54 +137,70 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         );
     }
 
-    // ---- serving benchmark ----
-    let n_requests = 2048usize;
-    let worker_model = if pjrt {
-        DlrmModel::from_manifest(&rt, 42)?
-    } else {
-        DlrmModel::new(8, 4096, 16, 2, 24, 13, 64, 42)?
-    };
-    let coord = Coordinator::start(
-        worker_model,
-        if pjrt { Some(artifacts.clone().into()) } else { None },
-        BatchOptions { max_batch: batch, max_wait: Duration::from_millis(1) },
-    );
-    // concurrent open-loop clients
-    let mut rng = Rng::new(11);
-    let t0 = Instant::now();
-    let mut handles = Vec::new();
-    for i in 0..n_requests {
-        let req = Request {
-            id: i as u64,
-            lookups: (0..tables)
-                .map(|_| (0..24).map(|_| rng.below(rows as u64) as i32).collect())
-                .collect(),
-            dense: (0..dense_n).map(|_| rng.f32()).collect(),
+    // ---- serving benchmark: single worker vs sharded pool ----
+    let artifacts_dir = if pjrt { Some(std::path::PathBuf::from(artifacts.clone())) } else { None };
+    let per_client = if smoke { 16 } else { 256 };
+    let clients = if smoke { 2 } else { 8 };
+    let mut start = |shards: usize| {
+        let m = if pjrt {
+            DlrmModel::from_manifest_with_session(&mut session, &rt, 42)
+        } else {
+            synthetic_model(&mut session)
         };
-        handles.push((Instant::now(), coord.submit(req)?));
-    }
-    let mut lat: Vec<Duration> = handles
-        .into_iter()
-        .map(|(t, rx)| {
-            let _ = rx.recv().unwrap().unwrap();
-            t.elapsed()
+        m.map(|m| {
+            Coordinator::start_sharded(
+                m,
+                artifacts_dir.clone(),
+                ServeOptions {
+                    batch: BatchOptions { max_batch: batch, max_wait: Duration::from_millis(1) },
+                    shards,
+                },
+            )
         })
-        .collect();
-    let wall = t0.elapsed();
-    lat.sort();
-    let stats = coord.shutdown();
-    println!("served {} requests in {:.2?}", stats.requests, wall);
-    println!("throughput: {:.0} req/s", n_requests as f64 / wall.as_secs_f64());
-    println!(
-        "latency: p50 {:.2?}  p95 {:.2?}  p99 {:.2?}",
-        lat[lat.len() / 2],
-        lat[(lat.len() as f64 * 0.95) as usize],
-        lat[((lat.len() as f64 * 0.99) as usize).min(lat.len() - 1)]
-    );
-    println!(
-        "batches: {} (mean size {:.1})",
-        stats.batches,
-        n_requests as f64 / stats.batches as f64
-    );
+    };
+
+    println!("closed loop: {clients} clients x {per_client} requests");
+    let mut unthrottled = Vec::new();
+    for shards in [1usize, 4] {
+        let coord = start(shards)?;
+        let spec = LoadSpec { clients, requests_per_client: per_client, target_qps: None };
+        let report = run_closed_loop(&coord, spec, |c, k| {
+            synthetic_request(tables, rows, dense_n, max_lookups, c, k)
+        })?;
+        let stats = coord.shutdown();
+        println!(
+            "  {shards} shard(s): {:>7.0} req/s  p50 {:>8.2?}  p95 {:>8.2?}  p99 {:>8.2?}  \
+             ({} batches, {} failed requests)",
+            report.throughput_rps(),
+            report.p50(),
+            report.p95(),
+            report.p99(),
+            stats.batches,
+            report.errors,
+        );
+        unthrottled.push(report.throughput_rps());
+    }
+    if unthrottled.len() == 2 && unthrottled[0] > 0.0 {
+        println!("  pool speedup: {:.2}x\n", unthrottled[1] / unthrottled[0]);
+    }
+
+    // ---- latency/throughput curve: sweep target QPS on the pool ----
+    let peak = unthrottled.last().copied().unwrap_or(1000.0).max(1.0);
+    let fractions = if smoke { vec![0.5] } else { vec![0.25, 0.5, 0.75, 1.0] };
+    println!("latency/throughput curve (4-shard pool):");
+    println!("  {:>10}  {}", "target", LoadReport::table_header());
+    for f in fractions {
+        let coord = start(4)?;
+        let spec = LoadSpec {
+            clients,
+            requests_per_client: per_client,
+            target_qps: Some(peak * f),
+        };
+        let report = run_closed_loop(&coord, spec, |c, k| {
+            synthetic_request(tables, rows, dense_n, max_lookups, c, k)
+        })?;
+        coord.shutdown();
+        println!("  {:>10.0}  {}", peak * f, report.table_row());
+    }
     Ok(())
 }

@@ -1,0 +1,107 @@
+//! Serving-engine throughput benchmark (acceptance: the 4-shard pool
+//! sustains ≥ 2× single-worker throughput on a 16-table DLRM).
+//!
+//! Closed-loop load generation against live coordinators, so the
+//! numbers include batching, channel hops and the MLP — the real
+//! request path, not just the embedding kernel.
+
+use ember::coordinator::{
+    run_closed_loop, synthetic_request, BatchOptions, Coordinator, DlrmModel, LoadReport,
+    LoadSpec, Request, ServeOptions,
+};
+use ember::EmberSession;
+use std::time::Duration;
+
+const BATCH: usize = 16;
+const TABLES: usize = 16;
+const ROWS: usize = 4096;
+const EMB: usize = 16;
+const LOOKUPS: usize = 24;
+const DENSE: usize = 13;
+// modest MLP: it runs serially on the coordinator thread in both
+// configurations, so it only dilutes the embedding-stage speedup
+const HIDDEN: usize = 32;
+
+fn model(session: &mut EmberSession) -> DlrmModel {
+    DlrmModel::with_session(session, BATCH, ROWS, EMB, TABLES, LOOKUPS, DENSE, HIDDEN, 42)
+        .unwrap()
+}
+
+fn request(c: usize, k: usize) -> Request {
+    synthetic_request(TABLES, ROWS, DENSE, LOOKUPS, c, k)
+}
+
+fn drive(
+    session: &mut EmberSession,
+    shards: usize,
+    clients: usize,
+    per_client: usize,
+) -> (f64, String) {
+    let coord = Coordinator::start_sharded(
+        model(session),
+        None,
+        ServeOptions {
+            // max_wait is a fallback: with clients > BATCH the closed
+            // loop keeps full batches forming on the size trigger
+            batch: BatchOptions { max_batch: BATCH, max_wait: Duration::from_micros(500) },
+            shards,
+        },
+    );
+    let spec = LoadSpec { clients, requests_per_client: per_client, target_qps: None };
+    let report = run_closed_loop(&coord, spec, request).expect("load generation failed");
+    let stats = coord.shutdown();
+    assert_eq!(report.errors + stats.errors, 0, "serving errors under load");
+    let line = format!(
+        "{:>7.0} req/s  p50 {:>8.2?}  p95 {:>8.2?}  p99 {:>8.2?}  ({} req, {} batches, server p50 {:.2?} p99 {:.2?})",
+        report.throughput_rps(),
+        report.p50(),
+        report.p95(),
+        report.p99(),
+        stats.requests,
+        stats.batches,
+        stats.p50(),
+        stats.p99(),
+    );
+    (report.throughput_rps(), line)
+}
+
+fn main() {
+    println!("== serving engine benchmarks ({TABLES}-table DLRM, batch {BATCH}) ==");
+    // clients > batch so full batches always form on the size trigger
+    let (clients, per_client) = (32, 64);
+    // one session: every coordinator shares one compiled SLS program
+    let mut session = EmberSession::default();
+
+    // warm-up (page in tables, settle thread pools)
+    let _ = drive(&mut session, 4, 2, 16);
+
+    let (single, line1) = drive(&mut session, 1, clients, per_client);
+    println!("single worker   : {line1}");
+    let (sharded, line4) = drive(&mut session, 4, clients, per_client);
+    println!("4-shard pool    : {line4}");
+    let speedup = if single > 0.0 { sharded / single } else { 0.0 };
+    println!("pool speedup    : {speedup:.2}x  (target >= 2x)");
+
+    // latency/throughput curve at fractions of peak
+    println!("\nlatency/throughput curve (4-shard pool):");
+    println!("{:>10}  {}", "target", LoadReport::table_header());
+    for f in [0.25, 0.5, 0.75] {
+        let target = (sharded * f).max(1.0);
+        let coord = Coordinator::start_sharded(
+            model(&mut session),
+            None,
+            ServeOptions {
+                batch: BatchOptions { max_batch: BATCH, max_wait: Duration::from_millis(1) },
+                shards: 4,
+            },
+        );
+        let spec = LoadSpec {
+            clients,
+            requests_per_client: per_client / 2,
+            target_qps: Some(target),
+        };
+        let report = run_closed_loop(&coord, spec, request).expect("load generation failed");
+        coord.shutdown();
+        println!("{:>10.0}  {}", target, report.table_row());
+    }
+}

@@ -1,0 +1,251 @@
+//! Closed-loop load generator for the serving engine.
+//!
+//! `clients` threads each own a cloned [`CoordinatorClient`] and issue
+//! requests back-to-back (classic closed loop). With a `target_qps`
+//! each client paces its submissions so the coordinator sees an
+//! aggregate arrival rate of ~`target_qps`; sweeping the target and
+//! plotting [`LoadReport::throughput_rps`] against the report's
+//! latency quantiles gives the latency/throughput curve.
+
+use super::server::Coordinator;
+use super::stats::LatencyHist;
+use super::Request;
+use crate::error::{EmberError, Result};
+use crate::util::rng::Rng;
+use std::time::{Duration, Instant};
+
+/// Deterministic synthetic DLRM request for load generation: `lookups`
+/// random table rows per table, keyed by `(client, k)` so the CLI,
+/// example and bench all produce the same stream for the same model
+/// shape (keeping their generators from drifting apart).
+pub fn synthetic_request(
+    tables: usize,
+    rows: usize,
+    dense: usize,
+    lookups: usize,
+    client: usize,
+    k: usize,
+) -> Request {
+    let id = ((client as u64) << 32) | k as u64;
+    let mut rng = Rng::new(id.wrapping_mul(0x9E37_79B9).wrapping_add(7));
+    Request {
+        id,
+        lookups: (0..tables)
+            .map(|_| (0..lookups).map(|_| rng.below(rows as u64) as i32).collect())
+            .collect(),
+        dense: (0..dense).map(|_| rng.f32()).collect(),
+    }
+}
+
+/// Shape of one load-generation run.
+#[derive(Debug, Clone, Copy)]
+pub struct LoadSpec {
+    /// Concurrent closed-loop clients.
+    pub clients: usize,
+    /// Requests each client issues.
+    pub requests_per_client: usize,
+    /// Aggregate target arrival rate; `None` (or any non-positive
+    /// value) = as fast as possible (each client limited only by its
+    /// in-flight request).
+    pub target_qps: Option<f64>,
+}
+
+impl Default for LoadSpec {
+    fn default() -> Self {
+        LoadSpec { clients: 4, requests_per_client: 256, target_qps: None }
+    }
+}
+
+/// Client-side view of one run (server-side counters live in
+/// [`super::ServeStats`]).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct LoadReport {
+    pub sent: u64,
+    pub ok: u64,
+    pub errors: u64,
+    pub wall: Duration,
+    /// End-to-end latency measured at the client (submit → response).
+    pub hist: LatencyHist,
+}
+
+impl LoadReport {
+    /// Successful responses per second of wall-clock time.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall.is_zero() {
+            0.0
+        } else {
+            self.ok as f64 / self.wall.as_secs_f64()
+        }
+    }
+    pub fn p50(&self) -> Duration {
+        self.hist.quantile(0.50)
+    }
+    pub fn p95(&self) -> Duration {
+        self.hist.quantile(0.95)
+    }
+    pub fn p99(&self) -> Duration {
+        self.hist.quantile(0.99)
+    }
+
+    /// Header matching [`LoadReport::table_row`]'s columns (the caller
+    /// prepends its own `target` column to both).
+    pub fn table_header() -> String {
+        format!("{:>10}  {:>9}  {:>9}  {:>9}", "achieved", "p50", "p95", "p99")
+    }
+
+    /// Shared row tail for latency/throughput tables
+    /// (`achieved  p50  p95  p99`), so the CLI, example and bench
+    /// render the sweep identically.
+    pub fn table_row(&self) -> String {
+        format!(
+            "{:>10.0}  {:>9.2?}  {:>9.2?}  {:>9.2?}",
+            self.throughput_rps(),
+            self.p50(),
+            self.p95(),
+            self.p99()
+        )
+    }
+}
+
+/// Drive `coord` with `spec`, generating request `k` of client `c` via
+/// `make_req(c, k)`. Blocks until every client finishes.
+pub fn run_closed_loop<F>(coord: &Coordinator, spec: LoadSpec, make_req: F) -> Result<LoadReport>
+where
+    F: Fn(usize, usize) -> Request + Send + Sync,
+{
+    let clients = spec.clients.max(1);
+    let pace = spec
+        .target_qps
+        .filter(|q| *q > 0.0)
+        .map(|q| Duration::from_secs_f64(clients as f64 / q));
+    let make_req = &make_req;
+    let t0 = Instant::now();
+    let mut results: Vec<(u64, u64, LatencyHist)> = Vec::with_capacity(clients);
+    {
+        let mut spawn_err = None;
+        let mut panicked = 0usize;
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(clients);
+            for c in 0..clients {
+                let client = match coord.client() {
+                    Ok(cl) => cl,
+                    Err(e) => {
+                        spawn_err = Some(e);
+                        break;
+                    }
+                };
+                handles.push(s.spawn(move || {
+                    let mut hist = LatencyHist::default();
+                    let (mut ok, mut errors) = (0u64, 0u64);
+                    let mut next = Instant::now();
+                    for k in 0..spec.requests_per_client {
+                        if let Some(p) = pace {
+                            let now = Instant::now();
+                            if next > now {
+                                std::thread::sleep(next - now);
+                            }
+                            next += p;
+                        }
+                        let t = Instant::now();
+                        match client.infer(make_req(c, k)) {
+                            Ok(_) => {
+                                hist.record(t.elapsed());
+                                ok += 1;
+                            }
+                            Err(_) => errors += 1,
+                        }
+                    }
+                    (ok, errors, hist)
+                }));
+            }
+            for h in handles {
+                match h.join() {
+                    Ok(r) => results.push(r),
+                    Err(_) => panicked += 1,
+                }
+            }
+        });
+        if let Some(e) = spawn_err {
+            return Err(e);
+        }
+        // a swallowed panic would silently zero this client's share of
+        // the report — surface it instead
+        if panicked > 0 {
+            return Err(EmberError::Runtime(format!(
+                "{panicked} load-generator client thread(s) panicked"
+            )));
+        }
+    }
+    let mut report = LoadReport { wall: t0.elapsed(), ..Default::default() };
+    for (ok, errors, hist) in results {
+        report.ok += ok;
+        report.errors += errors;
+        report.sent += ok + errors;
+        report.hist.merge(&hist);
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{BatchOptions, DlrmModel, ServeOptions};
+    use crate::util::rng::Rng;
+
+    fn make_req(m: &DlrmModel, c: usize, k: usize) -> Request {
+        let mut rng = Rng::new((c as u64) << 32 | k as u64);
+        Request {
+            id: ((c as u64) << 32) | k as u64,
+            lookups: (0..m.num_tables)
+                .map(|_| (0..4).map(|_| rng.below(m.table_rows as u64) as i32).collect())
+                .collect(),
+            dense: (0..m.dense).map(|_| rng.f32()).collect(),
+        }
+    }
+
+    #[test]
+    fn closed_loop_completes_every_request() {
+        let model = DlrmModel::new(4, 64, 8, 2, 6, 3, 16, 42).unwrap();
+        let shape = DlrmModel::new(4, 64, 8, 2, 6, 3, 16, 42).unwrap();
+        let coord = Coordinator::start_sharded(
+            model,
+            None,
+            ServeOptions {
+                batch: BatchOptions {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(1),
+                },
+                shards: 2,
+            },
+        );
+        let spec = LoadSpec { clients: 3, requests_per_client: 10, target_qps: None };
+        let report = run_closed_loop(&coord, spec, |c, k| make_req(&shape, c, k)).unwrap();
+        assert_eq!(report.sent, 30);
+        assert_eq!(report.ok, 30);
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.hist.count(), 30);
+        assert!(report.throughput_rps() > 0.0);
+        assert!(report.p99() >= report.p50());
+        let stats = coord.shutdown();
+        assert_eq!(stats.requests, 30);
+    }
+
+    #[test]
+    fn paced_load_respects_target_qps_upper_bound() {
+        let model = DlrmModel::new(4, 64, 8, 1, 6, 3, 16, 1).unwrap();
+        let shape = DlrmModel::new(4, 64, 8, 1, 6, 3, 16, 1).unwrap();
+        let coord = Coordinator::start(
+            model,
+            None,
+            BatchOptions { max_batch: 4, max_wait: Duration::from_micros(200) },
+        );
+        // 20 requests at 200 qps => at least ~95ms of pacing
+        let spec = LoadSpec { clients: 2, requests_per_client: 10, target_qps: Some(200.0) };
+        let t0 = Instant::now();
+        let report = run_closed_loop(&coord, spec, |c, k| make_req(&shape, c, k)).unwrap();
+        assert_eq!(report.ok, 20);
+        assert!(t0.elapsed() >= Duration::from_millis(80), "pacing was ignored");
+        assert!(report.throughput_rps() <= 300.0, "{}", report.throughput_rps());
+        coord.shutdown();
+    }
+}

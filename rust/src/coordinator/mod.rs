@@ -9,8 +9,11 @@
 //! request path.
 
 pub mod batcher;
+pub mod loadgen;
 pub mod router;
 pub mod server;
+pub mod shard;
+pub mod stats;
 
 use crate::compiler::passes::pipeline::CompiledProgram;
 use crate::data::{Env, Tensor};
@@ -24,8 +27,11 @@ use crate::util::rng::Rng;
 use std::sync::Arc;
 
 pub use batcher::{BatchOptions, Batcher};
+pub use loadgen::{run_closed_loop, synthetic_request, LoadReport, LoadSpec};
 pub use router::Router;
-pub use server::Coordinator;
+pub use server::{Coordinator, CoordinatorClient, ServeOptions};
+pub use shard::ShardPool;
+pub use stats::{LatencyHist, ServeStats};
 
 /// One inference request: per-table multi-hot category ids + dense
 /// features.
@@ -65,11 +71,22 @@ impl DlrmModel {
     /// Build a model with deterministic random parameters, matching the
     /// shapes in `artifacts/manifest.json` (via the runtime).
     pub fn from_manifest(rt: &Runtime, seed: u64) -> Result<Self> {
+        Self::from_manifest_with_session(&mut EmberSession::default(), rt, seed)
+    }
+
+    /// Manifest-shaped model compiled through a shared session, so a
+    /// sweep building many coordinators compiles the SLS program once.
+    pub fn from_manifest_with_session(
+        session: &mut EmberSession,
+        rt: &Runtime,
+        seed: u64,
+    ) -> Result<Self> {
         let g = |p: &[&str]| {
             rt.manifest_usize(p)
                 .ok_or_else(|| EmberError::Runtime(format!("manifest missing {p:?}")))
         };
-        Self::new(
+        Self::with_session(
+            session,
             g(&["dlrm", "batch"])?,
             g(&["dlrm", "table_rows"])?,
             g(&["dlrm", "emb"])?,
@@ -143,11 +160,14 @@ impl DlrmModel {
         })
     }
 
-    /// Embedding stage: run the Ember-compiled DAE program per table.
-    /// Returns `[batch, tables*emb]` row-major embeddings.
+    /// Embedding stage: run the Ember-compiled DAE program per table,
+    /// sequentially, through one pooled interpreter. Returns
+    /// `[batch, tables*emb]` row-major embeddings. The table-parallel
+    /// equivalent is [`shard::ShardPool::embed`] (byte-identical).
     pub fn embed(&self, requests: &[Request]) -> Result<Vec<f32>> {
         let b = self.batch;
         let mut out = vec![0f32; b * self.num_tables * self.emb];
+        let mut interp = Interp::new(&self.program.dlc)?;
         for t in 0..self.num_tables {
             let rows: Vec<Vec<i32>> = (0..b)
                 .map(|i| {
@@ -163,7 +183,7 @@ impl DlrmModel {
                 .collect();
             let csr = Csr::from_rows(self.table_rows, &rows);
             let mut env: Env = csr.bind_sls_env(&self.tables[t], false);
-            let mut interp = Interp::new(&self.program.dlc)?;
+            interp.reset();
             interp.run(&mut env, &mut NullSink)?;
             let emb_out = env.tensor("out")?.as_f32();
             for i in 0..b {
@@ -173,6 +193,17 @@ impl DlrmModel {
             }
         }
         Ok(out)
+    }
+
+    fn check_batch(&self, requests: &[Request]) -> Result<()> {
+        if requests.len() > self.batch {
+            return Err(EmberError::Runtime(format!(
+                "batch of {} exceeds compiled batch {}",
+                requests.len(),
+                self.batch
+            )));
+        }
+        Ok(())
     }
 
     /// Dense input `[batch, tables*emb + dense]` from embeddings +
@@ -192,17 +223,30 @@ impl DlrmModel {
         x
     }
 
-    /// Full batch inference: DAE embedding + PJRT MLP.
-    pub fn infer_batch(&self, rt: &mut Runtime, requests: &[Request]) -> Result<Vec<Response>> {
-        if requests.len() > self.batch {
-            return Err(EmberError::Runtime(format!(
-                "batch of {} exceeds compiled batch {}",
-                requests.len(),
-                self.batch
-            )));
+    /// MLP stage over precomputed embeddings — shared by the sequential
+    /// and sharded embedding paths. Dispatches to PJRT when a runtime
+    /// is available, the pure-Rust MLP otherwise.
+    pub fn score(
+        &self,
+        runtime: &mut Option<Runtime>,
+        requests: &[Request],
+        embeddings: &[f32],
+    ) -> Result<Vec<Response>> {
+        match runtime {
+            Some(rt) => self.score_pjrt(rt, requests, embeddings),
+            None => self.score_cpu(requests, embeddings),
         }
-        let embeddings = self.embed(requests)?;
-        let x = self.mlp_input(requests, &embeddings);
+    }
+
+    /// PJRT MLP over precomputed embeddings.
+    pub fn score_pjrt(
+        &self,
+        rt: &mut Runtime,
+        requests: &[Request],
+        embeddings: &[f32],
+    ) -> Result<Vec<Response>> {
+        self.check_batch(requests)?;
+        let x = self.mlp_input(requests, embeddings);
         let d_in = self.num_tables * self.emb + self.dense;
         let scores = rt.execute_f32(
             "dlrm_mlp",
@@ -221,11 +265,10 @@ impl DlrmModel {
             .collect())
     }
 
-    /// Pure-Rust MLP fallback (no PJRT) — used by tests and as the
-    /// oracle for the runtime path.
-    pub fn infer_batch_cpu(&self, requests: &[Request]) -> Result<Vec<Response>> {
-        let embeddings = self.embed(requests)?;
-        let x = self.mlp_input(requests, &embeddings);
+    /// Pure-Rust MLP over precomputed embeddings.
+    pub fn score_cpu(&self, requests: &[Request], embeddings: &[f32]) -> Result<Vec<Response>> {
+        self.check_batch(requests)?;
+        let x = self.mlp_input(requests, embeddings);
         let d_in = self.num_tables * self.emb + self.dense;
         let mut out = Vec::with_capacity(requests.len());
         for (i, r) in requests.iter().enumerate() {
@@ -241,6 +284,21 @@ impl DlrmModel {
             out.push(Response { id: r.id, score: 1.0 / (1.0 + (-score).exp()) });
         }
         Ok(out)
+    }
+
+    /// Full batch inference: DAE embedding + PJRT MLP.
+    pub fn infer_batch(&self, rt: &mut Runtime, requests: &[Request]) -> Result<Vec<Response>> {
+        self.check_batch(requests)?;
+        let embeddings = self.embed(requests)?;
+        self.score_pjrt(rt, requests, &embeddings)
+    }
+
+    /// Pure-Rust fallback (no PJRT) — used by tests and as the oracle
+    /// for the runtime path.
+    pub fn infer_batch_cpu(&self, requests: &[Request]) -> Result<Vec<Response>> {
+        self.check_batch(requests)?;
+        let embeddings = self.embed(requests)?;
+        self.score_cpu(requests, &embeddings)
     }
 }
 

@@ -29,6 +29,20 @@ impl Router {
         self.replicas.insert(name.to_string(), members);
     }
 
+    /// Spread one model across several serving pools: register each
+    /// coordinator as a `name#k` replica and round-robin requests for
+    /// `name` across them. One call replaces the register +
+    /// `add_replica_group` dance per pool.
+    pub fn register_pool(&mut self, name: &str, pools: Vec<Coordinator>) {
+        let mut members = Vec::with_capacity(pools.len());
+        for (k, coord) in pools.into_iter().enumerate() {
+            let member = format!("{name}#{k}");
+            self.register(&member, coord);
+            members.push(member);
+        }
+        self.add_replica_group(name, members);
+    }
+
     pub fn models(&self) -> Vec<&str> {
         self.models.keys().map(|s| s.as_str()).collect()
     }
@@ -84,6 +98,21 @@ mod tests {
         let req = Request { id: 1, lookups: vec![vec![3, 4]], dense: vec![0.1, 0.2, 0.3] };
         assert!(r.infer("dlrm", req.clone()).is_ok());
         assert!(r.infer("nope", req).is_err());
+        r.shutdown();
+    }
+
+    #[test]
+    fn register_pool_spreads_requests_round_robin() {
+        let mut r = Router::new();
+        r.register_pool("dlrm", vec![tiny_coord(), tiny_coord(), tiny_coord()]);
+        assert_eq!(r.models().len(), 3);
+        let req = Request { id: 1, lookups: vec![vec![2, 5]], dense: vec![0.0; 3] };
+        let scores: Vec<f32> =
+            (0..6).map(|_| r.infer("dlrm", req.clone()).unwrap().score).collect();
+        // same seed on every pool => identical scores through every replica
+        for s in &scores {
+            assert!((s - scores[0]).abs() < 1e-6);
+        }
         r.shutdown();
     }
 

@@ -1,24 +1,38 @@
-//! Serving loop: one worker thread owns the model + PJRT runtime (the
-//! xla client is not Sync) and drains a request channel through the
-//! batcher. Callers get responses over per-request channels.
+//! Serving loop: a coordinator thread owns the model + PJRT runtime
+//! (the xla client is not Sync) and drains a request channel through
+//! the batcher. The embedding stage optionally fans out to a
+//! table-sharded [`ShardPool`]; callers get responses over per-request
+//! channels and latency histograms accumulate into [`ServeStats`].
 
 use super::batcher::{BatchOptions, Batcher};
+use super::shard::ShardPool;
+use super::stats::ServeStats;
 use super::{DlrmModel, Request, Response};
 use crate::error::{EmberError, Result};
 use crate::runtime::Runtime;
 use std::path::PathBuf;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-type Envelope = (Request, Sender<Result<Response>>);
+/// (request, submit time, response channel)
+type Envelope = (Request, Instant, Sender<Result<Response>>);
 
-/// Serving statistics (snapshot via `stats`).
-#[derive(Debug, Default, Clone, Copy)]
-pub struct ServeStats {
-    pub requests: u64,
-    pub batches: u64,
-    pub errors: u64,
+/// Full serving configuration: batching + embedding-stage parallelism.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOptions {
+    pub batch: BatchOptions,
+    /// Embedding shard workers. `1` keeps the embedding stage on the
+    /// coordinator thread (the classic single-worker path); `n > 1`
+    /// spawns a [`ShardPool`] partitioning tables across `n` threads.
+    pub shards: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { batch: BatchOptions::default(), shards: 1 }
+    }
 }
 
 /// A running DLRM coordinator.
@@ -27,26 +41,21 @@ pub struct Coordinator {
     handle: Option<JoinHandle<ServeStats>>,
 }
 
-impl Coordinator {
-    /// Spawn the worker. The PJRT client is not `Send`, so the worker
-    /// constructs its own `Runtime` from `artifacts_dir`; `None` uses
-    /// the pure-Rust MLP (useful where PJRT is unavailable).
-    pub fn start(model: DlrmModel, artifacts_dir: Option<PathBuf>, opts: BatchOptions) -> Self {
-        let (tx, rx) = mpsc::channel::<Envelope>();
-        let handle = std::thread::spawn(move || {
-            let runtime = artifacts_dir.and_then(|d| Runtime::new(d).ok());
-            worker(model, runtime, opts, rx)
-        });
-        Coordinator { tx: Some(tx), handle: Some(handle) }
-    }
+/// Cloneable submit handle. Client threads each take their own handle
+/// (a cheap `Sender` clone), so load generators never have to borrow
+/// the `Coordinator` itself — whose `shutdown(self)` needs sole
+/// ownership — across threads.
+#[derive(Clone)]
+pub struct CoordinatorClient {
+    tx: Sender<Envelope>,
+}
 
+impl CoordinatorClient {
     /// Async submit: returns the response channel.
     pub fn submit(&self, req: Request) -> Result<Receiver<Result<Response>>> {
         let (rtx, rrx) = mpsc::channel();
         self.tx
-            .as_ref()
-            .ok_or_else(|| EmberError::Runtime("coordinator stopped".into()))?
-            .send((req, rtx))
+            .send((req, Instant::now(), rtx))
             .map_err(|_| EmberError::Runtime("coordinator worker gone".into()))?;
         Ok(rrx)
     }
@@ -56,6 +65,59 @@ impl Coordinator {
         let rx = self.submit(req)?;
         rx.recv()
             .map_err(|_| EmberError::Runtime("worker dropped response".into()))?
+    }
+}
+
+impl Coordinator {
+    /// Spawn a single-worker coordinator (embedding stage inline on the
+    /// coordinator thread). The PJRT client is not `Send`, so the
+    /// worker constructs its own `Runtime` from `artifacts_dir`; `None`
+    /// uses the pure-Rust MLP (useful where PJRT is unavailable).
+    pub fn start(model: DlrmModel, artifacts_dir: Option<PathBuf>, opts: BatchOptions) -> Self {
+        Self::start_sharded(model, artifacts_dir, ServeOptions { batch: opts, shards: 1 })
+    }
+
+    /// Spawn a coordinator whose embedding stage is sharded by table
+    /// across `opts.shards` worker threads.
+    ///
+    /// `max_batch` is clamped to the model's compiled batch: a full
+    /// batch larger than the program's batch dimension would make every
+    /// request in it fail, so the batcher is never allowed to form one.
+    pub fn start_sharded(
+        model: DlrmModel,
+        artifacts_dir: Option<PathBuf>,
+        mut opts: ServeOptions,
+    ) -> Self {
+        opts.batch.max_batch = opts.batch.max_batch.clamp(1, model.batch.max(1));
+        let (tx, rx) = mpsc::channel::<Envelope>();
+        let handle = std::thread::spawn(move || {
+            let runtime = artifacts_dir.and_then(|d| Runtime::new(d).ok());
+            let pool =
+                if opts.shards > 1 { Some(ShardPool::new(&model, opts.shards)) } else { None };
+            worker(model, pool, runtime, opts.batch, rx)
+        });
+        Coordinator { tx: Some(tx), handle: Some(handle) }
+    }
+
+    /// A cloneable submit handle for this coordinator.
+    pub fn client(&self) -> Result<CoordinatorClient> {
+        Ok(CoordinatorClient {
+            tx: self
+                .tx
+                .as_ref()
+                .ok_or_else(|| EmberError::Runtime("coordinator stopped".into()))?
+                .clone(),
+        })
+    }
+
+    /// Async submit: returns the response channel.
+    pub fn submit(&self, req: Request) -> Result<Receiver<Result<Response>>> {
+        self.client()?.submit(req)
+    }
+
+    /// Sync convenience: submit + wait.
+    pub fn infer(&self, req: Request) -> Result<Response> {
+        self.client()?.infer(req)
     }
 
     /// Stop the worker and return its stats.
@@ -77,42 +139,53 @@ impl Drop for Coordinator {
     }
 }
 
+/// Run one flushed batch: embedding (sharded or inline), MLP, then
+/// per-request responses + latency recording.
+fn run_batch(
+    model: &DlrmModel,
+    pool: Option<&ShardPool>,
+    runtime: &mut Option<Runtime>,
+    batch: Vec<Request>,
+    senders: Vec<(Instant, Sender<Result<Response>>)>,
+    stats: &mut ServeStats,
+) {
+    stats.batches += 1;
+    // one Arc wrap instead of a per-shard deep copy of the batch
+    let batch = Arc::new(batch);
+    let embeddings = match pool {
+        Some(p) => p.embed_shared(batch.clone()),
+        None => model.embed(&batch),
+    };
+    let result = embeddings.and_then(|e| model.score(runtime, &batch, &e));
+    match result {
+        Ok(responses) => {
+            for (resp, (t0, tx)) in responses.into_iter().zip(senders) {
+                stats.hist.record(t0.elapsed());
+                let _ = tx.send(Ok(resp));
+            }
+        }
+        Err(e) => {
+            stats.errors += 1;
+            let msg = e.to_string();
+            for (t0, tx) in senders {
+                stats.hist.record(t0.elapsed());
+                let _ = tx.send(Err(EmberError::Runtime(msg.clone())));
+            }
+        }
+    }
+}
+
 fn worker(
     model: DlrmModel,
+    pool: Option<ShardPool>,
     mut runtime: Option<Runtime>,
     opts: BatchOptions,
     rx: Receiver<Envelope>,
 ) -> ServeStats {
+    let started = Instant::now();
     let mut stats = ServeStats::default();
     let mut batcher = Batcher::new(opts);
-    let mut waiting: Vec<Sender<Result<Response>>> = Vec::new();
-    let mut inflight: Vec<Vec<Sender<Result<Response>>>> = Vec::new();
-
-    let mut run_batch = |model: &DlrmModel,
-                         runtime: &mut Option<Runtime>,
-                         batch: Vec<Request>,
-                         senders: Vec<Sender<Result<Response>>>,
-                         stats: &mut ServeStats| {
-        stats.batches += 1;
-        let result = match runtime {
-            Some(rt) => model.infer_batch(rt, &batch),
-            None => model.infer_batch_cpu(&batch),
-        };
-        match result {
-            Ok(responses) => {
-                for (resp, tx) in responses.into_iter().zip(senders) {
-                    let _ = tx.send(Ok(resp));
-                }
-            }
-            Err(e) => {
-                stats.errors += 1;
-                let msg = e.to_string();
-                for tx in senders {
-                    let _ = tx.send(Err(EmberError::Runtime(msg.clone())));
-                }
-            }
-        }
-    };
+    let mut waiting: Vec<(Instant, Sender<Result<Response>>)> = Vec::new();
 
     loop {
         // wait for work, bounded by the batcher's flush deadline
@@ -121,20 +194,18 @@ fn worker(
             .map(|d| d.saturating_duration_since(Instant::now()))
             .unwrap_or(std::time::Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
-            Ok((req, rtx)) => {
+            Ok((req, t0, rtx)) => {
                 stats.requests += 1;
-                waiting.push(rtx);
+                waiting.push((t0, rtx));
                 if let Some(batch) = batcher.push(req, Instant::now()) {
                     let senders = std::mem::take(&mut waiting);
-                    inflight.push(Vec::new());
-                    run_batch(&model, &mut runtime, batch, senders, &mut stats);
-                    inflight.pop();
+                    run_batch(&model, pool.as_ref(), &mut runtime, batch, senders, &mut stats);
                 }
             }
             Err(RecvTimeoutError::Timeout) => {
                 if let Some(batch) = batcher.poll(Instant::now()) {
                     let senders = std::mem::take(&mut waiting);
-                    run_batch(&model, &mut runtime, batch, senders, &mut stats);
+                    run_batch(&model, pool.as_ref(), &mut runtime, batch, senders, &mut stats);
                 }
             }
             Err(RecvTimeoutError::Disconnected) => {
@@ -142,12 +213,13 @@ fn worker(
                 let batch = batcher.flush();
                 if !batch.is_empty() {
                     let senders = std::mem::take(&mut waiting);
-                    run_batch(&model, &mut runtime, batch, senders, &mut stats);
+                    run_batch(&model, pool.as_ref(), &mut runtime, batch, senders, &mut stats);
                 }
                 break;
             }
         }
     }
+    stats.elapsed = started.elapsed();
     stats
 }
 
@@ -193,6 +265,8 @@ mod tests {
         let stats = coord.shutdown();
         assert_eq!(stats.requests, 8);
         assert!(stats.batches >= 2);
+        assert_eq!(stats.hist.count(), 8, "every response records a latency");
+        assert!(!stats.elapsed.is_zero());
         for (g, d) in got.iter().zip(&direct) {
             assert_eq!(g.id, d.id);
             assert!((g.score - d.score).abs() < 1e-6);
@@ -212,5 +286,62 @@ mod tests {
         let r = coord.infer(req(1, &mut rng, &m2)).unwrap();
         assert!(r.score > 0.0 && r.score < 1.0);
         coord.shutdown();
+    }
+
+    #[test]
+    fn sharded_coordinator_matches_single_worker() {
+        let mut rng = Rng::new(11);
+        let m = tiny();
+        let reqs: Vec<Request> = (0..12).map(|i| req(i, &mut rng, &m)).collect();
+        let run = |shards: usize| -> Vec<Response> {
+            let coord = Coordinator::start_sharded(
+                tiny(),
+                None,
+                ServeOptions {
+                    batch: BatchOptions { max_batch: 4, max_wait: Duration::from_millis(1) },
+                    shards,
+                },
+            );
+            let rxs: Vec<_> =
+                reqs.iter().map(|r| coord.submit(r.clone()).unwrap()).collect();
+            let mut got: Vec<Response> =
+                rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+            got.sort_by_key(|r| r.id);
+            coord.shutdown();
+            got
+        };
+        let single = run(1);
+        let sharded = run(2);
+        assert_eq!(single.len(), sharded.len());
+        for (a, b) in single.iter().zip(&sharded) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.score, b.score, "sharded embed must be byte-identical");
+        }
+    }
+
+    #[test]
+    fn client_handles_submit_from_many_threads() {
+        let coord = Coordinator::start(
+            tiny(),
+            None,
+            BatchOptions { max_batch: 4, max_wait: Duration::from_millis(1) },
+        );
+        let m = tiny();
+        std::thread::scope(|s| {
+            for c in 0..4u64 {
+                let client = coord.client().unwrap();
+                let m = &m;
+                s.spawn(move || {
+                    let mut rng = Rng::new(100 + c);
+                    for k in 0..8u64 {
+                        let r = client.infer(req(c * 100 + k, &mut rng, m)).unwrap();
+                        assert!(r.score > 0.0 && r.score < 1.0);
+                    }
+                });
+            }
+        });
+        let stats = coord.shutdown();
+        assert_eq!(stats.requests, 32);
+        assert_eq!(stats.hist.count(), 32);
     }
 }

@@ -1,0 +1,321 @@
+//! Table-sharded embedding worker pool.
+//!
+//! The embedding stage of a DLRM batch is embarrassingly parallel
+//! across tables, and it is where the serving loop used to burn its
+//! time: one `Interp` construction, one CSR allocation and one full
+//! table-tensor clone *per table per batch*. The pool fixes both axes:
+//!
+//!   * **parallelism** — tables are partitioned round-robin across
+//!     shard threads; each shard runs its tables' lookups concurrently
+//!     with every other shard and the merge is a cheap row-slice copy;
+//!   * **hot-path allocation** — each shard owns a pooled [`Interp`]
+//!     (reset between batches, never rebuilt) and one pre-bound [`Env`]
+//!     per owned table whose table tensor is cloned exactly once at
+//!     pool construction. Per batch only the small `ptrs`/`idxs`/`out`
+//!     operands are refilled.
+//!
+//! Numerics: the sharded path performs the identical per-table float
+//! operations in the identical order as the sequential
+//! [`DlrmModel::embed`], so outputs are byte-identical (asserted by
+//! `tests/serving.rs`).
+
+use super::{DlrmModel, Request};
+use crate::compiler::passes::pipeline::CompiledProgram;
+use crate::data::{Buf, Env, Tensor};
+use crate::error::{EmberError, Result};
+use crate::interp::{Interp, NullSink};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Partition table indices round-robin across `shards` workers.
+/// Degenerate inputs clamp: at least one shard, at most one per table.
+pub fn shard_plan(num_tables: usize, shards: usize) -> Vec<Vec<usize>> {
+    let n = shards.max(1).min(num_tables.max(1));
+    let mut plan = vec![Vec::new(); n];
+    for t in 0..num_tables {
+        plan[t % n].push(t);
+    }
+    plan
+}
+
+/// Per-table embedding output: `(table index, [batch, emb] row-major)`.
+type TableOut = (usize, Vec<f32>);
+
+struct Job {
+    reqs: Arc<Vec<Request>>,
+    reply: Sender<Result<Vec<TableOut>>>,
+}
+
+/// A pool of persistent shard threads running the embedding stage.
+pub struct ShardPool {
+    txs: Vec<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+    batch: usize,
+    emb: usize,
+    num_tables: usize,
+}
+
+impl ShardPool {
+    /// Spawn `shards` workers, each owning a clone of its tables and a
+    /// pooled interpreter for `model.program`.
+    pub fn new(model: &DlrmModel, shards: usize) -> Self {
+        let plan = shard_plan(model.num_tables, shards);
+        let mut txs = Vec::with_capacity(plan.len());
+        let mut handles = Vec::with_capacity(plan.len());
+        for owned in plan {
+            let (tx, rx) = mpsc::channel::<Job>();
+            let worker = ShardWorker {
+                program: model.program.clone(),
+                tables: owned.iter().map(|&t| (t, model.tables[t].clone())).collect(),
+                batch: model.batch,
+                emb: model.emb,
+                max_lookups: model.max_lookups,
+            };
+            handles.push(std::thread::spawn(move || worker.run(rx)));
+            txs.push(tx);
+        }
+        ShardPool {
+            txs,
+            handles,
+            batch: model.batch,
+            emb: model.emb,
+            num_tables: model.num_tables,
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Run the embedding stage sharded by table. Same contract as
+    /// [`DlrmModel::embed`]: `[batch, tables*emb]` row-major, absent
+    /// requests padded with zero rows.
+    pub fn embed(&self, requests: &[Request]) -> Result<Vec<f32>> {
+        self.embed_shared(Arc::new(requests.to_vec()))
+    }
+
+    /// Copy-free variant for the serving hot path: the coordinator
+    /// wraps its flushed batch in an `Arc` once and every shard reads
+    /// it in place.
+    pub fn embed_shared(&self, reqs: Arc<Vec<Request>>) -> Result<Vec<f32>> {
+        let (rtx, rrx) = mpsc::channel::<Result<Vec<TableOut>>>();
+        for tx in &self.txs {
+            tx.send(Job { reqs: reqs.clone(), reply: rtx.clone() })
+                .map_err(|_| EmberError::Runtime("embedding shard worker gone".into()))?;
+        }
+        drop(rtx);
+        let (b, emb, width) = (self.batch, self.emb, self.num_tables * self.emb);
+        let mut out = vec![0f32; b * width];
+        let mut failure: Option<EmberError> = None;
+        for _ in 0..self.txs.len() {
+            let parts = rrx
+                .recv()
+                .map_err(|_| EmberError::Runtime("embedding shard dropped its reply".into()))?;
+            match parts {
+                Ok(parts) => {
+                    for (t, table_out) in parts {
+                        for i in 0..b {
+                            let dst = i * width + t * emb;
+                            out[dst..dst + emb]
+                                .copy_from_slice(&table_out[i * emb..(i + 1) * emb]);
+                        }
+                    }
+                }
+                Err(e) => failure = Some(e),
+            }
+        }
+        match failure {
+            Some(e) => Err(e),
+            None => Ok(out),
+        }
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        // disconnect job channels so workers fall out of their recv loop
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// State owned by one shard thread.
+struct ShardWorker {
+    program: Arc<CompiledProgram>,
+    /// `(table index, table tensor)` — cloned once at pool build.
+    tables: Vec<(usize, Tensor)>,
+    batch: usize,
+    emb: usize,
+    max_lookups: usize,
+}
+
+impl ShardWorker {
+    fn run(self, rx: Receiver<Job>) {
+        let ShardWorker { program, tables, batch, emb, max_lookups } = self;
+        let mut interp = match Interp::new(&program.dlc) {
+            Ok(i) => i,
+            Err(e) => {
+                // poison every job with the construction error
+                let msg = e.to_string();
+                while let Ok(job) = rx.recv() {
+                    let _ = job.reply.send(Err(EmberError::Runtime(msg.clone())));
+                }
+                return;
+            }
+        };
+        // one pre-bound Env per owned table: the table tensor is moved
+        // in (the pool-build clone is the only copy) and bound exactly
+        // once; ptrs/out are fixed-size and refilled in place per batch
+        let mut envs: Vec<(usize, Env)> = tables
+            .into_iter()
+            .map(|(t, table)| {
+                let mut env = Env::new();
+                env.bind_tensor("table", table);
+                env.bind_tensor("ptrs", Tensor::i32(vec![batch + 1], vec![0; batch + 1]));
+                env.bind_tensor("out", Tensor::zeros(vec![batch, emb]));
+                env.bind_sym("num_batches", batch as i64);
+                env.bind_sym("emb_len", emb as i64);
+                (t, env)
+            })
+            .collect();
+        let mut idx_scratch: Vec<i32> = Vec::new();
+        while let Ok(job) = rx.recv() {
+            let mut parts = Vec::with_capacity(envs.len());
+            let mut failure: Option<EmberError> = None;
+            for (t, env) in &mut envs {
+                match run_table(&mut interp, env, *t, &job.reqs, batch, max_lookups, &mut idx_scratch)
+                {
+                    Ok(v) => parts.push((*t, v)),
+                    Err(e) => {
+                        failure = Some(e);
+                        break;
+                    }
+                }
+            }
+            let reply = match failure {
+                Some(e) => Err(e),
+                None => Ok(parts),
+            };
+            let _ = job.reply.send(reply);
+        }
+    }
+}
+
+/// Refill `env`'s CSR operands for table `t` from the batch, run the
+/// pooled interpreter, and return the `[batch, emb]` output rows.
+fn run_table(
+    interp: &mut Interp<'_>,
+    env: &mut Env,
+    t: usize,
+    reqs: &[Request],
+    batch: usize,
+    max_lookups: usize,
+    idx_scratch: &mut Vec<i32>,
+) -> Result<Vec<f32>> {
+    idx_scratch.clear();
+    {
+        let ptrs = env.tensor_mut("ptrs")?;
+        let Buf::I32(p) = &mut ptrs.buf else {
+            return Err(EmberError::Interp("`ptrs` must be an i32 tensor".into()));
+        };
+        p[0] = 0;
+        for i in 0..batch {
+            if let Some(l) = reqs.get(i).and_then(|r| r.lookups.get(t)) {
+                idx_scratch.extend(l.iter().take(max_lookups));
+            }
+            p[i + 1] = idx_scratch.len() as i32;
+        }
+    }
+    // same empty-CSR convention as `Csr::bind_sls_env`: a one-element
+    // zero idxs tensor (never dereferenced when all segments are empty)
+    let idxs = if idx_scratch.is_empty() { vec![0i32] } else { idx_scratch.clone() };
+    let n = idxs.len();
+    env.bind_tensor("idxs", Tensor::i32(vec![n], idxs));
+    {
+        let out = env.tensor_mut("out")?;
+        if let Buf::F32(v) = &mut out.buf {
+            v.fill(0.0);
+        }
+    }
+    env.assign_addresses();
+    interp.reset();
+    interp.run(env, &mut NullSink)?;
+    Ok(env.tensor("out")?.as_f32())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn model(tables: usize) -> DlrmModel {
+        DlrmModel::new(4, 64, 8, tables, 6, 3, 16, 42).unwrap()
+    }
+
+    fn reqs(m: &DlrmModel, n: usize, seed: u64) -> Vec<Request> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| Request {
+                id: i as u64,
+                lookups: (0..m.num_tables)
+                    .map(|_| {
+                        (0..1 + rng.below(8) as usize)
+                            .map(|_| rng.below(m.table_rows as u64) as i32)
+                            .collect()
+                    })
+                    .collect(),
+                dense: (0..m.dense).map(|_| rng.f32()).collect(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn shard_plan_covers_every_table_once() {
+        for (tables, shards) in [(16, 4), (5, 2), (3, 8), (1, 1), (0, 3)] {
+            let plan = shard_plan(tables, shards);
+            assert!(!plan.is_empty());
+            assert!(plan.len() <= shards.max(1));
+            let mut seen: Vec<usize> = plan.into_iter().flatten().collect();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..tables).collect::<Vec<_>>(), "{tables}/{shards}");
+        }
+    }
+
+    #[test]
+    fn sharded_embed_is_byte_identical_to_sequential() {
+        let m = model(6);
+        let pool = ShardPool::new(&m, 3);
+        assert_eq!(pool.num_shards(), 3);
+        for seed in [1u64, 2, 3] {
+            let rs = reqs(&m, 3, seed); // partial batch: padded rows stay zero
+            let seq = m.embed(&rs).unwrap();
+            let sharded = pool.embed(&rs).unwrap();
+            assert_eq!(seq, sharded, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn pool_survives_reuse_and_oversubscribed_shards() {
+        let m = model(2);
+        // more shards than tables clamps to one table per shard
+        let pool = ShardPool::new(&m, 8);
+        assert_eq!(pool.num_shards(), 2);
+        let rs = reqs(&m, 4, 9);
+        let a = pool.embed(&rs).unwrap();
+        let b = pool.embed(&rs).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a, m.embed(&rs).unwrap());
+    }
+
+    #[test]
+    fn empty_batch_embeds_to_zeros() {
+        let m = model(2);
+        let pool = ShardPool::new(&m, 2);
+        let out = pool.embed(&[]).unwrap();
+        assert_eq!(out.len(), m.batch * m.num_tables * m.emb);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,176 @@
+//! Serving statistics: a fixed-size log₂ latency histogram (so
+//! `ServeStats` stays `Copy` and crossing the worker/caller thread
+//! boundary is a plain move) plus the per-coordinator counters with
+//! p50/p95/p99 and throughput accessors.
+
+use std::fmt;
+use std::time::Duration;
+
+/// Number of log₂ microsecond buckets. Bucket `b` holds latencies in
+/// `[2^(b-1), 2^b)` µs (bucket 0 is `< 1 µs`), so 40 buckets cover
+/// sub-microsecond through ~6 days — every latency a serving loop can
+/// produce.
+pub const LAT_BUCKETS: usize = 40;
+
+/// Log-bucketed latency histogram. Quantiles are resolved to a bucket
+/// upper bound, i.e. within 2× of the true value — the standard
+/// serving-histogram tradeoff (HdrHistogram-shaped, power-of-two
+/// buckets so recording is a `leading_zeros`).
+#[derive(Debug, Clone, Copy)]
+pub struct LatencyHist {
+    counts: [u64; LAT_BUCKETS],
+    total: u64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        LatencyHist { counts: [0; LAT_BUCKETS], total: 0 }
+    }
+}
+
+impl LatencyHist {
+    pub fn record(&mut self, lat: Duration) {
+        let us = lat.as_micros() as u64;
+        let bucket = (64 - us.leading_zeros() as usize).min(LAT_BUCKETS - 1);
+        self.counts[bucket] += 1;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Merge another histogram into this one (shard/client fan-in).
+    pub fn merge(&mut self, other: &LatencyHist) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+        self.total += other.total;
+    }
+
+    /// Latency at quantile `q` in [0, 1]: the upper bound of the bucket
+    /// containing the q-th sample. Zero when empty.
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.total == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut cum = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return Duration::from_micros(1u64 << b);
+            }
+        }
+        Duration::from_micros(1u64 << (LAT_BUCKETS - 1))
+    }
+}
+
+/// Serving statistics (snapshot via [`super::Coordinator::shutdown`]).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub batches: u64,
+    /// Failed *batches* (each may span many requests); the per-request
+    /// failure count is the client-side `LoadReport::errors`.
+    pub errors: u64,
+    /// Per-request latency, submit → response send.
+    pub hist: LatencyHist,
+    /// Worker lifetime (spawn → shutdown), the throughput denominator.
+    pub elapsed: Duration,
+}
+
+impl ServeStats {
+    pub fn p50(&self) -> Duration {
+        self.hist.quantile(0.50)
+    }
+    pub fn p95(&self) -> Duration {
+        self.hist.quantile(0.95)
+    }
+    pub fn p99(&self) -> Duration {
+        self.hist.quantile(0.99)
+    }
+    /// Requests per second over the worker's lifetime.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.elapsed.is_zero() {
+            0.0
+        } else {
+            self.requests as f64 / self.elapsed.as_secs_f64()
+        }
+    }
+}
+
+impl fmt::Display for ServeStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} req, {} batches, {} failed batches, {:.0} req/s, p50 {:.2?} p95 {:.2?} p99 {:.2?}",
+            self.requests,
+            self.batches,
+            self.errors,
+            self.throughput_rps(),
+            self.p50(),
+            self.p95(),
+            self.p99()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_resolve_to_bucket_upper_bounds() {
+        let mut h = LatencyHist::default();
+        for _ in 0..90 {
+            h.record(Duration::from_micros(100)); // bucket [64, 128)
+        }
+        for _ in 0..10 {
+            h.record(Duration::from_millis(3)); // bucket [2048, 4096) us
+        }
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.quantile(0.50), Duration::from_micros(128));
+        assert_eq!(h.quantile(0.89), Duration::from_micros(128));
+        assert_eq!(h.quantile(0.99), Duration::from_micros(4096));
+        assert_eq!(h.quantile(1.0), Duration::from_micros(4096));
+    }
+
+    #[test]
+    fn empty_hist_is_zero_and_merge_accumulates() {
+        let mut a = LatencyHist::default();
+        assert_eq!(a.quantile(0.99), Duration::ZERO);
+        let mut b = LatencyHist::default();
+        b.record(Duration::from_micros(10));
+        a.merge(&b);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.quantile(0.5), Duration::from_micros(16));
+    }
+
+    #[test]
+    fn extreme_latencies_clamp_to_last_bucket() {
+        let mut h = LatencyHist::default();
+        h.record(Duration::ZERO);
+        h.record(Duration::from_secs(1 << 30));
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.quantile(0.01), Duration::from_micros(1));
+        assert_eq!(h.quantile(1.0), Duration::from_micros(1u64 << (LAT_BUCKETS - 1)));
+    }
+
+    #[test]
+    fn serve_stats_throughput_and_display() {
+        let mut s = ServeStats::default();
+        assert_eq!(s.throughput_rps(), 0.0);
+        s.requests = 100;
+        s.elapsed = Duration::from_secs(2);
+        for _ in 0..100 {
+            s.hist.record(Duration::from_micros(50));
+        }
+        assert!((s.throughput_rps() - 50.0).abs() < 1e-9);
+        let text = format!("{s}");
+        assert!(text.contains("100 req"), "{text}");
+        assert!(text.contains("failed batches"), "{text}");
+        assert!(text.contains("p99"), "{text}");
+    }
+}

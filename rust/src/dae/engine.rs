@@ -39,9 +39,12 @@ pub struct UnitStats {
     pub mem_writes: u64,
     /// Latency histogram of this unit's loads.
     pub lat_hist: [u64; 6],
-    /// Sum of outstanding-queue occupancy sampled at each issue (for
-    /// mean in-flight requests, Fig. 3b).
+    /// Sum of outstanding-queue occupancy sampled at each request
+    /// issue (for mean in-flight requests, Fig. 3b).
     pub outstanding_sum: u64,
+    /// Number of occupancy samples (loads + stores, now that stores
+    /// also occupy outstanding slots).
+    pub outstanding_samples: u64,
     pub outstanding_max: usize,
 }
 
@@ -117,6 +120,7 @@ impl UnitClock {
             self.outstanding.retain(|&c| c > t);
         }
         self.stats.outstanding_sum += self.outstanding.len() as u64;
+        self.stats.outstanding_samples += 1;
         self.stats.outstanding_max = self.stats.outstanding_max.max(self.outstanding.len() + 1);
         t
     }
@@ -323,12 +327,15 @@ impl DaeSim {
     }
 
     /// Mean in-flight requests on the lookup-issuing unit (Fig. 3b).
+    /// Averaged over every occupancy sample — loads and (since stores
+    /// hold outstanding slots too) stores — so the numerator and
+    /// denominator always cover the same issue events.
     pub fn mean_inflight(&self) -> f64 {
         let u = if self.decoupled { &self.access } else { &self.exec };
-        if u.stats.mem_reads == 0 {
+        if u.stats.outstanding_samples == 0 {
             0.0
         } else {
-            u.stats.outstanding_sum as f64 / u.stats.mem_reads as f64
+            u.stats.outstanding_sum as f64 / u.stats.outstanding_samples as f64
         }
     }
 
@@ -407,12 +414,25 @@ impl DaeSink for DaeSim {
             _ => (&mut self.exec, true),
         };
         let slot = u.issue(1);
-        let t = slot.max(dep_t);
+        // stores occupy an outstanding-request slot (store-buffer /
+        // MSHR entry) like loads do: a unit with a saturated budget
+        // cannot keep issuing writes underneath it
+        let t = u.slot_time(slot.max(dep_t));
         let r = self.memory.access(addr, bytes, MemHint::default(), use_l1, t as u64);
-        u.horizon = u.horizon.max(t + r.latency as f64);
+        let completion = t + r.latency as f64;
+        u.outstanding.push(completion);
+        u.horizon = u.horizon.max(completion);
         u.stats.mem_writes += 1;
+        // charge the level the write actually hit, mirroring mem_read
+        // (a flat L1 charge undercounted every store that missed)
         let p = &self.cfg.power;
-        self.energy_pj += p.pj_per_op + p.pj_per_l1;
+        self.energy_pj += p.pj_per_op
+            + match r.level {
+                1 => p.pj_per_l1,
+                2 => p.pj_per_l2,
+                3 => p.pj_per_llc,
+                _ => p.pj_per_llc + p.pj_per_dram_byte * self.memory.line() as f64,
+            };
     }
 
     fn alu_step(&mut self, produces: u32, deps: &[u32]) {
@@ -595,6 +615,48 @@ mod tests {
         assert!(c3 <= c2, "queue align: {c3} !<= {c2}");
         // overall ablation should be a multiple, like Fig. 16
         assert!(c0 as f64 / c3 as f64 > 2.0, "{c0} / {c3}");
+    }
+
+    #[test]
+    fn write_energy_tracks_hit_level() {
+        let mut sim = DaeSim::new(MachineConfig::traditional_core());
+        // cold store: misses every level, charged at DRAM cost
+        sim.mem_write(Unit::Execute, 0x80_0000, 4, &[]);
+        let cold_pj = sim.energy_pj;
+        // hot store to the same line: L1 hit, charged at L1 cost
+        sim.mem_write(Unit::Execute, 0x80_0000, 4, &[]);
+        let hot_pj = sim.energy_pj - cold_pj;
+        let p = &sim.cfg.power;
+        assert!(
+            (hot_pj - (p.pj_per_op + p.pj_per_l1)).abs() < 1e-9,
+            "L1-hit store energy {hot_pj}"
+        );
+        let dram_pj =
+            p.pj_per_op + p.pj_per_llc + p.pj_per_dram_byte * sim.memory.line() as f64;
+        assert!(
+            (cold_pj - dram_pj).abs() < 1e-9,
+            "cold store should be charged at DRAM level: {cold_pj} vs {dram_pj}"
+        );
+    }
+
+    #[test]
+    fn writes_respect_outstanding_budget() {
+        let run = |max_outstanding: usize| {
+            let mut cfg = MachineConfig::traditional_core();
+            cfg.core.max_outstanding = max_outstanding;
+            let mut sim = DaeSim::new(cfg);
+            // distinct pages: every store misses to DRAM
+            for k in 0..16u64 {
+                sim.mem_write(Unit::Execute, 0x100_0000 + k * 0x1_0000, 4, &[]);
+            }
+            sim.cycles()
+        };
+        let serialized = run(1);
+        let overlapped = run(16);
+        assert!(
+            serialized > overlapped,
+            "a 1-slot budget must serialize stores: {serialized} !> {overlapped}"
+        );
     }
 
     #[test]

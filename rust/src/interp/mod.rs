@@ -282,6 +282,32 @@ impl<'p> Interp<'p> {
         })
     }
 
+    /// Reset all run state so this instance can execute another batch
+    /// over a fresh `Env` — the pooled serving hot path. Stream values,
+    /// marshaling buffers, the data queue, token counts and core
+    /// variables return to their post-[`Interp::new`] state; the
+    /// compiled structures (loop tree, interned ids, operand lists) are
+    /// reused, so a reset is O(streams) instead of re-walking the
+    /// program.
+    pub fn reset(&mut self) {
+        for s in &mut self.streams {
+            *s = None;
+        }
+        for b in &mut self.buffers {
+            b.clear();
+        }
+        self.data_q.clear();
+        for c in &mut self.token_counts_v {
+            *c = 0;
+        }
+        self.core.clear();
+        // `prog` outlives &mut self — same idiom as the token handlers
+        let prog: &'p DlcProgram = self.prog;
+        for (v, init) in &prog.core_vars {
+            self.core.insert(v.clone(), Val::I(*init));
+        }
+    }
+
     /// Tokens processed per token name (test/diagnostic API).
     pub fn token_counts(&self) -> HashMap<String, u64> {
         self.prog
@@ -941,6 +967,29 @@ mod tests {
                 crate::util::quick::allclose(&got, &want, 1e-6, 1e-6)
                     .unwrap_or_else(|e| panic!("{sem:?} {opt}: {e}"));
             }
+        }
+    }
+
+    #[test]
+    fn reset_makes_interp_reusable_across_runs() {
+        let mut rng = Rng::new(21);
+        let table = Tensor::f32(vec![64, 12], rng.normal_vec(64 * 12, 1.0));
+        let prog = compile(&OpClass::Sls, CompileOptions::default()).unwrap();
+        let mut pooled = Interp::new(&prog.dlc).unwrap();
+        for trial in 0..3 {
+            let csr = rand_csr(&mut rng, 10, 64, 7);
+            let mut env_pooled = csr.bind_sls_env(&table, false);
+            let mut env_fresh = csr.bind_sls_env(&table, false);
+            pooled.reset();
+            pooled.run(&mut env_pooled, &mut NullSink).unwrap();
+            let mut fresh = Interp::new(&prog.dlc).unwrap();
+            fresh.run(&mut env_fresh, &mut NullSink).unwrap();
+            assert_eq!(
+                env_pooled.tensor("out").unwrap().as_f32(),
+                env_fresh.tensor("out").unwrap().as_f32(),
+                "trial {trial}: pooled interp diverged from fresh interp"
+            );
+            assert_eq!(pooled.token_counts(), fresh.token_counts(), "trial {trial}");
         }
     }
 

@@ -4,16 +4,18 @@
 //! (Arg parsing is hand-rolled: the offline image has no clap.)
 
 use ember::compiler::passes::pipeline::{CompileOptions, OptLevel};
-use ember::coordinator::{BatchOptions, Coordinator, DlrmModel, Request};
+use ember::coordinator::{
+    run_closed_loop, synthetic_request, BatchOptions, Coordinator, DlrmModel, LoadReport,
+    LoadSpec, ServeOptions,
+};
 use ember::dae::MachineConfig;
-use ember::error::Result;
+use ember::error::{EmberError, Result};
 use ember::frontend::embedding_ops::{OpClass, Semiring};
 use ember::harness;
 use ember::runtime::Runtime;
 use ember::session::EmberSession;
-use ember::util::rng::Rng;
 use std::collections::HashMap;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 fn usage() -> ! {
     eprintln!(
@@ -23,7 +25,7 @@ USAGE:
   ember compile --op <sls|spmm|mp|kg|kg_maxplus|spattn> [--opt 0..3] [--vlen N] [--emit scf|slc|dlc|all] [--trace] [--dump-passes]
   ember simulate --op <op> [--opt 0..3] [--machine core|core2x|dae|t4|h100]
   ember bench --exp <table1..4|fig1|fig3|fig4|fig6|fig7|fig8|fig16..19|all> [--out results] [--seed N]
-  ember serve [--requests N] [--artifacts artifacts]
+  ember serve [--requests N] [--clients C] [--shards S] [--qps Q[,Q..]] [--tables T] [--artifacts artifacts]
   ember info
 "
     );
@@ -173,43 +175,94 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<()> {
 }
 
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
-    let n: usize = flags.get("requests").and_then(|v| v.parse().ok()).unwrap_or(256);
+    let n: usize = flags.get("requests").and_then(|v| v.parse().ok()).unwrap_or(512);
+    let clients: usize = flags.get("clients").and_then(|v| v.parse().ok()).unwrap_or(4);
+    let shards: usize = flags.get("shards").and_then(|v| v.parse().ok()).unwrap_or(4);
+    let tables: usize = flags.get("tables").and_then(|v| v.parse().ok()).unwrap_or(16);
+    let qps_targets: Vec<Option<f64>> = match flags.get("qps") {
+        Some(s) if !s.is_empty() => s
+            .split(',')
+            .map(|v| {
+                v.trim()
+                    .parse::<f64>()
+                    .map(Some)
+                    .map_err(|_| EmberError::Parse(format!("bad --qps value `{v}`")))
+            })
+            .collect::<Result<_>>()?,
+        _ => vec![None], // unthrottled
+    };
     let artifacts = flags.get("artifacts").map(String::as_str).unwrap_or("artifacts");
-    let rt = Runtime::new(artifacts)?;
-    println!("PJRT platform: {}", rt.platform());
-    let model = DlrmModel::from_manifest(&rt, 42)?;
-    let (tables, rows) = (model.num_tables, model.table_rows);
-    let coord = Coordinator::start(model, Some(artifacts.into()), BatchOptions::default());
-    let mut rng = Rng::new(7);
-    let t0 = Instant::now();
-    let mut latencies = Vec::with_capacity(n);
-    for i in 0..n {
-        let req = Request {
-            id: i as u64,
-            lookups: (0..tables)
-                .map(|_| (0..32).map(|_| rng.below(rows as u64) as i32).collect())
-                .collect(),
-            dense: (0..13).map(|_| rng.f32()).collect(),
-        };
-        let t = Instant::now();
-        let resp = coord.infer(req)?;
-        latencies.push(t.elapsed());
-        if i < 3 {
-            println!("req {:3} -> ctr {:.4}", resp.id, resp.score);
+
+    // model shape: manifest when the PJRT backend can actually execute
+    // the artifacts (load_all succeeds — a stub build with artifacts
+    // present must not route onto the erroring PJRT path), synthetic
+    // 16-table DLRM otherwise. The probe Runtime is kept alive so the
+    // per-target model builds reuse it instead of constructing a fresh
+    // PJRT client each sweep point.
+    let mut probe = Runtime::new(artifacts).ok();
+    let pjrt_ready = probe.as_mut().is_some_and(|rt| {
+        let ready = rt.load_all().is_ok() && rt.manifest_usize(&["dlrm", "batch"]).is_some();
+        if ready {
+            println!("PJRT platform: {}", rt.platform());
         }
-    }
-    let wall = t0.elapsed();
-    latencies.sort();
-    let stats = coord.shutdown();
+        ready
+    });
+    let probe = probe;
+    // one session for the whole sweep: every coordinator shares one
+    // compiled SLS program instead of re-running the pass pipeline
+    let mut session = EmberSession::default();
+    type MakeModel<'a> = Box<dyn FnMut() -> Result<DlrmModel> + 'a>;
+    let (mut make_model, artifacts_dir): (MakeModel<'_>, Option<std::path::PathBuf>) = if pjrt_ready
+    {
+        let mk: MakeModel<'_> = Box::new(|| {
+            let rt = probe.as_ref().expect("probe exists when pjrt_ready");
+            DlrmModel::from_manifest_with_session(&mut session, rt, 42)
+        });
+        (mk, Some(std::path::PathBuf::from(artifacts)))
+    } else {
+        println!(
+            "no runnable PJRT artifacts; serving a synthetic {tables}-table DLRM on the pure-Rust MLP"
+        );
+        let mk: MakeModel<'_> = Box::new(move || {
+            DlrmModel::with_session(&mut session, 32, 4096, 16, tables, 32, 13, 64, 42)
+        });
+        (mk, None)
+    };
+
+    let shape = make_model()?;
+    let (num_tables, rows, dense, max_lookups) =
+        (shape.num_tables, shape.table_rows, shape.dense, shape.max_lookups);
     println!(
-        "served {} requests in {:.2?} ({:.0} req/s), p50 {:.2?}, p99 {:.2?}, batches {}",
-        stats.requests,
-        wall,
-        n as f64 / wall.as_secs_f64(),
-        latencies[latencies.len() / 2],
-        latencies[((latencies.len() as f64 * 0.99) as usize).min(latencies.len() - 1)],
-        stats.batches
+        "serving: {num_tables} tables x {rows} rows, batch {}, {shards} embedding shard(s), {clients} client(s)\n",
+        shape.batch
     );
+    println!("{:>10}  {}", "target", LoadReport::table_header());
+    for target in qps_targets {
+        let coord = Coordinator::start_sharded(
+            make_model()?,
+            artifacts_dir.clone(),
+            ServeOptions {
+                batch: BatchOptions { max_batch: shape.batch, max_wait: Duration::from_millis(1) },
+                shards,
+            },
+        );
+        let spec = LoadSpec {
+            clients,
+            requests_per_client: n.div_ceil(clients.max(1)),
+            target_qps: target,
+        };
+        let report = run_closed_loop(&coord, spec, |c, k| {
+            synthetic_request(num_tables, rows, dense, max_lookups, c, k)
+        })?;
+        let stats = coord.shutdown();
+        println!(
+            "{:>10}  {}   ({} batches, {} failed requests)",
+            target.map(|q| format!("{q:.0}")).unwrap_or_else(|| "max".into()),
+            report.table_row(),
+            stats.batches,
+            report.errors,
+        );
+    }
     Ok(())
 }
 

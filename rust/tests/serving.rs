@@ -1,0 +1,171 @@
+//! Serving-engine regression tests: oversized-batch clamping, shard
+//! merge numerics, latency statistics, and pool routing.
+
+use ember::coordinator::{
+    run_closed_loop, BatchOptions, Coordinator, DlrmModel, LoadSpec, Request, Response, Router,
+    ServeOptions, ShardPool,
+};
+use ember::util::rng::Rng;
+use std::time::Duration;
+
+fn model(batch: usize, tables: usize) -> DlrmModel {
+    DlrmModel::new(batch, 128, 8, tables, 6, 3, 16, 42).unwrap()
+}
+
+fn requests(m: &DlrmModel, n: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| Request {
+            id: i as u64,
+            lookups: (0..m.num_tables)
+                .map(|_| {
+                    (0..1 + rng.below(5) as usize)
+                        .map(|_| rng.below(m.table_rows as u64) as i32)
+                        .collect()
+                })
+                .collect(),
+            dense: (0..m.dense).map(|_| rng.f32()).collect(),
+        })
+        .collect()
+}
+
+/// Regression (satellite 1): `max_batch` larger than the compiled
+/// batch used to form full batches that `infer_batch` rejected
+/// wholesale — every caller got an error. The clamp at
+/// `Coordinator::start` must keep every request servable.
+#[test]
+fn oversized_max_batch_is_clamped_and_serves_every_request() {
+    let m = model(4, 2);
+    let reqs = requests(&m, 16, 7);
+    let direct: Vec<Response> = reqs
+        .chunks(4)
+        .flat_map(|c| model(4, 2).infer_batch_cpu(c).unwrap())
+        .collect();
+
+    // max_batch 64 >> compiled batch 4: without the clamp the first
+    // full batch of 5+ would fail the whole flush
+    let coord = Coordinator::start(
+        m,
+        None,
+        BatchOptions { max_batch: 64, max_wait: Duration::from_micros(100) },
+    );
+    let rxs: Vec<_> = reqs.iter().map(|r| coord.submit(r.clone()).unwrap()).collect();
+    let mut got: Vec<Response> = rxs
+        .into_iter()
+        .map(|rx| rx.recv().unwrap().expect("request must not be rejected"))
+        .collect();
+    got.sort_by_key(|r| r.id);
+    let stats = coord.shutdown();
+    assert_eq!(stats.requests, 16);
+    assert_eq!(stats.errors, 0);
+    assert!(stats.batches >= 4, "clamped batches of <= 4: {}", stats.batches);
+    for (g, d) in got.iter().zip(&direct) {
+        assert_eq!(g.id, d.id);
+        assert!((g.score - d.score).abs() < 1e-6);
+    }
+}
+
+/// Oversized batches passed directly to the model API error cleanly on
+/// every stage entry point instead of panicking.
+#[test]
+fn direct_oversized_batch_errors_cleanly() {
+    let m = model(4, 2);
+    let reqs = requests(&m, 5, 3);
+    assert!(m.infer_batch_cpu(&reqs).is_err());
+    let embeddings = m.embed(&requests(&m, 4, 3)).unwrap();
+    assert!(m.score_cpu(&reqs, &embeddings).is_err());
+}
+
+/// Acceptance: sharded `embed` byte-identical to the sequential path,
+/// on the 16-table DLRM shape the pool targets.
+#[test]
+fn sharded_embed_matches_sequential_on_16_tables() {
+    let m = model(8, 16);
+    let pool = ShardPool::new(&m, 4);
+    assert_eq!(pool.num_shards(), 4);
+    for n in [0usize, 3, 8] {
+        let reqs = requests(&m, n, 100 + n as u64);
+        let seq = m.embed(&reqs).unwrap();
+        let sharded = pool.embed(&reqs).unwrap();
+        assert_eq!(seq, sharded, "batch of {n} diverged");
+    }
+}
+
+/// End-to-end: sharded coordinator scores equal the single-worker
+/// scores, and ServeStats carries latency quantiles + throughput.
+#[test]
+fn sharded_coordinator_end_to_end_with_stats() {
+    let reqs = requests(&model(4, 8), 20, 11);
+    let score = |shards: usize| -> (Vec<Response>, ember::coordinator::ServeStats) {
+        let coord = Coordinator::start_sharded(
+            model(4, 8),
+            None,
+            ServeOptions {
+                batch: BatchOptions { max_batch: 4, max_wait: Duration::from_micros(100) },
+                shards,
+            },
+        );
+        let rxs: Vec<_> = reqs.iter().map(|r| coord.submit(r.clone()).unwrap()).collect();
+        let mut got: Vec<Response> =
+            rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+        got.sort_by_key(|r| r.id);
+        (got, coord.shutdown())
+    };
+    let (single, _) = score(1);
+    let (sharded, stats) = score(4);
+    for (a, b) in single.iter().zip(&sharded) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.score, b.score, "sharded scores must be byte-identical");
+    }
+    assert_eq!(stats.requests, 20);
+    assert_eq!(stats.hist.count(), 20);
+    assert!(stats.p99() >= stats.p50());
+    assert!(stats.p50() > Duration::ZERO);
+    assert!(stats.throughput_rps() > 0.0);
+}
+
+/// The closed-loop load generator drives a sharded pool spread across a
+/// router without losing requests.
+#[test]
+fn loadgen_against_router_spread_pools() {
+    let mk = || {
+        Coordinator::start_sharded(
+            model(4, 4),
+            None,
+            ServeOptions {
+                batch: BatchOptions { max_batch: 4, max_wait: Duration::from_micros(200) },
+                shards: 2,
+            },
+        )
+    };
+    let mut router = Router::new();
+    router.register_pool("dlrm", vec![mk(), mk()]);
+    let shape = model(4, 4);
+    let reqs = requests(&shape, 12, 5);
+    for r in &reqs {
+        assert!(router.infer("dlrm", r.clone()).is_ok());
+    }
+    router.shutdown();
+
+    // and straight through the load generator on one pool
+    let coord = mk();
+    let report = run_closed_loop(
+        &coord,
+        LoadSpec { clients: 2, requests_per_client: 6, target_qps: None },
+        |c, k| {
+            let mut rng = Rng::new((c * 31 + k) as u64);
+            Request {
+                id: ((c as u64) << 32) | k as u64,
+                lookups: (0..shape.num_tables)
+                    .map(|_| vec![rng.below(shape.table_rows as u64) as i32])
+                    .collect(),
+                dense: vec![0.1; shape.dense],
+            }
+        },
+    )
+    .unwrap();
+    let stats = coord.shutdown();
+    assert_eq!(report.ok, 12);
+    assert_eq!(report.errors, 0);
+    assert_eq!(stats.requests, 12);
+}
