@@ -8,9 +8,8 @@
 use ember::compiler::passes::model_specific::SpAttnConfig;
 use ember::dae::MachineConfig;
 use ember::data::Tensor;
+use ember::exec::{Backend, Bindings, Executor};
 use ember::frontend::BlockGather;
-use ember::harness::simulate;
-use ember::interp::run_program;
 use ember::runtime::{ArgData, Runtime};
 use ember::session::EmberSession;
 use ember::util::rng::Rng;
@@ -45,8 +44,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
     // numerics vs the Pallas gather kernel through PJRT (skipped when
     // the runtime is the no-`pjrt` stub or artifacts are absent)
-    let mut env = bg.bind_spattn_env(&keys);
-    let got = run_program(&prog.dlc, &mut env)?;
+    let mut exec = session.instantiate(&gather, Backend::Interp)?;
+    let got = exec.run(&mut Bindings::spattn(&bg, &keys))?.output;
     match rt.execute_f32(
         "bigbird_gather",
         &[
@@ -70,16 +69,19 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         ("read-L2,  temporal idx", SpAttnConfig { value_level: 2, nt_indexes: false }),
         ("read-L2,  nt idx", SpAttnConfig { value_level: 2, nt_indexes: true }),
     ] {
-        let p = session.compile_with(
+        let mut sim_exec = session.instantiate_with(
             &gather,
             CompileOptions::with_opt(OptLevel::O3).with_spattn(cfg),
+            Backend::DaeSim(MachineConfig::dae_tmu()),
         )?;
         let spec = SpAttnSpec::bigbird(block);
         let g = spec.gen_gathers(128, 7);
         let keys_big =
             Tensor::f32(vec![spec.seq_len, spec.emb], rng.normal_vec(spec.seq_len * spec.emb, 0.4));
-        let mut env = g.bind_spattn_env(&keys_big);
-        let res = simulate(&p, MachineConfig::dae_tmu(), &mut env)?;
+        let res = sim_exec
+            .run(&mut Bindings::spattn(&g, &keys_big))?
+            .sim
+            .expect("DaeSim reports stats");
         println!(
             "{:<28} {:>10} {:>12} {:>9.1}%",
             name,

@@ -47,18 +47,27 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     }
     let mut rt = Runtime::new(&artifacts)?;
     println!("PJRT platform: {}", rt.platform());
-    let pjrt = match rt.load_all() {
-        Ok(loaded) if rt.manifest_usize(&["dlrm", "batch"]).is_some() => {
-            println!("compiled {} artifacts: {:?}\n", loaded.len(), loaded);
-            true
-        }
-        Ok(_) => {
-            println!("no dlrm artifacts found; serving with the pure-Rust MLP\n");
-            false
-        }
-        Err(e) => {
-            println!("PJRT unavailable ({e}); serving with the pure-Rust MLP\n");
-            false
+    // `can_execute` gates the PJRT path explicitly: the stub runtime
+    // now loads artifacts for bookkeeping (is_loaded works feature-off)
+    // but still cannot execute them.
+    let pjrt = if !rt.can_execute() {
+        println!("PJRT unavailable (stub runtime); serving with the pure-Rust MLP\n");
+        false
+    } else {
+        match rt.load_all() {
+            Ok(loaded) if rt.manifest_usize(&["dlrm", "batch"]).is_some() => {
+                println!("compiled {} artifacts: {:?}\n", loaded.len(), loaded);
+                assert!(loaded.iter().all(|n| rt.is_loaded(n)));
+                true
+            }
+            Ok(_) => {
+                println!("no dlrm artifacts found; serving with the pure-Rust MLP\n");
+                false
+            }
+            Err(e) => {
+                println!("PJRT unavailable ({e}); serving with the pure-Rust MLP\n");
+                false
+            }
         }
     };
 

@@ -6,10 +6,9 @@
 
 use ember::dae::MachineConfig;
 use ember::data::Tensor;
+use ember::exec::{Backend, Bindings, Executor};
 use ember::frontend::formats::Csr;
 use ember::frontend::GraphAggregate;
-use ember::harness::simulate;
-use ember::interp::run_program;
 use ember::runtime::{ArgData, Runtime};
 use ember::session::EmberSession;
 use ember::util::rng::Rng;
@@ -37,12 +36,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let b = vec![0f32; out_w];
 
     // ---- layer 1: DAE-compiled SpMM aggregation, then PJRT check ----
-    // declare the PyG-shaped aggregation; the session compiles it
+    // declare the PyG-shaped aggregation; the session compiles it and
+    // the executor instance pools run state for both layers
     let aggregate = GraphAggregate { num_nodes: nodes, feature_dim: feat, fused_sddmm: false };
     let mut session = EmberSession::default();
-    let program = session.compile(&aggregate)?;
-    let mut env = csr.bind_sls_env(&feats, true);
-    let agg = run_program(&program.dlc, &mut env)?;
+    let mut exec = session.instantiate(&aggregate, Backend::Interp)?;
+    let agg = exec.run(&mut Bindings::spmm(&csr, &feats))?.output;
 
     // dense transform on the host (out = relu(agg @ W + b))
     let mut h1 = vec![0f32; nodes * out_w];
@@ -78,22 +77,31 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         Err(e) => println!("skipping PJRT oracle check: {e}"),
     }
 
-    // ---- layer 2 chained on layer-1 output ----
+    // ---- layer 2 chained on layer-1 output: same pooled instance ----
     let feats2 = Tensor::f32(vec![nodes, out_w], h1);
-    let mut env2 = csr.bind_sls_env(&feats2, true);
-    let agg2 = run_program(&program.dlc, &mut env2)?;
+    let agg2 = exec.run(&mut Bindings::spmm(&csr, &feats2))?.output;
     println!(
         "2-layer inference done: output sum {:.3} over {} nodes\n",
         agg2.iter().sum::<f32>(),
         nodes
     );
 
-    // ---- Fig. 8-shaped comparison: DAE vs GPU-class embedding stage ----
-    let mut e_dae = csr.bind_sls_env(&feats, true);
-    let dae = simulate(&program, MachineConfig::dae_tmu(), &mut e_dae)?;
-    let coupled = session.compile_with(&aggregate, CompileOptions::with_opt(OptLevel::O1))?;
-    let mut e_t4 = csr.bind_sls_env(&feats, true);
-    let t4 = simulate(&coupled, MachineConfig::t4_like(), &mut e_t4)?;
+    // ---- Fig. 8-shaped comparison: DAE vs GPU-class embedding stage,
+    // the same program retargeted onto the cycle-level simulator ----
+    let dae = session
+        .instantiate(&aggregate, Backend::DaeSim(MachineConfig::dae_tmu()))?
+        .run(&mut Bindings::spmm(&csr, &feats))?
+        .sim
+        .expect("DaeSim reports stats");
+    let t4 = session
+        .instantiate_with(
+            &aggregate,
+            CompileOptions::with_opt(OptLevel::O1),
+            Backend::DaeSim(MachineConfig::t4_like()),
+        )?
+        .run(&mut Bindings::spmm(&csr, &feats))?
+        .sim
+        .expect("DaeSim reports stats");
     println!("embedding stage, simulated per core slice:");
     println!("  t4-class lane : {:>9} cycles, bw util {:.1}%", t4.cycles, t4.bw_util * 100.0);
     println!("  DAE core+TMU  : {:>9} cycles, bw util {:.1}%", dae.cycles, dae.bw_util * 100.0);

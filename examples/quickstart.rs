@@ -1,35 +1,33 @@
 //! Quickstart: compile an `nn.EmbeddingBag`-style op through Ember's
 //! full pipeline, inspect every IR stage, validate numerics against a
-//! dense reference, and compare simulated DAE vs traditional-core
-//! performance.
+//! dense reference, and retarget the *same compiled program* across
+//! execution backends — the point of the paper's §8.
 //!
-//! ## The compilation API
+//! ## The compilation + execution API
 //!
-//! Compilation goes through an [`EmberSession`]: a cached, multi-op
-//! driver over the declarative pass pipeline. The one-op path is one
-//! line — before / after:
+//! Compilation goes through an [`EmberSession`]; execution goes through
+//! the unified executor layer (`ember::exec`). One entry point, four
+//! backends — before / after:
 //!
 //! ```ignore
-//! // old (deprecated shim, still works):
-//! let program = compile(&bag.op_class(), CompileOptions::at(OptLevel::O3))?;
-//! // new:
-//! let program = EmberSession::default().compile(&bag)?;
+//! // old (deprecated shims, still work):
+//! let got = run_program(&program.dlc, &mut csr.bind_sls_env(&table, false))?;
+//! // new: instantiate once, run typed bindings on any backend
+//! let mut exec = session.instantiate(&bag, Backend::Interp)?;
+//! let got = exec.run(&mut Bindings::sls(&csr, &table))?.output;
 //! ```
 //!
-//! The session also exposes what the old API could not:
-//! * `session.traces()` — per-pass timing and op-count deltas,
-//! * `session.set_dump_ir(..)` — print the SLC after every pass,
-//! * `session.add(..)` + `session.compile_all()` — multi-op modules
-//!   with `(OpClass, CompileOptions)` deduplication.
+//! Every run returns an [`ember::exec::ExecReport`] — output +
+//! wall-clock, plus cycles/energy/bandwidth/queue statistics when the
+//! backend is `DaeSim`.
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use ember::dae::MachineConfig;
 use ember::data::Tensor;
+use ember::exec::{Backend, Bindings, Executor};
 use ember::frontend::torch_like::EmbeddingBag;
 use ember::frontend::{Csr, Frontend};
-use ember::harness::simulate;
-use ember::interp::run_program;
 use ember::session::EmberSession;
 use ember::util::rng::Rng;
 use ember::{CompileOptions, OptLevel};
@@ -54,7 +52,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         println!("{trace}");
     }
 
-    // 3. Build a workload and validate numerics against a dense loop.
+    // 3. Build a workload with typed bindings and validate numerics
+    //    against a dense loop. The instance pools its run state, so
+    //    reusing it across batches costs no re-setup.
     let mut rng = Rng::new(42);
     let table = Tensor::f32(vec![4096, 32], rng.normal_vec(4096 * 32, 0.5));
     let rows: Vec<Vec<i32>> = (0..64)
@@ -62,8 +62,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         .collect();
     let csr = Csr::from_rows(4096, &rows);
 
-    let mut env = csr.bind_sls_env(&table, false);
-    let got = run_program(&program.dlc, &mut env)?;
+    let mut exec = session.instantiate(&bag, Backend::Interp)?;
+    let got = exec.run(&mut Bindings::sls(&csr, &table))?.output;
 
     let mut want = vec![0f32; 64 * 32];
     for b in 0..64 {
@@ -77,14 +77,30 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     ember::util::quick::allclose(&got, &want, 1e-4, 1e-4).map_err(std::io::Error::other)?;
     println!("numerics: compiled DAE program == dense reference ✓\n");
 
-    // 4. Simulate on a DAE machine vs a traditional core. Compiling the
-    //    same op at another level goes through the same session cache.
-    let mut env_dae = csr.bind_sls_env(&table, false);
-    let dae = simulate(&program, MachineConfig::dae_tmu(), &mut env_dae)?;
-    let coupled_prog =
-        session.compile_with(&bag, CompileOptions::with_opt(OptLevel::O1))?;
-    let mut env_core = csr.bind_sls_env(&table, false);
-    let core = simulate(&coupled_prog, MachineConfig::traditional_core(), &mut env_core)?;
+    // 4. Retarget: same session, same op — DAE machine, traditional
+    //    core, and the hand-optimized reference, all through the one
+    //    executor API. Compiling at another level goes through the
+    //    same session cache.
+    let mut dae_exec =
+        session.instantiate(&bag, Backend::DaeSim(MachineConfig::dae_tmu()))?;
+    let dae = dae_exec
+        .run(&mut Bindings::sls(&csr, &table))?
+        .sim
+        .expect("DaeSim reports stats");
+    let mut core_exec = session.instantiate_with(
+        &bag,
+        CompileOptions::with_opt(OptLevel::O1),
+        Backend::DaeSim(MachineConfig::traditional_core()),
+    )?;
+    let core = core_exec
+        .run(&mut Bindings::sls(&csr, &table))?
+        .sim
+        .expect("DaeSim reports stats");
+
+    // the hand-optimized reference stays numerically identical
+    let mut hand = session.instantiate(&bag, Backend::HandOpt)?;
+    let hand_out = hand.run(&mut Bindings::sls(&csr, &table))?.output;
+    assert_eq!(hand_out, got, "ref-dae reorders dispatch, never numerics");
 
     println!("traditional core : {:>9} cycles  ({:.2} W)", core.cycles, core.watts);
     println!("DAE core + TMU   : {:>9} cycles  ({:.2} W)", dae.cycles, dae.watts);

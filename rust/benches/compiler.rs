@@ -37,6 +37,18 @@ fn main() {
         Bench::new("session/cache_hit(sls)").run(|| session.compile(&OpClass::Sls).unwrap())
     );
 
+    // instantiate on a warm cache: cached compile + executor/interp
+    // construction — what a serving worker pays at startup
+    println!(
+        "{}",
+        Bench::new("session/instantiate(sls, interp)").run(|| {
+            session
+                .instantiate(&OpClass::Sls, ember::exec::Backend::Interp)
+                .unwrap()
+                .runs()
+        })
+    );
+
     // individual passes
     use ember::compiler::decouple::decouple;
     use ember::compiler::lower_dlc::lower_to_dlc;

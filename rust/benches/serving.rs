@@ -3,7 +3,9 @@
 //!
 //! Closed-loop load generation against live coordinators, so the
 //! numbers include batching, channel hops and the MLP — the real
-//! request path, not just the embedding kernel.
+//! request path, not just the embedding kernel. The embedding stage
+//! runs through the unified executor layer: every shard owns a pooled
+//! `exec::Instance` plus pre-bound `exec::Bindings` per table.
 
 use ember::coordinator::{
     run_closed_loop, synthetic_request, BatchOptions, Coordinator, DlrmModel, LoadReport,

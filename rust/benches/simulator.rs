@@ -1,12 +1,14 @@
-//! Simulator + interpreter throughput benchmarks — the L3 hot path.
-//! Reports simulated-events/s and lookups/s; the §Perf targets in
+//! Simulator + interpreter throughput benchmarks — the L3 hot path,
+//! driven through the unified executor layer (`exec::Instance` with a
+//! pooled interpreter: the serving steady state). Reports
+//! simulated-events/s and lookups/s; the §Perf targets in
 //! EXPERIMENTS.md are tracked against these numbers.
 
-use ember::dae::{DaeSim, MachineConfig};
+use ember::dae::MachineConfig;
 use ember::data::Tensor;
+use ember::exec::{Backend, Bindings, Executor};
 use ember::frontend::embedding_ops::OpClass;
 use ember::frontend::formats::Csr;
-use ember::interp::{Interp, NullSink};
 use ember::session::EmberSession;
 use ember::util::bench::Bench;
 use ember::util::rng::Rng;
@@ -29,28 +31,27 @@ fn main() {
 
     let mut session = EmberSession::default();
     for opt in [OptLevel::O0, OptLevel::O3] {
-        let prog = session
-            .compile_with(&OpClass::Sls, CompileOptions::with_opt(opt))
-            .unwrap();
+        let opts = CompileOptions::with_opt(opt);
 
-        // pure numerics (interpreter only)
+        // pure numerics: pooled instance (reset between runs), fresh
+        // bindings per iteration — the per-batch serving shape
         let name = format!("interp/sls/{}", opt.name());
+        let mut exec = session.instantiate_with(&OpClass::Sls, opts, Backend::Interp).unwrap();
         let rep = Bench::new(&name).run(|| {
-            let mut env = csr.bind_sls_env(&table, false);
-            let mut i = Interp::new(&prog.dlc).unwrap();
-            i.run(&mut env, &mut NullSink).unwrap();
+            let mut b = Bindings::sls(&csr, &table);
+            exec.run(&mut b).unwrap().output.len()
         });
         println!("{rep}  [{:.2} Mlookups/s]", rep.throughput(total_lookups) / 1e6);
 
         // full timing simulation
         for cfg in [MachineConfig::dae_tmu(), MachineConfig::traditional_core()] {
             let name = format!("sim/sls/{}/{}", opt.name(), cfg.name);
+            let mut exec = session
+                .instantiate_with(&OpClass::Sls, opts, Backend::DaeSim(cfg))
+                .unwrap();
             let rep = Bench::new(&name).run(|| {
-                let mut env = csr.bind_sls_env(&table, false);
-                let mut sim = DaeSim::new(cfg);
-                let mut i = Interp::new(&prog.dlc).unwrap();
-                i.run(&mut env, &mut sim).unwrap();
-                sim.cycles()
+                let mut b = Bindings::sls(&csr, &table);
+                exec.run(&mut b).unwrap().sim.expect("sim stats").cycles
             });
             println!("{rep}  [{:.2} Mlookups/s]", rep.throughput(total_lookups) / 1e6);
         }

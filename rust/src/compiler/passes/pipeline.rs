@@ -22,6 +22,7 @@ use crate::ir::dlc::DlcProgram;
 use crate::ir::scf::ScfFunc;
 use crate::ir::slc::SlcFunc;
 use std::fmt;
+use std::sync::Arc;
 
 /// Optimization level (Table 4: emb-opt0 .. emb-opt3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -115,6 +116,12 @@ impl CompileOptions {
 
 /// A fully compiled embedding operation, retaining every IR stage for
 /// inspection, testing, and the simulator/interpreter backends.
+///
+/// `dlc` is behind an `Arc` so executors ([`crate::exec::Instance`],
+/// the pooled serving interpreters) can own the program they run
+/// without cloning it; field and method access is unchanged through
+/// auto-deref. Mutating transforms (the hand-optimized reference's
+/// dispatch reorder) go through `Arc::make_mut`.
 #[derive(Debug, Clone)]
 pub struct CompiledProgram {
     pub op: OpClass,
@@ -122,7 +129,7 @@ pub struct CompiledProgram {
     pub vlen: u32,
     pub scf: ScfFunc,
     pub slc: SlcFunc,
-    pub dlc: DlcProgram,
+    pub dlc: Arc<DlcProgram>,
 }
 
 /// Compile an already-lowered SCF function through the standard pass
@@ -150,7 +157,7 @@ pub fn compile_scf(
             vlen: opts.vlen,
             scf,
             slc,
-            dlc,
+            dlc: Arc::new(dlc),
         },
         trace,
     ))

@@ -16,11 +16,11 @@ pub mod shard;
 pub mod stats;
 
 use crate::compiler::passes::pipeline::CompiledProgram;
-use crate::data::{Env, Tensor};
+use crate::data::Tensor;
 use crate::error::{EmberError, Result};
+use crate::exec::{Backend, Bindings, Executor, Instance};
 use crate::frontend::embedding_ops::OpClass;
 use crate::frontend::formats::Csr;
-use crate::interp::{Interp, NullSink};
 use crate::runtime::{ArgData, Runtime};
 use crate::session::EmberSession;
 use crate::util::rng::Rng;
@@ -161,13 +161,13 @@ impl DlrmModel {
     }
 
     /// Embedding stage: run the Ember-compiled DAE program per table,
-    /// sequentially, through one pooled interpreter. Returns
+    /// sequentially, through one pooled executor [`Instance`]. Returns
     /// `[batch, tables*emb]` row-major embeddings. The table-parallel
     /// equivalent is [`shard::ShardPool::embed`] (byte-identical).
     pub fn embed(&self, requests: &[Request]) -> Result<Vec<f32>> {
         let b = self.batch;
         let mut out = vec![0f32; b * self.num_tables * self.emb];
-        let mut interp = Interp::new(&self.program.dlc)?;
+        let mut exec = Instance::new(&self.program, Backend::Interp)?;
         for t in 0..self.num_tables {
             let rows: Vec<Vec<i32>> = (0..b)
                 .map(|i| {
@@ -182,10 +182,8 @@ impl DlrmModel {
                 })
                 .collect();
             let csr = Csr::from_rows(self.table_rows, &rows);
-            let mut env: Env = csr.bind_sls_env(&self.tables[t], false);
-            interp.reset();
-            interp.run(&mut env, &mut NullSink)?;
-            let emb_out = env.tensor("out")?.as_f32();
+            let mut bindings = Bindings::sls(&csr, &self.tables[t]);
+            let emb_out = exec.run(&mut bindings)?.output;
             for i in 0..b {
                 let dst = i * self.num_tables * self.emb + t * self.emb;
                 out[dst..dst + self.emb]

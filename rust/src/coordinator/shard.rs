@@ -2,17 +2,19 @@
 //!
 //! The embedding stage of a DLRM batch is embarrassingly parallel
 //! across tables, and it is where the serving loop used to burn its
-//! time: one `Interp` construction, one CSR allocation and one full
+//! time: one interpreter construction, one CSR allocation and one full
 //! table-tensor clone *per table per batch*. The pool fixes both axes:
 //!
 //!   * **parallelism** — tables are partitioned round-robin across
 //!     shard threads; each shard runs its tables' lookups concurrently
 //!     with every other shard and the merge is a cheap row-slice copy;
-//!   * **hot-path allocation** — each shard owns a pooled [`Interp`]
-//!     (reset between batches, never rebuilt) and one pre-bound [`Env`]
-//!     per owned table whose table tensor is cloned exactly once at
-//!     pool construction. Per batch only the small `ptrs`/`idxs`/`out`
-//!     operands are refilled.
+//!   * **hot-path allocation** — each shard owns a pooled executor
+//!     [`Instance`] (its interpreter is reset between batches, never
+//!     rebuilt) and one pre-bound [`Bindings`] per owned table whose
+//!     table tensor is moved in exactly once at pool construction
+//!     ([`Bindings::sls_pooled`]). Per batch only the small
+//!     `ptrs`/`idxs`/`out` operands are refilled in place
+//!     ([`Bindings::refill_csr`]).
 //!
 //! Numerics: the sharded path performs the identical per-table float
 //! operations in the identical order as the sequential
@@ -21,9 +23,8 @@
 
 use super::{DlrmModel, Request};
 use crate::compiler::passes::pipeline::CompiledProgram;
-use crate::data::{Buf, Env, Tensor};
 use crate::error::{EmberError, Result};
-use crate::interp::{Interp, NullSink};
+use crate::exec::{Backend, Bindings, Executor, Instance};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -57,8 +58,8 @@ pub struct ShardPool {
 }
 
 impl ShardPool {
-    /// Spawn `shards` workers, each owning a clone of its tables and a
-    /// pooled interpreter for `model.program`.
+    /// Spawn `shards` workers, each owning a pooled [`Instance`] for
+    /// `model.program` plus pre-bound [`Bindings`] for its tables.
     pub fn new(model: &DlrmModel, shards: usize) -> Self {
         let plan = shard_plan(model.num_tables, shards);
         let mut txs = Vec::with_capacity(plan.len());
@@ -69,7 +70,6 @@ impl ShardPool {
                 program: model.program.clone(),
                 tables: owned.iter().map(|&t| (t, model.tables[t].clone())).collect(),
                 batch: model.batch,
-                emb: model.emb,
                 max_lookups: model.max_lookups,
             };
             handles.push(std::thread::spawn(move || worker.run(rx)));
@@ -146,16 +146,15 @@ impl Drop for ShardPool {
 struct ShardWorker {
     program: Arc<CompiledProgram>,
     /// `(table index, table tensor)` — cloned once at pool build.
-    tables: Vec<(usize, Tensor)>,
+    tables: Vec<(usize, crate::data::Tensor)>,
     batch: usize,
-    emb: usize,
     max_lookups: usize,
 }
 
 impl ShardWorker {
     fn run(self, rx: Receiver<Job>) {
-        let ShardWorker { program, tables, batch, emb, max_lookups } = self;
-        let mut interp = match Interp::new(&program.dlc) {
+        let ShardWorker { program, tables, batch, max_lookups } = self;
+        let mut exec = match Instance::new(&program, Backend::Interp) {
             Ok(i) => i,
             Err(e) => {
                 // poison every job with the construction error
@@ -166,28 +165,29 @@ impl ShardWorker {
                 return;
             }
         };
-        // one pre-bound Env per owned table: the table tensor is moved
-        // in (the pool-build clone is the only copy) and bound exactly
-        // once; ptrs/out are fixed-size and refilled in place per batch
-        let mut envs: Vec<(usize, Env)> = tables
+        // one pre-bound binding set per owned table: the table tensor
+        // is moved in (the pool-build clone is the only copy) and bound
+        // exactly once; ptrs/out are fixed-size and refilled in place
+        let mut bindings: Vec<(usize, Bindings)> = tables
             .into_iter()
-            .map(|(t, table)| {
-                let mut env = Env::new();
-                env.bind_tensor("table", table);
-                env.bind_tensor("ptrs", Tensor::i32(vec![batch + 1], vec![0; batch + 1]));
-                env.bind_tensor("out", Tensor::zeros(vec![batch, emb]));
-                env.bind_sym("num_batches", batch as i64);
-                env.bind_sym("emb_len", emb as i64);
-                (t, env)
-            })
+            .map(|(t, table)| (t, Bindings::sls_pooled(table, batch)))
             .collect();
+        let mut ptr_scratch: Vec<i32> = vec![0; batch + 1];
         let mut idx_scratch: Vec<i32> = Vec::new();
         while let Ok(job) = rx.recv() {
-            let mut parts = Vec::with_capacity(envs.len());
+            let mut parts = Vec::with_capacity(bindings.len());
             let mut failure: Option<EmberError> = None;
-            for (t, env) in &mut envs {
-                match run_table(&mut interp, env, *t, &job.reqs, batch, max_lookups, &mut idx_scratch)
-                {
+            for (t, b) in &mut bindings {
+                match run_table(
+                    &mut exec,
+                    b,
+                    *t,
+                    &job.reqs,
+                    batch,
+                    max_lookups,
+                    &mut ptr_scratch,
+                    &mut idx_scratch,
+                ) {
                     Ok(v) => parts.push((*t, v)),
                     Err(e) => {
                         failure = Some(e);
@@ -204,46 +204,29 @@ impl ShardWorker {
     }
 }
 
-/// Refill `env`'s CSR operands for table `t` from the batch, run the
-/// pooled interpreter, and return the `[batch, emb]` output rows.
+/// Refill `bindings`' CSR operands for table `t` from the batch, run
+/// the pooled executor, and return the `[batch, emb]` output rows.
+#[allow(clippy::too_many_arguments)]
 fn run_table(
-    interp: &mut Interp<'_>,
-    env: &mut Env,
+    exec: &mut Instance,
+    bindings: &mut Bindings,
     t: usize,
     reqs: &[Request],
     batch: usize,
     max_lookups: usize,
+    ptr_scratch: &mut [i32],
     idx_scratch: &mut Vec<i32>,
 ) -> Result<Vec<f32>> {
     idx_scratch.clear();
-    {
-        let ptrs = env.tensor_mut("ptrs")?;
-        let Buf::I32(p) = &mut ptrs.buf else {
-            return Err(EmberError::Interp("`ptrs` must be an i32 tensor".into()));
-        };
-        p[0] = 0;
-        for i in 0..batch {
-            if let Some(l) = reqs.get(i).and_then(|r| r.lookups.get(t)) {
-                idx_scratch.extend(l.iter().take(max_lookups));
-            }
-            p[i + 1] = idx_scratch.len() as i32;
+    ptr_scratch[0] = 0;
+    for i in 0..batch {
+        if let Some(l) = reqs.get(i).and_then(|r| r.lookups.get(t)) {
+            idx_scratch.extend(l.iter().take(max_lookups));
         }
+        ptr_scratch[i + 1] = idx_scratch.len() as i32;
     }
-    // same empty-CSR convention as `Csr::bind_sls_env`: a one-element
-    // zero idxs tensor (never dereferenced when all segments are empty)
-    let idxs = if idx_scratch.is_empty() { vec![0i32] } else { idx_scratch.clone() };
-    let n = idxs.len();
-    env.bind_tensor("idxs", Tensor::i32(vec![n], idxs));
-    {
-        let out = env.tensor_mut("out")?;
-        if let Buf::F32(v) = &mut out.buf {
-            v.fill(0.0);
-        }
-    }
-    env.assign_addresses();
-    interp.reset();
-    interp.run(env, &mut NullSink)?;
-    Ok(env.tensor("out")?.as_f32())
+    bindings.refill_csr(ptr_scratch, idx_scratch)?;
+    Ok(exec.run(bindings)?.output)
 }
 
 #[cfg(test)]

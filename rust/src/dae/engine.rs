@@ -548,6 +548,7 @@ mod tests {
     use super::*;
     use crate::compiler::passes::pipeline::{compile_with_trace, CompileOptions, OptLevel};
     use crate::data::Tensor;
+    use crate::exec::Bindings;
     use crate::frontend::embedding_ops::OpClass;
     use crate::frontend::formats::Csr;
     use crate::interp::Interp;
@@ -561,7 +562,9 @@ mod tests {
             .collect();
         let csr = Csr::from_rows(4096, &r);
         let prog = compile_with_trace(&OpClass::Sls, CompileOptions::with_opt(opt)).unwrap().0;
-        let mut env = csr.bind_sls_env(&table, false);
+        // drive the sink directly (the exec layer wraps this; these
+        // tests inspect DaeSim internals the ExecReport doesn't carry)
+        let mut env = Bindings::sls(&csr, &table).into_env();
         let mut sim = DaeSim::new(cfg);
         let mut interp = Interp::new(&prog.dlc).unwrap();
         interp.run(&mut env, &mut sim).unwrap();

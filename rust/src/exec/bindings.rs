@@ -1,0 +1,247 @@
+//! Typed operand binding for the executor layer.
+//!
+//! A [`Bindings`] pairs an [`OpClass`] with the `Env` its compiled
+//! program consumes, built through typed constructors instead of the
+//! historical stringly-typed `bind_*_env` helpers (which survive as
+//! deprecated shims delegating here, pinned byte-identical by
+//! `tests/api_shims.rs`). Knowing the op class is what lets one
+//! binding set retarget across backends — including PJRT, which needs
+//! to relower the operands into the artifact's calling convention.
+
+use crate::data::{Buf, Env, Tensor};
+use crate::error::{EmberError, Result};
+use crate::frontend::embedding_ops::{OpClass, Semiring};
+use crate::frontend::formats::{BlockGathers, Csr, FlatLookups};
+
+/// Bind an index list as an `Env` tensor. Empty lists bind as a single
+/// zero element: a compiled program never dereferences an index when
+/// every segment is empty (the loops that would read it run zero
+/// iterations), but the address assigner and the memory model want a
+/// non-degenerate tensor. This is the one home of the empty-bag
+/// padding that used to be copy-pasted across the `bind_*_env`
+/// helpers.
+pub(crate) fn index_tensor(idxs: &[i32]) -> Tensor {
+    if idxs.is_empty() {
+        Tensor::i32(vec![1], vec![0])
+    } else {
+        Tensor::i32(vec![idxs.len()], idxs.to_vec())
+    }
+}
+
+/// Typed operands for one run of a compiled embedding op.
+#[derive(Debug, Clone)]
+pub struct Bindings {
+    op: OpClass,
+    env: Env,
+}
+
+impl Bindings {
+    // ------------------------------------------------ typed constructors
+
+    /// SLS (EmbeddingBag): CSR lookup segments + embedding table.
+    pub fn sls(csr: &Csr, table: &Tensor) -> Bindings {
+        Self::csr_op(OpClass::Sls, csr, table, false)
+    }
+
+    /// SpMM (weighted SLS / GNN aggregation): CSR segments with
+    /// explicit (or implicit-1) weights + feature table.
+    pub fn spmm(csr: &Csr, table: &Tensor) -> Bindings {
+        Self::csr_op(OpClass::Spmm, csr, table, true)
+    }
+
+    /// MP (FusedMM message passing): CSR adjacency + node features
+    /// (bound under the `h` memref name).
+    pub fn mp(csr: &Csr, feats: &Tensor) -> Bindings {
+        let mut env = Env::new();
+        env.bind_tensor("ptrs", Tensor::i32(vec![csr.ptrs.len()], csr.ptrs.clone()));
+        env.bind_tensor("idxs", index_tensor(&csr.idxs));
+        env.bind_tensor("h", feats.clone());
+        env.bind_tensor("out", Tensor::zeros(vec![csr.num_rows, feats.dims[1]]));
+        env.bind_sym("num_nodes", csr.num_rows as i64);
+        env.bind_sym("emb_len", feats.dims[1] as i64);
+        env.assign_addresses();
+        Bindings { op: OpClass::Mp, env }
+    }
+
+    /// KG lookup: flat index list + entity table.
+    pub fn kg(sem: Semiring, fl: &FlatLookups, table: &Tensor) -> Bindings {
+        let mut env = Env::new();
+        env.bind_tensor("idxs", index_tensor(&fl.idxs));
+        env.bind_tensor("table", table.clone());
+        env.bind_tensor("out", Tensor::zeros(vec![fl.idxs.len(), table.dims[1]]));
+        env.bind_sym("num_queries", fl.idxs.len() as i64);
+        env.bind_sym("emb_len", table.dims[1] as i64);
+        env.assign_addresses();
+        Bindings { op: OpClass::Kg(sem), env }
+    }
+
+    /// BigBird SpAttn: blocked gather list + key tensor.
+    pub fn spattn(bg: &BlockGathers, keys: &Tensor) -> Bindings {
+        assert_eq!(keys.dims[0], bg.num_key_blocks * bg.block);
+        let mut env = Env::new();
+        env.bind_tensor("bidx", index_tensor(&bg.block_idxs));
+        env.bind_tensor("keys", keys.clone());
+        env.bind_tensor(
+            "out",
+            Tensor::zeros(vec![bg.block_idxs.len() * bg.block, keys.dims[1]]),
+        );
+        env.bind_sym("num_gathers", bg.block_idxs.len() as i64);
+        env.bind_sym("block", bg.block as i64);
+        env.bind_sym("emb_len", keys.dims[1] as i64);
+        env.assign_addresses();
+        Bindings { op: OpClass::SpAttn { block: bg.block }, env }
+    }
+
+    fn csr_op(op: OpClass, csr: &Csr, table: &Tensor, weighted: bool) -> Bindings {
+        let mut env = Env::new();
+        env.bind_tensor("ptrs", Tensor::i32(vec![csr.ptrs.len()], csr.ptrs.clone()));
+        env.bind_tensor("idxs", index_tensor(&csr.idxs));
+        if weighted {
+            let vals = if csr.vals.is_empty() {
+                vec![1.0f32; csr.idxs.len().max(1)]
+            } else {
+                csr.vals.clone()
+            };
+            env.bind_tensor("weights", Tensor::f32(vec![vals.len()], vals));
+        }
+        env.bind_tensor("table", table.clone());
+        env.bind_tensor("out", Tensor::zeros(vec![csr.num_rows, table.dims[1]]));
+        env.bind_sym("num_batches", csr.num_rows as i64);
+        env.bind_sym("emb_len", table.dims[1] as i64);
+        env.assign_addresses();
+        Bindings { op, env }
+    }
+
+    // ------------------------------------------------ pooled serving path
+
+    /// Pre-bound SLS bindings for a pooled serving worker: `table` is
+    /// moved in (bound exactly once, no clone), `ptrs`/`out` are
+    /// allocated at the fixed batch geometry and refilled in place per
+    /// batch via [`Bindings::refill_csr`]. This is the hot-path shape
+    /// `ShardPool` used to hand-roll.
+    pub fn sls_pooled(table: Tensor, batch: usize) -> Bindings {
+        let emb = table.dims[1];
+        let mut env = Env::new();
+        env.bind_tensor("ptrs", Tensor::i32(vec![batch + 1], vec![0; batch + 1]));
+        env.bind_tensor("idxs", index_tensor(&[]));
+        env.bind_tensor("table", table);
+        env.bind_tensor("out", Tensor::zeros(vec![batch, emb]));
+        env.bind_sym("num_batches", batch as i64);
+        env.bind_sym("emb_len", emb as i64);
+        env.assign_addresses();
+        Bindings { op: OpClass::Sls, env }
+    }
+
+    /// Refill the CSR operands in place for the next batch (serving hot
+    /// path): `ptrs` is copied into the fixed-size tensor, `idxs` — the
+    /// only operand whose size varies per batch — is rebound, and `out`
+    /// is zero-filled. Everything else (in particular the table) stays
+    /// bound as-is.
+    pub fn refill_csr(&mut self, ptrs: &[i32], idxs: &[i32]) -> Result<()> {
+        {
+            let t = self.env.tensor_mut("ptrs")?;
+            let Buf::I32(p) = &mut t.buf else {
+                return Err(EmberError::Interp("`ptrs` must be an i32 tensor".into()));
+            };
+            if p.len() != ptrs.len() {
+                return Err(EmberError::Interp(format!(
+                    "refill_csr: {} ptrs into a batch-{} binding",
+                    ptrs.len(),
+                    p.len().saturating_sub(1)
+                )));
+            }
+            p.copy_from_slice(ptrs);
+        }
+        self.env.bind_tensor("idxs", index_tensor(idxs));
+        {
+            let out = self.env.tensor_mut("out")?;
+            if let Buf::F32(v) = &mut out.buf {
+                v.fill(0.0);
+            }
+        }
+        self.env.assign_addresses();
+        Ok(())
+    }
+
+    // ------------------------------------------------ generic access
+
+    /// Wrap an already-built `Env` (advanced/harness use: the typed
+    /// constructors are preferred).
+    pub fn from_env(op: OpClass, env: Env) -> Bindings {
+        Bindings { op, env }
+    }
+
+    /// Bind an extra tensor (escape hatch for custom memrefs).
+    pub fn with_tensor(mut self, name: &str, t: Tensor) -> Self {
+        self.env.bind_tensor(name, t);
+        self.env.assign_addresses();
+        self
+    }
+
+    /// Bind an extra shape symbol.
+    pub fn with_sym(mut self, name: &str, v: i64) -> Self {
+        self.env.bind_sym(name, v);
+        self
+    }
+
+    /// The op class these operands are shaped for.
+    pub fn op_class(&self) -> &OpClass {
+        &self.op
+    }
+
+    pub fn env(&self) -> &Env {
+        &self.env
+    }
+
+    pub fn env_mut(&mut self) -> &mut Env {
+        &mut self.env
+    }
+
+    /// Unwrap into the raw `Env` (the deprecated `bind_*_env` shims).
+    pub fn into_env(self) -> Env {
+        self.env
+    }
+
+    /// The `out` tensor data after a run.
+    pub fn output(&self) -> Result<Vec<f32>> {
+        Ok(self.env.tensor("out")?.as_f32())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_index_lists_bind_one_zero_element() {
+        let t = index_tensor(&[]);
+        assert_eq!(t.dims, vec![1]);
+        assert_eq!(t.buf.get_i(0), 0);
+        let t = index_tensor(&[3, 1]);
+        assert_eq!(t.dims, vec![2]);
+    }
+
+    #[test]
+    fn sls_bindings_cover_canonical_memrefs() {
+        let csr = Csr::from_rows(4, &[vec![0, 1], vec![2]]);
+        let table = Tensor::f32(vec![4, 2], vec![0.; 8]);
+        let b = Bindings::sls(&csr, &table);
+        assert_eq!(*b.op_class(), OpClass::Sls);
+        for name in ["ptrs", "idxs", "table", "out"] {
+            assert!(b.env().tensor(name).is_ok(), "{name}");
+        }
+        assert_eq!(b.env().sym("num_batches").unwrap(), 2);
+        // spmm adds weights (implicit 1.0 when the CSR carries none)
+        let w = Bindings::spmm(&csr, &table);
+        assert_eq!(w.env().tensor("weights").unwrap().numel(), csr.nnz());
+    }
+
+    #[test]
+    fn refill_rejects_wrong_batch_geometry() {
+        let table = Tensor::f32(vec![4, 2], vec![0.; 8]);
+        let mut b = Bindings::sls_pooled(table, 4);
+        assert!(b.refill_csr(&[0, 1], &[2]).is_err(), "3 != batch+1 ptrs");
+        assert!(b.refill_csr(&[0, 1, 1, 2, 2], &[0, 3]).is_ok());
+        assert_eq!(b.env().tensor("idxs").unwrap().numel(), 2);
+    }
+}

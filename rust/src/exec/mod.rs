@@ -1,0 +1,491 @@
+//! The unified executor layer (paper §8): one entry point over every
+//! way a compiled program can run.
+//!
+//! Ember's claim is that a single compiled embedding op retargets —
+//! functional check, cycle-level DAE simulation, hand-optimized
+//! reference, real PJRT runtime — and this module is that claim as an
+//! API. A [`Backend`] names the target,
+//! [`crate::session::EmberSession::instantiate`] (or [`Instance::new`])
+//! wraps a compiled program in an [`Instance`],
+//! typed [`Bindings`] replace the stringly-typed `bind_*_env` helpers,
+//! and every run returns a uniform [`ExecReport`]:
+//!
+//! ```
+//! use ember::exec::{Backend, Bindings, Executor};
+//! use ember::frontend::{Csr, EmbeddingBag};
+//! use ember::data::Tensor;
+//! use ember::session::EmberSession;
+//!
+//! let mut session = EmberSession::default();
+//! let mut exec = session
+//!     .instantiate(&EmbeddingBag::new(64, 8), Backend::Interp)
+//!     .unwrap();
+//! let csr = Csr::from_rows(64, &[vec![0, 3], vec![]]);
+//! let table = Tensor::f32(vec![64, 8], vec![0.5; 64 * 8]);
+//! let mut bindings = Bindings::sls(&csr, &table);
+//! let report = exec.run(&mut bindings).unwrap();
+//! assert_eq!(report.output.len(), 2 * 8);
+//! ```
+//!
+//! An `Instance` owns pooled run state — the interpreter is built once
+//! and [`crate::interp::Interp::reset`] between runs — which is the
+//! serving hot path `coordinator::ShardPool` runs on (one `Instance`
+//! plus pre-bound [`Bindings`] per table, refilled in place per
+//! batch).
+
+mod bindings;
+
+pub use bindings::Bindings;
+
+use crate::compiler::passes::pipeline::CompiledProgram;
+use crate::dae::{DaeSim, MachineConfig};
+use crate::data::{Buf, Env, Tensor};
+use crate::error::{EmberError, Result};
+use crate::frontend::embedding_ops::OpClass;
+use crate::interp::{Interp, NullSink};
+use crate::ir::dlc::DlcProgram;
+use crate::runtime::{ArgData, Runtime};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Where (and how) an [`Instance`] executes its compiled program.
+#[derive(Debug, Clone, Copy)]
+pub enum Backend {
+    /// Pure-numerics functional interpreter (no timing events).
+    Interp,
+    /// Functional run + cycle-level DAE simulation of the machine;
+    /// [`ExecReport::sim`] carries cycles/energy/bandwidth/queue stats.
+    DaeSim(MachineConfig),
+    /// Hand-optimized reference program (`ref-dae`, §8.3): token
+    /// dispatch reordered by taken frequency. Numerics are identical
+    /// to [`Backend::Interp`] by construction (the parity suite pins
+    /// this down).
+    HandOpt,
+    /// The PJRT runtime path: executes the op's AOT HLO artifact (see
+    /// `python/compile/aot.py` for the calling conventions). On a
+    /// default build (no `pjrt` feature) the stub runtime reports a
+    /// runtime error at `run` time; callers gate on
+    /// [`Runtime::can_execute`].
+    Pjrt,
+}
+
+impl Backend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Interp => "interp",
+            Backend::DaeSim(_) => "dae-sim",
+            Backend::HandOpt => "hand-opt",
+            Backend::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Simulation statistics of one [`Backend::DaeSim`] run (the fields the
+/// paper's figures read; `harness::RunResult` is an alias of this).
+#[derive(Debug, Clone)]
+pub struct SimStats {
+    pub cycles: u64,
+    pub seconds: f64,
+    pub watts: f64,
+    pub joules: f64,
+    pub bw_util: f64,
+    pub loads_per_cycle: f64,
+    pub mean_inflight: f64,
+    pub lat_hist: [u64; 6],
+    pub mem_reads: u64,
+    pub queue_write_bps: f64,
+    pub queue_read_bps: f64,
+    pub llc_lookups: u64,
+    pub l2_hits: u64,
+    pub tokens: u64,
+    pub dram_bytes: u64,
+}
+
+impl SimStats {
+    fn collect(sim: &DaeSim, decoupled: bool) -> SimStats {
+        let lookup_unit = if decoupled { sim.access_stats() } else { sim.exec_stats() };
+        SimStats {
+            cycles: sim.cycles(),
+            seconds: sim.seconds(),
+            watts: sim.watts(),
+            joules: sim.joules(),
+            bw_util: sim.bw_utilization(),
+            loads_per_cycle: sim.loads_per_cycle(),
+            mean_inflight: sim.mean_inflight(),
+            lat_hist: lookup_unit.lat_hist,
+            mem_reads: lookup_unit.mem_reads,
+            queue_write_bps: sim.queue_write_throughput(),
+            queue_read_bps: sim.queue_read_throughput(),
+            llc_lookups: sim.memory.stats.llc_lookups,
+            l2_hits: sim.memory.stats.l2_hits,
+            tokens: sim.tokens,
+            dram_bytes: sim.memory.stats.dram_bytes,
+        }
+    }
+}
+
+/// Uniform result of one run, whatever the backend.
+#[derive(Debug, Clone)]
+pub struct ExecReport {
+    /// `Backend::name()` of the backend that produced this report.
+    pub backend: &'static str,
+    /// The `out` tensor data (or the PJRT result buffer).
+    pub output: Vec<f32>,
+    /// Host wall-clock of the run.
+    pub wall: Duration,
+    /// Simulated machine statistics — `Some` iff the backend is
+    /// [`Backend::DaeSim`].
+    pub sim: Option<SimStats>,
+}
+
+/// Anything that can execute typed [`Bindings`] and report uniformly.
+/// [`Instance`] is the canonical implementation; the trait exists so
+/// harnesses and serving code can stay generic over backends.
+pub trait Executor {
+    /// The op class this executor runs.
+    fn op_class(&self) -> &OpClass;
+    /// `Backend::name()` of the target.
+    fn backend_name(&self) -> &'static str;
+    /// Run over an already-built `Env` (harness/advanced path).
+    fn run_env(&mut self, env: &mut Env) -> Result<ExecReport>;
+    /// Run typed bindings, validating they match the compiled op.
+    fn run(&mut self, bindings: &mut Bindings) -> Result<ExecReport> {
+        if bindings.op_class() != self.op_class() {
+            return Err(EmberError::Runtime(format!(
+                "bindings for {:?} run on an instance compiled for {:?}",
+                bindings.op_class(),
+                self.op_class()
+            )));
+        }
+        self.run_env(bindings.env_mut())
+    }
+}
+
+/// An executable handle over one compiled program on one backend.
+///
+/// Owns pooled run state: the interpreter is constructed once at
+/// instantiation and `reset` between runs, so reuse across batches
+/// costs O(streams) instead of re-walking the program — the pooling
+/// `ShardPool` used to hand-roll. Reuse is numerically invisible
+/// (pinned by `tests/exec_parity.rs`).
+pub struct Instance {
+    op: OpClass,
+    backend: Backend,
+    /// The program actually executed (for `HandOpt`: a reordered copy).
+    dlc: Arc<DlcProgram>,
+    /// Pooled interpreter — `None` only for [`Backend::Pjrt`], whose
+    /// run path never interprets.
+    interp: Option<Interp>,
+    runtime: Option<Runtime>,
+    runs: u64,
+}
+
+impl Instance {
+    /// Wrap a compiled program in an executor on `backend`.
+    ///
+    /// For [`Backend::Pjrt`] this uses the repo-conventional default
+    /// artifacts directory (`artifacts`); pass a configured location
+    /// through [`Instance::with_artifacts`] or a ready-made runtime
+    /// through [`Instance::with_runtime`].
+    pub fn new(program: &CompiledProgram, backend: Backend) -> Result<Instance> {
+        let runtime = match backend {
+            Backend::Pjrt => Some(Runtime::new("artifacts")?),
+            _ => None,
+        };
+        Self::build(program, backend, runtime)
+    }
+
+    /// A PJRT-backed instance over an explicit artifacts directory —
+    /// the same `--artifacts` convention the CLI and examples use.
+    pub fn with_artifacts(
+        program: &CompiledProgram,
+        artifacts_dir: impl AsRef<std::path::Path>,
+    ) -> Result<Instance> {
+        Self::build(program, Backend::Pjrt, Some(Runtime::new(artifacts_dir)?))
+    }
+
+    /// A PJRT-backed instance over an existing runtime (shares the
+    /// runtime's client and artifact cache).
+    pub fn with_runtime(program: &CompiledProgram, runtime: Runtime) -> Result<Instance> {
+        Self::build(program, Backend::Pjrt, Some(runtime))
+    }
+
+    fn build(
+        program: &CompiledProgram,
+        backend: Backend,
+        runtime: Option<Runtime>,
+    ) -> Result<Instance> {
+        let dlc = match backend {
+            Backend::HandOpt => {
+                let mut d = (*program.dlc).clone();
+                crate::interp::handopt::reorder_by_frequency(&mut d);
+                Arc::new(d)
+            }
+            _ => Arc::clone(&program.dlc),
+        };
+        let interp = match backend {
+            Backend::Pjrt => None,
+            _ => Some(Interp::new(&dlc)?),
+        };
+        Ok(Instance { op: program.op.clone(), backend, dlc, interp, runtime, runs: 0 })
+    }
+
+    /// The backend this instance targets.
+    pub fn backend(&self) -> &Backend {
+        &self.backend
+    }
+
+    /// The program this instance executes (for `HandOpt`, the
+    /// dispatch-reordered copy).
+    pub fn program(&self) -> &Arc<DlcProgram> {
+        &self.dlc
+    }
+
+    /// Number of runs executed through this instance's pooled state.
+    pub fn runs(&self) -> u64 {
+        self.runs
+    }
+
+    /// Like [`Executor::run_env`] but without materializing the `out`
+    /// tensor into the report — the harness figure sweeps only read
+    /// machine stats, so they skip the output clone entirely.
+    pub fn run_env_stats(&mut self, env: &mut Env) -> Result<ExecReport> {
+        self.dispatch(env, false)
+    }
+
+    fn run_pjrt(&mut self, env: &mut Env) -> Result<Vec<f32>> {
+        let rt = self
+            .runtime
+            .as_mut()
+            .ok_or_else(|| EmberError::Runtime("PJRT instance lost its runtime".into()))?;
+        let (name, args) = pjrt_call(&self.op, env, rt)?;
+        rt.execute_f32(&name, &args)
+    }
+
+    fn pooled_interp(&mut self) -> Result<&mut Interp> {
+        self.interp
+            .as_mut()
+            .ok_or_else(|| EmberError::Runtime("executor has no interpreter backend".into()))
+    }
+
+    fn dispatch(&mut self, env: &mut Env, collect_output: bool) -> Result<ExecReport> {
+        let t0 = Instant::now();
+        self.runs += 1;
+        // Backend is Copy: matching by value keeps `self` free for the
+        // &mut calls inside the arms
+        let report = match self.backend {
+            Backend::Interp | Backend::HandOpt => {
+                let interp = self.pooled_interp()?;
+                interp.reset();
+                interp.run(env, &mut NullSink)?;
+                ExecReport {
+                    backend: self.backend.name(),
+                    output: if collect_output { env.tensor("out")?.as_f32() } else { Vec::new() },
+                    wall: t0.elapsed(),
+                    sim: None,
+                }
+            }
+            Backend::DaeSim(cfg) => {
+                let mut sim = DaeSim::new(cfg);
+                let interp = self.pooled_interp()?;
+                interp.reset();
+                interp.run(env, &mut sim)?;
+                ExecReport {
+                    backend: self.backend.name(),
+                    output: if collect_output { env.tensor("out")?.as_f32() } else { Vec::new() },
+                    wall: t0.elapsed(),
+                    sim: Some(SimStats::collect(&sim, cfg.access.is_some())),
+                }
+            }
+            Backend::Pjrt => {
+                let output = self.run_pjrt(env)?;
+                ExecReport {
+                    backend: self.backend.name(),
+                    output,
+                    wall: t0.elapsed(),
+                    sim: None,
+                }
+            }
+        };
+        Ok(report)
+    }
+}
+
+impl Executor for Instance {
+    fn op_class(&self) -> &OpClass {
+        &self.op
+    }
+
+    fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    fn run_env(&mut self, env: &mut Env) -> Result<ExecReport> {
+        self.dispatch(env, true)
+    }
+}
+
+// ---------------------------------------------------------- PJRT lowering
+
+fn i32_data(t: &Tensor) -> Vec<i32> {
+    match &t.buf {
+        Buf::I32(v) => v.clone(),
+        Buf::F32(v) => v.iter().map(|&x| x as i32).collect(),
+    }
+}
+
+/// Lower an op's `Env` operands into the `(artifact, args)` calling
+/// convention of the AOT modules `python/compile/aot.py` emits. CSR
+/// segments become the padded `[batch, max_lookups]` index/length form
+/// the Pallas kernels take (geometry from the manifest when present).
+fn pjrt_call(op: &OpClass, env: &Env, rt: &Runtime) -> Result<(String, Vec<ArgData>)> {
+    match op {
+        OpClass::Sls | OpClass::Spmm => {
+            let table = env.tensor("table")?;
+            let ptrs = i32_data(env.tensor("ptrs")?);
+            let idxs = i32_data(env.tensor("idxs")?);
+            let batch = ptrs.len().saturating_sub(1);
+            let data_maxl = ptrs
+                .windows(2)
+                .map(|w| (w[1] - w[0]) as usize)
+                .max()
+                .unwrap_or(0);
+            // the artifact's static geometry wins: oversized bags are a
+            // caller error, reported up front instead of as an opaque
+            // PJRT shape failure
+            let maxl = match rt.manifest_usize(&["dlrm", "max_lookups"]) {
+                Some(m) if data_maxl > m => {
+                    return Err(EmberError::Runtime(format!(
+                        "batch has a {data_maxl}-lookup bag but the artifact was \
+                         compiled for max_lookups {m}"
+                    )))
+                }
+                Some(m) => m,
+                None => data_maxl.max(1),
+            };
+            let mut pidx = vec![0i32; batch * maxl];
+            let mut lens = vec![0i32; batch];
+            // padded weights only exist on the weighted (Spmm) path —
+            // unweighted SLS never allocates them
+            let weights = match op {
+                OpClass::Spmm => Some(env.tensor("weights")?),
+                _ => None,
+            };
+            let mut pw = weights.map(|_| vec![0f32; batch * maxl]);
+            for b in 0..batch {
+                let (s, e) = (ptrs[b] as usize, ptrs[b + 1] as usize);
+                lens[b] = (e - s) as i32;
+                for (j, p) in (s..e).enumerate() {
+                    pidx[b * maxl + j] = idxs[p];
+                    if let (Some(pw), Some(w)) = (pw.as_mut(), weights) {
+                        pw[b * maxl + j] = w.buf.get_f(p);
+                    }
+                }
+            }
+            let mut args = vec![
+                ArgData::f32(table.as_f32(), &table.dims),
+                ArgData::i32(pidx, &[batch, maxl]),
+                ArgData::i32(lens, &[batch]),
+            ];
+            let name = if let Some(pw) = pw {
+                args.push(ArgData::f32(pw, &[batch, maxl]));
+                "sls_weighted"
+            } else {
+                "sls_rm1"
+            };
+            Ok((name.to_string(), args))
+        }
+        OpClass::SpAttn { .. } => {
+            let keys = env.tensor("keys")?;
+            let bidx = i32_data(env.tensor("bidx")?);
+            let n = bidx.len();
+            Ok((
+                "bigbird_gather".to_string(),
+                vec![
+                    ArgData::f32(keys.as_f32(), &keys.dims),
+                    ArgData::i32(bidx, &[n]),
+                ],
+            ))
+        }
+        other => Err(EmberError::Runtime(format!(
+            "no AOT PJRT artifact for op class {other:?} (see python/compile/aot.py)"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::formats::Csr;
+    use crate::session::EmberSession;
+    use crate::util::rng::Rng;
+
+    fn workload() -> (Csr, Tensor) {
+        let mut rng = Rng::new(4);
+        let table = Tensor::f32(vec![32, 8], rng.normal_vec(32 * 8, 1.0));
+        let rows: Vec<Vec<i32>> =
+            (0..6).map(|_| (0..4).map(|_| rng.below(32) as i32).collect()).collect();
+        (Csr::from_rows(32, &rows), table)
+    }
+
+    #[test]
+    fn instance_runs_and_pools_state() {
+        let (csr, table) = workload();
+        let mut session = EmberSession::default();
+        let mut inst = session.instantiate(&OpClass::Sls, Backend::Interp).unwrap();
+        let a = inst.run(&mut Bindings::sls(&csr, &table)).unwrap();
+        let b = inst.run(&mut Bindings::sls(&csr, &table)).unwrap();
+        assert_eq!(a.output, b.output, "pooled reuse must not change numerics");
+        assert_eq!(inst.runs(), 2);
+        assert!(a.sim.is_none());
+        assert_eq!(a.backend, "interp");
+    }
+
+    #[test]
+    fn dae_sim_backend_reports_machine_stats() {
+        let (csr, table) = workload();
+        let mut session = EmberSession::default();
+        let mut inst = session
+            .instantiate(&OpClass::Sls, Backend::DaeSim(MachineConfig::dae_tmu()))
+            .unwrap();
+        let r = inst.run(&mut Bindings::sls(&csr, &table)).unwrap();
+        let sim = r.sim.expect("DaeSim must attach stats");
+        assert!(sim.cycles > 0);
+        assert!(sim.joules > 0.0);
+        assert!(sim.mem_reads > 0);
+    }
+
+    #[test]
+    fn mismatched_bindings_are_rejected() {
+        let (csr, table) = workload();
+        let mut session = EmberSession::default();
+        let mut inst = session.instantiate(&OpClass::Mp, Backend::Interp).unwrap();
+        let err = inst.run(&mut Bindings::sls(&csr, &table)).unwrap_err();
+        assert!(err.to_string().contains("compiled for"), "{err}");
+    }
+
+    #[test]
+    fn pjrt_backend_without_feature_reports_runtime_error() {
+        let (csr, table) = workload();
+        let mut session = EmberSession::default();
+        let program = session.compile(&OpClass::Sls).unwrap();
+        let rt = Runtime::new("nonexistent-artifacts-dir").unwrap();
+        if rt.can_execute() {
+            return; // real PJRT build: covered by integration tests
+        }
+        let mut inst = Instance::with_runtime(&program, rt).unwrap();
+        let err = inst.run(&mut Bindings::sls(&csr, &table)).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn handopt_backend_reorders_but_matches_interp() {
+        let (csr, table) = workload();
+        let mut session = EmberSession::default();
+        let mut fast = session.instantiate(&OpClass::Sls, Backend::Interp).unwrap();
+        let mut hand = session.instantiate(&OpClass::Sls, Backend::HandOpt).unwrap();
+        let a = fast.run(&mut Bindings::sls(&csr, &table)).unwrap();
+        let b = hand.run(&mut Bindings::sls(&csr, &table)).unwrap();
+        assert_eq!(a.output, b.output);
+    }
+}

@@ -68,29 +68,16 @@ impl Csr {
 
     /// Bind this CSR and an embedding table into an `Env` using the
     /// canonical memref names of the SLS/SpMM SCF functions.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use `exec::Bindings::sls` / `exec::Bindings::spmm`"
+    )]
     pub fn bind_sls_env(&self, table: &Tensor, weighted: bool) -> Env {
-        let mut env = Env::new();
-        env.bind_tensor("ptrs", Tensor::i32(vec![self.ptrs.len()], self.ptrs.clone()));
-        env.bind_tensor("idxs", Tensor::i32(vec![self.idxs.len().max(1)], {
-            if self.idxs.is_empty() { vec![0] } else { self.idxs.clone() }
-        }));
         if weighted {
-            let vals = if self.vals.is_empty() {
-                vec![1.0f32; self.idxs.len().max(1)]
-            } else {
-                self.vals.clone()
-            };
-            env.bind_tensor("weights", Tensor::f32(vec![vals.len()], vals));
+            crate::exec::Bindings::spmm(self, table).into_env()
+        } else {
+            crate::exec::Bindings::sls(self, table).into_env()
         }
-        env.bind_tensor("table", table.clone());
-        env.bind_tensor(
-            "out",
-            Tensor::zeros(vec![self.num_rows, table.dims[1]]),
-        );
-        env.bind_sym("num_batches", self.num_rows as i64);
-        env.bind_sym("emb_len", table.dims[1] as i64);
-        env.assign_addresses();
-        env
     }
 }
 
@@ -102,15 +89,12 @@ pub struct FlatLookups {
 }
 
 impl FlatLookups {
+    /// The semiring only affects compute handlers, never the operand
+    /// env, so the shim binds through the `PlusTimes` constructor.
+    #[deprecated(since = "0.3.0", note = "use `exec::Bindings::kg`")]
     pub fn bind_kg_env(&self, table: &Tensor) -> Env {
-        let mut env = Env::new();
-        env.bind_tensor("idxs", Tensor::i32(vec![self.idxs.len()], self.idxs.clone()));
-        env.bind_tensor("table", table.clone());
-        env.bind_tensor("out", Tensor::zeros(vec![self.idxs.len(), table.dims[1]]));
-        env.bind_sym("num_queries", self.idxs.len() as i64);
-        env.bind_sym("emb_len", table.dims[1] as i64);
-        env.assign_addresses();
-        env
+        crate::exec::Bindings::kg(crate::frontend::Semiring::PlusTimes, self, table)
+            .into_env()
     }
 }
 
@@ -124,40 +108,17 @@ pub struct BlockGathers {
 }
 
 impl BlockGathers {
+    #[deprecated(since = "0.3.0", note = "use `exec::Bindings::spattn`")]
     pub fn bind_spattn_env(&self, keys: &Tensor) -> Env {
-        assert_eq!(keys.dims[0], self.num_key_blocks * self.block);
-        let mut env = Env::new();
-        env.bind_tensor(
-            "bidx",
-            Tensor::i32(vec![self.block_idxs.len()], self.block_idxs.clone()),
-        );
-        env.bind_tensor("keys", keys.clone());
-        env.bind_tensor(
-            "out",
-            Tensor::zeros(vec![self.block_idxs.len() * self.block, keys.dims[1]]),
-        );
-        env.bind_sym("num_gathers", self.block_idxs.len() as i64);
-        env.bind_sym("block", self.block as i64);
-        env.bind_sym("emb_len", keys.dims[1] as i64);
-        env.assign_addresses();
-        env
+        crate::exec::Bindings::spattn(self, keys).into_env()
     }
 }
 
 /// MP (FusedMM message passing) shares the CSR layout; its env also
 /// needs the feature matrix under the `h` name.
+#[deprecated(since = "0.3.0", note = "use `exec::Bindings::mp`")]
 pub fn bind_mp_env(csr: &Csr, feats: &Tensor) -> Env {
-    let mut env = Env::new();
-    env.bind_tensor("ptrs", Tensor::i32(vec![csr.ptrs.len()], csr.ptrs.clone()));
-    env.bind_tensor("idxs", Tensor::i32(vec![csr.idxs.len().max(1)], {
-        if csr.idxs.is_empty() { vec![0] } else { csr.idxs.clone() }
-    }));
-    env.bind_tensor("h", feats.clone());
-    env.bind_tensor("out", Tensor::zeros(vec![csr.num_rows, feats.dims[1]]));
-    env.bind_sym("num_nodes", csr.num_rows as i64);
-    env.bind_sym("emb_len", feats.dims[1] as i64);
-    env.assign_addresses();
-    env
+    crate::exec::Bindings::mp(csr, feats).into_env()
 }
 
 #[cfg(test)]
@@ -183,7 +144,10 @@ mod tests {
     }
 
     #[test]
-    fn sls_env_binds_all() {
+    #[allow(deprecated)]
+    fn sls_env_shim_binds_all() {
+        // the deprecated shim must keep producing a complete env (its
+        // byte-identity to `Bindings::sls` is pinned in tests/api_shims.rs)
         let csr = Csr::from_rows(4, &[vec![0, 1], vec![2]]);
         let table = Tensor::f32(vec![4, 2], vec![0.; 8]);
         let env = csr.bind_sls_env(&table, false);

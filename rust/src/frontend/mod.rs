@@ -5,7 +5,9 @@ pub mod formats;
 pub mod torch_like;
 
 pub use embedding_ops::{OpClass, Semiring};
-pub use formats::{bind_mp_env, BlockGathers, Csr, FlatLookups};
+#[allow(deprecated)]
+pub use formats::bind_mp_env;
+pub use formats::{BlockGathers, Csr, FlatLookups};
 pub use torch_like::{BlockGather, EmbeddingBag, GraphAggregate, KgLookup, SparseLengthsSum};
 
 use crate::ir::scf::ScfFunc;

@@ -123,8 +123,9 @@ pub fn fig18(seed: u64) -> Result<Report> {
 pub fn fig19(seed: u64) -> Result<Report> {
     use super::motivation::{feats_of, head_csr, ROW_CAP};
     use crate::data::Tensor;
-    use crate::frontend::formats::bind_mp_env;
+    use crate::exec::Bindings;
     use crate::util::rng::Rng;
+    use std::sync::Arc;
 
     let mut r = Report::new(
         "fig19",
@@ -145,7 +146,8 @@ pub fn fig19(seed: u64) -> Result<Report> {
         let mut session = EmberSession::with_options(CompileOptions::with_opt(OptLevel::O3));
         let ember = session.compile(op)?;
         let mut hand = (*session.compile(op)?).clone();
-        reorder_by_frequency(&mut hand.dlc);
+        // copy-on-write: the cached program keeps its original dispatch
+        reorder_by_frequency(Arc::make_mut(&mut hand.dlc));
         let mut e1 = env_builder();
         let mut e2 = env_builder();
         let a = super::simulate(&ember, dae, &mut e1)?;
@@ -170,7 +172,7 @@ pub fn fig19(seed: u64) -> Result<Report> {
             rng.normal_vec(rm.table_rows * rm.emb_len, 0.5),
         );
         let csr = rm.gen_batch(Locality::L1, seed)[0].clone();
-        compare(&mut r, "sls", &OpClass::Sls, &|| csr.bind_sls_env(&table, false))?;
+        compare(&mut r, "sls", &OpClass::Sls, &|| Bindings::sls(&csr, &table).into_env())?;
     }
     // SpMM (arxiv)
     {
@@ -178,7 +180,7 @@ pub fn fig19(seed: u64) -> Result<Report> {
         let mut rng = Rng::new(seed ^ 5);
         let csr = head_csr(&g.gen_csr(seed), ROW_CAP);
         let feats = feats_of(g, &mut rng);
-        compare(&mut r, "spmm", &OpClass::Spmm, &|| csr.bind_sls_env(&feats, true))?;
+        compare(&mut r, "spmm", &OpClass::Spmm, &|| Bindings::spmm(&csr, &feats).into_env())?;
     }
     // MP (web-Google)
     {
@@ -186,7 +188,7 @@ pub fn fig19(seed: u64) -> Result<Report> {
         let mut rng = Rng::new(seed ^ 6);
         let csr = head_csr(&g.gen_csr(seed), ROW_CAP / 2);
         let feats = feats_of(g, &mut rng);
-        compare(&mut r, "mp", &OpClass::Mp, &|| bind_mp_env(&csr, &feats))?;
+        compare(&mut r, "mp", &OpClass::Mp, &|| Bindings::mp(&csr, &feats).into_env())?;
     }
     // KG (biokg)
     {
@@ -196,7 +198,7 @@ pub fn fig19(seed: u64) -> Result<Report> {
         let table = Tensor::f32(vec![n, g.feat], rng.normal_vec(n * g.feat, 0.5));
         let fl = g.gen_kg_lookups(1024, seed);
         compare(&mut r, "kg", &OpClass::Kg(Semiring::PlusTimes), &|| {
-            fl.bind_kg_env(&table)
+            Bindings::kg(Semiring::PlusTimes, &fl, &table).into_env()
         })?;
     }
     // SpAttn (block 4): fully offloaded, identical under both configs
@@ -208,7 +210,7 @@ pub fn fig19(seed: u64) -> Result<Report> {
             Tensor::f32(vec![s.seq_len, s.emb], rng.normal_vec(s.seq_len * s.emb, 0.5));
         let g = s.gen_gathers(128, seed);
         compare(&mut r, "spattn", &OpClass::SpAttn { block: 4 }, &|| {
-            g.bind_spattn_env(&keys)
+            Bindings::spattn(&g, &keys).into_env()
         })?;
     }
 

@@ -10,15 +10,13 @@ pub mod evaluation;
 pub mod motivation;
 pub mod tables;
 
-use crate::compiler::passes::pipeline::{
-    compile_with_trace, CompileOptions, CompiledProgram, OptLevel,
-};
-use crate::dae::engine::DaeSim;
+use crate::compiler::passes::pipeline::{CompileOptions, CompiledProgram, OptLevel};
 use crate::dae::MachineConfig;
 use crate::data::Env;
 use crate::error::{EmberError, Result};
+use crate::exec::{Backend, Instance};
 use crate::frontend::embedding_ops::OpClass;
-use crate::interp::Interp;
+use crate::session::EmberSession;
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::fmt;
@@ -122,50 +120,17 @@ impl fmt::Display for Report {
     }
 }
 
-/// Measured outcome of one simulated run.
-#[derive(Debug, Clone)]
-pub struct RunResult {
-    pub cycles: u64,
-    pub seconds: f64,
-    pub watts: f64,
-    pub joules: f64,
-    pub bw_util: f64,
-    pub loads_per_cycle: f64,
-    pub mean_inflight: f64,
-    pub lat_hist: [u64; 6],
-    pub mem_reads: u64,
-    pub queue_write_bps: f64,
-    pub queue_read_bps: f64,
-    pub llc_lookups: u64,
-    pub l2_hits: u64,
-    pub tokens: u64,
-    pub dram_bytes: u64,
-}
+/// Measured outcome of one simulated run — the executor layer's
+/// [`crate::exec::SimStats`] under its historical harness name.
+pub type RunResult = crate::exec::SimStats;
 
-/// Run a compiled program on a machine over an environment.
+/// Run a compiled program on a machine over an environment, through the
+/// unified executor layer ([`Backend::DaeSim`]).
 pub fn simulate(prog: &CompiledProgram, cfg: MachineConfig, env: &mut Env) -> Result<RunResult> {
-    let mut sim = DaeSim::new(cfg);
-    let mut interp = Interp::new(&prog.dlc)?;
-    interp.run(env, &mut sim)?;
-    let lookup_unit =
-        if cfg.access.is_some() { sim.access_stats() } else { sim.exec_stats() };
-    Ok(RunResult {
-        cycles: sim.cycles(),
-        seconds: sim.seconds(),
-        watts: sim.watts(),
-        joules: sim.joules(),
-        bw_util: sim.bw_utilization(),
-        loads_per_cycle: sim.loads_per_cycle(),
-        mean_inflight: sim.mean_inflight(),
-        lat_hist: lookup_unit.lat_hist,
-        mem_reads: lookup_unit.mem_reads,
-        queue_write_bps: sim.queue_write_throughput(),
-        queue_read_bps: sim.queue_read_throughput(),
-        llc_lookups: sim.memory.stats.llc_lookups,
-        l2_hits: sim.memory.stats.l2_hits,
-        tokens: sim.tokens,
-        dram_bytes: sim.memory.stats.dram_bytes,
-    })
+    let mut exec = Instance::new(prog, Backend::DaeSim(cfg))?;
+    // stats-only run: the figure sweeps never read the output tensor
+    let report = exec.run_env_stats(env)?;
+    Ok(report.sim.expect("DaeSim backend always attaches machine stats"))
 }
 
 /// Compile + run an op on a machine. Coupled machines (no access unit)
@@ -179,8 +144,10 @@ pub fn run_op(
     env: &mut Env,
 ) -> Result<RunResult> {
     let effective = if cfg.access.is_none() && opt > OptLevel::O1 { OptLevel::O1 } else { opt };
-    let (prog, _) = compile_with_trace(op, CompileOptions::with_opt(effective))?;
-    simulate(&prog, cfg, env)
+    let mut session = EmberSession::with_options(CompileOptions::with_opt(effective));
+    let mut exec = session.instantiate(op, Backend::DaeSim(cfg))?;
+    let report = exec.run_env_stats(env)?;
+    Ok(report.sim.expect("DaeSim backend always attaches machine stats"))
 }
 
 /// Geometric mean helper.

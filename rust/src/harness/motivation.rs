@@ -5,8 +5,9 @@ use crate::compiler::passes::pipeline::OptLevel;
 use crate::dae::MachineConfig;
 use crate::data::Tensor;
 use crate::error::Result;
+use crate::exec::Bindings;
 use crate::frontend::embedding_ops::{OpClass, Semiring};
-use crate::frontend::formats::{bind_mp_env, Csr};
+use crate::frontend::formats::Csr;
 use crate::util::rng::Rng;
 use crate::workloads::dlrm::{Locality, RM1};
 use crate::workloads::graphs::{spec, GraphSpec};
@@ -40,8 +41,9 @@ pub fn run_gnn(g: &GraphSpec, cfg: MachineConfig, opt: OptLevel, seed: u64) -> R
     let mut rng = Rng::new(seed);
     let csr = head_csr(&g.gen_csr(seed), ROW_CAP);
     let feats = feats_of(g, &mut rng);
-    let mut env = csr.bind_sls_env(&feats, true);
-    // rename: spmm uses `table` memref name via bind_sls_env; weights=1
+    // spmm binds the feature matrix under the `table` memref; implicit
+    // weights of 1.0 when the CSR carries no values
+    let mut env = Bindings::spmm(&csr, &feats).into_env();
     run_op(&OpClass::Spmm, opt, cfg, &mut env)
 }
 
@@ -50,7 +52,7 @@ pub fn run_mp(g: &GraphSpec, cfg: MachineConfig, opt: OptLevel, seed: u64) -> Re
     let mut rng = Rng::new(seed);
     let csr = head_csr(&g.gen_csr(seed), ROW_CAP / 2);
     let feats = feats_of(g, &mut rng);
-    let mut env = bind_mp_env(&csr, &feats);
+    let mut env = Bindings::mp(&csr, &feats).into_env();
     run_op(&OpClass::Mp, opt, cfg, &mut env)
 }
 
@@ -60,7 +62,7 @@ pub fn run_kg(g: &GraphSpec, cfg: MachineConfig, opt: OptLevel, seed: u64) -> Re
     let n = g.scaled_nodes();
     let table = Tensor::f32(vec![n, g.feat], rng.normal_vec(n * g.feat, 0.5));
     let fl = g.gen_kg_lookups(1024, seed);
-    let mut env = fl.bind_kg_env(&table);
+    let mut env = Bindings::kg(Semiring::PlusTimes, &fl, &table).into_env();
     run_op(&OpClass::Kg(Semiring::PlusTimes), opt, cfg, &mut env)
 }
 
@@ -89,7 +91,7 @@ pub fn run_spattn_cfg(
         rng.normal_vec(s.seq_len * s.emb, 0.5),
     );
     let g = s.gen_gathers(128, seed);
-    let mut env = g.bind_spattn_env(&keys);
+    let mut env = Bindings::spattn(&g, &keys).into_env();
     let effective = if cfg.access.is_none() && opt > OptLevel::O1 { OptLevel::O1 } else { opt };
     let (prog, _) = compile_with_trace(
         &OpClass::SpAttn { block },
@@ -110,7 +112,7 @@ pub fn run_dlrm(
     let table =
         Tensor::f32(vec![rm.table_rows, rm.emb_len], rng.normal_vec(rm.table_rows * rm.emb_len, 0.5));
     let csr = &rm.gen_batch(loc, seed)[0];
-    let mut env = csr.bind_sls_env(&table, false);
+    let mut env = Bindings::sls(csr, &table).into_env();
     run_op(&OpClass::Sls, opt, cfg_m, &mut env)
 }
 

@@ -18,13 +18,16 @@ use crate::error::Result;
 use crate::frontend::embedding_ops::OpClass;
 use crate::ir::dlc::{DlcOp, DlcProgram};
 
-/// Build the hand-optimized reference program for an op class.
+/// Build the hand-optimized reference program for an op class. The
+/// executor layer exposes the same transform as
+/// [`crate::exec::Backend::HandOpt`] over an already-compiled program.
 pub fn ref_dae(op: &OpClass, vlen: u32) -> Result<CompiledProgram> {
     let (mut p, _) = compile_with_trace(
         op,
         CompileOptions { opt: OptLevel::O3, vlen, ..Default::default() },
     )?;
-    reorder_by_frequency(&mut p.dlc);
+    // freshly compiled: the Arc is unshared, make_mut never clones
+    reorder_by_frequency(std::sync::Arc::make_mut(&mut p.dlc));
     Ok(p)
 }
 
@@ -61,8 +64,8 @@ pub fn reorder_by_frequency(prog: &mut DlcProgram) {
 mod tests {
     use super::*;
     use crate::data::Tensor;
+    use crate::exec::{Backend, Bindings, Executor, Instance};
     use crate::frontend::formats::Csr;
-    use crate::interp::run_program;
     use crate::util::rng::Rng;
 
     #[test]
@@ -77,11 +80,15 @@ mod tests {
             compile_with_trace(&OpClass::Sls, CompileOptions::with_opt(OptLevel::O3)).unwrap().0;
         let handopt = ref_dae(&OpClass::Sls, 4).unwrap();
 
-        let mut e1 = csr.bind_sls_env(&table, false);
-        let mut e2 = csr.bind_sls_env(&table, false);
-        let a = run_program(&opt3.dlc, &mut e1).unwrap();
-        let b = run_program(&handopt.dlc, &mut e2).unwrap();
-        assert_eq!(a, b);
+        let a = Instance::new(&opt3, Backend::Interp)
+            .unwrap()
+            .run(&mut Bindings::sls(&csr, &table))
+            .unwrap();
+        let b = Instance::new(&handopt, Backend::Interp)
+            .unwrap()
+            .run(&mut Bindings::sls(&csr, &table))
+            .unwrap();
+        assert_eq!(a.output, b.output);
     }
 
     #[test]

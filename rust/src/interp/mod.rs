@@ -21,6 +21,7 @@ use crate::ir::compute::{CExpr, CStmt};
 use crate::ir::dlc::{DlcOp, DlcProgram, DlcVal, PushSrc};
 use crate::ir::types::{BinOp, Event, MemHint, Scalar};
 use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 
 /// Which unit performed a memory access.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -137,9 +138,12 @@ enum BodyItem {
     Loop(LoopNode),
 }
 
-/// Interpreter state.
-pub struct Interp<'p> {
-    prog: &'p DlcProgram,
+/// Interpreter state. Owns its program (a cheap `Arc` share of the
+/// [`crate::compiler::passes::pipeline::CompiledProgram`]'s DLC), so a
+/// pooled interpreter and the program it runs can live together in one
+/// executor handle ([`crate::exec::Instance`]) with no borrow tie.
+pub struct Interp {
+    prog: Arc<DlcProgram>,
     root: LoopNode,
     /// Current stream values (access side), indexed by interned id.
     streams: Vec<Option<Val>>,
@@ -172,9 +176,13 @@ enum Arg {
     Str(u32),
 }
 
-impl<'p> Interp<'p> {
-    pub fn new(prog: &'p DlcProgram) -> Result<Self> {
-        let root = build_tree(prog)?;
+impl Interp {
+    /// Build the interpreter for a program. Takes `&Arc` (rather than
+    /// `&DlcProgram`) so every existing `Interp::new(&prog.dlc)` call
+    /// site keeps compiling while the interpreter shares ownership.
+    pub fn new(prog: &Arc<DlcProgram>) -> Result<Self> {
+        let prog = Arc::clone(prog);
+        let root = build_tree(&prog)?;
         let mut core = HashMap::new();
         for (v, init) in &prog.core_vars {
             core.insert(v.clone(), Val::I(*init));
@@ -266,6 +274,7 @@ impl<'p> Interp<'p> {
             }
         }
         let n_streams = ids.len();
+        let n_tokens = prog.compute.len();
         Ok(Interp {
             prog,
             root,
@@ -273,7 +282,7 @@ impl<'p> Interp<'p> {
             buffers: vec![Vec::new(); n_streams],
             core,
             data_q: VecDeque::new(),
-            token_counts_v: vec![0; prog.compute.len()],
+            token_counts_v: vec![0; n_tokens],
             ids,
             op_deps,
             op_prod,
@@ -301,8 +310,8 @@ impl<'p> Interp<'p> {
             *c = 0;
         }
         self.core.clear();
-        // `prog` outlives &mut self — same idiom as the token handlers
-        let prog: &'p DlcProgram = self.prog;
+        // clone the Arc so the program borrow is independent of `self`
+        let prog = Arc::clone(&self.prog);
         for (v, init) in &prog.core_vars {
             self.core.insert(v.clone(), Val::I(*init));
         }
@@ -329,11 +338,15 @@ impl<'p> Interp<'p> {
 
     /// Run the program over `env`, emitting events into `sink`.
     pub fn run(&mut self, env: &mut Env, sink: &mut impl DaeSink) -> Result<()> {
+        // one Arc bump per run (not per op): the local clone keeps the
+        // program borrow independent of `self` for the whole traversal,
+        // same idiom as the mem::replace of the loop tree below
+        let prog = Arc::clone(&self.prog);
         let root = std::mem::replace(
             &mut self.root,
             LoopNode { op_idx: usize::MAX, body: Vec::new() },
         );
-        let r = self.exec_loop(&root, env, sink);
+        let r = self.exec_loop(&prog, &root, env, sink);
         self.root = root;
         r?;
         if !self.data_q.is_empty() {
@@ -362,8 +375,14 @@ impl<'p> Interp<'p> {
         }
     }
 
-    fn exec_loop(&mut self, node: &LoopNode, env: &mut Env, sink: &mut impl DaeSink) -> Result<()> {
-        let DlcOp::LoopTr { stride, vlen, .. } = &self.prog.lookup[node.op_idx] else {
+    fn exec_loop(
+        &mut self,
+        prog: &DlcProgram,
+        node: &LoopNode,
+        env: &mut Env,
+        sink: &mut impl DaeSink,
+    ) -> Result<()> {
+        let DlcOp::LoopTr { stride, vlen, .. } = &prog.lookup[node.op_idx] else {
             return Err(EmberError::Interp("loop node is not a LoopTr".into()));
         };
         let (stride, vlen) = (*stride, *vlen);
@@ -371,7 +390,7 @@ impl<'p> Interp<'p> {
         let (lo, hi) = (self.resolve_arg(&args[0], env)?, self.resolve_arg(&args[1], env)?);
 
         // Beg events
-        self.run_events(node, Event::Beg, env, sink)?;
+        self.run_events(prog, node, Event::Beg, env, sink)?;
 
         let iv_id = self.op_prod[node.op_idx];
         let bound_deps = self.op_deps[node.op_idx].clone();
@@ -388,15 +407,15 @@ impl<'p> Interp<'p> {
             }
             for item in &node.body {
                 match item {
-                    BodyItem::Op(idx) => self.exec_op(*idx, env, sink)?,
-                    BodyItem::Loop(child) => self.exec_loop(child, env, sink)?,
+                    BodyItem::Op(idx) => self.exec_op(prog, *idx, env, sink)?,
+                    BodyItem::Loop(child) => self.exec_loop(prog, child, env, sink)?,
                 }
             }
             i += step;
         }
 
         // End events
-        self.run_events(node, Event::End, env, sink)?;
+        self.run_events(prog, node, Event::End, env, sink)?;
         Ok(())
     }
 
@@ -404,6 +423,7 @@ impl<'p> Interp<'p> {
     /// (Beg/End only; Ite ops run inline in body order).
     fn run_events(
         &mut self,
+        prog: &DlcProgram,
         node: &LoopNode,
         event: Event,
         env: &mut Env,
@@ -411,11 +431,11 @@ impl<'p> Interp<'p> {
     ) -> Result<()> {
         for item in &node.body {
             if let BodyItem::Op(idx) = item {
-                match &self.prog.lookup[*idx] {
+                match &prog.lookup[*idx] {
                     DlcOp::PushOp { event: e, .. } | DlcOp::CallbackTok { event: e, .. }
                         if *e == event =>
                     {
-                        self.exec_op_forced(*idx, env, sink)?;
+                        self.exec_op_forced(prog, *idx, env, sink)?;
                     }
                     _ => {}
                 }
@@ -424,10 +444,16 @@ impl<'p> Interp<'p> {
         Ok(())
     }
 
-    fn exec_op(&mut self, idx: usize, env: &mut Env, sink: &mut impl DaeSink) -> Result<()> {
+    fn exec_op(
+        &mut self,
+        prog: &DlcProgram,
+        idx: usize,
+        env: &mut Env,
+        sink: &mut impl DaeSink,
+    ) -> Result<()> {
         // Ite-event marshaling ops run inline; Beg/End are skipped here
         // and handled by run_events.
-        match &self.prog.lookup[idx] {
+        match &prog.lookup[idx] {
             DlcOp::PushOp { event, .. } | DlcOp::CallbackTok { event, .. }
                 if *event != Event::Ite =>
             {
@@ -435,11 +461,17 @@ impl<'p> Interp<'p> {
             }
             _ => {}
         }
-        self.exec_op_forced(idx, env, sink)
+        self.exec_op_forced(prog, idx, env, sink)
     }
 
-    fn exec_op_forced(&mut self, idx: usize, env: &mut Env, sink: &mut impl DaeSink) -> Result<()> {
-        let op = &self.prog.lookup[idx];
+    fn exec_op_forced(
+        &mut self,
+        prog: &DlcProgram,
+        idx: usize,
+        env: &mut Env,
+        sink: &mut impl DaeSink,
+    ) -> Result<()> {
+        let op = &prog.lookup[idx];
         match op {
             DlcOp::LoopTr { .. } => unreachable!("loops run via exec_loop"),
             DlcOp::MemStr { mem, vlen, hint, .. } => {
@@ -538,8 +570,6 @@ impl<'p> Interp<'p> {
                 sink.queue_ctrl(tid);
                 sink.exec_dispatch(tid);
                 self.token_counts_v[tid as usize] += 1;
-                // `prog` outlives &mut self — no handler clone needed
-                let prog: &'p DlcProgram = self.prog;
                 let handler = &prog.compute[tid as usize];
                 for stmt in &handler.body {
                     self.exec_cstmt(stmt, env, sink)?;
@@ -826,8 +856,17 @@ fn build_tree(prog: &DlcProgram) -> Result<LoopNode> {
     Ok(collect(prog, root_idx))
 }
 
-/// Convenience: compile-and-run helper returning the `out` tensor data.
-pub fn run_program(prog: &DlcProgram, env: &mut Env) -> Result<Vec<f32>> {
+/// Convenience: run a program functionally, returning the `out` tensor.
+///
+/// Superseded by the unified executor layer: build an
+/// [`crate::exec::Instance`] on [`crate::exec::Backend::Interp`] (or
+/// call [`crate::session::EmberSession::instantiate`]) and `run` it.
+/// This shim stays byte-identical to that path (`tests/api_shims.rs`).
+#[deprecated(
+    since = "0.3.0",
+    note = "use `exec::Instance` (e.g. `EmberSession::instantiate(op, Backend::Interp)`)"
+)]
+pub fn run_program(prog: &Arc<DlcProgram>, env: &mut Env) -> Result<Vec<f32>> {
     let mut interp = Interp::new(prog)?;
     interp.run(env, &mut NullSink)?;
     Ok(env.tensor("out")?.as_f32())
@@ -840,13 +879,24 @@ mod tests {
         compile_with_trace, CompileOptions, CompiledProgram, OptLevel,
     };
     use crate::data::Tensor;
+    use crate::exec::{Backend, Bindings, Executor, Instance};
     use crate::frontend::embedding_ops::{OpClass, Semiring};
-    use crate::frontend::formats::{bind_mp_env, BlockGathers, Csr, FlatLookups};
+    use crate::frontend::formats::{BlockGathers, Csr, FlatLookups};
     use crate::util::rng::Rng;
 
     /// One-shot pipeline helper (the old `compile` free function).
     fn compile(op: &OpClass, opts: CompileOptions) -> crate::error::Result<CompiledProgram> {
         compile_with_trace(op, opts).map(|(p, _)| p)
+    }
+
+    /// Functional run through the executor layer (what the deprecated
+    /// `run_program` shim delegates to numerically).
+    fn run_functional(
+        prog: &CompiledProgram,
+        env: &mut Env,
+    ) -> crate::error::Result<Vec<f32>> {
+        let mut exec = Instance::new(prog, Backend::Interp)?;
+        Ok(exec.run_env(env)?.output)
     }
 
     fn rand_csr(rng: &mut Rng, rows: usize, cols: usize, max_deg: usize) -> Csr {
@@ -887,8 +937,8 @@ mod tests {
         let want = sls_ref(&csr, &table, false);
         for opt in OptLevel::ALL {
             let prog = compile(&OpClass::Sls, CompileOptions::with_opt(opt)).unwrap();
-            let mut env = csr.bind_sls_env(&table, false);
-            let got = run_program(&prog.dlc, &mut env).unwrap();
+            let mut env = Bindings::sls(&csr, &table).into_env();
+            let got = run_functional(&prog, &mut env).unwrap();
             crate::util::quick::allclose(&got, &want, 1e-5, 1e-5)
                 .unwrap_or_else(|e| panic!("{opt}: {e}"));
         }
@@ -904,8 +954,8 @@ mod tests {
         let want = sls_ref(&csr, &table, true);
         for opt in OptLevel::ALL {
             let prog = compile(&OpClass::Spmm, CompileOptions::with_opt(opt)).unwrap();
-            let mut env = csr.bind_sls_env(&table, true);
-            let got = run_program(&prog.dlc, &mut env).unwrap();
+            let mut env = Bindings::spmm(&csr, &table).into_env();
+            let got = run_functional(&prog, &mut env).unwrap();
             crate::util::quick::allclose(&got, &want, 1e-4, 1e-4)
                 .unwrap_or_else(|e| panic!("{opt}: {e}"));
         }
@@ -933,8 +983,8 @@ mod tests {
         }
         for opt in OptLevel::ALL {
             let prog = compile(&OpClass::Mp, CompileOptions::with_opt(opt)).unwrap();
-            let mut env = bind_mp_env(&csr, &feats);
-            let got = run_program(&prog.dlc, &mut env).unwrap();
+            let mut env = Bindings::mp(&csr, &feats).into_env();
+            let got = run_functional(&prog, &mut env).unwrap();
             crate::util::quick::allclose(&got, &want, 1e-3, 1e-3)
                 .unwrap_or_else(|e| panic!("{opt}: {e}"));
         }
@@ -962,8 +1012,8 @@ mod tests {
             }
             for opt in OptLevel::ALL {
                 let prog = compile(&OpClass::Kg(sem), CompileOptions::with_opt(opt)).unwrap();
-                let mut env = fl.bind_kg_env(&table);
-                let got = run_program(&prog.dlc, &mut env).unwrap();
+                let mut env = Bindings::kg(sem, &fl, &table).into_env();
+                let got = run_functional(&prog, &mut env).unwrap();
                 crate::util::quick::allclose(&got, &want, 1e-6, 1e-6)
                     .unwrap_or_else(|e| panic!("{sem:?} {opt}: {e}"));
             }
@@ -978,8 +1028,8 @@ mod tests {
         let mut pooled = Interp::new(&prog.dlc).unwrap();
         for trial in 0..3 {
             let csr = rand_csr(&mut rng, 10, 64, 7);
-            let mut env_pooled = csr.bind_sls_env(&table, false);
-            let mut env_fresh = csr.bind_sls_env(&table, false);
+            let mut env_pooled = Bindings::sls(&csr, &table).into_env();
+            let mut env_fresh = Bindings::sls(&csr, &table).into_env();
             pooled.reset();
             pooled.run(&mut env_pooled, &mut NullSink).unwrap();
             let mut fresh = Interp::new(&prog.dlc).unwrap();
@@ -1014,8 +1064,8 @@ mod tests {
         for opt in OptLevel::ALL {
             let prog =
                 compile(&OpClass::SpAttn { block }, CompileOptions::with_opt(opt)).unwrap();
-            let mut env = bg.bind_spattn_env(&keys);
-            let got = run_program(&prog.dlc, &mut env).unwrap();
+            let mut env = Bindings::spattn(&bg, &keys).into_env();
+            let got = run_functional(&prog, &mut env).unwrap();
             crate::util::quick::allclose(&got, &want, 1e-6, 1e-6)
                 .unwrap_or_else(|e| panic!("{opt}: {e}"));
         }

@@ -7,15 +7,28 @@
 //! and the offline-build substitutions.
 //!
 //! Compilation enters through [`session::EmberSession`] — a cached,
-//! multi-op driver over the [`compiler::PassManager`] pipeline:
+//! multi-op driver over the [`compiler::PassManager`] pipeline — and
+//! execution through the unified [`exec`] layer: one compiled program
+//! retargets across the functional interpreter, the cycle-level DAE
+//! simulator, the hand-optimized reference, and the PJRT runtime.
 //!
 //! ```
-//! use ember::EmberSession;
-//! use ember::frontend::EmbeddingBag;
+//! use ember::{Backend, Bindings, EmberSession, Executor};
+//! use ember::frontend::{Csr, EmbeddingBag};
+//! use ember::data::Tensor;
 //!
 //! let mut session = EmberSession::default();
 //! let program = session.compile(&EmbeddingBag::new(4096, 32)).unwrap();
 //! assert!(!program.dlc.lookup.is_empty());
+//!
+//! // ...and run it: same program, any backend
+//! let mut exec = session
+//!     .instantiate(&EmbeddingBag::new(4096, 32), Backend::Interp)
+//!     .unwrap();
+//! let csr = Csr::from_rows(4096, &[vec![1, 2], vec![3]]);
+//! let table = Tensor::f32(vec![4096, 32], vec![0.1; 4096 * 32]);
+//! let report = exec.run(&mut Bindings::sls(&csr, &table)).unwrap();
+//! assert_eq!(report.output.len(), 2 * 32);
 //! ```
 
 pub mod dae;
@@ -23,6 +36,7 @@ pub mod data;
 pub mod error;
 pub mod compiler;
 pub mod coordinator;
+pub mod exec;
 pub mod frontend;
 pub mod harness;
 pub mod interp;
@@ -34,7 +48,8 @@ pub mod workloads;
 
 pub use compiler::{CompileOptions, OptLevel, PassManager, PassTrace};
 pub use error::{EmberError, Result};
+pub use exec::{Backend, Bindings, ExecReport, Executor, Instance};
 pub use frontend::Frontend;
 pub use session::{EmberSession, OpHandle};
 
-pub fn version() -> &'static str { "0.2.0" }
+pub fn version() -> &'static str { "0.3.0" }

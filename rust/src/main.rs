@@ -194,14 +194,16 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let artifacts = flags.get("artifacts").map(String::as_str).unwrap_or("artifacts");
 
     // model shape: manifest when the PJRT backend can actually execute
-    // the artifacts (load_all succeeds — a stub build with artifacts
-    // present must not route onto the erroring PJRT path), synthetic
-    // 16-table DLRM otherwise. The probe Runtime is kept alive so the
-    // per-target model builds reuse it instead of constructing a fresh
-    // PJRT client each sweep point.
+    // the artifacts (`can_execute` — the stub build loads artifacts for
+    // bookkeeping but must not route onto the erroring PJRT execute
+    // path), synthetic 16-table DLRM otherwise. The probe Runtime is
+    // kept alive so the per-target model builds reuse it instead of
+    // constructing a fresh PJRT client each sweep point.
     let mut probe = Runtime::new(artifacts).ok();
     let pjrt_ready = probe.as_mut().is_some_and(|rt| {
-        let ready = rt.load_all().is_ok() && rt.manifest_usize(&["dlrm", "batch"]).is_some();
+        let ready = rt.can_execute()
+            && rt.load_all().is_ok()
+            && rt.manifest_usize(&["dlrm", "batch"]).is_some();
         if ready {
             println!("PJRT platform: {}", rt.platform());
         }

@@ -129,6 +129,13 @@ mod backend {
             self.executables.contains_key(name)
         }
 
+        /// Whether this runtime can actually execute artifacts (true:
+        /// this is the real PJRT backend). Callers use this to gate the
+        /// PJRT serving path instead of probing `load` for errors.
+        pub fn can_execute(&self) -> bool {
+            true
+        }
+
         /// Execute `name` with `args`; returns the flattened f32 output
         /// (all modules are lowered with `return_tuple=True` and a
         /// single result).
@@ -162,32 +169,55 @@ mod backend {
     use super::{read_manifest, ArgData};
     use crate::error::{EmberError, Result};
     use crate::util::json::Json;
+    use std::collections::HashSet;
     use std::path::{Path, PathBuf};
 
-    /// Stub runtime (the `pjrt` feature is disabled): reads manifests so
-    /// shape queries work, but cannot compile or execute HLO artifacts.
+    /// Stub runtime (the `pjrt` feature is disabled): reads manifests
+    /// and *loads* (verifies + registers) artifacts so shape queries
+    /// and `is_loaded` bookkeeping behave exactly like the real
+    /// backend's, but cannot execute HLO — `execute_f32` reports a
+    /// runtime error and [`Runtime::can_execute`] is `false`.
     pub struct Runtime {
         pub manifest: Json,
-        #[allow(dead_code)]
         dir: PathBuf,
+        /// Names successfully loaded — mirrors the real backend's
+        /// executable cache so feature-off code paths stay consistent.
+        loaded: HashSet<String>,
     }
 
     impl Runtime {
         pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
             let dir = artifacts_dir.as_ref().to_path_buf();
             let manifest = read_manifest(&dir)?;
-            Ok(Runtime { manifest, dir })
+            Ok(Runtime { manifest, dir, loaded: HashSet::new() })
         }
 
         pub fn platform(&self) -> String {
             "stub (build without `pjrt` feature)".to_string()
         }
 
+        /// Verify the artifact exists and register it as loaded. The
+        /// same manifest resolution as the real backend; only the HLO
+        /// compilation step is missing, which this build defers to the
+        /// `execute_f32` error.
         pub fn load(&mut self, name: &str) -> Result<()> {
-            Err(EmberError::Runtime(format!(
-                "cannot load artifact `{name}`: this build has no PJRT backend \
-                 (enable the `pjrt` cargo feature with the `xla` crate vendored)"
-            )))
+            if self.loaded.contains(name) {
+                return Ok(());
+            }
+            let file = self
+                .manifest
+                .at(&["artifacts", name, "file"])
+                .and_then(|j| j.as_str().map(|s| s.to_string()))
+                .unwrap_or_else(|| format!("{name}.hlo.txt"));
+            let path = self.dir.join(&file);
+            if !path.exists() {
+                return Err(EmberError::Runtime(format!(
+                    "cannot load artifact `{name}`: {} not found (run `make artifacts`)",
+                    path.display()
+                )));
+            }
+            self.loaded.insert(name.to_string());
+            Ok(())
         }
 
         pub fn load_all(&mut self) -> Result<Vec<String>> {
@@ -201,7 +231,13 @@ mod backend {
             Ok(names)
         }
 
-        pub fn is_loaded(&self, _name: &str) -> bool {
+        pub fn is_loaded(&self, name: &str) -> bool {
+            self.loaded.contains(name)
+        }
+
+        /// Always `false`: the stub loads artifacts but cannot execute
+        /// them. Serving paths gate on this instead of probing `load`.
+        pub fn can_execute(&self) -> bool {
             false
         }
 
@@ -220,3 +256,73 @@ mod backend {
 }
 
 pub use backend::Runtime;
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::Runtime;
+
+    /// Unique scratch dir per test (no tempfile crate offline).
+    fn scratch(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("ember-runtime-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn stub_tracks_loaded_artifacts() {
+        // regression: the stub used to answer `is_loaded == false` even
+        // after a successful load()/load_all()
+        let dir = scratch("loaded");
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": {"dlrm_mlp": {"file": "dlrm_mlp.hlo.txt"}}}"#,
+        )
+        .unwrap();
+        std::fs::write(dir.join("dlrm_mlp.hlo.txt"), "HloModule dlrm_mlp").unwrap();
+
+        let mut rt = Runtime::new(&dir).unwrap();
+        assert!(!rt.is_loaded("dlrm_mlp"));
+        rt.load("dlrm_mlp").unwrap();
+        assert!(rt.is_loaded("dlrm_mlp"), "load() must register the artifact");
+        // idempotent
+        rt.load("dlrm_mlp").unwrap();
+
+        // loading still cannot execute without the pjrt feature
+        assert!(!rt.can_execute());
+        let err = rt.execute_f32("dlrm_mlp", &[]).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+
+        // a missing artifact neither loads nor registers
+        assert!(rt.load("nope").is_err());
+        assert!(!rt.is_loaded("nope"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stub_load_all_registers_every_manifest_artifact() {
+        let dir = scratch("load-all");
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": {"a": {"file": "a.hlo.txt"}, "b": {"file": "b.hlo.txt"}}}"#,
+        )
+        .unwrap();
+        std::fs::write(dir.join("a.hlo.txt"), "HloModule a").unwrap();
+        std::fs::write(dir.join("b.hlo.txt"), "HloModule b").unwrap();
+        let mut rt = Runtime::new(&dir).unwrap();
+        let mut names = rt.load_all().unwrap();
+        names.sort();
+        assert_eq!(names, vec!["a".to_string(), "b".to_string()]);
+        assert!(rt.is_loaded("a") && rt.is_loaded("b"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stub_with_no_artifacts_dir_stays_inert() {
+        let mut rt = Runtime::new("definitely-not-a-real-dir").unwrap();
+        assert_eq!(rt.load_all().unwrap(), Vec::<String>::new());
+        assert!(!rt.is_loaded("anything"));
+        assert!(!rt.can_execute());
+    }
+}

@@ -28,6 +28,7 @@
 use crate::compiler::pass_manager::{DumpHook, PassTrace};
 use crate::compiler::passes::pipeline::{compile_scf, CompileOptions, CompiledProgram};
 use crate::error::{EmberError, Result};
+use crate::exec::{Backend, Instance};
 use crate::frontend::embedding_ops::OpClass;
 use crate::frontend::Frontend;
 use crate::ir::scf::ScfFunc;
@@ -118,6 +119,34 @@ impl EmberSession {
         self.cache.insert((op, opts), program.clone());
         self.traces.push(trace);
         Ok(program)
+    }
+
+    // ------------------------------------------------- executor path
+
+    /// Compile `front` (cache-aware) and wrap the program in an
+    /// executable [`Instance`] on `backend` — the single entry point
+    /// for running one compiled op on any target (functional
+    /// interpreter, cycle-level DAE simulation, hand-optimized
+    /// reference, PJRT runtime). The instance owns pooled run state;
+    /// reuse it across batches.
+    pub fn instantiate<F: Frontend + ?Sized>(
+        &mut self,
+        front: &F,
+        backend: Backend,
+    ) -> Result<Instance> {
+        let program = self.compile(front)?;
+        Instance::new(&program, backend)
+    }
+
+    /// [`EmberSession::instantiate`] with explicit compile options.
+    pub fn instantiate_with<F: Frontend + ?Sized>(
+        &mut self,
+        front: &F,
+        opts: CompileOptions,
+        backend: Backend,
+    ) -> Result<Instance> {
+        let program = self.compile_with(front, opts)?;
+        Instance::new(&program, backend)
     }
 
     // -------------------------------------------------- multi-op path

@@ -1,11 +1,17 @@
 //! API-redesign guarantees:
 //! * the deprecated `compile()` / `CompileOptions::at()` shims produce
 //!   byte-identical programs to the `EmberSession` path,
+//! * the deprecated `run_program()` / `bind_*_env()` shims stay
+//!   byte-identical to the `exec::{Instance, Bindings}` path,
 //! * the session cache actually dedups `(OpClass, CompileOptions)`,
 //! * the pass manager's trace matches what the shims silently did.
 
+use ember::data::{Env, Tensor};
+use ember::exec::{Backend, Bindings, Executor, Instance};
 use ember::frontend::embedding_ops::{OpClass, Semiring};
+use ember::frontend::formats::{BlockGathers, Csr, FlatLookups};
 use ember::session::EmberSession;
+use ember::util::rng::Rng;
 use ember::{CompileOptions, OptLevel};
 use std::sync::Arc;
 
@@ -56,6 +62,77 @@ fn deprecated_compile_shim_is_byte_identical_to_session() {
 fn deprecated_options_at_equals_with_opt() {
     for opt in OptLevel::ALL {
         assert_eq!(CompileOptions::at(opt), CompileOptions::with_opt(opt));
+    }
+}
+
+/// Byte-identical env comparison: same tensors (dims, data, simulated
+/// addresses) and same symbol bindings.
+fn assert_env_identical(a: &Env, b: &Env, what: &str) {
+    assert_eq!(a.tensors, b.tensors, "{what}: tensors diverged");
+    assert_eq!(a.syms, b.syms, "{what}: symbols diverged");
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_bind_env_shims_are_byte_identical_to_bindings() {
+    let mut rng = Rng::new(31);
+    let table = Tensor::f32(vec![32, 8], rng.normal_vec(32 * 8, 1.0));
+    // include an empty bag: the `.max(1)` padding now lives in one place
+    let csr = Csr::from_rows(32, &[vec![1, 5, 9], vec![], vec![31]]);
+    assert_env_identical(
+        &csr.bind_sls_env(&table, false),
+        Bindings::sls(&csr, &table).env(),
+        "sls",
+    );
+    assert_env_identical(
+        &csr.bind_sls_env(&table, true),
+        Bindings::spmm(&csr, &table).env(),
+        "spmm",
+    );
+    let weighted = csr.clone().with_vals(rng.normal_vec(csr.nnz(), 1.0));
+    assert_env_identical(
+        &weighted.bind_sls_env(&table, true),
+        Bindings::spmm(&weighted, &table).env(),
+        "spmm-weighted",
+    );
+    let feats = Tensor::f32(vec![3, 8], rng.normal_vec(24, 1.0));
+    let adj = Csr::from_rows(3, &[vec![1], vec![], vec![0, 2]]);
+    assert_env_identical(
+        &ember::frontend::formats::bind_mp_env(&adj, &feats),
+        Bindings::mp(&adj, &feats).env(),
+        "mp",
+    );
+    let fl = FlatLookups { idxs: vec![3, 0, 7], num_rows: 32 };
+    assert_env_identical(
+        &fl.bind_kg_env(&table),
+        Bindings::kg(Semiring::PlusTimes, &fl, &table).env(),
+        "kg",
+    );
+    let bg = BlockGathers { block_idxs: vec![2, 0], block: 4, num_key_blocks: 8 };
+    assert_env_identical(
+        &bg.bind_spattn_env(&table),
+        Bindings::spattn(&bg, &table).env(),
+        "spattn",
+    );
+}
+
+#[test]
+#[allow(deprecated)]
+fn deprecated_run_program_is_byte_identical_to_executor() {
+    let mut rng = Rng::new(33);
+    let table = Tensor::f32(vec![64, 16], rng.normal_vec(64 * 16, 1.0));
+    let rows: Vec<Vec<i32>> =
+        (0..8).map(|_| (0..6).map(|_| rng.below(64) as i32).collect()).collect();
+    let csr = Csr::from_rows(64, &rows);
+    let mut session = EmberSession::default();
+    for opt in OptLevel::ALL {
+        let program =
+            session.compile_with(&OpClass::Sls, CompileOptions::with_opt(opt)).unwrap();
+        let mut shim_env = csr.bind_sls_env(&table, false);
+        let old = ember::interp::run_program(&program.dlc, &mut shim_env).unwrap();
+        let mut exec = Instance::new(&program, Backend::Interp).unwrap();
+        let new = exec.run(&mut Bindings::sls(&csr, &table)).unwrap().output;
+        assert_eq!(old, new, "{opt}: run_program diverged from exec::Instance");
     }
 }
 

@@ -1,0 +1,179 @@
+//! Backend parity suite for the unified executor layer.
+//!
+//! For every `OpClass`:
+//! * `Interp`, `HandOpt`, and `DaeSim` backends must produce
+//!   byte-identical outputs from identical bindings (timing models and
+//!   dispatch reorders can never change numerics);
+//! * reusing one pooled `Instance` across batches must match a fresh
+//!   instance per batch (the `reset` pooling is numerically invisible);
+//! * zero-lookup operands (empty bags / empty query lists) execute
+//!   cleanly and produce all-zero (or empty) outputs.
+
+use ember::dae::MachineConfig;
+use ember::data::Tensor;
+use ember::exec::{Backend, Bindings, Executor, Instance};
+use ember::frontend::embedding_ops::{OpClass, Semiring};
+use ember::frontend::formats::{BlockGathers, Csr, FlatLookups};
+use ember::session::EmberSession;
+use ember::util::rng::Rng;
+
+fn rand_csr(rng: &mut Rng, rows: usize, cols: usize, max_deg: usize) -> Csr {
+    let r: Vec<Vec<i32>> = (0..rows)
+        .map(|_| {
+            let d = rng.below(max_deg as u64 + 1) as usize;
+            (0..d).map(|_| rng.below(cols as u64) as i32).collect()
+        })
+        .collect();
+    Csr::from_rows(cols, &r)
+}
+
+/// Every op class with a canonical small workload.
+fn workloads(seed: u64) -> Vec<(OpClass, Bindings)> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::new();
+
+    let table = Tensor::f32(vec![48, 12], rng.normal_vec(48 * 12, 1.0));
+    let csr = rand_csr(&mut rng, 7, 48, 6);
+    out.push((OpClass::Sls, Bindings::sls(&csr, &table)));
+
+    let weighted = rand_csr(&mut rng, 6, 48, 5);
+    let vals = rng.normal_vec(weighted.nnz(), 1.0);
+    let weighted = weighted.with_vals(vals);
+    out.push((OpClass::Spmm, Bindings::spmm(&weighted, &table)));
+
+    let feats = Tensor::f32(vec![9, 8], rng.normal_vec(72, 0.7));
+    let adj = rand_csr(&mut rng, 9, 9, 4);
+    out.push((OpClass::Mp, Bindings::mp(&adj, &feats)));
+
+    for sem in [Semiring::PlusTimes, Semiring::MaxPlus] {
+        let fl = FlatLookups {
+            idxs: (0..11).map(|_| rng.below(48) as i32).collect(),
+            num_rows: 48,
+        };
+        out.push((OpClass::Kg(sem), Bindings::kg(sem, &fl, &table)));
+    }
+
+    let keys = Tensor::f32(vec![10 * 4, 12], rng.normal_vec(10 * 4 * 12, 0.5));
+    let bg = BlockGathers {
+        block_idxs: (0..5).map(|_| rng.below(10) as i32).collect(),
+        block: 4,
+        num_key_blocks: 10,
+    };
+    out.push((OpClass::SpAttn { block: 4 }, Bindings::spattn(&bg, &keys)));
+    out
+}
+
+#[test]
+fn all_backends_agree_for_every_op_class() {
+    let mut session = EmberSession::default();
+    for (op, bindings) in workloads(7) {
+        let backends = [
+            Backend::Interp,
+            Backend::HandOpt,
+            Backend::DaeSim(MachineConfig::dae_tmu()),
+            Backend::DaeSim(MachineConfig::traditional_core()),
+        ];
+        let mut outputs: Vec<(/*name*/ &str, Vec<f32>)> = Vec::new();
+        for backend in backends {
+            let mut exec = session.instantiate(&op, backend).unwrap();
+            let mut b = bindings.clone();
+            let report = exec.run(&mut b).unwrap();
+            assert_eq!(
+                report.sim.is_some(),
+                matches!(backend, Backend::DaeSim(_)),
+                "{op:?}: sim stats iff DaeSim"
+            );
+            outputs.push((report.backend, report.output));
+        }
+        let (ref_name, ref_out) = &outputs[0];
+        for (name, out) in &outputs[1..] {
+            assert_eq!(
+                out, ref_out,
+                "{op:?}: backend `{name}` diverged from `{ref_name}`"
+            );
+        }
+    }
+}
+
+#[test]
+fn pooled_instance_reuse_matches_fresh_runs() {
+    let mut session = EmberSession::default();
+    let program = session.compile(&OpClass::Sls).unwrap();
+    let mut rng = Rng::new(19);
+    let table = Tensor::f32(vec![64, 12], rng.normal_vec(64 * 12, 1.0));
+    let mut pooled = Instance::new(&program, Backend::Interp).unwrap();
+    for trial in 0..4 {
+        let csr = rand_csr(&mut rng, 8, 64, 7);
+        let reused = pooled.run(&mut Bindings::sls(&csr, &table)).unwrap().output;
+        let mut fresh = Instance::new(&program, Backend::Interp).unwrap();
+        let once = fresh.run(&mut Bindings::sls(&csr, &table)).unwrap().output;
+        assert_eq!(reused, once, "trial {trial}: pooled instance diverged");
+    }
+    assert_eq!(pooled.runs(), 4);
+}
+
+#[test]
+fn zero_lookup_bags_execute_cleanly_for_every_op_class() {
+    let mut session = EmberSession::default();
+    let mut rng = Rng::new(23);
+    let table = Tensor::f32(vec![32, 8], rng.normal_vec(32 * 8, 1.0));
+
+    // SLS/SpMM: every bag empty (nnz == 0) and a mix of empty/non-empty
+    let all_empty = Csr::from_rows(32, &[vec![], vec![], vec![]]);
+    let mixed = Csr::from_rows(32, &[vec![3, 7], vec![], vec![31]]);
+    for (op, weighted) in [(OpClass::Sls, false), (OpClass::Spmm, true)] {
+        let bind = |c: &Csr| {
+            if weighted { Bindings::spmm(c, &table) } else { Bindings::sls(c, &table) }
+        };
+        let mut exec = session.instantiate(&op, Backend::Interp).unwrap();
+        let out = exec.run(&mut bind(&all_empty)).unwrap().output;
+        assert_eq!(out.len(), 3 * 8, "{op:?}");
+        assert!(out.iter().all(|&v| v == 0.0), "{op:?}: empty bags must sum to zero");
+        let out = exec.run(&mut bind(&mixed)).unwrap().output;
+        assert!(out[8..16].iter().all(|&v| v == 0.0), "{op:?}: empty middle bag");
+        assert!(out[..8].iter().any(|&v| v != 0.0), "{op:?}: non-empty bag");
+    }
+
+    // MP: isolated nodes (no neighbors) aggregate to zero
+    let feats = Tensor::f32(vec![4, 8], rng.normal_vec(32, 1.0));
+    let lonely = Csr::from_rows(4, &[vec![], vec![], vec![], vec![]]);
+    let mut exec = session.instantiate(&OpClass::Mp, Backend::Interp).unwrap();
+    let out = exec.run(&mut Bindings::mp(&lonely, &feats)).unwrap().output;
+    assert_eq!(out.len(), 4 * 8);
+    assert!(out.iter().all(|&v| v == 0.0), "mp: isolated nodes");
+
+    // KG: an empty query list produces an empty output
+    let none = FlatLookups { idxs: vec![], num_rows: 32 };
+    let mut exec =
+        session.instantiate(&OpClass::Kg(Semiring::PlusTimes), Backend::Interp).unwrap();
+    let out = exec
+        .run(&mut Bindings::kg(Semiring::PlusTimes, &none, &table))
+        .unwrap()
+        .output;
+    assert!(out.is_empty(), "kg: zero queries");
+
+    // SpAttn: an empty gather list produces an empty output
+    let bg = BlockGathers { block_idxs: vec![], block: 4, num_key_blocks: 8 };
+    let mut exec =
+        session.instantiate(&OpClass::SpAttn { block: 4 }, Backend::Interp).unwrap();
+    let out = exec.run(&mut Bindings::spattn(&bg, &table)).unwrap().output;
+    assert!(out.is_empty(), "spattn: zero gathers");
+}
+
+#[test]
+fn zero_lookup_bags_survive_the_simulator_too() {
+    // DaeSim over empty operands: no events, zero cycles, no panic
+    let mut session = EmberSession::default();
+    let table = Tensor::f32(vec![32, 8], vec![0.25; 32 * 8]);
+    let all_empty = Csr::from_rows(32, &[vec![], vec![]]);
+    let mut exec = session
+        .instantiate(&OpClass::Sls, Backend::DaeSim(MachineConfig::dae_tmu()))
+        .unwrap();
+    let report = exec.run(&mut Bindings::sls(&all_empty, &table)).unwrap();
+    assert_eq!(report.output.len(), 2 * 8);
+    assert!(report.output.iter().all(|&v| v == 0.0));
+    // the batch loop still walks `ptrs` (segment bounds), but no
+    // embedding rows are ever touched
+    let sim = report.sim.unwrap();
+    assert!(sim.cycles > 0, "segment-bound traversal still issues work");
+}

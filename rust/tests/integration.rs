@@ -7,6 +7,7 @@
 use ember::coordinator::{BatchOptions, Coordinator, DlrmModel, Request, Router};
 use ember::dae::MachineConfig;
 use ember::data::Tensor;
+use ember::exec::{Backend, Bindings, Executor};
 use ember::frontend::embedding_ops::OpClass;
 use ember::frontend::formats::Csr;
 use ember::harness::simulate;
@@ -64,9 +65,10 @@ fn pjrt_sls_artifact_matches_compiled_program() {
     // Ember path: compiled DLC program interpreted on the same data
     let mut session = EmberSession::default();
     for opt in OptLevel::ALL {
-        let prog = session.compile_with(&OpClass::Sls, CompileOptions::with_opt(opt)).unwrap();
-        let mut env = csr.bind_sls_env(&table, false);
-        let got = ember::interp::run_program(&prog.dlc, &mut env).unwrap();
+        let mut exec = session
+            .instantiate_with(&OpClass::Sls, CompileOptions::with_opt(opt), Backend::Interp)
+            .unwrap();
+        let got = exec.run(&mut Bindings::sls(&csr, &table)).unwrap().output;
         ember::util::quick::allclose(&got, &oracle, 1e-4, 1e-4)
             .unwrap_or_else(|e| panic!("{opt}: {e}"));
     }
@@ -145,8 +147,11 @@ fn end_to_end_dae_advantage_holds_across_opclasses() {
         let coupled =
             session.compile_with(&op, CompileOptions::with_opt(OptLevel::O1)).unwrap();
         let dae = session.compile_with(&op, CompileOptions::with_opt(OptLevel::O3)).unwrap();
-        let mut e1 = csr.bind_sls_env(&table, weighted);
-        let mut e2 = csr.bind_sls_env(&table, weighted);
+        let bind = |csr: &Csr, table: &Tensor| {
+            if weighted { Bindings::spmm(csr, table) } else { Bindings::sls(csr, table) }
+        };
+        let mut e1 = bind(&csr, &table).into_env();
+        let mut e2 = bind(&csr, &table).into_env();
         let c = simulate(&coupled, MachineConfig::traditional_core(), &mut e1).unwrap();
         let d = simulate(&dae, MachineConfig::dae_tmu(), &mut e2).unwrap();
         assert!(

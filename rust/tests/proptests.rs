@@ -8,9 +8,10 @@ use ember::coordinator::batcher::{BatchOptions, Batcher};
 use ember::coordinator::Request;
 use ember::dae::{DaeSim, MachineConfig};
 use ember::data::Tensor;
+use ember::exec::{Backend, Bindings, Executor, Instance};
 use ember::frontend::embedding_ops::{OpClass, Semiring};
-use ember::frontend::formats::{bind_mp_env, BlockGathers, Csr, FlatLookups};
-use ember::interp::{run_program, Interp};
+use ember::frontend::formats::{BlockGathers, Csr, FlatLookups};
+use ember::interp::Interp;
 use ember::util::quick::{allclose, check};
 use ember::util::rng::Rng;
 use ember::workloads::reuse::reuse_profile;
@@ -21,6 +22,12 @@ use std::time::{Duration, Instant};
 /// One-shot pipeline helper (the old `compile` free function).
 fn compile(op: &OpClass, opts: CompileOptions) -> ember::Result<CompiledProgram> {
     compile_with_trace(op, opts).map(|(p, _)| p)
+}
+
+/// Functional run through the unified executor layer.
+fn run_functional(prog: &CompiledProgram, env: &mut ember::data::Env) -> Result<Vec<f32>, String> {
+    let mut exec = Instance::new(prog, Backend::Interp).map_err(|e| e.to_string())?;
+    exec.run_env(env).map(|r| r.output).map_err(|e| e.to_string())
 }
 
 fn rand_csr(rng: &mut Rng, rows: usize, cols: usize, max_deg: usize) -> Csr {
@@ -65,8 +72,8 @@ fn prop_sls_numerics_all_levels() {
         for opt in OptLevel::ALL {
             let prog = compile(&OpClass::Sls, CompileOptions::with_opt(opt))
                 .map_err(|e| e.to_string())?;
-            let mut env = csr.bind_sls_env(&table, false);
-            let got = run_program(&prog.dlc, &mut env).map_err(|e| e.to_string())?;
+            let mut env = Bindings::sls(&csr, &table).into_env();
+            let got = run_functional(&prog, &mut env)?;
             allclose(&got, &want, 1e-4, 1e-4).map_err(|e| format!("{opt}: {e}"))?;
         }
         Ok(())
@@ -87,8 +94,8 @@ fn prop_spmm_numerics_all_levels() {
         for opt in [OptLevel::O0, OptLevel::O3] {
             let prog = compile(&OpClass::Spmm, CompileOptions::with_opt(opt))
                 .map_err(|e| e.to_string())?;
-            let mut env = csr.bind_sls_env(&table, true);
-            let got = run_program(&prog.dlc, &mut env).map_err(|e| e.to_string())?;
+            let mut env = Bindings::spmm(&csr, &table).into_env();
+            let got = run_functional(&prog, &mut env)?;
             allclose(&got, &want, 1e-3, 1e-3).map_err(|e| format!("{opt}: {e}"))?;
         }
         Ok(())
@@ -117,8 +124,8 @@ fn prop_mp_numerics_all_levels() {
         for opt in [OptLevel::O0, OptLevel::O2, OptLevel::O3] {
             let prog =
                 compile(&OpClass::Mp, CompileOptions::with_opt(opt)).map_err(|e| e.to_string())?;
-            let mut env = bind_mp_env(&csr, &feats);
-            let got = run_program(&prog.dlc, &mut env).map_err(|e| e.to_string())?;
+            let mut env = Bindings::mp(&csr, &feats).into_env();
+            let got = run_functional(&prog, &mut env)?;
             allclose(&got, &want, 1e-2, 1e-2).map_err(|e| format!("{opt}: {e}"))?;
         }
         Ok(())
@@ -137,8 +144,8 @@ fn prop_kg_and_spattn_numerics() {
         let fl = FlatLookups { idxs: idxs.clone(), num_rows: n };
         let prog = compile(&OpClass::Kg(Semiring::MaxPlus), CompileOptions::with_opt(OptLevel::O3))
             .map_err(|e| e.to_string())?;
-        let mut env = fl.bind_kg_env(&table);
-        let got = run_program(&prog.dlc, &mut env).map_err(|e| e.to_string())?;
+        let mut env = Bindings::kg(Semiring::MaxPlus, &fl, &table).into_env();
+        let got = run_functional(&prog, &mut env)?;
         for (qi, &i) in idxs.iter().enumerate() {
             for e in 0..emb {
                 let want = table.buf.get_f(i as usize * emb + e).max(0.0);
@@ -158,8 +165,8 @@ fn prop_kg_and_spattn_numerics() {
         };
         let prog = compile(&OpClass::SpAttn { block }, CompileOptions::with_opt(OptLevel::O3))
             .map_err(|e| e.to_string())?;
-        let mut env = g.bind_spattn_env(&keys);
-        let got = run_program(&prog.dlc, &mut env).map_err(|e| e.to_string())?;
+        let mut env = Bindings::spattn(&g, &keys).into_env();
+        let got = run_functional(&prog, &mut env)?;
         for (gi, &b) in g.block_idxs.iter().enumerate() {
             for r in 0..block {
                 for e in 0..emb {
@@ -195,7 +202,9 @@ fn prop_simulator_conservation() {
             [rng.below(4) as usize];
         let prog =
             compile(&OpClass::Sls, CompileOptions::with_opt(opt)).map_err(|e| e.to_string())?;
-        let mut env = csr.bind_sls_env(&table, false);
+        // drive the DaeSink directly: queue-conservation counters are
+        // simulator internals the ExecReport does not carry
+        let mut env = Bindings::sls(&csr, &table).into_env();
         let mut sim = DaeSim::new(cfg);
         let mut interp = Interp::new(&prog.dlc).map_err(|e| e.to_string())?;
         interp.run(&mut env, &mut sim).map_err(|e| e.to_string())?;
@@ -230,11 +239,12 @@ fn prop_results_machine_independent() {
             MachineConfig::dae_tmu(),
             MachineConfig::h100_like(),
         ] {
-            let mut env = csr.bind_sls_env(&table, false);
-            let mut sim = DaeSim::new(cfg);
-            let mut interp = Interp::new(&prog.dlc).map_err(|e| e.to_string())?;
-            interp.run(&mut env, &mut sim).map_err(|e| e.to_string())?;
-            outs.push(env.tensors.get("out").unwrap().as_f32());
+            let mut exec =
+                Instance::new(&prog, Backend::DaeSim(cfg)).map_err(|e| e.to_string())?;
+            let report = exec
+                .run(&mut Bindings::sls(&csr, &table))
+                .map_err(|e| e.to_string())?;
+            outs.push(report.output);
         }
         if outs[0] != outs[1] || outs[1] != outs[2] {
             return Err("results differ across machines".into());
