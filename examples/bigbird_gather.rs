@@ -43,8 +43,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("compiled SpAttn: {} lookup ops, 0 compute handlers (full offload)\n", prog.dlc.lookup.len());
 
     // numerics vs the Pallas gather kernel through PJRT (skipped when
-    // the runtime is the no-`pjrt` stub or artifacts are absent)
-    let mut exec = session.instantiate(&gather, Backend::Interp)?;
+    // the runtime is the no-`pjrt` stub or artifacts are absent); the
+    // fast backend runs this as a fused block-gather copy, byte-equal
+    // to the interpreted store-stream program
+    let mut exec = session.instantiate(&gather, Backend::Fast)?;
     let got = exec.run(&mut Bindings::spattn(&bg, &keys))?.output;
     match rt.execute_f32(
         "bigbird_gather",

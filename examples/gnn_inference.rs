@@ -40,7 +40,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     // the executor instance pools run state for both layers
     let aggregate = GraphAggregate { num_nodes: nodes, feature_dim: feat, fused_sddmm: false };
     let mut session = EmberSession::default();
-    let mut exec = session.instantiate(&aggregate, Backend::Interp)?;
+    // the compiled fast path (fused SpMM row-gather, byte-identical to
+    // Backend::Interp) — the one-line serving upgrade
+    let mut exec = session.instantiate(&aggregate, Backend::Fast)?;
     let agg = exec.run(&mut Bindings::spmm(&csr, &feats))?.output;
 
     // dense transform on the host (out = relu(agg @ W + b))

@@ -102,6 +102,19 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let hand_out = hand.run(&mut Bindings::sls(&csr, &table))?.output;
     assert_eq!(hand_out, got, "ref-dae reorders dispatch, never numerics");
 
+    // 5. The serving tier: `Backend::Fast` lowers the verified DLC once
+    //    more into a fused flat kernel (here: SLS gather-accumulate) —
+    //    byte-identical to the interpreter, interpreter-free on the hot
+    //    path. `ShardPool` and `ember serve` run on this backend.
+    let mut fast = session.instantiate(&bag, Backend::Fast)?;
+    let fast_report = fast.run(&mut Bindings::sls(&csr, &table))?;
+    assert_eq!(fast_report.output, got, "fast path is byte-identical to the interpreter");
+    println!(
+        "fast path        : kernel `{}` in {:.2?} (interp numerics, kernel speed)",
+        fast.fast_kernel().unwrap_or("?"),
+        fast_report.wall
+    );
+
     println!("traditional core : {:>9} cycles  ({:.2} W)", core.cycles, core.watts);
     println!("DAE core + TMU   : {:>9} cycles  ({:.2} W)", dae.cycles, dae.watts);
     println!(

@@ -1,0 +1,25 @@
+//! Fast-path vs interpreter microbenchmark (`harness = false`; the
+//! offline image has no criterion).
+//!
+//! Runs the same smoke matrix `ember bench --smoke` uses — SLS on
+//! `Interp` vs `Fast` vs `HandOpt` — and prints the perf table. The
+//! acceptance floor (fast ≥ 1.5× interp mean throughput on SLS) is
+//! enforced in CI by the `perf-smoke` job against
+//! `ci/bench_baseline.json`; this bench is the local loop for the same
+//! number.
+//!
+//! Run: `cargo bench --bench fastpath`
+
+use ember::util::perfrec::{run_matrix, MatrixSpec};
+
+fn main() {
+    let spec = MatrixSpec::smoke(1);
+    let rec = run_matrix(&spec).expect("bench matrix");
+    print!("{rec}");
+    for r in rec.records.iter().filter(|r| r.backend == "fast") {
+        println!(
+            "\nfast vs interp on {}: {:.2}x mean throughput",
+            r.workload, r.speedup_vs_interp
+        );
+    }
+}

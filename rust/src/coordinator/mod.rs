@@ -160,14 +160,16 @@ impl DlrmModel {
         })
     }
 
-    /// Embedding stage: run the Ember-compiled DAE program per table,
-    /// sequentially, through one pooled executor [`Instance`]. Returns
+    /// Embedding stage: run the Ember-compiled program per table,
+    /// sequentially, through one pooled executor [`Instance`] on the
+    /// compiled fast path ([`Backend::Fast`] — byte-identical to the
+    /// interpreter, enforced by `tests/exec_parity.rs`). Returns
     /// `[batch, tables*emb]` row-major embeddings. The table-parallel
     /// equivalent is [`shard::ShardPool::embed`] (byte-identical).
     pub fn embed(&self, requests: &[Request]) -> Result<Vec<f32>> {
         let b = self.batch;
         let mut out = vec![0f32; b * self.num_tables * self.emb];
-        let mut exec = Instance::new(&self.program, Backend::Interp)?;
+        let mut exec = Instance::new(&self.program, Backend::Fast)?;
         for t in 0..self.num_tables {
             let rows: Vec<Vec<i32>> = (0..b)
                 .map(|i| {

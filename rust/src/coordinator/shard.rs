@@ -9,8 +9,9 @@
 //!     shard threads; each shard runs its tables' lookups concurrently
 //!     with every other shard and the merge is a cheap row-slice copy;
 //!   * **hot-path allocation** — each shard owns a pooled executor
-//!     [`Instance`] (its interpreter is reset between batches, never
-//!     rebuilt) and one pre-bound [`Bindings`] per owned table whose
+//!     [`Instance`] on the compiled fast path ([`Backend::Fast`]: the
+//!     SLS gather runs as a fused flat kernel, byte-identical to the
+//!     interpreter) and one pre-bound [`Bindings`] per owned table whose
 //!     table tensor is moved in exactly once at pool construction
 //!     ([`Bindings::sls_pooled`]). Per batch only the small
 //!     `ptrs`/`idxs`/`out` operands are refilled in place
@@ -154,7 +155,7 @@ struct ShardWorker {
 impl ShardWorker {
     fn run(self, rx: Receiver<Job>) {
         let ShardWorker { program, tables, batch, max_lookups } = self;
-        let mut exec = match Instance::new(&program, Backend::Interp) {
+        let mut exec = match Instance::new(&program, Backend::Fast) {
             Ok(i) => i,
             Err(e) => {
                 // poison every job with the construction error

@@ -244,4 +244,61 @@ mod tests {
         assert!(b.refill_csr(&[0, 1, 1, 2, 2], &[0, 3]).is_ok());
         assert_eq!(b.env().tensor("idxs").unwrap().numel(), 2);
     }
+
+    #[test]
+    fn refill_with_empty_batch_pads_idxs_and_rezeroes_out() {
+        let table = Tensor::f32(vec![4, 2], vec![1.0; 8]);
+        let mut b = Bindings::sls_pooled(table, 2);
+        // dirty the output, then refill with an all-empty batch: idxs
+        // must take the one-zero-element padded form and out must be
+        // zero-filled in place
+        if let crate::data::Buf::F32(v) = &mut b.env_mut().tensor_mut("out").unwrap().buf {
+            v.fill(7.0);
+        }
+        b.refill_csr(&[0, 0, 0], &[]).unwrap();
+        let idxs = b.env().tensor("idxs").unwrap();
+        assert_eq!(idxs.dims, vec![1], "empty refill binds the padded index tensor");
+        assert_eq!(idxs.buf.get_i(0), 0);
+        assert!(b.output().unwrap().iter().all(|&v| v == 0.0), "out must be rezeroed");
+    }
+
+    #[test]
+    fn refill_runs_identically_to_fresh_bindings() {
+        use crate::exec::{Backend, Executor};
+        use crate::session::EmberSession;
+        let mut session = EmberSession::default();
+        let table_data: Vec<f32> = (0..24).map(|x| x as f32 * 0.25).collect();
+        let table = Tensor::f32(vec![6, 4], table_data);
+        let batches: Vec<Csr> = vec![
+            Csr::from_rows(6, &[vec![0, 5], vec![3]]),
+            Csr::from_rows(6, &[vec![], vec![2, 2, 4]]),
+            Csr::from_rows(6, &[vec![], vec![]]),
+        ];
+        for backend in [Backend::Interp, Backend::Fast] {
+            // one pooled instance + one pooled binding set, refilled per
+            // batch — the exact ShardPool shape, tested directly
+            let mut pooled_exec = session.instantiate(&OpClass::Sls, backend).unwrap();
+            let mut pooled = Bindings::sls_pooled(table.clone(), 2);
+            for csr in &batches {
+                pooled.refill_csr(&csr.ptrs, &csr.idxs).unwrap();
+                let got = pooled_exec.run(&mut pooled).unwrap().output;
+                let mut fresh_exec = session.instantiate(&OpClass::Sls, backend).unwrap();
+                let want = fresh_exec.run(&mut Bindings::sls(csr, &table)).unwrap().output;
+                assert_eq!(got, want, "{}: refill diverged from fresh bindings", backend.name());
+            }
+        }
+    }
+
+    #[test]
+    fn spmm_implicit_weights_pad_like_empty_index_lists() {
+        // a zero-nnz CSR still binds non-degenerate operand tensors:
+        // idxs pads to one zero element and the implicit-1.0 weights
+        // follow the same `.max(1)` rule
+        let empty = Csr::from_rows(4, &[vec![], vec![]]);
+        let table = Tensor::f32(vec![4, 2], vec![0.5; 8]);
+        let b = Bindings::spmm(&empty, &table);
+        assert_eq!(b.env().tensor("idxs").unwrap().numel(), 1);
+        assert_eq!(b.env().tensor("weights").unwrap().numel(), 1);
+        assert_eq!(b.env().tensor("weights").unwrap().buf.get_f(0), 1.0);
+    }
 }

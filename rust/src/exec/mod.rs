@@ -2,9 +2,9 @@
 //! way a compiled program can run.
 //!
 //! Ember's claim is that a single compiled embedding op retargets —
-//! functional check, cycle-level DAE simulation, hand-optimized
-//! reference, real PJRT runtime — and this module is that claim as an
-//! API. A [`Backend`] names the target,
+//! functional check, compiled fast path, cycle-level DAE simulation,
+//! hand-optimized reference, real PJRT runtime — and this module is
+//! that claim as an API. A [`Backend`] names the target,
 //! [`crate::session::EmberSession::instantiate`] (or [`Instance::new`])
 //! wraps a compiled program in an [`Instance`],
 //! typed [`Bindings`] replace the stringly-typed `bind_*_env` helpers,
@@ -42,6 +42,7 @@ use crate::dae::{DaeSim, MachineConfig};
 use crate::data::{Buf, Env, Tensor};
 use crate::error::{EmberError, Result};
 use crate::frontend::embedding_ops::OpClass;
+use crate::interp::fast::FastExec;
 use crate::interp::{Interp, NullSink};
 use crate::ir::dlc::DlcProgram;
 use crate::runtime::{ArgData, Runtime};
@@ -53,6 +54,15 @@ use std::time::{Duration, Instant};
 pub enum Backend {
     /// Pure-numerics functional interpreter (no timing events).
     Interp,
+    /// Compiled fast path: the verified DLC program is lowered once
+    /// more ([`crate::interp::fast::compile_fast`]) into a flat
+    /// [`crate::interp::fast::FastProgram`] whose dominant patterns run
+    /// as fused kernels (SLS gather-accumulate, SpMM row-gather, KG /
+    /// SpAttn gathers); unmatched patterns fall back to a pooled
+    /// interpreter. Byte-identical to [`Backend::Interp`] by
+    /// construction (pinned by `tests/exec_parity.rs`) — this is the
+    /// serving hot path `ShardPool` and `DlrmModel::embed` run on.
+    Fast,
     /// Functional run + cycle-level DAE simulation of the machine;
     /// [`ExecReport::sim`] carries cycles/energy/bandwidth/queue stats.
     DaeSim(MachineConfig),
@@ -73,6 +83,7 @@ impl Backend {
     pub fn name(&self) -> &'static str {
         match self {
             Backend::Interp => "interp",
+            Backend::Fast => "fast",
             Backend::DaeSim(_) => "dae-sim",
             Backend::HandOpt => "hand-opt",
             Backend::Pjrt => "pjrt",
@@ -173,9 +184,12 @@ pub struct Instance {
     backend: Backend,
     /// The program actually executed (for `HandOpt`: a reordered copy).
     dlc: Arc<DlcProgram>,
-    /// Pooled interpreter — `None` only for [`Backend::Pjrt`], whose
-    /// run path never interprets.
+    /// Pooled interpreter — `None` for [`Backend::Pjrt`] (whose run
+    /// path never interprets) and [`Backend::Fast`] (whose fallback
+    /// interpreter lives inside the [`FastExec`]).
     interp: Option<Interp>,
+    /// Compiled fast-path executor — `Some` iff [`Backend::Fast`].
+    fast: Option<FastExec>,
     runtime: Option<Runtime>,
     runs: u64,
 }
@@ -224,10 +238,14 @@ impl Instance {
             _ => Arc::clone(&program.dlc),
         };
         let interp = match backend {
-            Backend::Pjrt => None,
+            Backend::Pjrt | Backend::Fast => None,
             _ => Some(Interp::new(&dlc)?),
         };
-        Ok(Instance { op: program.op.clone(), backend, dlc, interp, runtime, runs: 0 })
+        let fast = match backend {
+            Backend::Fast => Some(FastExec::new(program)?),
+            _ => None,
+        };
+        Ok(Instance { op: program.op.clone(), backend, dlc, interp, fast, runtime, runs: 0 })
     }
 
     /// The backend this instance targets.
@@ -244,6 +262,14 @@ impl Instance {
     /// Number of runs executed through this instance's pooled state.
     pub fn runs(&self) -> u64 {
         self.runs
+    }
+
+    /// For a [`Backend::Fast`] instance: the name of the fused kernel
+    /// `compile_fast` selected (`"general"` means every run takes the
+    /// interpreter fallback). `None` on every other backend. Tests pin
+    /// this so the fused hot path can't silently rot into the fallback.
+    pub fn fast_kernel(&self) -> Option<&'static str> {
+        self.fast.as_ref().map(|f| f.kernel_name())
     }
 
     /// Like [`Executor::run_env`] but without materializing the `out`
@@ -278,6 +304,18 @@ impl Instance {
                 let interp = self.pooled_interp()?;
                 interp.reset();
                 interp.run(env, &mut NullSink)?;
+                ExecReport {
+                    backend: self.backend.name(),
+                    output: if collect_output { env.tensor("out")?.as_f32() } else { Vec::new() },
+                    wall: t0.elapsed(),
+                    sim: None,
+                }
+            }
+            Backend::Fast => {
+                let fast = self.fast.as_mut().ok_or_else(|| {
+                    EmberError::Runtime("fast instance lost its compiled fast program".into())
+                })?;
+                fast.run(env)?;
                 ExecReport {
                     backend: self.backend.name(),
                     output: if collect_output { env.tensor("out")?.as_f32() } else { Vec::new() },
@@ -476,6 +514,21 @@ mod tests {
         let mut inst = Instance::with_runtime(&program, rt).unwrap();
         let err = inst.run(&mut Bindings::sls(&csr, &table)).unwrap_err();
         assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn fast_backend_matches_interp_and_reports_fused_kernel() {
+        let (csr, table) = workload();
+        let mut session = EmberSession::default();
+        let mut interp = session.instantiate(&OpClass::Sls, Backend::Interp).unwrap();
+        let mut fast = session.instantiate(&OpClass::Sls, Backend::Fast).unwrap();
+        assert_eq!(fast.fast_kernel(), Some("sls-gather"));
+        assert_eq!(interp.fast_kernel(), None);
+        let a = interp.run(&mut Bindings::sls(&csr, &table)).unwrap();
+        let b = fast.run(&mut Bindings::sls(&csr, &table)).unwrap();
+        assert_eq!(a.output, b.output, "fast path must be byte-identical");
+        assert_eq!(b.backend, "fast");
+        assert!(b.sim.is_none());
     }
 
     #[test]

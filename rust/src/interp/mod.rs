@@ -13,6 +13,7 @@
 //! push point; the simulator reconstructs the true overlap from the
 //! event stream.
 
+pub mod fast;
 pub mod handopt;
 
 use crate::data::{Buf, Env};

@@ -9,8 +9,9 @@
 //! Compilation enters through [`session::EmberSession`] — a cached,
 //! multi-op driver over the [`compiler::PassManager`] pipeline — and
 //! execution through the unified [`exec`] layer: one compiled program
-//! retargets across the functional interpreter, the cycle-level DAE
-//! simulator, the hand-optimized reference, and the PJRT runtime.
+//! retargets across the functional interpreter, the compiled fast path
+//! (fused kernels, byte-identical to the interpreter), the cycle-level
+//! DAE simulator, the hand-optimized reference, and the PJRT runtime.
 //!
 //! ```
 //! use ember::{Backend, Bindings, EmberSession, Executor};

@@ -14,6 +14,7 @@ use ember::frontend::embedding_ops::{OpClass, Semiring};
 use ember::harness;
 use ember::runtime::Runtime;
 use ember::session::EmberSession;
+use ember::util::perfrec::{run_matrix, MatrixSpec, PerfRecording};
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
@@ -24,6 +25,9 @@ fn usage() -> ! {
 USAGE:
   ember compile --op <sls|spmm|mp|kg|kg_maxplus|spattn> [--opt 0..3] [--vlen N] [--emit scf|slc|dlc|all] [--trace] [--dump-passes]
   ember simulate --op <op> [--opt 0..3] [--machine core|core2x|dae|t4|h100]
+  ember bench [--smoke] [--out DIR] [--seed N] [--baseline FILE] [--tolerance PCT]
+              runs the perf matrix (interp vs fast vs hand-opt), writes BENCH_<date>.json,
+              and exits nonzero when --baseline comparison finds a regression
   ember bench --exp <table1..4|fig1|fig3|fig4|fig6|fig7|fig8|fig16..19|all> [--out results] [--seed N]
   ember serve [--requests N] [--clients C] [--shards S] [--qps Q[,Q..]] [--tables T] [--artifacts artifacts]
   ember info
@@ -161,7 +165,18 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
 }
 
 fn cmd_bench(flags: &HashMap<String, String>) -> Result<()> {
-    let exp = flags.get("exp").map(String::as_str).unwrap_or("all");
+    if flags.contains_key("exp") {
+        return cmd_bench_experiments(flags);
+    }
+    cmd_bench_perf(flags)
+}
+
+/// Legacy paper-experiment harness (`ember bench --exp ...`).
+fn cmd_bench_experiments(flags: &HashMap<String, String>) -> Result<()> {
+    let exp = match flags.get("exp").map(String::as_str) {
+        Some("") | None => "all",
+        Some(e) => e,
+    };
     let out = flags.get("out").map(String::as_str).unwrap_or("results");
     let seed = flags.get("seed").and_then(|v| v.parse().ok()).unwrap_or(1u64);
     let t0 = Instant::now();
@@ -171,6 +186,48 @@ fn cmd_bench(flags: &HashMap<String, String>) -> Result<()> {
         r.save(out)?;
     }
     println!("[{} report(s) written to {out}/ in {:.1?}]", reports.len(), t0.elapsed());
+    Ok(())
+}
+
+/// Perf-regression harness: run the workload matrix on interp vs fast
+/// vs hand-opt, emit a schema-versioned `BENCH_<date>.json`, and gate
+/// on `--baseline` (speedup-vs-interp, machine-portable).
+fn cmd_bench_perf(flags: &HashMap<String, String>) -> Result<()> {
+    let seed = flags.get("seed").and_then(|v| v.parse().ok()).unwrap_or(1u64);
+    let out = flags.get("out").map(String::as_str).unwrap_or(".");
+    let spec = if flags.contains_key("smoke") {
+        MatrixSpec::smoke(seed)
+    } else {
+        MatrixSpec::full(seed)
+    };
+    println!(
+        "ember bench: {} workload(s) x {{interp, fast, hand-opt}}, {:?} per measurement\n",
+        spec.cells.len(),
+        spec.target
+    );
+    let t0 = Instant::now();
+    let rec = run_matrix(&spec)?;
+    print!("{rec}");
+    let path = rec.save(out)?;
+    println!("\n[{} record(s) -> {} in {:.1?}]", rec.records.len(), path.display(), t0.elapsed());
+
+    if let Some(baseline_file) = flags.get("baseline").filter(|f| !f.is_empty()) {
+        let tolerance: f64 =
+            flags.get("tolerance").and_then(|v| v.parse().ok()).unwrap_or(20.0);
+        let baseline = PerfRecording::load(baseline_file)?;
+        let regressions = rec.compare(&baseline, tolerance);
+        if regressions.is_empty() {
+            println!("no perf regressions vs {baseline_file} (tolerance {tolerance}%)");
+        } else {
+            for r in &regressions {
+                eprintln!("PERF REGRESSION: {r}");
+            }
+            return Err(EmberError::Runtime(format!(
+                "{} perf regression(s) vs {baseline_file}",
+                regressions.len()
+            )));
+        }
+    }
     Ok(())
 }
 

@@ -8,6 +8,7 @@
 //! println!("{report}");
 //! ```
 
+use crate::coordinator::stats::LatencyHist;
 use std::fmt;
 use std::time::{Duration, Instant};
 
@@ -16,9 +17,15 @@ pub struct Report {
     pub name: String,
     pub iters: u64,
     pub mean: Duration,
+    /// Exact sample percentiles (sorted-sample resolution).
     pub p50: Duration,
     pub p95: Duration,
     pub min: Duration,
+    /// The same samples in the log₂-bucket histogram serving stats use
+    /// ([`crate::coordinator::stats::LatencyHist`]), so bench JSON and
+    /// `ServeStats` report latency in one format and tail quantiles
+    /// beyond p95 stay queryable.
+    pub hist: LatencyHist,
 }
 
 impl Report {
@@ -28,6 +35,11 @@ impl Report {
     /// Throughput in ops/s given `n` work items per iteration.
     pub fn throughput(&self, n: u64) -> f64 {
         n as f64 / self.mean.as_secs_f64()
+    }
+    /// Tail latency from the histogram (bucket upper bound, like
+    /// `ServeStats::p99`).
+    pub fn p99(&self) -> Duration {
+        self.hist.quantile(0.99)
     }
 }
 
@@ -79,6 +91,10 @@ impl Bench {
         }
         samples.sort();
         let total: Duration = samples.iter().sum();
+        let mut hist = LatencyHist::default();
+        for s in &samples {
+            hist.record(*s);
+        }
         Report {
             name: self.name.clone(),
             iters,
@@ -86,6 +102,25 @@ impl Bench {
             p50: samples[samples.len() / 2],
             p95: samples[((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1)],
             min: samples[0],
+            hist,
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_percentiles_and_hist_agree_on_order_of_magnitude() {
+        let mut b = Bench::new("spin").with_target(Duration::from_millis(2));
+        let report = b.run(|| std::thread::sleep(Duration::from_micros(50)));
+        assert!(report.iters >= 10);
+        assert!(report.min <= report.p50 && report.p50 <= report.p95);
+        assert_eq!(report.hist.count(), report.iters);
+        // bucket quantiles resolve to an upper bound ≥ the exact sample
+        assert!(report.p99() >= report.p50, "{report}");
+        let text = report.to_string();
+        assert!(text.contains("spin"), "{text}");
     }
 }

@@ -4,6 +4,7 @@
 
 pub mod bench;
 pub mod json;
+pub mod perfrec;
 pub mod quick;
 pub mod rng;
 

@@ -1,0 +1,619 @@
+//! Perf-trajectory recording: the `ember bench` workload matrix, the
+//! schema-versioned `BENCH_<date>.json` emitter, and the baseline
+//! comparison CI gates on.
+//!
+//! A [`MatrixSpec`] names a set of workload cells (op class × batch ×
+//! table size); [`run_matrix`] runs each cell on the `Interp`, `Fast`
+//! and `HandOpt` backends through the unified executor layer and
+//! produces a [`PerfRecording`] — one [`BenchRecord`] per (cell,
+//! backend) with mean/p50/p95/min latency, throughput, and speedup vs
+//! the interpreter.
+//!
+//! Regression checking ([`PerfRecording::compare`]) deliberately uses
+//! **`speedup_vs_interp`**, not absolute nanoseconds: the ratio is
+//! self-normalizing across machines, so one checked-in baseline
+//! (`ci/bench_baseline.json`) gates every CI runner. Absolute numbers
+//! are still recorded — that's the per-machine perf trajectory the
+//! `BENCH_*.json` files accumulate.
+
+use crate::error::{EmberError, Result};
+use crate::exec::{Backend, Bindings};
+use crate::frontend::embedding_ops::{OpClass, Semiring};
+use crate::frontend::formats::{BlockGathers, Csr, FlatLookups};
+use crate::session::EmberSession;
+use crate::util::bench::Bench;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use std::fmt;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+/// Version of the `BENCH_*.json` layout. Bump on any incompatible
+/// field change; [`PerfRecording::load`] rejects mismatches so a stale
+/// baseline fails loudly instead of comparing garbage.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// One (workload, backend) measurement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRecord {
+    /// Workload id, e.g. `sls/b32/r2048` — the baseline join key
+    /// together with `backend`.
+    pub workload: String,
+    pub op: String,
+    pub backend: String,
+    pub batch: usize,
+    pub table_rows: usize,
+    pub emb: usize,
+    /// Embedding rows gathered per run (the throughput denominator).
+    pub lookups: u64,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    /// Rows gathered per second (`lookups / mean`).
+    pub throughput: f64,
+    /// `interp_mean / mean` for the same workload (1.0 for interp).
+    pub speedup_vs_interp: f64,
+}
+
+impl BenchRecord {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workload", Json::str(&self.workload)),
+            ("op", Json::str(&self.op)),
+            ("backend", Json::str(&self.backend)),
+            ("batch", Json::num(self.batch as f64)),
+            ("table_rows", Json::num(self.table_rows as f64)),
+            ("emb", Json::num(self.emb as f64)),
+            ("lookups", Json::num(self.lookups as f64)),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_ns", Json::num(self.mean_ns)),
+            ("p50_ns", Json::num(self.p50_ns)),
+            ("p95_ns", Json::num(self.p95_ns)),
+            ("min_ns", Json::num(self.min_ns)),
+            ("throughput", Json::num(self.throughput)),
+            ("speedup_vs_interp", Json::num(self.speedup_vs_interp)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<BenchRecord> {
+        let s = |k: &str| -> Result<String> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| EmberError::Parse(format!("bench record missing string `{k}`")))
+        };
+        let n = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| EmberError::Parse(format!("bench record missing number `{k}`")))
+        };
+        Ok(BenchRecord {
+            workload: s("workload")?,
+            op: s("op")?,
+            backend: s("backend")?,
+            batch: n("batch")? as usize,
+            table_rows: n("table_rows")? as usize,
+            emb: n("emb")? as usize,
+            lookups: n("lookups")? as u64,
+            iters: n("iters")? as u64,
+            mean_ns: n("mean_ns")?,
+            p50_ns: n("p50_ns")?,
+            p95_ns: n("p95_ns")?,
+            min_ns: n("min_ns")?,
+            throughput: n("throughput")?,
+            speedup_vs_interp: n("speedup_vs_interp")?,
+        })
+    }
+}
+
+/// One regression found by [`PerfRecording::compare`].
+#[derive(Debug, Clone)]
+pub struct Regression {
+    pub workload: String,
+    pub backend: String,
+    pub baseline_speedup: f64,
+    pub current_speedup: f64,
+    pub tolerance_pct: f64,
+}
+
+impl fmt::Display for Regression {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} [{}]: speedup {:.2}x fell below baseline {:.2}x - {:.0}% = {:.2}x",
+            self.workload,
+            self.backend,
+            self.current_speedup,
+            self.baseline_speedup,
+            self.tolerance_pct,
+            self.baseline_speedup * (1.0 - self.tolerance_pct / 100.0),
+        )
+    }
+}
+
+/// A dated, schema-versioned set of bench records.
+#[derive(Debug, Clone)]
+pub struct PerfRecording {
+    pub schema: u64,
+    /// UTC date (`YYYY-MM-DD`) — names the emitted `BENCH_<date>.json`.
+    pub date: String,
+    pub host: String,
+    pub records: Vec<BenchRecord>,
+}
+
+impl PerfRecording {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::num(self.schema as f64)),
+            ("kind", Json::str("ember-bench")),
+            ("date", Json::str(&self.date)),
+            ("host", Json::str(&self.host)),
+            (
+                "records",
+                Json::Arr(self.records.iter().map(|r| r.to_json()).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<PerfRecording> {
+        let schema = j
+            .get("schema")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| EmberError::Parse("bench file missing `schema`".into()))?
+            as u64;
+        if schema != SCHEMA_VERSION {
+            return Err(EmberError::Parse(format!(
+                "bench file schema {schema} != supported {SCHEMA_VERSION}"
+            )));
+        }
+        let records = j
+            .get("records")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| EmberError::Parse("bench file missing `records`".into()))?
+            .iter()
+            .map(BenchRecord::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(PerfRecording {
+            schema,
+            date: j.get("date").and_then(Json::as_str).unwrap_or("").to_string(),
+            host: j.get("host").and_then(Json::as_str).unwrap_or("").to_string(),
+            records,
+        })
+    }
+
+    /// Write `BENCH_<date>.json` into `dir`, returning the path.
+    pub fn save(&self, dir: impl AsRef<Path>) -> Result<PathBuf> {
+        let dir = dir.as_ref();
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("BENCH_{}.json", self.date));
+        std::fs::write(&path, self.to_json().to_string())?;
+        Ok(path)
+    }
+
+    /// Load (and schema-check) a recording from a file.
+    pub fn load(path: impl AsRef<Path>) -> Result<PerfRecording> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Compare against a baseline: a (workload, backend) pair regresses
+    /// when its `speedup_vs_interp` drops more than `tolerance_pct`
+    /// percent below the baseline's. Pairs absent from the baseline are
+    /// new coverage, not regressions.
+    pub fn compare(&self, baseline: &PerfRecording, tolerance_pct: f64) -> Vec<Regression> {
+        let mut regressions = Vec::new();
+        for cur in &self.records {
+            let base = baseline
+                .records
+                .iter()
+                .find(|b| b.workload == cur.workload && b.backend == cur.backend);
+            if let Some(base) = base {
+                let floor = base.speedup_vs_interp * (1.0 - tolerance_pct / 100.0);
+                if cur.speedup_vs_interp < floor {
+                    regressions.push(Regression {
+                        workload: cur.workload.clone(),
+                        backend: cur.backend.clone(),
+                        baseline_speedup: base.speedup_vs_interp,
+                        current_speedup: cur.speedup_vs_interp,
+                        tolerance_pct,
+                    });
+                }
+            }
+        }
+        regressions
+    }
+}
+
+impl fmt::Display for PerfRecording {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "{:24} {:14} {:>12} {:>12} {:>12} {:>14} {:>8}",
+            "workload", "backend", "mean(us)", "p50(us)", "p95(us)", "Krows/s", "speedup"
+        )?;
+        for r in &self.records {
+            writeln!(
+                f,
+                "{:24} {:14} {:>12.2} {:>12.2} {:>12.2} {:>14.1} {:>7.2}x",
+                r.workload,
+                r.backend,
+                r.mean_ns / 1e3,
+                r.p50_ns / 1e3,
+                r.p95_ns / 1e3,
+                r.throughput / 1e3,
+                r.speedup_vs_interp,
+            )?;
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------ workload matrix
+
+/// One cell of the bench matrix. `batch` is rows / queries / gathers
+/// depending on the op class; `table_rows` is table rows (Sls/Spmm/Kg)
+/// or key blocks (SpAttn) and is ignored for Mp (self-adjacency).
+#[derive(Debug, Clone)]
+pub struct CellSpec {
+    pub op: OpClass,
+    pub batch: usize,
+    pub table_rows: usize,
+    pub emb: usize,
+    pub lookups_per_row: usize,
+}
+
+impl CellSpec {
+    pub fn name(&self) -> String {
+        format!("{}/b{}/r{}", self.op.name(), self.batch, self.table_rows)
+    }
+}
+
+/// The workload matrix one `ember bench` invocation runs.
+#[derive(Debug, Clone)]
+pub struct MatrixSpec {
+    pub seed: u64,
+    /// Target wall time per measurement (per cell per backend).
+    pub target: Duration,
+    pub cells: Vec<CellSpec>,
+}
+
+impl MatrixSpec {
+    /// CI smoke matrix: the one SLS cell the checked-in baseline
+    /// (`ci/bench_baseline.json`) gates on.
+    pub fn smoke(seed: u64) -> MatrixSpec {
+        MatrixSpec {
+            seed,
+            target: Duration::from_millis(120),
+            cells: vec![CellSpec {
+                op: OpClass::Sls,
+                batch: 32,
+                table_rows: 2048,
+                emb: 32,
+                lookups_per_row: 32,
+            }],
+        }
+    }
+
+    /// Full matrix: op class × batch × table size over every fused
+    /// pattern plus the Mp fallback.
+    pub fn full(seed: u64) -> MatrixSpec {
+        let mut cells = Vec::new();
+        for &(batch, rows) in &[(16usize, 1024usize), (64, 8192)] {
+            cells.push(CellSpec {
+                op: OpClass::Sls,
+                batch,
+                table_rows: rows,
+                emb: 32,
+                lookups_per_row: 32,
+            });
+            cells.push(CellSpec {
+                op: OpClass::Spmm,
+                batch,
+                table_rows: rows,
+                emb: 32,
+                lookups_per_row: 16,
+            });
+        }
+        cells.push(CellSpec {
+            op: OpClass::Sls,
+            batch: 256,
+            table_rows: 65536,
+            emb: 32,
+            lookups_per_row: 64,
+        });
+        cells.push(CellSpec {
+            op: OpClass::Kg(Semiring::PlusTimes),
+            batch: 512,
+            table_rows: 8192,
+            emb: 32,
+            lookups_per_row: 1,
+        });
+        cells.push(CellSpec {
+            op: OpClass::SpAttn { block: 4 },
+            batch: 128,
+            table_rows: 64,
+            emb: 32,
+            lookups_per_row: 4,
+        });
+        cells.push(CellSpec {
+            op: OpClass::Mp,
+            batch: 96,
+            table_rows: 96,
+            emb: 16,
+            lookups_per_row: 6,
+        });
+        MatrixSpec { seed, target: Duration::from_millis(150), cells }
+    }
+}
+
+/// Build the deterministic workload for one cell. Returns the bindings
+/// plus the number of embedding rows one run gathers.
+fn build_workload(cell: &CellSpec, seed: u64) -> (Bindings, u64) {
+    let mut rng = Rng::new(seed);
+    match &cell.op {
+        OpClass::Sls | OpClass::Spmm => {
+            let table = crate::data::Tensor::f32(
+                vec![cell.table_rows, cell.emb],
+                rng.normal_vec(cell.table_rows * cell.emb, 0.5),
+            );
+            let rows: Vec<Vec<i32>> = (0..cell.batch)
+                .map(|_| {
+                    (0..cell.lookups_per_row)
+                        .map(|_| rng.below(cell.table_rows as u64) as i32)
+                        .collect()
+                })
+                .collect();
+            let csr = Csr::from_rows(cell.table_rows, &rows);
+            let n = csr.nnz() as u64;
+            if cell.op == OpClass::Spmm {
+                let vals = rng.normal_vec(csr.nnz(), 1.0);
+                (Bindings::spmm(&csr.with_vals(vals), &table), n)
+            } else {
+                (Bindings::sls(&csr, &table), n)
+            }
+        }
+        OpClass::Mp => {
+            let feats = crate::data::Tensor::f32(
+                vec![cell.batch, cell.emb],
+                rng.normal_vec(cell.batch * cell.emb, 0.3),
+            );
+            let rows: Vec<Vec<i32>> = (0..cell.batch)
+                .map(|_| {
+                    (0..cell.lookups_per_row)
+                        .map(|_| rng.below(cell.batch as u64) as i32)
+                        .collect()
+                })
+                .collect();
+            let csr = Csr::from_rows(cell.batch, &rows);
+            let n = csr.nnz() as u64;
+            (Bindings::mp(&csr, &feats), n)
+        }
+        OpClass::Kg(sem) => {
+            let table = crate::data::Tensor::f32(
+                vec![cell.table_rows, cell.emb],
+                rng.normal_vec(cell.table_rows * cell.emb, 0.5),
+            );
+            let fl = FlatLookups {
+                idxs: (0..cell.batch)
+                    .map(|_| rng.below(cell.table_rows as u64) as i32)
+                    .collect(),
+                num_rows: cell.table_rows,
+            };
+            (Bindings::kg(*sem, &fl, &table), cell.batch as u64)
+        }
+        OpClass::SpAttn { block } => {
+            let keys = crate::data::Tensor::f32(
+                vec![cell.table_rows * block, cell.emb],
+                rng.normal_vec(cell.table_rows * block * cell.emb, 0.3),
+            );
+            let bg = BlockGathers {
+                block_idxs: (0..cell.batch)
+                    .map(|_| rng.below(cell.table_rows as u64) as i32)
+                    .collect(),
+                block: *block,
+                num_key_blocks: cell.table_rows,
+            };
+            (Bindings::spattn(&bg, &keys), (cell.batch * block) as u64)
+        }
+    }
+}
+
+/// Run the matrix: every cell × {interp, fast, hand-opt}, one
+/// [`BenchRecord`] each. Outputs accumulate across timed iterations
+/// (identically for every backend), which is irrelevant for timing and
+/// keeps the measured loop refill-free.
+pub fn run_matrix(spec: &MatrixSpec) -> Result<PerfRecording> {
+    let mut session = EmberSession::default();
+    let mut records = Vec::new();
+    for (ci, cell) in spec.cells.iter().enumerate() {
+        let (bindings, lookups) =
+            build_workload(cell, spec.seed.wrapping_add(ci as u64 * 0x9E3779B9));
+        let name = cell.name();
+        let mut interp_mean_ns = 0.0f64;
+        for backend in [Backend::Interp, Backend::Fast, Backend::HandOpt] {
+            let mut exec = session.instantiate(&cell.op, backend)?;
+            let mut b = bindings.clone();
+            // surface compile/bind errors before timing (also warmup)
+            exec.run_env_stats(b.env_mut())?;
+            let report = Bench::new(&format!("{name}/{}", backend.name()))
+                .with_target(spec.target)
+                .run(|| {
+                    let _ = exec.run_env_stats(b.env_mut());
+                });
+            let mean_ns = report.mean_ns();
+            if matches!(backend, Backend::Interp) {
+                interp_mean_ns = mean_ns;
+            }
+            let speedup = if matches!(backend, Backend::Interp) || mean_ns <= 0.0 {
+                1.0
+            } else {
+                interp_mean_ns / mean_ns
+            };
+            records.push(BenchRecord {
+                workload: name.clone(),
+                op: cell.op.name().to_string(),
+                backend: backend.name().to_string(),
+                batch: cell.batch,
+                table_rows: cell.table_rows,
+                emb: cell.emb,
+                lookups,
+                iters: report.iters,
+                mean_ns,
+                p50_ns: report.p50.as_nanos() as f64,
+                p95_ns: report.p95.as_nanos() as f64,
+                min_ns: report.min.as_nanos() as f64,
+                throughput: if mean_ns > 0.0 { lookups as f64 * 1e9 / mean_ns } else { 0.0 },
+                speedup_vs_interp: speedup,
+            });
+        }
+    }
+    Ok(PerfRecording {
+        schema: SCHEMA_VERSION,
+        date: utc_date(),
+        host: format!("{}-{}", std::env::consts::OS, std::env::consts::ARCH),
+        records,
+    })
+}
+
+// ------------------------------------------------------------ calendar
+
+/// Today's UTC date as `YYYY-MM-DD` (no chrono in the offline image).
+pub fn utc_date() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    date_from_epoch_days((secs / 86_400) as i64)
+}
+
+/// Civil date of a Unix epoch day count (Howard Hinnant's algorithm).
+pub fn date_from_epoch_days(days: i64) -> String {
+    let z = days + 719_468;
+    let era = (if z >= 0 { z } else { z - 146_096 }) / 146_097;
+    let doe = (z - era * 146_097) as u64;
+    let yoe = (doe - doe / 1460 + doe / 36524 - doe / 146_096) / 365;
+    let y = yoe as i64 + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = if m <= 2 { y + 1 } else { y };
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epoch_day_math_matches_known_dates() {
+        assert_eq!(date_from_epoch_days(0), "1970-01-01");
+        assert_eq!(date_from_epoch_days(31), "1970-02-01");
+        assert_eq!(date_from_epoch_days(19723), "2024-01-01");
+        assert_eq!(date_from_epoch_days(19723 + 366), "2025-01-01"); // 2024 is a leap year
+        let today = utc_date();
+        assert_eq!(today.len(), 10, "{today}");
+    }
+
+    fn sample_record(workload: &str, backend: &str, speedup: f64) -> BenchRecord {
+        BenchRecord {
+            workload: workload.to_string(),
+            op: "sls".to_string(),
+            backend: backend.to_string(),
+            batch: 32,
+            table_rows: 2048,
+            emb: 32,
+            lookups: 1024,
+            iters: 100,
+            mean_ns: 1e6 / speedup,
+            p50_ns: 1e6 / speedup,
+            p95_ns: 1.2e6 / speedup,
+            min_ns: 0.9e6 / speedup,
+            throughput: 1024.0 * speedup,
+            speedup_vs_interp: speedup,
+        }
+    }
+
+    #[test]
+    fn recording_roundtrips_through_json() {
+        let rec = PerfRecording {
+            schema: SCHEMA_VERSION,
+            date: "2026-07-26".to_string(),
+            host: "test".to_string(),
+            records: vec![
+                sample_record("sls/b32/r2048", "interp", 1.0),
+                sample_record("sls/b32/r2048", "fast", 3.5),
+            ],
+        };
+        let text = rec.to_json().to_string();
+        let back = PerfRecording::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.date, rec.date);
+        assert_eq!(back.records, rec.records);
+
+        // schema mismatch fails loudly
+        let mut bad = rec.to_json();
+        if let Json::Obj(m) = &mut bad {
+            m.insert("schema".to_string(), Json::num(999.0));
+        }
+        assert!(PerfRecording::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn compare_flags_only_real_regressions() {
+        let baseline = PerfRecording {
+            schema: SCHEMA_VERSION,
+            date: "2026-01-01".to_string(),
+            host: "ci".to_string(),
+            records: vec![
+                sample_record("sls/b32/r2048", "interp", 1.0),
+                sample_record("sls/b32/r2048", "fast", 2.0),
+            ],
+        };
+        let mut current = baseline.clone();
+        current.records[1].speedup_vs_interp = 1.6; // above 2.0 - 25%
+        assert!(current.compare(&baseline, 25.0).is_empty());
+
+        current.records[1].speedup_vs_interp = 1.4; // below the floor
+        let regs = current.compare(&baseline, 25.0);
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].backend, "fast");
+        let msg = regs[0].to_string();
+        assert!(msg.contains("1.40x"), "{msg}");
+
+        // new coverage (absent from baseline) is not a regression
+        current.records.push(sample_record("spmm/b16/r1024", "fast", 0.5));
+        assert_eq!(current.compare(&baseline, 25.0).len(), 1);
+    }
+
+    #[test]
+    fn tiny_matrix_runs_all_three_backends() {
+        let spec = MatrixSpec {
+            seed: 7,
+            target: Duration::from_millis(3),
+            cells: vec![CellSpec {
+                op: OpClass::Sls,
+                batch: 4,
+                table_rows: 64,
+                emb: 8,
+                lookups_per_row: 4,
+            }],
+        };
+        let rec = run_matrix(&spec).unwrap();
+        assert_eq!(rec.schema, SCHEMA_VERSION);
+        assert_eq!(rec.records.len(), 3);
+        let backends: Vec<&str> = rec.records.iter().map(|r| r.backend.as_str()).collect();
+        assert_eq!(backends, vec!["interp", "fast", "hand-opt"]);
+        for r in &rec.records {
+            assert_eq!(r.workload, "sls/b4/r64");
+            assert!(r.mean_ns > 0.0, "{r:?}");
+            assert!(r.throughput > 0.0, "{r:?}");
+            assert_eq!(r.lookups, 16);
+        }
+        assert_eq!(rec.records[0].speedup_vs_interp, 1.0);
+        // table rendering stays well-formed
+        let table = rec.to_string();
+        assert!(table.contains("sls/b4/r64"), "{table}");
+    }
+}

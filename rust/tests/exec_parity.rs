@@ -1,9 +1,10 @@
 //! Backend parity suite for the unified executor layer.
 //!
 //! For every `OpClass`:
-//! * `Interp`, `HandOpt`, and `DaeSim` backends must produce
-//!   byte-identical outputs from identical bindings (timing models and
-//!   dispatch reorders can never change numerics);
+//! * `Interp`, `Fast`, `HandOpt`, and `DaeSim` backends must produce
+//!   byte-identical outputs from identical bindings (timing models,
+//!   dispatch reorders, and the fused fast-path kernels can never
+//!   change numerics);
 //! * reusing one pooled `Instance` across batches must match a fresh
 //!   instance per batch (the `reset` pooling is numerically invisible);
 //! * zero-lookup operands (empty bags / empty query lists) execute
@@ -69,6 +70,7 @@ fn all_backends_agree_for_every_op_class() {
     for (op, bindings) in workloads(7) {
         let backends = [
             Backend::Interp,
+            Backend::Fast,
             Backend::HandOpt,
             Backend::DaeSim(MachineConfig::dae_tmu()),
             Backend::DaeSim(MachineConfig::traditional_core()),
@@ -158,6 +160,111 @@ fn zero_lookup_bags_execute_cleanly_for_every_op_class() {
         session.instantiate(&OpClass::SpAttn { block: 4 }, Backend::Interp).unwrap();
     let out = exec.run(&mut Bindings::spattn(&bg, &table)).unwrap().output;
     assert!(out.is_empty(), "spattn: zero gathers");
+}
+
+#[test]
+fn fast_backend_uses_fused_kernels_not_the_fallback() {
+    // the perf claim rests on fusion actually engaging: every fusable
+    // op class must select a real kernel through the Instance API, not
+    // degrade to "general". (The exact kernel-name table is pinned at
+    // the unit level in `interp::fast`.)
+    let mut session = EmberSession::default();
+    for op in [
+        OpClass::Sls,
+        OpClass::Spmm,
+        OpClass::Kg(Semiring::PlusTimes),
+        OpClass::Kg(Semiring::MaxPlus),
+        OpClass::SpAttn { block: 4 },
+    ] {
+        let inst = session.instantiate(&op, Backend::Fast).unwrap();
+        assert!(
+            inst.fast_kernel().is_some_and(|k| k != "general"),
+            "{op:?}: fusion must engage, got {:?}",
+            inst.fast_kernel()
+        );
+    }
+    let inst = session.instantiate(&OpClass::Mp, Backend::Fast).unwrap();
+    assert_eq!(inst.fast_kernel(), Some("general"), "Mp stays on the fallback");
+    // non-fast backends expose no kernel
+    let inst = session.instantiate(&OpClass::Sls, Backend::Interp).unwrap();
+    assert_eq!(inst.fast_kernel(), None);
+}
+
+#[test]
+fn fast_pooled_refill_matches_interp_batch_for_batch() {
+    // the serving hot path: one pooled instance per backend, one
+    // pre-bound table, ptrs/idxs refilled in place per batch — outputs
+    // must stay byte-identical across backends and across reuse,
+    // including an all-empty batch mid-stream
+    let mut session = EmberSession::default();
+    let program = session.compile(&OpClass::Sls).unwrap();
+    let mut rng = Rng::new(29);
+    let batch = 6usize;
+    let rows = 48usize;
+    let emb = 8usize;
+    let table = Tensor::f32(vec![rows, emb], rng.normal_vec(rows * emb, 1.0));
+
+    let mut interp = Instance::new(&program, Backend::Interp).unwrap();
+    let mut fast = Instance::new(&program, Backend::Fast).unwrap();
+    let mut bi = Bindings::sls_pooled(table.clone(), batch);
+    let mut bf = Bindings::sls_pooled(table, batch);
+
+    for trial in 0..5 {
+        let csr = if trial == 2 {
+            // zero-lookup batch: every bag empty
+            let empty_rows: Vec<Vec<i32>> = vec![Vec::new(); batch];
+            Csr::from_rows(rows, &empty_rows)
+        } else {
+            rand_csr(&mut rng, batch, rows, 7)
+        };
+        bi.refill_csr(&csr.ptrs, &csr.idxs).unwrap();
+        bf.refill_csr(&csr.ptrs, &csr.idxs).unwrap();
+        let a = interp.run(&mut bi).unwrap().output;
+        let b = fast.run(&mut bf).unwrap().output;
+        assert_eq!(a, b, "trial {trial}: fast pooled path diverged from interp");
+        if trial == 2 {
+            assert!(b.iter().all(|&v| v == 0.0), "empty batch must stay zero");
+        }
+    }
+    assert_eq!(fast.runs(), 5);
+}
+
+#[test]
+fn fast_backend_zero_lookup_parity_for_every_op_class() {
+    let mut session = EmberSession::default();
+    let table = Tensor::f32(vec![32, 8], vec![0.125; 32 * 8]);
+
+    for op in [OpClass::Sls, OpClass::Spmm] {
+        let all_empty = Csr::from_rows(32, &[vec![], vec![], vec![]]);
+        let bind = |c: &Csr| {
+            if op == OpClass::Spmm { Bindings::spmm(c, &table) } else { Bindings::sls(c, &table) }
+        };
+        let mut exec = session.instantiate(&op, Backend::Fast).unwrap();
+        let out = exec.run(&mut bind(&all_empty)).unwrap().output;
+        assert_eq!(out.len(), 3 * 8, "{op:?}");
+        assert!(out.iter().all(|&v| v == 0.0), "{op:?}");
+    }
+
+    let none = FlatLookups { idxs: vec![], num_rows: 32 };
+    let mut exec =
+        session.instantiate(&OpClass::Kg(Semiring::PlusTimes), Backend::Fast).unwrap();
+    let out = exec
+        .run(&mut Bindings::kg(Semiring::PlusTimes, &none, &table))
+        .unwrap()
+        .output;
+    assert!(out.is_empty(), "kg on fast: zero queries");
+
+    let bg = BlockGathers { block_idxs: vec![], block: 4, num_key_blocks: 8 };
+    let mut exec =
+        session.instantiate(&OpClass::SpAttn { block: 4 }, Backend::Fast).unwrap();
+    let out = exec.run(&mut Bindings::spattn(&bg, &table)).unwrap().output;
+    assert!(out.is_empty(), "spattn on fast: zero gathers");
+
+    let feats = Tensor::f32(vec![4, 8], vec![0.5; 32]);
+    let lonely = Csr::from_rows(4, &[vec![], vec![], vec![], vec![]]);
+    let mut exec = session.instantiate(&OpClass::Mp, Backend::Fast).unwrap();
+    let out = exec.run(&mut Bindings::mp(&lonely, &feats)).unwrap().output;
+    assert!(out.iter().all(|&v| v == 0.0), "mp on fast: isolated nodes");
 }
 
 #[test]
