@@ -172,7 +172,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut unthrottled = Vec::new();
     for shards in [1usize, 4] {
         let coord = start(shards)?;
-        let spec = LoadSpec { clients, requests_per_client: per_client, target_qps: None };
+        let spec = LoadSpec { clients, requests_per_client: per_client, ..Default::default() };
         let report = run_closed_loop(&coord, spec, |c, k| {
             synthetic_request(tables, rows, dense_n, max_lookups, c, k)
         })?;
@@ -204,6 +204,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             clients,
             requests_per_client: per_client,
             target_qps: Some(peak * f),
+            ..Default::default()
         };
         let report = run_closed_loop(&coord, spec, |c, k| {
             synthetic_request(tables, rows, dense_n, max_lookups, c, k)

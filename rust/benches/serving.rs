@@ -8,8 +8,8 @@
 //! `exec::Instance` plus pre-bound `exec::Bindings` per table.
 
 use ember::coordinator::{
-    run_closed_loop, synthetic_request, BatchOptions, Coordinator, DlrmModel, LoadReport,
-    LoadSpec, Request, ServeOptions,
+    run_closed_loop, run_open_loop, synthetic_request, synthetic_request_with, BatchOptions,
+    Coordinator, DlrmModel, IndexDist, LoadReport, LoadSpec, OpenLoopSpec, Request, ServeOptions,
 };
 use ember::EmberSession;
 use std::time::Duration;
@@ -49,7 +49,7 @@ fn drive(
             shards,
         },
     );
-    let spec = LoadSpec { clients, requests_per_client: per_client, target_qps: None };
+    let spec = LoadSpec { clients, requests_per_client: per_client, ..Default::default() };
     let report = run_closed_loop(&coord, spec, request).expect("load generation failed");
     let stats = coord.shutdown();
     assert_eq!(report.errors + stats.errors, 0, "serving errors under load");
@@ -101,9 +101,48 @@ fn main() {
             clients,
             requests_per_client: per_client / 2,
             target_qps: Some(target),
+            ..Default::default()
         };
         let report = run_closed_loop(&coord, spec, request).expect("load generation failed");
         coord.shutdown();
         println!("{:>10.0}  {}", target, report.table_row());
+    }
+
+    // open-loop Poisson arrivals at half of closed-loop peak, uniform
+    // vs zipf indices — the arrival model that keeps offering load when
+    // the server falls behind (no coordinated omission), and the skew
+    // real embedding traffic has
+    println!("\nopen-loop poisson arrivals (4-shard pool):");
+    println!("{:>10}  {:>12}  {}", "target", "dist", LoadReport::table_header());
+    for dist in [IndexDist::Uniform, IndexDist::Zipf(1.05)] {
+        let coord = Coordinator::start_sharded(
+            model(&mut session),
+            None,
+            ServeOptions {
+                batch: BatchOptions { max_batch: BATCH, max_wait: Duration::from_millis(1) },
+                shards: 4,
+            },
+        );
+        let spec = OpenLoopSpec {
+            target_qps: (sharded * 0.5).max(1.0),
+            requests: clients * per_client / 2,
+            seed: 7,
+            collectors: 8,
+            dist,
+        };
+        let report = run_open_loop(&coord, spec, |k| {
+            synthetic_request_with(TABLES, ROWS, DENSE, LOOKUPS, dist, 0, k)
+        })
+        .expect("open-loop generation failed");
+        coord.shutdown();
+        // Display for IndexDist ignores width specifiers; pad the
+        // rendered string instead
+        let dist_col = report.dist.to_string();
+        println!(
+            "{:>10.0}  {:>12}  {}",
+            report.offered_qps.unwrap_or(0.0),
+            dist_col,
+            report.table_row()
+        );
     }
 }

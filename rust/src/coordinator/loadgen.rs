@@ -1,23 +1,59 @@
-//! Closed-loop load generator for the serving engine.
+//! Load generators for the serving engine.
 //!
-//! `clients` threads each own a cloned [`CoordinatorClient`] and issue
-//! requests back-to-back (classic closed loop). With a `target_qps`
-//! each client paces its submissions so the coordinator sees an
-//! aggregate arrival rate of ~`target_qps`; sweeping the target and
-//! plotting [`LoadReport::throughput_rps`] against the report's
-//! latency quantiles gives the latency/throughput curve.
+//! **Closed loop** ([`run_closed_loop`]): `clients` threads each own a
+//! cloned [`CoordinatorClient`] and issue requests back-to-back, each
+//! waiting for its response before the next submit. With a
+//! `target_qps` each client paces its submissions so the coordinator
+//! sees an aggregate arrival rate of ~`target_qps`; sweeping the
+//! target and plotting [`LoadReport::throughput_rps`] against the
+//! report's latency quantiles gives the latency/throughput curve.
+//!
+//! **Open loop** ([`run_open_loop`]): arrivals follow a Poisson
+//! process at `target_qps` regardless of how fast responses come back,
+//! so a saturated server accumulates queueing delay instead of
+//! silently back-pressuring the generator (the coordinated-omission
+//! artifact every closed loop has). This is the mode that can drive
+//! the system *past* saturation.
+//!
+//! Lookup indices are drawn [`IndexDist::Uniform`] or
+//! [`IndexDist::Zipf`] — production embedding traffic is heavily
+//! skewed, and skew is what makes hot-table replication matter.
 
 use super::server::Coordinator;
 use super::stats::LatencyHist;
-use super::Request;
+use super::{Request, Response};
 use crate::error::{EmberError, Result};
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, Zipf};
+use std::fmt;
+use std::sync::mpsc::{self, Receiver};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
+
+/// Which distribution lookup indices are drawn from.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum IndexDist {
+    /// Every table row equally likely.
+    #[default]
+    Uniform,
+    /// Zipf with exponent `s` over row ranks (row 0 hottest) — the
+    /// shape real embedding-access traces follow.
+    Zipf(f64),
+}
+
+impl fmt::Display for IndexDist {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            IndexDist::Uniform => write!(f, "uniform"),
+            IndexDist::Zipf(s) => write!(f, "zipf({s})"),
+        }
+    }
+}
 
 /// Deterministic synthetic DLRM request for load generation: `lookups`
 /// random table rows per table, keyed by `(client, k)` so the CLI,
 /// example and bench all produce the same stream for the same model
-/// shape (keeping their generators from drifting apart).
+/// shape (keeping their generators from drifting apart). Uniform
+/// indices; see [`synthetic_request_with`] for skewed draws.
 pub fn synthetic_request(
     tables: usize,
     rows: usize,
@@ -26,18 +62,44 @@ pub fn synthetic_request(
     client: usize,
     k: usize,
 ) -> Request {
+    synthetic_request_with(tables, rows, dense, lookups, IndexDist::Uniform, client, k)
+}
+
+/// [`synthetic_request`] with an explicit index distribution. The
+/// uniform path consumes the rng identically to the original
+/// generator, so existing request streams are byte-identical.
+pub fn synthetic_request_with(
+    tables: usize,
+    rows: usize,
+    dense: usize,
+    lookups: usize,
+    dist: IndexDist,
+    client: usize,
+    k: usize,
+) -> Request {
     let id = ((client as u64) << 32) | k as u64;
     let mut rng = Rng::new(id.wrapping_mul(0x9E37_79B9).wrapping_add(7));
+    let zipf = match dist {
+        IndexDist::Zipf(s) => Some(Zipf::new(rows.max(1) as u64, s)),
+        IndexDist::Uniform => None,
+    };
     Request {
         id,
         lookups: (0..tables)
-            .map(|_| (0..lookups).map(|_| rng.below(rows as u64) as i32).collect())
+            .map(|_| {
+                (0..lookups)
+                    .map(|_| match &zipf {
+                        Some(z) => z.sample(&mut rng) as i32,
+                        None => rng.below(rows as u64) as i32,
+                    })
+                    .collect()
+            })
             .collect(),
         dense: (0..dense).map(|_| rng.f32()).collect(),
     }
 }
 
-/// Shape of one load-generation run.
+/// Shape of one closed-loop load-generation run.
 #[derive(Debug, Clone, Copy)]
 pub struct LoadSpec {
     /// Concurrent closed-loop clients.
@@ -48,11 +110,51 @@ pub struct LoadSpec {
     /// value) = as fast as possible (each client limited only by its
     /// in-flight request).
     pub target_qps: Option<f64>,
+    /// Index distribution the requests were generated with. Carried
+    /// into [`LoadReport::dist`] so bench output records it; the
+    /// request closure is still responsible for actually using it
+    /// (via [`synthetic_request_with`]).
+    pub dist: IndexDist,
 }
 
 impl Default for LoadSpec {
     fn default() -> Self {
-        LoadSpec { clients: 4, requests_per_client: 256, target_qps: None }
+        LoadSpec {
+            clients: 4,
+            requests_per_client: 256,
+            target_qps: None,
+            dist: IndexDist::Uniform,
+        }
+    }
+}
+
+/// Shape of one open-loop (Poisson-arrival) run.
+#[derive(Debug, Clone, Copy)]
+pub struct OpenLoopSpec {
+    /// Mean aggregate arrival rate of the Poisson process.
+    pub target_qps: f64,
+    /// Total requests to issue.
+    pub requests: usize,
+    /// Seed for the arrival process (inter-arrival draws only; request
+    /// contents stay keyed by request number).
+    pub seed: u64,
+    /// Threads draining response channels. Must exceed the server's
+    /// concurrency only if response-wait itself is the bottleneck.
+    pub collectors: usize,
+    /// Index distribution, recorded into the report (see
+    /// [`LoadSpec::dist`]).
+    pub dist: IndexDist,
+}
+
+impl Default for OpenLoopSpec {
+    fn default() -> Self {
+        OpenLoopSpec {
+            target_qps: 1000.0,
+            requests: 256,
+            seed: 1,
+            collectors: 4,
+            dist: IndexDist::Uniform,
+        }
     }
 }
 
@@ -66,6 +168,11 @@ pub struct LoadReport {
     pub wall: Duration,
     /// End-to-end latency measured at the client (submit → response).
     pub hist: LatencyHist,
+    /// Index distribution the run was generated with.
+    pub dist: IndexDist,
+    /// The offered arrival rate (`None` for an unpaced closed loop,
+    /// where the clients self-pace to the server's speed).
+    pub offered_qps: Option<f64>,
 }
 
 impl LoadReport {
@@ -176,7 +283,110 @@ where
             )));
         }
     }
-    let mut report = LoadReport { wall: t0.elapsed(), ..Default::default() };
+    let mut report = LoadReport {
+        wall: t0.elapsed(),
+        dist: spec.dist,
+        offered_qps: spec.target_qps.filter(|q| *q > 0.0),
+        ..Default::default()
+    };
+    for (ok, errors, hist) in results {
+        report.ok += ok;
+        report.errors += errors;
+        report.sent += ok + errors;
+        report.hist.merge(&hist);
+    }
+    Ok(report)
+}
+
+/// Drive `coord` open-loop: submissions arrive as a Poisson process at
+/// `spec.target_qps` whether or not earlier responses have come back,
+/// so queueing delay at saturation shows up in the latency histogram
+/// instead of being absorbed by generator back-pressure. One arrival
+/// thread paces and submits; `spec.collectors` threads await the
+/// response channels. `make_req(k)` builds request number `k`.
+pub fn run_open_loop<F>(coord: &Coordinator, spec: OpenLoopSpec, make_req: F) -> Result<LoadReport>
+where
+    F: Fn(usize) -> Request + Send + Sync,
+{
+    if spec.target_qps.is_nan() || spec.target_qps <= 0.0 {
+        return Err(EmberError::Workload(format!(
+            "open-loop target_qps must be positive, got {}",
+            spec.target_qps
+        )));
+    }
+    let client = coord.client()?;
+    let (tx, rx) = mpsc::channel::<(Instant, Receiver<Result<Response>>)>();
+    let rx = Mutex::new(rx);
+    let collectors = spec.collectors.max(1);
+    let t0 = Instant::now();
+    let mut submit_errors = 0u64;
+    let mut results: Vec<(u64, u64, LatencyHist)> = Vec::with_capacity(collectors);
+    let mut panicked = 0usize;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..collectors)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut hist = LatencyHist::default();
+                    let (mut ok, mut errors) = (0u64, 0u64);
+                    loop {
+                        // hold the lock only for the queue pop, not the
+                        // response wait — collectors drain concurrently
+                        let item = match rx.lock() {
+                            Ok(g) => g.recv(),
+                            Err(_) => break,
+                        };
+                        let Ok((t, resp_rx)) = item else { break };
+                        match resp_rx.recv() {
+                            Ok(Ok(_)) => {
+                                hist.record(t.elapsed());
+                                ok += 1;
+                            }
+                            _ => errors += 1,
+                        }
+                    }
+                    (ok, errors, hist)
+                })
+            })
+            .collect();
+
+        // Poisson arrivals: exponential inter-arrival gaps with mean
+        // 1/rate, submitted from this thread without awaiting replies.
+        let mut arrivals = Rng::new(spec.seed);
+        let mut next = Instant::now();
+        for k in 0..spec.requests {
+            let u = arrivals.f64();
+            next += Duration::from_secs_f64(-(1.0 - u).ln() / spec.target_qps);
+            let now = Instant::now();
+            if next > now {
+                std::thread::sleep(next - now);
+            }
+            match client.submit(make_req(k)) {
+                Ok(resp_rx) => {
+                    let _ = tx.send((Instant::now(), resp_rx));
+                }
+                Err(_) => submit_errors += 1,
+            }
+        }
+        drop(tx); // collectors drain the queue then fall out of recv
+
+        for h in handles {
+            match h.join() {
+                Ok(r) => results.push(r),
+                Err(_) => panicked += 1,
+            }
+        }
+    });
+    if panicked > 0 {
+        return Err(EmberError::Runtime(format!("{panicked} open-loop collector(s) panicked")));
+    }
+    let mut report = LoadReport {
+        wall: t0.elapsed(),
+        dist: spec.dist,
+        offered_qps: Some(spec.target_qps),
+        errors: submit_errors,
+        sent: submit_errors,
+        ..Default::default()
+    };
     for (ok, errors, hist) in results {
         report.ok += ok;
         report.errors += errors;
@@ -218,7 +428,7 @@ mod tests {
                 shards: 2,
             },
         );
-        let spec = LoadSpec { clients: 3, requests_per_client: 10, target_qps: None };
+        let spec = LoadSpec { clients: 3, requests_per_client: 10, ..Default::default() };
         let report = run_closed_loop(&coord, spec, |c, k| make_req(&shape, c, k)).unwrap();
         assert_eq!(report.sent, 30);
         assert_eq!(report.ok, 30);
@@ -240,12 +450,104 @@ mod tests {
             BatchOptions { max_batch: 4, max_wait: Duration::from_micros(200) },
         );
         // 20 requests at 200 qps => at least ~95ms of pacing
-        let spec = LoadSpec { clients: 2, requests_per_client: 10, target_qps: Some(200.0) };
+        let spec = LoadSpec {
+            clients: 2,
+            requests_per_client: 10,
+            target_qps: Some(200.0),
+            ..Default::default()
+        };
         let t0 = Instant::now();
         let report = run_closed_loop(&coord, spec, |c, k| make_req(&shape, c, k)).unwrap();
         assert_eq!(report.ok, 20);
         assert!(t0.elapsed() >= Duration::from_millis(80), "pacing was ignored");
         assert!(report.throughput_rps() <= 300.0, "{}", report.throughput_rps());
+        assert_eq!(report.offered_qps, Some(200.0));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn uniform_dist_is_byte_identical_to_the_legacy_generator() {
+        for (c, k) in [(0usize, 0usize), (3, 17), (7, 1000)] {
+            let old = synthetic_request(4, 512, 13, 6, c, k);
+            let new = synthetic_request_with(4, 512, 13, 6, IndexDist::Uniform, c, k);
+            assert_eq!(old, new, "client {c} request {k}");
+        }
+    }
+
+    #[test]
+    fn zipf_dist_skews_toward_hot_rows_and_stays_in_range() {
+        let rows = 1024usize;
+        let mut head = 0u64; // draws landing in the hottest 1% of rows
+        let mut total = 0u64;
+        for k in 0..200 {
+            let r = synthetic_request_with(2, rows, 0, 8, IndexDist::Zipf(1.1), 0, k);
+            for l in &r.lookups {
+                for &i in l {
+                    assert!(i >= 0 && (i as usize) < rows, "index {i} out of range");
+                    if (i as usize) < rows / 100 {
+                        head += 1;
+                    }
+                    total += 1;
+                }
+            }
+        }
+        assert_eq!(total, 200 * 2 * 8);
+        // Under uniform the hottest 1% would get ~1% of draws; zipf(1.1)
+        // concentrates far more. 20% is a very safe lower bound.
+        assert!(
+            head as f64 / total as f64 > 0.20,
+            "zipf skew missing: {head}/{total} in the top 1%"
+        );
+        // Determinism: same (client, k) ⇒ same request.
+        assert_eq!(
+            synthetic_request_with(2, rows, 0, 8, IndexDist::Zipf(1.1), 0, 5),
+            synthetic_request_with(2, rows, 0, 8, IndexDist::Zipf(1.1), 0, 5),
+        );
+    }
+
+    #[test]
+    fn index_dist_displays_for_bench_output() {
+        assert_eq!(IndexDist::Uniform.to_string(), "uniform");
+        assert_eq!(IndexDist::Zipf(1.05).to_string(), "zipf(1.05)");
+        assert_eq!(IndexDist::default(), IndexDist::Uniform);
+    }
+
+    #[test]
+    fn open_loop_completes_every_request_and_records_offered_rate() {
+        let model = DlrmModel::new(4, 64, 8, 2, 6, 3, 16, 42).unwrap();
+        let coord = Coordinator::start(
+            model,
+            None,
+            BatchOptions { max_batch: 4, max_wait: Duration::from_millis(1) },
+        );
+        let spec = OpenLoopSpec {
+            target_qps: 5000.0,
+            requests: 24,
+            collectors: 3,
+            ..Default::default()
+        };
+        let report =
+            run_open_loop(&coord, spec, |k| synthetic_request(2, 64, 3, 6, 0, k)).unwrap();
+        assert_eq!(report.sent, 24);
+        assert_eq!(report.ok, 24);
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.hist.count(), 24);
+        assert_eq!(report.offered_qps, Some(5000.0));
+        let stats = coord.shutdown();
+        assert_eq!(stats.requests, 24);
+    }
+
+    #[test]
+    fn open_loop_rejects_nonpositive_rates() {
+        let model = DlrmModel::new(4, 64, 8, 1, 6, 3, 16, 1).unwrap();
+        let coord = Coordinator::start(model, None, BatchOptions::default());
+        for qps in [0.0, -5.0, f64::NAN] {
+            let spec = OpenLoopSpec { target_qps: qps, requests: 1, ..Default::default() };
+            assert!(
+                run_open_loop(&coord, spec, |k| synthetic_request(1, 64, 3, 6, 0, k)).is_err(),
+                "qps {qps} accepted"
+            );
+        }
         coord.shutdown();
     }
 }

@@ -27,11 +27,61 @@ use crate::util::rng::Rng;
 use std::sync::Arc;
 
 pub use batcher::{BatchOptions, Batcher};
-pub use loadgen::{run_closed_loop, synthetic_request, LoadReport, LoadSpec};
+pub use loadgen::{
+    run_closed_loop, run_open_loop, synthetic_request, synthetic_request_with, IndexDist,
+    LoadReport, LoadSpec, OpenLoopSpec,
+};
 pub use router::Router;
 pub use server::{Coordinator, CoordinatorClient, ServeOptions};
 pub use shard::ShardPool;
 pub use stats::{LatencyHist, ServeStats};
+
+/// Result of one embedding stage over a flushed batch.
+#[derive(Debug, Clone)]
+pub struct EmbedOutcome {
+    /// `[batch, tables*emb]` row-major embeddings (same contract as
+    /// [`DlrmModel::embed`]).
+    pub embeddings: Vec<f32>,
+    /// Table segments that could not be computed and were zero-filled
+    /// instead (each spans the whole batch). Nonzero only on degraded
+    /// backends like the disaggregated `net` frontend; accumulated
+    /// into [`ServeStats::degraded`].
+    pub degraded: u64,
+}
+
+/// Anything that can run the embedding stage for the serving worker:
+/// the in-process [`ShardPool`], or the multi-process
+/// [`crate::net::NetFrontend`] fanning out to shard servers. The
+/// coordinator stays agnostic — scoring and batching are identical
+/// either way.
+pub trait EmbedStage: Send {
+    fn embed_stage(&mut self, reqs: &Arc<Vec<Request>>) -> Result<EmbedOutcome>;
+}
+
+/// Deterministic embedding tables shared by the single-process model
+/// and shard-server processes. [`DlrmModel::with_session`] draws its
+/// tables from `Rng::new(seed)` *before* any MLP parameter, so a shard
+/// server calling `gen_tables(num_tables, rows, emb, seed)` with the
+/// same shape gets byte-identical table tensors without shipping
+/// gigabytes over the wire — which is what makes the net-mode parity
+/// guarantee (`tests/net_serving.rs`) possible.
+pub fn gen_tables(num_tables: usize, table_rows: usize, emb: usize, seed: u64) -> Vec<Tensor> {
+    let mut rng = Rng::new(seed);
+    gen_tables_with(&mut rng, num_tables, table_rows, emb)
+}
+
+/// Table generation over a caller-owned rng ([`DlrmModel`] keeps
+/// drawing MLP parameters from the same stream afterward).
+pub fn gen_tables_with(
+    rng: &mut Rng,
+    num_tables: usize,
+    table_rows: usize,
+    emb: usize,
+) -> Vec<Tensor> {
+    (0..num_tables)
+        .map(|_| Tensor::f32(vec![table_rows, emb], rng.normal_vec(table_rows * emb, 0.1)))
+        .collect()
+}
 
 /// One inference request: per-table multi-hot category ids + dense
 /// features.
@@ -138,9 +188,7 @@ impl DlrmModel {
         seed: u64,
     ) -> Result<Self> {
         let mut rng = Rng::new(seed);
-        let tables = (0..num_tables)
-            .map(|_| Tensor::f32(vec![table_rows, emb], rng.normal_vec(table_rows * emb, 0.1)))
-            .collect();
+        let tables = gen_tables_with(&mut rng, num_tables, table_rows, emb);
         let d_in = num_tables * emb + dense;
         let program = session.compile(&OpClass::Sls)?;
         Ok(DlrmModel {
@@ -317,6 +365,18 @@ mod tests {
                 .map(|_| (0..4).map(|_| rng.below(m.table_rows as u64) as i32).collect())
                 .collect(),
             dense: (0..m.dense).map(|_| rng.f32()).collect(),
+        }
+    }
+
+    #[test]
+    fn gen_tables_is_byte_identical_to_model_tables() {
+        // the shard-server parity guarantee: regenerating tables from
+        // (shape, seed) must reproduce the model's tables exactly
+        let m = tiny_model(); // seed 42
+        let tables = gen_tables(m.num_tables, m.table_rows, m.emb, 42);
+        assert_eq!(tables.len(), m.num_tables);
+        for (t, (a, b)) in tables.iter().zip(&m.tables).enumerate() {
+            assert_eq!(a.as_f32(), b.as_f32(), "table {t}");
         }
     }
 

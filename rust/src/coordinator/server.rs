@@ -7,7 +7,7 @@
 use super::batcher::{BatchOptions, Batcher};
 use super::shard::ShardPool;
 use super::stats::ServeStats;
-use super::{DlrmModel, Request, Response};
+use super::{DlrmModel, EmbedOutcome, EmbedStage, Request, Response};
 use crate::error::{EmberError, Result};
 use crate::runtime::Runtime;
 use std::path::PathBuf;
@@ -92,9 +92,32 @@ impl Coordinator {
         let (tx, rx) = mpsc::channel::<Envelope>();
         let handle = std::thread::spawn(move || {
             let runtime = artifacts_dir.and_then(|d| Runtime::new(d).ok());
-            let pool =
-                if opts.shards > 1 { Some(ShardPool::new(&model, opts.shards)) } else { None };
-            worker(model, pool, runtime, opts.batch, rx)
+            let embedder: Option<Box<dyn EmbedStage>> = if opts.shards > 1 {
+                Some(Box::new(ShardPool::new(&model, opts.shards)))
+            } else {
+                None
+            };
+            worker(model, embedder, runtime, opts.batch, rx)
+        });
+        Coordinator { tx: Some(tx), handle: Some(handle) }
+    }
+
+    /// Spawn a coordinator whose embedding stage is delegated to a
+    /// caller-supplied [`EmbedStage`] — e.g. a [`crate::net::NetFrontend`]
+    /// fanning lookups out to shard-server processes. Scoring stays on
+    /// the coordinator thread; per-batch `degraded` counts from the
+    /// stage accumulate into [`ServeStats::degraded`].
+    pub fn start_with_embedder(
+        model: DlrmModel,
+        artifacts_dir: Option<PathBuf>,
+        mut opts: ServeOptions,
+        embedder: Box<dyn EmbedStage>,
+    ) -> Self {
+        opts.batch.max_batch = opts.batch.max_batch.clamp(1, model.batch.max(1));
+        let (tx, rx) = mpsc::channel::<Envelope>();
+        let handle = std::thread::spawn(move || {
+            let runtime = artifacts_dir.and_then(|d| Runtime::new(d).ok());
+            worker(model, Some(embedder), runtime, opts.batch, rx)
         });
         Coordinator { tx: Some(tx), handle: Some(handle) }
     }
@@ -143,7 +166,7 @@ impl Drop for Coordinator {
 /// per-request responses + latency recording.
 fn run_batch(
     model: &DlrmModel,
-    pool: Option<&ShardPool>,
+    embedder: &mut Option<Box<dyn EmbedStage>>,
     runtime: &mut Option<Runtime>,
     batch: Vec<Request>,
     senders: Vec<(Instant, Sender<Result<Response>>)>,
@@ -152,11 +175,14 @@ fn run_batch(
     stats.batches += 1;
     // one Arc wrap instead of a per-shard deep copy of the batch
     let batch = Arc::new(batch);
-    let embeddings = match pool {
-        Some(p) => p.embed_shared(batch.clone()),
-        None => model.embed(&batch),
+    let outcome = match embedder.as_deref_mut() {
+        Some(stage) => stage.embed_stage(&batch),
+        None => model.embed(&batch).map(|e| EmbedOutcome { embeddings: e, degraded: 0 }),
     };
-    let result = embeddings.and_then(|e| model.score(runtime, &batch, &e));
+    let result = outcome.and_then(|o| {
+        stats.degraded += o.degraded;
+        model.score(runtime, &batch, &o.embeddings)
+    });
     match result {
         Ok(responses) => {
             for (resp, (t0, tx)) in responses.into_iter().zip(senders) {
@@ -177,7 +203,7 @@ fn run_batch(
 
 fn worker(
     model: DlrmModel,
-    pool: Option<ShardPool>,
+    mut embedder: Option<Box<dyn EmbedStage>>,
     mut runtime: Option<Runtime>,
     opts: BatchOptions,
     rx: Receiver<Envelope>,
@@ -199,13 +225,13 @@ fn worker(
                 waiting.push((t0, rtx));
                 if let Some(batch) = batcher.push(req, Instant::now()) {
                     let senders = std::mem::take(&mut waiting);
-                    run_batch(&model, pool.as_ref(), &mut runtime, batch, senders, &mut stats);
+                    run_batch(&model, &mut embedder, &mut runtime, batch, senders, &mut stats);
                 }
             }
             Err(RecvTimeoutError::Timeout) => {
                 if let Some(batch) = batcher.poll(Instant::now()) {
                     let senders = std::mem::take(&mut waiting);
-                    run_batch(&model, pool.as_ref(), &mut runtime, batch, senders, &mut stats);
+                    run_batch(&model, &mut embedder, &mut runtime, batch, senders, &mut stats);
                 }
             }
             Err(RecvTimeoutError::Disconnected) => {
@@ -213,7 +239,7 @@ fn worker(
                 let batch = batcher.flush();
                 if !batch.is_empty() {
                     let senders = std::mem::take(&mut waiting);
-                    run_batch(&model, pool.as_ref(), &mut runtime, batch, senders, &mut stats);
+                    run_batch(&model, &mut embedder, &mut runtime, batch, senders, &mut stats);
                 }
                 break;
             }

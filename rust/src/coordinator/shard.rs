@@ -133,6 +133,15 @@ impl ShardPool {
     }
 }
 
+impl super::EmbedStage for ShardPool {
+    /// In-process shards share the coordinator's fate — there is no
+    /// partial-failure mode, so `degraded` is always zero and any shard
+    /// error fails the whole batch (the pre-net behavior, unchanged).
+    fn embed_stage(&mut self, reqs: &Arc<Vec<Request>>) -> Result<super::EmbedOutcome> {
+        Ok(super::EmbedOutcome { embeddings: self.embed_shared(reqs.clone())?, degraded: 0 })
+    }
+}
+
 impl Drop for ShardPool {
     fn drop(&mut self) {
         // disconnect job channels so workers fall out of their recv loop

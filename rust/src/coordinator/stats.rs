@@ -48,6 +48,25 @@ impl LatencyHist {
         self.total += other.total;
     }
 
+    /// Raw bucket counts — the wire form a shard server ships in a
+    /// `StatsResp` frame.
+    pub fn bucket_counts(&self) -> [u64; LAT_BUCKETS] {
+        self.counts
+    }
+
+    /// Rebuild a histogram from wire-shipped bucket counts (the
+    /// inverse of [`LatencyHist::bucket_counts`]); a short or long
+    /// count vector is zero-padded / truncated into the local bucket
+    /// layout so a version-skewed peer degrades instead of erroring.
+    pub fn from_bucket_counts(counts: &[u64]) -> LatencyHist {
+        let mut h = LatencyHist::default();
+        for (a, b) in h.counts.iter_mut().zip(counts.iter()) {
+            *a = *b;
+        }
+        h.total = h.counts.iter().sum();
+        h
+    }
+
     /// Latency at quantile `q` in [0, 1]: the upper bound of the bucket
     /// containing the q-th sample. Zero when empty.
     pub fn quantile(&self, q: f64) -> Duration {
@@ -78,9 +97,26 @@ pub struct ServeStats {
     pub hist: LatencyHist,
     /// Worker lifetime (spawn → shutdown), the throughput denominator.
     pub elapsed: Duration,
+    /// Table segments served as zeros because every host for the table
+    /// was dead (net mode only). Each increment is one table across a
+    /// whole batch — responses still succeed, quality degrades.
+    pub degraded: u64,
 }
 
 impl ServeStats {
+    /// Fold stats from another process (shard server / second frontend)
+    /// into this one. Counters and histograms add; `elapsed` takes the
+    /// max because concurrent processes overlap in wall time — summing
+    /// would undercount throughput by the fan-out factor.
+    pub fn merge(&mut self, other: &ServeStats) {
+        self.requests += other.requests;
+        self.batches += other.batches;
+        self.errors += other.errors;
+        self.degraded += other.degraded;
+        self.hist.merge(&other.hist);
+        self.elapsed = self.elapsed.max(other.elapsed);
+    }
+
     pub fn p50(&self) -> Duration {
         self.hist.quantile(0.50)
     }
@@ -112,7 +148,11 @@ impl fmt::Display for ServeStats {
             self.p50(),
             self.p95(),
             self.p99()
-        )
+        )?;
+        if self.degraded > 0 {
+            write!(f, ", {} degraded segments", self.degraded)?;
+        }
+        Ok(())
     }
 }
 
@@ -156,6 +196,111 @@ mod tests {
         assert_eq!(h.count(), 2);
         assert_eq!(h.quantile(0.01), Duration::from_micros(1));
         assert_eq!(h.quantile(1.0), Duration::from_micros(1u64 << (LAT_BUCKETS - 1)));
+    }
+
+    #[test]
+    fn empty_hist_quantiles_are_zero_at_every_q() {
+        let h = LatencyHist::default();
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(h.quantile(q), Duration::ZERO, "q={q}");
+        }
+        // Merging an empty histogram is a no-op, not a corruption.
+        let mut a = LatencyHist::default();
+        a.record(Duration::from_micros(100));
+        let before = a.quantile(0.5);
+        a.merge(&LatencyHist::default());
+        assert_eq!(a.count(), 1);
+        assert_eq!(a.quantile(0.5), before);
+    }
+
+    #[test]
+    fn bucket_counts_round_trip_through_the_wire_form() {
+        let mut h = LatencyHist::default();
+        for us in [1u64, 7, 100, 5000, 1 << 20] {
+            h.record(Duration::from_micros(us));
+        }
+        let wire = h.bucket_counts().to_vec();
+        let back = LatencyHist::from_bucket_counts(&wire);
+        assert_eq!(back.count(), h.count());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(back.quantile(q), h.quantile(q), "q={q}");
+        }
+        // Version skew: short and long wire vectors still decode.
+        assert_eq!(LatencyHist::from_bucket_counts(&[3, 2]).count(), 5);
+        let long: Vec<u64> = (0..LAT_BUCKETS as u64 + 8).map(|_| 1).collect();
+        assert_eq!(LatencyHist::from_bucket_counts(&long).count(), LAT_BUCKETS as u64);
+    }
+
+    #[test]
+    fn cross_process_merge_matches_single_process_recording() {
+        // Record the same samples into one hist and into two "process"
+        // hists that are then merged — quantiles must agree exactly.
+        let samples: Vec<u64> = (0..200).map(|i| 10 + i * 37).collect();
+        let mut single = LatencyHist::default();
+        let mut p1 = LatencyHist::default();
+        let mut p2 = LatencyHist::default();
+        for (i, &us) in samples.iter().enumerate() {
+            let d = Duration::from_micros(us);
+            single.record(d);
+            if i % 2 == 0 {
+                p1.record(d);
+            } else {
+                p2.record(d);
+            }
+        }
+        let mut merged = LatencyHist::default();
+        merged.merge(&p1);
+        merged.merge(&p2);
+        assert_eq!(merged.count(), single.count());
+        for q in [0.01, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(merged.quantile(q), single.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn serve_stats_merge_sums_counters_and_takes_max_elapsed() {
+        let mut a = ServeStats {
+            requests: 100,
+            batches: 10,
+            errors: 1,
+            degraded: 2,
+            elapsed: Duration::from_secs(4),
+            ..Default::default()
+        };
+        for _ in 0..100 {
+            a.hist.record(Duration::from_micros(50));
+        }
+        let mut b = ServeStats {
+            requests: 300,
+            batches: 30,
+            errors: 0,
+            degraded: 5,
+            elapsed: Duration::from_secs(2),
+            ..Default::default()
+        };
+        for _ in 0..300 {
+            b.hist.record(Duration::from_micros(200));
+        }
+        a.merge(&b);
+        assert_eq!(a.requests, 400);
+        assert_eq!(a.batches, 40);
+        assert_eq!(a.errors, 1);
+        assert_eq!(a.degraded, 7);
+        assert_eq!(a.hist.count(), 400);
+        // Overlapping processes: elapsed is the max, so throughput is
+        // 400 req / 4 s, not 400 / 6 s.
+        assert_eq!(a.elapsed, Duration::from_secs(4));
+        assert!((a.throughput_rps() - 100.0).abs() < 1e-9);
+        // p50 lands in the 300-sample bucket ([128, 256) µs).
+        assert_eq!(a.p50(), Duration::from_micros(256));
+    }
+
+    #[test]
+    fn degraded_counter_shows_in_display_only_when_nonzero() {
+        let mut s = ServeStats { requests: 1, ..Default::default() };
+        assert!(!format!("{s}").contains("degraded"));
+        s.degraded = 3;
+        assert!(format!("{s}").contains("3 degraded segments"));
     }
 
     #[test]

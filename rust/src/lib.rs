@@ -42,6 +42,7 @@ pub mod frontend;
 pub mod harness;
 pub mod interp;
 pub mod ir;
+pub mod net;
 pub mod runtime;
 pub mod session;
 pub mod util;

@@ -5,13 +5,16 @@
 
 use ember::compiler::passes::pipeline::{CompileOptions, OptLevel};
 use ember::coordinator::{
-    run_closed_loop, synthetic_request, BatchOptions, Coordinator, DlrmModel, LoadReport,
-    LoadSpec, ServeOptions,
+    run_closed_loop, run_open_loop, synthetic_request_with, BatchOptions, Coordinator, DlrmModel,
+    IndexDist, LoadReport, LoadSpec, OpenLoopSpec, ServeOptions,
 };
 use ember::dae::MachineConfig;
 use ember::error::{EmberError, Result};
 use ember::frontend::embedding_ops::{OpClass, Semiring};
 use ember::harness;
+use ember::net::{
+    placement, Endpoint, NetFrontend, NetFrontendOpts, NetShape, ShardServer, ShardServerCfg,
+};
 use ember::runtime::Runtime;
 use ember::session::EmberSession;
 use ember::util::perfrec::{run_matrix, MatrixSpec, PerfRecording};
@@ -30,6 +33,15 @@ USAGE:
               and exits nonzero when --baseline comparison finds a regression
   ember bench --exp <table1..4|fig1|fig3|fig4|fig6|fig7|fig8|fig16..19|all> [--out results] [--seed N]
   ember serve [--requests N] [--clients C] [--shards S] [--qps Q[,Q..]] [--tables T] [--artifacts artifacts]
+              [--zipf S] [--open-loop]
+  ember serve --net (--shard-servers N | --shard-sockets P1,P2,..) [--replicate R] [--smoke]
+              [--tables T] [--rows R] [--emb E] [--batch B] [--seed S] [--requests N] [--clients C]
+              [--zipf S] [--open-loop] [--qps Q]
+              multi-process serving: fans the embedding stage out to shard-server processes over
+              UDS (or tcp:HOST:PORT) and prints a NET_SERVE summary line
+  ember shard-server --socket PATH --own T1,T2,.. [--shard-id I] [--tables T] [--rows R] [--emb E]
+              [--batch B] [--seed S]
+              standalone shard-server process hosting the listed tables (regenerated from --seed)
   ember info
 "
     );
@@ -231,7 +243,23 @@ fn cmd_bench_perf(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--zipf S` into an index distribution (absent = uniform,
+/// bare flag = the conventional 1.05 production skew).
+fn parse_dist(flags: &HashMap<String, String>) -> Result<IndexDist> {
+    match flags.get("zipf") {
+        Some(v) if !v.is_empty() => v
+            .parse()
+            .map(IndexDist::Zipf)
+            .map_err(|_| EmberError::Parse(format!("bad --zipf value `{v}`"))),
+        Some(_) => Ok(IndexDist::Zipf(1.05)),
+        None => Ok(IndexDist::Uniform),
+    }
+}
+
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    if flags.contains_key("net") {
+        return cmd_serve_net(flags);
+    }
     let n: usize = flags.get("requests").and_then(|v| v.parse().ok()).unwrap_or(512);
     let clients: usize = flags.get("clients").and_then(|v| v.parse().ok()).unwrap_or(4);
     let shards: usize = flags.get("shards").and_then(|v| v.parse().ok()).unwrap_or(4);
@@ -291,9 +319,12 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let shape = make_model()?;
     let (num_tables, rows, dense, max_lookups) =
         (shape.num_tables, shape.table_rows, shape.dense, shape.max_lookups);
+    let dist = parse_dist(flags)?;
+    let open_loop = flags.contains_key("open-loop");
     println!(
-        "serving: {num_tables} tables x {rows} rows, batch {}, {shards} embedding shard(s), {clients} client(s)\n",
-        shape.batch
+        "serving: {num_tables} tables x {rows} rows, batch {}, {shards} embedding shard(s), {clients} client(s), {dist} indices, {} arrivals\n",
+        shape.batch,
+        if open_loop { "open-loop poisson" } else { "closed-loop" }
     );
     println!("{:>10}  {}", "target", LoadReport::table_header());
     for target in qps_targets {
@@ -305,23 +336,274 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
                 shards,
             },
         );
-        let spec = LoadSpec {
-            clients,
-            requests_per_client: n.div_ceil(clients.max(1)),
-            target_qps: target,
+        let report = if open_loop {
+            let spec = OpenLoopSpec {
+                target_qps: target.unwrap_or(2000.0),
+                requests: n,
+                seed: 7,
+                collectors: clients,
+                dist,
+            };
+            run_open_loop(&coord, spec, |k| {
+                synthetic_request_with(num_tables, rows, dense, max_lookups, dist, 0, k)
+            })?
+        } else {
+            let spec = LoadSpec {
+                clients,
+                requests_per_client: n.div_ceil(clients.max(1)),
+                target_qps: target,
+                dist,
+            };
+            run_closed_loop(&coord, spec, |c, k| {
+                synthetic_request_with(num_tables, rows, dense, max_lookups, dist, c, k)
+            })?
         };
-        let report = run_closed_loop(&coord, spec, |c, k| {
-            synthetic_request(num_tables, rows, dense, max_lookups, c, k)
-        })?;
         let stats = coord.shutdown();
         println!(
             "{:>10}  {}   ({} batches, {} failed requests)",
-            target.map(|q| format!("{q:.0}")).unwrap_or_else(|| "max".into()),
+            report
+                .offered_qps
+                .map(|q| format!("{q:.0}"))
+                .unwrap_or_else(|| "max".into()),
             report.table_row(),
             stats.batches,
             report.errors,
         );
     }
+    Ok(())
+}
+
+/// Multi-process serving: frontend in this process, embedding stage
+/// fanned out to shard-server processes over the wire protocol.
+fn cmd_serve_net(flags: &HashMap<String, String>) -> Result<()> {
+    let smoke = flags.contains_key("smoke");
+    let n: usize = flags
+        .get("requests")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if smoke { 64 } else { 512 });
+    let clients: usize = flags
+        .get("clients")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if smoke { 2 } else { 4 });
+    let tables: usize = flags.get("tables").and_then(|v| v.parse().ok()).unwrap_or(16);
+    let rows: usize = flags.get("rows").and_then(|v| v.parse().ok()).unwrap_or(4096);
+    let emb: usize = flags.get("emb").and_then(|v| v.parse().ok()).unwrap_or(16);
+    let batch: usize = flags.get("batch").and_then(|v| v.parse().ok()).unwrap_or(32);
+    let seed: u64 = flags.get("seed").and_then(|v| v.parse().ok()).unwrap_or(42);
+    let replicas: usize = flags.get("replicate").and_then(|v| v.parse().ok()).unwrap_or(0);
+    let dist = parse_dist(flags)?;
+    let open_loop = flags.contains_key("open-loop");
+    let (max_lookups, dense, hidden) = (32usize, 13usize, 64usize);
+
+    // Endpoints: either the caller runs shard servers (--shard-sockets)
+    // or this process spawns them as children (--shard-servers N).
+    let mut children: Vec<std::process::Child> = Vec::new();
+    let endpoints: Vec<Endpoint> = match flags.get("shard-sockets").filter(|s| !s.is_empty()) {
+        Some(socks) => socks.split(',').map(|s| Endpoint::parse(s.trim())).collect(),
+        None => {
+            let nserv: usize =
+                flags.get("shard-servers").and_then(|v| v.parse().ok()).unwrap_or(2);
+            let nserv = nserv.max(1);
+            let exe = std::env::current_exe()
+                .map_err(|e| EmberError::Runtime(format!("cannot locate own binary: {e}")))?;
+            let hosted = placement(tables, nserv, replicas);
+            let mut eps = Vec::with_capacity(nserv);
+            for (i, owned) in hosted.iter().enumerate() {
+                let sock = std::env::temp_dir()
+                    .join(format!("ember-shard-{}-{i}.sock", std::process::id()));
+                let _ = std::fs::remove_file(&sock);
+                let own_csv: Vec<String> = owned.iter().map(|t| t.to_string()).collect();
+                let child = std::process::Command::new(&exe)
+                    .args([
+                        "shard-server",
+                        "--socket",
+                        &sock.display().to_string(),
+                        "--shard-id",
+                        &i.to_string(),
+                        "--own",
+                        &own_csv.join(","),
+                        "--tables",
+                        &tables.to_string(),
+                        "--rows",
+                        &rows.to_string(),
+                        "--emb",
+                        &emb.to_string(),
+                        "--batch",
+                        &batch.to_string(),
+                        "--seed",
+                        &seed.to_string(),
+                    ])
+                    .spawn()
+                    .map_err(|e| EmberError::Runtime(format!("spawning shard server: {e}")))?;
+                children.push(child);
+                eps.push(Endpoint::Uds(sock));
+            }
+            // wait for every child to bind its socket
+            let deadline = Instant::now() + Duration::from_secs(10);
+            for ep in &eps {
+                if let Endpoint::Uds(p) = ep {
+                    while !p.exists() && Instant::now() < deadline {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                }
+            }
+            eps
+        }
+    };
+
+    let hosted = placement(tables, endpoints.len(), replicas);
+    let mut session = EmberSession::default();
+    let model = DlrmModel::with_session(
+        &mut session,
+        batch,
+        rows,
+        emb,
+        tables,
+        max_lookups,
+        dense,
+        hidden,
+        seed,
+    )?;
+    let frontend = NetFrontend::connect(
+        &endpoints,
+        Some(&hosted),
+        NetShape::of(&model),
+        NetFrontendOpts::default(),
+    )?;
+    let alive = frontend.alive();
+    println!(
+        "net serving: {tables} tables x {rows} rows, batch {batch}, {}/{} shard server(s) alive, \
+         replicate {replicas}, {clients} client(s), {dist} indices",
+        alive,
+        endpoints.len()
+    );
+
+    let coord = Coordinator::start_with_embedder(
+        model,
+        None,
+        ServeOptions {
+            batch: BatchOptions { max_batch: batch, max_wait: Duration::from_millis(1) },
+            shards: 1,
+        },
+        Box::new(frontend),
+    );
+    let report = if open_loop {
+        let target = flags
+            .get("qps")
+            .and_then(|v| v.split(',').next().and_then(|q| q.trim().parse().ok()))
+            .unwrap_or(2000.0);
+        let spec =
+            OpenLoopSpec { target_qps: target, requests: n, seed: 7, collectors: clients, dist };
+        run_open_loop(&coord, spec, |k| {
+            synthetic_request_with(tables, rows, dense, max_lookups, dist, 0, k)
+        })?
+    } else {
+        let spec = LoadSpec {
+            clients,
+            requests_per_client: n.div_ceil(clients.max(1)),
+            target_qps: None,
+            dist,
+        };
+        run_closed_loop(&coord, spec, |c, k| {
+            synthetic_request_with(tables, rows, dense, max_lookups, dist, c, k)
+        })?
+    };
+    let stats = coord.shutdown();
+    println!("{:>10}  {}", "target", LoadReport::table_header());
+    println!(
+        "{:>10}  {}   ({} batches, {} failed requests, {} degraded segments)",
+        report
+            .offered_qps
+            .map(|q| format!("{q:.0}"))
+            .unwrap_or_else(|| "max".into()),
+        report.table_row(),
+        stats.batches,
+        report.errors,
+        stats.degraded,
+    );
+    // Machine-greppable summary for the CI smoke job.
+    println!(
+        "NET_SERVE ok={} errors={} degraded={} alive={}",
+        report.ok, report.errors, stats.degraded, alive
+    );
+
+    // Graceful teardown of spawned children: ask each shard to stop,
+    // then reap (killing as a fallback).
+    if !children.is_empty() {
+        for ep in &endpoints {
+            shutdown_shard_at(ep);
+        }
+        for mut ch in children {
+            let deadline = Instant::now() + Duration::from_secs(2);
+            loop {
+                match ch.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if Instant::now() < deadline => {
+                        std::thread::sleep(Duration::from_millis(20))
+                    }
+                    _ => {
+                        let _ = ch.kill();
+                        let _ = ch.wait();
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Best-effort `Shutdown` frame to one shard server.
+fn shutdown_shard_at(ep: &Endpoint) {
+    use ember::net::{read_frame, write_frame, Frame};
+    let Ok(mut s) = ep.connect() else { return };
+    let _ = s.set_read_timeout(Some(Duration::from_millis(500)));
+    if write_frame(&mut s, &Frame::Hello { version: ember::net::proto::VERSION }).is_err() {
+        return;
+    }
+    let _ = read_frame(&mut s); // HelloAck
+    let _ = write_frame(&mut s, &Frame::Shutdown);
+}
+
+/// Standalone shard-server process: host the listed tables and serve
+/// until a `Shutdown` frame (or signal) arrives.
+fn cmd_shard_server(flags: &HashMap<String, String>) -> Result<()> {
+    let socket = flags
+        .get("socket")
+        .filter(|s| !s.is_empty())
+        .ok_or_else(|| EmberError::Parse("shard-server requires --socket PATH".into()))?;
+    let own: Vec<u32> = match flags.get("own").filter(|s| !s.is_empty()) {
+        Some(csv) => csv
+            .split(',')
+            .map(|t| {
+                t.trim()
+                    .parse()
+                    .map_err(|_| EmberError::Parse(format!("bad --own table id `{t}`")))
+            })
+            .collect::<Result<_>>()?,
+        None => return Err(EmberError::Parse("shard-server requires --own T1,T2,..".into())),
+    };
+    let cfg = ShardServerCfg {
+        shard_id: flags.get("shard-id").and_then(|v| v.parse().ok()).unwrap_or(0),
+        num_tables: flags.get("tables").and_then(|v| v.parse().ok()).unwrap_or(16),
+        table_rows: flags.get("rows").and_then(|v| v.parse().ok()).unwrap_or(4096),
+        emb: flags.get("emb").and_then(|v| v.parse().ok()).unwrap_or(16),
+        batch: flags.get("batch").and_then(|v| v.parse().ok()).unwrap_or(32),
+        seed: flags.get("seed").and_then(|v| v.parse().ok()).unwrap_or(42),
+        owned: own.clone(),
+    };
+    let ep = Endpoint::parse(socket);
+    let srv = ShardServer::spawn(ep, cfg)?;
+    println!(
+        "shard-server {} listening on {} hosting tables {:?}",
+        flags.get("shard-id").map(String::as_str).unwrap_or("0"),
+        socket,
+        own
+    );
+    while !srv.stopped() {
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    srv.wait();
     Ok(())
 }
 
@@ -341,6 +623,7 @@ fn main() {
         "simulate" => cmd_simulate(&flags),
         "bench" => cmd_bench(&flags),
         "serve" => cmd_serve(&flags),
+        "shard-server" => cmd_shard_server(&flags),
         "info" => {
             cmd_info();
             Ok(())

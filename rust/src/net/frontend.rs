@@ -1,0 +1,597 @@
+//! Frontend side of disaggregated serving: placement-aware fan-out of
+//! the embedding stage across shard-server connections, with replica
+//! failover, graceful degradation, and reconnect/backoff.
+//!
+//! One [`NetFrontend`] owns a connection per shard server. Each
+//! `embed` call runs rounds of *assign → send → receive*: every
+//! not-yet-served table is assigned to an alive, untried connection
+//! hosting it (primaries and replicas are interchangeable — whichever
+//! answers first wins), the per-connection `EmbedReq` frames go out,
+//! and responses merge into the output buffer. A connection that
+//! errors or times out is marked dead (with exponential reconnect
+//! backoff) and its tables roll into the next round against the
+//! remaining replicas. A table with no untried alive host **degrades**:
+//! its output segment stays zero and the degrade counter ticks —
+//! responses still succeed, quality drops, the serving tier stays up.
+//! The tried-set per table grows every round, so the loop always
+//! terminates.
+//!
+//! Backpressure: at most `max_inflight` unanswered frames per
+//! connection; a connection at its bound is unavailable for
+//! assignment, exactly like a dead one (so `max_inflight: 0`
+//! degrades everything — used by tests to exercise the bound).
+
+use super::proto::{read_frame, write_frame, Frame, TableCsr, VERSION};
+use super::shard_server::table_csr;
+use super::transport::{Endpoint, NetStream};
+use crate::coordinator::stats::LatencyHist;
+use crate::coordinator::{EmbedOutcome, EmbedStage, Request};
+use crate::error::{EmberError, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Model shape the frontend and every shard server must agree on
+/// (verified against each `HelloAck`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetShape {
+    pub num_tables: usize,
+    pub table_rows: usize,
+    pub emb: usize,
+    pub batch: usize,
+    pub max_lookups: usize,
+}
+
+impl NetShape {
+    pub fn of(model: &crate::coordinator::DlrmModel) -> NetShape {
+        NetShape {
+            num_tables: model.num_tables,
+            table_rows: model.table_rows,
+            emb: model.emb,
+            batch: model.batch,
+            max_lookups: model.max_lookups,
+        }
+    }
+}
+
+/// Failure-handling knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct NetFrontendOpts {
+    /// Per-frame read/write timeout. A shard that stops answering
+    /// looks like an error after this long, never a hang.
+    pub timeout: Duration,
+    /// Bounded in-flight frames per connection (backpressure).
+    pub max_inflight: usize,
+    /// First reconnect delay after a connection dies; doubles per
+    /// consecutive failure (capped at `base * 64`).
+    pub reconnect_base: Duration,
+}
+
+impl Default for NetFrontendOpts {
+    fn default() -> Self {
+        NetFrontendOpts {
+            timeout: Duration::from_secs(2),
+            max_inflight: 32,
+            reconnect_base: Duration::from_millis(50),
+        }
+    }
+}
+
+/// One shard-server connection and its health state.
+struct ShardConn {
+    endpoint: Endpoint,
+    /// `None` while dead; reconnect attempts gate on `dead_until`.
+    stream: Option<NetStream>,
+    /// Tables this server hosts (from `HelloAck`, or the expected
+    /// placement if it was dead at connect time).
+    tables: Vec<u32>,
+    /// Consecutive failures since the last healthy frame.
+    fails: u32,
+    dead_until: Option<Instant>,
+    /// Unanswered frames currently on the wire.
+    inflight: usize,
+}
+
+fn backoff(base: Duration, fails: u32) -> Duration {
+    base * 2u32.pow(fails.saturating_sub(1).min(6))
+}
+
+fn mark_dead(conn: &mut ShardConn, base: Duration) {
+    if let Some(s) = conn.stream.take() {
+        let _ = s.shutdown();
+    }
+    conn.fails += 1;
+    conn.dead_until = Some(Instant::now() + backoff(base, conn.fails));
+}
+
+/// Connect + handshake one endpoint, verifying the shape agreement.
+fn handshake(ep: &Endpoint, shape: &NetShape, timeout: Duration) -> Result<(NetStream, Vec<u32>)> {
+    let mut s = ep.connect()?;
+    s.set_read_timeout(Some(timeout))?;
+    s.set_write_timeout(Some(timeout))?;
+    write_frame(&mut s, &Frame::Hello { version: VERSION })?;
+    match read_frame(&mut s)? {
+        Frame::HelloAck { table_rows, emb, batch, tables, .. } => {
+            if table_rows as usize != shape.table_rows
+                || emb as usize != shape.emb
+                || batch as usize != shape.batch
+            {
+                return Err(EmberError::Workload(format!(
+                    "shard at {ep} serves shape rows={table_rows} emb={emb} batch={batch}, \
+                     frontend expects rows={} emb={} batch={}",
+                    shape.table_rows, shape.emb, shape.batch
+                )));
+            }
+            Ok((s, tables))
+        }
+        Frame::ErrResp { msg, .. } => {
+            Err(EmberError::Runtime(format!("shard at {ep} refused handshake: {msg}")))
+        }
+        other => Err(EmberError::Runtime(format!(
+            "shard at {ep} sent {other:?} instead of HelloAck"
+        ))),
+    }
+}
+
+/// Fan-out client over N shard-server connections.
+pub struct NetFrontend {
+    conns: Vec<ShardConn>,
+    shape: NetShape,
+    opts: NetFrontendOpts,
+    seq: u64,
+}
+
+impl NetFrontend {
+    /// Connect to every endpoint and handshake.
+    ///
+    /// `expected_tables`, when given, is the intended placement (one
+    /// table list per endpoint, e.g. from [`super::placement`]): an
+    /// endpoint that fails to connect then becomes a *dead* connection
+    /// carrying the expected hosting — its tables degrade (or fail
+    /// over to replicas) at embed time, and reconnect/backoff keeps
+    /// probing it. Without `expected_tables` a connect failure is a
+    /// hard error (the frontend cannot know what the dead server was
+    /// supposed to host). A shape disagreement from a *live* server is
+    /// always a hard error — that is misconfiguration, not failure.
+    pub fn connect(
+        endpoints: &[Endpoint],
+        expected_tables: Option<&[Vec<u32>]>,
+        shape: NetShape,
+        opts: NetFrontendOpts,
+    ) -> Result<NetFrontend> {
+        if endpoints.is_empty() {
+            return Err(EmberError::Workload("net frontend needs at least one shard".into()));
+        }
+        if let Some(exp) = expected_tables {
+            if exp.len() != endpoints.len() {
+                return Err(EmberError::Workload(format!(
+                    "{} expected-placement entries for {} endpoints",
+                    exp.len(),
+                    endpoints.len()
+                )));
+            }
+        }
+        let mut conns = Vec::with_capacity(endpoints.len());
+        for (i, ep) in endpoints.iter().enumerate() {
+            match handshake(ep, &shape, opts.timeout) {
+                Ok((stream, tables)) => conns.push(ShardConn {
+                    endpoint: ep.clone(),
+                    stream: Some(stream),
+                    tables,
+                    fails: 0,
+                    dead_until: None,
+                    inflight: 0,
+                }),
+                Err(e @ EmberError::Workload(_)) => return Err(e),
+                Err(e) => match expected_tables {
+                    Some(exp) => conns.push(ShardConn {
+                        endpoint: ep.clone(),
+                        stream: None,
+                        tables: exp[i].clone(),
+                        fails: 1,
+                        dead_until: Some(Instant::now() + backoff(opts.reconnect_base, 1)),
+                        inflight: 0,
+                    }),
+                    None => return Err(e),
+                },
+            }
+        }
+        Ok(NetFrontend { conns, shape, opts, seq: 0 })
+    }
+
+    /// Connections currently alive (handshaken and not marked dead).
+    pub fn alive(&self) -> usize {
+        self.conns.iter().filter(|c| c.stream.is_some()).count()
+    }
+
+    /// Retry handshakes for dead connections whose backoff has expired.
+    fn reconnect_expired(&mut self) {
+        for conn in &mut self.conns {
+            if conn.stream.is_some() {
+                continue;
+            }
+            let due = conn.dead_until.map(|t| Instant::now() >= t).unwrap_or(true);
+            if !due {
+                continue;
+            }
+            match handshake(&conn.endpoint, &self.shape, self.opts.timeout) {
+                Ok((stream, tables)) => {
+                    conn.stream = Some(stream);
+                    conn.tables = tables;
+                    conn.fails = 0;
+                    conn.dead_until = None;
+                }
+                Err(_) => {
+                    conn.fails += 1;
+                    conn.dead_until =
+                        Some(Instant::now() + backoff(self.opts.reconnect_base, conn.fails));
+                }
+            }
+        }
+    }
+
+    /// Run the embedding stage across the shard servers. Returns the
+    /// `[batch, tables*emb]` row-major embeddings (same contract as the
+    /// in-process paths, byte-identical on healthy shards) plus the
+    /// number of table segments degraded to zeros.
+    pub fn embed(&mut self, reqs: &[Request]) -> Result<(Vec<f32>, u64)> {
+        let NetShape { num_tables, emb, batch, max_lookups, .. } = self.shape;
+        let width = num_tables * emb;
+        let mut out = vec![0f32; batch * width];
+        let mut degraded = 0u64;
+        let mut remaining: Vec<u32> = (0..num_tables as u32).collect();
+        let mut tried: HashMap<u32, Vec<usize>> = HashMap::new();
+
+        while !remaining.is_empty() {
+            self.reconnect_expired();
+
+            // Assign every remaining table to an alive, untried,
+            // not-backpressured host; no such host ⇒ degrade.
+            let mut pending: Vec<Vec<u32>> = vec![Vec::new(); self.conns.len()];
+            let mut assigned_any = false;
+            for t in remaining.drain(..) {
+                let tried_t = tried.entry(t).or_default();
+                let pick = self.conns.iter().enumerate().find_map(|(c, conn)| {
+                    (conn.stream.is_some()
+                        && conn.inflight < self.opts.max_inflight
+                        && conn.tables.contains(&t)
+                        && !tried_t.contains(&c))
+                    .then_some(c)
+                });
+                match pick {
+                    Some(c) => {
+                        tried_t.push(c);
+                        pending[c].push(t);
+                        assigned_any = true;
+                    }
+                    None => degraded += 1, // segment stays zero-filled
+                }
+            }
+            if !assigned_any {
+                break;
+            }
+
+            // Send one EmbedReq per involved connection.
+            let mut next_remaining: Vec<u32> = Vec::new();
+            let mut awaiting: Vec<(usize, u64, Vec<u32>)> = Vec::new();
+            for (c, tables) in pending.into_iter().enumerate() {
+                if tables.is_empty() {
+                    continue;
+                }
+                self.seq += 1;
+                let seq = self.seq;
+                let csrs: Vec<TableCsr> = tables
+                    .iter()
+                    .map(|&t| table_csr(reqs, t, batch, max_lookups))
+                    .collect();
+                let frame = Frame::EmbedReq { seq, batch: batch as u32, tables: csrs };
+                let conn = &mut self.conns[c];
+                let sent = match conn.stream.as_mut() {
+                    Some(s) => write_frame(s, &frame).is_ok(),
+                    None => false,
+                };
+                if sent {
+                    conn.inflight += 1;
+                    awaiting.push((c, seq, tables));
+                } else {
+                    mark_dead(conn, self.opts.reconnect_base);
+                    next_remaining.extend(tables);
+                }
+            }
+
+            // Receive: merge successes, roll failures into next round.
+            for (c, seq, tables) in awaiting {
+                let conn = &mut self.conns[c];
+                conn.inflight = conn.inflight.saturating_sub(1);
+                let frame = match conn.stream.as_mut() {
+                    Some(s) => read_frame(s),
+                    None => Err(EmberError::Runtime("connection lost mid-round".into())),
+                };
+                match frame {
+                    Ok(Frame::EmbedResp { seq: rseq, parts }) if rseq == seq => {
+                        let complete = tables.iter().all(|t| {
+                            parts.iter().any(|p| p.table == *t && p.data.len() == batch * emb)
+                        }) && parts.iter().all(|p| tables.contains(&p.table));
+                        if complete {
+                            for p in parts {
+                                let t = p.table as usize;
+                                for i in 0..batch {
+                                    out[i * width + t * emb..][..emb]
+                                        .copy_from_slice(&p.data[i * emb..][..emb]);
+                                }
+                            }
+                        } else {
+                            // schema-level disagreement: treat the
+                            // connection as broken, fail over
+                            mark_dead(conn, self.opts.reconnect_base);
+                            next_remaining.extend(tables);
+                        }
+                    }
+                    Ok(Frame::ErrResp { .. }) => {
+                        // server-side rejection: the connection is
+                        // healthy, so only the tables retry elsewhere
+                        next_remaining.extend(tables);
+                    }
+                    _ => {
+                        // timeout, desync, or transport error
+                        mark_dead(conn, self.opts.reconnect_base);
+                        next_remaining.extend(tables);
+                    }
+                }
+            }
+            remaining = next_remaining;
+        }
+
+        // Tables stranded when no assignment was possible at all.
+        degraded += remaining.len() as u64;
+        Ok((out, degraded))
+    }
+
+    /// Poll every alive shard for its counters and merge them:
+    /// `(table segments served, embed batches, service-latency hist)`.
+    pub fn stats(&mut self) -> (u64, u64, LatencyHist) {
+        let (mut segments, mut batches, mut hist) = (0u64, 0u64, LatencyHist::default());
+        for conn in &mut self.conns {
+            let Some(s) = conn.stream.as_mut() else { continue };
+            if write_frame(s, &Frame::StatsReq).is_err() {
+                continue;
+            }
+            if let Ok(Frame::StatsResp { requests, batches: b, hist: h }) = read_frame(s) {
+                segments += requests;
+                batches += b;
+                hist.merge(&LatencyHist::from_bucket_counts(&h));
+            }
+        }
+        (segments, batches, hist)
+    }
+
+    /// Ask every alive shard server to stop (graceful teardown when
+    /// the frontend spawned them as child processes).
+    pub fn shutdown_shards(&mut self) {
+        for conn in &mut self.conns {
+            if let Some(s) = conn.stream.as_mut() {
+                let _ = write_frame(s, &Frame::Shutdown);
+            }
+        }
+    }
+}
+
+impl EmbedStage for NetFrontend {
+    fn embed_stage(&mut self, reqs: &Arc<Vec<Request>>) -> Result<EmbedOutcome> {
+        let (embeddings, degraded) = self.embed(reqs)?;
+        Ok(EmbedOutcome { embeddings, degraded })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{synthetic_request, DlrmModel};
+    use crate::net::placement;
+    use crate::net::shard_server::{ShardServer, ShardServerCfg};
+
+    const TABLES: usize = 4;
+    const ROWS: usize = 64;
+    const EMB: usize = 8;
+    const BATCH: usize = 4;
+    const SEED: u64 = 42;
+
+    fn shape() -> NetShape {
+        NetShape { num_tables: TABLES, table_rows: ROWS, emb: EMB, batch: BATCH, max_lookups: 6 }
+    }
+
+    fn sock(name: &str) -> Endpoint {
+        Endpoint::Uds(
+            std::env::temp_dir().join(format!("ember-fe-{name}-{}.sock", std::process::id())),
+        )
+    }
+
+    fn spawn_servers(name: &str, n: usize, replicas: usize) -> (Vec<ShardServer>, Vec<Endpoint>) {
+        let hosted = placement(TABLES, n, replicas);
+        let mut servers = Vec::new();
+        let mut eps = Vec::new();
+        for (i, owned) in hosted.into_iter().enumerate() {
+            let ep = sock(&format!("{name}{i}"));
+            let cfg = ShardServerCfg {
+                shard_id: i as u32,
+                num_tables: TABLES,
+                table_rows: ROWS,
+                emb: EMB,
+                batch: BATCH,
+                seed: SEED,
+                owned,
+            };
+            servers.push(ShardServer::spawn(ep.clone(), cfg).unwrap());
+            eps.push(ep);
+        }
+        (servers, eps)
+    }
+
+    fn reqs(n: usize) -> Vec<Request> {
+        (0..n).map(|k| synthetic_request(TABLES, ROWS, 3, 6, 0, k)).collect()
+    }
+
+    #[test]
+    fn fan_out_embed_is_byte_identical_to_local_model() {
+        let (servers, eps) = spawn_servers("parity", 2, 0);
+        let m = DlrmModel::new(BATCH, ROWS, EMB, TABLES, 6, 3, 16, SEED).unwrap();
+        let mut fe =
+            NetFrontend::connect(&eps, None, shape(), NetFrontendOpts::default()).unwrap();
+        assert_eq!(fe.alive(), 2);
+        let rs = reqs(3);
+        let want = m.embed(&rs).unwrap();
+        let (got, degraded) = fe.embed(&rs).unwrap();
+        assert_eq!(degraded, 0);
+        assert_eq!(want, got, "net-mode embed must be byte-identical");
+        let (segments, batches, hist) = fe.stats();
+        assert_eq!(segments, TABLES as u64);
+        assert_eq!(batches, 2, "one EmbedReq per shard");
+        assert_eq!(hist.count(), 2);
+        for s in servers {
+            s.wait();
+        }
+    }
+
+    #[test]
+    fn dead_endpoint_without_expected_placement_is_a_hard_error() {
+        let ep = sock("dead-hard");
+        assert!(NetFrontend::connect(&[ep], None, shape(), NetFrontendOpts::default()).is_err());
+    }
+
+    #[test]
+    fn dead_endpoint_with_expected_placement_degrades_its_tables() {
+        let ep = sock("dead-soft");
+        let hosted = placement(TABLES, 1, 0);
+        let opts = NetFrontendOpts {
+            timeout: Duration::from_millis(200),
+            reconnect_base: Duration::from_millis(5),
+            ..Default::default()
+        };
+        let mut fe = NetFrontend::connect(&[ep], Some(&hosted), shape(), opts).unwrap();
+        assert_eq!(fe.alive(), 0);
+        let (out, degraded) = fe.embed(&reqs(2)).unwrap();
+        assert_eq!(degraded, TABLES as u64, "every table degrades");
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn zero_inflight_budget_degrades_everything() {
+        let (servers, eps) = spawn_servers("bp", 2, 0);
+        let opts = NetFrontendOpts { max_inflight: 0, ..Default::default() };
+        let mut fe = NetFrontend::connect(&eps, None, shape(), opts).unwrap();
+        let (out, degraded) = fe.embed(&reqs(2)).unwrap();
+        assert_eq!(degraded, TABLES as u64);
+        assert!(out.iter().all(|&v| v == 0.0));
+        for s in servers {
+            s.wait();
+        }
+    }
+
+    #[test]
+    fn replica_failover_masks_a_killed_shard() {
+        // replicas=1: every table lives on two servers.
+        let (servers, eps) = spawn_servers("failover", 2, 1);
+        let m = DlrmModel::new(BATCH, ROWS, EMB, TABLES, 6, 3, 16, SEED).unwrap();
+        let opts = NetFrontendOpts {
+            timeout: Duration::from_millis(500),
+            reconnect_base: Duration::from_secs(30), // no resurrection mid-test
+            ..Default::default()
+        };
+        let mut fe = NetFrontend::connect(&eps, None, shape(), opts).unwrap();
+        let rs = reqs(3);
+        let want = m.embed(&rs).unwrap();
+
+        // Kill server 0; its tables must fail over to server 1.
+        let mut servers = servers;
+        servers.remove(0).wait();
+        let (got, degraded) = fe.embed(&rs).unwrap();
+        assert_eq!(degraded, 0, "replication must mask the failure");
+        assert_eq!(want, got, "failover output must stay byte-identical");
+        assert_eq!(fe.alive(), 1);
+        for s in servers {
+            s.wait();
+        }
+    }
+
+    #[test]
+    fn unreplicated_kill_degrades_only_the_lost_tables() {
+        let (servers, eps) = spawn_servers("degrade", 2, 0);
+        let m = DlrmModel::new(BATCH, ROWS, EMB, TABLES, 6, 3, 16, SEED).unwrap();
+        let opts = NetFrontendOpts {
+            timeout: Duration::from_millis(500),
+            reconnect_base: Duration::from_secs(30),
+            ..Default::default()
+        };
+        let mut fe = NetFrontend::connect(&eps, None, shape(), opts).unwrap();
+        let rs = reqs(3);
+        let want = m.embed(&rs).unwrap();
+        let lost: Vec<u32> = placement(TABLES, 2, 0)[0].clone(); // server 0's tables
+
+        let mut servers = servers;
+        servers.remove(0).wait();
+        let (got, degraded) = fe.embed(&rs).unwrap();
+        assert_eq!(degraded, lost.len() as u64);
+        let width = TABLES * EMB;
+        for t in 0..TABLES as u32 {
+            for i in 0..BATCH {
+                let seg = &got[i * width + t as usize * EMB..][..EMB];
+                if lost.contains(&t) {
+                    assert!(seg.iter().all(|&v| v == 0.0), "lost table {t} row {i}");
+                } else {
+                    let want_seg = &want[i * width + t as usize * EMB..][..EMB];
+                    assert_eq!(seg, want_seg, "surviving table {t} row {i}");
+                }
+            }
+        }
+        for s in servers {
+            s.wait();
+        }
+    }
+
+    #[test]
+    fn reconnect_backoff_doubles_then_caps() {
+        let base = Duration::from_millis(10);
+        assert_eq!(backoff(base, 1), Duration::from_millis(10));
+        assert_eq!(backoff(base, 2), Duration::from_millis(20));
+        assert_eq!(backoff(base, 4), Duration::from_millis(80));
+        assert_eq!(backoff(base, 7), Duration::from_millis(640));
+        assert_eq!(backoff(base, 100), Duration::from_millis(640), "cap at 2^6");
+    }
+
+    #[test]
+    fn frontend_recovers_after_a_shard_restarts() {
+        let (servers, eps) = spawn_servers("recover", 1, 0);
+        let m = DlrmModel::new(BATCH, ROWS, EMB, TABLES, 6, 3, 16, SEED).unwrap();
+        let opts = NetFrontendOpts {
+            timeout: Duration::from_millis(500),
+            reconnect_base: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let mut fe = NetFrontend::connect(&eps, None, shape(), opts).unwrap();
+        let rs = reqs(2);
+        let want = m.embed(&rs).unwrap();
+
+        // Kill, observe degradation, restart, observe recovery.
+        for s in servers {
+            s.wait();
+        }
+        let (_, degraded) = fe.embed(&rs).unwrap();
+        assert_eq!(degraded, TABLES as u64);
+
+        let cfg = ShardServerCfg {
+            shard_id: 0,
+            num_tables: TABLES,
+            table_rows: ROWS,
+            emb: EMB,
+            batch: BATCH,
+            seed: SEED,
+            owned: placement(TABLES, 1, 0).remove(0),
+        };
+        let srv = ShardServer::spawn(eps[0].clone(), cfg).unwrap();
+        std::thread::sleep(Duration::from_millis(20)); // let backoff expire
+        let (got, degraded) = fe.embed(&rs).unwrap();
+        assert_eq!(degraded, 0, "reconnect must restore service");
+        assert_eq!(want, got);
+        srv.wait();
+    }
+}

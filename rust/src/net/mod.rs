@@ -1,0 +1,100 @@
+//! Disaggregated multi-process serving: a frontend process fans
+//! embedding lookups out to shard-server processes over a small
+//! length-prefixed binary protocol.
+//!
+//! The single-process coordinator caps capacity at one address space
+//! and one failure domain: every `ShardPool` thread shares the
+//! frontend's memory and dies with it. This subsystem splits the tiers
+//! the way FlexEMR-style disaggregation does — shard servers own table
+//! partitions and run compiled `Backend::Fast` SLS instances; the
+//! frontend owns placement, fan-out/merge, replication, and failure
+//! handling — so memory capacity and lookup throughput scale by adding
+//! processes (or, over TCP, hosts).
+//!
+//! Module map:
+//! - [`proto`] — frame types + length-prefixed encode/decode
+//! - [`transport`] — UDS/TCP endpoints behind one stream type
+//! - [`shard_server`] — the table-owning server process body
+//! - [`frontend`] — client side: placement, fan-out, degradation
+//!
+//! The in-process `ShardPool` path remains the reference semantics:
+//! net-mode `embed` output is byte-identical (tables are regenerated
+//! from the shared seed on each shard server, never shipped).
+
+pub mod frontend;
+pub mod proto;
+pub mod shard_server;
+pub mod transport;
+
+pub use frontend::{NetFrontend, NetFrontendOpts, NetShape};
+pub use proto::{read_frame, write_frame, Frame, TableCsr, TablePart};
+pub use shard_server::{ShardServer, ShardServerCfg};
+pub use transport::{Endpoint, NetListener, NetStream};
+
+/// Table → host placement with replication.
+///
+/// Returns, for each of `shards` servers, the sorted list of table ids
+/// it hosts. Table `t`'s primary is `t % shards` (round-robin, the
+/// same partition `ShardPool` uses so parity holds shard-by-shard);
+/// with `replicas > 0` each table is additionally hosted on the next
+/// `replicas` servers cyclically, giving the frontend a live fallback
+/// when a primary dies. `replicas` is clamped to `shards - 1` (hosting
+/// a table twice on one server is useless).
+pub fn placement(num_tables: usize, shards: usize, replicas: usize) -> Vec<Vec<u32>> {
+    let shards = shards.max(1);
+    let replicas = replicas.min(shards - 1);
+    let mut hosted: Vec<Vec<u32>> = vec![Vec::new(); shards];
+    for t in 0..num_tables {
+        let primary = t % shards;
+        for r in 0..=replicas {
+            hosted[(primary + r) % shards].push(t as u32);
+        }
+    }
+    for tables in &mut hosted {
+        tables.sort_unstable();
+    }
+    hosted
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placement_without_replicas_matches_round_robin() {
+        let hosted = placement(7, 3, 0);
+        assert_eq!(hosted, vec![vec![0, 3, 6], vec![1, 4], vec![2, 5]]);
+        // Every table appears exactly once.
+        let mut all: Vec<u32> = hosted.into_iter().flatten().collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..7).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn placement_with_replicas_hosts_each_table_on_distinct_servers() {
+        let hosted = placement(6, 3, 1);
+        // Each table on exactly 2 distinct servers.
+        for t in 0..6u32 {
+            let holders: Vec<usize> = hosted
+                .iter()
+                .enumerate()
+                .filter(|(_, ts)| ts.contains(&t))
+                .map(|(i, _)| i)
+                .collect();
+            assert_eq!(holders.len(), 2, "table {t} hosted on {holders:?}");
+        }
+        // Primary is still t % shards.
+        assert!(hosted[0].contains(&0) && hosted[1].contains(&0));
+    }
+
+    #[test]
+    fn placement_clamps_degenerate_shapes() {
+        // replicas >= shards clamps to shards-1: full replication.
+        let hosted = placement(4, 2, 9);
+        assert_eq!(hosted, vec![vec![0, 1, 2, 3], vec![0, 1, 2, 3]]);
+        // Zero shards is treated as one.
+        assert_eq!(placement(3, 0, 0), vec![vec![0, 1, 2]]);
+        // No tables: every server list is empty.
+        assert_eq!(placement(0, 2, 1), vec![Vec::<u32>::new(), Vec::new()]);
+    }
+}

@@ -1,0 +1,554 @@
+//! Length-prefixed binary wire protocol for disaggregated serving.
+//!
+//! Every frame on the wire is `[u32 LE body length][body]`, where the
+//! body is `[u8 frame tag][payload]`. The payload encoding is plain
+//! little-endian scalars and `u32`-counted sequences — no external
+//! serialization crate (the build image is offline), no
+//! self-describing schema. Robustness rules, all unit- and
+//! property-tested below:
+//!
+//!   * a declared body length of zero or above [`MAX_FRAME`] is
+//!     rejected before any allocation;
+//!   * every read is bounds-checked against the received body, so a
+//!     truncated frame decodes to an error, never a panic;
+//!   * sequence counts are validated against the bytes actually
+//!     remaining before preallocating;
+//!   * trailing bytes after a well-formed payload are a protocol
+//!     error (they would mean the two sides disagree on the schema).
+
+use crate::error::{EmberError, Result};
+use std::io::{Read, Write};
+
+/// Protocol version, carried in [`Frame::Hello`]. Bump on any frame
+/// layout change; a shard server rejects handshakes it cannot speak.
+pub const VERSION: u32 = 1;
+
+/// Upper bound on one frame body (64 MiB). A batch-32, 64-table,
+/// emb-128 response is ~1 MiB, so this is generous headroom while
+/// still rejecting a corrupt length prefix before allocating.
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// One embedding table's CSR lookup segments for a batch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TableCsr {
+    pub table: u32,
+    /// `batch + 1` row offsets into `idxs`.
+    pub ptrs: Vec<i32>,
+    pub idxs: Vec<i32>,
+}
+
+/// One embedding table's `[batch, emb]` output rows.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TablePart {
+    pub table: u32,
+    pub data: Vec<f32>,
+}
+
+/// Every frame the frontend and shard servers exchange.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Client → server, first frame on a connection.
+    Hello { version: u32 },
+    /// Server → client handshake reply: who I am and what I host.
+    HelloAck {
+        shard_id: u32,
+        table_rows: u64,
+        emb: u32,
+        batch: u32,
+        tables: Vec<u32>,
+    },
+    /// Run the embedding stage for the listed tables over one batch.
+    EmbedReq {
+        seq: u64,
+        batch: u32,
+        tables: Vec<TableCsr>,
+    },
+    /// Per-table embedding outputs for `seq`.
+    EmbedResp { seq: u64, parts: Vec<TablePart> },
+    /// The request `seq` failed server-side (connection stays up).
+    ErrResp { seq: u64, msg: String },
+    /// Liveness probe.
+    Ping { nonce: u64 },
+    Pong { nonce: u64 },
+    /// Ask the shard for its serving counters.
+    StatsReq,
+    /// Shard-side counters; `hist` is the raw latency-bucket counts
+    /// (`coordinator::stats::LAT_BUCKETS` log₂-µs buckets).
+    StatsResp {
+        requests: u64,
+        batches: u64,
+        hist: Vec<u64>,
+    },
+    /// Stop the shard server process gracefully.
+    Shutdown,
+}
+
+impl Frame {
+    fn tag(&self) -> u8 {
+        match self {
+            Frame::Hello { .. } => 1,
+            Frame::HelloAck { .. } => 2,
+            Frame::EmbedReq { .. } => 3,
+            Frame::EmbedResp { .. } => 4,
+            Frame::ErrResp { .. } => 5,
+            Frame::Ping { .. } => 6,
+            Frame::Pong { .. } => 7,
+            Frame::StatsReq => 8,
+            Frame::StatsResp { .. } => 9,
+            Frame::Shutdown => 10,
+        }
+    }
+
+    /// Encode into a frame body (tag + payload, no length prefix).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(16);
+        b.push(self.tag());
+        match self {
+            Frame::Hello { version } => put_u32(&mut b, *version),
+            Frame::HelloAck { shard_id, table_rows, emb, batch, tables } => {
+                put_u32(&mut b, *shard_id);
+                put_u64(&mut b, *table_rows);
+                put_u32(&mut b, *emb);
+                put_u32(&mut b, *batch);
+                put_u32(&mut b, tables.len() as u32);
+                for t in tables {
+                    put_u32(&mut b, *t);
+                }
+            }
+            Frame::EmbedReq { seq, batch, tables } => {
+                put_u64(&mut b, *seq);
+                put_u32(&mut b, *batch);
+                put_u32(&mut b, tables.len() as u32);
+                for tc in tables {
+                    put_u32(&mut b, tc.table);
+                    put_u32(&mut b, tc.ptrs.len() as u32);
+                    for p in &tc.ptrs {
+                        put_i32(&mut b, *p);
+                    }
+                    put_u32(&mut b, tc.idxs.len() as u32);
+                    for i in &tc.idxs {
+                        put_i32(&mut b, *i);
+                    }
+                }
+            }
+            Frame::EmbedResp { seq, parts } => {
+                put_u64(&mut b, *seq);
+                put_u32(&mut b, parts.len() as u32);
+                for p in parts {
+                    put_u32(&mut b, p.table);
+                    put_u32(&mut b, p.data.len() as u32);
+                    for v in &p.data {
+                        b.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+            }
+            Frame::ErrResp { seq, msg } => {
+                put_u64(&mut b, *seq);
+                put_u32(&mut b, msg.len() as u32);
+                b.extend_from_slice(msg.as_bytes());
+            }
+            Frame::Ping { nonce } | Frame::Pong { nonce } => put_u64(&mut b, *nonce),
+            Frame::StatsReq | Frame::Shutdown => {}
+            Frame::StatsResp { requests, batches, hist } => {
+                put_u64(&mut b, *requests);
+                put_u64(&mut b, *batches);
+                put_u32(&mut b, hist.len() as u32);
+                for h in hist {
+                    put_u64(&mut b, *h);
+                }
+            }
+        }
+        b
+    }
+
+    /// Decode a frame body (tag + payload). Rejects truncation, bogus
+    /// sequence counts, and trailing bytes.
+    pub fn decode(body: &[u8]) -> Result<Frame> {
+        let mut rd = Rd { b: body, pos: 0 };
+        let tag = rd.u8()?;
+        let frame = match tag {
+            1 => Frame::Hello { version: rd.u32()? },
+            2 => {
+                let shard_id = rd.u32()?;
+                let table_rows = rd.u64()?;
+                let emb = rd.u32()?;
+                let batch = rd.u32()?;
+                let n = rd.seq_len(4)?;
+                let mut tables = Vec::with_capacity(n);
+                for _ in 0..n {
+                    tables.push(rd.u32()?);
+                }
+                Frame::HelloAck { shard_id, table_rows, emb, batch, tables }
+            }
+            3 => {
+                let seq = rd.u64()?;
+                let batch = rd.u32()?;
+                let n = rd.seq_len(12)?;
+                let mut tables = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let table = rd.u32()?;
+                    let np = rd.seq_len(4)?;
+                    let mut ptrs = Vec::with_capacity(np);
+                    for _ in 0..np {
+                        ptrs.push(rd.i32()?);
+                    }
+                    let ni = rd.seq_len(4)?;
+                    let mut idxs = Vec::with_capacity(ni);
+                    for _ in 0..ni {
+                        idxs.push(rd.i32()?);
+                    }
+                    tables.push(TableCsr { table, ptrs, idxs });
+                }
+                Frame::EmbedReq { seq, batch, tables }
+            }
+            4 => {
+                let seq = rd.u64()?;
+                let n = rd.seq_len(8)?;
+                let mut parts = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let table = rd.u32()?;
+                    let nd = rd.seq_len(4)?;
+                    let mut data = Vec::with_capacity(nd);
+                    for _ in 0..nd {
+                        data.push(rd.f32()?);
+                    }
+                    parts.push(TablePart { table, data });
+                }
+                Frame::EmbedResp { seq, parts }
+            }
+            5 => {
+                let seq = rd.u64()?;
+                let n = rd.seq_len(1)?;
+                let bytes = rd.take(n)?;
+                let msg = String::from_utf8(bytes.to_vec())
+                    .map_err(|_| EmberError::Parse("ErrResp message is not utf-8".into()))?;
+                Frame::ErrResp { seq, msg }
+            }
+            6 => Frame::Ping { nonce: rd.u64()? },
+            7 => Frame::Pong { nonce: rd.u64()? },
+            8 => Frame::StatsReq,
+            9 => {
+                let requests = rd.u64()?;
+                let batches = rd.u64()?;
+                let n = rd.seq_len(8)?;
+                let mut hist = Vec::with_capacity(n);
+                for _ in 0..n {
+                    hist.push(rd.u64()?);
+                }
+                Frame::StatsResp { requests, batches, hist }
+            }
+            10 => Frame::Shutdown,
+            other => {
+                return Err(EmberError::Parse(format!("unknown frame tag {other}")));
+            }
+        };
+        if rd.pos != body.len() {
+            return Err(EmberError::Parse(format!(
+                "{} trailing byte(s) after frame tag {tag}",
+                body.len() - rd.pos
+            )));
+        }
+        Ok(frame)
+    }
+}
+
+// -------------------------------------------------------- frame stream I/O
+
+/// Write one length-prefixed frame and flush.
+pub fn write_frame<W: Write>(w: &mut W, f: &Frame) -> Result<()> {
+    let body = f.encode();
+    if body.len() > MAX_FRAME {
+        return Err(EmberError::Runtime(format!(
+            "refusing to send a {}-byte frame (max {MAX_FRAME})",
+            body.len()
+        )));
+    }
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(&body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame. An empty or oversized declared
+/// length is rejected before any body allocation.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4)?;
+    let len = u32::from_le_bytes(len4) as usize;
+    if len == 0 || len > MAX_FRAME {
+        return Err(EmberError::Parse(format!(
+            "frame length {len} out of range (1..={MAX_FRAME})"
+        )));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Frame::decode(&body)
+}
+
+// -------------------------------------------------------------- encoding
+
+fn put_u32(b: &mut Vec<u8>, v: u32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(b: &mut Vec<u8>, v: u64) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_i32(b: &mut Vec<u8>, v: i32) {
+    b.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Bounds-checked little-endian reader over one frame body.
+struct Rd<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.b.len() - self.pos < n {
+            return Err(EmberError::Parse(format!(
+                "truncated frame: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.b.len() - self.pos
+            )));
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn i32(&mut self) -> Result<i32> {
+        let s = self.take(4)?;
+        Ok(i32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(s);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        let s = self.take(4)?;
+        Ok(f32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    /// Read a sequence count and validate it against the bytes left
+    /// (each element occupies at least `min_elem_bytes`), so a corrupt
+    /// count can never drive a huge preallocation.
+    fn seq_len(&mut self, min_elem_bytes: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        let remaining = self.b.len() - self.pos;
+        if n > remaining / min_elem_bytes.max(1) {
+            return Err(EmberError::Parse(format!(
+                "sequence count {n} exceeds {remaining} remaining frame bytes"
+            )));
+        }
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quick;
+    use crate::util::rng::Rng;
+
+    fn all_frames() -> Vec<Frame> {
+        vec![
+            Frame::Hello { version: VERSION },
+            Frame::HelloAck {
+                shard_id: 3,
+                table_rows: 4096,
+                emb: 16,
+                batch: 32,
+                tables: vec![0, 2, 4],
+            },
+            Frame::EmbedReq {
+                seq: 7,
+                batch: 4,
+                tables: vec![
+                    TableCsr { table: 0, ptrs: vec![0, 2, 2, 3, 5], idxs: vec![1, 4, 2, 0, 3] },
+                    TableCsr { table: 5, ptrs: vec![0, 0, 0, 0, 0], idxs: vec![] },
+                ],
+            },
+            Frame::EmbedResp {
+                seq: 7,
+                parts: vec![TablePart { table: 0, data: vec![0.5, -1.25, 3.0] }],
+            },
+            Frame::ErrResp { seq: 9, msg: "unknown table 99".into() },
+            Frame::Ping { nonce: 42 },
+            Frame::Pong { nonce: 42 },
+            Frame::StatsReq,
+            Frame::StatsResp { requests: 100, batches: 10, hist: vec![0, 3, 7] },
+            Frame::Shutdown,
+        ]
+    }
+
+    #[test]
+    fn every_frame_type_round_trips() {
+        for f in all_frames() {
+            let body = f.encode();
+            let back = Frame::decode(&body).unwrap();
+            assert_eq!(f, back, "{f:?}");
+        }
+    }
+
+    #[test]
+    fn round_trips_through_a_byte_stream() {
+        let mut wire = Vec::new();
+        for f in all_frames() {
+            write_frame(&mut wire, &f).unwrap();
+        }
+        let mut r = &wire[..];
+        for f in all_frames() {
+            assert_eq!(read_frame(&mut r).unwrap(), f);
+        }
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn truncated_bodies_are_rejected_not_panicked() {
+        for f in all_frames() {
+            let body = f.encode();
+            // every strict prefix must fail cleanly (except the empty
+            // prefix of zero-payload frames, which has no tag at all)
+            for cut in 0..body.len() {
+                let r = Frame::decode(&body[..cut]);
+                assert!(r.is_err(), "{f:?} decoded from {cut}/{} bytes", body.len());
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_are_a_protocol_error() {
+        for f in all_frames() {
+            let mut body = f.encode();
+            body.push(0xAA);
+            let err = Frame::decode(&body).unwrap_err();
+            assert!(err.to_string().contains("trailing"), "{f:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn oversized_and_empty_length_prefixes_are_rejected() {
+        // length 0
+        let wire = 0u32.to_le_bytes();
+        assert!(read_frame(&mut &wire[..]).is_err());
+        // length > MAX_FRAME (no body needed: the check fires first)
+        let wire = ((MAX_FRAME + 1) as u32).to_le_bytes();
+        let err = read_frame(&mut &wire[..]).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_sequence_count_cannot_force_huge_preallocation() {
+        // EmbedResp claiming u32::MAX parts with a 0-byte payload tail
+        let mut body = vec![4u8];
+        body.extend_from_slice(&7u64.to_le_bytes());
+        body.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = Frame::decode(&body).unwrap_err();
+        assert!(err.to_string().contains("sequence count"), "{err}");
+    }
+
+    #[test]
+    fn unknown_tag_is_rejected() {
+        assert!(Frame::decode(&[200u8]).is_err());
+    }
+
+    #[test]
+    fn nonfinite_f32_payloads_round_trip_bitwise() {
+        let data = vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0];
+        let sent = vec![TablePart { table: 0, data: data.clone() }];
+        let f = Frame::EmbedResp { seq: 1, parts: sent };
+        let Frame::EmbedResp { parts, .. } = Frame::decode(&f.encode()).unwrap() else {
+            panic!("wrong frame type back");
+        };
+        let got: Vec<u32> = parts[0].data.iter().map(|v| v.to_bits()).collect();
+        let want: Vec<u32> = data.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want);
+    }
+
+    /// Property: random request/response shapes round-trip exactly, and
+    /// a random truncation of the encoding never decodes.
+    #[test]
+    fn prop_random_frames_round_trip() {
+        quick::check("proto round-trip", 64, |rng: &mut Rng| {
+            let f = random_frame(rng);
+            let body = f.encode();
+            match Frame::decode(&body) {
+                Ok(back) if back == f => {}
+                Ok(_) => return Err(format!("decode changed {f:?}")),
+                Err(e) => return Err(format!("decode failed for {f:?}: {e}")),
+            }
+            if body.len() > 1 {
+                let cut = 1 + rng.below(body.len() as u64 - 1) as usize;
+                if Frame::decode(&body[..cut]).is_ok() {
+                    return Err(format!("truncation to {cut}/{} decoded", body.len()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    fn random_frame(rng: &mut Rng) -> Frame {
+        match rng.below(4) {
+            0 => {
+                let batch = 1 + rng.below(8) as usize;
+                let ntab = rng.below(5) as usize;
+                let tables = (0..ntab)
+                    .map(|t| {
+                        let mut ptrs = vec![0i32];
+                        let mut idxs = Vec::new();
+                        for _ in 0..batch {
+                            for _ in 0..rng.below(4) {
+                                idxs.push(rng.below(1000) as i32);
+                            }
+                            ptrs.push(idxs.len() as i32);
+                        }
+                        TableCsr { table: t as u32, ptrs, idxs }
+                    })
+                    .collect();
+                Frame::EmbedReq { seq: rng.next_u64(), batch: batch as u32, tables }
+            }
+            1 => {
+                let nparts = rng.below(4) as usize;
+                let parts = (0..nparts)
+                    .map(|t| {
+                        let n = rng.below(64) as usize;
+                        TablePart {
+                            table: t as u32,
+                            data: (0..n).map(|_| rng.f32() - 0.5).collect(),
+                        }
+                    })
+                    .collect();
+                Frame::EmbedResp { seq: rng.next_u64(), parts }
+            }
+            2 => {
+                let n = rng.below(40) as usize;
+                Frame::StatsResp {
+                    requests: rng.next_u64(),
+                    batches: rng.next_u64(),
+                    hist: (0..n).map(|_| rng.next_u64()).collect(),
+                }
+            }
+            _ => {
+                let n = rng.below(32) as usize;
+                let msg: String = (0..n).map(|_| (b'a' + rng.below(26) as u8) as char).collect();
+                Frame::ErrResp { seq: rng.next_u64(), msg }
+            }
+        }
+    }
+}

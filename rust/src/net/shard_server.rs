@@ -1,0 +1,546 @@
+//! Shard-server process body: owns a partition of the embedding
+//! tables and answers `EmbedReq` frames with compiled fast-path SLS
+//! lookups.
+//!
+//! Tables are never shipped over the wire: the server regenerates them
+//! from `(num_tables, table_rows, emb, seed)` via
+//! [`crate::coordinator::gen_tables`] — byte-identical to the
+//! frontend's model, which is what makes net-mode parity exact — and
+//! keeps only the ids in `owned`. Each accepted connection gets its
+//! own executor [`Instance`] plus pre-bound [`Bindings`] per owned
+//! table (the `ShardPool` pooling discipline, one process over), so
+//! concurrent frontend connections never contend on executor state.
+//!
+//! The accept loop and every connection poll a shared stop flag, so
+//! [`ShardServer::stop`] (or a wire `Shutdown` frame) tears the whole
+//! process down without killing it mid-frame.
+
+use super::proto::{Frame, TableCsr, TablePart, MAX_FRAME, VERSION};
+use super::transport::{Endpoint, NetStream};
+use crate::coordinator::stats::LatencyHist;
+use crate::coordinator::{gen_tables, Request};
+use crate::data::Tensor;
+use crate::error::{EmberError, Result};
+use crate::exec::{Backend, Bindings, Executor, Instance};
+use crate::frontend::embedding_ops::OpClass;
+use crate::session::EmberSession;
+use std::io::{self, Read};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Everything a shard server needs to regenerate and serve its slice
+/// of the model. `(num_tables, table_rows, emb, seed)` must match the
+/// frontend's model exactly or the handshake/lookups diverge.
+#[derive(Debug, Clone)]
+pub struct ShardServerCfg {
+    pub shard_id: u32,
+    /// Total tables in the model (the regeneration domain).
+    pub num_tables: usize,
+    pub table_rows: usize,
+    pub emb: usize,
+    /// Compiled batch dimension; `EmbedReq`s with any other batch are
+    /// rejected with `ErrResp`.
+    pub batch: usize,
+    pub seed: u64,
+    /// Table ids this server hosts (primaries + replicas).
+    pub owned: Vec<u32>,
+}
+
+/// Counters shared across connection threads, shipped in `StatsResp`.
+struct ShardStats {
+    /// Table segments served (one per `TableCsr` in an `EmbedReq`).
+    segments: AtomicU64,
+    /// `EmbedReq` frames served.
+    batches: AtomicU64,
+    /// Per-`EmbedReq` service latency.
+    hist: Mutex<LatencyHist>,
+}
+
+/// A running shard server (in-process handle; `ember shard-server`
+/// wraps one per OS process).
+pub struct ShardServer {
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    endpoint: Endpoint,
+}
+
+impl ShardServer {
+    /// Bind `endpoint`, regenerate the owned tables, and start serving
+    /// in background threads. Returns once the listener is bound, so a
+    /// caller can connect immediately after `spawn` returns.
+    pub fn spawn(endpoint: Endpoint, cfg: ShardServerCfg) -> Result<ShardServer> {
+        let program = EmberSession::default().compile(&OpClass::Sls)?;
+        let all = gen_tables(cfg.num_tables, cfg.table_rows, cfg.emb, cfg.seed);
+        let mut owned = cfg.owned.clone();
+        owned.sort_unstable();
+        owned.dedup();
+        for &t in &owned {
+            if t as usize >= cfg.num_tables {
+                return Err(EmberError::Workload(format!(
+                    "shard {} owns table {t} but the model has {} tables",
+                    cfg.shard_id, cfg.num_tables
+                )));
+            }
+        }
+        let tables: Arc<Vec<(u32, Tensor)>> =
+            Arc::new(owned.iter().map(|&t| (t, all[t as usize].clone())).collect());
+
+        let listener = endpoint.bind()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(ShardStats {
+            segments: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            hist: Mutex::new(LatencyHist::default()),
+        });
+
+        let accept_stop = stop.clone();
+        let cfg2 = ShardServerCfg { owned, ..cfg };
+        let accept = std::thread::spawn(move || {
+            let mut conns: Vec<JoinHandle<()>> = Vec::new();
+            while !accept_stop.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok(stream) => {
+                        let (stop, stats) = (accept_stop.clone(), stats.clone());
+                        let (cfg, tables, program) =
+                            (cfg2.clone(), tables.clone(), program.clone());
+                        conns.push(std::thread::spawn(move || {
+                            serve_conn(stream, &cfg, &tables, &program, &stop, &stats);
+                        }));
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+                conns.retain(|h| !h.is_finished());
+            }
+            for h in conns {
+                let _ = h.join();
+            }
+        });
+
+        Ok(ShardServer { stop, accept: Some(accept), endpoint })
+    }
+
+    pub fn endpoint(&self) -> &Endpoint {
+        &self.endpoint
+    }
+
+    /// Ask the server to stop; returns immediately. Connection threads
+    /// notice within their read-poll interval.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+
+    /// True once a stop was requested (locally or by a wire `Shutdown`
+    /// frame) — the `ember shard-server` process polls this to exit.
+    pub fn stopped(&self) -> bool {
+        self.stop.load(Ordering::Relaxed)
+    }
+
+    /// Stop and join every server thread (used by tests to guarantee
+    /// the socket is fully dead before asserting degradation).
+    pub fn wait(mut self) {
+        self.stop();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Endpoint::Uds(p) = &self.endpoint {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+impl Drop for ShardServer {
+    fn drop(&mut self) {
+        self.stop();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Endpoint::Uds(p) = &self.endpoint {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+/// Read exactly `buf.len()` bytes, retrying timeouts so the stop flag
+/// is polled between them. `Ok(false)` means the peer closed cleanly
+/// before the first byte; EOF mid-buffer is an error.
+fn read_full(s: &mut NetStream, buf: &mut [u8], stop: &AtomicBool) -> io::Result<bool> {
+    let mut got = 0;
+    while got < buf.len() {
+        match s.read(&mut buf[got..]) {
+            Ok(0) => {
+                return if got == 0 {
+                    Ok(false)
+                } else {
+                    Err(io::Error::new(io::ErrorKind::UnexpectedEof, "peer closed mid-frame"))
+                };
+            }
+            Ok(n) => got += n,
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                if stop.load(Ordering::Relaxed) {
+                    return Err(io::Error::new(io::ErrorKind::Interrupted, "server stopping"));
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(true)
+}
+
+/// Read one frame, polling `stop` while idle. `Ok(None)` = clean EOF.
+fn read_frame_poll(s: &mut NetStream, stop: &AtomicBool) -> Result<Option<Frame>> {
+    let mut len4 = [0u8; 4];
+    if !read_full(s, &mut len4, stop)? {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(len4) as usize;
+    if len == 0 || len > MAX_FRAME {
+        return Err(EmberError::Parse(format!("frame length {len} out of range")));
+    }
+    let mut body = vec![0u8; len];
+    if !read_full(s, &mut body, stop)? {
+        return Err(EmberError::Io(io::Error::new(
+            io::ErrorKind::UnexpectedEof,
+            "peer closed between length prefix and body",
+        )));
+    }
+    Frame::decode(&body).map(Some)
+}
+
+fn write_frame(s: &mut NetStream, f: &Frame) -> Result<()> {
+    super::proto::write_frame(s, f)
+}
+
+/// Serve one frontend connection until EOF, error, or stop.
+fn serve_conn(
+    mut stream: NetStream,
+    cfg: &ShardServerCfg,
+    tables: &[(u32, Tensor)],
+    program: &Arc<crate::compiler::passes::pipeline::CompiledProgram>,
+    stop: &AtomicBool,
+    stats: &ShardStats,
+) {
+    // Short read timeout so idle connections poll the stop flag;
+    // read_full retries across timeouts, so frames never desync.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+
+    // Handshake: Hello in, HelloAck (or version ErrResp) out.
+    match read_frame_poll(&mut stream, stop) {
+        Ok(Some(Frame::Hello { version })) if version == VERSION => {
+            let ack = Frame::HelloAck {
+                shard_id: cfg.shard_id,
+                table_rows: cfg.table_rows as u64,
+                emb: cfg.emb as u32,
+                batch: cfg.batch as u32,
+                tables: tables.iter().map(|(t, _)| *t).collect(),
+            };
+            if write_frame(&mut stream, &ack).is_err() {
+                return;
+            }
+        }
+        Ok(Some(Frame::Hello { version })) => {
+            let _ = write_frame(
+                &mut stream,
+                &Frame::ErrResp {
+                    seq: 0,
+                    msg: format!("protocol version {version} unsupported (speak {VERSION})"),
+                },
+            );
+            return;
+        }
+        _ => return,
+    }
+
+    // Per-connection executor + pre-bound bindings, ShardPool-style.
+    let mut exec = match Instance::new(program, Backend::Fast) {
+        Ok(i) => i,
+        Err(_) => return,
+    };
+    let mut bindings: Vec<(u32, Bindings)> = tables
+        .iter()
+        .map(|(t, table)| (*t, Bindings::sls_pooled(table.clone(), cfg.batch)))
+        .collect();
+
+    loop {
+        let frame = match read_frame_poll(&mut stream, stop) {
+            Ok(Some(f)) => f,
+            Ok(None) | Err(_) => return,
+        };
+        match frame {
+            Frame::EmbedReq { seq, batch, tables: csrs } => {
+                let t0 = Instant::now();
+                let reply = match run_embed(cfg, &mut exec, &mut bindings, batch, &csrs) {
+                    Ok(parts) => {
+                        stats.batches.fetch_add(1, Ordering::Relaxed);
+                        stats.segments.fetch_add(csrs.len() as u64, Ordering::Relaxed);
+                        if let Ok(mut h) = stats.hist.lock() {
+                            h.record(t0.elapsed());
+                        }
+                        Frame::EmbedResp { seq, parts }
+                    }
+                    Err(e) => Frame::ErrResp { seq, msg: e.to_string() },
+                };
+                if write_frame(&mut stream, &reply).is_err() {
+                    return;
+                }
+            }
+            Frame::Ping { nonce } => {
+                if write_frame(&mut stream, &Frame::Pong { nonce }).is_err() {
+                    return;
+                }
+            }
+            Frame::StatsReq => {
+                let hist = stats
+                    .hist
+                    .lock()
+                    .map(|h| h.bucket_counts().to_vec())
+                    .unwrap_or_default();
+                let resp = Frame::StatsResp {
+                    requests: stats.segments.load(Ordering::Relaxed),
+                    batches: stats.batches.load(Ordering::Relaxed),
+                    hist,
+                };
+                if write_frame(&mut stream, &resp).is_err() {
+                    return;
+                }
+            }
+            Frame::Shutdown => {
+                stop.store(true, Ordering::Relaxed);
+                return;
+            }
+            other => {
+                let msg = format!("unexpected frame {other:?} after handshake");
+                if write_frame(&mut stream, &Frame::ErrResp { seq: 0, msg }).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Validate and run one `EmbedReq` against the pre-bound tables.
+fn run_embed(
+    cfg: &ShardServerCfg,
+    exec: &mut Instance,
+    bindings: &mut [(u32, Bindings)],
+    batch: u32,
+    csrs: &[TableCsr],
+) -> Result<Vec<TablePart>> {
+    if batch as usize != cfg.batch {
+        return Err(EmberError::Workload(format!(
+            "batch {batch} does not match compiled batch {}",
+            cfg.batch
+        )));
+    }
+    let mut parts = Vec::with_capacity(csrs.len());
+    for csr in csrs {
+        let b = bindings
+            .iter_mut()
+            .find(|(t, _)| *t == csr.table)
+            .map(|(_, b)| b)
+            .ok_or_else(|| {
+                EmberError::Workload(format!("table {} is not hosted on this shard", csr.table))
+            })?;
+        validate_csr(cfg, csr)?;
+        b.refill_csr(&csr.ptrs, &csr.idxs)?;
+        let data = exec.run(b)?.output;
+        parts.push(TablePart { table: csr.table, data });
+    }
+    Ok(parts)
+}
+
+fn validate_csr(cfg: &ShardServerCfg, csr: &TableCsr) -> Result<()> {
+    if csr.ptrs.len() != cfg.batch + 1 {
+        return Err(EmberError::Workload(format!(
+            "table {}: {} ptrs for batch {}",
+            csr.table,
+            csr.ptrs.len(),
+            cfg.batch
+        )));
+    }
+    if csr.ptrs[0] != 0 || *csr.ptrs.last().unwrap() as usize != csr.idxs.len() {
+        return Err(EmberError::Workload(format!("table {}: malformed CSR ptrs", csr.table)));
+    }
+    if csr.ptrs.windows(2).any(|w| w[1] < w[0]) {
+        return Err(EmberError::Workload(format!(
+            "table {}: CSR ptrs not monotone",
+            csr.table
+        )));
+    }
+    if csr.idxs.iter().any(|&i| i < 0 || i as usize >= cfg.table_rows) {
+        return Err(EmberError::Workload(format!(
+            "table {}: lookup index out of range [0, {})",
+            csr.table, cfg.table_rows
+        )));
+    }
+    Ok(())
+}
+
+/// Build the `TableCsr` for table `t` over a batch — exactly the
+/// truncation semantics of `ShardPool`'s `run_table` (absent requests
+/// contribute empty segments, lookups clamp to `max_lookups`), so a
+/// shard server fed these CSRs is byte-identical to the in-process
+/// path.
+pub fn table_csr(reqs: &[Request], t: u32, batch: usize, max_lookups: usize) -> TableCsr {
+    let mut ptrs = Vec::with_capacity(batch + 1);
+    let mut idxs = Vec::new();
+    ptrs.push(0);
+    for i in 0..batch {
+        if let Some(l) = reqs.get(i).and_then(|r| r.lookups.get(t as usize)) {
+            idxs.extend(l.iter().take(max_lookups));
+        }
+        ptrs.push(idxs.len() as i32);
+    }
+    TableCsr { table: t, ptrs, idxs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::proto::{read_frame as read_f, write_frame as write_f};
+
+    fn cfg(owned: Vec<u32>) -> ShardServerCfg {
+        ShardServerCfg {
+            shard_id: 0,
+            num_tables: 2,
+            table_rows: 64,
+            emb: 8,
+            batch: 4,
+            seed: 42,
+            owned,
+        }
+    }
+
+    fn sock(name: &str) -> Endpoint {
+        Endpoint::Uds(
+            std::env::temp_dir().join(format!("ember-ss-{name}-{}.sock", std::process::id())),
+        )
+    }
+
+    fn handshake(ep: &Endpoint) -> NetStream {
+        let mut s = ep.connect().unwrap();
+        write_f(&mut s, &Frame::Hello { version: VERSION }).unwrap();
+        match read_f(&mut s).unwrap() {
+            Frame::HelloAck { .. } => s,
+            other => panic!("expected HelloAck, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn handshake_reports_hosted_tables_and_shape() {
+        let ep = sock("hs");
+        let srv = ShardServer::spawn(ep.clone(), cfg(vec![1])).unwrap();
+        let mut s = ep.connect().unwrap();
+        write_f(&mut s, &Frame::Hello { version: VERSION }).unwrap();
+        let Frame::HelloAck { shard_id, table_rows, emb, batch, tables } =
+            read_f(&mut s).unwrap()
+        else {
+            panic!("no HelloAck");
+        };
+        assert_eq!((shard_id, table_rows, emb, batch), (0, 64, 8, 4));
+        assert_eq!(tables, vec![1]);
+        srv.wait();
+    }
+
+    #[test]
+    fn wrong_protocol_version_is_refused() {
+        let ep = sock("ver");
+        let srv = ShardServer::spawn(ep.clone(), cfg(vec![0])).unwrap();
+        let mut s = ep.connect().unwrap();
+        write_f(&mut s, &Frame::Hello { version: VERSION + 1 }).unwrap();
+        match read_f(&mut s).unwrap() {
+            Frame::ErrResp { msg, .. } => assert!(msg.contains("version"), "{msg}"),
+            other => panic!("expected ErrResp, got {other:?}"),
+        }
+        srv.wait();
+    }
+
+    #[test]
+    fn embed_req_validation_rejects_bad_shapes_but_keeps_conn() {
+        let ep = sock("val");
+        let srv = ShardServer::spawn(ep.clone(), cfg(vec![0, 1])).unwrap();
+        let mut s = handshake(&ep);
+        // wrong batch
+        let req = Frame::EmbedReq { seq: 1, batch: 3, tables: vec![] };
+        write_f(&mut s, &req).unwrap();
+        assert!(matches!(read_f(&mut s).unwrap(), Frame::ErrResp { seq: 1, .. }));
+        // unhosted table
+        let req = Frame::EmbedReq {
+            seq: 2,
+            batch: 4,
+            tables: vec![TableCsr { table: 9, ptrs: vec![0; 5], idxs: vec![] }],
+        };
+        write_f(&mut s, &req).unwrap();
+        assert!(matches!(read_f(&mut s).unwrap(), Frame::ErrResp { seq: 2, .. }));
+        // out-of-range index
+        let req = Frame::EmbedReq {
+            seq: 3,
+            batch: 4,
+            tables: vec![TableCsr { table: 0, ptrs: vec![0, 1, 1, 1, 1], idxs: vec![64] }],
+        };
+        write_f(&mut s, &req).unwrap();
+        assert!(matches!(read_f(&mut s).unwrap(), Frame::ErrResp { seq: 3, .. }));
+        // connection still works after rejections
+        write_f(&mut s, &Frame::Ping { nonce: 8 }).unwrap();
+        assert_eq!(read_f(&mut s).unwrap(), Frame::Pong { nonce: 8 });
+        srv.wait();
+    }
+
+    #[test]
+    fn embed_matches_local_model_and_stats_accumulate() {
+        use crate::coordinator::DlrmModel;
+        let c = cfg(vec![0, 1]);
+        let m = DlrmModel::new(c.batch, c.table_rows, c.emb, c.num_tables, 6, 3, 16, c.seed)
+            .unwrap();
+        let reqs: Vec<Request> = (0..3usize)
+            .map(|i| crate::coordinator::synthetic_request(c.num_tables, c.table_rows, 3, 6, 7, i))
+            .collect();
+        let want = m.embed(&reqs).unwrap();
+
+        let ep = sock("emb");
+        let srv = ShardServer::spawn(ep.clone(), c.clone()).unwrap();
+        let mut s = handshake(&ep);
+        let csrs: Vec<TableCsr> =
+            (0..2).map(|t| table_csr(&reqs, t, c.batch, m.max_lookups)).collect();
+        write_f(&mut s, &Frame::EmbedReq { seq: 11, batch: 4, tables: csrs }).unwrap();
+        let Frame::EmbedResp { seq, parts } = read_f(&mut s).unwrap() else {
+            panic!("no EmbedResp");
+        };
+        assert_eq!(seq, 11);
+        assert_eq!(parts.len(), 2);
+        let width = c.num_tables * c.emb;
+        for p in &parts {
+            let t = p.table as usize;
+            for i in 0..c.batch {
+                let want_row = &want[i * width + t * c.emb..][..c.emb];
+                let got_row = &p.data[i * c.emb..][..c.emb];
+                assert_eq!(want_row, got_row, "table {t} row {i}");
+            }
+        }
+        write_f(&mut s, &Frame::StatsReq).unwrap();
+        let Frame::StatsResp { requests, batches, hist } = read_f(&mut s).unwrap() else {
+            panic!("no StatsResp");
+        };
+        assert_eq!((requests, batches), (2, 1));
+        assert_eq!(hist.iter().sum::<u64>(), 1);
+        srv.wait();
+    }
+
+    #[test]
+    fn shutdown_frame_stops_the_server() {
+        let ep = sock("down");
+        let srv = ShardServer::spawn(ep.clone(), cfg(vec![0])).unwrap();
+        let mut s = handshake(&ep);
+        write_f(&mut s, &Frame::Shutdown).unwrap();
+        srv.wait(); // must return: the shutdown frame set the stop flag
+    }
+}

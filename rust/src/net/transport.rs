@@ -1,0 +1,208 @@
+//! Transport abstraction for the disaggregated serving tier.
+//!
+//! The wire protocol ([`super::proto`]) only needs a bidirectional
+//! byte stream; this module provides one over Unix domain sockets (the
+//! default — frontend and shard servers share a host) or TCP (the
+//! multi-node shape), selected by the endpoint string: anything
+//! starting with `tcp:` is `host:port`, everything else is a UDS path.
+//!
+//! [`NetStream`] implements `Read`/`Write` by delegation so the framed
+//! I/O in `proto` is transport-agnostic, and both variants expose the
+//! timeout knobs the failure-handling path needs (a shard that stops
+//! answering must look like an error, not a hang).
+
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// Where a shard server listens (or a frontend connects).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Endpoint {
+    /// Unix domain socket path.
+    Uds(PathBuf),
+    /// TCP `host:port`.
+    Tcp(String),
+}
+
+impl Endpoint {
+    /// Parse an endpoint string: `tcp:HOST:PORT` selects TCP, anything
+    /// else is a UDS path.
+    pub fn parse(s: &str) -> Endpoint {
+        match s.strip_prefix("tcp:") {
+            Some(addr) => Endpoint::Tcp(addr.to_string()),
+            None => Endpoint::Uds(PathBuf::from(s)),
+        }
+    }
+
+    /// Connect a client stream.
+    pub fn connect(&self) -> io::Result<NetStream> {
+        match self {
+            Endpoint::Uds(p) => Ok(NetStream::Uds(UnixStream::connect(p)?)),
+            Endpoint::Tcp(a) => {
+                let s = TcpStream::connect(a)?;
+                s.set_nodelay(true)?;
+                Ok(NetStream::Tcp(s))
+            }
+        }
+    }
+
+    /// Bind a server listener. For UDS a stale socket file from a
+    /// previous (killed) server is unlinked first — the path is owned
+    /// by whoever binds it, and rebinding after a crash must work.
+    pub fn bind(&self) -> io::Result<NetListener> {
+        match self {
+            Endpoint::Uds(p) => {
+                let _ = std::fs::remove_file(p);
+                Ok(NetListener::Uds(UnixListener::bind(p)?))
+            }
+            Endpoint::Tcp(a) => Ok(NetListener::Tcp(TcpListener::bind(a)?)),
+        }
+    }
+}
+
+impl std::fmt::Display for Endpoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Endpoint::Uds(p) => write!(f, "{}", p.display()),
+            Endpoint::Tcp(a) => write!(f, "tcp:{a}"),
+        }
+    }
+}
+
+/// A connected byte stream over either transport.
+#[derive(Debug)]
+pub enum NetStream {
+    Uds(UnixStream),
+    Tcp(TcpStream),
+}
+
+impl NetStream {
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        match self {
+            NetStream::Uds(s) => s.set_read_timeout(d),
+            NetStream::Tcp(s) => s.set_read_timeout(d),
+        }
+    }
+
+    pub fn set_write_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        match self {
+            NetStream::Uds(s) => s.set_write_timeout(d),
+            NetStream::Tcp(s) => s.set_write_timeout(d),
+        }
+    }
+
+    /// Shut down both directions (wakes a peer blocked in read).
+    pub fn shutdown(&self) -> io::Result<()> {
+        match self {
+            NetStream::Uds(s) => s.shutdown(std::net::Shutdown::Both),
+            NetStream::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
+        }
+    }
+}
+
+impl Read for NetStream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            NetStream::Uds(s) => s.read(buf),
+            NetStream::Tcp(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for NetStream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            NetStream::Uds(s) => s.write(buf),
+            NetStream::Tcp(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            NetStream::Uds(s) => s.flush(),
+            NetStream::Tcp(s) => s.flush(),
+        }
+    }
+}
+
+/// A bound server listener over either transport.
+pub enum NetListener {
+    Uds(UnixListener),
+    Tcp(TcpListener),
+}
+
+impl NetListener {
+    /// Non-blocking accept loops let the server poll a stop flag.
+    pub fn set_nonblocking(&self, nb: bool) -> io::Result<()> {
+        match self {
+            NetListener::Uds(l) => l.set_nonblocking(nb),
+            NetListener::Tcp(l) => l.set_nonblocking(nb),
+        }
+    }
+
+    pub fn accept(&self) -> io::Result<NetStream> {
+        match self {
+            NetListener::Uds(l) => {
+                let (s, _) = l.accept()?;
+                Ok(NetStream::Uds(s))
+            }
+            NetListener::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nodelay(true)?;
+                Ok(NetStream::Tcp(s))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::proto::{read_frame, write_frame, Frame};
+
+    #[test]
+    fn endpoint_parse_round_trips() {
+        assert_eq!(Endpoint::parse("/tmp/a.sock"), Endpoint::Uds(PathBuf::from("/tmp/a.sock")));
+        assert_eq!(
+            Endpoint::parse("tcp:127.0.0.1:7070"),
+            Endpoint::Tcp("127.0.0.1:7070".into())
+        );
+        assert_eq!(Endpoint::parse("tcp:h:1").to_string(), "tcp:h:1");
+        assert_eq!(Endpoint::parse("/x/y").to_string(), "/x/y");
+    }
+
+    #[test]
+    fn frames_cross_a_socketpair() {
+        let (a, b) = UnixStream::pair().unwrap();
+        let (mut a, mut b) = (NetStream::Uds(a), NetStream::Uds(b));
+        let echo = std::thread::spawn(move || {
+            let f = read_frame(&mut b).unwrap();
+            assert_eq!(f, Frame::Ping { nonce: 5 });
+            write_frame(&mut b, &Frame::Pong { nonce: 5 }).unwrap();
+        });
+        write_frame(&mut a, &Frame::Ping { nonce: 5 }).unwrap();
+        assert_eq!(read_frame(&mut a).unwrap(), Frame::Pong { nonce: 5 });
+        echo.join().unwrap();
+    }
+
+    #[test]
+    fn read_timeout_surfaces_as_io_error() {
+        let (a, _b) = UnixStream::pair().unwrap();
+        let mut a = NetStream::Uds(a);
+        a.set_read_timeout(Some(Duration::from_millis(20))).unwrap();
+        let err = read_frame(&mut a).unwrap_err();
+        assert!(matches!(err, crate::error::EmberError::Io(_)), "{err}");
+    }
+
+    #[test]
+    fn uds_bind_unlinks_stale_socket_files() {
+        let path = std::env::temp_dir().join(format!("ember-stale-{}.sock", std::process::id()));
+        let ep = Endpoint::Uds(path.clone());
+        let l1 = ep.bind().unwrap();
+        drop(l1); // leaves the socket file behind, as a killed server would
+        let _l2 = ep.bind().expect("rebinding over a stale socket file must work");
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,185 @@
+//! Disaggregated-serving integration tests: a full `Coordinator`
+//! whose embedding stage fans out to shard servers over the wire
+//! protocol must score byte-identically to the in-process paths, and
+//! losing a shard mid-load must degrade (zero-filled segments, counted
+//! in `ServeStats::degraded`) instead of failing requests.
+//!
+//! Shard servers run in-process here (same code the `ember
+//! shard-server` binary wraps); the CI `net-serving` job exercises the
+//! real multi-process topology.
+
+use ember::coordinator::{
+    synthetic_request, BatchOptions, Coordinator, DlrmModel, Request, Response, ServeOptions,
+};
+use ember::net::{
+    placement, Endpoint, NetFrontend, NetFrontendOpts, NetShape, ShardServer, ShardServerCfg,
+};
+use std::time::Duration;
+
+const BATCH: usize = 4;
+const TABLES: usize = 4;
+const ROWS: usize = 64;
+const EMB: usize = 8;
+const LOOKUPS: usize = 6;
+const DENSE: usize = 3;
+const HIDDEN: usize = 16;
+const SEED: u64 = 42;
+
+fn model() -> DlrmModel {
+    DlrmModel::new(BATCH, ROWS, EMB, TABLES, LOOKUPS, DENSE, HIDDEN, SEED).unwrap()
+}
+
+fn sock(name: &str, i: usize) -> Endpoint {
+    Endpoint::Uds(
+        std::env::temp_dir().join(format!("ember-it-{name}{i}-{}.sock", std::process::id())),
+    )
+}
+
+fn spawn_servers(name: &str, n: usize, replicas: usize) -> (Vec<ShardServer>, Vec<Endpoint>) {
+    let hosted = placement(TABLES, n, replicas);
+    let mut servers = Vec::new();
+    let mut eps = Vec::new();
+    for (i, owned) in hosted.into_iter().enumerate() {
+        let ep = sock(name, i);
+        let cfg = ShardServerCfg {
+            shard_id: i as u32,
+            num_tables: TABLES,
+            table_rows: ROWS,
+            emb: EMB,
+            batch: BATCH,
+            seed: SEED,
+            owned,
+        };
+        servers.push(ShardServer::spawn(ep.clone(), cfg).unwrap());
+        eps.push(ep);
+    }
+    (servers, eps)
+}
+
+fn frontend(eps: &[Endpoint], replicas: usize) -> NetFrontend {
+    let hosted = placement(TABLES, eps.len(), replicas);
+    let opts = NetFrontendOpts {
+        timeout: Duration::from_millis(500),
+        reconnect_base: Duration::from_secs(30), // no resurrection mid-test
+        ..Default::default()
+    };
+    NetFrontend::connect(eps, Some(&hosted), NetShape::of(&model()), opts).unwrap()
+}
+
+fn serve_opts() -> ServeOptions {
+    ServeOptions {
+        batch: BatchOptions { max_batch: BATCH, max_wait: Duration::from_micros(200) },
+        shards: 1,
+    }
+}
+
+fn reqs(n: usize) -> Vec<Request> {
+    (0..n).map(|k| synthetic_request(TABLES, ROWS, DENSE, LOOKUPS, 0, k)).collect()
+}
+
+/// Submit every request, wait for every response, expect all to serve.
+fn score_ok(coord: &Coordinator, reqs: &[Request]) -> Vec<Response> {
+    let rxs: Vec<_> = reqs.iter().map(|r| coord.submit(r.clone()).unwrap()).collect();
+    rxs.into_iter().map(|rx| rx.recv().unwrap().expect("request must serve")).collect()
+}
+
+/// Acceptance: net-mode serving is byte-identical to the in-process
+/// paths, end to end through the coordinator (batching + MLP + stats).
+#[test]
+fn net_coordinator_scores_match_in_process_paths() {
+    let rs = reqs(10);
+
+    // single-worker reference
+    let local = Coordinator::start(model(), None, serve_opts().batch);
+    let want = score_ok(&local, &rs);
+    local.shutdown();
+
+    // in-process shard pool
+    let pool_opts = ServeOptions { shards: 2, ..serve_opts() };
+    let pooled = Coordinator::start_sharded(model(), None, pool_opts);
+    let via_pool = score_ok(&pooled, &rs);
+    pooled.shutdown();
+
+    // disaggregated: 2 shard servers behind a NetFrontend embedder
+    let (servers, eps) = spawn_servers("parity", 2, 0);
+    let fe = frontend(&eps, 0);
+    let coord = Coordinator::start_with_embedder(model(), None, serve_opts(), Box::new(fe));
+    let via_net = score_ok(&coord, &rs);
+    let stats = coord.shutdown();
+    for s in servers {
+        s.wait();
+    }
+
+    for ((a, b), c) in want.iter().zip(&via_pool).zip(&via_net) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.id, c.id);
+        assert_eq!(a.score, b.score, "pool path diverged on {}", a.id);
+        assert_eq!(a.score, c.score, "net path diverged on {}", a.id);
+    }
+    assert_eq!(stats.requests, 10);
+    assert_eq!(stats.errors, 0);
+    assert_eq!(stats.degraded, 0);
+    assert!(stats.hist.count() > 0);
+}
+
+/// Failure handling: killing an unreplicated shard mid-load degrades
+/// (requests keep succeeding, segments zero-fill, the counter ticks) —
+/// it must NOT turn into per-request errors.
+#[test]
+fn killing_a_shard_degrades_instead_of_failing() {
+    let (mut servers, eps) = spawn_servers("kill", 2, 0);
+    let fe = frontend(&eps, 0);
+    let coord = Coordinator::start_with_embedder(model(), None, serve_opts(), Box::new(fe));
+    let rs = reqs(12);
+
+    // healthy phase
+    score_ok(&coord, &rs[..4]);
+
+    // kill shard 0 (joins its threads: the socket is fully dead)
+    servers.remove(0).wait();
+
+    // degraded phase: still no request-level errors
+    let rxs: Vec<_> = rs[4..].iter().map(|r| coord.submit(r.clone()).unwrap()).collect();
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(resp.is_ok(), "degradation must not fail requests: {resp:?}");
+    }
+    let stats = coord.shutdown();
+    for s in servers {
+        s.wait();
+    }
+
+    assert_eq!(stats.requests, 12);
+    assert_eq!(stats.errors, 0, "no request may fail");
+    let lost = placement(TABLES, 2, 0)[0].len() as u64;
+    assert!(stats.degraded >= lost, "want >= {lost} degraded segments, got {}", stats.degraded);
+}
+
+/// With `replicas = 1` every table lives on two servers, so losing one
+/// is fully masked: scores stay byte-identical and nothing degrades.
+#[test]
+fn replication_masks_a_killed_shard_end_to_end() {
+    let rs = reqs(8);
+    let local = Coordinator::start(model(), None, serve_opts().batch);
+    let want = score_ok(&local, &rs);
+    local.shutdown();
+
+    let (mut servers, eps) = spawn_servers("mask", 2, 1);
+    let fe = frontend(&eps, 1);
+    let coord = Coordinator::start_with_embedder(model(), None, serve_opts(), Box::new(fe));
+
+    servers.remove(0).wait(); // kill before any traffic
+
+    let got = score_ok(&coord, &rs);
+    let stats = coord.shutdown();
+    for s in servers {
+        s.wait();
+    }
+
+    for (a, b) in want.iter().zip(&got) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.score, b.score, "failover score diverged on {}", a.id);
+    }
+    assert_eq!(stats.degraded, 0, "replication must mask the kill");
+    assert_eq!(stats.errors, 0);
+}

@@ -151,7 +151,7 @@ fn loadgen_against_router_spread_pools() {
     let coord = mk();
     let report = run_closed_loop(
         &coord,
-        LoadSpec { clients: 2, requests_per_client: 6, target_qps: None },
+        LoadSpec { clients: 2, requests_per_client: 6, ..Default::default() },
         |c, k| {
             let mut rng = Rng::new((c * 31 + k) as u64);
             Request {
