@@ -11,6 +11,7 @@ use ember::coordinator::{
     run_closed_loop, run_open_loop, synthetic_request, synthetic_request_with, BatchOptions,
     Coordinator, DlrmModel, IndexDist, LoadReport, LoadSpec, OpenLoopSpec, Request, ServeOptions,
 };
+use ember::trace::TraceSink;
 use ember::EmberSession;
 use std::time::Duration;
 
@@ -67,6 +68,31 @@ fn drive(
     (report.throughput_rps(), line)
 }
 
+/// `drive` against a coordinator carrying `sink` — throughput only,
+/// for the trace-overhead comparison.
+fn drive_with_sink(
+    session: &mut EmberSession,
+    shards: usize,
+    clients: usize,
+    per_client: usize,
+    sink: TraceSink,
+) -> f64 {
+    let coord = Coordinator::start_sharded_traced(
+        model(session),
+        None,
+        ServeOptions {
+            batch: BatchOptions { max_batch: BATCH, max_wait: Duration::from_micros(500) },
+            shards,
+        },
+        sink,
+    );
+    let spec = LoadSpec { clients, requests_per_client: per_client, ..Default::default() };
+    let report = run_closed_loop(&coord, spec, request).expect("load generation failed");
+    let stats = coord.shutdown();
+    assert_eq!(report.errors + stats.errors, 0, "serving errors under load");
+    report.throughput_rps()
+}
+
 fn main() {
     println!("== serving engine benchmarks ({TABLES}-table DLRM, batch {BATCH}) ==");
     // clients > batch so full batches always form on the size trigger
@@ -107,6 +133,27 @@ fn main() {
         coord.shutdown();
         println!("{:>10.0}  {}", target, report.table_row());
     }
+
+    // tracing overhead: the identical closed loop with the ring-buffer
+    // sink off vs on. Disabled is a single branch per would-be event;
+    // enabled is one short mutexed ring push — the delta stays small.
+    println!("\ntracing overhead (4-shard pool):");
+    let off = drive_with_sink(&mut session, 4, clients, per_client, TraceSink::disabled());
+    let sink = TraceSink::enabled();
+    let on = drive_with_sink(&mut session, 4, clients, per_client, sink.clone());
+    let delta = if off > 0.0 { 100.0 * (off - on) / off } else { 0.0 };
+    println!("trace off       : {off:>7.0} req/s");
+    println!(
+        "trace on        : {on:>7.0} req/s  ({} buffered event(s), {} dropped)",
+        sink.len(),
+        sink.dropped()
+    );
+    println!("overhead        : {delta:+.1}%");
+    assert!(!sink.is_empty(), "enabled sink recorded nothing under load");
+    assert!(
+        on >= 0.3 * off,
+        "tracing overhead out of bounds: {off:.0} -> {on:.0} req/s"
+    );
 
     // open-loop Poisson arrivals at half of closed-loop peak, uniform
     // vs zipf indices — the arrival model that keeps offering load when

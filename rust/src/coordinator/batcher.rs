@@ -71,6 +71,13 @@ impl Batcher {
         self.oldest.map(|t0| t0 + self.opts.max_wait)
     }
 
+    /// Arrival time of the oldest pending request — the start of the
+    /// forming batch (`None` when empty). `flush` resets it, so callers
+    /// tracing a `batch_form` span must read it before flushing.
+    pub fn oldest(&self) -> Option<Instant> {
+        self.oldest
+    }
+
     pub fn flush(&mut self) -> Vec<Request> {
         self.oldest = None;
         self.batches_emitted += 1;
@@ -123,6 +130,18 @@ mod tests {
         }
         seen.sort_unstable();
         assert_eq!(seen, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn oldest_tracks_first_arrival_and_resets_on_flush() {
+        let mut b = Batcher::new(BatchOptions { max_batch: 3, max_wait: Duration::from_secs(10) });
+        assert!(b.oldest().is_none());
+        let t0 = Instant::now();
+        b.push(req(0), t0);
+        b.push(req(1), t0 + Duration::from_millis(1));
+        assert_eq!(b.oldest(), Some(t0));
+        b.flush();
+        assert!(b.oldest().is_none());
     }
 
     #[test]

@@ -40,6 +40,22 @@ pub enum IndexDist {
     Zipf(f64),
 }
 
+impl IndexDist {
+    /// Validated [`IndexDist::Zipf`] constructor: the exponent must be
+    /// a finite non-negative number (s = 0 degenerates to uniform,
+    /// negative or NaN exponents would silently corrupt the sampler's
+    /// harmonic-sum tables). The CLI's `--zipf <s>` parses through
+    /// this, mirroring the open-loop `target_qps` validation.
+    pub fn zipf(s: f64) -> Result<IndexDist> {
+        if !s.is_finite() || s < 0.0 {
+            return Err(EmberError::Workload(format!(
+                "zipf exponent must be a finite non-negative number, got {s}"
+            )));
+        }
+        Ok(IndexDist::Zipf(s))
+    }
+}
+
 impl fmt::Display for IndexDist {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
@@ -411,6 +427,15 @@ mod tests {
                 .collect(),
             dense: (0..m.dense).map(|_| rng.f32()).collect(),
         }
+    }
+
+    #[test]
+    fn zipf_constructor_rejects_nan_negative_and_infinite_exponents() {
+        assert!(IndexDist::zipf(f64::NAN).is_err());
+        assert!(IndexDist::zipf(-0.5).is_err());
+        assert!(IndexDist::zipf(f64::INFINITY).is_err());
+        assert_eq!(IndexDist::zipf(0.0).unwrap(), IndexDist::Zipf(0.0));
+        assert_eq!(IndexDist::zipf(1.05).unwrap(), IndexDist::Zipf(1.05));
     }
 
     #[test]

@@ -10,6 +10,7 @@ use super::stats::ServeStats;
 use super::{DlrmModel, EmbedOutcome, EmbedStage, Request, Response};
 use crate::error::{EmberError, Result};
 use crate::runtime::Runtime;
+use crate::trace::{current_tid, TraceEvent, TraceSink};
 use std::path::PathBuf;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -39,6 +40,7 @@ impl Default for ServeOptions {
 pub struct Coordinator {
     tx: Option<Sender<Envelope>>,
     handle: Option<JoinHandle<ServeStats>>,
+    trace: TraceSink,
 }
 
 /// Cloneable submit handle. Client threads each take their own handle
@@ -48,14 +50,22 @@ pub struct Coordinator {
 #[derive(Clone)]
 pub struct CoordinatorClient {
     tx: Sender<Envelope>,
+    trace: TraceSink,
 }
 
 impl CoordinatorClient {
     /// Async submit: returns the response channel.
     pub fn submit(&self, req: Request) -> Result<Receiver<Result<Response>>> {
         let (rtx, rrx) = mpsc::channel();
+        let t0 = Instant::now();
+        if self.trace.is_enabled() {
+            // flow arrow from the submitting thread to the worker's
+            // dequeue, correlated by request id
+            let tid = self.trace.name_current_thread("client");
+            self.trace.record(TraceEvent::flow_start("req", req.id, tid, self.trace.ts_of(t0)));
+        }
         self.tx
-            .send((req, Instant::now(), rtx))
+            .send((req, t0, rtx))
             .map_err(|_| EmberError::Runtime("coordinator worker gone".into()))?;
         Ok(rrx)
     }
@@ -86,20 +96,33 @@ impl Coordinator {
     pub fn start_sharded(
         model: DlrmModel,
         artifacts_dir: Option<PathBuf>,
+        opts: ServeOptions,
+    ) -> Self {
+        Self::start_sharded_traced(model, artifacts_dir, opts, TraceSink::disabled())
+    }
+
+    /// [`Coordinator::start_sharded`] with a trace sink: the worker,
+    /// shard pool and every [`CoordinatorClient`] emit request-
+    /// lifecycle spans and flow events into `trace`.
+    pub fn start_sharded_traced(
+        model: DlrmModel,
+        artifacts_dir: Option<PathBuf>,
         mut opts: ServeOptions,
+        trace: TraceSink,
     ) -> Self {
         opts.batch.max_batch = opts.batch.max_batch.clamp(1, model.batch.max(1));
         let (tx, rx) = mpsc::channel::<Envelope>();
+        let worker_trace = trace.clone();
         let handle = std::thread::spawn(move || {
             let runtime = artifacts_dir.and_then(|d| Runtime::new(d).ok());
             let embedder: Option<Box<dyn EmbedStage>> = if opts.shards > 1 {
-                Some(Box::new(ShardPool::new(&model, opts.shards)))
+                Some(Box::new(ShardPool::with_trace(&model, opts.shards, worker_trace.clone())))
             } else {
                 None
             };
-            worker(model, embedder, runtime, opts.batch, rx)
+            worker(model, embedder, runtime, opts.batch, rx, worker_trace)
         });
-        Coordinator { tx: Some(tx), handle: Some(handle) }
+        Coordinator { tx: Some(tx), handle: Some(handle), trace }
     }
 
     /// Spawn a coordinator whose embedding stage is delegated to a
@@ -110,16 +133,36 @@ impl Coordinator {
     pub fn start_with_embedder(
         model: DlrmModel,
         artifacts_dir: Option<PathBuf>,
+        opts: ServeOptions,
+        embedder: Box<dyn EmbedStage>,
+    ) -> Self {
+        Self::start_with_embedder_traced(
+            model,
+            artifacts_dir,
+            opts,
+            embedder,
+            TraceSink::disabled(),
+        )
+    }
+
+    /// [`Coordinator::start_with_embedder`] with a trace sink attached
+    /// to the worker (the embedder keeps whatever sink it was built
+    /// with — e.g. a `NetFrontend` sharing this same sink).
+    pub fn start_with_embedder_traced(
+        model: DlrmModel,
+        artifacts_dir: Option<PathBuf>,
         mut opts: ServeOptions,
         embedder: Box<dyn EmbedStage>,
+        trace: TraceSink,
     ) -> Self {
         opts.batch.max_batch = opts.batch.max_batch.clamp(1, model.batch.max(1));
         let (tx, rx) = mpsc::channel::<Envelope>();
+        let worker_trace = trace.clone();
         let handle = std::thread::spawn(move || {
             let runtime = artifacts_dir.and_then(|d| Runtime::new(d).ok());
-            worker(model, Some(embedder), runtime, opts.batch, rx)
+            worker(model, Some(embedder), runtime, opts.batch, rx, worker_trace)
         });
-        Coordinator { tx: Some(tx), handle: Some(handle) }
+        Coordinator { tx: Some(tx), handle: Some(handle), trace }
     }
 
     /// A cloneable submit handle for this coordinator.
@@ -130,6 +173,7 @@ impl Coordinator {
                 .as_ref()
                 .ok_or_else(|| EmberError::Runtime("coordinator stopped".into()))?
                 .clone(),
+            trace: self.trace.clone(),
         })
     }
 
@@ -164,6 +208,10 @@ impl Drop for Coordinator {
 
 /// Run one flushed batch: embedding (sharded or inline), MLP, then
 /// per-request responses + latency recording.
+///
+/// `formed_at` is when the batch's oldest request arrived — the start
+/// of the `batch_form` span when tracing.
+#[allow(clippy::too_many_arguments)]
 fn run_batch(
     model: &DlrmModel,
     embedder: &mut Option<Box<dyn EmbedStage>>,
@@ -171,30 +219,83 @@ fn run_batch(
     batch: Vec<Request>,
     senders: Vec<(Instant, Sender<Result<Response>>)>,
     stats: &mut ServeStats,
+    formed_at: Instant,
+    trace: &TraceSink,
 ) {
     stats.batches += 1;
+    let tid = if trace.is_enabled() { current_tid() } else { 0 };
+    if trace.is_enabled() {
+        let ts = trace.ts_of(formed_at);
+        trace.record(
+            TraceEvent::complete("batch_form", "serve", tid, ts, (trace.now_us() - ts).max(0.0))
+                .with_arg("requests", batch.len() as f64),
+        );
+    }
     // one Arc wrap instead of a per-shard deep copy of the batch
     let batch = Arc::new(batch);
+    let embed_t = trace.now_us();
     let outcome = match embedder.as_deref_mut() {
         Some(stage) => stage.embed_stage(&batch),
         None => model.embed(&batch).map(|e| EmbedOutcome { embeddings: e, degraded: 0 }),
     };
+    if trace.is_enabled() {
+        let degraded = outcome.as_ref().map(|o| o.degraded).unwrap_or(0);
+        trace.record(
+            TraceEvent::complete(
+                "embed",
+                "serve",
+                tid,
+                embed_t,
+                (trace.now_us() - embed_t).max(0.0),
+            )
+            .with_arg("degraded", degraded as f64),
+        );
+    }
+    let mlp_t = trace.now_us();
     let result = outcome.and_then(|o| {
         stats.degraded += o.degraded;
         model.score(runtime, &batch, &o.embeddings)
     });
+    if trace.is_enabled() {
+        trace.record(TraceEvent::complete(
+            "mlp",
+            "serve",
+            tid,
+            mlp_t,
+            (trace.now_us() - mlp_t).max(0.0),
+        ));
+    }
     match result {
         Ok(responses) => {
             for (resp, (t0, tx)) in responses.into_iter().zip(senders) {
                 stats.hist.record(t0.elapsed());
+                if trace.is_enabled() {
+                    trace.record(TraceEvent::async_end(
+                        "request",
+                        "req",
+                        resp.id,
+                        tid,
+                        trace.now_us(),
+                    ));
+                }
                 let _ = tx.send(Ok(resp));
             }
         }
         Err(e) => {
             stats.errors += 1;
             let msg = e.to_string();
-            for (t0, tx) in senders {
+            for (i, (t0, tx)) in senders.into_iter().enumerate() {
                 stats.hist.record(t0.elapsed());
+                // record() is a no-op on a disabled sink, no guard needed
+                if let Some(r) = batch.get(i) {
+                    trace.record(TraceEvent::async_end(
+                        "request",
+                        "req",
+                        r.id,
+                        tid,
+                        trace.now_us(),
+                    ));
+                }
                 let _ = tx.send(Err(EmberError::Runtime(msg.clone())));
             }
         }
@@ -207,11 +308,17 @@ fn worker(
     mut runtime: Option<Runtime>,
     opts: BatchOptions,
     rx: Receiver<Envelope>,
+    trace: TraceSink,
 ) -> ServeStats {
     let started = Instant::now();
     let mut stats = ServeStats::default();
     let mut batcher = Batcher::new(opts);
     let mut waiting: Vec<(Instant, Sender<Result<Response>>)> = Vec::new();
+    let worker_tid = if trace.is_enabled() {
+        trace.name_current_thread("coordinator worker")
+    } else {
+        0
+    };
 
     loop {
         // wait for work, bounded by the batcher's flush deadline
@@ -222,24 +329,66 @@ fn worker(
         match rx.recv_timeout(timeout) {
             Ok((req, t0, rtx)) => {
                 stats.requests += 1;
+                if trace.is_enabled() {
+                    // close the submit-side flow arrow and open the
+                    // request's async span at its submit time
+                    trace.record(TraceEvent::flow_end("req", req.id, worker_tid, trace.now_us()));
+                    trace.record(TraceEvent::async_begin(
+                        "request",
+                        "req",
+                        req.id,
+                        worker_tid,
+                        trace.ts_of(t0),
+                    ));
+                }
                 waiting.push((t0, rtx));
+                let formed_at = batcher.oldest().unwrap_or(t0);
                 if let Some(batch) = batcher.push(req, Instant::now()) {
                     let senders = std::mem::take(&mut waiting);
-                    run_batch(&model, &mut embedder, &mut runtime, batch, senders, &mut stats);
+                    run_batch(
+                        &model,
+                        &mut embedder,
+                        &mut runtime,
+                        batch,
+                        senders,
+                        &mut stats,
+                        formed_at,
+                        &trace,
+                    );
                 }
             }
             Err(RecvTimeoutError::Timeout) => {
+                let formed_at = batcher.oldest().unwrap_or_else(Instant::now);
                 if let Some(batch) = batcher.poll(Instant::now()) {
                     let senders = std::mem::take(&mut waiting);
-                    run_batch(&model, &mut embedder, &mut runtime, batch, senders, &mut stats);
+                    run_batch(
+                        &model,
+                        &mut embedder,
+                        &mut runtime,
+                        batch,
+                        senders,
+                        &mut stats,
+                        formed_at,
+                        &trace,
+                    );
                 }
             }
             Err(RecvTimeoutError::Disconnected) => {
                 // drain the final partial batch
+                let formed_at = batcher.oldest().unwrap_or_else(Instant::now);
                 let batch = batcher.flush();
                 if !batch.is_empty() {
                     let senders = std::mem::take(&mut waiting);
-                    run_batch(&model, &mut embedder, &mut runtime, batch, senders, &mut stats);
+                    run_batch(
+                        &model,
+                        &mut embedder,
+                        &mut runtime,
+                        batch,
+                        senders,
+                        &mut stats,
+                        formed_at,
+                        &trace,
+                    );
                 }
                 break;
             }
@@ -343,6 +492,60 @@ mod tests {
             assert_eq!(a.id, b.id);
             assert_eq!(a.score, b.score, "sharded embed must be byte-identical");
         }
+    }
+
+    #[test]
+    fn traced_coordinator_matches_untraced_and_records_lifecycle() {
+        use crate::trace::Phase;
+        let mut rng = Rng::new(12);
+        let m = tiny();
+        let reqs: Vec<Request> = (0..8).map(|i| req(i, &mut rng, &m)).collect();
+        let run = |trace: TraceSink| -> Vec<Response> {
+            let coord = Coordinator::start_sharded_traced(
+                tiny(),
+                None,
+                ServeOptions {
+                    batch: BatchOptions { max_batch: 4, max_wait: Duration::from_millis(1) },
+                    shards: 2,
+                },
+                trace,
+            );
+            let client = coord.client().unwrap();
+            let rxs: Vec<_> = reqs.iter().map(|r| client.submit(r.clone()).unwrap()).collect();
+            let mut got: Vec<Response> =
+                rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+            got.sort_by_key(|r| r.id);
+            coord.shutdown();
+            got
+        };
+        let plain = run(TraceSink::disabled());
+        let sink = TraceSink::enabled();
+        let traced = run(sink.clone());
+        assert_eq!(plain.len(), traced.len());
+        for (a, b) in plain.iter().zip(&traced) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.score, b.score, "tracing must not change outputs");
+        }
+        let evs = sink.drain();
+        let has = |n: &str| evs.iter().any(|e| e.name == n);
+        assert!(has("batch_form") && has("embed") && has("mlp"), "lifecycle spans");
+        assert!(has("req"), "flow events across threads");
+        assert!(has("shard_embed"), "per-shard embed spans");
+        let begins = evs
+            .iter()
+            .filter(|e| e.name == "request" && matches!(e.ph, Phase::AsyncBegin))
+            .count();
+        let ends = evs
+            .iter()
+            .filter(|e| e.name == "request" && matches!(e.ph, Phase::AsyncEnd))
+            .count();
+        assert_eq!(begins, 8, "every request opens its async span");
+        assert_eq!(ends, 8, "every request closes its async span");
+        // client, worker and shard threads all got labeled tracks
+        let th = sink.threads();
+        assert!(th.iter().any(|(_, n)| n == "coordinator worker"));
+        assert!(th.iter().any(|(_, n)| n == "client"));
+        assert!(th.iter().any(|(_, n)| n.starts_with("shard")));
     }
 
     #[test]

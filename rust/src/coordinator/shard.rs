@@ -26,6 +26,7 @@ use super::{DlrmModel, Request};
 use crate::compiler::passes::pipeline::CompiledProgram;
 use crate::error::{EmberError, Result};
 use crate::exec::{Backend, Bindings, Executor, Instance};
+use crate::trace::{TraceEvent, TraceSink};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -62,16 +63,24 @@ impl ShardPool {
     /// Spawn `shards` workers, each owning a pooled [`Instance`] for
     /// `model.program` plus pre-bound [`Bindings`] for its tables.
     pub fn new(model: &DlrmModel, shards: usize) -> Self {
+        Self::with_trace(model, shards, TraceSink::disabled())
+    }
+
+    /// [`ShardPool::new`] with a trace sink: each shard thread records
+    /// a `shard_embed` span per batch on its own labeled track.
+    pub fn with_trace(model: &DlrmModel, shards: usize, trace: TraceSink) -> Self {
         let plan = shard_plan(model.num_tables, shards);
         let mut txs = Vec::with_capacity(plan.len());
         let mut handles = Vec::with_capacity(plan.len());
-        for owned in plan {
+        for (shard_id, owned) in plan.into_iter().enumerate() {
             let (tx, rx) = mpsc::channel::<Job>();
             let worker = ShardWorker {
                 program: model.program.clone(),
                 tables: owned.iter().map(|&t| (t, model.tables[t].clone())).collect(),
                 batch: model.batch,
                 max_lookups: model.max_lookups,
+                shard_id,
+                trace: trace.clone(),
             };
             handles.push(std::thread::spawn(move || worker.run(rx)));
             txs.push(tx);
@@ -159,11 +168,18 @@ struct ShardWorker {
     tables: Vec<(usize, crate::data::Tensor)>,
     batch: usize,
     max_lookups: usize,
+    shard_id: usize,
+    trace: TraceSink,
 }
 
 impl ShardWorker {
     fn run(self, rx: Receiver<Job>) {
-        let ShardWorker { program, tables, batch, max_lookups } = self;
+        let ShardWorker { program, tables, batch, max_lookups, shard_id, trace } = self;
+        let tid = if trace.is_enabled() {
+            trace.name_current_thread(&format!("shard {shard_id}"))
+        } else {
+            0
+        };
         let mut exec = match Instance::new(&program, Backend::Fast) {
             Ok(i) => i,
             Err(e) => {
@@ -185,6 +201,7 @@ impl ShardWorker {
         let mut ptr_scratch: Vec<i32> = vec![0; batch + 1];
         let mut idx_scratch: Vec<i32> = Vec::new();
         while let Ok(job) = rx.recv() {
+            let t_start = trace.now_us();
             let mut parts = Vec::with_capacity(bindings.len());
             let mut failure: Option<EmberError> = None;
             for (t, b) in &mut bindings {
@@ -204,6 +221,18 @@ impl ShardWorker {
                         break;
                     }
                 }
+            }
+            if trace.is_enabled() {
+                trace.record(
+                    TraceEvent::complete(
+                        "shard_embed",
+                        "serve",
+                        tid,
+                        t_start,
+                        (trace.now_us() - t_start).max(0.0),
+                    )
+                    .with_arg("tables", bindings.len() as f64),
+                );
             }
             let reply = match failure {
                 Some(e) => Err(e),

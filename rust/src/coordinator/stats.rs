@@ -126,6 +126,19 @@ impl ServeStats {
     pub fn p99(&self) -> Duration {
         self.hist.quantile(0.99)
     }
+    /// Percentage of table segments served degraded (zeros because no
+    /// host owned the table was alive). Each `degraded` increment is
+    /// one table across one batch, so the denominator is
+    /// `batches × tables`. Zero when nothing was served.
+    pub fn degraded_pct(&self, tables: usize) -> f64 {
+        let total = self.batches.saturating_mul(tables as u64);
+        if total == 0 {
+            0.0
+        } else {
+            100.0 * self.degraded as f64 / total as f64
+        }
+    }
+
     /// Requests per second over the worker's lifetime.
     pub fn throughput_rps(&self) -> f64 {
         if self.elapsed.is_zero() {
@@ -293,6 +306,16 @@ mod tests {
         assert!((a.throughput_rps() - 100.0).abs() < 1e-9);
         // p50 lands in the 300-sample bucket ([128, 256) µs).
         assert_eq!(a.p50(), Duration::from_micros(256));
+    }
+
+    #[test]
+    fn degraded_pct_is_segments_over_batches_times_tables() {
+        let s = ServeStats { batches: 10, degraded: 8, ..Default::default() };
+        // 8 degraded segments out of 10 batches × 4 tables = 20%
+        assert!((s.degraded_pct(4) - 20.0).abs() < 1e-9);
+        assert_eq!(s.degraded_pct(0), 0.0, "zero tables never divides by zero");
+        let empty = ServeStats::default();
+        assert_eq!(empty.degraded_pct(4), 0.0);
     }
 
     #[test]

@@ -26,7 +26,13 @@ use super::config::{MachineConfig, UnitConfig};
 use super::memory::Memory;
 use crate::interp::{DaeSink, Unit};
 use crate::ir::types::MemHint;
+use crate::trace::{TraceEvent, TraceSink};
 use std::collections::VecDeque;
+
+/// Trace `tid` of the access-unit track (simulator trace domain).
+const TID_ACCESS: u64 = 1;
+/// Trace `tid` of the execute-unit track.
+const TID_EXEC: u64 = 2;
 
 /// Latency histogram buckets (in core cycles) for Fig. 3a.
 pub const LAT_BUCKETS: [u64; 6] = [8, 16, 64, 128, 512, u64::MAX];
@@ -230,6 +236,9 @@ pub struct DaeSim {
     /// Tokens dispatched.
     pub tokens: u64,
     pub pops: u64,
+    /// Observability sink (disabled by default: recording is a single
+    /// branch and the timing model is untouched either way).
+    trace: TraceSink,
 }
 
 impl DaeSim {
@@ -247,8 +256,27 @@ impl DaeSim {
             energy_pj: 0.0,
             tokens: 0,
             pops: 0,
+            trace: TraceSink::disabled(),
             cfg,
         }
+    }
+
+    /// Attach a trace sink: subsequent events emit queue-occupancy and
+    /// outstanding-slot counters plus memory-level instants, all on the
+    /// simulated-cycle axis (1 cycle ≡ 1 µs in the trace UI).
+    pub fn set_trace(&mut self, trace: TraceSink) {
+        if trace.is_enabled() {
+            trace.name_thread(TID_ACCESS, "access unit");
+            trace.name_thread(TID_EXEC, "exec unit");
+        }
+        self.trace = trace;
+    }
+
+    /// [`DaeSim::new`] with a trace sink attached.
+    pub fn with_trace(cfg: MachineConfig, trace: TraceSink) -> Self {
+        let mut sim = Self::new(cfg);
+        sim.set_trace(trace);
+        sim
     }
 
     #[inline]
@@ -376,6 +404,7 @@ impl DaeSink for DaeSim {
         for &d in deps {
             dep_t = dep_t.max(self.ready_of(d));
         }
+        let on_access = decoupled && matches!(unit, Unit::Access);
         let (u, use_l1) = match unit {
             Unit::Access if decoupled => (&mut self.access, false),
             _ => (&mut self.exec, true),
@@ -391,6 +420,22 @@ impl DaeSink for DaeSim {
         u.stats.mem_reads += 1;
         u.stats.mem_read_bytes += bytes as u64;
         Self::lat_bucket(&mut u.stats, r.latency);
+        if self.trace.is_enabled() {
+            let (name, tid) = if on_access {
+                ("dae/access_outstanding", TID_ACCESS)
+            } else {
+                ("dae/exec_outstanding", TID_EXEC)
+            };
+            self.trace.record(TraceEvent::counter(name, tid, t, u.outstanding.len() as f64));
+            let level = match r.level {
+                1 => "mem/l1",
+                2 => "mem/l2",
+                3 => "mem/llc",
+                _ => "mem/dram",
+            };
+            self.trace
+                .record(TraceEvent::instant(level, "mem", tid, t).with_arg("bytes", bytes as f64));
+        }
         self.set_ready(produces, completion);
         // energy
         let p = &self.cfg.power;
@@ -409,6 +454,7 @@ impl DaeSink for DaeSim {
         for &d in deps {
             dep_t = dep_t.max(self.ready_of(d));
         }
+        let on_access = decoupled && matches!(unit, Unit::Access);
         let (u, use_l1) = match unit {
             Unit::Access if decoupled => (&mut self.access, false),
             _ => (&mut self.exec, true),
@@ -423,6 +469,14 @@ impl DaeSink for DaeSim {
         u.outstanding.push(completion);
         u.horizon = u.horizon.max(completion);
         u.stats.mem_writes += 1;
+        if self.trace.is_enabled() {
+            let (name, tid) = if on_access {
+                ("dae/access_outstanding", TID_ACCESS)
+            } else {
+                ("dae/exec_outstanding", TID_EXEC)
+            };
+            self.trace.record(TraceEvent::counter(name, tid, t, u.outstanding.len() as f64));
+        }
         // charge the level the write actually hit, mirroring mem_read
         // (a flat L1 charge undercounted every store that missed)
         let p = &self.cfg.power;
@@ -485,6 +539,10 @@ impl DaeSink for DaeSim {
         let t = self.data_q.push(bytes as u64, t0) + cost;
         self.marshal_clock = t;
         self.access.horizon = self.access.horizon.max(t);
+        if self.trace.is_enabled() {
+            let depth = self.data_q.cum_pushed.saturating_sub(self.data_q.cum_popped);
+            self.trace.record(TraceEvent::counter("dae/data_q_bytes", TID_ACCESS, t, depth as f64));
+        }
         self.energy_pj +=
             self.cfg.power.pj_per_op + self.cfg.power.pj_per_queue_byte * bytes as f64;
     }
@@ -498,6 +556,11 @@ impl DaeSink for DaeSim {
         let t = self.ctrl_q.push(1, self.marshal_clock.max(slot)) + cost;
         self.marshal_clock = t;
         self.access.horizon = self.access.horizon.max(t);
+        if self.trace.is_enabled() {
+            let depth = self.ctrl_q.cum_pushed.saturating_sub(self.ctrl_q.cum_popped);
+            self.trace
+                .record(TraceEvent::counter("dae/ctrl_q_tokens", TID_ACCESS, t, depth as f64));
+        }
         self.energy_pj += self.cfg.power.pj_per_op;
     }
 
@@ -512,6 +575,15 @@ impl DaeSink for DaeSim {
             self.exec.clock = ready;
         }
         self.data_q.record_pop_done(self.exec.clock);
+        if self.trace.is_enabled() {
+            let depth = self.data_q.cum_pushed.saturating_sub(self.data_q.cum_popped);
+            self.trace.record(TraceEvent::counter(
+                "dae/data_q_bytes",
+                TID_EXEC,
+                self.exec.clock,
+                depth as f64,
+            ));
+        }
         self.energy_pj +=
             self.cfg.power.pj_per_op + self.cfg.power.pj_per_queue_byte * bytes as f64;
     }
@@ -533,6 +605,15 @@ impl DaeSink for DaeSim {
             self.exec.clock = ready;
         }
         self.ctrl_q.record_pop_done(self.exec.clock);
+        if self.trace.is_enabled() {
+            let depth = self.ctrl_q.cum_pushed.saturating_sub(self.ctrl_q.cum_popped);
+            self.trace.record(TraceEvent::counter(
+                "dae/ctrl_q_tokens",
+                TID_EXEC,
+                self.exec.clock,
+                depth as f64,
+            ));
+        }
         self.exec.clock += self.cfg.dispatch_cost as f64 * self.exec.cfg.cost_scale;
         self.energy_pj += self.cfg.power.pj_per_op * (1 + self.cfg.dispatch_cost) as f64;
     }
@@ -555,6 +636,16 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn sim_sls(cfg: MachineConfig, opt: OptLevel, rows: usize, lookups: usize) -> DaeSim {
+        sim_sls_traced(cfg, opt, rows, lookups, TraceSink::disabled())
+    }
+
+    fn sim_sls_traced(
+        cfg: MachineConfig,
+        opt: OptLevel,
+        rows: usize,
+        lookups: usize,
+        trace: TraceSink,
+    ) -> DaeSim {
         let mut rng = Rng::new(3);
         let table = Tensor::f32(vec![4096, 32], rng.normal_vec(4096 * 32, 1.0));
         let r: Vec<Vec<i32>> = (0..rows)
@@ -565,7 +656,7 @@ mod tests {
         // drive the sink directly (the exec layer wraps this; these
         // tests inspect DaeSim internals the ExecReport doesn't carry)
         let mut env = Bindings::sls(&csr, &table).into_env();
-        let mut sim = DaeSim::new(cfg);
+        let mut sim = DaeSim::with_trace(cfg, trace);
         let mut interp = Interp::new(&prog.dlc).unwrap();
         interp.run(&mut env, &mut sim).unwrap();
         sim
@@ -667,5 +758,50 @@ mod tests {
         let sim = sim_sls(MachineConfig::dae_tmu(), OptLevel::O3, 16, 32);
         assert_eq!(sim.data_q.cum_pushed, sim.data_q.cum_popped);
         assert!(sim.tokens > 0);
+    }
+
+    #[test]
+    fn trace_emits_queue_and_outstanding_counters_on_cycle_axis() {
+        let sink = TraceSink::enabled();
+        let sim = sim_sls_traced(MachineConfig::dae_tmu(), OptLevel::O3, 16, 32, sink.clone());
+        let cycles = sim.cycles() as f64;
+        let evs = sink.drain();
+        assert!(!evs.is_empty());
+        let has = |n: &str| evs.iter().any(|e| e.name == n);
+        assert!(has("dae/access_outstanding"), "TMU outstanding-slot counter");
+        assert!(has("dae/data_q_bytes"), "data-queue occupancy counter");
+        assert!(has("dae/ctrl_q_tokens"), "ctrl-queue occupancy counter");
+        assert!(
+            evs.iter().any(|e| e.name.starts_with("mem/")),
+            "memory-level hit instants"
+        );
+        // timestamps are simulated cycles: within the run's span
+        assert!(evs.iter().all(|e| e.ts_us >= 0.0 && e.ts_us <= cycles + 1.0));
+        // both unit tracks are labeled
+        let th = sink.threads();
+        assert!(th.iter().any(|(t, n)| *t == TID_ACCESS && n == "access unit"));
+        assert!(th.iter().any(|(t, n)| *t == TID_EXEC && n == "exec unit"));
+    }
+
+    #[test]
+    fn coupled_machine_traces_exec_unit_only() {
+        let sink = TraceSink::enabled();
+        sim_sls_traced(MachineConfig::traditional_core(), OptLevel::O1, 8, 16, sink.clone());
+        let evs = sink.drain();
+        assert!(evs.iter().any(|e| e.name == "dae/exec_outstanding"));
+        assert!(!evs.iter().any(|e| e.name == "dae/access_outstanding"));
+        assert!(!evs.iter().any(|e| e.name == "dae/data_q_bytes"));
+    }
+
+    #[test]
+    fn tracing_does_not_perturb_the_timing_model() {
+        let plain = sim_sls(MachineConfig::dae_tmu(), OptLevel::O3, 16, 32);
+        let traced =
+            sim_sls_traced(MachineConfig::dae_tmu(), OptLevel::O3, 16, 32, TraceSink::enabled());
+        assert_eq!(plain.cycles(), traced.cycles());
+        assert_eq!(plain.tokens, traced.tokens);
+        assert_eq!(plain.pops, traced.pops);
+        assert!((plain.energy_pj - traced.energy_pj).abs() < 1e-9);
+        assert_eq!(plain.queue_conservation(), traced.queue_conservation());
     }
 }

@@ -192,6 +192,9 @@ pub struct Instance {
     fast: Option<FastExec>,
     runtime: Option<Runtime>,
     runs: u64,
+    /// Trace sink handed to [`Backend::DaeSim`] runs (disabled by
+    /// default; other backends have no sink callbacks to instrument).
+    trace: crate::trace::TraceSink,
 }
 
 impl Instance {
@@ -245,7 +248,23 @@ impl Instance {
             Backend::Fast => Some(FastExec::new(program)?),
             _ => None,
         };
-        Ok(Instance { op: program.op.clone(), backend, dlc, interp, fast, runtime, runs: 0 })
+        Ok(Instance {
+            op: program.op.clone(),
+            backend,
+            dlc,
+            interp,
+            fast,
+            runtime,
+            runs: 0,
+            trace: crate::trace::TraceSink::disabled(),
+        })
+    }
+
+    /// Attach a trace sink: subsequent [`Backend::DaeSim`] runs emit
+    /// queue/outstanding counter tracks and memory-level instants on
+    /// the simulated-cycle axis. A no-op handle on other backends.
+    pub fn set_trace(&mut self, trace: crate::trace::TraceSink) {
+        self.trace = trace;
     }
 
     /// The backend this instance targets.
@@ -324,7 +343,7 @@ impl Instance {
                 }
             }
             Backend::DaeSim(cfg) => {
-                let mut sim = DaeSim::new(cfg);
+                let mut sim = DaeSim::with_trace(cfg, self.trace.clone());
                 let interp = self.pooled_interp()?;
                 interp.reset();
                 interp.run(env, &mut sim)?;

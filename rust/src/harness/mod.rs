@@ -143,9 +143,23 @@ pub fn run_op(
     cfg: MachineConfig,
     env: &mut Env,
 ) -> Result<RunResult> {
+    run_op_traced(op, opt, cfg, env, crate::trace::TraceSink::disabled())
+}
+
+/// [`run_op`] with a trace sink attached to the simulator: the run
+/// additionally emits queue-occupancy / outstanding-slot counters and
+/// memory-level instants onto `trace`, keyed by simulated cycle.
+pub fn run_op_traced(
+    op: &OpClass,
+    opt: OptLevel,
+    cfg: MachineConfig,
+    env: &mut Env,
+    trace: crate::trace::TraceSink,
+) -> Result<RunResult> {
     let effective = if cfg.access.is_none() && opt > OptLevel::O1 { OptLevel::O1 } else { opt };
     let mut session = EmberSession::with_options(CompileOptions::with_opt(effective));
     let mut exec = session.instantiate(op, Backend::DaeSim(cfg))?;
+    exec.set_trace(trace);
     let report = exec.run_env_stats(env)?;
     Ok(report.sim.expect("DaeSim backend always attaches machine stats"))
 }

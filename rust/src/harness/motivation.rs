@@ -100,6 +100,64 @@ pub fn run_spattn_cfg(
     super::simulate(&prog, cfg, &mut env)
 }
 
+/// The default `ember simulate` workload for `op` ("sls", "spmm",
+/// "mp", "kg", "spattn"): the op class plus a bound environment.
+/// Shared by the CLI and the trace smokes so a traced run binds the
+/// exact same inputs as an untraced one.
+pub fn sim_env(op: &str, seed: u64) -> Result<(OpClass, crate::data::Env)> {
+    use crate::error::EmberError;
+    let graph = |name: &str| {
+        spec(name).ok_or_else(|| EmberError::Workload(format!("unknown graph `{name}`")))
+    };
+    match op {
+        "sls" => {
+            let rm = &RM1;
+            let mut rng = Rng::new(seed ^ 3);
+            let table = Tensor::f32(
+                vec![rm.table_rows, rm.emb_len],
+                rng.normal_vec(rm.table_rows * rm.emb_len, 0.5),
+            );
+            let csr = &rm.gen_batch(Locality::L1, seed)[0];
+            Ok((OpClass::Sls, Bindings::sls(csr, &table).into_env()))
+        }
+        "spmm" => {
+            let g = graph("arxiv")?;
+            let mut rng = Rng::new(seed);
+            let csr = head_csr(&g.gen_csr(seed), ROW_CAP);
+            let feats = feats_of(g, &mut rng);
+            Ok((OpClass::Spmm, Bindings::spmm(&csr, &feats).into_env()))
+        }
+        "mp" => {
+            let g = graph("web-Google")?;
+            let mut rng = Rng::new(seed);
+            let csr = head_csr(&g.gen_csr(seed), ROW_CAP / 2);
+            let feats = feats_of(g, &mut rng);
+            Ok((OpClass::Mp, Bindings::mp(&csr, &feats).into_env()))
+        }
+        "kg" => {
+            let g = graph("biokg")?;
+            let mut rng = Rng::new(seed ^ 1);
+            let n = g.scaled_nodes();
+            let table = Tensor::f32(vec![n, g.feat], rng.normal_vec(n * g.feat, 0.5));
+            let fl = g.gen_kg_lookups(1024, seed);
+            Ok((
+                OpClass::Kg(Semiring::PlusTimes),
+                Bindings::kg(Semiring::PlusTimes, &fl, &table).into_env(),
+            ))
+        }
+        "spattn" => {
+            let block = 4;
+            let mut rng = Rng::new(seed ^ 2);
+            let s = SpAttnSpec::bigbird(block);
+            let keys =
+                Tensor::f32(vec![s.seq_len, s.emb], rng.normal_vec(s.seq_len * s.emb, 0.5));
+            let g = s.gen_gathers(128, seed);
+            Ok((OpClass::SpAttn { block }, Bindings::spattn(&g, &keys).into_env()))
+        }
+        other => Err(EmberError::Workload(format!("unknown op `{other}`"))),
+    }
+}
+
 /// Run a DLRM SLS batch.
 pub fn run_dlrm(
     cfg_m: MachineConfig,

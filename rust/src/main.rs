@@ -17,6 +17,8 @@ use ember::net::{
 };
 use ember::runtime::Runtime;
 use ember::session::EmberSession;
+use ember::trace::export::TraceBuilder;
+use ember::trace::TraceSink;
 use ember::util::perfrec::{run_matrix, MatrixSpec, PerfRecording};
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
@@ -27,21 +29,27 @@ fn usage() -> ! {
 
 USAGE:
   ember compile --op <sls|spmm|mp|kg|kg_maxplus|spattn> [--opt 0..3] [--vlen N] [--emit scf|slc|dlc|all] [--trace] [--dump-passes]
-  ember simulate --op <op> [--opt 0..3] [--machine core|core2x|dae|t4|h100]
+  ember simulate --op <op> [--opt 0..3] [--machine core|core2x|dae|t4|h100] [--trace FILE]
+              --trace writes per-queue/per-level counter tracks on the simulated-cycle axis
+              as chrome://tracing JSON (open in ui.perfetto.dev)
   ember bench [--smoke] [--out DIR] [--seed N] [--baseline FILE] [--tolerance PCT]
               runs the perf matrix (interp vs fast vs hand-opt), writes BENCH_<date>.json,
               and exits nonzero when --baseline comparison finds a regression
   ember bench --exp <table1..4|fig1|fig3|fig4|fig6|fig7|fig8|fig16..19|all> [--out results] [--seed N]
   ember serve [--requests N] [--clients C] [--shards S] [--qps Q[,Q..]] [--tables T] [--artifacts artifacts]
-              [--zipf S] [--open-loop]
+              [--zipf S] [--open-loop] [--smoke] [--trace FILE]
+              --trace writes the request-lifecycle timeline (enqueue -> batch -> embed -> MLP)
+              plus a DAE-simulator counter track as chrome://tracing JSON
   ember serve --net (--shard-servers N | --shard-sockets P1,P2,..) [--replicate R] [--smoke]
               [--tables T] [--rows R] [--emb E] [--batch B] [--seed S] [--requests N] [--clients C]
-              [--zipf S] [--open-loop] [--qps Q]
+              [--zipf S] [--open-loop] [--qps Q] [--trace FILE]
               multi-process serving: fans the embedding stage out to shard-server processes over
-              UDS (or tcp:HOST:PORT) and prints a NET_SERVE summary line
+              UDS (or tcp:HOST:PORT) and prints a NET_SERVE summary line; --trace merges every
+              shard-server's buffered spans (pulled over the wire) into one multi-process file
   ember shard-server --socket PATH --own T1,T2,.. [--shard-id I] [--tables T] [--rows R] [--emb E]
-              [--batch B] [--seed S]
-              standalone shard-server process hosting the listed tables (regenerated from --seed)
+              [--batch B] [--seed S] [--trace]
+              standalone shard-server process hosting the listed tables (regenerated from --seed);
+              --trace buffers request spans for a frontend to pull via TraceReq
   ember info
 "
     );
@@ -139,9 +147,7 @@ fn cmd_compile(flags: &HashMap<String, String>) -> Result<()> {
 }
 
 fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
-    use ember::harness::motivation::{run_dlrm, run_gnn, run_kg, run_mp, run_spattn};
-    use ember::workloads::dlrm::{Locality, RM1};
-    use ember::workloads::graphs::spec;
+    use ember::harness::motivation::sim_env;
     let op = flags.get("op").map(String::as_str).unwrap_or("sls");
     let opt: OptLevel = flags
         .get("opt")
@@ -151,17 +157,11 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
         .unwrap_or(OptLevel::O3);
     let machine = parse_machine(flags.get("machine").map(String::as_str).unwrap_or("dae"));
     let seed = flags.get("seed").and_then(|v| v.parse().ok()).unwrap_or(1u64);
-    let res = match op {
-        "sls" => run_dlrm(machine, &RM1, Locality::L1, opt, seed)?,
-        "spmm" => run_gnn(spec("arxiv").unwrap(), machine, opt, seed)?,
-        "mp" => run_mp(spec("web-Google").unwrap(), machine, opt, seed)?,
-        "kg" => run_kg(spec("biokg").unwrap(), machine, opt, seed)?,
-        "spattn" => run_spattn(4, machine, opt, seed)?,
-        other => {
-            eprintln!("unknown op `{other}`");
-            usage()
-        }
-    };
+    let trace_path = flags.get("trace").filter(|s| !s.is_empty()).cloned();
+    let sink =
+        if trace_path.is_some() { TraceSink::enabled() } else { TraceSink::disabled() };
+    let (op_class, mut env) = sim_env(op, seed)?;
+    let res = harness::run_op_traced(&op_class, opt, machine, &mut env, sink.clone())?;
     println!("machine           {}", machine.name);
     println!("opt level         {}", opt.name());
     println!("cycles            {}", res.cycles);
@@ -173,6 +173,12 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
     println!("tokens            {}", res.tokens);
     println!("queue write       {:.2} B/cyc", res.queue_write_bps);
     println!("queue read        {:.2} B/cyc", res.queue_read_bps);
+    if let Some(path) = trace_path {
+        let mut tb = TraceBuilder::new();
+        tb.add_sim_sink(1, &format!("ember sim: {op} on {}", machine.name), &sink);
+        let nev = tb.write(&path)?;
+        println!("trace             {nev} event(s) -> {path} (simulated-cycle time axis)");
+    }
     Ok(())
 }
 
@@ -247,22 +253,46 @@ fn cmd_bench_perf(flags: &HashMap<String, String>) -> Result<()> {
 /// bare flag = the conventional 1.05 production skew).
 fn parse_dist(flags: &HashMap<String, String>) -> Result<IndexDist> {
     match flags.get("zipf") {
-        Some(v) if !v.is_empty() => v
-            .parse()
-            .map(IndexDist::Zipf)
-            .map_err(|_| EmberError::Parse(format!("bad --zipf value `{v}`"))),
+        Some(v) if !v.is_empty() => {
+            let s: f64 = v
+                .parse()
+                .map_err(|_| EmberError::Parse(format!("bad --zipf value `{v}`")))?;
+            IndexDist::zipf(s)
+        }
         Some(_) => Ok(IndexDist::Zipf(1.05)),
         None => Ok(IndexDist::Uniform),
     }
+}
+
+/// A tiny DAE-simulator run (`sls` on the paper's DAE machine) whose
+/// counter tracks ride along in a `--trace` serve file, so one trace
+/// shows all three layers: request lifecycle, shard processes, and the
+/// simulated machine.
+fn sim_smoke_sink() -> Result<TraceSink> {
+    use ember::harness::motivation::sim_env;
+    let sink = TraceSink::enabled();
+    let (op, mut env) = sim_env("sls", 1)?;
+    harness::run_op_traced(&op, OptLevel::O3, MachineConfig::dae_tmu(), &mut env, sink.clone())?;
+    Ok(sink)
 }
 
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     if flags.contains_key("net") {
         return cmd_serve_net(flags);
     }
-    let n: usize = flags.get("requests").and_then(|v| v.parse().ok()).unwrap_or(512);
-    let clients: usize = flags.get("clients").and_then(|v| v.parse().ok()).unwrap_or(4);
-    let shards: usize = flags.get("shards").and_then(|v| v.parse().ok()).unwrap_or(4);
+    let smoke = flags.contains_key("smoke");
+    let n: usize = flags
+        .get("requests")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if smoke { 64 } else { 512 });
+    let clients: usize = flags
+        .get("clients")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if smoke { 2 } else { 4 });
+    let shards: usize = flags
+        .get("shards")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if smoke { 2 } else { 4 });
     let tables: usize = flags.get("tables").and_then(|v| v.parse().ok()).unwrap_or(16);
     let qps_targets: Vec<Option<f64>> = match flags.get("qps") {
         Some(s) if !s.is_empty() => s
@@ -321,6 +351,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         (shape.num_tables, shape.table_rows, shape.dense, shape.max_lookups);
     let dist = parse_dist(flags)?;
     let open_loop = flags.contains_key("open-loop");
+    let trace_path = flags.get("trace").filter(|s| !s.is_empty()).cloned();
+    let sink =
+        if trace_path.is_some() { TraceSink::enabled() } else { TraceSink::disabled() };
     println!(
         "serving: {num_tables} tables x {rows} rows, batch {}, {shards} embedding shard(s), {clients} client(s), {dist} indices, {} arrivals\n",
         shape.batch,
@@ -328,13 +361,14 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     );
     println!("{:>10}  {}", "target", LoadReport::table_header());
     for target in qps_targets {
-        let coord = Coordinator::start_sharded(
+        let coord = Coordinator::start_sharded_traced(
             make_model()?,
             artifacts_dir.clone(),
             ServeOptions {
                 batch: BatchOptions { max_batch: shape.batch, max_wait: Duration::from_millis(1) },
                 shards,
             },
+            sink.clone(),
         );
         let report = if open_loop {
             let spec = OpenLoopSpec {
@@ -370,6 +404,16 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             report.errors,
         );
     }
+    if let Some(path) = trace_path {
+        let mut tb = TraceBuilder::new();
+        tb.add_sink(1, "ember serve (coordinator)", &sink);
+        match sim_smoke_sink() {
+            Ok(s) => tb.add_sim_sink(1000, "dae simulator (sls)", &s),
+            Err(e) => eprintln!("warning: DAE-sim trace track skipped: {e}"),
+        }
+        let nev = tb.write(&path)?;
+        println!("trace: {nev} event(s) -> {path}");
+    }
     Ok(())
 }
 
@@ -394,12 +438,17 @@ fn cmd_serve_net(flags: &HashMap<String, String>) -> Result<()> {
     let dist = parse_dist(flags)?;
     let open_loop = flags.contains_key("open-loop");
     let (max_lookups, dense, hidden) = (32usize, 13usize, 64usize);
+    let trace_path = flags.get("trace").filter(|s| !s.is_empty()).cloned();
+    let sink =
+        if trace_path.is_some() { TraceSink::enabled() } else { TraceSink::disabled() };
 
     // Endpoints: either the caller runs shard servers (--shard-sockets)
     // or this process spawns them as children (--shard-servers N).
     let mut children: Vec<std::process::Child> = Vec::new();
     let endpoints: Vec<Endpoint> = match flags.get("shard-sockets").filter(|s| !s.is_empty()) {
-        Some(socks) => socks.split(',').map(|s| Endpoint::parse(s.trim())).collect(),
+        Some(socks) => {
+            socks.split(',').map(|s| Endpoint::parse(s.trim())).collect::<Result<_>>()?
+        }
         None => {
             let nserv: usize =
                 flags.get("shard-servers").and_then(|v| v.parse().ok()).unwrap_or(2);
@@ -413,26 +462,30 @@ fn cmd_serve_net(flags: &HashMap<String, String>) -> Result<()> {
                     .join(format!("ember-shard-{}-{i}.sock", std::process::id()));
                 let _ = std::fs::remove_file(&sock);
                 let own_csv: Vec<String> = owned.iter().map(|t| t.to_string()).collect();
+                let mut child_args: Vec<String> = vec![
+                    "shard-server".into(),
+                    "--socket".into(),
+                    sock.display().to_string(),
+                    "--shard-id".into(),
+                    i.to_string(),
+                    "--own".into(),
+                    own_csv.join(","),
+                    "--tables".into(),
+                    tables.to_string(),
+                    "--rows".into(),
+                    rows.to_string(),
+                    "--emb".into(),
+                    emb.to_string(),
+                    "--batch".into(),
+                    batch.to_string(),
+                    "--seed".into(),
+                    seed.to_string(),
+                ];
+                if trace_path.is_some() {
+                    child_args.push("--trace".into());
+                }
                 let child = std::process::Command::new(&exe)
-                    .args([
-                        "shard-server",
-                        "--socket",
-                        &sock.display().to_string(),
-                        "--shard-id",
-                        &i.to_string(),
-                        "--own",
-                        &own_csv.join(","),
-                        "--tables",
-                        &tables.to_string(),
-                        "--rows",
-                        &rows.to_string(),
-                        "--emb",
-                        &emb.to_string(),
-                        "--batch",
-                        &batch.to_string(),
-                        "--seed",
-                        &seed.to_string(),
-                    ])
+                    .args(&child_args)
                     .spawn()
                     .map_err(|e| EmberError::Runtime(format!("spawning shard server: {e}")))?;
                 children.push(child);
@@ -464,12 +517,13 @@ fn cmd_serve_net(flags: &HashMap<String, String>) -> Result<()> {
         hidden,
         seed,
     )?;
-    let frontend = NetFrontend::connect(
+    let mut frontend = NetFrontend::connect(
         &endpoints,
         Some(&hosted),
         NetShape::of(&model),
         NetFrontendOpts::default(),
     )?;
+    frontend.set_trace(sink.clone());
     let alive = frontend.alive();
     println!(
         "net serving: {tables} tables x {rows} rows, batch {batch}, {}/{} shard server(s) alive, \
@@ -478,7 +532,7 @@ fn cmd_serve_net(flags: &HashMap<String, String>) -> Result<()> {
         endpoints.len()
     );
 
-    let coord = Coordinator::start_with_embedder(
+    let coord = Coordinator::start_with_embedder_traced(
         model,
         None,
         ServeOptions {
@@ -486,6 +540,7 @@ fn cmd_serve_net(flags: &HashMap<String, String>) -> Result<()> {
             shards: 1,
         },
         Box::new(frontend),
+        sink.clone(),
     );
     let report = if open_loop {
         let target = flags
@@ -523,9 +578,42 @@ fn cmd_serve_net(flags: &HashMap<String, String>) -> Result<()> {
     );
     // Machine-greppable summary for the CI smoke job.
     println!(
-        "NET_SERVE ok={} errors={} degraded={} alive={}",
-        report.ok, report.errors, stats.degraded, alive
+        "NET_SERVE ok={} errors={} degraded={} alive={} p99_us={} degraded_pct={:.2}",
+        report.ok,
+        report.errors,
+        stats.degraded,
+        alive,
+        report.p99().as_micros(),
+        stats.degraded_pct(tables),
     );
+
+    // Merge the trace before tearing the shards down: a stopped shard
+    // takes its buffer with it. The frontend's own spans (request
+    // lifecycle + net_embed fan-out) are already in `sink`; each
+    // shard's buffer is pulled over the wire; a tiny DAE-sim run adds
+    // the simulated-machine counter tracks.
+    if let Some(path) = &trace_path {
+        let mut tb = TraceBuilder::new();
+        tb.add_sink(1, "ember serve frontend", &sink);
+        for ep in &endpoints {
+            match pull_trace_at(ep) {
+                Some((sid, origin, dropped, events)) => tb.add_wire(
+                    100 + sid as u64,
+                    &format!("shard-server {sid}"),
+                    origin as f64,
+                    dropped,
+                    &events,
+                )?,
+                None => eprintln!("warning: no trace pulled from {ep}"),
+            }
+        }
+        match sim_smoke_sink() {
+            Ok(s) => tb.add_sim_sink(1000, "dae simulator (sls)", &s),
+            Err(e) => eprintln!("warning: DAE-sim trace track skipped: {e}"),
+        }
+        let nev = tb.write(path)?;
+        println!("trace: {nev} event(s) -> {path}");
+    }
 
     // Graceful teardown of spawned children: ask each shard to stop,
     // then reap (killing as a fallback).
@@ -551,6 +639,24 @@ fn cmd_serve_net(flags: &HashMap<String, String>) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Pull one shard server's buffered trace over a fresh connection:
+/// handshake, `TraceReq`, `TraceResp`. Best-effort — a dead shard
+/// simply contributes no track.
+fn pull_trace_at(ep: &Endpoint) -> Option<(u32, u64, u64, String)> {
+    use ember::net::{read_frame, write_frame, Frame};
+    let mut s = ep.connect().ok()?;
+    s.set_read_timeout(Some(Duration::from_millis(500))).ok()?;
+    write_frame(&mut s, &Frame::Hello { version: ember::net::proto::VERSION }).ok()?;
+    read_frame(&mut s).ok()?; // HelloAck
+    write_frame(&mut s, &Frame::TraceReq).ok()?;
+    match read_frame(&mut s) {
+        Ok(Frame::TraceResp { shard_id, origin_unix_us, dropped, events }) => {
+            Some((shard_id, origin_unix_us, dropped, events))
+        }
+        _ => None,
+    }
 }
 
 /// Best-effort `Shutdown` frame to one shard server.
@@ -592,8 +698,10 @@ fn cmd_shard_server(flags: &HashMap<String, String>) -> Result<()> {
         seed: flags.get("seed").and_then(|v| v.parse().ok()).unwrap_or(42),
         owned: own.clone(),
     };
-    let ep = Endpoint::parse(socket);
-    let srv = ShardServer::spawn(ep, cfg)?;
+    let ep = Endpoint::parse(socket)?;
+    let trace =
+        if flags.contains_key("trace") { TraceSink::enabled() } else { TraceSink::disabled() };
+    let srv = ShardServer::spawn_traced(ep, cfg, trace)?;
     println!(
         "shard-server {} listening on {} hosting tables {:?}",
         flags.get("shard-id").map(String::as_str).unwrap_or("0"),

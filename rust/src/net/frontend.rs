@@ -27,6 +27,7 @@ use super::transport::{Endpoint, NetStream};
 use crate::coordinator::stats::LatencyHist;
 use crate::coordinator::{EmbedOutcome, EmbedStage, Request};
 use crate::error::{EmberError, Result};
+use crate::trace::{current_tid, TraceEvent, TraceSink};
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -139,6 +140,7 @@ pub struct NetFrontend {
     shape: NetShape,
     opts: NetFrontendOpts,
     seq: u64,
+    trace: TraceSink,
 }
 
 impl NetFrontend {
@@ -196,7 +198,13 @@ impl NetFrontend {
                 },
             }
         }
-        Ok(NetFrontend { conns, shape, opts, seq: 0 })
+        Ok(NetFrontend { conns, shape, opts, seq: 0, trace: TraceSink::disabled() })
+    }
+
+    /// Record each `embed` fan-out as a `net_embed` span on `trace`
+    /// (share the coordinator's sink so the spans land on one timeline).
+    pub fn set_trace(&mut self, trace: TraceSink) {
+        self.trace = trace;
     }
 
     /// Connections currently alive (handshaken and not marked dead).
@@ -235,6 +243,7 @@ impl NetFrontend {
     /// in-process paths, byte-identical on healthy shards) plus the
     /// number of table segments degraded to zeros.
     pub fn embed(&mut self, reqs: &[Request]) -> Result<(Vec<f32>, u64)> {
+        let t0_us = self.trace.now_us();
         let NetShape { num_tables, emb, batch, max_lookups, .. } = self.shape;
         let width = num_tables * emb;
         let mut out = vec![0f32; batch * width];
@@ -344,6 +353,18 @@ impl NetFrontend {
 
         // Tables stranded when no assignment was possible at all.
         degraded += remaining.len() as u64;
+        if self.trace.is_enabled() {
+            self.trace.record(
+                TraceEvent::complete(
+                    "net_embed",
+                    "net",
+                    current_tid(),
+                    t0_us,
+                    (self.trace.now_us() - t0_us).max(0.0),
+                )
+                .with_arg("degraded", degraded as f64),
+            );
+        }
         Ok((out, degraded))
     }
 
@@ -363,6 +384,29 @@ impl NetFrontend {
             }
         }
         (segments, batches, hist)
+    }
+
+    /// Drain every alive shard's trace buffer over the wire
+    /// (`TraceReq`/`TraceResp`). Returns one
+    /// `(shard_id, origin_unix_us, dropped, events_json)` tuple per
+    /// responding shard, ready for
+    /// [`crate::trace::export::TraceBuilder::add_wire`]. Pull before
+    /// [`Self::shutdown_shards`] — a stopped shard takes its buffer
+    /// with it.
+    pub fn pull_traces(&mut self) -> Vec<(u32, u64, u64, String)> {
+        let mut out = Vec::new();
+        for conn in &mut self.conns {
+            let Some(s) = conn.stream.as_mut() else { continue };
+            if write_frame(s, &Frame::TraceReq).is_err() {
+                continue;
+            }
+            if let Ok(Frame::TraceResp { shard_id, origin_unix_us, dropped, events }) =
+                read_frame(s)
+            {
+                out.push((shard_id, origin_unix_us, dropped, events));
+            }
+        }
+        out
     }
 
     /// Ask every alive shard server to stop (graceful teardown when
@@ -542,6 +586,54 @@ mod tests {
                     assert_eq!(seg, want_seg, "surviving table {t} row {i}");
                 }
             }
+        }
+        for s in servers {
+            s.wait();
+        }
+    }
+
+    #[test]
+    fn traced_fan_out_records_net_embed_and_pulls_shard_buffers() {
+        let hosted = placement(TABLES, 2, 0);
+        let mut servers = Vec::new();
+        let mut eps = Vec::new();
+        for (i, owned) in hosted.into_iter().enumerate() {
+            let ep = sock(&format!("traced{i}"));
+            let cfg = ShardServerCfg {
+                shard_id: i as u32,
+                num_tables: TABLES,
+                table_rows: ROWS,
+                emb: EMB,
+                batch: BATCH,
+                seed: SEED,
+                owned,
+            };
+            servers.push(
+                ShardServer::spawn_traced(ep.clone(), cfg, TraceSink::enabled()).unwrap(),
+            );
+            eps.push(ep);
+        }
+        let mut fe =
+            NetFrontend::connect(&eps, None, shape(), NetFrontendOpts::default()).unwrap();
+        let sink = TraceSink::enabled();
+        fe.set_trace(sink.clone());
+        let (_, degraded) = fe.embed(&reqs(3)).unwrap();
+        assert_eq!(degraded, 0);
+        assert!(
+            sink.drain().iter().any(|e| e.name == "net_embed"),
+            "frontend sink missing the net_embed span"
+        );
+
+        let pulled = fe.pull_traces();
+        assert_eq!(pulled.len(), 2, "one TraceResp per alive shard");
+        for (shard_id, origin, _dropped, events) in &pulled {
+            assert!(*origin > 0, "shard {shard_id} origin");
+            let parsed = crate::util::json::Json::parse(events).unwrap();
+            let arr = parsed.as_arr().expect("events is a JSON array");
+            assert!(
+                arr.iter().any(|e| e.get("name").and_then(|n| n.as_str()) == Some("embed_req")),
+                "shard {shard_id} buffer missing embed_req: {events}"
+            );
         }
         for s in servers {
             s.wait();

@@ -81,6 +81,21 @@ pub enum Frame {
     },
     /// Stop the shard server process gracefully.
     Shutdown,
+    /// Ask the shard to drain its trace buffer.
+    TraceReq,
+    /// The shard's buffered trace events, already rendered as a
+    /// chrome://tracing JSON event array (see `trace::export`), plus
+    /// the alignment metadata the frontend needs to merge the shard's
+    /// wall-clock timeline into its own.
+    TraceResp {
+        shard_id: u32,
+        /// Unix µs of the shard sink's timestamp origin.
+        origin_unix_us: u64,
+        /// Events evicted from the shard's ring buffer.
+        dropped: u64,
+        /// Chrome trace-event JSON array, UTF-8.
+        events: String,
+    },
 }
 
 impl Frame {
@@ -96,6 +111,8 @@ impl Frame {
             Frame::StatsReq => 8,
             Frame::StatsResp { .. } => 9,
             Frame::Shutdown => 10,
+            Frame::TraceReq => 11,
+            Frame::TraceResp { .. } => 12,
         }
     }
 
@@ -148,7 +165,7 @@ impl Frame {
                 b.extend_from_slice(msg.as_bytes());
             }
             Frame::Ping { nonce } | Frame::Pong { nonce } => put_u64(&mut b, *nonce),
-            Frame::StatsReq | Frame::Shutdown => {}
+            Frame::StatsReq | Frame::Shutdown | Frame::TraceReq => {}
             Frame::StatsResp { requests, batches, hist } => {
                 put_u64(&mut b, *requests);
                 put_u64(&mut b, *batches);
@@ -156,6 +173,13 @@ impl Frame {
                 for h in hist {
                     put_u64(&mut b, *h);
                 }
+            }
+            Frame::TraceResp { shard_id, origin_unix_us, dropped, events } => {
+                put_u32(&mut b, *shard_id);
+                put_u64(&mut b, *origin_unix_us);
+                put_u64(&mut b, *dropped);
+                put_u32(&mut b, events.len() as u32);
+                b.extend_from_slice(events.as_bytes());
             }
         }
         b
@@ -238,6 +262,17 @@ impl Frame {
                 Frame::StatsResp { requests, batches, hist }
             }
             10 => Frame::Shutdown,
+            11 => Frame::TraceReq,
+            12 => {
+                let shard_id = rd.u32()?;
+                let origin_unix_us = rd.u64()?;
+                let dropped = rd.u64()?;
+                let n = rd.seq_len(1)?;
+                let bytes = rd.take(n)?;
+                let events = String::from_utf8(bytes.to_vec())
+                    .map_err(|_| EmberError::Parse("TraceResp events are not utf-8".into()))?;
+                Frame::TraceResp { shard_id, origin_unix_us, dropped, events }
+            }
             other => {
                 return Err(EmberError::Parse(format!("unknown frame tag {other}")));
             }
@@ -394,6 +429,13 @@ mod tests {
             Frame::StatsReq,
             Frame::StatsResp { requests: 100, batches: 10, hist: vec![0, 3, 7] },
             Frame::Shutdown,
+            Frame::TraceReq,
+            Frame::TraceResp {
+                shard_id: 1,
+                origin_unix_us: 1_700_000_000_000_000,
+                dropped: 2,
+                events: r#"[{"ph":"i","name":"mem/l1","ts":4.0}]"#.into(),
+            },
         ]
     }
 

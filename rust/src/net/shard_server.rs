@@ -24,6 +24,7 @@ use crate::error::{EmberError, Result};
 use crate::exec::{Backend, Bindings, Executor, Instance};
 use crate::frontend::embedding_ops::OpClass;
 use crate::session::EmberSession;
+use crate::trace::{TraceEvent, TraceSink};
 use std::io::{self, Read};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -71,6 +72,18 @@ impl ShardServer {
     /// in background threads. Returns once the listener is bound, so a
     /// caller can connect immediately after `spawn` returns.
     pub fn spawn(endpoint: Endpoint, cfg: ShardServerCfg) -> Result<ShardServer> {
+        ShardServer::spawn_traced(endpoint, cfg, TraceSink::disabled())
+    }
+
+    /// `spawn` with a trace sink. When the sink is enabled, every
+    /// `EmbedReq` is recorded as an `embed_req` span and a wire
+    /// `TraceReq` drains the buffer into a `TraceResp` the frontend
+    /// can merge into its own timeline.
+    pub fn spawn_traced(
+        endpoint: Endpoint,
+        cfg: ShardServerCfg,
+        trace: TraceSink,
+    ) -> Result<ShardServer> {
         let program = EmberSession::default().compile(&OpClass::Sls)?;
         let all = gen_tables(cfg.num_tables, cfg.table_rows, cfg.emb, cfg.seed);
         let mut owned = cfg.owned.clone();
@@ -104,10 +117,10 @@ impl ShardServer {
                 match listener.accept() {
                     Ok(stream) => {
                         let (stop, stats) = (accept_stop.clone(), stats.clone());
-                        let (cfg, tables, program) =
-                            (cfg2.clone(), tables.clone(), program.clone());
+                        let (cfg, tables, program, trace) =
+                            (cfg2.clone(), tables.clone(), program.clone(), trace.clone());
                         conns.push(std::thread::spawn(move || {
-                            serve_conn(stream, &cfg, &tables, &program, &stop, &stats);
+                            serve_conn(stream, &cfg, &tables, &program, &stop, &stats, &trace);
                         }));
                     }
                     Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
@@ -221,6 +234,7 @@ fn write_frame(s: &mut NetStream, f: &Frame) -> Result<()> {
 }
 
 /// Serve one frontend connection until EOF, error, or stop.
+#[allow(clippy::too_many_arguments)]
 fn serve_conn(
     mut stream: NetStream,
     cfg: &ShardServerCfg,
@@ -228,7 +242,9 @@ fn serve_conn(
     program: &Arc<crate::compiler::passes::pipeline::CompiledProgram>,
     stop: &AtomicBool,
     stats: &ShardStats,
+    trace: &TraceSink,
 ) {
+    let tid = if trace.is_enabled() { trace.name_current_thread("conn") } else { 0 };
     // Short read timeout so idle connections poll the stop flag;
     // read_full retries across timeouts, so frames never desync.
     let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
@@ -289,6 +305,19 @@ fn serve_conn(
                     }
                     Err(e) => Frame::ErrResp { seq, msg: e.to_string() },
                 };
+                if trace.is_enabled() {
+                    let ts = trace.ts_of(t0);
+                    trace.record(
+                        TraceEvent::complete(
+                            "embed_req",
+                            "serve",
+                            tid,
+                            ts,
+                            (trace.now_us() - ts).max(0.0),
+                        )
+                        .with_arg("tables", csrs.len() as f64),
+                    );
+                }
                 if write_frame(&mut stream, &reply).is_err() {
                     return;
                 }
@@ -308,6 +337,17 @@ fn serve_conn(
                     requests: stats.segments.load(Ordering::Relaxed),
                     batches: stats.batches.load(Ordering::Relaxed),
                     hist,
+                };
+                if write_frame(&mut stream, &resp).is_err() {
+                    return;
+                }
+            }
+            Frame::TraceReq => {
+                let resp = Frame::TraceResp {
+                    shard_id: cfg.shard_id,
+                    origin_unix_us: trace.origin_unix_us() as u64,
+                    dropped: trace.dropped(),
+                    events: crate::trace::export::wire_events(trace),
                 };
                 if write_frame(&mut stream, &resp).is_err() {
                     return;
@@ -532,6 +572,68 @@ mod tests {
         };
         assert_eq!((requests, batches), (2, 1));
         assert_eq!(hist.iter().sum::<u64>(), 1);
+        srv.wait();
+    }
+
+    #[test]
+    fn trace_req_drains_buffered_spans_over_the_wire() {
+        let c = cfg(vec![0, 1]);
+        let ep = sock("trace");
+        let srv = ShardServer::spawn_traced(ep.clone(), c.clone(), TraceSink::enabled()).unwrap();
+        let mut s = handshake(&ep);
+        let reqs: Vec<Request> = (0..3usize)
+            .map(|i| crate::coordinator::synthetic_request(c.num_tables, c.table_rows, 3, 6, 7, i))
+            .collect();
+        let csrs: Vec<TableCsr> = (0..2).map(|t| table_csr(&reqs, t, c.batch, 6)).collect();
+        write_f(&mut s, &Frame::EmbedReq { seq: 1, batch: 4, tables: csrs }).unwrap();
+        assert!(matches!(read_f(&mut s).unwrap(), Frame::EmbedResp { seq: 1, .. }));
+
+        write_f(&mut s, &Frame::TraceReq).unwrap();
+        let Frame::TraceResp { shard_id, origin_unix_us, dropped, events } =
+            read_f(&mut s).unwrap()
+        else {
+            panic!("no TraceResp");
+        };
+        assert_eq!(shard_id, 0);
+        assert!(origin_unix_us > 0);
+        assert_eq!(dropped, 0);
+        let parsed = crate::util::json::Json::parse(&events).unwrap();
+        let arr = parsed.as_arr().expect("events is a JSON array");
+        assert!(
+            arr.iter().any(|e| e.get("name").and_then(|n| n.as_str()) == Some("embed_req")),
+            "no embed_req span in {events}"
+        );
+        assert!(
+            arr.iter().any(|e| e.get("ph").and_then(|p| p.as_str()) == Some("M")),
+            "no thread_name metadata in {events}"
+        );
+
+        // the pull drained the buffer: a second one returns only metadata
+        write_f(&mut s, &Frame::TraceReq).unwrap();
+        let Frame::TraceResp { events, .. } = read_f(&mut s).unwrap() else {
+            panic!("no second TraceResp");
+        };
+        let parsed = crate::util::json::Json::parse(&events).unwrap();
+        let drained = parsed.as_arr().expect("second pull parses");
+        assert!(
+            drained.iter().all(|e| e.get("ph").and_then(|p| p.as_str()) == Some("M")),
+            "second pull should hold metadata only, got {events}"
+        );
+        srv.wait();
+    }
+
+    #[test]
+    fn untraced_server_answers_trace_req_with_an_empty_buffer() {
+        let ep = sock("notrace");
+        let srv = ShardServer::spawn(ep.clone(), cfg(vec![0])).unwrap();
+        let mut s = handshake(&ep);
+        write_f(&mut s, &Frame::TraceReq).unwrap();
+        let Frame::TraceResp { origin_unix_us, dropped, events, .. } = read_f(&mut s).unwrap()
+        else {
+            panic!("no TraceResp");
+        };
+        assert_eq!((origin_unix_us, dropped), (0, 0));
+        assert_eq!(events, "[]");
         srv.wait();
     }
 

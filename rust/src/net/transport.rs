@@ -11,6 +11,7 @@
 //! timeout knobs the failure-handling path needs (a shard that stops
 //! answering must look like an error, not a hang).
 
+use crate::error::{EmberError, Result};
 use std::io::{self, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::net::{UnixListener, UnixStream};
@@ -28,11 +29,32 @@ pub enum Endpoint {
 
 impl Endpoint {
     /// Parse an endpoint string: `tcp:HOST:PORT` selects TCP, anything
-    /// else is a UDS path.
-    pub fn parse(s: &str) -> Endpoint {
-        match s.strip_prefix("tcp:") {
-            Some(addr) => Endpoint::Tcp(addr.to_string()),
-            None => Endpoint::Uds(PathBuf::from(s)),
+    /// else is a UDS path. TCP endpoints are validated here, at CLI
+    /// parse time: the host must be non-empty (IPv6 literals
+    /// bracketed, e.g. `tcp:[::1]:7070`) and the port a non-zero u16 —
+    /// a typo fails immediately instead of at first connect.
+    pub fn parse(s: &str) -> Result<Endpoint> {
+        let Some(addr) = s.strip_prefix("tcp:") else {
+            return Ok(Endpoint::Uds(PathBuf::from(s)));
+        };
+        let Some((host, port)) = addr.rsplit_once(':') else {
+            return Err(EmberError::Parse(format!(
+                "tcp endpoint {s:?} needs host:port (e.g. tcp:127.0.0.1:7070)"
+            )));
+        };
+        if host.is_empty() {
+            return Err(EmberError::Parse(format!("tcp endpoint {s:?} has an empty host")));
+        }
+        if host.contains(':') && !(host.starts_with('[') && host.ends_with(']')) {
+            return Err(EmberError::Parse(format!(
+                "tcp endpoint {s:?}: bracket IPv6 hosts, e.g. tcp:[::1]:7070"
+            )));
+        }
+        match port.parse::<u16>() {
+            Ok(p) if p > 0 => Ok(Endpoint::Tcp(addr.to_string())),
+            _ => Err(EmberError::Parse(format!(
+                "tcp endpoint {s:?} has an invalid port {port:?} (need 1..=65535)"
+            ))),
         }
     }
 
@@ -164,13 +186,57 @@ mod tests {
 
     #[test]
     fn endpoint_parse_round_trips() {
-        assert_eq!(Endpoint::parse("/tmp/a.sock"), Endpoint::Uds(PathBuf::from("/tmp/a.sock")));
         assert_eq!(
-            Endpoint::parse("tcp:127.0.0.1:7070"),
+            Endpoint::parse("/tmp/a.sock").unwrap(),
+            Endpoint::Uds(PathBuf::from("/tmp/a.sock"))
+        );
+        assert_eq!(
+            Endpoint::parse("tcp:127.0.0.1:7070").unwrap(),
             Endpoint::Tcp("127.0.0.1:7070".into())
         );
-        assert_eq!(Endpoint::parse("tcp:h:1").to_string(), "tcp:h:1");
-        assert_eq!(Endpoint::parse("/x/y").to_string(), "/x/y");
+        assert_eq!(Endpoint::parse("tcp:h:1").unwrap().to_string(), "tcp:h:1");
+        assert_eq!(Endpoint::parse("/x/y").unwrap().to_string(), "/x/y");
+    }
+
+    #[test]
+    fn tcp_endpoints_validate_host_and_port_at_parse_time() {
+        // IPv6 literals work bracketed, port parses past the colons
+        assert_eq!(
+            Endpoint::parse("tcp:[::1]:7070").unwrap(),
+            Endpoint::Tcp("[::1]:7070".into())
+        );
+        // missing port
+        assert!(Endpoint::parse("tcp:localhost").is_err());
+        // empty host
+        assert!(Endpoint::parse("tcp::7070").is_err());
+        // non-numeric, out-of-range, and zero ports
+        assert!(Endpoint::parse("tcp:h:port").is_err());
+        assert!(Endpoint::parse("tcp:h:70700").is_err());
+        assert!(Endpoint::parse("tcp:h:0").is_err());
+        // unbracketed IPv6 is ambiguous, rejected with a hint
+        let err = Endpoint::parse("tcp:::1:7070").unwrap_err();
+        assert!(err.to_string().contains("bracket"), "{err}");
+    }
+
+    #[test]
+    fn uds_endpoint_accepts_connections_round_trip() {
+        let path = std::env::temp_dir().join(format!("ember-ep-{}.sock", std::process::id()));
+        let ep = Endpoint::parse(path.to_str().unwrap()).unwrap();
+        assert!(matches!(ep, Endpoint::Uds(_)));
+        let listener = ep.bind().unwrap();
+        let client = std::thread::spawn({
+            let ep = ep.clone();
+            move || {
+                let mut s = ep.connect().unwrap();
+                write_frame(&mut s, &Frame::Ping { nonce: 3 }).unwrap();
+                assert_eq!(read_frame(&mut s).unwrap(), Frame::Pong { nonce: 3 });
+            }
+        });
+        let mut s = listener.accept().unwrap();
+        assert_eq!(read_frame(&mut s).unwrap(), Frame::Ping { nonce: 3 });
+        write_frame(&mut s, &Frame::Pong { nonce: 3 }).unwrap();
+        client.join().unwrap();
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

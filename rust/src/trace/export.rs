@@ -1,0 +1,326 @@
+//! Serialization of [`TraceSink`] buffers to chrome://tracing JSON and
+//! merging of per-process buffers (local sinks + wire-pulled shard
+//! buffers) into one Perfetto-loadable file.
+//!
+//! Two time domains exist:
+//! - *aligned* processes (serving frontend, shard servers) record
+//!   elapsed-µs from their own sink origin; [`TraceBuilder::finish`]
+//!   shifts each process by `origin_unix_us - min(origin_unix_us)` so
+//!   all wall-clock tracks share one axis;
+//! - *sim* processes ([`TraceBuilder::add_sim_sink`]) use simulated
+//!   cycles as µs and are merged unshifted.
+
+use super::{Phase, TraceEvent, TraceSink};
+use crate::error::Result;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Convert one event to its Trace Event Format object. The `pid` field
+/// is injected (and `ts` shifted) later by [`TraceBuilder::finish`], so
+/// the same encoding serves both local export and the wire payload.
+fn event_json(ev: &TraceEvent) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("name".to_string(), Json::str(ev.name));
+    m.insert("ph".to_string(), Json::str(ev.ph.code()));
+    m.insert("tid".to_string(), Json::num(ev.tid as f64));
+    m.insert("ts".to_string(), Json::num(ev.ts_us));
+    if !ev.cat.is_empty() {
+        m.insert("cat".to_string(), Json::str(ev.cat));
+    }
+    match ev.ph {
+        Phase::Complete => {
+            m.insert("dur".to_string(), Json::num(ev.dur_us));
+        }
+        Phase::Instant => {
+            m.insert("s".to_string(), Json::str("t"));
+        }
+        Phase::FlowStart | Phase::AsyncBegin | Phase::AsyncEnd => {
+            m.insert("id".to_string(), Json::num(ev.id as f64));
+        }
+        Phase::FlowEnd => {
+            m.insert("id".to_string(), Json::num(ev.id as f64));
+            m.insert("bp".to_string(), Json::str("e"));
+        }
+        Phase::Counter => {}
+    }
+    if !ev.arg_key.is_empty() {
+        let mut args = BTreeMap::new();
+        args.insert(ev.arg_key.to_string(), Json::num(ev.arg));
+        m.insert("args".to_string(), Json::Obj(args));
+    }
+    Json::Obj(m)
+}
+
+/// A `process_name`/`thread_name` metadata record.
+fn meta_json(kind: &str, tid: u64, label: &str) -> Json {
+    let mut args = BTreeMap::new();
+    args.insert("name".to_string(), Json::str(label));
+    let mut m = BTreeMap::new();
+    m.insert("name".to_string(), Json::str(kind));
+    m.insert("ph".to_string(), Json::str("M"));
+    m.insert("tid".to_string(), Json::num(tid as f64));
+    m.insert("ts".to_string(), Json::num(0.0));
+    m.insert("args".to_string(), Json::Obj(args));
+    Json::Obj(m)
+}
+
+/// Drain `sink` into the JSON array string carried by `TraceResp`:
+/// thread-name metadata first, then every buffered event. `pid` is
+/// absent by design — the merging frontend assigns it.
+pub fn wire_events(sink: &TraceSink) -> String {
+    let mut out: Vec<Json> =
+        sink.threads().iter().map(|(tid, name)| meta_json("thread_name", *tid, name)).collect();
+    out.extend(sink.drain().iter().map(event_json));
+    Json::Arr(out).to_string()
+}
+
+/// Inject `pid` and apply the process's time shift (metadata records
+/// keep `ts = 0`).
+fn patch(ev: &mut Json, pid: u64, shift_us: f64) {
+    if let Json::Obj(m) = ev {
+        m.insert("pid".to_string(), Json::num(pid as f64));
+        let is_meta = m.get("ph").and_then(Json::as_str) == Some("M");
+        if !is_meta && shift_us != 0.0 {
+            if let Some(Json::Num(ts)) = m.get_mut("ts") {
+                *ts += shift_us;
+            }
+        }
+    }
+}
+
+struct Proc {
+    pid: u64,
+    name: String,
+    origin_unix_us: f64,
+    /// Wall-clock process (shift onto the common axis) vs sim domain.
+    align: bool,
+    events: Vec<Json>,
+    threads: Vec<(u64, String)>,
+    dropped: u64,
+}
+
+/// Accumulates per-process event buffers and emits one merged
+/// `{"traceEvents": [...]}` document.
+#[derive(Default)]
+pub struct TraceBuilder {
+    procs: Vec<Proc>,
+}
+
+impl TraceBuilder {
+    pub fn new() -> TraceBuilder {
+        TraceBuilder::default()
+    }
+
+    /// Drain a local wall-clock sink as process `pid`.
+    pub fn add_sink(&mut self, pid: u64, name: &str, sink: &TraceSink) {
+        self.procs.push(Proc {
+            pid,
+            name: name.to_string(),
+            origin_unix_us: sink.origin_unix_us(),
+            align: true,
+            events: sink.drain().iter().map(event_json).collect(),
+            threads: sink.threads(),
+            dropped: sink.dropped(),
+        });
+    }
+
+    /// Drain a simulator sink as process `pid`. Timestamps are
+    /// simulated cycles (1 cycle ≡ 1 µs) and are left unshifted.
+    pub fn add_sim_sink(&mut self, pid: u64, name: &str, sink: &TraceSink) {
+        self.procs.push(Proc {
+            pid,
+            name: name.to_string(),
+            origin_unix_us: 0.0,
+            align: false,
+            events: sink.drain().iter().map(event_json).collect(),
+            threads: sink.threads(),
+            dropped: sink.dropped(),
+        });
+    }
+
+    /// Merge a buffer pulled over the wire (`TraceResp`): a JSON array
+    /// of trace-event objects, the remote sink's origin in unix-µs and
+    /// its dropped-event count.
+    pub fn add_wire(
+        &mut self,
+        pid: u64,
+        name: &str,
+        origin_unix_us: f64,
+        dropped: u64,
+        events_json: &str,
+    ) -> Result<()> {
+        let parsed = Json::parse(events_json)?;
+        let events = parsed.as_arr().map(<[Json]>::to_vec).unwrap_or_default();
+        self.procs.push(Proc {
+            pid,
+            name: name.to_string(),
+            origin_unix_us,
+            align: true,
+            events,
+            threads: Vec::new(),
+            dropped,
+        });
+        Ok(())
+    }
+
+    /// Total events merged so far (excluding metadata records).
+    pub fn event_count(&self) -> usize {
+        self.procs.iter().map(|p| p.events.len()).sum()
+    }
+
+    /// Build the merged `{"traceEvents": [...]}` document.
+    pub fn finish(&self) -> Json {
+        // common zero point: the earliest wall-clock origin on record
+        let base = self
+            .procs
+            .iter()
+            .filter(|p| p.align && p.origin_unix_us > 0.0)
+            .map(|p| p.origin_unix_us)
+            .fold(f64::INFINITY, f64::min);
+        let mut out: Vec<Json> = Vec::new();
+        for p in &self.procs {
+            let shift = if p.align && p.origin_unix_us > 0.0 && base.is_finite() {
+                p.origin_unix_us - base
+            } else {
+                0.0
+            };
+            let mut pe = meta_json("process_name", 0, &p.name);
+            patch(&mut pe, p.pid, 0.0);
+            out.push(pe);
+            for (tid, label) in &p.threads {
+                let mut te = meta_json("thread_name", *tid, label);
+                patch(&mut te, p.pid, 0.0);
+                out.push(te);
+            }
+            if p.dropped > 0 {
+                let mut de = event_json(
+                    &TraceEvent::instant("trace.dropped", "trace", 0, 0.0)
+                        .with_arg("count", p.dropped as f64),
+                );
+                patch(&mut de, p.pid, 0.0);
+                out.push(de);
+            }
+            for ev in &p.events {
+                let mut ev = ev.clone();
+                patch(&mut ev, p.pid, shift);
+                out.push(ev);
+            }
+        }
+        Json::obj(vec![("traceEvents", Json::Arr(out))])
+    }
+
+    /// Write the merged document to `path`; returns the number of
+    /// events written (excluding metadata records).
+    pub fn write<P: AsRef<Path>>(&self, path: P) -> Result<usize> {
+        let doc = self.finish();
+        std::fs::write(path, format!("{doc}\n"))?;
+        Ok(self.event_count())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn names_of(doc: &Json) -> Vec<String> {
+        doc.get("traceEvents")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|e| e.get("name").and_then(Json::as_str).map(str::to_string))
+            .collect()
+    }
+
+    #[test]
+    fn event_json_carries_phase_specific_fields() {
+        let x = event_json(&TraceEvent::complete("embed", "serve", 2, 10.0, 4.0));
+        assert_eq!(x.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(x.get("dur").and_then(Json::as_f64), Some(4.0));
+        let c = event_json(&TraceEvent::counter("dae/data_q_depth", 0, 3.0, 7.0));
+        assert_eq!(c.at(&["args", "value"]).and_then(Json::as_f64), Some(7.0));
+        let f = event_json(&TraceEvent::flow_end("req", 9, 1, 1.0));
+        assert_eq!(f.get("bp").and_then(Json::as_str), Some("e"));
+        assert_eq!(f.get("id").and_then(Json::as_f64), Some(9.0));
+        let i = event_json(&TraceEvent::instant("hit", "mem", 1, 1.0));
+        assert_eq!(i.get("s").and_then(Json::as_str), Some("t"));
+    }
+
+    #[test]
+    fn finish_injects_pids_and_aligns_origins() {
+        // two wall-clock sinks whose origins differ; later one must be
+        // shifted right by the origin gap
+        let a = TraceSink::enabled();
+        a.record(TraceEvent::complete("a", "t", 1, 0.0, 1.0));
+        let b = TraceSink::enabled();
+        b.record(TraceEvent::complete("b", "t", 1, 0.0, 1.0));
+        let gap = b.origin_unix_us() - a.origin_unix_us();
+        assert!(gap >= 0.0);
+        let mut tb = TraceBuilder::new();
+        tb.add_sink(1, "proc-a", &a);
+        tb.add_sink(2, "proc-b", &b);
+        let doc = tb.finish();
+        let evs = doc.get("traceEvents").and_then(Json::as_arr).unwrap().to_vec();
+        let ts_of = |name: &str| {
+            evs.iter()
+                .find(|e| e.get("name").and_then(Json::as_str) == Some(name))
+                .and_then(|e| e.get("ts").and_then(Json::as_f64))
+                .unwrap()
+        };
+        assert_eq!(ts_of("a"), 0.0);
+        assert!((ts_of("b") - gap).abs() < 1e-6);
+        let pid_of = |name: &str| {
+            evs.iter()
+                .find(|e| e.get("name").and_then(Json::as_str) == Some(name))
+                .and_then(|e| e.get("pid").and_then(Json::as_f64))
+                .unwrap()
+        };
+        assert_eq!(pid_of("a"), 1.0);
+        assert_eq!(pid_of("b"), 2.0);
+        assert!(names_of(&doc).iter().any(|n| n == "process_name"));
+    }
+
+    #[test]
+    fn sim_sinks_are_not_shifted() {
+        let sim = TraceSink::enabled();
+        sim.record(TraceEvent::counter("dae/data_q_depth", 0, 123.0, 4.0));
+        let wall = TraceSink::enabled();
+        wall.record(TraceEvent::complete("w", "t", 1, 0.0, 1.0));
+        let mut tb = TraceBuilder::new();
+        tb.add_sink(0, "serve", &wall);
+        tb.add_sim_sink(100, "dae-sim", &sim);
+        let doc = tb.finish();
+        let evs = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        let sim_ev = evs
+            .iter()
+            .find(|e| e.get("name").and_then(Json::as_str) == Some("dae/data_q_depth"))
+            .unwrap();
+        assert_eq!(sim_ev.get("ts").and_then(Json::as_f64), Some(123.0));
+    }
+
+    #[test]
+    fn wire_payload_round_trips_through_add_wire() {
+        let shard = TraceSink::enabled();
+        shard.name_thread(3, "conn-3");
+        shard.record(TraceEvent::complete("embed_req", "shard", 3, 5.0, 2.0));
+        let origin = shard.origin_unix_us();
+        let payload = wire_events(&shard);
+        assert!(shard.is_empty(), "wire_events drains the sink");
+        let mut tb = TraceBuilder::new();
+        tb.add_wire(7, "shard 0", origin, 1, &payload).unwrap();
+        let doc = tb.finish();
+        let names = names_of(&doc);
+        assert!(names.iter().any(|n| n == "embed_req"));
+        assert!(names.iter().any(|n| n == "thread_name"));
+        assert!(names.iter().any(|n| n == "trace.dropped"));
+        // document survives a parse round-trip (what CI validates)
+        let reparsed = Json::parse(&doc.to_string()).unwrap();
+        assert!(!reparsed.get("traceEvents").and_then(Json::as_arr).unwrap().is_empty());
+    }
+
+    #[test]
+    fn add_wire_rejects_garbage() {
+        let mut tb = TraceBuilder::new();
+        assert!(tb.add_wire(1, "x", 0.0, 0, "not json").is_err());
+    }
+}

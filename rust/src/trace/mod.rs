@@ -1,0 +1,436 @@
+//! Chrome-trace / Perfetto observability subsystem.
+//!
+//! A [`TraceSink`] is a cheap, cloneable handle to a shared, bounded
+//! event buffer. The design goal is that a *disabled* sink is free on
+//! the hot path: it holds `None`, so `record()` is one branch — no
+//! allocation, no atomics, no lock. An *enabled* sink pushes fixed-size
+//! [`TraceEvent`] values into a mutex-guarded ring buffer; when the
+//! ring is full the oldest event is evicted and a dropped counter is
+//! bumped, so memory stays bounded no matter how long a server runs.
+//!
+//! Events use the chrome://tracing "Trace Event Format" vocabulary
+//! (complete spans, counters, instants, flow arrows, nestable async
+//! spans). Serialization to the JSON Perfetto loads lives in
+//! [`export`]; the wire transfer of shard-server buffers is a JSON
+//! array string carried by `net::proto::Frame::TraceResp`.
+//!
+//! Timestamps are microseconds. Wall-clock domains (serving processes)
+//! record elapsed-µs since the sink's creation `Instant` and carry the
+//! creation time as unix-µs so [`export::TraceBuilder`] can align
+//! multiple processes onto one axis. The DAE simulator domain instead
+//! records *simulated cycle* timestamps (1 cycle ≡ 1 µs in the UI) and
+//! is merged unaligned, as its own process track.
+
+pub mod export;
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+/// Default ring capacity: 64Ki events ≈ a few MB of JSON, comfortably
+/// under the 64 MiB net-frame ceiling when pulled over the wire.
+pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Small process-unique id for the calling thread (1, 2, 3… in first-
+/// use order). Stable for the thread's lifetime; used as the chrome
+/// `tid` so spans from one thread share a track.
+pub fn current_tid() -> u64 {
+    TID.with(|c| {
+        let v = c.get();
+        if v != 0 {
+            return v;
+        }
+        let v = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        c.set(v);
+        v
+    })
+}
+
+/// Chrome trace-event phase. [`Phase::code`] gives the single-letter
+/// `ph` field of the JSON encoding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// `"X"`: a complete span with `ts` + `dur`.
+    Complete,
+    /// `"C"`: a counter sample; the value rides in `args`.
+    Counter,
+    /// `"i"`: a thread-scoped instant marker.
+    Instant,
+    /// `"s"`: start of a flow arrow (matched by `id`).
+    FlowStart,
+    /// `"f"` (binding point `"e"`): end of a flow arrow.
+    FlowEnd,
+    /// `"b"`: nestable async span begin (matched by `cat` + `id`).
+    AsyncBegin,
+    /// `"e"`: nestable async span end.
+    AsyncEnd,
+}
+
+impl Phase {
+    /// The `ph` letter of the Trace Event Format.
+    pub fn code(self) -> &'static str {
+        match self {
+            Phase::Complete => "X",
+            Phase::Counter => "C",
+            Phase::Instant => "i",
+            Phase::FlowStart => "s",
+            Phase::FlowEnd => "f",
+            Phase::AsyncBegin => "b",
+            Phase::AsyncEnd => "e",
+        }
+    }
+}
+
+/// One fixed-size trace event. Names and categories are `&'static str`
+/// so recording never allocates; one optional numeric argument covers
+/// counter values and span annotations.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    pub ph: Phase,
+    pub name: &'static str,
+    pub cat: &'static str,
+    pub tid: u64,
+    /// Microseconds (elapsed-from-origin, or simulated cycles in the
+    /// simulator domain).
+    pub ts_us: f64,
+    /// Span duration in µs (complete spans only).
+    pub dur_us: f64,
+    /// Correlation id (flow / async events only).
+    pub id: u64,
+    /// Key of the single numeric argument; `""` means no argument.
+    pub arg_key: &'static str,
+    pub arg: f64,
+}
+
+impl TraceEvent {
+    fn base(ph: Phase, name: &'static str, cat: &'static str, tid: u64, ts_us: f64) -> TraceEvent {
+        TraceEvent { ph, name, cat, tid, ts_us, dur_us: 0.0, id: 0, arg_key: "", arg: 0.0 }
+    }
+
+    /// A complete span `[ts, ts + dur]`.
+    pub fn complete(
+        name: &'static str,
+        cat: &'static str,
+        tid: u64,
+        ts_us: f64,
+        dur_us: f64,
+    ) -> TraceEvent {
+        TraceEvent { dur_us, ..Self::base(Phase::Complete, name, cat, tid, ts_us) }
+    }
+
+    /// A counter sample: the series `name` takes value `value` at `ts`.
+    pub fn counter(name: &'static str, tid: u64, ts_us: f64, value: f64) -> TraceEvent {
+        TraceEvent {
+            arg_key: "value",
+            arg: value,
+            ..Self::base(Phase::Counter, name, "", tid, ts_us)
+        }
+    }
+
+    /// A thread-scoped instant marker.
+    pub fn instant(name: &'static str, cat: &'static str, tid: u64, ts_us: f64) -> TraceEvent {
+        Self::base(Phase::Instant, name, cat, tid, ts_us)
+    }
+
+    /// Start of a flow arrow correlated by `id`.
+    pub fn flow_start(name: &'static str, id: u64, tid: u64, ts_us: f64) -> TraceEvent {
+        TraceEvent { id, ..Self::base(Phase::FlowStart, name, "flow", tid, ts_us) }
+    }
+
+    /// End of a flow arrow correlated by `id`.
+    pub fn flow_end(name: &'static str, id: u64, tid: u64, ts_us: f64) -> TraceEvent {
+        TraceEvent { id, ..Self::base(Phase::FlowEnd, name, "flow", tid, ts_us) }
+    }
+
+    /// Begin of a nestable async span (matched by `cat` + `id`).
+    pub fn async_begin(
+        name: &'static str,
+        cat: &'static str,
+        id: u64,
+        tid: u64,
+        ts_us: f64,
+    ) -> TraceEvent {
+        TraceEvent { id, ..Self::base(Phase::AsyncBegin, name, cat, tid, ts_us) }
+    }
+
+    /// End of a nestable async span (matched by `cat` + `id`).
+    pub fn async_end(
+        name: &'static str,
+        cat: &'static str,
+        id: u64,
+        tid: u64,
+        ts_us: f64,
+    ) -> TraceEvent {
+        TraceEvent { id, ..Self::base(Phase::AsyncEnd, name, cat, tid, ts_us) }
+    }
+
+    /// Attach the single numeric argument `key: value`.
+    pub fn with_arg(mut self, key: &'static str, value: f64) -> TraceEvent {
+        self.arg_key = key;
+        self.arg = value;
+        self
+    }
+}
+
+#[derive(Debug)]
+struct Shared {
+    /// Monotonic zero point of this sink's time axis.
+    origin: Instant,
+    /// `origin` as unix-µs, for cross-process alignment at export.
+    origin_unix_us: f64,
+    cap: usize,
+    buf: Mutex<VecDeque<TraceEvent>>,
+    dropped: AtomicU64,
+    /// `(tid, name)` labels registered via [`TraceSink::name_thread`].
+    threads: Mutex<Vec<(u64, String)>>,
+}
+
+/// Cloneable handle to a (possibly absent) shared trace buffer.
+///
+/// `TraceSink::default()` and [`TraceSink::disabled`] are the no-op
+/// handle: every method is a branch on `None`. Clones share the same
+/// buffer, so a sink can be handed to many threads and drained once.
+#[derive(Debug, Clone, Default)]
+pub struct TraceSink {
+    shared: Option<Arc<Shared>>,
+}
+
+impl TraceSink {
+    /// The no-op sink: recording is a single branch, no allocation.
+    pub fn disabled() -> TraceSink {
+        TraceSink { shared: None }
+    }
+
+    /// An enabled sink with the default ring capacity.
+    pub fn enabled() -> TraceSink {
+        Self::with_capacity(DEFAULT_CAPACITY)
+    }
+
+    /// An enabled sink bounded to `cap` buffered events.
+    pub fn with_capacity(cap: usize) -> TraceSink {
+        let cap = cap.max(1);
+        let unix = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_secs_f64() * 1e6)
+            .unwrap_or(0.0);
+        TraceSink {
+            shared: Some(Arc::new(Shared {
+                origin: Instant::now(),
+                origin_unix_us: unix,
+                cap,
+                buf: Mutex::new(VecDeque::with_capacity(cap.min(1024))),
+                dropped: AtomicU64::new(0),
+                threads: Mutex::new(Vec::new()),
+            })),
+        }
+    }
+
+    /// Whether events are being collected. Callers that would allocate
+    /// to *build* an event should branch on this first.
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.shared.is_some()
+    }
+
+    /// Elapsed µs since this sink's origin (0.0 when disabled).
+    #[inline]
+    pub fn now_us(&self) -> f64 {
+        match &self.shared {
+            Some(sh) => sh.origin.elapsed().as_secs_f64() * 1e6,
+            None => 0.0,
+        }
+    }
+
+    /// `t` on this sink's time axis, saturating at 0 for instants that
+    /// precede the origin.
+    pub fn ts_of(&self, t: Instant) -> f64 {
+        match &self.shared {
+            Some(sh) => match t.checked_duration_since(sh.origin) {
+                Some(d) => d.as_secs_f64() * 1e6,
+                None => 0.0,
+            },
+            None => 0.0,
+        }
+    }
+
+    /// The sink's origin as unix-µs (0.0 when disabled).
+    pub fn origin_unix_us(&self) -> f64 {
+        match &self.shared {
+            Some(sh) => sh.origin_unix_us,
+            None => 0.0,
+        }
+    }
+
+    /// Record one event. Disabled: a branch. Enabled: one short lock
+    /// and a ring push (evicting the oldest event when full).
+    #[inline]
+    pub fn record(&self, ev: TraceEvent) {
+        let Some(sh) = &self.shared else { return };
+        if let Ok(mut buf) = sh.buf.lock() {
+            if buf.len() >= sh.cap {
+                buf.pop_front();
+                sh.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+            buf.push_back(ev);
+        }
+    }
+
+    /// Label a thread's track (idempotent per tid).
+    pub fn name_thread(&self, tid: u64, name: &str) {
+        let Some(sh) = &self.shared else { return };
+        if let Ok(mut th) = sh.threads.lock() {
+            if !th.iter().any(|(t, _)| *t == tid) {
+                th.push((tid, name.to_string()));
+            }
+        }
+    }
+
+    /// Label the calling thread's track; returns its tid.
+    pub fn name_current_thread(&self, name: &str) -> u64 {
+        let tid = current_tid();
+        self.name_thread(tid, name);
+        tid
+    }
+
+    /// Events evicted so far because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        match &self.shared {
+            Some(sh) => sh.dropped.load(Ordering::Relaxed),
+            None => 0,
+        }
+    }
+
+    /// Number of currently buffered events.
+    pub fn len(&self) -> usize {
+        match &self.shared {
+            Some(sh) => sh.buf.lock().map(|b| b.len()).unwrap_or(0),
+            None => 0,
+        }
+    }
+
+    /// True when no events are buffered (always true when disabled).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Remove and return every buffered event.
+    pub fn drain(&self) -> Vec<TraceEvent> {
+        match &self.shared {
+            Some(sh) => sh.buf.lock().map(|mut b| b.drain(..).collect()).unwrap_or_default(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Registered `(tid, name)` thread labels.
+    pub fn threads(&self) -> Vec<(u64, String)> {
+        match &self.shared {
+            Some(sh) => match sh.threads.lock() {
+                Ok(t) => t.clone(),
+                Err(_) => Vec::new(),
+            },
+            None => Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_sink_is_inert() {
+        let s = TraceSink::disabled();
+        assert!(!s.is_enabled());
+        s.record(TraceEvent::counter("x", 0, 1.0, 2.0));
+        s.name_thread(1, "t");
+        assert!(s.is_empty());
+        assert_eq!(s.dropped(), 0);
+        assert_eq!(s.now_us(), 0.0);
+        assert_eq!(s.origin_unix_us(), 0.0);
+        assert!(s.drain().is_empty());
+        assert!(s.threads().is_empty());
+        // default is the disabled handle
+        assert!(!TraceSink::default().is_enabled());
+    }
+
+    #[test]
+    fn ring_evicts_oldest_and_counts_drops() {
+        let s = TraceSink::with_capacity(4);
+        for i in 0..10u64 {
+            s.record(TraceEvent::counter("c", 0, i as f64, 0.0));
+        }
+        assert_eq!(s.len(), 4);
+        assert_eq!(s.dropped(), 6);
+        let evs = s.drain();
+        assert_eq!(evs.len(), 4);
+        // the survivors are the newest four samples
+        assert_eq!(evs[0].ts_us, 6.0);
+        assert_eq!(evs[3].ts_us, 9.0);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn clones_share_one_buffer() {
+        let a = TraceSink::with_capacity(16);
+        let b = a.clone();
+        b.record(TraceEvent::instant("hit", "mem", 1, 5.0));
+        assert_eq!(a.len(), 1);
+        let evs = a.drain();
+        assert_eq!(evs[0].name, "hit");
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn thread_ids_are_stable_and_distinct() {
+        let here = current_tid();
+        assert_eq!(here, current_tid());
+        assert!(here >= 1);
+        let other = std::thread::spawn(current_tid).join().unwrap();
+        assert_ne!(here, other);
+    }
+
+    #[test]
+    fn thread_naming_dedupes_by_tid() {
+        let s = TraceSink::enabled();
+        s.name_thread(7, "worker");
+        s.name_thread(7, "worker-again");
+        s.name_thread(8, "other");
+        let th = s.threads();
+        assert_eq!(th.len(), 2);
+        assert_eq!(th[0], (7, "worker".to_string()));
+    }
+
+    #[test]
+    fn timestamps_move_forward_and_saturate() {
+        let s = TraceSink::enabled();
+        let before = std::time::Instant::now();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let late = TraceSink::enabled();
+        // an instant before `late`'s origin clamps to 0
+        assert_eq!(late.ts_of(before), 0.0);
+        assert!(s.ts_of(std::time::Instant::now()) > 0.0);
+        assert!(s.now_us() > 0.0);
+    }
+
+    #[test]
+    fn event_constructors_fill_phase_fields() {
+        let e = TraceEvent::complete("span", "serve", 3, 10.0, 5.0).with_arg("n", 2.0);
+        assert_eq!(e.ph.code(), "X");
+        assert_eq!(e.dur_us, 5.0);
+        assert_eq!((e.arg_key, e.arg), ("n", 2.0));
+        assert_eq!(TraceEvent::counter("c", 0, 1.0, 9.0).arg, 9.0);
+        assert_eq!(TraceEvent::flow_start("req", 42, 1, 0.0).id, 42);
+        assert_eq!(TraceEvent::flow_end("req", 42, 1, 0.0).ph.code(), "f");
+        assert_eq!(TraceEvent::async_begin("request", "req", 1, 1, 0.0).ph.code(), "b");
+        assert_eq!(TraceEvent::async_end("request", "req", 1, 1, 0.0).ph.code(), "e");
+        assert_eq!(TraceEvent::instant("i", "mem", 1, 0.0).ph.code(), "i");
+    }
+}

@@ -1,0 +1,215 @@
+//! Observability integration tests: the acceptance shape of
+//! `ember serve --net --trace out.json` — one chrome://tracing JSON
+//! merging (a) frontend request-lifecycle spans, (b) per-shard-process
+//! tracks pulled over the wire via `TraceReq`/`TraceResp`, and (c)
+//! DAE-simulator counter tracks on the simulated-cycle axis — plus the
+//! parity proof that running with tracing off changes no outputs.
+
+use ember::compiler::passes::pipeline::OptLevel;
+use ember::coordinator::{
+    synthetic_request, BatchOptions, Coordinator, DlrmModel, Request, Response, ServeOptions,
+};
+use ember::dae::MachineConfig;
+use ember::net::{
+    placement, read_frame, write_frame, Endpoint, Frame, NetFrontend, NetFrontendOpts, NetShape,
+    ShardServer, ShardServerCfg,
+};
+use ember::trace::export::TraceBuilder;
+use ember::trace::TraceSink;
+use ember::util::json::Json;
+use std::time::Duration;
+
+const BATCH: usize = 4;
+const TABLES: usize = 4;
+const ROWS: usize = 64;
+const EMB: usize = 8;
+const LOOKUPS: usize = 6;
+const DENSE: usize = 3;
+const HIDDEN: usize = 16;
+const SEED: u64 = 42;
+
+fn model() -> DlrmModel {
+    DlrmModel::new(BATCH, ROWS, EMB, TABLES, LOOKUPS, DENSE, HIDDEN, SEED).unwrap()
+}
+
+fn sock(name: &str, i: usize) -> Endpoint {
+    Endpoint::Uds(
+        std::env::temp_dir().join(format!("ember-tr-{name}{i}-{}.sock", std::process::id())),
+    )
+}
+
+fn spawn_traced_servers(name: &str, n: usize) -> (Vec<ShardServer>, Vec<Endpoint>) {
+    let hosted = placement(TABLES, n, 0);
+    let mut servers = Vec::new();
+    let mut eps = Vec::new();
+    for (i, owned) in hosted.into_iter().enumerate() {
+        let ep = sock(name, i);
+        let cfg = ShardServerCfg {
+            shard_id: i as u32,
+            num_tables: TABLES,
+            table_rows: ROWS,
+            emb: EMB,
+            batch: BATCH,
+            seed: SEED,
+            owned,
+        };
+        servers.push(ShardServer::spawn_traced(ep.clone(), cfg, TraceSink::enabled()).unwrap());
+        eps.push(ep);
+    }
+    (servers, eps)
+}
+
+fn frontend(eps: &[Endpoint]) -> NetFrontend {
+    let hosted = placement(TABLES, eps.len(), 0);
+    let opts = NetFrontendOpts { timeout: Duration::from_millis(500), ..Default::default() };
+    NetFrontend::connect(eps, Some(&hosted), NetShape::of(&model()), opts).unwrap()
+}
+
+fn serve_opts() -> ServeOptions {
+    ServeOptions {
+        batch: BatchOptions { max_batch: BATCH, max_wait: Duration::from_micros(200) },
+        shards: 1,
+    }
+}
+
+fn reqs(n: usize) -> Vec<Request> {
+    (0..n).map(|k| synthetic_request(TABLES, ROWS, DENSE, LOOKUPS, 0, k)).collect()
+}
+
+fn score_ok(coord: &Coordinator, reqs: &[Request]) -> Vec<Response> {
+    let rxs: Vec<_> = reqs.iter().map(|r| coord.submit(r.clone()).unwrap()).collect();
+    rxs.into_iter().map(|rx| rx.recv().unwrap().expect("request must serve")).collect()
+}
+
+/// Pull a shard's buffer over a fresh connection, exactly as the CLI's
+/// `--trace` teardown does.
+fn pull_trace(ep: &Endpoint) -> (u32, u64, u64, String) {
+    let mut s = ep.connect().unwrap();
+    s.set_read_timeout(Some(Duration::from_millis(500))).unwrap();
+    write_frame(&mut s, &Frame::Hello { version: ember::net::proto::VERSION }).unwrap();
+    let _ = read_frame(&mut s).unwrap(); // HelloAck
+    write_frame(&mut s, &Frame::TraceReq).unwrap();
+    match read_frame(&mut s).unwrap() {
+        Frame::TraceResp { shard_id, origin_unix_us, dropped, events } => {
+            (shard_id, origin_unix_us, dropped, events)
+        }
+        other => panic!("expected TraceResp, got {other:?}"),
+    }
+}
+
+/// Acceptance: one merged chrome-trace document carries all three
+/// layers — frontend lifecycle spans, wire-pulled shard-server tracks,
+/// and DAE-simulator counters — under per-process track names.
+#[test]
+fn multi_process_trace_merges_all_three_layers() {
+    let sink = TraceSink::enabled();
+    let (servers, eps) = spawn_traced_servers("merge", 2);
+    let mut fe = frontend(&eps);
+    fe.set_trace(sink.clone());
+    let coord = Coordinator::start_with_embedder_traced(
+        model(),
+        None,
+        serve_opts(),
+        Box::new(fe),
+        sink.clone(),
+    );
+    score_ok(&coord, &reqs(8));
+    coord.shutdown();
+
+    let mut tb = TraceBuilder::new();
+    tb.add_sink(1, "frontend", &sink);
+    for ep in &eps {
+        let (sid, origin, dropped, events) = pull_trace(ep);
+        tb.add_wire(
+            100 + sid as u64,
+            &format!("shard-server {sid}"),
+            origin as f64,
+            dropped,
+            &events,
+        )
+        .unwrap();
+    }
+    let sim = TraceSink::enabled();
+    let (op, mut env) = ember::harness::motivation::sim_env("sls", 1).unwrap();
+    ember::harness::run_op_traced(
+        &op,
+        OptLevel::O3,
+        MachineConfig::dae_tmu(),
+        &mut env,
+        sim.clone(),
+    )
+    .unwrap();
+    tb.add_sim_sink(1000, "dae simulator", &sim);
+    for s in servers {
+        s.wait();
+    }
+
+    let doc = tb.finish();
+    let events = doc.get("traceEvents").and_then(|e| e.as_arr()).expect("traceEvents array");
+    let names: Vec<&str> =
+        events.iter().filter_map(|e| e.get("name").and_then(|n| n.as_str())).collect();
+    for want in [
+        "batch_form",             // coordinator: batch formation span
+        "embed",                  // coordinator: embedding stage span
+        "mlp",                    // coordinator: scoring span
+        "net_embed",              // frontend fan-out span
+        "request",                // per-request async span
+        "req",                    // cross-thread flow arrow
+        "embed_req",              // shard-server span, pulled over the wire
+        "dae/access_outstanding", // simulator counter tracks
+        "dae/data_q_bytes",
+    ] {
+        assert!(names.contains(&want), "missing `{want}` in merged trace");
+    }
+    let procs: Vec<&str> = events
+        .iter()
+        .filter(|e| e.get("name").and_then(|n| n.as_str()) == Some("process_name"))
+        .filter_map(|e| e.at(&["args", "name"]).and_then(|n| n.as_str()))
+        .collect();
+    for want in ["frontend", "shard-server 0", "shard-server 1", "dae simulator"] {
+        assert!(procs.contains(&want), "missing process track `{want}`, got {procs:?}");
+    }
+    // the document a browser/Perfetto will load must re-parse
+    Json::parse(&doc.to_string()).expect("merged trace must re-parse");
+}
+
+/// Parity proof: the same request stream through an untraced and a
+/// traced net-serving stack produces identical scores — `--trace` is
+/// observability only.
+#[test]
+fn tracing_changes_no_serving_outputs() {
+    let rs = reqs(10);
+
+    let (servers, eps) = spawn_traced_servers("off", 2);
+    let coord =
+        Coordinator::start_with_embedder(model(), None, serve_opts(), Box::new(frontend(&eps)));
+    let want = score_ok(&coord, &rs);
+    coord.shutdown();
+    for s in servers {
+        s.wait();
+    }
+
+    let sink = TraceSink::enabled();
+    let (servers, eps) = spawn_traced_servers("on", 2);
+    let mut fe = frontend(&eps);
+    fe.set_trace(sink.clone());
+    let coord = Coordinator::start_with_embedder_traced(
+        model(),
+        None,
+        serve_opts(),
+        Box::new(fe),
+        sink.clone(),
+    );
+    let got = score_ok(&coord, &rs);
+    coord.shutdown();
+    for s in servers {
+        s.wait();
+    }
+
+    for (a, b) in want.iter().zip(&got) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.score, b.score, "tracing perturbed the score of request {}", a.id);
+    }
+    assert!(!sink.is_empty(), "the traced run must have recorded events");
+    assert_eq!(sink.dropped(), 0, "this tiny run must fit the ring buffer");
+}
