@@ -11,6 +11,7 @@ use ember::coordinator::{
     run_closed_loop, run_open_loop, synthetic_request, synthetic_request_with, BatchOptions,
     Coordinator, DlrmModel, IndexDist, LoadReport, LoadSpec, OpenLoopSpec, Request, ServeOptions,
 };
+use ember::store::{ColdFormat, StoreCfg};
 use ember::trace::TraceSink;
 use ember::EmberSession;
 use std::time::Duration;
@@ -190,6 +191,72 @@ fn main() {
             report.offered_qps.unwrap_or(0.0),
             dist_col,
             report.table_row()
+        );
+    }
+
+    // Tiered embedding store under skew: the same zipf(1.1) request
+    // stream scored by the dense fp32 model and by a model keeping
+    // only 10% of rows hot over a quantized cold tier. Acceptance: the
+    // zipf head keeps the hot hit-rate >= 80%, and the quantization
+    // error stays a bounded score delta, not a correctness cliff.
+    println!("\ntiered store vs dense fp32 (zipf 1.1, hot-frac 0.1):");
+    let dist = IndexDist::Zipf(1.1);
+    let reqs: Vec<Request> = (0..256)
+        .map(|k| synthetic_request_with(TABLES, ROWS, DENSE, LOOKUPS, dist, 0, k))
+        .collect();
+    let dense_model = model(&mut session);
+    let mut dense_scores: Vec<f32> = Vec::with_capacity(reqs.len());
+    for chunk in reqs.chunks(BATCH) {
+        for r in dense_model.infer_batch_cpu(chunk).expect("dense inference failed") {
+            dense_scores.push(r.score);
+        }
+    }
+    let scale =
+        dense_scores.iter().fold(0f32, |m, &s| m.max(s.abs())).max(f32::EPSILON);
+    let fp32_bytes = (TABLES * ROWS * EMB * std::mem::size_of::<f32>()) as f64;
+    for (fmt, bound) in [(ColdFormat::Fp16, 5e-2f32), (ColdFormat::Int8, 2e-1f32)] {
+        let cfg = StoreCfg::new(0.1, fmt).unwrap();
+        let tiered = DlrmModel::with_session_store(
+            &mut session,
+            BATCH,
+            ROWS,
+            EMB,
+            TABLES,
+            LOOKUPS,
+            DENSE,
+            HIDDEN,
+            42,
+            Some(cfg),
+        )
+        .unwrap();
+        let mut max_delta = 0f32;
+        let mut i = 0usize;
+        for chunk in reqs.chunks(BATCH) {
+            for r in tiered.infer_batch_cpu(chunk).expect("tiered inference failed") {
+                max_delta = max_delta.max((r.score - dense_scores[i]).abs());
+                i += 1;
+            }
+        }
+        let st = tiered.store_stats();
+        let rel = max_delta / scale;
+        println!(
+            "{:>6} cold    : hit {:>5.1}%  resident {:>5.1}% of fp32  max score delta {rel:.2e}",
+            fmt.to_string(),
+            st.hit_pct(),
+            100.0 * st.resident_bytes as f64 / fp32_bytes,
+        );
+        assert!(
+            st.hit_pct() >= 80.0,
+            "{fmt}: zipf(1.1) head must keep the hot tier >= 80% ({:.1}%)",
+            st.hit_pct()
+        );
+        assert!(
+            (st.resident_bytes as f64) < fp32_bytes,
+            "{fmt}: tiered tables must undercut the dense fp32 footprint"
+        );
+        assert!(
+            rel <= bound,
+            "{fmt}: score delta {rel:.3e} exceeds the {bound:.0e} accuracy bound"
         );
     }
 }

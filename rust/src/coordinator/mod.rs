@@ -23,6 +23,7 @@ use crate::frontend::embedding_ops::OpClass;
 use crate::frontend::formats::Csr;
 use crate::runtime::{ArgData, Runtime};
 use crate::session::EmberSession;
+use crate::store::{EmbeddingStore, StoreCfg, StoreStats};
 use crate::util::rng::Rng;
 use std::sync::Arc;
 
@@ -109,7 +110,11 @@ pub struct DlrmModel {
     pub max_lookups: usize,
     pub dense: usize,
     pub hidden: usize,
-    pub tables: Vec<Tensor>,
+    /// One [`EmbeddingStore`] per table: dense fp32 by default, tiered
+    /// (hot fp32 cache over a quantized cold tier) when built with a
+    /// [`StoreCfg`]. Shard workers `clone()` entries, which Arc-shares
+    /// tiered tables (and their counters) instead of copying rows.
+    pub tables: Vec<EmbeddingStore>,
     pub w1: Vec<f32>,
     pub b1: Vec<f32>,
     pub w2: Vec<f32>,
@@ -187,8 +192,35 @@ impl DlrmModel {
         hidden: usize,
         seed: u64,
     ) -> Result<Self> {
+        Self::with_session_store(
+            session, batch, table_rows, emb, num_tables, max_lookups, dense, hidden, seed, None,
+        )
+    }
+
+    /// [`DlrmModel::with_session`] with table storage selected by
+    /// `store`: `None` keeps every table dense fp32 (byte-identical to
+    /// the pre-store path), `Some(cfg)` wraps each generated table in a
+    /// tiered hot/cold store. Table *values* are drawn from the same
+    /// rng stream either way, so the seed contract with shard servers
+    /// is unchanged.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_session_store(
+        session: &mut EmberSession,
+        batch: usize,
+        table_rows: usize,
+        emb: usize,
+        num_tables: usize,
+        max_lookups: usize,
+        dense: usize,
+        hidden: usize,
+        seed: u64,
+        store: Option<StoreCfg>,
+    ) -> Result<Self> {
         let mut rng = Rng::new(seed);
-        let tables = gen_tables_with(&mut rng, num_tables, table_rows, emb);
+        let tables = gen_tables_with(&mut rng, num_tables, table_rows, emb)
+            .into_iter()
+            .map(|t| EmbeddingStore::build(t, store))
+            .collect::<Result<Vec<_>>>()?;
         let d_in = num_tables * emb + dense;
         let program = session.compile(&OpClass::Sls)?;
         Ok(DlrmModel {
@@ -232,7 +264,7 @@ impl DlrmModel {
                 })
                 .collect();
             let csr = Csr::from_rows(self.table_rows, &rows);
-            let mut bindings = Bindings::sls(&csr, &self.tables[t]);
+            let mut bindings = Bindings::sls_from_store(&csr, &self.tables[t]);
             let emb_out = exec.run(&mut bindings)?.output;
             for i in 0..b {
                 let dst = i * self.num_tables * self.emb + t * self.emb;
@@ -241,6 +273,14 @@ impl DlrmModel {
             }
         }
         Ok(out)
+    }
+
+    /// Store counters summed over this model's table set. Dense tables
+    /// contribute resident bytes and zero accesses; tiered tables
+    /// report the shared Arc counters, so this covers ShardPool workers
+    /// too (they hold clones of the same stores).
+    pub fn store_stats(&self) -> StoreStats {
+        crate::store::sum_stats(&self.tables)
     }
 
     fn check_batch(&self, requests: &[Request]) -> Result<()> {
@@ -376,7 +416,7 @@ mod tests {
         let tables = gen_tables(m.num_tables, m.table_rows, m.emb, 42);
         assert_eq!(tables.len(), m.num_tables);
         for (t, (a, b)) in tables.iter().zip(&m.tables).enumerate() {
-            assert_eq!(a.as_f32(), b.as_f32(), "table {t}");
+            assert_eq!(a.as_f32(), b.as_dense().unwrap().as_f32(), "table {t}");
         }
     }
 
@@ -389,9 +429,10 @@ mod tests {
         // manual check for request 0, table 0
         let want: Vec<f32> = {
             let mut acc = vec![0f32; m.emb];
+            let t0 = m.tables[0].as_dense().unwrap();
             for &idx in &reqs[0].lookups[0] {
                 for e in 0..m.emb {
-                    acc[e] += m.tables[0].buf.get_f(idx as usize * m.emb + e);
+                    acc[e] += t0.buf.get_f(idx as usize * m.emb + e);
                 }
             }
             acc
@@ -409,6 +450,30 @@ mod tests {
         let b = DlrmModel::with_session(&mut s, 4, 64, 8, 2, 6, 3, 16, 2).unwrap();
         assert!(Arc::ptr_eq(&a.program, &b.program), "same (op, options) must share");
         assert_eq!(s.traces().len(), 1, "one pipeline run serves both models");
+    }
+
+    #[test]
+    fn tiered_full_hot_model_matches_dense_model() {
+        use crate::store::{ColdFormat, StoreCfg};
+        let mut s = EmberSession::default();
+        let dense = DlrmModel::with_session(&mut s, 4, 64, 8, 2, 6, 3, 16, 42).unwrap();
+        let cfg = StoreCfg::new(1.0, ColdFormat::Int8).unwrap();
+        let tiered =
+            DlrmModel::with_session_store(&mut s, 4, 64, 8, 2, 6, 3, 16, 42, Some(cfg)).unwrap();
+        let mut rng = Rng::new(5);
+        let rs: Vec<Request> = (0..4).map(|i| req(i, &mut rng, &dense)).collect();
+        assert_eq!(
+            dense.embed(&rs).unwrap(),
+            tiered.embed(&rs).unwrap(),
+            "hot_frac 1.0 must be byte-identical to dense"
+        );
+        assert_eq!(
+            dense.infer_batch_cpu(&rs).unwrap(),
+            tiered.infer_batch_cpu(&rs).unwrap()
+        );
+        let st = tiered.store_stats();
+        assert_eq!(st.misses, 0, "full hot tier never reads cold");
+        assert!(st.hits > 0, "staged reads must be counted");
     }
 
     #[test]

@@ -250,6 +250,18 @@ fn run_batch(
             )
             .with_arg("degraded", degraded as f64),
         );
+        // counter tracks for the tiered store, sampled once per batch
+        if model.tables.iter().any(|t| t.tiered().is_some()) {
+            let st = model.store_stats();
+            let ts = trace.now_us();
+            trace.record(TraceEvent::counter("store/hot_hit_rate", tid, ts, st.hit_pct()));
+            trace.record(TraceEvent::counter(
+                "store/resident_bytes",
+                tid,
+                ts,
+                st.resident_bytes as f64,
+            ));
+        }
     }
     let mlp_t = trace.now_us();
     let result = outcome.and_then(|o| {
@@ -394,6 +406,10 @@ fn worker(
             }
         }
     }
+    // the worker's table set is the authoritative store view — shard
+    // pool clones share the same Arcs, so this sums every thread's
+    // accesses exactly once
+    stats.store = model.store_stats();
     stats.elapsed = started.elapsed();
     stats
 }

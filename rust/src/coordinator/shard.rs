@@ -164,8 +164,10 @@ impl Drop for ShardPool {
 /// State owned by one shard thread.
 struct ShardWorker {
     program: Arc<CompiledProgram>,
-    /// `(table index, table tensor)` — cloned once at pool build.
-    tables: Vec<(usize, crate::data::Tensor)>,
+    /// `(table index, table store)` — cloned once at pool build; a
+    /// tiered store clone is an Arc share, so every worker reads (and
+    /// counts into) the same hot tier as the owning model.
+    tables: Vec<(usize, crate::store::EmbeddingStore)>,
     batch: usize,
     max_lookups: usize,
     shard_id: usize,
@@ -191,12 +193,22 @@ impl ShardWorker {
                 return;
             }
         };
-        // one pre-bound binding set per owned table: the table tensor
-        // is moved in (the pool-build clone is the only copy) and bound
-        // exactly once; ptrs/out are fixed-size and refilled in place
+        // one pre-bound binding set per owned table: a dense table
+        // tensor is moved in (the pool-build clone is the only copy)
+        // and bound exactly once; a tiered store stays shared and its
+        // rows are staged per run. ptrs/out are fixed-size and
+        // refilled in place either way.
         let mut bindings: Vec<(usize, Bindings)> = tables
             .into_iter()
-            .map(|(t, table)| (t, Bindings::sls_pooled(table, batch)))
+            .map(|(t, store)| {
+                let b = match store {
+                    crate::store::EmbeddingStore::Dense(tensor) => {
+                        Bindings::sls_pooled(tensor, batch)
+                    }
+                    store => Bindings::sls_store(&store, batch),
+                };
+                (t, b)
+            })
             .collect();
         let mut ptr_scratch: Vec<i32> = vec![0; batch + 1];
         let mut idx_scratch: Vec<i32> = Vec::new();

@@ -101,6 +101,10 @@ pub struct ServeStats {
     /// was dead (net mode only). Each increment is one table across a
     /// whole batch — responses still succeed, quality degrades.
     pub degraded: u64,
+    /// Embedding-store counters over the worker's table set, folded in
+    /// at shutdown (zero accesses for dense tables): hot-tier hit rate,
+    /// dequantized rows, resident bytes. See [`crate::store::StoreStats`].
+    pub store: crate::store::StoreStats,
 }
 
 impl ServeStats {
@@ -113,6 +117,7 @@ impl ServeStats {
         self.batches += other.batches;
         self.errors += other.errors;
         self.degraded += other.degraded;
+        self.store.accumulate(other.store);
         self.hist.merge(&other.hist);
         self.elapsed = self.elapsed.max(other.elapsed);
     }
@@ -164,6 +169,15 @@ impl fmt::Display for ServeStats {
         )?;
         if self.degraded > 0 {
             write!(f, ", {} degraded segments", self.degraded)?;
+        }
+        if self.store.accesses() > 0 {
+            write!(
+                f,
+                ", store {:.1}% hot ({} dequants, {:.2} MiB resident)",
+                self.store.hit_pct(),
+                self.store.dequants,
+                self.store.resident_bytes as f64 / (1024.0 * 1024.0)
+            )?;
         }
         Ok(())
     }
@@ -272,11 +286,13 @@ mod tests {
 
     #[test]
     fn serve_stats_merge_sums_counters_and_takes_max_elapsed() {
+        use crate::store::StoreStats;
         let mut a = ServeStats {
             requests: 100,
             batches: 10,
             errors: 1,
             degraded: 2,
+            store: StoreStats { hits: 90, misses: 10, dequants: 10, resident_bytes: 1000 },
             elapsed: Duration::from_secs(4),
             ..Default::default()
         };
@@ -288,6 +304,7 @@ mod tests {
             batches: 30,
             errors: 0,
             degraded: 5,
+            store: StoreStats { hits: 10, misses: 90, dequants: 90, resident_bytes: 500 },
             elapsed: Duration::from_secs(2),
             ..Default::default()
         };
@@ -299,6 +316,12 @@ mod tests {
         assert_eq!(a.batches, 40);
         assert_eq!(a.errors, 1);
         assert_eq!(a.degraded, 7);
+        // store counters add across processes, like every other counter
+        assert_eq!(
+            a.store,
+            StoreStats { hits: 100, misses: 100, dequants: 100, resident_bytes: 1500 }
+        );
+        assert_eq!(a.store.hit_pct(), 50.0);
         assert_eq!(a.hist.count(), 400);
         // Overlapping processes: elapsed is the max, so throughput is
         // 400 req / 4 s, not 400 / 6 s.

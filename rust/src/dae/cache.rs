@@ -3,13 +3,16 @@
 //! simulation; documented in DESIGN.md).
 
 use super::config::CacheConfig;
+use crate::store::AssocLru;
 
 /// Simple set-associative LRU cache over 64-byte-aligned line tags.
+///
+/// The tag/way mechanism is the shared [`AssocLru`] (also the
+/// embedding store's hot-tier directory); this wrapper adds the
+/// size/line geometry and the hit/miss accounting the simulator reads.
 #[derive(Debug, Clone)]
 pub struct Cache {
-    sets: Vec<Vec<u64>>, // each set: MRU-first list of line tags
-    assoc: usize,
-    num_sets: usize,
+    lru: AssocLru<()>,
     pub hits: u64,
     pub misses: u64,
 }
@@ -18,38 +21,19 @@ impl Cache {
     pub fn new(cfg: CacheConfig, line: usize) -> Self {
         let num_lines = (cfg.size_bytes / line).max(1);
         let num_sets = (num_lines / cfg.assoc).max(1);
-        Cache {
-            sets: vec![Vec::with_capacity(cfg.assoc); num_sets],
-            assoc: cfg.assoc,
-            num_sets,
-            hits: 0,
-            misses: 0,
-        }
-    }
-
-    #[inline]
-    fn set_of(&self, line_tag: u64) -> usize {
-        (line_tag as usize) % self.num_sets
+        Cache { lru: AssocLru::new(num_sets, cfg.assoc), hits: 0, misses: 0 }
     }
 
     /// Probe-and-update: returns true on hit. `allocate` controls fill
     /// on miss (non-temporal accesses pass false).
     pub fn access(&mut self, line_tag: u64, allocate: bool) -> bool {
-        let si = self.set_of(line_tag);
-        let set = &mut self.sets[si];
-        if let Some(pos) = set.iter().position(|&t| t == line_tag) {
-            // move to MRU
-            let t = set.remove(pos);
-            set.insert(0, t);
+        if self.lru.touch(line_tag).is_some() {
             self.hits += 1;
             true
         } else {
             self.misses += 1;
             if allocate {
-                if set.len() == self.assoc {
-                    set.pop();
-                }
-                set.insert(0, line_tag);
+                self.lru.insert(line_tag, ());
             }
             false
         }
@@ -58,7 +42,7 @@ impl Cache {
     /// Probe without updating recency or filling (used to model
     /// level-targeted fills probing lower levels).
     pub fn probe(&self, line_tag: u64) -> bool {
-        self.sets[self.set_of(line_tag)].contains(&line_tag)
+        self.lru.probe(line_tag)
     }
 
     pub fn reset_stats(&mut self) {
@@ -133,5 +117,20 @@ mod tests {
             }
         }
         assert_eq!(hits, 0, "cyclic sweep over 2x capacity must thrash LRU");
+    }
+
+    #[test]
+    fn reset_stats_zeroes_counters_but_keeps_contents() {
+        let mut c = tiny();
+        c.access(0, true);
+        c.access(0, true);
+        c.access(2, false);
+        assert_eq!((c.hits, c.misses), (1, 2));
+        c.reset_stats();
+        assert_eq!((c.hits, c.misses), (0, 0));
+        // resident lines survive a stats reset
+        assert!(c.probe(0));
+        assert!(c.access(0, true));
+        assert_eq!((c.hits, c.misses), (1, 0));
     }
 }

@@ -12,6 +12,8 @@ use crate::data::{Buf, Env, Tensor};
 use crate::error::{EmberError, Result};
 use crate::frontend::embedding_ops::{OpClass, Semiring};
 use crate::frontend::formats::{BlockGathers, Csr, FlatLookups};
+use crate::store::{EmbeddingStore, TieredTable};
+use std::sync::Arc;
 
 /// Bind an index list as an `Env` tensor. Empty lists bind as a single
 /// zero element: a compiled program never dereferences an index when
@@ -29,10 +31,18 @@ pub(crate) fn index_tensor(idxs: &[i32]) -> Tensor {
 }
 
 /// Typed operands for one run of a compiled embedding op.
+///
+/// A binding is either *dense* (the table tensor lives in the `Env`,
+/// exactly as before) or *store-backed* (`store` holds a shared
+/// [`TieredTable`]; the table memref carries a placeholder until
+/// [`crate::Executor::run`] stages the referenced rows into it before
+/// each run). Store-backed bindings run on every backend because
+/// staging leaves a complete dense `Env` behind.
 #[derive(Debug, Clone)]
 pub struct Bindings {
     op: OpClass,
     env: Env,
+    store: Option<Arc<TieredTable>>,
 }
 
 impl Bindings {
@@ -60,7 +70,7 @@ impl Bindings {
         env.bind_sym("num_nodes", csr.num_rows as i64);
         env.bind_sym("emb_len", feats.dims[1] as i64);
         env.assign_addresses();
-        Bindings { op: OpClass::Mp, env }
+        Bindings { op: OpClass::Mp, env, store: None }
     }
 
     /// KG lookup: flat index list + entity table.
@@ -72,7 +82,7 @@ impl Bindings {
         env.bind_sym("num_queries", fl.idxs.len() as i64);
         env.bind_sym("emb_len", table.dims[1] as i64);
         env.assign_addresses();
-        Bindings { op: OpClass::Kg(sem), env }
+        Bindings { op: OpClass::Kg(sem), env, store: None }
     }
 
     /// BigBird SpAttn: blocked gather list + key tensor.
@@ -89,7 +99,7 @@ impl Bindings {
         env.bind_sym("block", bg.block as i64);
         env.bind_sym("emb_len", keys.dims[1] as i64);
         env.assign_addresses();
-        Bindings { op: OpClass::SpAttn { block: bg.block }, env }
+        Bindings { op: OpClass::SpAttn { block: bg.block }, env, store: None }
     }
 
     fn csr_op(op: OpClass, csr: &Csr, table: &Tensor, weighted: bool) -> Bindings {
@@ -109,7 +119,7 @@ impl Bindings {
         env.bind_sym("num_batches", csr.num_rows as i64);
         env.bind_sym("emb_len", table.dims[1] as i64);
         env.assign_addresses();
-        Bindings { op, env }
+        Bindings { op, env, store: None }
     }
 
     // ------------------------------------------------ pooled serving path
@@ -129,7 +139,45 @@ impl Bindings {
         env.bind_sym("num_batches", batch as i64);
         env.bind_sym("emb_len", emb as i64);
         env.assign_addresses();
-        Bindings { op: OpClass::Sls, env }
+        Bindings { op: OpClass::Sls, env, store: None }
+    }
+
+    /// One-shot SLS bindings over an [`EmbeddingStore`] (the per-batch
+    /// shape [`crate::coordinator::DlrmModel::embed`] builds). `Dense`
+    /// is exactly [`Bindings::sls`]; `Tiered` binds a placeholder table
+    /// and the shared store.
+    pub fn sls_from_store(csr: &Csr, store: &EmbeddingStore) -> Bindings {
+        match store {
+            EmbeddingStore::Dense(t) => Self::sls(csr, t),
+            EmbeddingStore::Tiered(tt) => {
+                let placeholder = Tensor::zeros(vec![1, tt.emb()]);
+                let mut b = Self::csr_op(OpClass::Sls, csr, &placeholder, false);
+                b.store = Some(Arc::clone(tt));
+                b
+            }
+        }
+    }
+
+    /// Pooled SLS bindings over an [`EmbeddingStore`]: the `Dense`
+    /// backend binds the fp32 tensor exactly as [`Bindings::sls_pooled`]
+    /// (byte-identical path), `Tiered` binds a placeholder table and the
+    /// shared store, with rows staged per run by the executor.
+    pub fn sls_store(store: &EmbeddingStore, batch: usize) -> Bindings {
+        match store {
+            EmbeddingStore::Dense(t) => Self::sls_pooled(t.clone(), batch),
+            EmbeddingStore::Tiered(tt) => {
+                let emb = tt.emb();
+                let mut env = Env::new();
+                env.bind_tensor("ptrs", Tensor::i32(vec![batch + 1], vec![0; batch + 1]));
+                env.bind_tensor("idxs", index_tensor(&[]));
+                env.bind_tensor("table", Tensor::zeros(vec![1, emb]));
+                env.bind_tensor("out", Tensor::zeros(vec![batch, emb]));
+                env.bind_sym("num_batches", batch as i64);
+                env.bind_sym("emb_len", emb as i64);
+                env.assign_addresses();
+                Bindings { op: OpClass::Sls, env, store: Some(Arc::clone(tt)) }
+            }
+        }
     }
 
     /// Refill the CSR operands in place for the next batch (serving hot
@@ -168,7 +216,53 @@ impl Bindings {
     /// Wrap an already-built `Env` (advanced/harness use: the typed
     /// constructors are preferred).
     pub fn from_env(op: OpClass, env: Env) -> Bindings {
-        Bindings { op, env }
+        Bindings { op, env, store: None }
+    }
+
+    /// Retarget these bindings at an [`EmbeddingStore`]: the store's
+    /// table replaces the one bound by the typed constructor (under
+    /// this op's table memref — `h` for Mp, `keys` for SpAttn, `table`
+    /// otherwise). `Dense` binds the fp32 tensor directly; `Tiered`
+    /// leaves a placeholder for the executor's per-run row staging.
+    /// This is how the parity suite pins `Tiered { hot_frac: 1.0 }`
+    /// byte-identical to `Dense` across every op class.
+    pub fn with_store(mut self, store: &EmbeddingStore) -> Self {
+        let name = self.table_memref();
+        match store {
+            EmbeddingStore::Dense(t) => {
+                self.env.bind_tensor(name, t.clone());
+                self.store = None;
+            }
+            EmbeddingStore::Tiered(tt) => {
+                self.env.bind_tensor(name, Tensor::zeros(vec![1, tt.emb()]));
+                self.store = Some(Arc::clone(tt));
+            }
+        }
+        self.env.assign_addresses();
+        self
+    }
+
+    /// The memref name this op class reads its table/feature rows from.
+    fn table_memref(&self) -> &'static str {
+        match self.op {
+            OpClass::Mp => "h",
+            OpClass::SpAttn { .. } => "keys",
+            _ => "table",
+        }
+    }
+
+    /// Whether these bindings resolve rows through a tiered store.
+    pub fn is_store_backed(&self) -> bool {
+        self.store.is_some()
+    }
+
+    /// Stage store-backed rows into the env (no-op for dense bindings);
+    /// called by the default [`crate::Executor::run`] before dispatch.
+    pub(crate) fn stage_store_rows(&mut self) -> Result<()> {
+        if let Some(store) = self.store.clone() {
+            crate::interp::fast::stage_store_rows(&self.op, &mut self.env, &store)?;
+        }
+        Ok(())
     }
 
     /// Bind an extra tensor (escape hatch for custom memrefs).

@@ -160,6 +160,9 @@ pub trait Executor {
     /// Run over an already-built `Env` (harness/advanced path).
     fn run_env(&mut self, env: &mut Env) -> Result<ExecReport>;
     /// Run typed bindings, validating they match the compiled op.
+    /// Store-backed bindings get their referenced rows staged into the
+    /// env first (dequantize-on-miss through the tiered store), so
+    /// every backend sees the same dense operand set.
     fn run(&mut self, bindings: &mut Bindings) -> Result<ExecReport> {
         if bindings.op_class() != self.op_class() {
             return Err(EmberError::Runtime(format!(
@@ -168,6 +171,7 @@ pub trait Executor {
                 self.op_class()
             )));
         }
+        bindings.stage_store_rows()?;
         self.run_env(bindings.env_mut())
     }
 }

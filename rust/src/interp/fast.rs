@@ -36,6 +36,7 @@ use crate::error::Result;
 use crate::frontend::embedding_ops::{OpClass, Semiring};
 use crate::interp::{Interp, NullSink};
 use crate::ir::dlc::{DlcOp, DlcProgram};
+use crate::store::TieredTable;
 
 /// The fused-kernel selection for one compiled program.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -405,6 +406,85 @@ fn block_gather(env: &Env, out: &mut Tensor) -> bool {
         }
     }
     true
+}
+
+// ------------------------------------------------- tiered-store staging
+
+/// Resolve the rows a store-backed binding references into a dense fp32
+/// staging table — the dequantize-on-miss row path of the tiered
+/// [`TieredTable`] store. The index operand is rewritten in place to
+/// point at the staged rows (first-touch order), so the fused kernels
+/// above run unchanged over fp32 slices and stay the hot path; with a
+/// full hot tier (`hot_frac == 1.0`) every staged row is bit-identical
+/// to the dense table and so is every kernel output.
+///
+/// Within one batch the first read of a row goes through
+/// [`TieredTable::read_row`] (hot hit or dequant + admission); repeats
+/// are hits against the staged copy. Out-of-range indices are left
+/// untouched — they stay out of range for the (smaller) staging table,
+/// so each kernel's own validation reports them exactly as before.
+pub(crate) fn stage_store_rows(op: &OpClass, env: &mut Env, store: &TieredTable) -> Result<()> {
+    let (idx_name, table_name, group) = match op {
+        OpClass::Mp => ("idxs", "h", 1usize),
+        OpClass::SpAttn { block } => ("bidx", "keys", (*block).max(1)),
+        _ => ("idxs", "table", 1),
+    };
+    let emb = store.emb();
+    if matches!(op, OpClass::Mp) {
+        // Mp reads node features both through the adjacency indices and
+        // directly by loop position, so rows cannot be compacted: every
+        // row stages at its own index (full materialization, no remap).
+        let rows = store.rows();
+        let mut full = vec![0.0f32; rows * emb];
+        for r in 0..rows {
+            store.read_row(r, &mut full[r * emb..(r + 1) * emb]);
+        }
+        env.bind_tensor(table_name, Tensor::f32(vec![rows, emb], full));
+        env.assign_addresses();
+        return Ok(());
+    }
+    let max_index = store.rows() / group;
+    let mut idxs_t = env
+        .tensors
+        .remove(idx_name)
+        .ok_or_else(|| crate::error::EmberError::Interp(format!("unbound memref `{idx_name}`")))?;
+    let mut staged: Vec<f32> = Vec::new();
+    if let Buf::I32(idxs) = &mut idxs_t.buf {
+        let mut remap: std::collections::HashMap<i32, i32> = std::collections::HashMap::new();
+        let mut row = vec![0.0f32; emb];
+        for v in idxs.iter_mut() {
+            let orig = *v;
+            if orig < 0 || (orig as usize) >= max_index {
+                continue; // kernel validation reports it, as for dense tables
+            }
+            let slot = match remap.get(&orig) {
+                Some(&s) => {
+                    store.note_staged_hit();
+                    s
+                }
+                None => {
+                    let s = (staged.len() / (group * emb)) as i32;
+                    for g in 0..group {
+                        store.read_row(orig as usize * group + g, &mut row);
+                        staged.extend_from_slice(&row);
+                    }
+                    remap.insert(orig, s);
+                    s
+                }
+            };
+            *v = slot;
+        }
+    }
+    env.tensors.insert(idx_name.to_string(), idxs_t);
+    if staged.is_empty() {
+        // keep the staging table non-degenerate (mirrors index_tensor's
+        // empty-bag padding; an all-empty batch never reads it)
+        staged.resize(group * emb, 0.0);
+    }
+    let n = staged.len() / emb;
+    env.bind_tensor(table_name, Tensor::f32(vec![n, emb], staged));
+    env.assign_addresses();
+    Ok(())
 }
 
 #[cfg(test)]

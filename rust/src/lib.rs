@@ -45,6 +45,7 @@ pub mod ir;
 pub mod net;
 pub mod runtime;
 pub mod session;
+pub mod store;
 pub mod trace;
 pub mod util;
 pub mod workloads;

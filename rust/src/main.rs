@@ -17,6 +17,7 @@ use ember::net::{
 };
 use ember::runtime::Runtime;
 use ember::session::EmberSession;
+use ember::store::{ColdFormat, StoreCfg, StoreStats};
 use ember::trace::export::TraceBuilder;
 use ember::trace::TraceSink;
 use ember::util::perfrec::{run_matrix, MatrixSpec, PerfRecording};
@@ -37,19 +38,23 @@ USAGE:
               and exits nonzero when --baseline comparison finds a regression
   ember bench --exp <table1..4|fig1|fig3|fig4|fig6|fig7|fig8|fig16..19|all> [--out results] [--seed N]
   ember serve [--requests N] [--clients C] [--shards S] [--qps Q[,Q..]] [--tables T] [--artifacts artifacts]
-              [--zipf S] [--open-loop] [--smoke] [--trace FILE]
+              [--zipf S] [--hot-frac F] [--cold fp16|int8] [--open-loop] [--smoke] [--trace FILE]
+              --hot-frac F keeps only an F fraction of each table's rows as fp32 (LRU hot tier)
+              over a quantized cold tier (--cold, default fp16) — serve tables bigger than RAM
               --trace writes the request-lifecycle timeline (enqueue -> batch -> embed -> MLP)
               plus a DAE-simulator counter track as chrome://tracing JSON
   ember serve --net (--shard-servers N | --shard-sockets P1,P2,..) [--replicate R] [--smoke]
               [--tables T] [--rows R] [--emb E] [--batch B] [--seed S] [--requests N] [--clients C]
-              [--zipf S] [--open-loop] [--qps Q] [--trace FILE]
+              [--zipf S] [--hot-frac F] [--cold fp16|int8] [--open-loop] [--qps Q] [--trace FILE]
               multi-process serving: fans the embedding stage out to shard-server processes over
-              UDS (or tcp:HOST:PORT) and prints a NET_SERVE summary line; --trace merges every
-              shard-server's buffered spans (pulled over the wire) into one multi-process file
+              UDS (or tcp:HOST:PORT) and prints a NET_SERVE summary line (store tiering flags are
+              forwarded to spawned shard servers); --trace merges every shard-server's buffered
+              spans (pulled over the wire) into one multi-process file
   ember shard-server --socket PATH --own T1,T2,.. [--shard-id I] [--tables T] [--rows R] [--emb E]
-              [--batch B] [--seed S] [--trace]
+              [--batch B] [--seed S] [--hot-frac F] [--cold fp16|int8] [--trace]
               standalone shard-server process hosting the listed tables (regenerated from --seed);
-              --trace buffers request spans for a frontend to pull via TraceReq
+              --hot-frac/--cold serve them from a tiered store; --trace buffers request spans for
+              a frontend to pull via TraceReq
   ember info
 "
     );
@@ -264,6 +269,35 @@ fn parse_dist(flags: &HashMap<String, String>) -> Result<IndexDist> {
     }
 }
 
+/// Parse `--hot-frac F` / `--cold fp16|int8` into a tiered-store
+/// config. Both flags absent = dense fp32 tables (`None`). A bare
+/// `--hot-frac` means the conventional 10% hot set; `--cold` alone
+/// defaults the hot fraction the same way, and a bare `--cold` picks
+/// fp16. Validation happens here at parse time (range via
+/// [`StoreCfg::new`], format via [`StoreCfg::parse_cold`]), mirroring
+/// `--zipf`: a bad value is a usage error, not a serve-time surprise.
+fn parse_store(flags: &HashMap<String, String>) -> Result<Option<StoreCfg>> {
+    let hot_frac = match flags.get("hot-frac") {
+        Some(v) if !v.is_empty() => Some(
+            v.parse::<f64>()
+                .map_err(|_| EmberError::Parse(format!("bad --hot-frac value `{v}`")))?,
+        ),
+        Some(_) => Some(0.1),
+        None => None,
+    };
+    let cold = match flags.get("cold") {
+        Some(v) if !v.is_empty() => Some(StoreCfg::parse_cold(v)?),
+        Some(_) => Some(ColdFormat::Fp16),
+        None => None,
+    };
+    match (hot_frac, cold) {
+        (None, None) => Ok(None),
+        (h, c) => {
+            Ok(Some(StoreCfg::new(h.unwrap_or(0.1), c.unwrap_or(ColdFormat::Fp16))?))
+        }
+    }
+}
+
 /// A tiny DAE-simulator run (`sls` on the paper's DAE machine) whose
 /// counter tracks ride along in a `--trace` serve file, so one trace
 /// shows all three layers: request lifecycle, shard processes, and the
@@ -307,6 +341,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         _ => vec![None], // unthrottled
     };
     let artifacts = flags.get("artifacts").map(String::as_str).unwrap_or("artifacts");
+    let store = parse_store(flags)?;
 
     // model shape: manifest when the PJRT backend can actually execute
     // the artifacts (`can_execute` — the stub build loads artifacts for
@@ -340,8 +375,17 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         println!(
             "no runnable PJRT artifacts; serving a synthetic {tables}-table DLRM on the pure-Rust MLP"
         );
+        if let Some(cfg) = &store {
+            println!(
+                "tiered tables: {:.0}% hot fp32 over a {} cold tier",
+                cfg.hot_frac * 100.0,
+                cfg.cold
+            );
+        }
         let mk: MakeModel<'_> = Box::new(move || {
-            DlrmModel::with_session(&mut session, 32, 4096, 16, tables, 32, 13, 64, 42)
+            DlrmModel::with_session_store(
+                &mut session, 32, 4096, 16, tables, 32, 13, 64, 42, store,
+            )
         });
         (mk, None)
     };
@@ -393,8 +437,17 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
             })?
         };
         let stats = coord.shutdown();
+        let store_note = if stats.store.accesses() > 0 {
+            format!(
+                ", store {:.1}% hot / {:.2} MiB resident",
+                stats.store.hit_pct(),
+                stats.store.resident_bytes as f64 / (1024.0 * 1024.0)
+            )
+        } else {
+            String::new()
+        };
         println!(
-            "{:>10}  {}   ({} batches, {} failed requests)",
+            "{:>10}  {}   ({} batches, {} failed requests{store_note})",
             report
                 .offered_qps
                 .map(|q| format!("{q:.0}"))
@@ -436,6 +489,7 @@ fn cmd_serve_net(flags: &HashMap<String, String>) -> Result<()> {
     let seed: u64 = flags.get("seed").and_then(|v| v.parse().ok()).unwrap_or(42);
     let replicas: usize = flags.get("replicate").and_then(|v| v.parse().ok()).unwrap_or(0);
     let dist = parse_dist(flags)?;
+    let store = parse_store(flags)?;
     let open_loop = flags.contains_key("open-loop");
     let (max_lookups, dense, hidden) = (32usize, 13usize, 64usize);
     let trace_path = flags.get("trace").filter(|s| !s.is_empty()).cloned();
@@ -481,6 +535,12 @@ fn cmd_serve_net(flags: &HashMap<String, String>) -> Result<()> {
                     "--seed".into(),
                     seed.to_string(),
                 ];
+                if let Some(cfg) = &store {
+                    child_args.push("--hot-frac".into());
+                    child_args.push(cfg.hot_frac.to_string());
+                    child_args.push("--cold".into());
+                    child_args.push(cfg.cold.to_string());
+                }
                 if trace_path.is_some() {
                     child_args.push("--trace".into());
                 }
@@ -531,6 +591,13 @@ fn cmd_serve_net(flags: &HashMap<String, String>) -> Result<()> {
         alive,
         endpoints.len()
     );
+    if let Some(cfg) = &store {
+        println!(
+            "shard tables tiered: {:.0}% hot fp32 over a {} cold tier",
+            cfg.hot_frac * 100.0,
+            cfg.cold
+        );
+    }
 
     let coord = Coordinator::start_with_embedder_traced(
         model,
@@ -576,15 +643,28 @@ fn cmd_serve_net(flags: &HashMap<String, String>) -> Result<()> {
         report.errors,
         stats.degraded,
     );
-    // Machine-greppable summary for the CI smoke job.
+    // Poll every shard's counters over fresh connections (before the
+    // teardown below stops them): the embedding-store traffic lives in
+    // the shard-server processes, not this one.
+    let mut shard_store = StoreStats::default();
+    for ep in &endpoints {
+        if let Some(st) = store_stats_at(ep) {
+            shard_store.accumulate(st);
+        }
+    }
+    // Machine-greppable summary for the CI smoke job. `hit_pct` /
+    // `resident_mb` append after the original fields so existing greps
+    // on the prefix keep matching (both are 0.00 on dense shards).
     println!(
-        "NET_SERVE ok={} errors={} degraded={} alive={} p99_us={} degraded_pct={:.2}",
+        "NET_SERVE ok={} errors={} degraded={} alive={} p99_us={} degraded_pct={:.2} hit_pct={:.2} resident_mb={:.2}",
         report.ok,
         report.errors,
         stats.degraded,
         alive,
         report.p99().as_micros(),
         stats.degraded_pct(tables),
+        shard_store.hit_pct(),
+        shard_store.resident_bytes as f64 / (1024.0 * 1024.0),
     );
 
     // Merge the trace before tearing the shards down: a stopped shard
@@ -659,6 +739,29 @@ fn pull_trace_at(ep: &Endpoint) -> Option<(u32, u64, u64, String)> {
     }
 }
 
+/// Poll one shard server's embedding-store counters over a fresh
+/// connection (`StatsReq`/`StatsResp`). Best-effort — a dead shard
+/// contributes zeros.
+fn store_stats_at(ep: &Endpoint) -> Option<StoreStats> {
+    use ember::net::{read_frame, write_frame, Frame};
+    let mut s = ep.connect().ok()?;
+    s.set_read_timeout(Some(Duration::from_millis(500))).ok()?;
+    write_frame(&mut s, &Frame::Hello { version: ember::net::proto::VERSION }).ok()?;
+    read_frame(&mut s).ok()?; // HelloAck
+    write_frame(&mut s, &Frame::StatsReq).ok()?;
+    match read_frame(&mut s) {
+        Ok(Frame::StatsResp {
+            store_hits, store_misses, store_dequants, store_resident_bytes, ..
+        }) => Some(StoreStats {
+            hits: store_hits,
+            misses: store_misses,
+            dequants: store_dequants,
+            resident_bytes: store_resident_bytes,
+        }),
+        _ => None,
+    }
+}
+
 /// Best-effort `Shutdown` frame to one shard server.
 fn shutdown_shard_at(ep: &Endpoint) {
     use ember::net::{read_frame, write_frame, Frame};
@@ -697,6 +800,7 @@ fn cmd_shard_server(flags: &HashMap<String, String>) -> Result<()> {
         batch: flags.get("batch").and_then(|v| v.parse().ok()).unwrap_or(32),
         seed: flags.get("seed").and_then(|v| v.parse().ok()).unwrap_or(42),
         owned: own.clone(),
+        store: parse_store(flags)?,
     };
     let ep = Endpoint::parse(socket)?;
     let trace =
@@ -720,6 +824,69 @@ fn cmd_info() {
     println!("machines: core, core2x, dae, dae-handopt, t4, h100");
     println!("ops: sls, spmm, mp, kg, kg_maxplus, spattn");
     println!("experiments: table1-4, fig1, fig3, fig4, fig6, fig7, fig8, fig16-19, all");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flags(argv: &[&str]) -> HashMap<String, String> {
+        let v: Vec<String> = argv.iter().map(|s| s.to_string()).collect();
+        parse_flags(&v)
+    }
+
+    #[test]
+    fn no_store_flags_means_dense() {
+        assert_eq!(parse_store(&flags(&["--requests", "8"])).unwrap(), None);
+    }
+
+    #[test]
+    fn hot_frac_and_cold_parse_together() {
+        let cfg = parse_store(&flags(&["--hot-frac", "0.25", "--cold", "int8"]))
+            .unwrap()
+            .unwrap();
+        assert_eq!(cfg.hot_frac, 0.25);
+        assert_eq!(cfg.cold, ColdFormat::Int8);
+    }
+
+    #[test]
+    fn bare_hot_frac_defaults_to_ten_percent_fp16() {
+        let cfg = parse_store(&flags(&["--hot-frac"])).unwrap().unwrap();
+        assert_eq!(cfg.hot_frac, 0.1);
+        assert_eq!(cfg.cold, ColdFormat::Fp16);
+    }
+
+    #[test]
+    fn cold_alone_enables_tiering_with_default_hot_frac() {
+        let cfg = parse_store(&flags(&["--cold", "fp16"])).unwrap().unwrap();
+        assert_eq!(cfg.hot_frac, 0.1);
+        assert_eq!(cfg.cold, ColdFormat::Fp16);
+    }
+
+    #[test]
+    fn non_numeric_hot_frac_is_a_parse_error() {
+        assert!(parse_store(&flags(&["--hot-frac", "lots"])).is_err());
+    }
+
+    #[test]
+    fn out_of_range_hot_frac_is_rejected_at_parse_time() {
+        for bad in ["0", "0.0", "1.5", "-0.3", "inf", "NaN"] {
+            assert!(
+                parse_store(&flags(&["--hot-frac", bad])).is_err(),
+                "--hot-frac {bad} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_cold_format_is_rejected_at_parse_time() {
+        for bad in ["int4", "fp32", "bf16", "FP16"] {
+            assert!(
+                parse_store(&flags(&["--hot-frac", "0.5", "--cold", bad])).is_err(),
+                "--cold {bad} must be rejected"
+            );
+        }
+    }
 }
 
 fn main() {

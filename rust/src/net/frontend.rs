@@ -369,21 +369,39 @@ impl NetFrontend {
     }
 
     /// Poll every alive shard for its counters and merge them:
-    /// `(table segments served, embed batches, service-latency hist)`.
-    pub fn stats(&mut self) -> (u64, u64, LatencyHist) {
+    /// `(table segments served, embed batches, service-latency hist,
+    /// embedding-store counters)`. The store counters are zero on
+    /// shards serving dense fp32 tables.
+    pub fn stats(&mut self) -> (u64, u64, LatencyHist, crate::store::StoreStats) {
         let (mut segments, mut batches, mut hist) = (0u64, 0u64, LatencyHist::default());
+        let mut store = crate::store::StoreStats::default();
         for conn in &mut self.conns {
             let Some(s) = conn.stream.as_mut() else { continue };
             if write_frame(s, &Frame::StatsReq).is_err() {
                 continue;
             }
-            if let Ok(Frame::StatsResp { requests, batches: b, hist: h }) = read_frame(s) {
+            if let Ok(Frame::StatsResp {
+                requests,
+                batches: b,
+                hist: h,
+                store_hits,
+                store_misses,
+                store_dequants,
+                store_resident_bytes,
+            }) = read_frame(s)
+            {
                 segments += requests;
                 batches += b;
                 hist.merge(&LatencyHist::from_bucket_counts(&h));
+                store.accumulate(crate::store::StoreStats {
+                    hits: store_hits,
+                    misses: store_misses,
+                    dequants: store_dequants,
+                    resident_bytes: store_resident_bytes,
+                });
             }
         }
-        (segments, batches, hist)
+        (segments, batches, hist, store)
     }
 
     /// Drain every alive shard's trace buffer over the wire
@@ -464,6 +482,7 @@ mod tests {
                 batch: BATCH,
                 seed: SEED,
                 owned,
+                store: None,
             };
             servers.push(ShardServer::spawn(ep.clone(), cfg).unwrap());
             eps.push(ep);
@@ -487,10 +506,11 @@ mod tests {
         let (got, degraded) = fe.embed(&rs).unwrap();
         assert_eq!(degraded, 0);
         assert_eq!(want, got, "net-mode embed must be byte-identical");
-        let (segments, batches, hist) = fe.stats();
+        let (segments, batches, hist, store) = fe.stats();
         assert_eq!(segments, TABLES as u64);
         assert_eq!(batches, 2, "one EmbedReq per shard");
         assert_eq!(hist.count(), 2);
+        assert_eq!(store.accesses(), 0, "dense shards report no store traffic");
         for s in servers {
             s.wait();
         }
@@ -607,6 +627,7 @@ mod tests {
                 batch: BATCH,
                 seed: SEED,
                 owned,
+                store: None,
             };
             servers.push(
                 ShardServer::spawn_traced(ep.clone(), cfg, TraceSink::enabled()).unwrap(),
@@ -678,6 +699,7 @@ mod tests {
             batch: BATCH,
             seed: SEED,
             owned: placement(TABLES, 1, 0).remove(0),
+            store: None,
         };
         let srv = ShardServer::spawn(eps[0].clone(), cfg).unwrap();
         std::thread::sleep(Duration::from_millis(20)); // let backoff expire

@@ -21,7 +21,9 @@ use std::io::{Read, Write};
 
 /// Protocol version, carried in [`Frame::Hello`]. Bump on any frame
 /// layout change; a shard server rejects handshakes it cannot speak.
-pub const VERSION: u32 = 1;
+/// v2: `StatsResp` carries embedding-store counters (hits, misses,
+/// dequants, resident bytes) after the latency histogram.
+pub const VERSION: u32 = 2;
 
 /// Upper bound on one frame body (64 MiB). A batch-32, 64-table,
 /// emb-128 response is ~1 MiB, so this is generous headroom while
@@ -73,11 +75,18 @@ pub enum Frame {
     /// Ask the shard for its serving counters.
     StatsReq,
     /// Shard-side counters; `hist` is the raw latency-bucket counts
-    /// (`coordinator::stats::LAT_BUCKETS` log₂-µs buckets).
+    /// (`coordinator::stats::LAT_BUCKETS` log₂-µs buckets). The last
+    /// four fields are the shard's embedding-store counters
+    /// ([`crate::store::StoreStats`]): zero accesses when its tables
+    /// are dense fp32.
     StatsResp {
         requests: u64,
         batches: u64,
         hist: Vec<u64>,
+        store_hits: u64,
+        store_misses: u64,
+        store_dequants: u64,
+        store_resident_bytes: u64,
     },
     /// Stop the shard server process gracefully.
     Shutdown,
@@ -166,13 +175,25 @@ impl Frame {
             }
             Frame::Ping { nonce } | Frame::Pong { nonce } => put_u64(&mut b, *nonce),
             Frame::StatsReq | Frame::Shutdown | Frame::TraceReq => {}
-            Frame::StatsResp { requests, batches, hist } => {
+            Frame::StatsResp {
+                requests,
+                batches,
+                hist,
+                store_hits,
+                store_misses,
+                store_dequants,
+                store_resident_bytes,
+            } => {
                 put_u64(&mut b, *requests);
                 put_u64(&mut b, *batches);
                 put_u32(&mut b, hist.len() as u32);
                 for h in hist {
                     put_u64(&mut b, *h);
                 }
+                put_u64(&mut b, *store_hits);
+                put_u64(&mut b, *store_misses);
+                put_u64(&mut b, *store_dequants);
+                put_u64(&mut b, *store_resident_bytes);
             }
             Frame::TraceResp { shard_id, origin_unix_us, dropped, events } => {
                 put_u32(&mut b, *shard_id);
@@ -259,7 +280,15 @@ impl Frame {
                 for _ in 0..n {
                     hist.push(rd.u64()?);
                 }
-                Frame::StatsResp { requests, batches, hist }
+                Frame::StatsResp {
+                    requests,
+                    batches,
+                    hist,
+                    store_hits: rd.u64()?,
+                    store_misses: rd.u64()?,
+                    store_dequants: rd.u64()?,
+                    store_resident_bytes: rd.u64()?,
+                }
             }
             10 => Frame::Shutdown,
             11 => Frame::TraceReq,
@@ -427,7 +456,15 @@ mod tests {
             Frame::Ping { nonce: 42 },
             Frame::Pong { nonce: 42 },
             Frame::StatsReq,
-            Frame::StatsResp { requests: 100, batches: 10, hist: vec![0, 3, 7] },
+            Frame::StatsResp {
+                requests: 100,
+                batches: 10,
+                hist: vec![0, 3, 7],
+                store_hits: 80,
+                store_misses: 20,
+                store_dequants: 20,
+                store_resident_bytes: 1 << 20,
+            },
             Frame::Shutdown,
             Frame::TraceReq,
             Frame::TraceResp {
@@ -584,6 +621,10 @@ mod tests {
                     requests: rng.next_u64(),
                     batches: rng.next_u64(),
                     hist: (0..n).map(|_| rng.next_u64()).collect(),
+                    store_hits: rng.next_u64(),
+                    store_misses: rng.next_u64(),
+                    store_dequants: rng.next_u64(),
+                    store_resident_bytes: rng.next_u64(),
                 }
             }
             _ => {

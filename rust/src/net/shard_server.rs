@@ -19,9 +19,9 @@ use super::proto::{Frame, TableCsr, TablePart, MAX_FRAME, VERSION};
 use super::transport::{Endpoint, NetStream};
 use crate::coordinator::stats::LatencyHist;
 use crate::coordinator::{gen_tables, Request};
-use crate::data::Tensor;
 use crate::error::{EmberError, Result};
 use crate::exec::{Backend, Bindings, Executor, Instance};
+use crate::store::{EmbeddingStore, StoreCfg};
 use crate::frontend::embedding_ops::OpClass;
 use crate::session::EmberSession;
 use crate::trace::{TraceEvent, TraceSink};
@@ -47,6 +47,10 @@ pub struct ShardServerCfg {
     pub seed: u64,
     /// Table ids this server hosts (primaries + replicas).
     pub owned: Vec<u32>,
+    /// Table storage: `None` keeps regenerated tables dense fp32 (the
+    /// pre-store behavior); `Some(cfg)` serves them from a tiered
+    /// hot/cold store (`--hot-frac` / `--cold` on `ember shard-server`).
+    pub store: Option<StoreCfg>,
 }
 
 /// Counters shared across connection threads, shipped in `StatsResp`.
@@ -97,8 +101,21 @@ impl ShardServer {
                 )));
             }
         }
-        let tables: Arc<Vec<(u32, Tensor)>> =
-            Arc::new(owned.iter().map(|&t| (t, all[t as usize].clone())).collect());
+        let mut all = all;
+        let tables: Arc<Vec<(u32, EmbeddingStore)>> = Arc::new(
+            owned
+                .iter()
+                .map(|&t| {
+                    // take the owned table out of the regenerated set so
+                    // dense mode moves (not copies) each hosted tensor
+                    let dense = std::mem::replace(
+                        &mut all[t as usize],
+                        crate::data::Tensor::f32(vec![1], vec![0.0]),
+                    );
+                    Ok((t, EmbeddingStore::build(dense, cfg.store)?))
+                })
+                .collect::<Result<Vec<_>>>()?,
+        );
 
         let listener = endpoint.bind()?;
         listener.set_nonblocking(true)?;
@@ -238,7 +255,7 @@ fn write_frame(s: &mut NetStream, f: &Frame) -> Result<()> {
 fn serve_conn(
     mut stream: NetStream,
     cfg: &ShardServerCfg,
-    tables: &[(u32, Tensor)],
+    tables: &[(u32, EmbeddingStore)],
     program: &Arc<crate::compiler::passes::pipeline::CompiledProgram>,
     stop: &AtomicBool,
     stats: &ShardStats,
@@ -281,9 +298,13 @@ fn serve_conn(
         Ok(i) => i,
         Err(_) => return,
     };
+    // Dense stores clone the tensor (one copy per connection, the
+    // pre-store behavior); tiered stores Arc-share the hot tier, so
+    // concurrent connections warm one cache and count into one set of
+    // counters.
     let mut bindings: Vec<(u32, Bindings)> = tables
         .iter()
-        .map(|(t, table)| (*t, Bindings::sls_pooled(table.clone(), cfg.batch)))
+        .map(|(t, store)| (*t, Bindings::sls_store(store, cfg.batch)))
         .collect();
 
     loop {
@@ -333,10 +354,15 @@ fn serve_conn(
                     .lock()
                     .map(|h| h.bucket_counts().to_vec())
                     .unwrap_or_default();
+                let st = crate::store::sum_stats(tables.iter().map(|(_, s)| s));
                 let resp = Frame::StatsResp {
                     requests: stats.segments.load(Ordering::Relaxed),
                     batches: stats.batches.load(Ordering::Relaxed),
                     hist,
+                    store_hits: st.hits,
+                    store_misses: st.misses,
+                    store_dequants: st.dequants,
+                    store_resident_bytes: st.resident_bytes,
                 };
                 if write_frame(&mut stream, &resp).is_err() {
                     return;
@@ -457,6 +483,7 @@ mod tests {
             batch: 4,
             seed: 42,
             owned,
+            store: None,
         }
     }
 
@@ -567,11 +594,60 @@ mod tests {
             }
         }
         write_f(&mut s, &Frame::StatsReq).unwrap();
-        let Frame::StatsResp { requests, batches, hist } = read_f(&mut s).unwrap() else {
+        let Frame::StatsResp { requests, batches, hist, store_hits, store_misses, .. } =
+            read_f(&mut s).unwrap()
+        else {
             panic!("no StatsResp");
         };
         assert_eq!((requests, batches), (2, 1));
         assert_eq!(hist.iter().sum::<u64>(), 1);
+        // dense tables report zero store accesses
+        assert_eq!((store_hits, store_misses), (0, 0));
+        srv.wait();
+    }
+
+    #[test]
+    fn tiered_full_hot_shard_is_byte_identical_and_reports_store_stats() {
+        use crate::coordinator::DlrmModel;
+        use crate::store::{ColdFormat, StoreCfg};
+        let mut c = cfg(vec![0, 1]);
+        c.store = Some(StoreCfg::new(1.0, ColdFormat::Fp16).unwrap());
+        let m = DlrmModel::new(c.batch, c.table_rows, c.emb, c.num_tables, 6, 3, 16, c.seed)
+            .unwrap();
+        let reqs: Vec<Request> = (0..3usize)
+            .map(|i| crate::coordinator::synthetic_request(c.num_tables, c.table_rows, 3, 6, 7, i))
+            .collect();
+        let want = m.embed(&reqs).unwrap();
+
+        let ep = sock("tier");
+        let srv = ShardServer::spawn(ep.clone(), c.clone()).unwrap();
+        let mut s = handshake(&ep);
+        let csrs: Vec<TableCsr> =
+            (0..2).map(|t| table_csr(&reqs, t, c.batch, m.max_lookups)).collect();
+        write_f(&mut s, &Frame::EmbedReq { seq: 5, batch: 4, tables: csrs }).unwrap();
+        let Frame::EmbedResp { parts, .. } = read_f(&mut s).unwrap() else {
+            panic!("no EmbedResp");
+        };
+        let width = c.num_tables * c.emb;
+        for p in &parts {
+            let t = p.table as usize;
+            for i in 0..c.batch {
+                assert_eq!(
+                    &want[i * width + t * c.emb..][..c.emb],
+                    &p.data[i * c.emb..][..c.emb],
+                    "hot_frac 1.0 must serve byte-identical rows (table {t} row {i})"
+                );
+            }
+        }
+        write_f(&mut s, &Frame::StatsReq).unwrap();
+        let Frame::StatsResp { store_hits, store_misses, store_resident_bytes, .. } =
+            read_f(&mut s).unwrap()
+        else {
+            panic!("no StatsResp");
+        };
+        assert!(store_hits > 0, "tiered lookups count hot hits");
+        assert_eq!(store_misses, 0, "a full hot tier never misses");
+        assert!(store_resident_bytes > 0);
         srv.wait();
     }
 

@@ -1,0 +1,162 @@
+//! Set-associative LRU — the tag/way machinery shared by the DAE
+//! simulator's cache model ([`crate::dae::cache::Cache`]) and the
+//! embedding store's hot tier ([`crate::store::TieredTable`]).
+//!
+//! Each set is a small MRU-first vector: a hit rotates the line to the
+//! front, a fill on a full set evicts the back. The generic value slot
+//! lets the hot tier carry a storage-slot index per resident line while
+//! the simulator cache carries nothing (`AssocLru<()>`).
+
+/// A set-associative LRU map from `u64` tags to values.
+///
+/// Pure mechanism: no hit/miss counters live here — callers layer their
+/// own accounting ([`crate::dae::cache::Cache`] keeps `hits`/`misses`
+/// fields, the hot tier uses shared atomics).
+#[derive(Debug, Clone)]
+pub struct AssocLru<V> {
+    /// MRU-first lines per set.
+    sets: Vec<Vec<(u64, V)>>,
+    assoc: usize,
+}
+
+impl<V> AssocLru<V> {
+    /// `num_sets * assoc` total lines; both are clamped to at least 1.
+    pub fn new(num_sets: usize, assoc: usize) -> Self {
+        let num_sets = num_sets.max(1);
+        let assoc = assoc.max(1);
+        AssocLru { sets: (0..num_sets).map(|_| Vec::with_capacity(assoc)).collect(), assoc }
+    }
+
+    pub fn num_sets(&self) -> usize {
+        self.sets.len()
+    }
+
+    pub fn assoc(&self) -> usize {
+        self.assoc
+    }
+
+    /// Total line capacity (`num_sets * assoc`).
+    pub fn capacity(&self) -> usize {
+        self.sets.len() * self.assoc
+    }
+
+    /// Lines currently resident.
+    pub fn len(&self) -> usize {
+        self.sets.iter().map(Vec::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sets.iter().all(Vec::is_empty)
+    }
+
+    #[inline]
+    fn set_of(&self, tag: u64) -> usize {
+        (tag as usize) % self.sets.len()
+    }
+
+    /// Hit: promote `tag` to MRU and return its value. Miss: `None`.
+    pub fn touch(&mut self, tag: u64) -> Option<&mut V> {
+        let si = self.set_of(tag);
+        let set = &mut self.sets[si];
+        let pos = set.iter().position(|(t, _)| *t == tag)?;
+        let entry = set.remove(pos);
+        set.insert(0, entry);
+        set.first_mut().map(|(_, v)| v)
+    }
+
+    /// Membership probe: no recency update, no fill.
+    pub fn probe(&self, tag: u64) -> bool {
+        self.sets[self.set_of(tag)].iter().any(|(t, _)| *t == tag)
+    }
+
+    /// Whether `tag`'s set has no room left for a fresh line.
+    pub fn set_is_full(&self, tag: u64) -> bool {
+        self.sets[self.set_of(tag)].len() == self.assoc
+    }
+
+    /// Evict and return the LRU line of `tag`'s set (the line that
+    /// [`AssocLru::insert`] would displace).
+    pub fn evict_lru(&mut self, tag: u64) -> Option<(u64, V)> {
+        let si = self.set_of(tag);
+        self.sets[si].pop()
+    }
+
+    /// Insert `tag` at MRU. If the set is full the LRU line is evicted
+    /// and returned. `tag` must not already be resident (callers
+    /// [`AssocLru::touch`] first); a duplicate would shadow the old
+    /// line.
+    pub fn insert(&mut self, tag: u64, value: V) -> Option<(u64, V)> {
+        let si = self.set_of(tag);
+        debug_assert!(
+            !self.sets[si].iter().any(|(t, _)| *t == tag),
+            "insert of already-resident tag {tag}"
+        );
+        let set = &mut self.sets[si];
+        let evicted = if set.len() == self.assoc { set.pop() } else { None };
+        set.insert(0, (tag, value));
+        evicted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eviction_order_is_least_recently_used() {
+        // one set, 3-way: insertion order 1,2,3 then touch(1) makes 2
+        // the LRU, so the next fill evicts 2, not 1.
+        let mut lru: AssocLru<u32> = AssocLru::new(1, 3);
+        assert!(lru.insert(1, 10).is_none());
+        assert!(lru.insert(2, 20).is_none());
+        assert!(lru.insert(3, 30).is_none());
+        assert_eq!(lru.touch(1), Some(&mut 10));
+        let evicted = lru.insert(4, 40);
+        assert_eq!(evicted, Some((2, 20)), "LRU line (tag 2) must go first");
+        assert!(lru.probe(1) && lru.probe(3) && lru.probe(4));
+        assert!(!lru.probe(2));
+    }
+
+    #[test]
+    fn eviction_walks_recency_not_insertion_order() {
+        let mut lru: AssocLru<()> = AssocLru::new(1, 2);
+        lru.insert(1, ());
+        lru.insert(2, ());
+        lru.touch(1); // recency now 1 (MRU), 2 (LRU)
+        assert_eq!(lru.insert(3, ()), Some((2, ())));
+        lru.touch(3); // recency 3, 1
+        assert_eq!(lru.insert(4, ()), Some((1, ())));
+    }
+
+    #[test]
+    fn tags_map_to_sets_by_modulo() {
+        // 2 sets, 1-way: even tags collide with even tags only
+        let mut lru: AssocLru<()> = AssocLru::new(2, 1);
+        lru.insert(0, ());
+        lru.insert(1, ());
+        assert_eq!(lru.insert(2, ()), Some((0, ())), "even tags share set 0");
+        assert!(lru.probe(1), "odd set untouched");
+        assert_eq!(lru.len(), 2);
+        assert_eq!(lru.capacity(), 2);
+    }
+
+    #[test]
+    fn probe_does_not_promote() {
+        let mut lru: AssocLru<()> = AssocLru::new(1, 2);
+        lru.insert(1, ());
+        lru.insert(2, ());
+        assert!(lru.probe(1)); // no recency change: 2 is still MRU
+        assert_eq!(lru.insert(3, ()), Some((1, ())));
+    }
+
+    #[test]
+    fn evict_lru_matches_what_insert_would_displace() {
+        let mut lru: AssocLru<u8> = AssocLru::new(1, 2);
+        lru.insert(1, 1);
+        lru.insert(2, 2);
+        assert!(lru.set_is_full(7)); // any tag: single set
+        assert_eq!(lru.evict_lru(7), Some((1, 1)));
+        assert!(!lru.set_is_full(7));
+        assert_eq!(lru.len(), 1);
+    }
+}

@@ -1,0 +1,451 @@
+//! Tiered embedding-table storage.
+//!
+//! [`EmbeddingStore`] is the single abstraction every serving layer
+//! holds tables through:
+//!
+//! * [`EmbeddingStore::Dense`] — today's fp32 [`Tensor`], bit-for-bit
+//!   unchanged (the default; zero overhead on the existing paths).
+//! * [`EmbeddingStore::Tiered`] — a per-table hot-row fp32 cache (the
+//!   set-associative LRU from [`assoc`], shared with the DAE
+//!   simulator's cache model) over a row-quantized cold store
+//!   ([`quant::ColdStore`]: fp16 or per-row scale/offset int8). Rows
+//!   are dequantized on miss and admitted at MRU, so zipf-skewed
+//!   traffic serves almost entirely from the fp32 hot tier while the
+//!   full table stays resident at a fraction of fp32 bytes.
+//!
+//! Two invariants hold by construction: `Dense` is byte-identical to
+//! the pre-store code, and `Tiered` with `hot_frac == 1.0` pre-warms
+//! every row into the fp32 hot tier — the cold tier is never read —
+//! so it is byte-identical to `Dense` (pinned in `tests/exec_parity.rs`).
+//!
+//! Shard workers `clone()` stores: a `Tiered` clone is an [`Arc`]
+//! share, so the hot tier and its hit/miss/dequant counters are common
+//! to every worker touching the table — exactly what the serving
+//! stats want to report.
+
+pub mod assoc;
+pub mod quant;
+
+pub use assoc::AssocLru;
+pub use quant::{ColdFormat, ColdStore};
+
+use crate::data::Tensor;
+use crate::error::{EmberError, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Hot-tier associativity: small enough that a set scan is a few
+/// compares, large enough that zipf head rows don't conflict-miss.
+const HOT_ASSOC: usize = 8;
+
+/// Tiered-store configuration, validated at construction (the CLI
+/// mirrors this at parse time, like `--zipf`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StoreCfg {
+    /// Fraction of rows the fp32 hot tier holds, in (0, 1].
+    pub hot_frac: f64,
+    /// Cold-tier row encoding.
+    pub cold: ColdFormat,
+}
+
+impl StoreCfg {
+    pub fn new(hot_frac: f64, cold: ColdFormat) -> Result<Self> {
+        if !hot_frac.is_finite() || hot_frac <= 0.0 || hot_frac > 1.0 {
+            return Err(EmberError::Workload(format!(
+                "hot fraction must be in (0, 1], got {hot_frac}"
+            )));
+        }
+        Ok(StoreCfg { hot_frac, cold })
+    }
+
+    /// Exhaustive `fp16|int8` match for the `--cold` flag.
+    pub fn parse_cold(s: &str) -> Result<ColdFormat> {
+        match s {
+            "fp16" => Ok(ColdFormat::Fp16),
+            "int8" => Ok(ColdFormat::Int8),
+            other => Err(EmberError::Workload(format!(
+                "cold format must be fp16 or int8, got `{other}`"
+            ))),
+        }
+    }
+}
+
+/// Store-side counters, summable across tables and shards.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Row reads served from the fp32 hot tier.
+    pub hits: u64,
+    /// Row reads that had to touch the cold tier.
+    pub misses: u64,
+    /// Rows dequantized (== misses today; kept separate so a future
+    /// non-admitting read path stays measurable).
+    pub dequants: u64,
+    /// Bytes resident across both tiers (hot fp32 + quantized cold).
+    pub resident_bytes: u64,
+}
+
+impl StoreStats {
+    pub fn accumulate(&mut self, o: StoreStats) {
+        self.hits += o.hits;
+        self.misses += o.misses;
+        self.dequants += o.dequants;
+        self.resident_bytes += o.resident_bytes;
+    }
+
+    pub fn accesses(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Hot hit rate in percent; 0.0 before any access.
+    pub fn hit_pct(&self) -> f64 {
+        if self.accesses() == 0 {
+            0.0
+        } else {
+            100.0 * self.hits as f64 / self.accesses() as f64
+        }
+    }
+}
+
+/// The mutable half of a tiered table: LRU directory + fp32 row slots.
+#[derive(Debug)]
+struct HotTier {
+    /// row index -> slot in `data` (one slot per line capacity).
+    lru: AssocLru<u32>,
+    /// `capacity * emb` fp32 row storage, indexed by slot.
+    data: Vec<f32>,
+    /// Slots not referenced by any resident line.
+    free: Vec<u32>,
+}
+
+/// One embedding table stored as hot fp32 rows over a quantized cold
+/// tier. Shared by `Arc` across shard workers; row reads lock the hot
+/// tier briefly (directory update + one row copy).
+#[derive(Debug)]
+pub struct TieredTable {
+    rows: usize,
+    emb: usize,
+    hot_rows: usize,
+    cold: ColdStore,
+    hot: Mutex<HotTier>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    dequants: AtomicU64,
+}
+
+impl TieredTable {
+    /// Build from a dense fp32 `rows x emb` tensor: quantize every row
+    /// into the cold tier, then pre-warm rows `[0, hot_rows)` — under
+    /// zipf load the head of the popularity distribution — into the
+    /// fp32 hot tier.
+    pub fn build(dense: &Tensor, cfg: StoreCfg) -> Result<Self> {
+        if dense.dims.len() != 2 {
+            return Err(EmberError::Workload(format!(
+                "tiered store needs a rank-2 table, got rank {}",
+                dense.dims.len()
+            )));
+        }
+        let (rows, emb) = (dense.dims[0], dense.dims[1]);
+        if rows == 0 || emb == 0 {
+            return Err(EmberError::Workload("tiered store needs a non-empty table".into()));
+        }
+        let data = dense.as_f32();
+        let hot_rows = ((cfg.hot_frac * rows as f64).ceil() as usize).clamp(1, rows);
+        let num_sets = hot_rows.div_ceil(HOT_ASSOC).max(1);
+        let lru = AssocLru::new(num_sets, HOT_ASSOC);
+        let capacity = lru.capacity();
+        let mut hot =
+            HotTier { lru, data: vec![0.0; capacity * emb], free: (0..capacity as u32).rev().collect() };
+        // Pre-warm: rows 0..hot_rows map to distinct ways (modulo set
+        // mapping spreads consecutive rows evenly and hot_rows <=
+        // capacity), so no pre-warm insert ever evicts.
+        for r in 0..hot_rows {
+            let slot = hot.free.pop().expect("pre-warm within capacity");
+            let base = slot as usize * emb;
+            hot.data[base..base + emb].copy_from_slice(&data[r * emb..(r + 1) * emb]);
+            let evicted = hot.lru.insert(r as u64, slot);
+            debug_assert!(evicted.is_none());
+        }
+        Ok(TieredTable {
+            rows,
+            emb,
+            hot_rows,
+            cold: ColdStore::quantize(&data, rows, emb, cfg.cold),
+            hot: Mutex::new(hot),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            dequants: AtomicU64::new(0),
+        })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn emb(&self) -> usize {
+        self.emb
+    }
+
+    /// Rows the hot tier was budgeted for.
+    pub fn hot_rows(&self) -> usize {
+        self.hot_rows
+    }
+
+    /// Copy row `row` into `out` (`out.len() == emb`). Hot hit: fp32
+    /// copy + MRU promotion. Miss: dequantize from the cold tier,
+    /// admit at MRU (recycling the evicted line's slot), then copy.
+    pub fn read_row(&self, row: usize, out: &mut [f32]) {
+        debug_assert!(row < self.rows, "row {row} out of range {}", self.rows);
+        debug_assert_eq!(out.len(), self.emb);
+        let mut hot = self.hot.lock().unwrap();
+        if let Some(&mut slot) = hot.lru.touch(row as u64) {
+            let base = slot as usize * self.emb;
+            out.copy_from_slice(&hot.data[base..base + self.emb]);
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        self.dequants.fetch_add(1, Ordering::Relaxed);
+        self.cold.dequant_row(row, self.emb, out);
+        let slot = if hot.lru.set_is_full(row as u64) {
+            hot.lru.evict_lru(row as u64).expect("full set has an LRU line").1
+        } else {
+            hot.free.pop().expect("non-full set implies a free slot")
+        };
+        let evicted = hot.lru.insert(row as u64, slot);
+        debug_assert!(evicted.is_none());
+        let base = slot as usize * self.emb;
+        hot.data[base..base + self.emb].copy_from_slice(out);
+    }
+
+    /// Count a row access served from already-staged data (a repeated
+    /// index inside one batch): a hot hit without re-touching the LRU.
+    pub fn note_staged_hit(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> StoreStats {
+        let hot = self.hot.lock().unwrap();
+        StoreStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            dequants: self.dequants.load(Ordering::Relaxed),
+            resident_bytes: (hot.data.len() * 4 + self.cold.bytes()) as u64,
+        }
+    }
+}
+
+/// Table storage behind every serving layer: dense fp32 or tiered.
+#[derive(Debug, Clone)]
+pub enum EmbeddingStore {
+    /// Today's storage: one fp32 tensor, bit-for-bit unchanged.
+    Dense(Tensor),
+    /// Hot fp32 cache over a quantized cold tier; `clone()` shares.
+    Tiered(Arc<TieredTable>),
+}
+
+impl EmbeddingStore {
+    pub fn dense(t: Tensor) -> Self {
+        EmbeddingStore::Dense(t)
+    }
+
+    /// Wrap `t` per `cfg`: `None` keeps it dense.
+    pub fn build(t: Tensor, cfg: Option<StoreCfg>) -> Result<Self> {
+        match cfg {
+            None => Ok(EmbeddingStore::Dense(t)),
+            Some(c) => Ok(EmbeddingStore::Tiered(Arc::new(TieredTable::build(&t, c)?))),
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            EmbeddingStore::Dense(t) => t.dims.first().copied().unwrap_or(0),
+            EmbeddingStore::Tiered(t) => t.rows(),
+        }
+    }
+
+    pub fn emb(&self) -> usize {
+        match self {
+            EmbeddingStore::Dense(t) => t.dims.get(1).copied().unwrap_or(0),
+            EmbeddingStore::Tiered(t) => t.emb(),
+        }
+    }
+
+    /// The dense tensor, when this store is dense.
+    pub fn as_dense(&self) -> Option<&Tensor> {
+        match self {
+            EmbeddingStore::Dense(t) => Some(t),
+            EmbeddingStore::Tiered(_) => None,
+        }
+    }
+
+    pub fn tiered(&self) -> Option<&Arc<TieredTable>> {
+        match self {
+            EmbeddingStore::Dense(_) => None,
+            EmbeddingStore::Tiered(t) => Some(t),
+        }
+    }
+
+    /// Copy row `row` into `out`, through whichever tier holds it.
+    pub fn read_row(&self, row: usize, out: &mut [f32]) {
+        match self {
+            EmbeddingStore::Dense(t) => {
+                let emb = self.emb();
+                match &t.buf {
+                    crate::data::Buf::F32(v) => out.copy_from_slice(&v[row * emb..(row + 1) * emb]),
+                    _ => {
+                        for (k, o) in out.iter_mut().enumerate() {
+                            *o = t.buf.get_f(row * emb + k);
+                        }
+                    }
+                }
+            }
+            EmbeddingStore::Tiered(t) => t.read_row(row, out),
+        }
+    }
+
+    /// Counters + resident bytes. Dense tables report their fp32
+    /// footprint and zero accesses.
+    pub fn stats(&self) -> StoreStats {
+        match self {
+            EmbeddingStore::Dense(t) => StoreStats {
+                resident_bytes: (t.numel() * 4) as u64,
+                ..StoreStats::default()
+            },
+            EmbeddingStore::Tiered(t) => t.stats(),
+        }
+    }
+}
+
+/// Sum [`EmbeddingStore::stats`] over a table set.
+pub fn sum_stats<'a, I: IntoIterator<Item = &'a EmbeddingStore>>(stores: I) -> StoreStats {
+    let mut total = StoreStats::default();
+    for s in stores {
+        total.accumulate(s.stats());
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::{Rng, Zipf};
+
+    fn table(rows: usize, emb: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        Tensor::f32(vec![rows, emb], rng.normal_vec(rows * emb, 0.1))
+    }
+
+    #[test]
+    fn cfg_rejects_out_of_range_hot_frac() {
+        for bad in [0.0, -0.25, 1.5, f64::NAN, f64::INFINITY] {
+            assert!(StoreCfg::new(bad, ColdFormat::Fp16).is_err(), "{bad} must be rejected");
+        }
+        assert!(StoreCfg::new(1.0, ColdFormat::Int8).is_ok());
+        assert!(StoreCfg::new(1e-6, ColdFormat::Fp16).is_ok());
+    }
+
+    #[test]
+    fn cfg_parse_cold_is_exhaustive() {
+        assert_eq!(StoreCfg::parse_cold("fp16").unwrap(), ColdFormat::Fp16);
+        assert_eq!(StoreCfg::parse_cold("int8").unwrap(), ColdFormat::Int8);
+        assert!(StoreCfg::parse_cold("fp8").is_err());
+        assert!(StoreCfg::parse_cold("").is_err());
+    }
+
+    #[test]
+    fn hot_frac_one_reads_are_byte_identical_and_never_miss() {
+        let t = table(128, 16, 7);
+        let cfg = StoreCfg::new(1.0, ColdFormat::Int8).unwrap();
+        let store = EmbeddingStore::build(t.clone(), Some(cfg)).unwrap();
+        let dense = t.as_f32();
+        let mut row = vec![0.0f32; 16];
+        for r in (0..128).rev() {
+            store.read_row(r, &mut row);
+            assert_eq!(
+                row.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                dense[r * 16..(r + 1) * 16].iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "row {r} must be bit-identical with a full hot tier"
+            );
+        }
+        let s = store.stats();
+        assert_eq!((s.misses, s.dequants), (0, 0), "full hot tier never touches cold");
+        assert_eq!(s.hits, 128);
+    }
+
+    #[test]
+    fn miss_admits_and_subsequent_read_hits() {
+        let t = table(256, 8, 8);
+        let cfg = StoreCfg::new(0.1, ColdFormat::Fp16).unwrap();
+        let tiered = TieredTable::build(&t, cfg).unwrap();
+        let mut row = vec![0.0f32; 8];
+        let cold_row = 200; // beyond the pre-warmed head
+        tiered.read_row(cold_row, &mut row);
+        let after_miss = tiered.stats();
+        assert_eq!((after_miss.hits, after_miss.misses, after_miss.dequants), (0, 1, 1));
+        let first = row.clone();
+        tiered.read_row(cold_row, &mut row);
+        assert_eq!(tiered.stats().hits, 1, "admitted row must hit");
+        assert_eq!(row, first, "hot copy serves the dequantized bytes back");
+    }
+
+    #[test]
+    fn tiered_resident_bytes_undercut_dense() {
+        let t = table(1024, 32, 9);
+        let dense_bytes = EmbeddingStore::dense(t.clone()).stats().resident_bytes;
+        for fmt in [ColdFormat::Fp16, ColdFormat::Int8] {
+            let cfg = StoreCfg::new(0.1, fmt).unwrap();
+            let s = EmbeddingStore::build(t.clone(), Some(cfg)).unwrap().stats();
+            assert!(
+                s.resident_bytes < dense_bytes,
+                "{fmt}: {} must be < dense {dense_bytes}",
+                s.resident_bytes
+            );
+        }
+    }
+
+    #[test]
+    fn clones_share_the_hot_tier_and_counters() {
+        let t = table(64, 8, 10);
+        let cfg = StoreCfg::new(0.25, ColdFormat::Int8).unwrap();
+        let a = EmbeddingStore::build(t, Some(cfg)).unwrap();
+        let b = a.clone();
+        let mut row = vec![0.0f32; 8];
+        a.read_row(60, &mut row); // miss + admit via clone a
+        b.read_row(60, &mut row); // must hit through clone b
+        let s = a.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(b.stats(), s, "clones read the same counters");
+    }
+
+    #[test]
+    fn zipf_head_traffic_hits_the_hot_tier() {
+        // zipf(1.1) over 4096 rows with a 10% fp32 hot tier: the
+        // pre-warmed head plus LRU admission keeps the hit rate high —
+        // the capacity scenario the tiered store exists for.
+        let rows = 4096;
+        let t = table(rows, 8, 11);
+        let cfg = StoreCfg::new(0.1, ColdFormat::Int8).unwrap();
+        let tiered = TieredTable::build(&t, cfg).unwrap();
+        let mut rng = Rng::new(42);
+        let zipf = Zipf::new(rows as u64, 1.1);
+        let mut row = vec![0.0f32; 8];
+        for _ in 0..20_000 {
+            tiered.read_row(zipf.sample(&mut rng) as usize, &mut row);
+        }
+        let s = tiered.stats();
+        assert!(
+            s.hit_pct() >= 80.0,
+            "zipf(1.1) @ hot_frac 0.1 must keep >= 80% hot hits, got {:.1}%",
+            s.hit_pct()
+        );
+    }
+
+    #[test]
+    fn stats_sum_and_hit_pct() {
+        let mut a = StoreStats { hits: 3, misses: 1, dequants: 1, resident_bytes: 100 };
+        a.accumulate(StoreStats { hits: 1, misses: 3, dequants: 3, resident_bytes: 50 });
+        assert_eq!(a, StoreStats { hits: 4, misses: 4, dequants: 4, resident_bytes: 150 });
+        assert_eq!(a.hit_pct(), 50.0);
+        assert_eq!(StoreStats::default().hit_pct(), 0.0);
+    }
+}

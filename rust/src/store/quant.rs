@@ -1,0 +1,239 @@
+//! Row quantization for the cold tier: hand-rolled IEEE binary16
+//! conversion (round-to-nearest-even — no `half` crate in the offline
+//! build) and per-row asymmetric int8 with a scale/offset pair per row.
+
+/// Convert an `f32` to IEEE binary16 bits, rounding to nearest-even.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x7f_ffff;
+    if exp == 0xff {
+        // inf / nan; keep nan-ness with a quiet mantissa bit
+        return sign | 0x7c00 | if man != 0 { 0x200 } else { 0 };
+    }
+    let e = exp - 127;
+    if e > 15 {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if e >= -14 {
+        // normal half: keep 10 mantissa bits, round-to-nearest-even on
+        // the 13 dropped bits. A mantissa carry into bit 10 bumps the
+        // exponent (and rolls e == 15 into inf) via plain addition.
+        let mut m = man >> 13;
+        let rem = man & 0x1fff;
+        if rem > 0x1000 || (rem == 0x1000 && (m & 1) == 1) {
+            m += 1;
+        }
+        return sign | ((((e + 15) as u32) << 10) + m) as u16;
+    }
+    if e < -25 {
+        return sign; // underflows past half the smallest subnormal
+    }
+    // subnormal half: value = m * 2^-24 with the implicit bit restored
+    let man = man | 0x80_0000;
+    let shift = (-e - 1) as u32; // in 14..=24 here
+    let m = man >> shift;
+    let rem = man & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    let m = if rem > half || (rem == half && (m & 1) == 1) { m + 1 } else { m };
+    sign | m as u16
+}
+
+/// Convert IEEE binary16 bits back to `f32` (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 0x1f {
+        sign | 0x7f80_0000 | (man << 13)
+    } else if exp != 0 {
+        sign | ((exp + 112) << 23) | (man << 13)
+    } else if man != 0 {
+        // subnormal half: normalize into an f32 exponent
+        let k = 31 - man.leading_zeros(); // MSB position, 0..=9
+        sign | ((k + 103) << 23) | ((man << (23 - k)) & 0x7f_ffff)
+    } else {
+        sign
+    };
+    f32::from_bits(bits)
+}
+
+/// Cold-tier row encoding, selected per table set via `--cold`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ColdFormat {
+    /// IEEE binary16 per element (2 bytes/element, ~1e-3 relative).
+    Fp16,
+    /// Per-row asymmetric int8: `x ~ offset + scale * code`
+    /// (1 byte/element + 8 bytes/row, error <= row_range / 510).
+    Int8,
+}
+
+impl std::fmt::Display for ColdFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ColdFormat::Fp16 => write!(f, "fp16"),
+            ColdFormat::Int8 => write!(f, "int8"),
+        }
+    }
+}
+
+/// The quantized cold tier of one table: every row, row-major.
+#[derive(Debug, Clone)]
+pub enum ColdStore {
+    Fp16 { bits: Vec<u16> },
+    Int8 { codes: Vec<u8>, scale: Vec<f32>, offset: Vec<f32> },
+}
+
+impl ColdStore {
+    /// Quantize `rows x emb` row-major fp32 data.
+    pub fn quantize(data: &[f32], rows: usize, emb: usize, fmt: ColdFormat) -> Self {
+        assert_eq!(data.len(), rows * emb, "cold-store shape mismatch");
+        match fmt {
+            ColdFormat::Fp16 => {
+                ColdStore::Fp16 { bits: data.iter().map(|&x| f32_to_f16_bits(x)).collect() }
+            }
+            ColdFormat::Int8 => {
+                let mut codes = Vec::with_capacity(rows * emb);
+                let mut scale = Vec::with_capacity(rows);
+                let mut offset = Vec::with_capacity(rows);
+                for r in 0..rows {
+                    let row = &data[r * emb..(r + 1) * emb];
+                    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+                    for &x in row {
+                        lo = lo.min(x);
+                        hi = hi.max(x);
+                    }
+                    if !lo.is_finite() || !hi.is_finite() {
+                        // empty row or non-finite data: store zeros
+                        (lo, hi) = (0.0, 0.0);
+                    }
+                    let s = (hi - lo) / 255.0;
+                    scale.push(s);
+                    offset.push(lo);
+                    if s == 0.0 {
+                        codes.resize(codes.len() + emb, 0);
+                    } else {
+                        codes.extend(
+                            row.iter().map(|&x| ((x - lo) / s).round().clamp(0.0, 255.0) as u8),
+                        );
+                    }
+                }
+                ColdStore::Int8 { codes, scale, offset }
+            }
+        }
+    }
+
+    /// Reconstruct row `row` into `out` (`out.len() == emb`).
+    pub fn dequant_row(&self, row: usize, emb: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), emb);
+        match self {
+            ColdStore::Fp16 { bits } => {
+                let src = &bits[row * emb..(row + 1) * emb];
+                for (o, &b) in out.iter_mut().zip(src) {
+                    *o = f16_bits_to_f32(b);
+                }
+            }
+            ColdStore::Int8 { codes, scale, offset } => {
+                let src = &codes[row * emb..(row + 1) * emb];
+                let (s, off) = (scale[row], offset[row]);
+                for (o, &c) in out.iter_mut().zip(src) {
+                    *o = off + s * c as f32;
+                }
+            }
+        }
+    }
+
+    /// Bytes this cold tier keeps resident.
+    pub fn bytes(&self) -> usize {
+        match self {
+            ColdStore::Fp16 { bits } => bits.len() * 2,
+            ColdStore::Int8 { codes, scale, offset } => {
+                codes.len() + (scale.len() + offset.len()) * 4
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quick;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn f16_round_trips_exactly_representable_values() {
+        for x in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 0.25, 1024.0] {
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(x)), x, "{x} must survive");
+        }
+        // signed zero keeps its sign bit
+        assert_eq!(f32_to_f16_bits(-0.0).to_be_bytes()[0] & 0x80, 0x80);
+    }
+
+    #[test]
+    fn f16_specials() {
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        // overflow saturates to inf, deep underflow to signed zero
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e6)), f32::INFINITY);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-1e-30)), -0.0);
+        // smallest subnormal half and the normal/subnormal boundary
+        assert_eq!(f16_bits_to_f32(0x0001), 2.0f32.powi(-24));
+        assert_eq!(f16_bits_to_f32(0x0400), 2.0f32.powi(-14));
+    }
+
+    #[test]
+    fn prop_f16_relative_error_within_half_ulp() {
+        quick::check("f16 round trip", 256, |rng: &mut Rng| {
+            // the magnitude band embedding parameters live in
+            let x = (rng.f32() - 0.5) * 8.0;
+            let back = f16_bits_to_f32(f32_to_f16_bits(x));
+            // half has 11 significand bits: half-ulp relative bound 2^-12
+            let bound = x.abs() * (1.0 / 4096.0) + 1e-7;
+            if (back - x).abs() <= bound {
+                Ok(())
+            } else {
+                Err(format!("{x} -> {back}, err {} > {bound}", (back - x).abs()))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_int8_row_error_bounded_by_row_range() {
+        quick::check("int8 row round trip", 128, |rng: &mut Rng| {
+            let emb = 1 + rng.below(64) as usize;
+            let row: Vec<f32> = (0..emb).map(|_| (rng.f32() - 0.5) * 4.0).collect();
+            let cold = ColdStore::quantize(&row, 1, emb, ColdFormat::Int8);
+            let mut back = vec![0.0f32; emb];
+            cold.dequant_row(0, emb, &mut back);
+            let (lo, hi) = row
+                .iter()
+                .fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &x| (l.min(x), h.max(x)));
+            // worst case is half a quantization step per element
+            let bound = (hi - lo) / 255.0 * 0.5 + 1e-6;
+            for (i, (&a, &b)) in row.iter().zip(&back).enumerate() {
+                if (a - b).abs() > bound {
+                    return Err(format!("elem {i}: {a} -> {b}, err {} > {bound}", (a - b).abs()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int8_constant_row_is_exact() {
+        let row = vec![0.75f32; 16];
+        let cold = ColdStore::quantize(&row, 1, 16, ColdFormat::Int8);
+        let mut back = vec![0.0f32; 16];
+        cold.dequant_row(0, 16, &mut back);
+        assert_eq!(back, row, "zero-range rows reconstruct exactly");
+    }
+
+    #[test]
+    fn cold_bytes_reflect_format() {
+        let data = vec![0.5f32; 4 * 8];
+        assert_eq!(ColdStore::quantize(&data, 4, 8, ColdFormat::Fp16).bytes(), 4 * 8 * 2);
+        assert_eq!(ColdStore::quantize(&data, 4, 8, ColdFormat::Int8).bytes(), 4 * 8 + 4 * 8);
+    }
+}

@@ -17,10 +17,11 @@
 //! `BENCH_*.json` files accumulate.
 
 use crate::error::{EmberError, Result};
-use crate::exec::{Backend, Bindings};
+use crate::exec::{Backend, Bindings, Executor};
 use crate::frontend::embedding_ops::{OpClass, Semiring};
 use crate::frontend::formats::{BlockGathers, Csr, FlatLookups};
 use crate::session::EmberSession;
+use crate::store::{EmbeddingStore, StoreCfg, StoreStats};
 use crate::util::bench::Bench;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -55,11 +56,17 @@ pub struct BenchRecord {
     pub throughput: f64,
     /// `interp_mean / mean` for the same workload (1.0 for interp).
     pub speedup_vs_interp: f64,
+    /// Tiered-store counters for this measurement — `None` on dense
+    /// cells. Optional in the JSON too, so pre-store `BENCH_*.json`
+    /// files (and baselines) still load under the same schema.
+    pub store_hit_pct: Option<f64>,
+    pub store_dequants: Option<u64>,
+    pub store_resident_bytes: Option<u64>,
 }
 
 impl BenchRecord {
     fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("workload", Json::str(&self.workload)),
             ("op", Json::str(&self.op)),
             ("backend", Json::str(&self.backend)),
@@ -74,7 +81,17 @@ impl BenchRecord {
             ("min_ns", Json::num(self.min_ns)),
             ("throughput", Json::num(self.throughput)),
             ("speedup_vs_interp", Json::num(self.speedup_vs_interp)),
-        ])
+        ];
+        if let Some(p) = self.store_hit_pct {
+            fields.push(("store_hit_pct", Json::num(p)));
+        }
+        if let Some(d) = self.store_dequants {
+            fields.push(("store_dequants", Json::num(d as f64)));
+        }
+        if let Some(b) = self.store_resident_bytes {
+            fields.push(("store_resident_bytes", Json::num(b as f64)));
+        }
+        Json::obj(fields)
     }
 
     fn from_json(j: &Json) -> Result<BenchRecord> {
@@ -104,6 +121,12 @@ impl BenchRecord {
             min_ns: n("min_ns")?,
             throughput: n("throughput")?,
             speedup_vs_interp: n("speedup_vs_interp")?,
+            store_hit_pct: j.get("store_hit_pct").and_then(Json::as_f64),
+            store_dequants: j.get("store_dequants").and_then(Json::as_f64).map(|v| v as u64),
+            store_resident_bytes: j
+                .get("store_resident_bytes")
+                .and_then(Json::as_f64)
+                .map(|v| v as u64),
         })
     }
 }
@@ -262,11 +285,26 @@ pub struct CellSpec {
     pub table_rows: usize,
     pub emb: usize,
     pub lookups_per_row: usize,
+    /// `Some` serves the table through a tiered hot/cold store (SLS
+    /// cells only — other ops keep dense operands), so each measured
+    /// run includes row staging / dequantize-on-miss. `None` is the
+    /// dense fp32 path, byte-identical to the pre-store matrix.
+    pub store: Option<StoreCfg>,
 }
 
 impl CellSpec {
     pub fn name(&self) -> String {
-        format!("{}/b{}/r{}", self.op.name(), self.batch, self.table_rows)
+        match &self.store {
+            Some(cfg) => format!(
+                "{}/b{}/r{}/hot{}-{}",
+                self.op.name(),
+                self.batch,
+                self.table_rows,
+                (cfg.hot_frac * 100.0).round() as u32,
+                cfg.cold
+            ),
+            None => format!("{}/b{}/r{}", self.op.name(), self.batch, self.table_rows),
+        }
     }
 }
 
@@ -281,18 +319,31 @@ pub struct MatrixSpec {
 
 impl MatrixSpec {
     /// CI smoke matrix: the one SLS cell the checked-in baseline
-    /// (`ci/bench_baseline.json`) gates on.
+    /// (`ci/bench_baseline.json`) gates on, plus its tiered-store twin
+    /// (new coverage — absent from older baselines, so it measures
+    /// without gating until the baseline is refreshed).
     pub fn smoke(seed: u64) -> MatrixSpec {
         MatrixSpec {
             seed,
             target: Duration::from_millis(120),
-            cells: vec![CellSpec {
-                op: OpClass::Sls,
-                batch: 32,
-                table_rows: 2048,
-                emb: 32,
-                lookups_per_row: 32,
-            }],
+            cells: vec![
+                CellSpec {
+                    op: OpClass::Sls,
+                    batch: 32,
+                    table_rows: 2048,
+                    emb: 32,
+                    lookups_per_row: 32,
+                    store: None,
+                },
+                CellSpec {
+                    op: OpClass::Sls,
+                    batch: 32,
+                    table_rows: 2048,
+                    emb: 32,
+                    lookups_per_row: 32,
+                    store: StoreCfg::new(0.1, crate::store::ColdFormat::Int8).ok(),
+                },
+            ],
         }
     }
 
@@ -307,6 +358,7 @@ impl MatrixSpec {
                 table_rows: rows,
                 emb: 32,
                 lookups_per_row: 32,
+                store: None,
             });
             cells.push(CellSpec {
                 op: OpClass::Spmm,
@@ -314,6 +366,7 @@ impl MatrixSpec {
                 table_rows: rows,
                 emb: 32,
                 lookups_per_row: 16,
+                store: None,
             });
         }
         cells.push(CellSpec {
@@ -322,6 +375,17 @@ impl MatrixSpec {
             table_rows: 65536,
             emb: 32,
             lookups_per_row: 64,
+            store: None,
+        });
+        // the big SLS cell again through the tiered store: the cost of
+        // staging + dequantize-on-miss is the delta vs the cell above
+        cells.push(CellSpec {
+            op: OpClass::Sls,
+            batch: 256,
+            table_rows: 65536,
+            emb: 32,
+            lookups_per_row: 64,
+            store: StoreCfg::new(0.1, crate::store::ColdFormat::Int8).ok(),
         });
         cells.push(CellSpec {
             op: OpClass::Kg(Semiring::PlusTimes),
@@ -329,6 +393,7 @@ impl MatrixSpec {
             table_rows: 8192,
             emb: 32,
             lookups_per_row: 1,
+            store: None,
         });
         cells.push(CellSpec {
             op: OpClass::SpAttn { block: 4 },
@@ -336,6 +401,7 @@ impl MatrixSpec {
             table_rows: 64,
             emb: 32,
             lookups_per_row: 4,
+            store: None,
         });
         cells.push(CellSpec {
             op: OpClass::Mp,
@@ -343,16 +409,18 @@ impl MatrixSpec {
             table_rows: 96,
             emb: 16,
             lookups_per_row: 6,
+            store: None,
         });
         MatrixSpec { seed, target: Duration::from_millis(150), cells }
     }
 }
 
-/// Build the deterministic workload for one cell. Returns the bindings
-/// plus the number of embedding rows one run gathers.
-fn build_workload(cell: &CellSpec, seed: u64) -> (Bindings, u64) {
+/// Build the deterministic workload for one cell. Returns the
+/// bindings, the number of embedding rows one run gathers, and — for
+/// tiered cells — the store whose counters the records report.
+fn build_workload(cell: &CellSpec, seed: u64) -> Result<(Bindings, u64, Option<EmbeddingStore>)> {
     let mut rng = Rng::new(seed);
-    match &cell.op {
+    Ok(match &cell.op {
         OpClass::Sls | OpClass::Spmm => {
             let table = crate::data::Tensor::f32(
                 vec![cell.table_rows, cell.emb],
@@ -369,9 +437,12 @@ fn build_workload(cell: &CellSpec, seed: u64) -> (Bindings, u64) {
             let n = csr.nnz() as u64;
             if cell.op == OpClass::Spmm {
                 let vals = rng.normal_vec(csr.nnz(), 1.0);
-                (Bindings::spmm(&csr.with_vals(vals), &table), n)
+                (Bindings::spmm(&csr.with_vals(vals), &table), n, None)
+            } else if cell.store.is_some() {
+                let store = EmbeddingStore::build(table, cell.store)?;
+                (Bindings::sls_from_store(&csr, &store), n, Some(store))
             } else {
-                (Bindings::sls(&csr, &table), n)
+                (Bindings::sls(&csr, &table), n, None)
             }
         }
         OpClass::Mp => {
@@ -388,7 +459,7 @@ fn build_workload(cell: &CellSpec, seed: u64) -> (Bindings, u64) {
                 .collect();
             let csr = Csr::from_rows(cell.batch, &rows);
             let n = csr.nnz() as u64;
-            (Bindings::mp(&csr, &feats), n)
+            (Bindings::mp(&csr, &feats), n, None)
         }
         OpClass::Kg(sem) => {
             let table = crate::data::Tensor::f32(
@@ -401,7 +472,7 @@ fn build_workload(cell: &CellSpec, seed: u64) -> (Bindings, u64) {
                     .collect(),
                 num_rows: cell.table_rows,
             };
-            (Bindings::kg(*sem, &fl, &table), cell.batch as u64)
+            (Bindings::kg(*sem, &fl, &table), cell.batch as u64, None)
         }
         OpClass::SpAttn { block } => {
             let keys = crate::data::Tensor::f32(
@@ -415,9 +486,9 @@ fn build_workload(cell: &CellSpec, seed: u64) -> (Bindings, u64) {
                 block: *block,
                 num_key_blocks: cell.table_rows,
             };
-            (Bindings::spattn(&bg, &keys), (cell.batch * block) as u64)
+            (Bindings::spattn(&bg, &keys), (cell.batch * block) as u64, None)
         }
-    }
+    })
 }
 
 /// Run the matrix: every cell × {interp, fast, hand-opt}, one
@@ -428,20 +499,41 @@ pub fn run_matrix(spec: &MatrixSpec) -> Result<PerfRecording> {
     let mut session = EmberSession::default();
     let mut records = Vec::new();
     for (ci, cell) in spec.cells.iter().enumerate() {
-        let (bindings, lookups) =
-            build_workload(cell, spec.seed.wrapping_add(ci as u64 * 0x9E3779B9));
+        let (bindings, lookups, store) =
+            build_workload(cell, spec.seed.wrapping_add(ci as u64 * 0x9E3779B9))?;
         let name = cell.name();
         let mut interp_mean_ns = 0.0f64;
         for backend in [Backend::Interp, Backend::Fast, Backend::HandOpt] {
             let mut exec = session.instantiate(&cell.op, backend)?;
             let mut b = bindings.clone();
             // surface compile/bind errors before timing (also warmup)
-            exec.run_env_stats(b.env_mut())?;
+            if b.is_store_backed() {
+                exec.run(&mut bindings.clone())?;
+            } else {
+                exec.run_env_stats(b.env_mut())?;
+            }
+            let st0 = store.as_ref().map(|s| s.stats()).unwrap_or_default();
             let report = Bench::new(&format!("{name}/{}", backend.name()))
                 .with_target(spec.target)
                 .run(|| {
-                    let _ = exec.run_env_stats(b.env_mut());
+                    if bindings.is_store_backed() {
+                        // staging remaps indices in place, so each
+                        // timed iteration starts from fresh bindings —
+                        // the measured run includes row staging, the
+                        // tiered store's serve-time cost
+                        let mut b2 = bindings.clone();
+                        let _ = exec.run(&mut b2);
+                    } else {
+                        let _ = exec.run_env_stats(b.env_mut());
+                    }
                 });
+            let st1 = store.as_ref().map(|s| s.stats()).unwrap_or_default();
+            let delta = StoreStats {
+                hits: st1.hits - st0.hits,
+                misses: st1.misses - st0.misses,
+                dequants: st1.dequants - st0.dequants,
+                resident_bytes: st1.resident_bytes,
+            };
             let mean_ns = report.mean_ns();
             if matches!(backend, Backend::Interp) {
                 interp_mean_ns = mean_ns;
@@ -466,6 +558,9 @@ pub fn run_matrix(spec: &MatrixSpec) -> Result<PerfRecording> {
                 min_ns: report.min.as_nanos() as f64,
                 throughput: if mean_ns > 0.0 { lookups as f64 * 1e9 / mean_ns } else { 0.0 },
                 speedup_vs_interp: speedup,
+                store_hit_pct: store.as_ref().map(|_| delta.hit_pct()),
+                store_dequants: store.as_ref().map(|_| delta.dequants),
+                store_resident_bytes: store.as_ref().map(|_| delta.resident_bytes),
             });
         }
     }
@@ -533,6 +628,9 @@ mod tests {
             min_ns: 0.9e6 / speedup,
             throughput: 1024.0 * speedup,
             speedup_vs_interp: speedup,
+            store_hit_pct: None,
+            store_dequants: None,
+            store_resident_bytes: None,
         }
     }
 
@@ -545,6 +643,13 @@ mod tests {
             records: vec![
                 sample_record("sls/b32/r2048", "interp", 1.0),
                 sample_record("sls/b32/r2048", "fast", 3.5),
+                BenchRecord {
+                    workload: "sls/b32/r2048/hot10-int8".to_string(),
+                    store_hit_pct: Some(87.5),
+                    store_dequants: Some(640),
+                    store_resident_bytes: Some(1 << 20),
+                    ..sample_record("sls/b32/r2048/hot10-int8", "fast", 2.0)
+                },
             ],
         };
         let text = rec.to_json().to_string();
@@ -598,6 +703,7 @@ mod tests {
                 table_rows: 64,
                 emb: 8,
                 lookups_per_row: 4,
+                store: None,
             }],
         };
         let rec = run_matrix(&spec).unwrap();
@@ -612,8 +718,41 @@ mod tests {
             assert_eq!(r.lookups, 16);
         }
         assert_eq!(rec.records[0].speedup_vs_interp, 1.0);
+        for r in &rec.records {
+            assert_eq!(r.store_hit_pct, None, "dense cells carry no store fields");
+        }
         // table rendering stays well-formed
         let table = rec.to_string();
         assert!(table.contains("sls/b4/r64"), "{table}");
+    }
+
+    #[test]
+    fn tiered_cell_reports_store_counters_on_every_backend() {
+        let spec = MatrixSpec {
+            seed: 7,
+            target: Duration::from_millis(3),
+            cells: vec![CellSpec {
+                op: OpClass::Sls,
+                batch: 4,
+                table_rows: 64,
+                emb: 8,
+                lookups_per_row: 4,
+                store: Some(
+                    StoreCfg::new(0.25, crate::store::ColdFormat::Int8).unwrap(),
+                ),
+            }],
+        };
+        let rec = run_matrix(&spec).unwrap();
+        assert_eq!(rec.records.len(), 3);
+        for r in &rec.records {
+            assert_eq!(r.workload, "sls/b4/r64/hot25-int8");
+            let hit = r.store_hit_pct.expect("tiered cell records hit rate");
+            assert!((0.0..=100.0).contains(&hit), "{r:?}");
+            assert!(r.store_resident_bytes.unwrap() > 0, "{r:?}");
+            assert!(r.store_dequants.is_some(), "{r:?}");
+        }
+        // the tiered resident set must undercut the dense fp32 table
+        let dense_bytes = (64 * 8 * std::mem::size_of::<f32>()) as u64;
+        assert!(rec.records[0].store_resident_bytes.unwrap() < dense_bytes);
     }
 }

@@ -97,6 +97,52 @@ fn all_backends_agree_for_every_op_class() {
     }
 }
 
+/// Acceptance pin for the tiered `EmbeddingStore`: with `hot_frac:
+/// 1.0` every row is pre-warmed into the fp32 hot tier, so running any
+/// op class through the store — on every backend, including the fused
+/// `Fast` kernels — must be byte-identical to the dense path, and the
+/// cold (quantized) tier must never be read.
+#[test]
+fn full_hot_tiered_store_matches_dense_for_every_op_class() {
+    use ember::store::{ColdFormat, EmbeddingStore, StoreCfg};
+    let mut session = EmberSession::default();
+    let cfg = StoreCfg::new(1.0, ColdFormat::Int8).unwrap();
+    for (op, bindings) in workloads(7) {
+        let memref = match &op {
+            OpClass::Mp => "h",
+            OpClass::SpAttn { .. } => "keys",
+            _ => "table",
+        };
+        let table = bindings
+            .clone()
+            .env_mut()
+            .tensors
+            .get(memref)
+            .cloned()
+            .unwrap_or_else(|| panic!("{op:?}: no `{memref}` operand"));
+        let store = EmbeddingStore::build(table, Some(cfg)).unwrap();
+        for backend in [
+            Backend::Interp,
+            Backend::Fast,
+            Backend::HandOpt,
+            Backend::DaeSim(MachineConfig::dae_tmu()),
+        ] {
+            let mut exec = session.instantiate(&op, backend).unwrap();
+            let want = exec.run(&mut bindings.clone()).unwrap().output;
+            let mut tiered = bindings.clone().with_store(&store);
+            assert!(tiered.is_store_backed(), "{op:?}: with_store must tier");
+            let got = exec.run(&mut tiered).unwrap().output;
+            assert_eq!(
+                want, got,
+                "{op:?} on {backend:?}: tiered(hot_frac=1.0) diverged from dense"
+            );
+        }
+        let st = store.stats();
+        assert_eq!(st.misses, 0, "{op:?}: a full hot tier must never read cold");
+        assert!(st.hits > 0, "{op:?}: staged reads must be counted");
+    }
+}
+
 #[test]
 fn pooled_instance_reuse_matches_fresh_runs() {
     let mut session = EmberSession::default();

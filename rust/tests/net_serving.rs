@@ -49,6 +49,7 @@ fn spawn_servers(name: &str, n: usize, replicas: usize) -> (Vec<ShardServer>, Ve
             batch: BATCH,
             seed: SEED,
             owned,
+            store: None,
         };
         servers.push(ShardServer::spawn(ep.clone(), cfg).unwrap());
         eps.push(ep);

@@ -52,6 +52,7 @@ fn spawn_traced_servers(name: &str, n: usize) -> (Vec<ShardServer>, Vec<Endpoint
             batch: BATCH,
             seed: SEED,
             owned,
+            store: None,
         };
         servers.push(ShardServer::spawn_traced(ep.clone(), cfg, TraceSink::enabled()).unwrap());
         eps.push(ep);
