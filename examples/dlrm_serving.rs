@@ -161,8 +161,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 m,
                 artifacts_dir.clone(),
                 ServeOptions {
-                    batch: BatchOptions { max_batch: batch, max_wait: Duration::from_millis(1) },
+                    batch: BatchOptions {
+                        max_batch: batch,
+                        max_wait: Duration::from_millis(1),
+                        ..Default::default()
+                    },
                     shards,
+                    ..Default::default()
                 },
             )
         })

@@ -11,6 +11,7 @@ use ember::coordinator::{
     run_closed_loop, run_open_loop, synthetic_request, synthetic_request_with, BatchOptions,
     Coordinator, DlrmModel, IndexDist, LoadReport, LoadSpec, OpenLoopSpec, Request, ServeOptions,
 };
+use ember::qos::{QosOptions, ShedPolicy};
 use ember::store::{ColdFormat, StoreCfg};
 use ember::trace::TraceSink;
 use ember::EmberSession;
@@ -47,8 +48,13 @@ fn drive(
         ServeOptions {
             // max_wait is a fallback: with clients > BATCH the closed
             // loop keeps full batches forming on the size trigger
-            batch: BatchOptions { max_batch: BATCH, max_wait: Duration::from_micros(500) },
+            batch: BatchOptions {
+                max_batch: BATCH,
+                max_wait: Duration::from_micros(500),
+                ..Default::default()
+            },
             shards,
+            ..Default::default()
         },
     );
     let spec = LoadSpec { clients, requests_per_client: per_client, ..Default::default() };
@@ -82,8 +88,13 @@ fn drive_with_sink(
         model(session),
         None,
         ServeOptions {
-            batch: BatchOptions { max_batch: BATCH, max_wait: Duration::from_micros(500) },
+            batch: BatchOptions {
+                max_batch: BATCH,
+                max_wait: Duration::from_micros(500),
+                ..Default::default()
+            },
             shards,
+            ..Default::default()
         },
         sink,
     );
@@ -120,8 +131,13 @@ fn main() {
             model(&mut session),
             None,
             ServeOptions {
-                batch: BatchOptions { max_batch: BATCH, max_wait: Duration::from_millis(1) },
+                batch: BatchOptions {
+                    max_batch: BATCH,
+                    max_wait: Duration::from_millis(1),
+                    ..Default::default()
+                },
                 shards: 4,
+                ..Default::default()
             },
         );
         let spec = LoadSpec {
@@ -167,8 +183,13 @@ fn main() {
             model(&mut session),
             None,
             ServeOptions {
-                batch: BatchOptions { max_batch: BATCH, max_wait: Duration::from_millis(1) },
+                batch: BatchOptions {
+                    max_batch: BATCH,
+                    max_wait: Duration::from_millis(1),
+                    ..Default::default()
+                },
                 shards: 4,
+                ..Default::default()
             },
         );
         let spec = OpenLoopSpec {
@@ -177,6 +198,7 @@ fn main() {
             seed: 7,
             collectors: 8,
             dist,
+            ..Default::default()
         };
         let report = run_open_loop(&coord, spec, |k| {
             synthetic_request_with(TABLES, ROWS, DENSE, LOOKUPS, dist, 0, k)
@@ -193,6 +215,75 @@ fn main() {
             report.table_row()
         );
     }
+
+    // Overload knee: open-loop arrivals swept past saturation with
+    // admission control on (queue depth 128, ewma policy, 250ms
+    // deadlines). Without QoS the post-saturation points collapse —
+    // the queue grows without bound and p99 tracks run length. With it
+    // the curve has a knee. Acceptance: overload is refused as typed
+    // sheds (errors stay 0 everywhere, sheds fire at 3x), goodput at
+    // >= 2x capacity holds within 20% of the sweep's peak, and the
+    // p99 of *admitted* requests stays bounded near the deadline.
+    println!("\noverload knee (4-shard pool, queue 128, ewma policy, 250ms deadline):");
+    println!("{:>10}  {:>7}  {}", "offered", "x-cap", LoadReport::table_header());
+    let mut curve: Vec<(f64, LoadReport)> = Vec::new();
+    for mult in [0.5, 1.0, 2.0, 3.0] {
+        let coord = Coordinator::start_sharded(
+            model(&mut session),
+            None,
+            ServeOptions {
+                batch: BatchOptions {
+                    max_batch: BATCH,
+                    max_wait: Duration::from_millis(1),
+                    ..Default::default()
+                },
+                shards: 4,
+                qos: QosOptions { queue_depth: 128, policy: ShedPolicy::Ewma },
+            },
+        );
+        let spec = OpenLoopSpec {
+            target_qps: (sharded * mult).max(1.0),
+            requests: clients * per_client / 2,
+            seed: 7,
+            collectors: 8,
+            dist: IndexDist::Uniform,
+            deadline: Some(Duration::from_millis(250)),
+        };
+        let report = run_open_loop(&coord, spec, |k| {
+            synthetic_request_with(TABLES, ROWS, DENSE, LOOKUPS, IndexDist::Uniform, 0, k)
+        })
+        .expect("overload sweep failed");
+        let stats = coord.shutdown();
+        assert_eq!(report.errors, 0, "{mult}x offered: overload must shed, never error");
+        assert_eq!(stats.errors, 0, "{mult}x offered: server-side errors under overload");
+        println!(
+            "{:>10.0}  {:>6.1}x  {}",
+            report.offered_qps.unwrap_or(0.0),
+            mult,
+            report.table_row()
+        );
+        curve.push((mult, report));
+    }
+    let peak = curve.iter().map(|(_, r)| r.throughput_rps()).fold(0.0f64, f64::max);
+    for (mult, r) in &curve {
+        if *mult >= 2.0 {
+            assert!(
+                r.throughput_rps() >= 0.8 * peak,
+                "{mult}x offered: goodput {:.0} req/s collapsed below 80% of peak {peak:.0}",
+                r.throughput_rps()
+            );
+            // admitted requests still finish near the SLO: the 250ms
+            // deadline plus service-time headroom for a request that
+            // passed its batch-formation check just before expiry
+            assert!(
+                r.p99() <= Duration::from_millis(400),
+                "{mult}x offered: admitted p99 {:?} is unbounded-queue behavior",
+                r.p99()
+            );
+        }
+    }
+    let heavy = &curve.last().expect("sweep is non-empty").1;
+    assert!(heavy.shed > 0, "3x offered load must shed at the admission edge");
 
     // Tiered embedding store under skew: the same zipf(1.1) request
     // stream scored by the dense fp32 model and by a model keeping

@@ -1,6 +1,14 @@
 //! Dynamic batcher: groups requests into model-sized batches under a
 //! latency bound (classic serving tradeoff). Pure state machine —
 //! thread plumbing lives in `server.rs` so this is unit-testable.
+//!
+//! Flush triggers, in priority order:
+//! 1. size — `max_batch` requests are pending;
+//! 2. lookup budget — the accumulated lookup count would exceed
+//!    `max_lookups`, so a few fat multi-table requests can't starve a
+//!    batch of small ones (the forming batch closes *before* the fat
+//!    request joins; a single request over budget forms its own batch);
+//! 3. time — the oldest pending request has waited `max_wait`.
 
 use super::Request;
 use std::time::{Duration, Instant};
@@ -11,11 +19,39 @@ pub struct BatchOptions {
     pub max_batch: usize,
     /// Flush a non-empty batch this long after its first request.
     pub max_wait: Duration,
+    /// Flush before the accumulated lookup count (across all tables of
+    /// all pending requests) exceeds this budget. `usize::MAX`
+    /// (default) disables the size-aware trigger.
+    pub max_lookups: usize,
 }
 
 impl Default for BatchOptions {
     fn default() -> Self {
-        BatchOptions { max_batch: 64, max_wait: Duration::from_millis(2) }
+        BatchOptions {
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+            max_lookups: usize::MAX,
+        }
+    }
+}
+
+/// A flushed batch. `formed_at` is the arrival time of its oldest
+/// request — the authoritative start of the `batch_form` span and of
+/// queue-delay accounting (taken from the batch itself, not sampled
+/// from the batcher around the mutating call).
+#[derive(Debug)]
+pub struct Batch {
+    pub reqs: Vec<Request>,
+    pub formed_at: Instant,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.reqs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.reqs.is_empty()
     }
 }
 
@@ -23,9 +59,15 @@ impl Default for BatchOptions {
 pub struct Batcher {
     opts: BatchOptions,
     pending: Vec<Request>,
+    /// Lookup count accumulated across `pending`.
+    lookups: usize,
     oldest: Option<Instant>,
     pub batches_emitted: u64,
     pub requests_seen: u64,
+}
+
+fn lookup_cost(req: &Request) -> usize {
+    req.lookups.iter().map(|t| t.len()).sum()
 }
 
 impl Batcher {
@@ -33,6 +75,7 @@ impl Batcher {
         Batcher {
             opts,
             pending: Vec::new(),
+            lookups: 0,
             oldest: None,
             batches_emitted: 0,
             requests_seen: 0,
@@ -43,24 +86,49 @@ impl Batcher {
         self.pending.len()
     }
 
-    /// Add a request; returns a full batch if this push filled one.
-    pub fn push(&mut self, req: Request, now: Instant) -> Option<Vec<Request>> {
+    /// Lookup count accumulated across the pending requests.
+    pub fn pending_lookups(&self) -> usize {
+        self.lookups
+    }
+
+    /// Add a request; returns a ready batch if one formed.
+    ///
+    /// When the new request would blow the lookup budget of a non-empty
+    /// forming batch, the forming batch is returned and the new request
+    /// starts the next one — so the returned batch may not contain the
+    /// request just pushed. Callers tracking per-request state must
+    /// consume exactly `batch.len()` entries, not "everything so far".
+    pub fn push(&mut self, req: Request, now: Instant) -> Option<Batch> {
+        let cost = lookup_cost(&req);
+        let pre = if !self.pending.is_empty()
+            && self.lookups.saturating_add(cost) > self.opts.max_lookups
+        {
+            self.flush()
+        } else {
+            None
+        };
         if self.pending.is_empty() {
             self.oldest = Some(now);
         }
         self.pending.push(req);
+        self.lookups += cost;
         self.requests_seen += 1;
-        if self.pending.len() >= self.opts.max_batch {
-            return Some(self.flush());
+        if pre.is_some() {
+            // the over-budget closure above; the fresh batch (holding
+            // only the new request) flushes on its own trigger later
+            return pre;
+        }
+        if self.pending.len() >= self.opts.max_batch || self.lookups >= self.opts.max_lookups {
+            return self.flush();
         }
         None
     }
 
     /// Time-based flush check.
-    pub fn poll(&mut self, now: Instant) -> Option<Vec<Request>> {
+    pub fn poll(&mut self, now: Instant) -> Option<Batch> {
         match self.oldest {
             Some(t0) if !self.pending.is_empty() && now.duration_since(t0) >= self.opts.max_wait => {
-                Some(self.flush())
+                self.flush()
             }
             _ => None,
         }
@@ -71,17 +139,22 @@ impl Batcher {
         self.oldest.map(|t0| t0 + self.opts.max_wait)
     }
 
-    /// Arrival time of the oldest pending request — the start of the
-    /// forming batch (`None` when empty). `flush` resets it, so callers
-    /// tracing a `batch_form` span must read it before flushing.
+    /// Arrival time of the oldest pending request (`None` when empty).
     pub fn oldest(&self) -> Option<Instant> {
         self.oldest
     }
 
-    pub fn flush(&mut self) -> Vec<Request> {
-        self.oldest = None;
+    /// Drain whatever is pending (shutdown path). `None` when empty.
+    pub fn flush(&mut self) -> Option<Batch> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        // `oldest` is always Some while pending is non-empty; the
+        // fallback is unreachable but keeps this panic-free
+        let formed_at = self.oldest.take().unwrap_or_else(Instant::now);
+        self.lookups = 0;
         self.batches_emitted += 1;
-        std::mem::take(&mut self.pending)
+        Some(Batch { reqs: std::mem::take(&mut self.pending), formed_at })
     }
 }
 
@@ -93,9 +166,18 @@ mod tests {
         Request { id, lookups: vec![vec![1]], dense: vec![0.0] }
     }
 
+    /// A request with `n` lookups in one table.
+    fn fat(id: u64, n: usize) -> Request {
+        Request { id, lookups: vec![(0..n as i32).collect()], dense: vec![0.0] }
+    }
+
     #[test]
     fn flushes_on_size() {
-        let mut b = Batcher::new(BatchOptions { max_batch: 3, max_wait: Duration::from_secs(10) });
+        let mut b = Batcher::new(BatchOptions {
+            max_batch: 3,
+            max_wait: Duration::from_secs(10),
+            ..Default::default()
+        });
         let t = Instant::now();
         assert!(b.push(req(0), t).is_none());
         assert!(b.push(req(1), t).is_none());
@@ -107,7 +189,11 @@ mod tests {
 
     #[test]
     fn flushes_on_deadline() {
-        let mut b = Batcher::new(BatchOptions { max_batch: 100, max_wait: Duration::from_millis(5) });
+        let mut b = Batcher::new(BatchOptions {
+            max_batch: 100,
+            max_wait: Duration::from_millis(5),
+            ..Default::default()
+        });
         let t0 = Instant::now();
         b.push(req(0), t0);
         assert!(b.poll(t0 + Duration::from_millis(1)).is_none());
@@ -116,17 +202,51 @@ mod tests {
     }
 
     #[test]
+    fn flushes_on_lookup_budget_before_fat_request_joins() {
+        let mut b = Batcher::new(BatchOptions {
+            max_batch: 100,
+            max_wait: Duration::from_secs(10),
+            max_lookups: 8,
+        });
+        let t = Instant::now();
+        assert!(b.push(fat(0, 3), t).is_none());
+        assert!(b.push(fat(1, 3), t).is_none());
+        // 6 + 4 > 8: the forming batch closes without the fat request
+        let batch = b.push(fat(2, 4), t).expect("budget flush");
+        assert_eq!(batch.reqs.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(b.pending(), 1, "the fat request starts the next batch");
+        assert_eq!(b.pending_lookups(), 4);
+    }
+
+    #[test]
+    fn single_request_over_budget_forms_its_own_batch() {
+        let mut b = Batcher::new(BatchOptions {
+            max_batch: 100,
+            max_wait: Duration::from_secs(10),
+            max_lookups: 8,
+        });
+        let t = Instant::now();
+        let batch = b.push(fat(0, 20), t).expect("immediate singleton flush");
+        assert_eq!(batch.len(), 1);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
     fn every_request_in_exactly_one_batch() {
-        let mut b = Batcher::new(BatchOptions { max_batch: 4, max_wait: Duration::from_millis(1) });
+        let mut b = Batcher::new(BatchOptions {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        });
         let t0 = Instant::now();
         let mut seen = Vec::new();
         for i in 0..10 {
             if let Some(batch) = b.push(req(i), t0) {
-                seen.extend(batch.iter().map(|r| r.id));
+                seen.extend(batch.reqs.iter().map(|r| r.id));
             }
         }
         if let Some(batch) = b.poll(t0 + Duration::from_millis(2)) {
-            seen.extend(batch.iter().map(|r| r.id));
+            seen.extend(batch.reqs.iter().map(|r| r.id));
         }
         seen.sort_unstable();
         assert_eq!(seen, (0..10).collect::<Vec<_>>());
@@ -134,7 +254,11 @@ mod tests {
 
     #[test]
     fn oldest_tracks_first_arrival_and_resets_on_flush() {
-        let mut b = Batcher::new(BatchOptions { max_batch: 3, max_wait: Duration::from_secs(10) });
+        let mut b = Batcher::new(BatchOptions {
+            max_batch: 3,
+            max_wait: Duration::from_secs(10),
+            ..Default::default()
+        });
         assert!(b.oldest().is_none());
         let t0 = Instant::now();
         b.push(req(0), t0);
@@ -144,10 +268,35 @@ mod tests {
         assert!(b.oldest().is_none());
     }
 
+    /// Regression (formed-at bookkeeping): every flushed batch carries
+    /// the arrival time of *its own* oldest request — including the
+    /// batch formed right after a flush, which used to inherit a stale
+    /// or `Instant::now()` timestamp from the caller sampling
+    /// `oldest()` around the mutating call.
+    #[test]
+    fn formed_at_is_the_batch_own_oldest_arrival() {
+        let mut b = Batcher::new(BatchOptions {
+            max_batch: 2,
+            max_wait: Duration::from_secs(10),
+            ..Default::default()
+        });
+        let t0 = Instant::now();
+        let t1 = t0 + Duration::from_millis(3);
+        let t2 = t0 + Duration::from_millis(9);
+        b.push(req(0), t0);
+        let first = b.push(req(1), t1).expect("full");
+        assert_eq!(first.formed_at, t0);
+        // next batch starts fresh: its formed_at is t2, not t0 or "now"
+        b.push(req(2), t2);
+        let second = b.flush().expect("pending");
+        assert_eq!(second.formed_at, t2);
+    }
+
     #[test]
     fn empty_batcher_never_flushes_on_poll() {
         let mut b = Batcher::new(BatchOptions::default());
         assert!(b.poll(Instant::now() + Duration::from_secs(1)).is_none());
         assert!(b.deadline().is_none());
+        assert!(b.flush().is_none());
     }
 }

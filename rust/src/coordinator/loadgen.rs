@@ -131,6 +131,10 @@ pub struct LoadSpec {
     /// request closure is still responsible for actually using it
     /// (via [`synthetic_request_with`]).
     pub dist: IndexDist,
+    /// Per-request latency budget: each submit carries an absolute
+    /// deadline of `now + deadline`, which the coordinator's QoS
+    /// policy may enforce. `None` = no deadlines.
+    pub deadline: Option<Duration>,
 }
 
 impl Default for LoadSpec {
@@ -140,6 +144,7 @@ impl Default for LoadSpec {
             requests_per_client: 256,
             target_qps: None,
             dist: IndexDist::Uniform,
+            deadline: None,
         }
     }
 }
@@ -160,6 +165,8 @@ pub struct OpenLoopSpec {
     /// Index distribution, recorded into the report (see
     /// [`LoadSpec::dist`]).
     pub dist: IndexDist,
+    /// Per-request latency budget (see [`LoadSpec::deadline`]).
+    pub deadline: Option<Duration>,
 }
 
 impl Default for OpenLoopSpec {
@@ -170,6 +177,7 @@ impl Default for OpenLoopSpec {
             seed: 1,
             collectors: 4,
             dist: IndexDist::Uniform,
+            deadline: None,
         }
     }
 }
@@ -180,6 +188,10 @@ impl Default for OpenLoopSpec {
 pub struct LoadReport {
     pub sent: u64,
     pub ok: u64,
+    /// Requests the server refused or abandoned via admission control
+    /// (`EmberError::Overloaded`) — deliberate QoS behavior under
+    /// overload, counted apart from real failures.
+    pub shed: u64,
     pub errors: u64,
     pub wall: Duration,
     /// End-to-end latency measured at the client (submit → response).
@@ -213,16 +225,18 @@ impl LoadReport {
     /// Header matching [`LoadReport::table_row`]'s columns (the caller
     /// prepends its own `target` column to both).
     pub fn table_header() -> String {
-        format!("{:>10}  {:>9}  {:>9}  {:>9}", "achieved", "p50", "p95", "p99")
+        format!("{:>10}  {:>7}  {:>9}  {:>9}  {:>9}", "achieved", "shed", "p50", "p95", "p99")
     }
 
     /// Shared row tail for latency/throughput tables
-    /// (`achieved  p50  p95  p99`), so the CLI, example and bench
-    /// render the sweep identically.
+    /// (`achieved  shed  p50  p95  p99`), so the CLI, example and
+    /// bench render the sweep identically. `achieved` counts only
+    /// served requests — goodput, not offered load.
     pub fn table_row(&self) -> String {
         format!(
-            "{:>10.0}  {:>9.2?}  {:>9.2?}  {:>9.2?}",
+            "{:>10.0}  {:>7}  {:>9.2?}  {:>9.2?}  {:>9.2?}",
             self.throughput_rps(),
+            self.shed,
             self.p50(),
             self.p95(),
             self.p99()
@@ -243,7 +257,7 @@ where
         .map(|q| Duration::from_secs_f64(clients as f64 / q));
     let make_req = &make_req;
     let t0 = Instant::now();
-    let mut results: Vec<(u64, u64, LatencyHist)> = Vec::with_capacity(clients);
+    let mut results: Vec<(u64, u64, u64, LatencyHist)> = Vec::with_capacity(clients);
     {
         let mut spawn_err = None;
         let mut panicked = 0usize;
@@ -259,7 +273,7 @@ where
                 };
                 handles.push(s.spawn(move || {
                     let mut hist = LatencyHist::default();
-                    let (mut ok, mut errors) = (0u64, 0u64);
+                    let (mut ok, mut shed, mut errors) = (0u64, 0u64, 0u64);
                     let mut next = Instant::now();
                     for k in 0..spec.requests_per_client {
                         if let Some(p) = pace {
@@ -270,15 +284,19 @@ where
                             next += p;
                         }
                         let t = Instant::now();
-                        match client.infer(make_req(c, k)) {
+                        let deadline = spec.deadline.map(|d| t + d);
+                        match client.infer_with_deadline(make_req(c, k), deadline) {
                             Ok(_) => {
                                 hist.record(t.elapsed());
                                 ok += 1;
                             }
+                            // admission/deadline sheds are deliberate QoS
+                            // behavior, not failures
+                            Err(EmberError::Overloaded(_)) => shed += 1,
                             Err(_) => errors += 1,
                         }
                     }
-                    (ok, errors, hist)
+                    (ok, shed, errors, hist)
                 }));
             }
             for h in handles {
@@ -305,10 +323,11 @@ where
         offered_qps: spec.target_qps.filter(|q| *q > 0.0),
         ..Default::default()
     };
-    for (ok, errors, hist) in results {
+    for (ok, shed, errors, hist) in results {
         report.ok += ok;
+        report.shed += shed;
         report.errors += errors;
-        report.sent += ok + errors;
+        report.sent += ok + shed + errors;
         report.hist.merge(&hist);
     }
     Ok(report)
@@ -335,15 +354,16 @@ where
     let rx = Mutex::new(rx);
     let collectors = spec.collectors.max(1);
     let t0 = Instant::now();
+    let mut submit_shed = 0u64;
     let mut submit_errors = 0u64;
-    let mut results: Vec<(u64, u64, LatencyHist)> = Vec::with_capacity(collectors);
+    let mut results: Vec<(u64, u64, u64, LatencyHist)> = Vec::with_capacity(collectors);
     let mut panicked = 0usize;
     std::thread::scope(|s| {
         let handles: Vec<_> = (0..collectors)
             .map(|_| {
                 s.spawn(|| {
                     let mut hist = LatencyHist::default();
-                    let (mut ok, mut errors) = (0u64, 0u64);
+                    let (mut ok, mut shed, mut errors) = (0u64, 0u64, 0u64);
                     loop {
                         // hold the lock only for the queue pop, not the
                         // response wait — collectors drain concurrently
@@ -357,10 +377,13 @@ where
                                 hist.record(t.elapsed());
                                 ok += 1;
                             }
+                            // admitted, then shed at batch formation —
+                            // deliberate QoS behavior, not a failure
+                            Ok(Err(EmberError::Overloaded(_))) => shed += 1,
                             _ => errors += 1,
                         }
                     }
-                    (ok, errors, hist)
+                    (ok, shed, errors, hist)
                 })
             })
             .collect();
@@ -376,10 +399,13 @@ where
             if next > now {
                 std::thread::sleep(next - now);
             }
-            match client.submit(make_req(k)) {
+            let submit_t = Instant::now();
+            let deadline = spec.deadline.map(|d| submit_t + d);
+            match client.submit_with_deadline(make_req(k), deadline) {
                 Ok(resp_rx) => {
-                    let _ = tx.send((Instant::now(), resp_rx));
+                    let _ = tx.send((submit_t, resp_rx));
                 }
+                Err(EmberError::Overloaded(_)) => submit_shed += 1,
                 Err(_) => submit_errors += 1,
             }
         }
@@ -399,14 +425,16 @@ where
         wall: t0.elapsed(),
         dist: spec.dist,
         offered_qps: Some(spec.target_qps),
+        shed: submit_shed,
         errors: submit_errors,
-        sent: submit_errors,
+        sent: submit_shed + submit_errors,
         ..Default::default()
     };
-    for (ok, errors, hist) in results {
+    for (ok, shed, errors, hist) in results {
         report.ok += ok;
+        report.shed += shed;
         report.errors += errors;
-        report.sent += ok + errors;
+        report.sent += ok + shed + errors;
         report.hist.merge(&hist);
     }
     Ok(report)
@@ -449,8 +477,10 @@ mod tests {
                 batch: BatchOptions {
                     max_batch: 4,
                     max_wait: Duration::from_millis(1),
+                    ..Default::default()
                 },
                 shards: 2,
+                ..Default::default()
             },
         );
         let spec = LoadSpec { clients: 3, requests_per_client: 10, ..Default::default() };
@@ -472,7 +502,7 @@ mod tests {
         let coord = Coordinator::start(
             model,
             None,
-            BatchOptions { max_batch: 4, max_wait: Duration::from_micros(200) },
+            BatchOptions { max_batch: 4, max_wait: Duration::from_micros(200), ..Default::default() },
         );
         // 20 requests at 200 qps => at least ~95ms of pacing
         let spec = LoadSpec {
@@ -543,7 +573,7 @@ mod tests {
         let coord = Coordinator::start(
             model,
             None,
-            BatchOptions { max_batch: 4, max_wait: Duration::from_millis(1) },
+            BatchOptions { max_batch: 4, max_wait: Duration::from_millis(1), ..Default::default() },
         );
         let spec = OpenLoopSpec {
             target_qps: 5000.0,
@@ -560,6 +590,45 @@ mod tests {
         assert_eq!(report.offered_qps, Some(5000.0));
         let stats = coord.shutdown();
         assert_eq!(stats.requests, 24);
+    }
+
+    /// `Overloaded` responses land in `shed`, never `errors`: every
+    /// request carries a 1ms deadline but the batch timer is 20ms, so
+    /// under the `deadline` policy all of them are shed at batch
+    /// formation and the report must say exactly that.
+    #[test]
+    fn closed_loop_counts_sheds_separately_from_errors() {
+        use crate::qos::{QosOptions, ShedPolicy};
+        let model = DlrmModel::new(4, 64, 8, 1, 6, 3, 16, 1).unwrap();
+        let shape = DlrmModel::new(4, 64, 8, 1, 6, 3, 16, 1).unwrap();
+        let coord = Coordinator::start_sharded(
+            model,
+            None,
+            ServeOptions {
+                batch: BatchOptions {
+                    max_batch: 64,
+                    max_wait: Duration::from_millis(20),
+                    ..Default::default()
+                },
+                shards: 1,
+                qos: QosOptions { queue_depth: 0, policy: ShedPolicy::Deadline },
+            },
+        );
+        let spec = LoadSpec {
+            clients: 2,
+            requests_per_client: 3,
+            deadline: Some(Duration::from_millis(1)),
+            ..Default::default()
+        };
+        let report = run_closed_loop(&coord, spec, |c, k| make_req(&shape, c, k)).unwrap();
+        assert_eq!(report.sent, 6);
+        assert_eq!(report.shed, 6, "every deadline expires before the 20ms flush");
+        assert_eq!(report.ok, 0);
+        assert_eq!(report.errors, 0, "sheds are not failures");
+        assert_eq!(report.hist.count(), 0);
+        let stats = coord.shutdown();
+        assert_eq!(stats.shed_batch, 6);
+        assert_eq!(stats.errors, 0);
     }
 
     #[test]

@@ -27,7 +27,7 @@ use crate::store::{EmbeddingStore, StoreCfg, StoreStats};
 use crate::util::rng::Rng;
 use std::sync::Arc;
 
-pub use batcher::{BatchOptions, Batcher};
+pub use batcher::{Batch, BatchOptions, Batcher};
 pub use loadgen::{
     run_closed_loop, run_open_loop, synthetic_request, synthetic_request_with, IndexDist,
     LoadReport, LoadSpec, OpenLoopSpec,
@@ -55,8 +55,18 @@ pub struct EmbedOutcome {
 /// [`crate::net::NetFrontend`] fanning out to shard servers. The
 /// coordinator stays agnostic — scoring and batching are identical
 /// either way.
+///
+/// `deadline` is the batch's collective deadline (`None` = no
+/// deadline): a stage may stop early and report the unserved tables as
+/// `degraded` instead of finishing work nobody will use. In-process
+/// stages typically ignore it; the net frontend forwards the remaining
+/// budget to shard servers.
 pub trait EmbedStage: Send {
-    fn embed_stage(&mut self, reqs: &Arc<Vec<Request>>) -> Result<EmbedOutcome>;
+    fn embed_stage(
+        &mut self,
+        reqs: &Arc<Vec<Request>>,
+        deadline: Option<std::time::Instant>,
+    ) -> Result<EmbedOutcome>;
 }
 
 /// Deterministic embedding tables shared by the single-process model

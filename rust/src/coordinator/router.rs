@@ -87,7 +87,7 @@ mod tests {
         Coordinator::start(
             DlrmModel::new(4, 64, 8, 1, 6, 3, 16, 1).unwrap(),
             None,
-            BatchOptions { max_batch: 2, max_wait: Duration::from_millis(1) },
+            BatchOptions { max_batch: 2, max_wait: Duration::from_millis(1), ..Default::default() },
         )
     }
 

@@ -3,12 +3,19 @@
 //! the batcher. The embedding stage optionally fans out to a
 //! table-sharded [`ShardPool`]; callers get responses over per-request
 //! channels and latency histograms accumulate into [`ServeStats`].
+//!
+//! Overload path: every submit passes the [`crate::qos`] admission
+//! queue (bounded depth + shed policy) before entering the channel;
+//! per-request deadlines ride the envelope so expired work is shed
+//! again at batch formation and propagated to the embedding stage,
+//! which can stop wasting shard round-trips on a dead batch.
 
-use super::batcher::{BatchOptions, Batcher};
+use super::batcher::{Batch, BatchOptions, Batcher};
 use super::shard::ShardPool;
 use super::stats::ServeStats;
 use super::{DlrmModel, EmbedOutcome, EmbedStage, Request, Response};
 use crate::error::{EmberError, Result};
+use crate::qos::{AdmissionQueue, Controller, QosOptions, ShedPolicy};
 use crate::runtime::Runtime;
 use crate::trace::{current_tid, TraceEvent, TraceSink};
 use std::path::PathBuf;
@@ -17,10 +24,16 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-/// (request, submit time, response channel)
-type Envelope = (Request, Instant, Sender<Result<Response>>);
+/// (request, submit time, deadline, response channel)
+type Envelope = (Request, Instant, Option<Instant>, Sender<Result<Response>>);
 
-/// Full serving configuration: batching + embedding-stage parallelism.
+/// Per-request bookkeeping the worker keeps alongside the batcher:
+/// submit time, deadline, response channel — index-aligned with the
+/// batcher's pending queue.
+type Waiting = (Instant, Option<Instant>, Sender<Result<Response>>);
+
+/// Full serving configuration: batching + embedding-stage parallelism
+/// + admission control.
 #[derive(Debug, Clone, Copy)]
 pub struct ServeOptions {
     pub batch: BatchOptions,
@@ -28,17 +41,21 @@ pub struct ServeOptions {
     /// coordinator thread (the classic single-worker path); `n > 1`
     /// spawns a [`ShardPool`] partitioning tables across `n` threads.
     pub shards: usize,
+    /// Admission control / overload shedding. The default (unbounded
+    /// queue, policy `none`) reproduces the pre-QoS behavior exactly.
+    pub qos: QosOptions,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { batch: BatchOptions::default(), shards: 1 }
+        ServeOptions { batch: BatchOptions::default(), shards: 1, qos: QosOptions::default() }
     }
 }
 
 /// A running DLRM coordinator.
 pub struct Coordinator {
     tx: Option<Sender<Envelope>>,
+    ctrl: Arc<Controller>,
     handle: Option<JoinHandle<ServeStats>>,
     trace: TraceSink,
 }
@@ -46,33 +63,54 @@ pub struct Coordinator {
 /// Cloneable submit handle. Client threads each take their own handle
 /// (a cheap `Sender` clone), so load generators never have to borrow
 /// the `Coordinator` itself — whose `shutdown(self)` needs sole
-/// ownership — across threads.
+/// ownership — across threads. Every submit passes admission control;
+/// rejected requests get [`EmberError::Overloaded`] immediately, with
+/// no envelope ever entering the channel.
 #[derive(Clone)]
 pub struct CoordinatorClient {
-    tx: Sender<Envelope>,
+    queue: AdmissionQueue<Envelope>,
     trace: TraceSink,
 }
 
 impl CoordinatorClient {
     /// Async submit: returns the response channel.
     pub fn submit(&self, req: Request) -> Result<Receiver<Result<Response>>> {
+        self.submit_with_deadline(req, None)
+    }
+
+    /// Async submit with an absolute deadline. The deadline rides with
+    /// the request: admission may refuse it outright (queue full /
+    /// unmeetable), batch formation sheds it if it expires while
+    /// queued, and the embedding stage forwards the remaining budget to
+    /// shard servers. A response delivered after the deadline still
+    /// arrives but is counted in `ServeStats::deadline_missed`.
+    pub fn submit_with_deadline(
+        &self,
+        req: Request,
+        deadline: Option<Instant>,
+    ) -> Result<Receiver<Result<Response>>> {
         let (rtx, rrx) = mpsc::channel();
         let t0 = Instant::now();
+        let id = req.id;
+        self.queue.try_send((req, t0, deadline, rtx), t0, deadline)?;
         if self.trace.is_enabled() {
             // flow arrow from the submitting thread to the worker's
-            // dequeue, correlated by request id
+            // dequeue, correlated by request id (recorded only for
+            // admitted requests — shed ones never reach the worker)
             let tid = self.trace.name_current_thread("client");
-            self.trace.record(TraceEvent::flow_start("req", req.id, tid, self.trace.ts_of(t0)));
+            self.trace.record(TraceEvent::flow_start("req", id, tid, self.trace.ts_of(t0)));
         }
-        self.tx
-            .send((req, t0, rtx))
-            .map_err(|_| EmberError::Runtime("coordinator worker gone".into()))?;
         Ok(rrx)
     }
 
     /// Sync convenience: submit + wait.
     pub fn infer(&self, req: Request) -> Result<Response> {
-        let rx = self.submit(req)?;
+        self.infer_with_deadline(req, None)
+    }
+
+    /// Sync submit-with-deadline + wait.
+    pub fn infer_with_deadline(&self, req: Request, deadline: Option<Instant>) -> Result<Response> {
+        let rx = self.submit_with_deadline(req, deadline)?;
         rx.recv()
             .map_err(|_| EmberError::Runtime("worker dropped response".into()))?
     }
@@ -84,7 +122,11 @@ impl Coordinator {
     /// worker constructs its own `Runtime` from `artifacts_dir`; `None`
     /// uses the pure-Rust MLP (useful where PJRT is unavailable).
     pub fn start(model: DlrmModel, artifacts_dir: Option<PathBuf>, opts: BatchOptions) -> Self {
-        Self::start_sharded(model, artifacts_dir, ServeOptions { batch: opts, shards: 1 })
+        Self::start_sharded(
+            model,
+            artifacts_dir,
+            ServeOptions { batch: opts, ..Default::default() },
+        )
     }
 
     /// Spawn a coordinator whose embedding stage is sharded by table
@@ -111,8 +153,10 @@ impl Coordinator {
         trace: TraceSink,
     ) -> Self {
         opts.batch.max_batch = opts.batch.max_batch.clamp(1, model.batch.max(1));
+        let ctrl = Arc::new(Controller::new(opts.qos));
         let (tx, rx) = mpsc::channel::<Envelope>();
         let worker_trace = trace.clone();
+        let worker_ctrl = ctrl.clone();
         let handle = std::thread::spawn(move || {
             let runtime = artifacts_dir.and_then(|d| Runtime::new(d).ok());
             let embedder: Option<Box<dyn EmbedStage>> = if opts.shards > 1 {
@@ -120,9 +164,9 @@ impl Coordinator {
             } else {
                 None
             };
-            worker(model, embedder, runtime, opts.batch, rx, worker_trace)
+            worker(model, embedder, runtime, opts.batch, rx, worker_ctrl, worker_trace)
         });
-        Coordinator { tx: Some(tx), handle: Some(handle), trace }
+        Coordinator { tx: Some(tx), ctrl, handle: Some(handle), trace }
     }
 
     /// Spawn a coordinator whose embedding stage is delegated to a
@@ -156,23 +200,26 @@ impl Coordinator {
         trace: TraceSink,
     ) -> Self {
         opts.batch.max_batch = opts.batch.max_batch.clamp(1, model.batch.max(1));
+        let ctrl = Arc::new(Controller::new(opts.qos));
         let (tx, rx) = mpsc::channel::<Envelope>();
         let worker_trace = trace.clone();
+        let worker_ctrl = ctrl.clone();
         let handle = std::thread::spawn(move || {
             let runtime = artifacts_dir.and_then(|d| Runtime::new(d).ok());
-            worker(model, Some(embedder), runtime, opts.batch, rx, worker_trace)
+            worker(model, Some(embedder), runtime, opts.batch, rx, worker_ctrl, worker_trace)
         });
-        Coordinator { tx: Some(tx), handle: Some(handle), trace }
+        Coordinator { tx: Some(tx), ctrl, handle: Some(handle), trace }
     }
 
     /// A cloneable submit handle for this coordinator.
     pub fn client(&self) -> Result<CoordinatorClient> {
+        let tx = self
+            .tx
+            .as_ref()
+            .ok_or_else(|| EmberError::Runtime("coordinator stopped".into()))?
+            .clone();
         Ok(CoordinatorClient {
-            tx: self
-                .tx
-                .as_ref()
-                .ok_or_else(|| EmberError::Runtime("coordinator stopped".into()))?
-                .clone(),
+            queue: AdmissionQueue::new(tx, self.ctrl.clone()),
             trace: self.trace.clone(),
         })
     }
@@ -185,6 +232,11 @@ impl Coordinator {
     /// Sync convenience: submit + wait.
     pub fn infer(&self, req: Request) -> Result<Response> {
         self.client()?.infer(req)
+    }
+
+    /// Live QoS counters (queue depth, sheds, queue-delay EWMA).
+    pub fn qos_counters(&self) -> crate::qos::QosCounters {
+        self.ctrl.counters()
     }
 
     /// Stop the worker and return its stats.
@@ -210,16 +262,19 @@ impl Drop for Coordinator {
 /// per-request responses + latency recording.
 ///
 /// `formed_at` is when the batch's oldest request arrived — the start
-/// of the `batch_form` span when tracing.
+/// of the `batch_form` span when tracing. `deadline` is the batch's
+/// collective deadline (see [`batch_deadline`]), forwarded to the
+/// embedding stage.
 #[allow(clippy::too_many_arguments)]
 fn run_batch(
     model: &DlrmModel,
     embedder: &mut Option<Box<dyn EmbedStage>>,
     runtime: &mut Option<Runtime>,
     batch: Vec<Request>,
-    senders: Vec<(Instant, Sender<Result<Response>>)>,
+    senders: Vec<Waiting>,
     stats: &mut ServeStats,
     formed_at: Instant,
+    deadline: Option<Instant>,
     trace: &TraceSink,
 ) {
     stats.batches += 1;
@@ -235,7 +290,7 @@ fn run_batch(
     let batch = Arc::new(batch);
     let embed_t = trace.now_us();
     let outcome = match embedder.as_deref_mut() {
-        Some(stage) => stage.embed_stage(&batch),
+        Some(stage) => stage.embed_stage(&batch, deadline),
         None => model.embed(&batch).map(|e| EmbedOutcome { embeddings: e, degraded: 0 }),
     };
     if trace.is_enabled() {
@@ -279,8 +334,14 @@ fn run_batch(
     }
     match result {
         Ok(responses) => {
-            for (resp, (t0, tx)) in responses.into_iter().zip(senders) {
-                stats.hist.record(t0.elapsed());
+            let done = Instant::now();
+            for (resp, (t0, dl, tx)) in responses.into_iter().zip(senders) {
+                stats.hist.record(done.duration_since(t0));
+                if dl.is_some_and(|d| done > d) {
+                    // served, but too late to be useful — delivered
+                    // anyway (the caller may still want it), counted
+                    stats.deadline_missed += 1;
+                }
                 if trace.is_enabled() {
                     trace.record(TraceEvent::async_end(
                         "request",
@@ -296,7 +357,7 @@ fn run_batch(
         Err(e) => {
             stats.errors += 1;
             let msg = e.to_string();
-            for (i, (t0, tx)) in senders.into_iter().enumerate() {
+            for (i, (t0, _dl, tx)) in senders.into_iter().enumerate() {
                 stats.hist.record(t0.elapsed());
                 // record() is a no-op on a disabled sink, no guard needed
                 if let Some(r) = batch.get(i) {
@@ -314,18 +375,110 @@ fn run_batch(
     }
 }
 
+/// A batch's collective deadline: the latest member deadline, or
+/// `None` if any member has no deadline (the batch must then run
+/// unconditionally — shedding it would strand an un-deadlined
+/// request).
+fn batch_deadline(senders: &[Waiting]) -> Option<Instant> {
+    let mut latest: Option<Instant> = None;
+    for (_, dl, _) in senders {
+        match dl {
+            None => return None,
+            Some(d) => latest = Some(latest.map_or(*d, |l| l.max(*d))),
+        }
+    }
+    latest
+}
+
+/// Take a flushed batch through deadline shedding and into
+/// [`run_batch`]. Consumes exactly `batch.len()` entries from the
+/// front of `waiting` — the batcher may flush a batch that excludes
+/// the most recently pushed request (lookup-budget closure), so "take
+/// everything" would desync senders from requests.
+#[allow(clippy::too_many_arguments)]
+fn dispatch_batch(
+    model: &DlrmModel,
+    embedder: &mut Option<Box<dyn EmbedStage>>,
+    runtime: &mut Option<Runtime>,
+    batch: Batch,
+    waiting: &mut Vec<Waiting>,
+    ctrl: &Controller,
+    stats: &mut ServeStats,
+    trace: &TraceSink,
+) {
+    let n = batch.reqs.len().min(waiting.len());
+    let items: Vec<Waiting> = waiting.drain(..n).collect();
+    let Batch { reqs, formed_at } = batch;
+
+    // shed-at-batch-formation: a request whose deadline passed while
+    // it sat in the forming batch gets a typed rejection now, before
+    // any embedding work — never a shard round-trip for a dead request
+    let now = Instant::now();
+    let shed_enabled = ctrl.policy() != ShedPolicy::None;
+    let mut live_reqs = Vec::with_capacity(n);
+    let mut live_senders = Vec::with_capacity(n);
+    for (req, (t0, dl, tx)) in reqs.into_iter().zip(items) {
+        if shed_enabled && dl.is_some_and(|d| now >= d) {
+            stats.shed_batch += 1;
+            if trace.is_enabled() {
+                // close the request's async span — it ends here
+                trace.record(TraceEvent::async_end(
+                    "request",
+                    "req",
+                    req.id,
+                    current_tid(),
+                    trace.now_us(),
+                ));
+            }
+            let _ = tx.send(Err(EmberError::Overloaded(
+                "deadline expired before batch formation".into(),
+            )));
+        } else {
+            live_reqs.push(req);
+            live_senders.push((t0, dl, tx));
+        }
+    }
+    if !live_reqs.is_empty() {
+        let deadline = batch_deadline(&live_senders);
+        run_batch(
+            model,
+            embedder,
+            runtime,
+            live_reqs,
+            live_senders,
+            stats,
+            formed_at,
+            deadline,
+            trace,
+        );
+    }
+    if trace.is_enabled() {
+        let qc = ctrl.counters();
+        let ts = trace.now_us();
+        let tid = current_tid();
+        trace.record(TraceEvent::counter("qos/queue_depth", tid, ts, qc.depth as f64));
+        trace.record(TraceEvent::counter(
+            "qos/shed",
+            tid,
+            ts,
+            (qc.shed_admission + qc.rejected_full + stats.shed_batch) as f64,
+        ));
+    }
+}
+
 fn worker(
     model: DlrmModel,
     mut embedder: Option<Box<dyn EmbedStage>>,
     mut runtime: Option<Runtime>,
     opts: BatchOptions,
     rx: Receiver<Envelope>,
+    ctrl: Arc<Controller>,
     trace: TraceSink,
 ) -> ServeStats {
     let started = Instant::now();
     let mut stats = ServeStats::default();
     let mut batcher = Batcher::new(opts);
-    let mut waiting: Vec<(Instant, Sender<Result<Response>>)> = Vec::new();
+    let mut waiting: Vec<Waiting> = Vec::new();
     let worker_tid = if trace.is_enabled() {
         trace.name_current_thread("coordinator worker")
     } else {
@@ -339,8 +492,10 @@ fn worker(
             .map(|d| d.saturating_duration_since(Instant::now()))
             .unwrap_or(std::time::Duration::from_millis(50));
         match rx.recv_timeout(timeout) {
-            Ok((req, t0, rtx)) => {
+            Ok((req, t0, deadline, rtx)) => {
                 stats.requests += 1;
+                // frees the admission slot + feeds the queue-delay EWMA
+                ctrl.on_dequeue(t0.elapsed());
                 if trace.is_enabled() {
                     // close the submit-side flow arrow and open the
                     // request's async span at its submit time
@@ -353,52 +508,45 @@ fn worker(
                         trace.ts_of(t0),
                     ));
                 }
-                waiting.push((t0, rtx));
-                let formed_at = batcher.oldest().unwrap_or(t0);
+                waiting.push((t0, deadline, rtx));
                 if let Some(batch) = batcher.push(req, Instant::now()) {
-                    let senders = std::mem::take(&mut waiting);
-                    run_batch(
+                    dispatch_batch(
                         &model,
                         &mut embedder,
                         &mut runtime,
                         batch,
-                        senders,
+                        &mut waiting,
+                        &ctrl,
                         &mut stats,
-                        formed_at,
                         &trace,
                     );
                 }
             }
             Err(RecvTimeoutError::Timeout) => {
-                let formed_at = batcher.oldest().unwrap_or_else(Instant::now);
                 if let Some(batch) = batcher.poll(Instant::now()) {
-                    let senders = std::mem::take(&mut waiting);
-                    run_batch(
+                    dispatch_batch(
                         &model,
                         &mut embedder,
                         &mut runtime,
                         batch,
-                        senders,
+                        &mut waiting,
+                        &ctrl,
                         &mut stats,
-                        formed_at,
                         &trace,
                     );
                 }
             }
             Err(RecvTimeoutError::Disconnected) => {
                 // drain the final partial batch
-                let formed_at = batcher.oldest().unwrap_or_else(Instant::now);
-                let batch = batcher.flush();
-                if !batch.is_empty() {
-                    let senders = std::mem::take(&mut waiting);
-                    run_batch(
+                if let Some(batch) = batcher.flush() {
+                    dispatch_batch(
                         &model,
                         &mut embedder,
                         &mut runtime,
                         batch,
-                        senders,
+                        &mut waiting,
+                        &ctrl,
                         &mut stats,
-                        formed_at,
                         &trace,
                     );
                 }
@@ -410,6 +558,11 @@ fn worker(
     // pool clones share the same Arcs, so this sums every thread's
     // accesses exactly once
     stats.store = model.store_stats();
+    // admission-side sheds live in the shared controller (they never
+    // reach this thread as envelopes); fold them in at shutdown
+    let qc = ctrl.counters();
+    stats.shed_admission = qc.shed_admission;
+    stats.rejected_full = qc.rejected_full;
     stats.elapsed = started.elapsed();
     stats
 }
@@ -447,7 +600,7 @@ mod tests {
         let coord = Coordinator::start(
             tiny(),
             None,
-            BatchOptions { max_batch: 4, max_wait: Duration::from_millis(1) },
+            BatchOptions { max_batch: 4, max_wait: Duration::from_millis(1), ..Default::default() },
         );
         let rxs: Vec<_> = reqs.iter().map(|r| coord.submit(r.clone()).unwrap()).collect();
         let mut got: Vec<Response> =
@@ -458,6 +611,7 @@ mod tests {
         assert!(stats.batches >= 2);
         assert_eq!(stats.hist.count(), 8, "every response records a latency");
         assert!(!stats.elapsed.is_zero());
+        assert_eq!(stats.shed(), 0, "default options never shed");
         for (g, d) in got.iter().zip(&direct) {
             assert_eq!(g.id, d.id);
             assert!((g.score - d.score).abs() < 1e-6);
@@ -471,7 +625,7 @@ mod tests {
         let coord = Coordinator::start(
             m,
             None,
-            BatchOptions { max_batch: 64, max_wait: Duration::from_millis(1) },
+            BatchOptions { max_batch: 64, max_wait: Duration::from_millis(1), ..Default::default() },
         );
         let m2 = tiny();
         let r = coord.infer(req(1, &mut rng, &m2)).unwrap();
@@ -489,8 +643,13 @@ mod tests {
                 tiny(),
                 None,
                 ServeOptions {
-                    batch: BatchOptions { max_batch: 4, max_wait: Duration::from_millis(1) },
+                    batch: BatchOptions {
+                        max_batch: 4,
+                        max_wait: Duration::from_millis(1),
+                        ..Default::default()
+                    },
                     shards,
+                    ..Default::default()
                 },
             );
             let rxs: Vec<_> =
@@ -521,8 +680,13 @@ mod tests {
                 tiny(),
                 None,
                 ServeOptions {
-                    batch: BatchOptions { max_batch: 4, max_wait: Duration::from_millis(1) },
+                    batch: BatchOptions {
+                        max_batch: 4,
+                        max_wait: Duration::from_millis(1),
+                        ..Default::default()
+                    },
                     shards: 2,
+                    ..Default::default()
                 },
                 trace,
             );
@@ -547,6 +711,8 @@ mod tests {
         assert!(has("batch_form") && has("embed") && has("mlp"), "lifecycle spans");
         assert!(has("req"), "flow events across threads");
         assert!(has("shard_embed"), "per-shard embed spans");
+        assert!(has("qos/queue_depth"), "qos counter track");
+        assert!(has("qos/shed"), "qos shed counter track");
         let begins = evs
             .iter()
             .filter(|e| e.name == "request" && matches!(e.ph, Phase::AsyncBegin))
@@ -569,7 +735,7 @@ mod tests {
         let coord = Coordinator::start(
             tiny(),
             None,
-            BatchOptions { max_batch: 4, max_wait: Duration::from_millis(1) },
+            BatchOptions { max_batch: 4, max_wait: Duration::from_millis(1), ..Default::default() },
         );
         let m = tiny();
         std::thread::scope(|s| {
@@ -588,5 +754,64 @@ mod tests {
         let stats = coord.shutdown();
         assert_eq!(stats.requests, 32);
         assert_eq!(stats.hist.count(), 32);
+    }
+
+    /// Deterministic shed-at-batch-formation: the request's deadline is
+    /// valid at admission (EWMA is zero) but expires long before the
+    /// 20ms batch timer fires, so the flush must shed it with the typed
+    /// `Overloaded` error — never serve it, never call it a failure.
+    #[test]
+    fn batch_formation_sheds_expired_requests_with_typed_error() {
+        let mut rng = Rng::new(13);
+        let m = tiny();
+        let coord = Coordinator::start_sharded(
+            tiny(),
+            None,
+            ServeOptions {
+                batch: BatchOptions {
+                    max_batch: 64,
+                    max_wait: Duration::from_millis(20),
+                    ..Default::default()
+                },
+                shards: 1,
+                qos: QosOptions { queue_depth: 0, policy: ShedPolicy::Deadline },
+            },
+        );
+        let client = coord.client().unwrap();
+        let r = req(1, &mut rng, &m);
+        let rx = client
+            .submit_with_deadline(r, Some(Instant::now() + Duration::from_millis(2)))
+            .expect("admission must pass while the EWMA is zero");
+        let got = rx.recv().expect("worker must answer shed requests");
+        match got {
+            Err(EmberError::Overloaded(_)) => {}
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        let stats = coord.shutdown();
+        assert_eq!(stats.shed_batch, 1);
+        assert_eq!(stats.errors, 0, "a shed is not a failure");
+        assert_eq!(stats.hist.count(), 0, "shed requests record no service latency");
+    }
+
+    /// With policy `none`, deadlines are carried but never enforced:
+    /// the same expired-deadline request is served normally and only
+    /// the observability counter moves.
+    #[test]
+    fn policy_none_serves_expired_deadlines_and_counts_misses() {
+        let mut rng = Rng::new(14);
+        let m = tiny();
+        let coord = Coordinator::start(
+            tiny(),
+            None,
+            BatchOptions { max_batch: 4, max_wait: Duration::from_millis(1), ..Default::default() },
+        );
+        let client = coord.client().unwrap();
+        let r = client
+            .infer_with_deadline(req(1, &mut rng, &m), Some(Instant::now()))
+            .expect("policy none must serve expired requests");
+        assert!(r.score > 0.0 && r.score < 1.0);
+        let stats = coord.shutdown();
+        assert_eq!(stats.shed(), 0);
+        assert_eq!(stats.deadline_missed, 1);
     }
 }

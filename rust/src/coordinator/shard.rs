@@ -146,7 +146,13 @@ impl super::EmbedStage for ShardPool {
     /// In-process shards share the coordinator's fate — there is no
     /// partial-failure mode, so `degraded` is always zero and any shard
     /// error fails the whole batch (the pre-net behavior, unchanged).
-    fn embed_stage(&mut self, reqs: &Arc<Vec<Request>>) -> Result<super::EmbedOutcome> {
+    /// Deadlines are not enforced here: local embedding is microseconds
+    /// of work, so abandoning it mid-batch would only cost determinism.
+    fn embed_stage(
+        &mut self,
+        reqs: &Arc<Vec<Request>>,
+        _deadline: Option<std::time::Instant>,
+    ) -> Result<super::EmbedOutcome> {
         Ok(super::EmbedOutcome { embeddings: self.embed_shared(reqs.clone())?, degraded: 0 })
     }
 }

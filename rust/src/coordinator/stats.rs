@@ -105,6 +105,19 @@ pub struct ServeStats {
     /// at shutdown (zero accesses for dense tables): hot-tier hit rate,
     /// dequantized rows, resident bytes. See [`crate::store::StoreStats`].
     pub store: crate::store::StoreStats,
+    /// Requests shed at admission by the QoS controller (deadline
+    /// unmeetable / pressure), folded in at shutdown. These never
+    /// count toward `requests`.
+    pub shed_admission: u64,
+    /// Hard rejections: the bounded admission queue was full.
+    pub rejected_full: u64,
+    /// Requests shed at batch formation (deadline already expired when
+    /// the batch flushed). Counted in `requests` but answered with a
+    /// typed `Overloaded` error instead of being served.
+    pub shed_batch: u64,
+    /// Responses delivered after their deadline had passed (served,
+    /// but too late to be useful).
+    pub deadline_missed: u64,
 }
 
 impl ServeStats {
@@ -120,6 +133,15 @@ impl ServeStats {
         self.store.accumulate(other.store);
         self.hist.merge(&other.hist);
         self.elapsed = self.elapsed.max(other.elapsed);
+        self.shed_admission += other.shed_admission;
+        self.rejected_full += other.rejected_full;
+        self.shed_batch += other.shed_batch;
+        self.deadline_missed += other.deadline_missed;
+    }
+
+    /// Total requests refused or abandoned by the QoS subsystem.
+    pub fn shed(&self) -> u64 {
+        self.shed_admission + self.rejected_full + self.shed_batch
     }
 
     pub fn p50(&self) -> Duration {
@@ -169,6 +191,19 @@ impl fmt::Display for ServeStats {
         )?;
         if self.degraded > 0 {
             write!(f, ", {} degraded segments", self.degraded)?;
+        }
+        if self.shed() > 0 {
+            write!(
+                f,
+                ", {} shed ({} admission / {} queue-full / {} batch)",
+                self.shed(),
+                self.shed_admission,
+                self.rejected_full,
+                self.shed_batch
+            )?;
+        }
+        if self.deadline_missed > 0 {
+            write!(f, ", {} deadline-missed", self.deadline_missed)?;
         }
         if self.store.accesses() > 0 {
             write!(
@@ -347,6 +382,27 @@ mod tests {
         assert!(!format!("{s}").contains("degraded"));
         s.degraded = 3;
         assert!(format!("{s}").contains("3 degraded segments"));
+    }
+
+    #[test]
+    fn shed_counters_merge_and_display_only_when_nonzero() {
+        let mut a = ServeStats { requests: 10, ..Default::default() };
+        assert!(!format!("{a}").contains("shed"));
+        assert!(!format!("{a}").contains("deadline-missed"));
+        let b = ServeStats {
+            shed_admission: 3,
+            rejected_full: 2,
+            shed_batch: 1,
+            deadline_missed: 4,
+            ..Default::default()
+        };
+        a.merge(&b);
+        a.merge(&b);
+        assert_eq!(a.shed(), 12);
+        assert_eq!(a.deadline_missed, 8);
+        let text = format!("{a}");
+        assert!(text.contains("12 shed (6 admission / 4 queue-full / 2 batch)"), "{text}");
+        assert!(text.contains("8 deadline-missed"), "{text}");
     }
 
     #[test]

@@ -15,6 +15,10 @@ pub enum EmberError {
     Runtime(String),
     Workload(String),
     Parse(String),
+    /// Request shed by admission control / deadline enforcement — the
+    /// server is healthy but refusing work it cannot serve in time.
+    /// Load generators count these separately from real failures.
+    Overloaded(String),
     Io(std::io::Error),
 }
 
@@ -29,6 +33,7 @@ impl fmt::Display for EmberError {
             EmberError::Runtime(m) => write!(f, "runtime error: {m}"),
             EmberError::Workload(m) => write!(f, "workload error: {m}"),
             EmberError::Parse(m) => write!(f, "parse error: {m}"),
+            EmberError::Overloaded(m) => write!(f, "overloaded: {m}"),
             EmberError::Io(e) => write!(f, "io error: {e}"),
         }
     }

@@ -43,6 +43,7 @@ pub mod harness;
 pub mod interp;
 pub mod ir;
 pub mod net;
+pub mod qos;
 pub mod runtime;
 pub mod session;
 pub mod store;

@@ -15,6 +15,7 @@ use ember::harness;
 use ember::net::{
     placement, Endpoint, NetFrontend, NetFrontendOpts, NetShape, ShardServer, ShardServerCfg,
 };
+use ember::qos::{QosOptions, ShedPolicy};
 use ember::runtime::Runtime;
 use ember::session::EmberSession;
 use ember::store::{ColdFormat, StoreCfg, StoreStats};
@@ -39,13 +40,19 @@ USAGE:
   ember bench --exp <table1..4|fig1|fig3|fig4|fig6|fig7|fig8|fig16..19|all> [--out results] [--seed N]
   ember serve [--requests N] [--clients C] [--shards S] [--qps Q[,Q..]] [--tables T] [--artifacts artifacts]
               [--zipf S] [--hot-frac F] [--cold fp16|int8] [--open-loop] [--smoke] [--trace FILE]
+              [--queue-depth N] [--deadline-ms MS] [--shed-policy none|deadline|ewma]
               --hot-frac F keeps only an F fraction of each table's rows as fp32 (LRU hot tier)
               over a quantized cold tier (--cold, default fp16) — serve tables bigger than RAM
               --trace writes the request-lifecycle timeline (enqueue -> batch -> embed -> MLP)
               plus a DAE-simulator counter track as chrome://tracing JSON
+              --qps accepts absolute rates or `Nx` capacity multiples (`0.5x,1x,3x` first runs a
+              short unthrottled calibration, then sweeps at those multiples of measured peak);
+              --queue-depth bounds the admission queue (reject-on-full), --deadline-ms attaches a
+              per-request latency budget, --shed-policy picks how overload is shed
   ember serve --net (--shard-servers N | --shard-sockets P1,P2,..) [--replicate R] [--smoke]
               [--tables T] [--rows R] [--emb E] [--batch B] [--seed S] [--requests N] [--clients C]
               [--zipf S] [--hot-frac F] [--cold fp16|int8] [--open-loop] [--qps Q] [--trace FILE]
+              [--queue-depth N] [--deadline-ms MS] [--shed-policy none|deadline|ewma]
               multi-process serving: fans the embedding stage out to shard-server processes over
               UDS (or tcp:HOST:PORT) and prints a NET_SERVE summary line (store tiering flags are
               forwarded to spawned shard servers); --trace merges every shard-server's buffered
@@ -298,6 +305,112 @@ fn parse_store(flags: &HashMap<String, String>) -> Result<Option<StoreCfg>> {
     }
 }
 
+/// Parse `--queue-depth N` / `--shed-policy none|deadline|ewma` into
+/// the coordinator's admission-control knobs. Both absent keeps the
+/// defaults (unbounded queue, no shedding), which serves byte-identical
+/// to the pre-QoS path. A bare `--shed-policy` picks the EWMA
+/// controller, mirroring the bare-flag convention of `--zipf`.
+fn parse_qos(flags: &HashMap<String, String>) -> Result<QosOptions> {
+    let queue_depth = match flags.get("queue-depth") {
+        Some(v) if !v.is_empty() => v
+            .parse::<usize>()
+            .map_err(|_| EmberError::Parse(format!("bad --queue-depth value `{v}`")))?,
+        Some(_) => return Err(EmberError::Parse("--queue-depth needs a value".into())),
+        None => 0,
+    };
+    let policy = match flags.get("shed-policy") {
+        Some(v) if !v.is_empty() => v.parse::<ShedPolicy>()?,
+        Some(_) => ShedPolicy::Ewma,
+        None => ShedPolicy::None,
+    };
+    Ok(QosOptions { queue_depth, policy })
+}
+
+/// Parse `--deadline-ms MS` into a per-request latency budget. A bare
+/// flag picks the conventional 250ms serving SLO.
+fn parse_deadline(flags: &HashMap<String, String>) -> Result<Option<Duration>> {
+    match flags.get("deadline-ms") {
+        Some(v) if !v.is_empty() => {
+            let ms: f64 = v
+                .parse()
+                .map_err(|_| EmberError::Parse(format!("bad --deadline-ms value `{v}`")))?;
+            if !ms.is_finite() || ms <= 0.0 {
+                return Err(EmberError::Parse(format!(
+                    "--deadline-ms must be positive, got `{v}`"
+                )));
+            }
+            Ok(Some(Duration::from_secs_f64(ms / 1000.0)))
+        }
+        Some(_) => Ok(Some(Duration::from_millis(250))),
+        None => Ok(None),
+    }
+}
+
+/// One `--qps` sweep entry: unthrottled, an absolute rate, or a
+/// multiple of calibrated capacity (`1.5x`, `3x`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum QpsSpec {
+    Max,
+    Fixed(f64),
+    Multiple(f64),
+}
+
+fn parse_qps_list(flags: &HashMap<String, String>) -> Result<Vec<QpsSpec>> {
+    match flags.get("qps") {
+        Some(s) if !s.is_empty() => s
+            .split(',')
+            .map(|v| {
+                let v = v.trim();
+                if let Some(m) = v.strip_suffix('x').or_else(|| v.strip_suffix('X')) {
+                    let f: f64 = m.parse().map_err(|_| {
+                        EmberError::Parse(format!("bad --qps multiplier `{v}`"))
+                    })?;
+                    if !f.is_finite() || f <= 0.0 {
+                        return Err(EmberError::Parse(format!(
+                            "--qps multiplier must be positive, got `{v}`"
+                        )));
+                    }
+                    Ok(QpsSpec::Multiple(f))
+                } else {
+                    v.parse::<f64>()
+                        .map(QpsSpec::Fixed)
+                        .map_err(|_| EmberError::Parse(format!("bad --qps value `{v}`")))
+                }
+            })
+            .collect(),
+        _ => Ok(vec![QpsSpec::Max]),
+    }
+}
+
+/// Resolve multiplier entries against measured capacity, invoking
+/// `calibrate` (a short unthrottled run) at most once across the list.
+fn resolve_qps(
+    specs: &[QpsSpec],
+    mut calibrate: impl FnMut() -> Result<f64>,
+) -> Result<Vec<Option<f64>>> {
+    let mut peak: Option<f64> = None;
+    let mut out = Vec::with_capacity(specs.len());
+    for s in specs {
+        out.push(match s {
+            QpsSpec::Max => None,
+            QpsSpec::Fixed(q) => Some(*q),
+            QpsSpec::Multiple(m) => {
+                let p = match peak {
+                    Some(p) => p,
+                    None => {
+                        let p = calibrate()?;
+                        println!("calibrated capacity: {p:.0} qps");
+                        peak = Some(p);
+                        p
+                    }
+                };
+                Some(m * p)
+            }
+        });
+    }
+    Ok(out)
+}
+
 /// A tiny DAE-simulator run (`sls` on the paper's DAE machine) whose
 /// counter tracks ride along in a `--trace` serve file, so one trace
 /// shows all three layers: request lifecycle, shard processes, and the
@@ -328,20 +441,11 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         .and_then(|v| v.parse().ok())
         .unwrap_or(if smoke { 2 } else { 4 });
     let tables: usize = flags.get("tables").and_then(|v| v.parse().ok()).unwrap_or(16);
-    let qps_targets: Vec<Option<f64>> = match flags.get("qps") {
-        Some(s) if !s.is_empty() => s
-            .split(',')
-            .map(|v| {
-                v.trim()
-                    .parse::<f64>()
-                    .map(Some)
-                    .map_err(|_| EmberError::Parse(format!("bad --qps value `{v}`")))
-            })
-            .collect::<Result<_>>()?,
-        _ => vec![None], // unthrottled
-    };
+    let qps_specs = parse_qps_list(flags)?;
     let artifacts = flags.get("artifacts").map(String::as_str).unwrap_or("artifacts");
     let store = parse_store(flags)?;
+    let qos = parse_qos(flags)?;
+    let deadline = parse_deadline(flags)?;
 
     // model shape: manifest when the PJRT backend can actually execute
     // the artifacts (`can_execute` — the stub build loads artifacts for
@@ -403,15 +507,47 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         shape.batch,
         if open_loop { "open-loop poisson" } else { "closed-loop" }
     );
+    if qos.policy != ShedPolicy::None || qos.queue_depth > 0 {
+        println!(
+            "admission control: queue depth {}, {} shed policy{}",
+            if qos.queue_depth == 0 { "unbounded".into() } else { qos.queue_depth.to_string() },
+            qos.policy,
+            deadline
+                .map(|d| format!(", {:.0}ms deadline", d.as_secs_f64() * 1000.0))
+                .unwrap_or_default(),
+        );
+    }
+    let batch_opts = BatchOptions {
+        max_batch: shape.batch,
+        max_wait: Duration::from_millis(1),
+        ..Default::default()
+    };
+    // `Nx` sweep entries resolve against a short unthrottled
+    // closed-loop run with QoS off (the raw capacity being multiplied)
+    let qps_targets = resolve_qps(&qps_specs, || {
+        let coord = Coordinator::start_sharded(
+            make_model()?,
+            artifacts_dir.clone(),
+            ServeOptions { batch: batch_opts, shards, ..Default::default() },
+        );
+        let spec = LoadSpec {
+            clients,
+            requests_per_client: if smoke { 16 } else { 64 },
+            dist,
+            ..Default::default()
+        };
+        let report = run_closed_loop(&coord, spec, |c, k| {
+            synthetic_request_with(num_tables, rows, dense, max_lookups, dist, c, k)
+        })?;
+        coord.shutdown();
+        Ok(report.throughput_rps())
+    })?;
     println!("{:>10}  {}", "target", LoadReport::table_header());
     for target in qps_targets {
         let coord = Coordinator::start_sharded_traced(
             make_model()?,
             artifacts_dir.clone(),
-            ServeOptions {
-                batch: BatchOptions { max_batch: shape.batch, max_wait: Duration::from_millis(1) },
-                shards,
-            },
+            ServeOptions { batch: batch_opts, shards, qos },
             sink.clone(),
         );
         let report = if open_loop {
@@ -421,6 +557,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
                 seed: 7,
                 collectors: clients,
                 dist,
+                deadline,
             };
             run_open_loop(&coord, spec, |k| {
                 synthetic_request_with(num_tables, rows, dense, max_lookups, dist, 0, k)
@@ -431,6 +568,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
                 requests_per_client: n.div_ceil(clients.max(1)),
                 target_qps: target,
                 dist,
+                deadline,
             };
             run_closed_loop(&coord, spec, |c, k| {
                 synthetic_request_with(num_tables, rows, dense, max_lookups, dist, c, k)
@@ -490,6 +628,9 @@ fn cmd_serve_net(flags: &HashMap<String, String>) -> Result<()> {
     let replicas: usize = flags.get("replicate").and_then(|v| v.parse().ok()).unwrap_or(0);
     let dist = parse_dist(flags)?;
     let store = parse_store(flags)?;
+    let qos = parse_qos(flags)?;
+    let deadline = parse_deadline(flags)?;
+    let qps_spec = parse_qps_list(flags)?[0]; // net mode serves one target per run
     let open_loop = flags.contains_key("open-loop");
     let (max_lookups, dense, hidden) = (32usize, 13usize, 64usize);
     let trace_path = flags.get("trace").filter(|s| !s.is_empty()).cloned();
@@ -566,6 +707,49 @@ fn cmd_serve_net(flags: &HashMap<String, String>) -> Result<()> {
 
     let hosted = placement(tables, endpoints.len(), replicas);
     let mut session = EmberSession::default();
+
+    // `Nx` targets resolve against a short unthrottled closed-loop run
+    // over its own frontend/coordinator (QoS off), torn down before the
+    // measured run so calibration traffic never pollutes its counters.
+    let target = resolve_qps(&[qps_spec], || {
+        let calib_batch =
+            BatchOptions { max_batch: batch, max_wait: Duration::from_millis(1), ..Default::default() };
+        let model = DlrmModel::with_session(
+            &mut session,
+            batch,
+            rows,
+            emb,
+            tables,
+            max_lookups,
+            dense,
+            hidden,
+            seed,
+        )?;
+        let fe = NetFrontend::connect(
+            &endpoints,
+            Some(&hosted),
+            NetShape::of(&model),
+            NetFrontendOpts::default(),
+        )?;
+        let coord = Coordinator::start_with_embedder(
+            model,
+            None,
+            ServeOptions { batch: calib_batch, shards: 1, ..Default::default() },
+            Box::new(fe),
+        );
+        let spec = LoadSpec {
+            clients,
+            requests_per_client: if smoke { 16 } else { 64 },
+            dist,
+            ..Default::default()
+        };
+        let report = run_closed_loop(&coord, spec, |c, k| {
+            synthetic_request_with(tables, rows, dense, max_lookups, dist, c, k)
+        })?;
+        coord.shutdown();
+        Ok(report.throughput_rps())
+    })?[0];
+
     let model = DlrmModel::with_session(
         &mut session,
         batch,
@@ -599,23 +783,40 @@ fn cmd_serve_net(flags: &HashMap<String, String>) -> Result<()> {
         );
     }
 
+    if qos.policy != ShedPolicy::None || qos.queue_depth > 0 {
+        println!(
+            "admission control: queue depth {}, {} shed policy{}",
+            if qos.queue_depth == 0 { "unbounded".into() } else { qos.queue_depth.to_string() },
+            qos.policy,
+            deadline
+                .map(|d| format!(", {:.0}ms deadline", d.as_secs_f64() * 1000.0))
+                .unwrap_or_default(),
+        );
+    }
     let coord = Coordinator::start_with_embedder_traced(
         model,
         None,
         ServeOptions {
-            batch: BatchOptions { max_batch: batch, max_wait: Duration::from_millis(1) },
+            batch: BatchOptions {
+                max_batch: batch,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
             shards: 1,
+            qos,
         },
         Box::new(frontend),
         sink.clone(),
     );
     let report = if open_loop {
-        let target = flags
-            .get("qps")
-            .and_then(|v| v.split(',').next().and_then(|q| q.trim().parse().ok()))
-            .unwrap_or(2000.0);
-        let spec =
-            OpenLoopSpec { target_qps: target, requests: n, seed: 7, collectors: clients, dist };
+        let spec = OpenLoopSpec {
+            target_qps: target.unwrap_or(2000.0),
+            requests: n,
+            seed: 7,
+            collectors: clients,
+            dist,
+            deadline,
+        };
         run_open_loop(&coord, spec, |k| {
             synthetic_request_with(tables, rows, dense, max_lookups, dist, 0, k)
         })?
@@ -623,8 +824,9 @@ fn cmd_serve_net(flags: &HashMap<String, String>) -> Result<()> {
         let spec = LoadSpec {
             clients,
             requests_per_client: n.div_ceil(clients.max(1)),
-            target_qps: None,
+            target_qps: target,
             dist,
+            deadline,
         };
         run_closed_loop(&coord, spec, |c, k| {
             synthetic_request_with(tables, rows, dense, max_lookups, dist, c, k)
@@ -655,8 +857,9 @@ fn cmd_serve_net(flags: &HashMap<String, String>) -> Result<()> {
     // Machine-greppable summary for the CI smoke job. `hit_pct` /
     // `resident_mb` append after the original fields so existing greps
     // on the prefix keep matching (both are 0.00 on dense shards).
+    // `shed` appends after the original fields for the same reason.
     println!(
-        "NET_SERVE ok={} errors={} degraded={} alive={} p99_us={} degraded_pct={:.2} hit_pct={:.2} resident_mb={:.2}",
+        "NET_SERVE ok={} errors={} degraded={} alive={} p99_us={} degraded_pct={:.2} hit_pct={:.2} resident_mb={:.2} shed={}",
         report.ok,
         report.errors,
         stats.degraded,
@@ -665,6 +868,7 @@ fn cmd_serve_net(flags: &HashMap<String, String>) -> Result<()> {
         stats.degraded_pct(tables),
         shard_store.hit_pct(),
         shard_store.resident_bytes as f64 / (1024.0 * 1024.0),
+        report.shed,
     );
 
     // Merge the trace before tearing the shards down: a stopped shard
@@ -886,6 +1090,78 @@ mod tests {
                 "--cold {bad} must be rejected"
             );
         }
+    }
+
+    #[test]
+    fn no_qos_flags_means_no_admission_control() {
+        let q = parse_qos(&flags(&["--requests", "8"])).unwrap();
+        assert_eq!(q, QosOptions::default());
+        assert_eq!(q.queue_depth, 0);
+        assert_eq!(q.policy, ShedPolicy::None);
+    }
+
+    #[test]
+    fn qos_flags_parse_depth_and_policy() {
+        let q = parse_qos(&flags(&["--queue-depth", "64", "--shed-policy", "ewma"])).unwrap();
+        assert_eq!(q.queue_depth, 64);
+        assert_eq!(q.policy, ShedPolicy::Ewma);
+        let q = parse_qos(&flags(&["--shed-policy", "deadline"])).unwrap();
+        assert_eq!(q.policy, ShedPolicy::Deadline);
+        // bare --shed-policy picks the EWMA controller
+        let q = parse_qos(&flags(&["--shed-policy"])).unwrap();
+        assert_eq!(q.policy, ShedPolicy::Ewma);
+    }
+
+    #[test]
+    fn bad_qos_values_are_parse_errors() {
+        assert!(parse_qos(&flags(&["--queue-depth", "many"])).is_err());
+        assert!(parse_qos(&flags(&["--shed-policy", "yolo"])).is_err());
+    }
+
+    #[test]
+    fn deadline_ms_parses_to_a_duration() {
+        assert_eq!(parse_deadline(&flags(&[])).unwrap(), None);
+        assert_eq!(
+            parse_deadline(&flags(&["--deadline-ms", "250"])).unwrap(),
+            Some(Duration::from_millis(250))
+        );
+        assert_eq!(
+            parse_deadline(&flags(&["--deadline-ms", "1.5"])).unwrap(),
+            Some(Duration::from_micros(1500))
+        );
+        assert_eq!(
+            parse_deadline(&flags(&["--deadline-ms"])).unwrap(),
+            Some(Duration::from_millis(250))
+        );
+        for bad in ["0", "-3", "soon", "inf"] {
+            assert!(parse_deadline(&flags(&["--deadline-ms", bad])).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn qps_list_parses_rates_and_capacity_multiples() {
+        assert_eq!(parse_qps_list(&flags(&[])).unwrap(), vec![QpsSpec::Max]);
+        assert_eq!(
+            parse_qps_list(&flags(&["--qps", "500,1.5x, 3x"])).unwrap(),
+            vec![QpsSpec::Fixed(500.0), QpsSpec::Multiple(1.5), QpsSpec::Multiple(3.0)]
+        );
+        assert!(parse_qps_list(&flags(&["--qps", "fastx"])).is_err());
+        assert!(parse_qps_list(&flags(&["--qps", "-2x"])).is_err());
+    }
+
+    #[test]
+    fn multiplier_targets_calibrate_exactly_once() {
+        let mut calls = 0;
+        let resolved = resolve_qps(
+            &[QpsSpec::Fixed(100.0), QpsSpec::Multiple(0.5), QpsSpec::Multiple(3.0), QpsSpec::Max],
+            || {
+                calls += 1;
+                Ok(200.0)
+            },
+        )
+        .unwrap();
+        assert_eq!(calls, 1, "one calibration run covers every multiplier");
+        assert_eq!(resolved, vec![Some(100.0), Some(100.0), Some(600.0), None]);
     }
 }
 

@@ -242,7 +242,13 @@ impl NetFrontend {
     /// `[batch, tables*emb]` row-major embeddings (same contract as the
     /// in-process paths, byte-identical on healthy shards) plus the
     /// number of table segments degraded to zeros.
-    pub fn embed(&mut self, reqs: &[Request]) -> Result<(Vec<f32>, u64)> {
+    ///
+    /// `deadline`, when set, bounds the whole fan-out: each round
+    /// checks it before assigning (an expired batch degrades its
+    /// remaining tables instead of burning more shard round-trips),
+    /// and the remaining budget rides each `EmbedReq` as `deadline_us`
+    /// so the shard can shed server-side too.
+    pub fn embed(&mut self, reqs: &[Request], deadline: Option<Instant>) -> Result<(Vec<f32>, u64)> {
         let t0_us = self.trace.now_us();
         let NetShape { num_tables, emb, batch, max_lookups, .. } = self.shape;
         let width = num_tables * emb;
@@ -252,6 +258,9 @@ impl NetFrontend {
         let mut tried: HashMap<u32, Vec<usize>> = HashMap::new();
 
         while !remaining.is_empty() {
+            if deadline.is_some_and(|d| Instant::now() >= d) {
+                break; // expired: the rest degrades, nobody is waiting
+            }
             self.reconnect_expired();
 
             // Assign every remaining table to an alive, untried,
@@ -293,7 +302,14 @@ impl NetFrontend {
                     .iter()
                     .map(|&t| table_csr(reqs, t, batch, max_lookups))
                     .collect();
-                let frame = Frame::EmbedReq { seq, batch: batch as u32, tables: csrs };
+                // remaining budget in µs; a deadline that just expired
+                // still encodes as 1 (0 means "no deadline" on the wire)
+                let deadline_us = deadline
+                    .map(|d| {
+                        (d.saturating_duration_since(Instant::now()).as_micros() as u64).max(1)
+                    })
+                    .unwrap_or(0);
+                let frame = Frame::EmbedReq { seq, batch: batch as u32, tables: csrs, deadline_us };
                 let conn = &mut self.conns[c];
                 let sent = match conn.stream.as_mut() {
                     Some(s) => write_frame(s, &frame).is_ok(),
@@ -439,8 +455,12 @@ impl NetFrontend {
 }
 
 impl EmbedStage for NetFrontend {
-    fn embed_stage(&mut self, reqs: &Arc<Vec<Request>>) -> Result<EmbedOutcome> {
-        let (embeddings, degraded) = self.embed(reqs)?;
+    fn embed_stage(
+        &mut self,
+        reqs: &Arc<Vec<Request>>,
+        deadline: Option<Instant>,
+    ) -> Result<EmbedOutcome> {
+        let (embeddings, degraded) = self.embed(reqs, deadline)?;
         Ok(EmbedOutcome { embeddings, degraded })
     }
 }
@@ -503,7 +523,7 @@ mod tests {
         assert_eq!(fe.alive(), 2);
         let rs = reqs(3);
         let want = m.embed(&rs).unwrap();
-        let (got, degraded) = fe.embed(&rs).unwrap();
+        let (got, degraded) = fe.embed(&rs, None).unwrap();
         assert_eq!(degraded, 0);
         assert_eq!(want, got, "net-mode embed must be byte-identical");
         let (segments, batches, hist, store) = fe.stats();
@@ -533,7 +553,7 @@ mod tests {
         };
         let mut fe = NetFrontend::connect(&[ep], Some(&hosted), shape(), opts).unwrap();
         assert_eq!(fe.alive(), 0);
-        let (out, degraded) = fe.embed(&reqs(2)).unwrap();
+        let (out, degraded) = fe.embed(&reqs(2), None).unwrap();
         assert_eq!(degraded, TABLES as u64, "every table degrades");
         assert!(out.iter().all(|&v| v == 0.0));
     }
@@ -543,7 +563,7 @@ mod tests {
         let (servers, eps) = spawn_servers("bp", 2, 0);
         let opts = NetFrontendOpts { max_inflight: 0, ..Default::default() };
         let mut fe = NetFrontend::connect(&eps, None, shape(), opts).unwrap();
-        let (out, degraded) = fe.embed(&reqs(2)).unwrap();
+        let (out, degraded) = fe.embed(&reqs(2), None).unwrap();
         assert_eq!(degraded, TABLES as u64);
         assert!(out.iter().all(|&v| v == 0.0));
         for s in servers {
@@ -568,7 +588,7 @@ mod tests {
         // Kill server 0; its tables must fail over to server 1.
         let mut servers = servers;
         servers.remove(0).wait();
-        let (got, degraded) = fe.embed(&rs).unwrap();
+        let (got, degraded) = fe.embed(&rs, None).unwrap();
         assert_eq!(degraded, 0, "replication must mask the failure");
         assert_eq!(want, got, "failover output must stay byte-identical");
         assert_eq!(fe.alive(), 1);
@@ -593,7 +613,7 @@ mod tests {
 
         let mut servers = servers;
         servers.remove(0).wait();
-        let (got, degraded) = fe.embed(&rs).unwrap();
+        let (got, degraded) = fe.embed(&rs, None).unwrap();
         assert_eq!(degraded, lost.len() as u64);
         let width = TABLES * EMB;
         for t in 0..TABLES as u32 {
@@ -638,7 +658,7 @@ mod tests {
             NetFrontend::connect(&eps, None, shape(), NetFrontendOpts::default()).unwrap();
         let sink = TraceSink::enabled();
         fe.set_trace(sink.clone());
-        let (_, degraded) = fe.embed(&reqs(3)).unwrap();
+        let (_, degraded) = fe.embed(&reqs(3), None).unwrap();
         assert_eq!(degraded, 0);
         assert!(
             sink.drain().iter().any(|e| e.name == "net_embed"),
@@ -656,6 +676,26 @@ mod tests {
                 "shard {shard_id} buffer missing embed_req: {events}"
             );
         }
+        for s in servers {
+            s.wait();
+        }
+    }
+
+    #[test]
+    fn expired_deadline_degrades_without_any_shard_round_trip() {
+        let (servers, eps) = spawn_servers("deadline", 2, 0);
+        let mut fe =
+            NetFrontend::connect(&eps, None, shape(), NetFrontendOpts::default()).unwrap();
+        // a deadline already in the past: the fan-out loop must bail
+        // before round one rather than waste shard work on a response
+        // nobody will read
+        let past = Instant::now();
+        let (out, degraded) = fe.embed(&reqs(2), Some(past)).unwrap();
+        assert_eq!(degraded, TABLES as u64);
+        assert!(out.iter().all(|&v| v == 0.0));
+        let (segments, batches, _, _) = fe.stats();
+        assert_eq!(segments, 0, "no shard saw any table segment");
+        assert_eq!(batches, 0);
         for s in servers {
             s.wait();
         }
@@ -688,7 +728,7 @@ mod tests {
         for s in servers {
             s.wait();
         }
-        let (_, degraded) = fe.embed(&rs).unwrap();
+        let (_, degraded) = fe.embed(&rs, None).unwrap();
         assert_eq!(degraded, TABLES as u64);
 
         let cfg = ShardServerCfg {
@@ -703,7 +743,7 @@ mod tests {
         };
         let srv = ShardServer::spawn(eps[0].clone(), cfg).unwrap();
         std::thread::sleep(Duration::from_millis(20)); // let backoff expire
-        let (got, degraded) = fe.embed(&rs).unwrap();
+        let (got, degraded) = fe.embed(&rs, None).unwrap();
         assert_eq!(degraded, 0, "reconnect must restore service");
         assert_eq!(want, got);
         srv.wait();

@@ -23,7 +23,16 @@ use std::io::{Read, Write};
 /// layout change; a shard server rejects handshakes it cannot speak.
 /// v2: `StatsResp` carries embedding-store counters (hits, misses,
 /// dequants, resident bytes) after the latency histogram.
-pub const VERSION: u32 = 2;
+/// v3: `EmbedReq` may carry a trailing `deadline_us` budget. The field
+/// is omitted when zero, so a v3 encoder talking about deadline-free
+/// requests emits byte-identical v2 frames, and a v3 decoder accepts
+/// the v2 layout (absent field ⇒ no deadline).
+pub const VERSION: u32 = 3;
+
+/// Oldest peer version this build still speaks. v2 peers never send
+/// the `EmbedReq` deadline field and ignore nothing we require, so the
+/// handshake accepts `MIN_VERSION..=VERSION`.
+pub const MIN_VERSION: u32 = 2;
 
 /// Upper bound on one frame body (64 MiB). A batch-32, 64-table,
 /// emb-128 response is ~1 MiB, so this is generous headroom while
@@ -64,6 +73,11 @@ pub enum Frame {
         seq: u64,
         batch: u32,
         tables: Vec<TableCsr>,
+        /// Remaining latency budget in µs; `0` means no deadline. The
+        /// shard sheds the request (an `ErrResp`) once the budget is
+        /// exhausted instead of computing embeddings nobody will read.
+        /// Encoded as an optional trailing field for v2 compatibility.
+        deadline_us: u64,
     },
     /// Per-table embedding outputs for `seq`.
     EmbedResp { seq: u64, parts: Vec<TablePart> },
@@ -141,7 +155,7 @@ impl Frame {
                     put_u32(&mut b, *t);
                 }
             }
-            Frame::EmbedReq { seq, batch, tables } => {
+            Frame::EmbedReq { seq, batch, tables, deadline_us } => {
                 put_u64(&mut b, *seq);
                 put_u32(&mut b, *batch);
                 put_u32(&mut b, tables.len() as u32);
@@ -155,6 +169,10 @@ impl Frame {
                     for i in &tc.idxs {
                         put_i32(&mut b, *i);
                     }
+                }
+                // optional trailing field: absent ⇔ zero (v2 layout)
+                if *deadline_us != 0 {
+                    put_u64(&mut b, *deadline_us);
                 }
             }
             Frame::EmbedResp { seq, parts } => {
@@ -244,7 +262,15 @@ impl Frame {
                     }
                     tables.push(TableCsr { table, ptrs, idxs });
                 }
-                Frame::EmbedReq { seq, batch, tables }
+                // v3 appends an optional deadline; a v2 peer's frame
+                // simply ends here. 1..=7 leftover bytes still fall
+                // through to the trailing-bytes error below.
+                let deadline_us = if rd.pos < body.len() && body.len() - rd.pos >= 8 {
+                    rd.u64()?
+                } else {
+                    0
+                };
+                Frame::EmbedReq { seq, batch, tables, deadline_us }
             }
             4 => {
                 let seq = rd.u64()?;
@@ -440,6 +466,9 @@ mod tests {
                 batch: 32,
                 tables: vec![0, 2, 4],
             },
+            // deadline_us stays 0 here so the exhaustive truncation
+            // test below holds: a nonzero deadline has one legal
+            // truncation (the v2-compat cut), covered separately.
             Frame::EmbedReq {
                 seq: 7,
                 batch: 4,
@@ -447,6 +476,7 @@ mod tests {
                     TableCsr { table: 0, ptrs: vec![0, 2, 2, 3, 5], idxs: vec![1, 4, 2, 0, 3] },
                     TableCsr { table: 5, ptrs: vec![0, 0, 0, 0, 0], idxs: vec![] },
                 ],
+                deadline_us: 0,
             },
             Frame::EmbedResp {
                 seq: 7,
@@ -521,6 +551,61 @@ mod tests {
         }
     }
 
+    fn deadline_req(deadline_us: u64) -> Frame {
+        Frame::EmbedReq {
+            seq: 11,
+            batch: 2,
+            tables: vec![TableCsr { table: 1, ptrs: vec![0, 1, 3], idxs: vec![5, 2, 9] }],
+            deadline_us,
+        }
+    }
+
+    #[test]
+    fn embed_req_deadline_round_trips_and_is_omitted_when_zero() {
+        let with = deadline_req(250_000).encode();
+        let without = deadline_req(0).encode();
+        assert_eq!(with.len(), without.len() + 8, "deadline is one trailing u64");
+        assert_eq!(with[..without.len()], without[..], "v3 prefix is the v2 layout");
+        let back = Frame::decode(&with).unwrap();
+        assert_eq!(back, deadline_req(250_000));
+        assert_eq!(Frame::decode(&without).unwrap(), deadline_req(0));
+    }
+
+    #[test]
+    fn v2_layout_embed_req_decodes_as_deadline_absent() {
+        // a v2 peer's encoding is exactly the v3 encoding minus the
+        // trailing deadline — it must decode, with deadline_us == 0
+        let body = deadline_req(99_999).encode();
+        let v2 = &body[..body.len() - 8];
+        assert_eq!(Frame::decode(v2).unwrap(), deadline_req(0));
+    }
+
+    #[test]
+    fn partial_deadline_field_is_rejected() {
+        // 1..=7 leftover bytes are neither a v2 frame nor a v3 one
+        let body = deadline_req(99_999).encode();
+        for cut in (body.len() - 7)..body.len() {
+            let err = Frame::decode(&body[..cut]).unwrap_err();
+            assert!(err.to_string().contains("trailing"), "cut {cut}: {err}");
+        }
+    }
+
+    #[test]
+    fn deadline_req_truncation_inside_tables_is_rejected() {
+        let body = deadline_req(250_000).encode();
+        // every prefix strictly inside the table data must still fail;
+        // only the exact v2-compat cut (len-8) is legal
+        for cut in 0..(body.len() - 8) {
+            assert!(Frame::decode(&body[..cut]).is_err(), "cut {cut} decoded");
+        }
+    }
+
+    #[test]
+    fn version_range_is_coherent() {
+        assert!(MIN_VERSION <= VERSION);
+        assert_eq!(VERSION, 3, "deadline field rides protocol v3");
+    }
+
     #[test]
     fn oversized_and_empty_length_prefixes_are_rejected() {
         // length 0
@@ -574,8 +659,18 @@ mod tests {
             }
             if body.len() > 1 {
                 let cut = 1 + rng.below(body.len() as u64 - 1) as usize;
-                if Frame::decode(&body[..cut]).is_ok() {
-                    return Err(format!("truncation to {cut}/{} decoded", body.len()));
+                // one legal truncation exists: chopping exactly the
+                // optional trailing deadline off an EmbedReq yields a
+                // valid v2-layout frame (deadline-absent by design)
+                let v2_compat_cut = cut == body.len() - 8
+                    && matches!(&f, Frame::EmbedReq { deadline_us, .. } if *deadline_us != 0);
+                if Frame::decode(&body[..cut]).is_ok() != v2_compat_cut {
+                    return Err(format!(
+                        "truncation to {cut}/{} decoded={} (expected {})",
+                        body.len(),
+                        !v2_compat_cut,
+                        v2_compat_cut
+                    ));
                 }
             }
             Ok(())
@@ -600,7 +695,12 @@ mod tests {
                         TableCsr { table: t as u32, ptrs, idxs }
                     })
                     .collect();
-                Frame::EmbedReq { seq: rng.next_u64(), batch: batch as u32, tables }
+                Frame::EmbedReq {
+                    seq: rng.next_u64(),
+                    batch: batch as u32,
+                    tables,
+                    deadline_us: if rng.below(2) == 0 { 0 } else { 1 + rng.below(1_000_000) },
+                }
             }
             1 => {
                 let nparts = rng.below(4) as usize;

@@ -15,7 +15,7 @@
 //! [`ShardServer::stop`] (or a wire `Shutdown` frame) tears the whole
 //! process down without killing it mid-frame.
 
-use super::proto::{Frame, TableCsr, TablePart, MAX_FRAME, VERSION};
+use super::proto::{Frame, TableCsr, TablePart, MAX_FRAME, MIN_VERSION, VERSION};
 use super::transport::{Endpoint, NetStream};
 use crate::coordinator::stats::LatencyHist;
 use crate::coordinator::{gen_tables, Request};
@@ -266,9 +266,11 @@ fn serve_conn(
     // read_full retries across timeouts, so frames never desync.
     let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
 
-    // Handshake: Hello in, HelloAck (or version ErrResp) out.
+    // Handshake: Hello in, HelloAck (or version ErrResp) out. Any
+    // version in MIN_VERSION..=VERSION is spoken: a v2 peer simply
+    // never sends the EmbedReq deadline field.
     match read_frame_poll(&mut stream, stop) {
-        Ok(Some(Frame::Hello { version })) if version == VERSION => {
+        Ok(Some(Frame::Hello { version })) if (MIN_VERSION..=VERSION).contains(&version) => {
             let ack = Frame::HelloAck {
                 shard_id: cfg.shard_id,
                 table_rows: cfg.table_rows as u64,
@@ -285,7 +287,9 @@ fn serve_conn(
                 &mut stream,
                 &Frame::ErrResp {
                     seq: 0,
-                    msg: format!("protocol version {version} unsupported (speak {VERSION})"),
+                    msg: format!(
+                        "protocol version {version} unsupported (speak {MIN_VERSION}..={VERSION})"
+                    ),
                 },
             );
             return;
@@ -313,9 +317,14 @@ fn serve_conn(
             Ok(None) | Err(_) => return,
         };
         match frame {
-            Frame::EmbedReq { seq, batch, tables: csrs } => {
+            Frame::EmbedReq { seq, batch, tables: csrs, deadline_us } => {
                 let t0 = Instant::now();
-                let reply = match run_embed(cfg, &mut exec, &mut bindings, batch, &csrs) {
+                // the wire field is the remaining budget at send time;
+                // anchor it here (receipt) so in-server work counts
+                // against it and an exhausted request is shed instead
+                // of computed for nobody
+                let deadline = (deadline_us > 0).then(|| t0 + Duration::from_micros(deadline_us));
+                let reply = match run_embed(cfg, &mut exec, &mut bindings, batch, &csrs, deadline) {
                     Ok(parts) => {
                         stats.batches.fetch_add(1, Ordering::Relaxed);
                         stats.segments.fetch_add(csrs.len() as u64, Ordering::Relaxed);
@@ -393,13 +402,17 @@ fn serve_conn(
     }
 }
 
-/// Validate and run one `EmbedReq` against the pre-bound tables.
+/// Validate and run one `EmbedReq` against the pre-bound tables. When
+/// a `deadline` is set, it is checked before each table: a request
+/// whose budget runs out mid-batch is shed with a typed `Overloaded`
+/// error (sent back as `ErrResp`) rather than computed to completion.
 fn run_embed(
     cfg: &ShardServerCfg,
     exec: &mut Instance,
     bindings: &mut [(u32, Bindings)],
     batch: u32,
     csrs: &[TableCsr],
+    deadline: Option<Instant>,
 ) -> Result<Vec<TablePart>> {
     if batch as usize != cfg.batch {
         return Err(EmberError::Workload(format!(
@@ -409,6 +422,12 @@ fn run_embed(
     }
     let mut parts = Vec::with_capacity(csrs.len());
     for csr in csrs {
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            return Err(EmberError::Overloaded(format!(
+                "deadline exhausted with table {} still pending",
+                csr.table
+            )));
+        }
         let b = bindings
             .iter_mut()
             .find(|(t, _)| *t == csr.table)
@@ -532,12 +551,64 @@ mod tests {
     }
 
     #[test]
+    fn v2_peer_handshake_is_still_accepted() {
+        let ep = sock("v2");
+        let srv = ShardServer::spawn(ep.clone(), cfg(vec![0, 1])).unwrap();
+        let mut s = ep.connect().unwrap();
+        write_f(&mut s, &Frame::Hello { version: MIN_VERSION }).unwrap();
+        let Frame::HelloAck { tables, .. } = read_f(&mut s).unwrap() else {
+            panic!("v2 Hello must still get a HelloAck");
+        };
+        assert_eq!(tables, vec![0, 1]);
+        // a v2 peer's EmbedReq carries no deadline field on the wire
+        // (deadline_us: 0 encodes to the exact v2 layout) and is served
+        let reqs: Vec<Request> = (0..2usize)
+            .map(|i| crate::coordinator::synthetic_request(2, 64, 3, 6, 7, i))
+            .collect();
+        let csrs = vec![table_csr(&reqs, 0, 4, 6)];
+        write_f(&mut s, &Frame::EmbedReq { seq: 1, batch: 4, tables: csrs, deadline_us: 0 })
+            .unwrap();
+        assert!(matches!(read_f(&mut s).unwrap(), Frame::EmbedResp { seq: 1, .. }));
+        srv.wait();
+    }
+
+    #[test]
+    fn exhausted_deadline_budget_is_shed_with_err_resp() {
+        // 16 tables so the per-table deadline checks interleave with
+        // real executor work: a 1µs budget cannot outrun all of them
+        let c = ShardServerCfg {
+            num_tables: 16,
+            owned: (0..16).collect(),
+            ..cfg(vec![])
+        };
+        let ep = sock("shed");
+        let srv = ShardServer::spawn(ep.clone(), c.clone()).unwrap();
+        let mut s = handshake(&ep);
+        let reqs: Vec<Request> = (0..3usize)
+            .map(|i| crate::coordinator::synthetic_request(c.num_tables, c.table_rows, 3, 6, 7, i))
+            .collect();
+        let csrs: Vec<TableCsr> =
+            (0..16).map(|t| table_csr(&reqs, t, c.batch, 6)).collect();
+        write_f(&mut s, &Frame::EmbedReq { seq: 9, batch: 4, tables: csrs, deadline_us: 1 })
+            .unwrap();
+        let Frame::ErrResp { seq, msg } = read_f(&mut s).unwrap() else {
+            panic!("an exhausted budget must be shed, not served");
+        };
+        assert_eq!(seq, 9);
+        assert!(msg.contains("deadline"), "{msg}");
+        // the connection survives the shed
+        write_f(&mut s, &Frame::Ping { nonce: 3 }).unwrap();
+        assert_eq!(read_f(&mut s).unwrap(), Frame::Pong { nonce: 3 });
+        srv.wait();
+    }
+
+    #[test]
     fn embed_req_validation_rejects_bad_shapes_but_keeps_conn() {
         let ep = sock("val");
         let srv = ShardServer::spawn(ep.clone(), cfg(vec![0, 1])).unwrap();
         let mut s = handshake(&ep);
         // wrong batch
-        let req = Frame::EmbedReq { seq: 1, batch: 3, tables: vec![] };
+        let req = Frame::EmbedReq { seq: 1, batch: 3, tables: vec![], deadline_us: 0 };
         write_f(&mut s, &req).unwrap();
         assert!(matches!(read_f(&mut s).unwrap(), Frame::ErrResp { seq: 1, .. }));
         // unhosted table
@@ -545,6 +616,7 @@ mod tests {
             seq: 2,
             batch: 4,
             tables: vec![TableCsr { table: 9, ptrs: vec![0; 5], idxs: vec![] }],
+            deadline_us: 0,
         };
         write_f(&mut s, &req).unwrap();
         assert!(matches!(read_f(&mut s).unwrap(), Frame::ErrResp { seq: 2, .. }));
@@ -553,6 +625,7 @@ mod tests {
             seq: 3,
             batch: 4,
             tables: vec![TableCsr { table: 0, ptrs: vec![0, 1, 1, 1, 1], idxs: vec![64] }],
+            deadline_us: 0,
         };
         write_f(&mut s, &req).unwrap();
         assert!(matches!(read_f(&mut s).unwrap(), Frame::ErrResp { seq: 3, .. }));
@@ -578,7 +651,7 @@ mod tests {
         let mut s = handshake(&ep);
         let csrs: Vec<TableCsr> =
             (0..2).map(|t| table_csr(&reqs, t, c.batch, m.max_lookups)).collect();
-        write_f(&mut s, &Frame::EmbedReq { seq: 11, batch: 4, tables: csrs }).unwrap();
+        write_f(&mut s, &Frame::EmbedReq { seq: 11, batch: 4, tables: csrs, deadline_us: 0 }).unwrap();
         let Frame::EmbedResp { seq, parts } = read_f(&mut s).unwrap() else {
             panic!("no EmbedResp");
         };
@@ -624,7 +697,7 @@ mod tests {
         let mut s = handshake(&ep);
         let csrs: Vec<TableCsr> =
             (0..2).map(|t| table_csr(&reqs, t, c.batch, m.max_lookups)).collect();
-        write_f(&mut s, &Frame::EmbedReq { seq: 5, batch: 4, tables: csrs }).unwrap();
+        write_f(&mut s, &Frame::EmbedReq { seq: 5, batch: 4, tables: csrs, deadline_us: 0 }).unwrap();
         let Frame::EmbedResp { parts, .. } = read_f(&mut s).unwrap() else {
             panic!("no EmbedResp");
         };
@@ -661,7 +734,7 @@ mod tests {
             .map(|i| crate::coordinator::synthetic_request(c.num_tables, c.table_rows, 3, 6, 7, i))
             .collect();
         let csrs: Vec<TableCsr> = (0..2).map(|t| table_csr(&reqs, t, c.batch, 6)).collect();
-        write_f(&mut s, &Frame::EmbedReq { seq: 1, batch: 4, tables: csrs }).unwrap();
+        write_f(&mut s, &Frame::EmbedReq { seq: 1, batch: 4, tables: csrs, deadline_us: 0 }).unwrap();
         assert!(matches!(read_f(&mut s).unwrap(), Frame::EmbedResp { seq: 1, .. }));
 
         write_f(&mut s, &Frame::TraceReq).unwrap();

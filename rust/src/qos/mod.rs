@@ -1,0 +1,403 @@
+//! Admission control & overload management.
+//!
+//! Past saturation an unbounded serving queue turns every request into
+//! a late request: the channel grows without bound, p99 tracks test
+//! duration instead of service time, and the reported tail is a lie
+//! about a system no operator would run. This module turns that cliff
+//! into a knee:
+//!
+//! * [`AdmissionQueue`] — a bounded queue in front of the coordinator
+//!   worker. When `queue_depth` requests are already waiting, new
+//!   arrivals are rejected with a typed [`EmberError::Overloaded`]
+//!   instead of being buffered forever.
+//! * [`Controller`] — tracks queue depth and a queue-delay EWMA and
+//!   decides, per [`ShedPolicy`], whether an arriving request should
+//!   be shed *before* the hard limit: a request whose deadline cannot
+//!   be met given the current queue delay is refused at admission
+//!   (cheapest possible rejection), and under `ewma` policy requests
+//!   are shed probabilistically as the queue fills so the hard
+//!   reject-on-full edge is rarely hit.
+//!
+//! Deadlines propagate with the request: expired work is shed again at
+//! batch formation (before any embedding work) and carried over the
+//! wire (`EmbedReq::deadline_us`) so shard servers can stop serving a
+//! batch that is already dead. Counters for every shed point surface
+//! in `ServeStats`, the `NET_SERVE` line and the chrome trace
+//! (`qos/queue_depth`, `qos/shed` counter tracks).
+
+use crate::error::{EmberError, Result};
+use std::fmt;
+use std::str::FromStr;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Shedding policy for the admission controller.
+///
+/// The bounded queue (`queue_depth`) rejects on full under every
+/// policy including `None` — the policy only controls *early* sheds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShedPolicy {
+    /// Never shed early. With `queue_depth == 0` this is byte-identical
+    /// to the pre-QoS serving path.
+    #[default]
+    None,
+    /// Shed at admission when `now + queue-delay EWMA` already exceeds
+    /// the request's deadline, and shed expired requests at batch
+    /// formation. Requests without a deadline are never shed early.
+    Deadline,
+    /// `Deadline`, plus probabilistic shedding as the bounded queue
+    /// fills (quadratic ramp above 50% occupancy) so load is refused
+    /// smoothly before the hard reject-on-full edge.
+    Ewma,
+}
+
+impl FromStr for ShedPolicy {
+    type Err = EmberError;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "none" => Ok(ShedPolicy::None),
+            "deadline" => Ok(ShedPolicy::Deadline),
+            "ewma" => Ok(ShedPolicy::Ewma),
+            other => Err(EmberError::Parse(format!(
+                "unknown shed policy `{other}` (expected none|deadline|ewma)"
+            ))),
+        }
+    }
+}
+
+impl fmt::Display for ShedPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ShedPolicy::None => write!(f, "none"),
+            ShedPolicy::Deadline => write!(f, "deadline"),
+            ShedPolicy::Ewma => write!(f, "ewma"),
+        }
+    }
+}
+
+/// Admission-control configuration carried in `ServeOptions`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QosOptions {
+    /// Maximum requests waiting between admission and dequeue by the
+    /// coordinator worker. `0` = unbounded (the pre-QoS behavior).
+    pub queue_depth: usize,
+    /// Early-shed policy; see [`ShedPolicy`].
+    pub policy: ShedPolicy,
+}
+
+impl Default for QosOptions {
+    fn default() -> Self {
+        QosOptions { queue_depth: 0, policy: ShedPolicy::None }
+    }
+}
+
+/// Snapshot of the controller's counters.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct QosCounters {
+    /// Early sheds at admission (deadline-unmeetable or pressure).
+    pub shed_admission: u64,
+    /// Hard rejections: the bounded queue was full.
+    pub rejected_full: u64,
+    /// Requests currently between admission and worker dequeue.
+    pub depth: usize,
+    /// Queue-delay EWMA in microseconds.
+    pub ewma_us: u64,
+}
+
+/// EWMA weight 1/8: old * 7/8 + sample * 1/8 per dequeue.
+const EWMA_SHIFT: u32 = 3;
+
+/// Overload controller: shared (via `Arc`) between every submitting
+/// client and the coordinator worker. Clients call [`Controller::admit`]
+/// before enqueueing; the worker calls [`Controller::on_dequeue`] with
+/// the observed queue delay. All state is atomic — admission never
+/// takes a lock.
+pub struct Controller {
+    opts: QosOptions,
+    depth: AtomicUsize,
+    ewma_us: AtomicU64,
+    shed_admission: AtomicU64,
+    rejected_full: AtomicU64,
+    /// Deterministic LCG state for probabilistic sheds — seeded, not
+    /// entropy-based, so runs are reproducible.
+    rng: AtomicU64,
+}
+
+impl Controller {
+    pub fn new(opts: QosOptions) -> Self {
+        Controller {
+            opts,
+            depth: AtomicUsize::new(0),
+            ewma_us: AtomicU64::new(0),
+            shed_admission: AtomicU64::new(0),
+            rejected_full: AtomicU64::new(0),
+            rng: AtomicU64::new(0x9E37_79B9_7F4A_7C15),
+        }
+    }
+
+    pub fn policy(&self) -> ShedPolicy {
+        self.opts.policy
+    }
+
+    /// Admission decision for a request arriving `now` with an optional
+    /// absolute deadline. On `Ok` a queue slot has been taken; it is
+    /// released by [`Controller::on_dequeue`] (worker side) or
+    /// [`Controller::release`] (enqueue failed after admission).
+    pub fn admit(&self, now: Instant, deadline: Option<Instant>) -> Result<()> {
+        // hard bound first: reserve a slot optimistically, back out on
+        // full so concurrent admits never over-admit
+        let waiting = self.depth.fetch_add(1, Ordering::AcqRel);
+        if self.opts.queue_depth > 0 && waiting >= self.opts.queue_depth {
+            self.depth.fetch_sub(1, Ordering::AcqRel);
+            self.rejected_full.fetch_add(1, Ordering::Relaxed);
+            return Err(EmberError::Overloaded(format!(
+                "admission queue full ({} waiting, depth {})",
+                waiting, self.opts.queue_depth
+            )));
+        }
+        let verdict = match self.opts.policy {
+            ShedPolicy::None => Ok(()),
+            ShedPolicy::Deadline => self.check_deadline(now, deadline),
+            ShedPolicy::Ewma => {
+                self.check_deadline(now, deadline).and_then(|()| self.check_pressure(waiting))
+            }
+        };
+        if verdict.is_err() {
+            self.depth.fetch_sub(1, Ordering::AcqRel);
+            self.shed_admission.fetch_add(1, Ordering::Relaxed);
+        }
+        verdict
+    }
+
+    /// Release an admitted slot without a dequeue (enqueue failed).
+    pub fn release(&self) {
+        self.depth.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Worker-side: a request was dequeued after waiting `queue_delay`.
+    /// Frees its slot and folds the delay into the EWMA.
+    pub fn on_dequeue(&self, queue_delay: Duration) {
+        self.depth.fetch_sub(1, Ordering::AcqRel);
+        let sample = queue_delay.as_micros().min(u128::from(u64::MAX)) as u64;
+        // single-writer (the worker thread), so load+store is race-free
+        let old = self.ewma_us.load(Ordering::Relaxed);
+        let new = if old == 0 {
+            sample
+        } else {
+            old - (old >> EWMA_SHIFT) + (sample >> EWMA_SHIFT)
+        };
+        self.ewma_us.store(new, Ordering::Relaxed);
+    }
+
+    pub fn counters(&self) -> QosCounters {
+        QosCounters {
+            shed_admission: self.shed_admission.load(Ordering::Relaxed),
+            rejected_full: self.rejected_full.load(Ordering::Relaxed),
+            depth: self.depth.load(Ordering::Relaxed),
+            ewma_us: self.ewma_us.load(Ordering::Relaxed),
+        }
+    }
+
+    fn check_deadline(&self, now: Instant, deadline: Option<Instant>) -> Result<()> {
+        let Some(d) = deadline else { return Ok(()) };
+        let ewma = Duration::from_micros(self.ewma_us.load(Ordering::Relaxed));
+        if now + ewma > d {
+            return Err(EmberError::Overloaded(format!(
+                "deadline unmeetable: queue delay ~{}us exceeds remaining budget",
+                ewma.as_micros()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Probabilistic shed as the bounded queue fills: probability 0 at
+    /// ≤50% occupancy ramping quadratically to 1 at full. Unbounded
+    /// queues (`queue_depth == 0`) have no fill signal and never shed
+    /// here.
+    fn check_pressure(&self, waiting: usize) -> Result<()> {
+        if self.opts.queue_depth == 0 {
+            return Ok(());
+        }
+        let fill = waiting as f64 / self.opts.queue_depth as f64;
+        let over = ((fill - 0.5) * 2.0).clamp(0.0, 1.0);
+        let p = over * over;
+        if p > 0.0 && self.draw() < p {
+            return Err(EmberError::Overloaded(format!(
+                "shed under pressure (queue {:.0}% full)",
+                fill * 100.0
+            )));
+        }
+        Ok(())
+    }
+
+    /// Next deterministic uniform draw in `[0, 1)`.
+    fn draw(&self) -> f64 {
+        let mut x = self.rng.load(Ordering::Relaxed);
+        loop {
+            let next = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            match self.rng.compare_exchange_weak(x, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return (next >> 11) as f64 / (1u64 << 53) as f64,
+                Err(cur) => x = cur,
+            }
+        }
+    }
+}
+
+/// Bounded admission queue: an mpsc sender guarded by a [`Controller`].
+/// Generic over the envelope type so it lives below the coordinator in
+/// the module graph.
+pub struct AdmissionQueue<T> {
+    tx: Sender<T>,
+    ctrl: Arc<Controller>,
+}
+
+// manual Clone: `T` itself need not be Clone for the sender to be
+impl<T> Clone for AdmissionQueue<T> {
+    fn clone(&self) -> Self {
+        AdmissionQueue { tx: self.tx.clone(), ctrl: self.ctrl.clone() }
+    }
+}
+
+impl<T> AdmissionQueue<T> {
+    pub fn new(tx: Sender<T>, ctrl: Arc<Controller>) -> Self {
+        AdmissionQueue { tx, ctrl }
+    }
+
+    pub fn controller(&self) -> &Arc<Controller> {
+        &self.ctrl
+    }
+
+    /// Admit-then-enqueue. Rejections surface as
+    /// [`EmberError::Overloaded`]; a dead consumer is a `Runtime` error
+    /// (a real failure, not a shed).
+    pub fn try_send(&self, item: T, now: Instant, deadline: Option<Instant>) -> Result<()> {
+        self.ctrl.admit(now, deadline)?;
+        self.tx.send(item).map_err(|_| {
+            self.ctrl.release();
+            EmberError::Runtime("coordinator worker gone".into())
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    #[test]
+    fn unbounded_none_policy_admits_everything() {
+        let c = Controller::new(QosOptions::default());
+        let now = Instant::now();
+        for _ in 0..10_000 {
+            c.admit(now, Some(now)).expect("policy none must never shed");
+        }
+        let snap = c.counters();
+        assert_eq!(snap.depth, 10_000);
+        assert_eq!(snap.shed_admission + snap.rejected_full, 0);
+    }
+
+    #[test]
+    fn bounded_queue_rejects_on_full_and_recovers() {
+        let c = Controller::new(QosOptions { queue_depth: 2, policy: ShedPolicy::None });
+        let now = Instant::now();
+        assert!(c.admit(now, None).is_ok());
+        assert!(c.admit(now, None).is_ok());
+        let err = c.admit(now, None).unwrap_err();
+        assert!(
+            matches!(err, EmberError::Overloaded(_)),
+            "queue-full must be the typed Overloaded error, got {err}"
+        );
+        assert_eq!(c.counters().rejected_full, 1);
+        // dequeue frees a slot
+        c.on_dequeue(Duration::from_micros(100));
+        assert!(c.admit(now, None).is_ok());
+    }
+
+    #[test]
+    fn deadline_policy_sheds_unmeetable_requests_only() {
+        let c = Controller::new(QosOptions { queue_depth: 0, policy: ShedPolicy::Deadline });
+        let now = Instant::now();
+        // EWMA is zero: a future deadline is meetable
+        assert!(c.admit(now, Some(now + Duration::from_millis(5))).is_ok());
+        // an already-expired deadline is not
+        assert!(c.admit(now + Duration::from_millis(1), Some(now)).is_err());
+        // no deadline = never shed early
+        assert!(c.admit(now, None).is_ok());
+        assert_eq!(c.counters().shed_admission, 1);
+    }
+
+    #[test]
+    fn ewma_tracks_queue_delay_and_gates_admission() {
+        let c = Controller::new(QosOptions { queue_depth: 0, policy: ShedPolicy::Deadline });
+        let now = Instant::now();
+        for _ in 0..64 {
+            c.admit(now, None).unwrap();
+            c.on_dequeue(Duration::from_millis(10));
+        }
+        let ewma = c.counters().ewma_us;
+        assert!(
+            (5_000..=10_000).contains(&ewma),
+            "EWMA must converge toward the 10ms sample stream, got {ewma}us"
+        );
+        // a 1ms budget is now hopeless, a 100ms budget is fine
+        assert!(c.admit(now, Some(now + Duration::from_millis(1))).is_err());
+        assert!(c.admit(now, Some(now + Duration::from_millis(100))).is_ok());
+    }
+
+    #[test]
+    fn ewma_policy_sheds_probabilistically_under_pressure() {
+        let c = Controller::new(QosOptions { queue_depth: 100, policy: ShedPolicy::Ewma });
+        let now = Instant::now();
+        // fill to 90% — well above the 50% ramp start. Fill-phase
+        // admits can themselves be shed probabilistically, so retry
+        // until the depth actually gets there.
+        let mut attempts = 0;
+        while c.counters().depth < 90 {
+            let _ = c.admit(now, None);
+            attempts += 1;
+            assert!(attempts < 100_000, "queue never filled past the pressure ramp");
+        }
+        let mut shed = 0;
+        for _ in 0..200 {
+            match c.admit(now, None) {
+                Ok(()) => c.on_dequeue(Duration::ZERO), // hold depth steady
+                Err(_) => shed += 1,
+            }
+        }
+        assert!(shed > 0, "a 90%-full ewma queue must shed some arrivals");
+        assert!(shed < 200, "pressure shed is probabilistic, not a hard cutoff");
+    }
+
+    #[test]
+    fn admission_queue_rejects_without_consumer_progress() {
+        let (tx, rx) = mpsc::channel::<u64>();
+        let ctrl = Arc::new(Controller::new(QosOptions {
+            queue_depth: 2,
+            policy: ShedPolicy::None,
+        }));
+        let q = AdmissionQueue::new(tx, ctrl.clone());
+        let now = Instant::now();
+        assert!(q.try_send(1, now, None).is_ok());
+        assert!(q.try_send(2, now, None).is_ok());
+        // nobody is draining: the third arrival is shed at admission
+        let err = q.try_send(3, now, None).unwrap_err();
+        assert!(matches!(err, EmberError::Overloaded(_)));
+        assert_eq!(rx.try_iter().count(), 2, "admitted items are enqueued, shed ones are not");
+        assert_eq!(ctrl.counters().rejected_full, 1);
+    }
+
+    #[test]
+    fn shed_policy_parses_and_displays() {
+        for (s, p) in [
+            ("none", ShedPolicy::None),
+            ("deadline", ShedPolicy::Deadline),
+            ("ewma", ShedPolicy::Ewma),
+        ] {
+            assert_eq!(s.parse::<ShedPolicy>().unwrap(), p);
+            assert_eq!(p.to_string(), s);
+        }
+        assert!("nope".parse::<ShedPolicy>().is_err());
+    }
+}

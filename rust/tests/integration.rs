@@ -98,7 +98,7 @@ fn coordinator_through_pjrt_matches_cpu_path() {
     let coord = Coordinator::start(
         DlrmModel::from_manifest(&rt, 42).unwrap(),
         Some(dir.into()),
-        BatchOptions { max_batch: 8, max_wait: Duration::from_millis(1) },
+        BatchOptions { max_batch: 8, max_wait: Duration::from_millis(1), ..Default::default() },
     );
     let mut got: Vec<_> = reqs
         .iter()
@@ -118,7 +118,7 @@ fn router_dispatches_to_multiple_models() {
         Coordinator::start(
             DlrmModel::new(4, 64, 8, 1, 6, 3, 16, 7).unwrap(),
             None,
-            BatchOptions { max_batch: 2, max_wait: Duration::from_millis(1) },
+            BatchOptions { max_batch: 2, max_wait: Duration::from_millis(1), ..Default::default() },
         )
     };
     let mut router = Router::new();

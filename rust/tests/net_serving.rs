@@ -69,8 +69,13 @@ fn frontend(eps: &[Endpoint], replicas: usize) -> NetFrontend {
 
 fn serve_opts() -> ServeOptions {
     ServeOptions {
-        batch: BatchOptions { max_batch: BATCH, max_wait: Duration::from_micros(200) },
+        batch: BatchOptions {
+            max_batch: BATCH,
+            max_wait: Duration::from_micros(200),
+            ..Default::default()
+        },
         shards: 1,
+        ..Default::default()
     }
 }
 

@@ -4,7 +4,7 @@
 //! `EMBER_QUICK_SEED=<n>`).
 
 use ember::compiler::passes::pipeline::{compile_with_trace, CompiledProgram};
-use ember::coordinator::batcher::{BatchOptions, Batcher};
+use ember::coordinator::batcher::{Batch, BatchOptions, Batcher};
 use ember::coordinator::Request;
 use ember::dae::{DaeSim, MachineConfig};
 use ember::data::Tensor;
@@ -253,29 +253,56 @@ fn prop_results_machine_independent() {
     });
 }
 
-/// Property 4: batcher routes every request into exactly one batch and
-/// preserves submission order.
+/// Property 4: batcher routes every request into exactly one batch,
+/// preserves submission order, and never emits a batch over either
+/// budget — more than `max_batch` requests, or more than `max_lookups`
+/// total lookups. The one sanctioned exception: a single request that
+/// alone exceeds the lookup budget forms its own singleton batch.
 #[test]
 fn prop_batcher_partition() {
-    check("batcher partition", 20, |rng| {
+    check("batcher partition", 24, |rng| {
         let max_batch = 1 + rng.below(16) as usize;
+        // budget sometimes disabled, sometimes tight enough that fat
+        // requests trip it mid-stream
+        let max_lookups =
+            if rng.below(3) == 0 { usize::MAX } else { 4 + rng.below(40) as usize };
         let n = 1 + rng.below(100) as usize;
         let mut b = Batcher::new(BatchOptions {
             max_batch,
             max_wait: Duration::from_millis(1),
+            max_lookups,
         });
         let t0 = Instant::now();
+        let check_batch = |batch: &Batch| -> Result<(), String> {
+            if batch.len() > max_batch {
+                return Err(format!("oversized batch: {} requests", batch.len()));
+            }
+            let cost: usize = batch
+                .reqs
+                .iter()
+                .map(|r| r.lookups.iter().map(|t| t.len()).sum::<usize>())
+                .sum();
+            if cost > max_lookups && batch.len() > 1 {
+                return Err(format!(
+                    "batch of {} blows the {max_lookups}-lookup budget ({cost})",
+                    batch.len()
+                ));
+            }
+            Ok(())
+        };
         let mut emitted: Vec<u64> = Vec::new();
         for i in 0..n as u64 {
-            let r = Request { id: i, lookups: vec![vec![0]], dense: vec![] };
+            let cost = 1 + rng.below(12) as i32;
+            let r = Request { id: i, lookups: vec![(0..cost).collect()], dense: vec![] };
             if let Some(batch) = b.push(r, t0) {
-                if batch.len() > max_batch {
-                    return Err(format!("oversized batch {}", batch.len()));
-                }
-                emitted.extend(batch.iter().map(|r| r.id));
+                check_batch(&batch)?;
+                emitted.extend(batch.reqs.iter().map(|r| r.id));
             }
         }
-        emitted.extend(b.flush().iter().map(|r| r.id));
+        if let Some(batch) = b.flush() {
+            check_batch(&batch)?;
+            emitted.extend(batch.reqs.iter().map(|r| r.id));
+        }
         if emitted != (0..n as u64).collect::<Vec<_>>() {
             return Err(format!("requests lost/duplicated/reordered: {emitted:?}"));
         }

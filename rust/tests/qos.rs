@@ -1,0 +1,168 @@
+//! Integration tests for the admission-control / overload subsystem:
+//! shed-at-admission under open-loop overload, survivor ordering when
+//! batch formation sheds expired requests, and the `none`-policy
+//! guarantee that the QoS path changes nothing when disabled.
+
+use ember::coordinator::{
+    run_open_loop, BatchOptions, Coordinator, DlrmModel, OpenLoopSpec, Request, ServeOptions,
+};
+use ember::qos::{QosOptions, ShedPolicy};
+use ember::util::rng::Rng;
+use ember::EmberError;
+use std::time::{Duration, Instant};
+
+fn model(batch: usize) -> DlrmModel {
+    DlrmModel::new(batch, 64, 8, 2, 6, 3, 16, 42).unwrap()
+}
+
+fn req(id: u64, m: &DlrmModel) -> Request {
+    let mut rng = Rng::new(id.wrapping_mul(31).wrapping_add(7));
+    Request {
+        id,
+        lookups: (0..m.num_tables)
+            .map(|_| (0..4).map(|_| rng.below(m.table_rows as u64) as i32).collect())
+            .collect(),
+        dense: (0..m.dense).map(|_| rng.f32()).collect(),
+    }
+}
+
+/// Overload hits the admission edge, not the error path: a depth-1
+/// queue in front of a batch-of-1 worker (busy on every request) takes
+/// a Poisson flood far past capacity. The surplus must come back as
+/// typed sheds — `LoadReport::errors` stays zero, the server records
+/// queue-full rejections, and the requests that were admitted are all
+/// served.
+#[test]
+fn open_loop_overload_sheds_at_admission_without_errors() {
+    let shape = model(1);
+    let coord = Coordinator::start_sharded(
+        model(1),
+        None,
+        ServeOptions {
+            batch: BatchOptions {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+            shards: 1,
+            qos: QosOptions { queue_depth: 1, policy: ShedPolicy::Ewma },
+        },
+    );
+    let spec = OpenLoopSpec {
+        target_qps: 500_000.0,
+        requests: 200,
+        collectors: 2,
+        ..Default::default()
+    };
+    let report = run_open_loop(&coord, spec, |k| req(k as u64, &shape)).unwrap();
+    let stats = coord.shutdown();
+    assert_eq!(report.sent, 200);
+    assert_eq!(report.ok + report.shed, 200, "every request is served or shed");
+    assert_eq!(report.errors, 0, "overload must never surface as an error");
+    assert!(report.ok > 0, "the admitted fraction is served");
+    assert!(report.shed > 0, "a depth-1 queue under a 500k-qps flood must shed");
+    assert!(
+        stats.rejected_full + stats.shed_admission > 0,
+        "sheds must fire at the admission edge, not only at batch formation"
+    );
+    assert_eq!(stats.errors, 0);
+    assert_eq!(
+        stats.hist.count(),
+        report.ok,
+        "only served requests record service latency"
+    );
+}
+
+/// Shedding never reorders survivors. Sixteen requests form one batch;
+/// the odd ones carry deadlines that expire while the batch forms, the
+/// even ones carry none. The flush must shed exactly the odd ones with
+/// the typed error and serve the even ones in submission order, each
+/// response still paired with its own request (`resp.id` matches).
+#[test]
+fn batch_formation_shedding_preserves_survivor_order() {
+    let shape = model(16);
+    let coord = Coordinator::start_sharded(
+        model(16),
+        None,
+        ServeOptions {
+            batch: BatchOptions {
+                max_batch: 16,
+                max_wait: Duration::from_secs(5),
+                ..Default::default()
+            },
+            shards: 1,
+            qos: QosOptions { queue_depth: 0, policy: ShedPolicy::Deadline },
+        },
+    );
+    let client = coord.client().unwrap();
+    let mut rxs = Vec::new();
+    for id in 0..15u64 {
+        // valid at admission (EWMA is zero), expired by flush time
+        let dl = (id % 2 == 1).then(|| Instant::now() + Duration::from_millis(2));
+        rxs.push((id, client.submit_with_deadline(req(id, &shape), dl).unwrap()));
+    }
+    // let every odd deadline expire, then trip the size trigger
+    std::thread::sleep(Duration::from_millis(10));
+    rxs.push((15, client.submit_with_deadline(req(15, &shape), None).unwrap()));
+    let mut survivors = Vec::new();
+    for (id, rx) in rxs {
+        match rx.recv().expect("worker must answer every request") {
+            Ok(resp) => {
+                assert_eq!(resp.id, id, "response crossed wires after shedding");
+                survivors.push(id);
+            }
+            Err(EmberError::Overloaded(_)) => {
+                assert_eq!(id % 2, 1, "request {id} shed without an expired deadline");
+            }
+            Err(other) => panic!("request {id}: expected Ok or Overloaded, got {other}"),
+        }
+    }
+    assert_eq!(
+        survivors,
+        (0..16).filter(|id| id % 2 == 0).collect::<Vec<u64>>(),
+        "survivors must keep submission order"
+    );
+    let stats = coord.shutdown();
+    assert_eq!(stats.shed_batch, 8);
+    assert_eq!(stats.errors, 0);
+}
+
+/// With QoS disabled (`ShedPolicy::None`, unbounded queue — the
+/// default `ServeOptions`), the serving path is byte-identical to the
+/// oracle and no QoS counter ever moves.
+#[test]
+fn disabled_qos_is_byte_identical_to_direct_inference() {
+    let shape = model(4);
+    let reqs: Vec<Request> = (0..8).map(|id| req(id, &shape)).collect();
+    let direct: Vec<f32> = reqs
+        .chunks(4)
+        .flat_map(|c| model(4).infer_batch_cpu(c).unwrap())
+        .map(|r| r.score)
+        .collect();
+    let coord = Coordinator::start_sharded(
+        model(4),
+        None,
+        ServeOptions {
+            batch: BatchOptions {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+            shards: 1,
+            qos: QosOptions::default(),
+        },
+    );
+    let rxs: Vec<_> = reqs.iter().map(|r| coord.submit(r.clone()).unwrap()).collect();
+    let mut got: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+    got.sort_by_key(|r| r.id);
+    let stats = coord.shutdown();
+    for (g, want) in got.iter().zip(&direct) {
+        assert_eq!(g.score, *want, "request {}: QoS-off path must be byte-identical", g.id);
+    }
+    assert_eq!(stats.shed(), 0);
+    assert_eq!(stats.shed_admission, 0);
+    assert_eq!(stats.rejected_full, 0);
+    assert_eq!(stats.shed_batch, 0);
+    assert_eq!(stats.deadline_missed, 0);
+    assert_eq!(stats.errors, 0);
+}

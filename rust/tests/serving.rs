@@ -47,7 +47,7 @@ fn oversized_max_batch_is_clamped_and_serves_every_request() {
     let coord = Coordinator::start(
         m,
         None,
-        BatchOptions { max_batch: 64, max_wait: Duration::from_micros(100) },
+        BatchOptions { max_batch: 64, max_wait: Duration::from_micros(100), ..Default::default() },
     );
     let rxs: Vec<_> = reqs.iter().map(|r| coord.submit(r.clone()).unwrap()).collect();
     let mut got: Vec<Response> = rxs
@@ -101,8 +101,13 @@ fn sharded_coordinator_end_to_end_with_stats() {
             model(4, 8),
             None,
             ServeOptions {
-                batch: BatchOptions { max_batch: 4, max_wait: Duration::from_micros(100) },
+                batch: BatchOptions {
+                    max_batch: 4,
+                    max_wait: Duration::from_micros(100),
+                    ..Default::default()
+                },
                 shards,
+                ..Default::default()
             },
         );
         let rxs: Vec<_> = reqs.iter().map(|r| coord.submit(r.clone()).unwrap()).collect();
@@ -133,8 +138,13 @@ fn loadgen_against_router_spread_pools() {
             model(4, 4),
             None,
             ServeOptions {
-                batch: BatchOptions { max_batch: 4, max_wait: Duration::from_micros(200) },
+                batch: BatchOptions {
+                    max_batch: 4,
+                    max_wait: Duration::from_micros(200),
+                    ..Default::default()
+                },
                 shards: 2,
+                ..Default::default()
             },
         )
     };
