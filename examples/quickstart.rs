@@ -7,12 +7,10 @@
 //!
 //! Compilation goes through an [`EmberSession`]; execution goes through
 //! the unified executor layer (`ember::exec`). One entry point, four
-//! backends — before / after:
+//! backends (the pre-0.4 `run_program` / `bind_*_env` shims are gone):
 //!
 //! ```ignore
-//! // old (deprecated shims, still work):
-//! let got = run_program(&program.dlc, &mut csr.bind_sls_env(&table, false))?;
-//! // new: instantiate once, run typed bindings on any backend
+//! // instantiate once, run typed bindings on any backend
 //! let mut exec = session.instantiate(&bag, Backend::Interp)?;
 //! let got = exec.run(&mut Bindings::sls(&csr, &table))?.output;
 //! ```

@@ -2,11 +2,11 @@
 //! offline image has no criterion).
 //!
 //! Runs the same smoke matrix `ember bench --smoke` uses — SLS on
-//! `Interp` vs `Fast` vs `HandOpt` — and prints the perf table. The
-//! acceptance floor (fast ≥ 1.5× interp mean throughput on SLS) is
-//! enforced in CI by the `perf-smoke` job against
-//! `ci/bench_baseline.json`; this bench is the local loop for the same
-//! number.
+//! `Interp` vs `Fast` vs `HandOpt`, single-threaded and on the
+//! 4-thread `/t4` cell — and prints the perf table. The acceptance
+//! floor (fast ≥ 3.0× interp mean throughput on SLS) is enforced in
+//! CI by the `perf-smoke` job against `ci/bench_baseline.json`; this
+//! bench is the local loop for the same number.
 //!
 //! Run: `cargo bench --bench fastpath`
 

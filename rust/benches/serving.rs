@@ -239,6 +239,7 @@ fn main() {
                 },
                 shards: 4,
                 qos: QosOptions { queue_depth: 128, policy: ShedPolicy::Ewma },
+                threads: 1,
             },
         );
         let spec = OpenLoopSpec {
@@ -248,6 +249,7 @@ fn main() {
             collectors: 8,
             dist: IndexDist::Uniform,
             deadline: Some(Duration::from_millis(250)),
+            ..Default::default()
         };
         let report = run_open_loop(&coord, spec, |k| {
             synthetic_request_with(TABLES, ROWS, DENSE, LOOKUPS, IndexDist::Uniform, 0, k)

@@ -13,6 +13,4 @@ pub mod passes;
 pub use decouple::decouple;
 pub use lower_dlc::lower_to_dlc;
 pub use pass_manager::{DumpHook, Pass, PassContext, PassManager, PassReport, PassTrace};
-#[allow(deprecated)]
-pub use passes::pipeline::compile;
 pub use passes::pipeline::{compile_with_trace, CompileOptions, CompiledProgram, OptLevel};

@@ -8,10 +8,10 @@
 //!
 //! The levels are declarative pipelines over the pass registry: see
 //! [`crate::compiler::pass_manager::PassManager::for_options`]. The
-//! preferred entry points are [`crate::session::EmberSession`] (cached,
+//! entry points are [`crate::session::EmberSession`] (cached,
 //! multi-op) and [`compile_with_trace`] (one-shot, returns the
-//! [`PassTrace`]); the historical [`compile`] free function remains as
-//! a deprecated shim.
+//! [`PassTrace`]); the historical `compile` free function was removed
+//! in 0.4.
 
 use super::model_specific;
 use crate::compiler::pass_manager::{PassContext, PassManager, PassTrace};
@@ -107,11 +107,6 @@ impl CompileOptions {
         self.spattn = cfg;
         self
     }
-
-    #[deprecated(since = "0.2.0", note = "use `CompileOptions::with_opt`")]
-    pub fn at(opt: OptLevel) -> Self {
-        CompileOptions::with_opt(opt)
-    }
 }
 
 /// A fully compiled embedding operation, retaining every IR stage for
@@ -134,8 +129,8 @@ pub struct CompiledProgram {
 
 /// Compile an already-lowered SCF function through the standard pass
 /// pipeline for `opts`. This is the single underlying driver: the
-/// session, [`compile_with_trace`], and the deprecated [`compile`] shim
-/// all funnel here. `dump` forwards to the pass manager's stage hook.
+/// session and [`compile_with_trace`] both funnel here. `dump`
+/// forwards to the pass manager's stage hook.
 pub fn compile_scf(
     op: &OpClass,
     scf: ScfFunc,
@@ -171,15 +166,6 @@ pub fn compile_with_trace(
     opts: CompileOptions,
 ) -> Result<(CompiledProgram, PassTrace)> {
     compile_scf(op, op.to_scf(), opts, None)
-}
-
-/// Compile an embedding op through the full pipeline.
-#[deprecated(
-    since = "0.2.0",
-    note = "use `session::EmberSession::compile` (cached) or `compile_with_trace`"
-)]
-pub fn compile(op: &OpClass, opts: CompileOptions) -> Result<CompiledProgram> {
-    compile_with_trace(op, opts).map(|(p, _)| p)
 }
 
 #[cfg(test)]

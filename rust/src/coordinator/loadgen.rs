@@ -135,6 +135,11 @@ pub struct LoadSpec {
     /// deadline of `now + deadline`, which the coordinator's QoS
     /// policy may enforce. `None` = no deadlines.
     pub deadline: Option<Duration>,
+    /// Max retries per request after an `Overloaded` rejection. Each
+    /// retry backs off with jittered exponential delay (see
+    /// [`retry_backoff`]) instead of hammering the admission edge;
+    /// `0` (the default) keeps the classic shed-and-move-on behavior.
+    pub retry_budget: u32,
 }
 
 impl Default for LoadSpec {
@@ -145,6 +150,7 @@ impl Default for LoadSpec {
             target_qps: None,
             dist: IndexDist::Uniform,
             deadline: None,
+            retry_budget: 0,
         }
     }
 }
@@ -167,6 +173,12 @@ pub struct OpenLoopSpec {
     pub dist: IndexDist,
     /// Per-request latency budget (see [`LoadSpec::deadline`]).
     pub deadline: Option<Duration>,
+    /// Max retries per request after a submit-time `Overloaded`
+    /// rejection (see [`LoadSpec::retry_budget`]). Retries are
+    /// rescheduled on the arrival thread after a jittered backoff, so
+    /// they ride the same Poisson clock as fresh arrivals instead of
+    /// stalling it.
+    pub retry_budget: u32,
 }
 
 impl Default for OpenLoopSpec {
@@ -178,6 +190,7 @@ impl Default for OpenLoopSpec {
             collectors: 4,
             dist: IndexDist::Uniform,
             deadline: None,
+            retry_budget: 0,
         }
     }
 }
@@ -193,6 +206,10 @@ pub struct LoadReport {
     /// overload, counted apart from real failures.
     pub shed: u64,
     pub errors: u64,
+    /// Retry attempts issued under the spec's `retry_budget` (a
+    /// request that eventually succeeds after two backoffs counts two
+    /// retries and one `ok`).
+    pub retries: u64,
     pub wall: Duration,
     /// End-to-end latency measured at the client (submit → response).
     pub hist: LatencyHist,
@@ -225,23 +242,36 @@ impl LoadReport {
     /// Header matching [`LoadReport::table_row`]'s columns (the caller
     /// prepends its own `target` column to both).
     pub fn table_header() -> String {
-        format!("{:>10}  {:>7}  {:>9}  {:>9}  {:>9}", "achieved", "shed", "p50", "p95", "p99")
+        format!(
+            "{:>10}  {:>7}  {:>9}  {:>9}  {:>9}  {:>8}",
+            "achieved", "shed", "p50", "p95", "p99", "retries"
+        )
     }
 
     /// Shared row tail for latency/throughput tables
-    /// (`achieved  shed  p50  p95  p99`), so the CLI, example and
-    /// bench render the sweep identically. `achieved` counts only
+    /// (`achieved  shed  p50  p95  p99  retries`), so the CLI, example
+    /// and bench render the sweep identically. `achieved` counts only
     /// served requests — goodput, not offered load.
     pub fn table_row(&self) -> String {
         format!(
-            "{:>10.0}  {:>7}  {:>9.2?}  {:>9.2?}  {:>9.2?}",
+            "{:>10.0}  {:>7}  {:>9.2?}  {:>9.2?}  {:>9.2?}  {:>8}",
             self.throughput_rps(),
             self.shed,
             self.p50(),
             self.p95(),
-            self.p99()
+            self.p99(),
+            self.retries
         )
     }
+}
+
+/// Jittered exponential backoff before retry `attempt` (1-based):
+/// 1ms base doubling per attempt, capped at 16ms, plus a uniform
+/// jitter of up to the same magnitude — synchronized clients shed by
+/// one admission wave must not re-converge on the next.
+fn retry_backoff(attempt: u32, rng: &mut Rng) -> Duration {
+    let base_us = 1000u64 << attempt.saturating_sub(1).min(4);
+    Duration::from_micros(base_us + rng.below(base_us))
 }
 
 /// Drive `coord` with `spec`, generating request `k` of client `c` via
@@ -257,7 +287,7 @@ where
         .map(|q| Duration::from_secs_f64(clients as f64 / q));
     let make_req = &make_req;
     let t0 = Instant::now();
-    let mut results: Vec<(u64, u64, u64, LatencyHist)> = Vec::with_capacity(clients);
+    let mut results: Vec<(u64, u64, u64, u64, LatencyHist)> = Vec::with_capacity(clients);
     {
         let mut spawn_err = None;
         let mut panicked = 0usize;
@@ -273,7 +303,8 @@ where
                 };
                 handles.push(s.spawn(move || {
                     let mut hist = LatencyHist::default();
-                    let (mut ok, mut shed, mut errors) = (0u64, 0u64, 0u64);
+                    let (mut ok, mut shed, mut errors, mut retries) = (0u64, 0u64, 0u64, 0u64);
+                    let mut backoff_rng = Rng::new(0xBAC0_FF ^ c as u64);
                     let mut next = Instant::now();
                     for k in 0..spec.requests_per_client {
                         if let Some(p) = pace {
@@ -284,19 +315,44 @@ where
                             next += p;
                         }
                         let t = Instant::now();
-                        let deadline = spec.deadline.map(|d| t + d);
-                        match client.infer_with_deadline(make_req(c, k), deadline) {
-                            Ok(_) => {
-                                hist.record(t.elapsed());
-                                ok += 1;
+                        let mut attempts = 0u32;
+                        loop {
+                            // each attempt gets a fresh deadline — a
+                            // retry is a new request, its budget restarts
+                            let at = Instant::now();
+                            let deadline = spec.deadline.map(|d| at + d);
+                            match client.infer_with_deadline(make_req(c, k), deadline) {
+                                Ok(_) => {
+                                    // latency from first submit: backoff
+                                    // waits are part of the retry cost
+                                    hist.record(t.elapsed());
+                                    ok += 1;
+                                    break;
+                                }
+                                Err(EmberError::Overloaded(_))
+                                    if attempts < spec.retry_budget =>
+                                {
+                                    attempts += 1;
+                                    retries += 1;
+                                    std::thread::sleep(retry_backoff(
+                                        attempts,
+                                        &mut backoff_rng,
+                                    ));
+                                }
+                                // admission/deadline sheds are deliberate
+                                // QoS behavior, not failures
+                                Err(EmberError::Overloaded(_)) => {
+                                    shed += 1;
+                                    break;
+                                }
+                                Err(_) => {
+                                    errors += 1;
+                                    break;
+                                }
                             }
-                            // admission/deadline sheds are deliberate QoS
-                            // behavior, not failures
-                            Err(EmberError::Overloaded(_)) => shed += 1,
-                            Err(_) => errors += 1,
                         }
                     }
-                    (ok, shed, errors, hist)
+                    (ok, shed, errors, retries, hist)
                 }));
             }
             for h in handles {
@@ -323,10 +379,11 @@ where
         offered_qps: spec.target_qps.filter(|q| *q > 0.0),
         ..Default::default()
     };
-    for (ok, shed, errors, hist) in results {
+    for (ok, shed, errors, retries, hist) in results {
         report.ok += ok;
         report.shed += shed;
         report.errors += errors;
+        report.retries += retries;
         report.sent += ok + shed + errors;
         report.hist.merge(&hist);
     }
@@ -356,6 +413,7 @@ where
     let t0 = Instant::now();
     let mut submit_shed = 0u64;
     let mut submit_errors = 0u64;
+    let mut submit_retries = 0u64;
     let mut results: Vec<(u64, u64, u64, LatencyHist)> = Vec::with_capacity(collectors);
     let mut panicked = 0usize;
     std::thread::scope(|s| {
@@ -390,23 +448,72 @@ where
 
         // Poisson arrivals: exponential inter-arrival gaps with mean
         // 1/rate, submitted from this thread without awaiting replies.
-        let mut arrivals = Rng::new(spec.seed);
-        let mut next = Instant::now();
-        for k in 0..spec.requests {
-            let u = arrivals.f64();
-            next += Duration::from_secs_f64(-(1.0 - u).ln() / spec.target_qps);
-            let now = Instant::now();
-            if next > now {
-                std::thread::sleep(next - now);
-            }
-            let submit_t = Instant::now();
-            let deadline = spec.deadline.map(|d| submit_t + d);
-            match client.submit_with_deadline(make_req(k), deadline) {
-                Ok(resp_rx) => {
-                    let _ = tx.send((submit_t, resp_rx));
+        // Submit-time sheds reschedule onto `pending` (due-time, request
+        // number, attempts-so-far) and fire from the same arrival clock
+        // once their jittered backoff elapses — retries never stall the
+        // Poisson process, and exhausted budgets fall through to `shed`.
+        {
+            let mut arrivals = Rng::new(spec.seed);
+            let mut backoff_rng = Rng::new(spec.seed ^ 0xBAC0_FF);
+            let mut pending: Vec<(Instant, usize, u32)> = Vec::new();
+            let mut submit_one = |k: usize,
+                                  attempts: u32,
+                                  pending: &mut Vec<(Instant, usize, u32)>,
+                                  backoff_rng: &mut Rng| {
+                let submit_t = Instant::now();
+                let deadline = spec.deadline.map(|d| submit_t + d);
+                match client.submit_with_deadline(make_req(k), deadline) {
+                    Ok(resp_rx) => {
+                        let _ = tx.send((submit_t, resp_rx));
+                    }
+                    Err(EmberError::Overloaded(_)) if attempts < spec.retry_budget => {
+                        submit_retries += 1;
+                        let due = submit_t + retry_backoff(attempts + 1, backoff_rng);
+                        pending.push((due, k, attempts + 1));
+                    }
+                    Err(EmberError::Overloaded(_)) => submit_shed += 1,
+                    Err(_) => submit_errors += 1,
                 }
-                Err(EmberError::Overloaded(_)) => submit_shed += 1,
-                Err(_) => submit_errors += 1,
+            };
+            let mut next = Instant::now();
+            for k in 0..spec.requests {
+                let u = arrivals.f64();
+                next += Duration::from_secs_f64(-(1.0 - u).ln() / spec.target_qps);
+                let now = Instant::now();
+                if next > now {
+                    std::thread::sleep(next - now);
+                }
+                // fire any retry whose backoff has elapsed (re-sheds
+                // re-enter `pending` with a strictly future due time)
+                let now = Instant::now();
+                let mut i = 0;
+                while i < pending.len() {
+                    if pending[i].0 <= now {
+                        let (_, rk, att) = pending.swap_remove(i);
+                        submit_one(rk, att, &mut pending, &mut backoff_rng);
+                    } else {
+                        i += 1;
+                    }
+                }
+                submit_one(k, 0, &mut pending, &mut backoff_rng);
+            }
+            // drain the retries still backing off after the last arrival
+            while !pending.is_empty() {
+                let earliest = pending.iter().map(|p| p.0).min().unwrap();
+                let now = Instant::now();
+                if earliest > now {
+                    std::thread::sleep(earliest - now);
+                }
+                let now = Instant::now();
+                let mut i = 0;
+                while i < pending.len() {
+                    if pending[i].0 <= now {
+                        let (_, rk, att) = pending.swap_remove(i);
+                        submit_one(rk, att, &mut pending, &mut backoff_rng);
+                    } else {
+                        i += 1;
+                    }
+                }
             }
         }
         drop(tx); // collectors drain the queue then fall out of recv
@@ -427,6 +534,7 @@ where
         offered_qps: Some(spec.target_qps),
         shed: submit_shed,
         errors: submit_errors,
+        retries: submit_retries,
         sent: submit_shed + submit_errors,
         ..Default::default()
     };
@@ -612,6 +720,7 @@ mod tests {
                 },
                 shards: 1,
                 qos: QosOptions { queue_depth: 0, policy: ShedPolicy::Deadline },
+                threads: 1,
             },
         );
         let spec = LoadSpec {
@@ -629,6 +738,83 @@ mod tests {
         let stats = coord.shutdown();
         assert_eq!(stats.shed_batch, 6);
         assert_eq!(stats.errors, 0);
+    }
+
+    /// Retry budget turns transient admission sheds into eventual
+    /// successes: a depth-1 queue in front of a batch-of-1 worker sheds
+    /// most of a 4-client burst on first contact, but with 8 retries
+    /// and millisecond backoffs every request lands. The report must
+    /// show the backoff work (`retries > 0`) and zero residual sheds.
+    #[test]
+    fn closed_loop_retry_budget_converts_sheds_into_successes() {
+        use crate::qos::{QosOptions, ShedPolicy};
+        let model = DlrmModel::new(1, 64, 8, 1, 6, 3, 16, 1).unwrap();
+        let shape = DlrmModel::new(1, 64, 8, 1, 6, 3, 16, 1).unwrap();
+        let coord = Coordinator::start_sharded(
+            model,
+            None,
+            ServeOptions {
+                batch: BatchOptions {
+                    max_batch: 1,
+                    max_wait: Duration::from_millis(1),
+                    ..Default::default()
+                },
+                shards: 1,
+                qos: QosOptions { queue_depth: 1, policy: ShedPolicy::Ewma },
+                threads: 1,
+            },
+        );
+        let spec = LoadSpec {
+            clients: 4,
+            requests_per_client: 8,
+            retry_budget: 32,
+            ..Default::default()
+        };
+        let report = run_closed_loop(&coord, spec, |c, k| make_req(&shape, c, k)).unwrap();
+        assert_eq!(report.sent, 32);
+        assert_eq!(report.ok, 32, "a 32-retry budget must absorb a depth-1 queue");
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.errors, 0);
+        assert!(report.retries > 0, "contention on a depth-1 queue must trigger retries");
+        coord.shutdown();
+    }
+
+    /// Open-loop retries reschedule on the arrival thread: with the
+    /// same depth-1 bottleneck, a fast Poisson burst sheds at submit
+    /// time, and the retry budget must resubmit (and drain the pending
+    /// queue after the last arrival) instead of losing those requests.
+    #[test]
+    fn open_loop_retry_budget_resubmits_after_backoff() {
+        use crate::qos::{QosOptions, ShedPolicy};
+        let model = DlrmModel::new(1, 64, 8, 1, 6, 3, 16, 1).unwrap();
+        let coord = Coordinator::start_sharded(
+            model,
+            None,
+            ServeOptions {
+                batch: BatchOptions {
+                    max_batch: 1,
+                    max_wait: Duration::from_millis(1),
+                    ..Default::default()
+                },
+                shards: 1,
+                qos: QosOptions { queue_depth: 1, policy: ShedPolicy::Ewma },
+                threads: 1,
+            },
+        );
+        let spec = OpenLoopSpec {
+            target_qps: 200_000.0,
+            requests: 32,
+            collectors: 2,
+            retry_budget: 64,
+            ..Default::default()
+        };
+        let report =
+            run_open_loop(&coord, spec, |k| synthetic_request(1, 64, 3, 6, 0, k)).unwrap();
+        assert_eq!(report.sent, 32, "retries must not double-count sent requests");
+        assert_eq!(report.ok, 32, "the retry budget must absorb submit-time sheds");
+        assert_eq!(report.errors, 0);
+        assert!(report.retries > 0, "a 50k-qps burst into a depth-1 queue must retry");
+        coord.shutdown();
     }
 
     #[test]

@@ -44,11 +44,20 @@ pub struct ServeOptions {
     /// Admission control / overload shedding. The default (unbounded
     /// queue, policy `none`) reproduces the pre-QoS behavior exactly.
     pub qos: QosOptions,
+    /// Intra-batch kernel threads per shard worker (fast-path output
+    /// rows split across a scoped pool). `1` keeps each shard's
+    /// kernels serial; higher counts stay byte-identical.
+    pub threads: usize,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { batch: BatchOptions::default(), shards: 1, qos: QosOptions::default() }
+        ServeOptions {
+            batch: BatchOptions::default(),
+            shards: 1,
+            qos: QosOptions::default(),
+            threads: 1,
+        }
     }
 }
 
@@ -160,7 +169,12 @@ impl Coordinator {
         let handle = std::thread::spawn(move || {
             let runtime = artifacts_dir.and_then(|d| Runtime::new(d).ok());
             let embedder: Option<Box<dyn EmbedStage>> = if opts.shards > 1 {
-                Some(Box::new(ShardPool::with_trace(&model, opts.shards, worker_trace.clone())))
+                Some(Box::new(ShardPool::with_options(
+                    &model,
+                    opts.shards,
+                    worker_trace.clone(),
+                    crate::exec::ExecOptions::with_threads(opts.threads),
+                )))
             } else {
                 None
             };
@@ -775,6 +789,7 @@ mod tests {
                 },
                 shards: 1,
                 qos: QosOptions { queue_depth: 0, policy: ShedPolicy::Deadline },
+                threads: 1,
             },
         );
         let client = coord.client().unwrap();

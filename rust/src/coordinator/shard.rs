@@ -25,7 +25,7 @@
 use super::{DlrmModel, Request};
 use crate::compiler::passes::pipeline::CompiledProgram;
 use crate::error::{EmberError, Result};
-use crate::exec::{Backend, Bindings, Executor, Instance};
+use crate::exec::{Backend, Bindings, ExecOptions, Executor, Instance};
 use crate::trace::{TraceEvent, TraceSink};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
@@ -69,6 +69,19 @@ impl ShardPool {
     /// [`ShardPool::new`] with a trace sink: each shard thread records
     /// a `shard_embed` span per batch on its own labeled track.
     pub fn with_trace(model: &DlrmModel, shards: usize, trace: TraceSink) -> Self {
+        Self::with_options(model, shards, trace, ExecOptions::default())
+    }
+
+    /// [`ShardPool::with_trace`] with explicit [`ExecOptions`]: each
+    /// shard's fast-path instance splits output rows across
+    /// `exec_opts.threads` scoped workers (byte-identical at every
+    /// setting; threads own disjoint rows).
+    pub fn with_options(
+        model: &DlrmModel,
+        shards: usize,
+        trace: TraceSink,
+        exec_opts: ExecOptions,
+    ) -> Self {
         let plan = shard_plan(model.num_tables, shards);
         let mut txs = Vec::with_capacity(plan.len());
         let mut handles = Vec::with_capacity(plan.len());
@@ -80,6 +93,7 @@ impl ShardPool {
                 batch: model.batch,
                 max_lookups: model.max_lookups,
                 shard_id,
+                exec_opts,
                 trace: trace.clone(),
             };
             handles.push(std::thread::spawn(move || worker.run(rx)));
@@ -177,18 +191,20 @@ struct ShardWorker {
     batch: usize,
     max_lookups: usize,
     shard_id: usize,
+    exec_opts: ExecOptions,
     trace: TraceSink,
 }
 
 impl ShardWorker {
     fn run(self, rx: Receiver<Job>) {
-        let ShardWorker { program, tables, batch, max_lookups, shard_id, trace } = self;
+        let ShardWorker { program, tables, batch, max_lookups, shard_id, exec_opts, trace } =
+            self;
         let tid = if trace.is_enabled() {
             trace.name_current_thread(&format!("shard {shard_id}"))
         } else {
             0
         };
-        let mut exec = match Instance::new(&program, Backend::Fast) {
+        let mut exec = match Instance::with_options(&program, Backend::Fast, exec_opts) {
             Ok(i) => i,
             Err(e) => {
                 // poison every job with the construction error

@@ -1,12 +1,11 @@
 //! Typed operand binding for the executor layer.
 //!
 //! A [`Bindings`] pairs an [`OpClass`] with the `Env` its compiled
-//! program consumes, built through typed constructors instead of the
-//! historical stringly-typed `bind_*_env` helpers (which survive as
-//! deprecated shims delegating here, pinned byte-identical by
-//! `tests/api_shims.rs`). Knowing the op class is what lets one
-//! binding set retarget across backends — including PJRT, which needs
-//! to relower the operands into the artifact's calling convention.
+//! program consumes, built through typed constructors (the historical
+//! stringly-typed `bind_*_env` helpers were removed in 0.4). Knowing
+//! the op class is what lets one binding set retarget across backends
+//! — including PJRT, which needs to relower the operands into the
+//! artifact's calling convention.
 
 use crate::data::{Buf, Env, Tensor};
 use crate::error::{EmberError, Result};
@@ -291,7 +290,8 @@ impl Bindings {
         &mut self.env
     }
 
-    /// Unwrap into the raw `Env` (the deprecated `bind_*_env` shims).
+    /// Unwrap into the raw `Env` (callers that drive the interpreter
+    /// or simulator directly).
     pub fn into_env(self) -> Env {
         self.env
     }

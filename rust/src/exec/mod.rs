@@ -36,6 +36,7 @@
 mod bindings;
 
 pub use bindings::Bindings;
+pub use crate::interp::fast::{KernelRegistry, KernelSpec};
 
 use crate::compiler::passes::pipeline::CompiledProgram;
 use crate::dae::{DaeSim, MachineConfig};
@@ -77,6 +78,33 @@ pub enum Backend {
     /// runtime error at `run` time; callers gate on
     /// [`Runtime::can_execute`].
     Pjrt,
+}
+
+/// Backend-independent execution knobs for an [`Instance`].
+///
+/// `threads` is the intra-batch parallelism of [`Backend::Fast`]'s
+/// fused kernels: output rows are split across that many scoped
+/// threads (clamped to the batch). The default (`1`) takes the exact
+/// serial path, and because threads own disjoint output rows the
+/// result is byte-identical at every setting (pinned by
+/// `tests/exec_parity.rs`). Other backends ignore the options.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecOptions {
+    /// Worker threads for intra-batch row parallelism (min 1).
+    pub threads: usize,
+}
+
+impl Default for ExecOptions {
+    fn default() -> Self {
+        ExecOptions { threads: 1 }
+    }
+}
+
+impl ExecOptions {
+    /// Options with a given thread count (0 is treated as 1).
+    pub fn with_threads(threads: usize) -> Self {
+        ExecOptions { threads: threads.max(1) }
+    }
 }
 
 impl Backend {
@@ -209,11 +237,21 @@ impl Instance {
     /// through [`Instance::with_artifacts`] or a ready-made runtime
     /// through [`Instance::with_runtime`].
     pub fn new(program: &CompiledProgram, backend: Backend) -> Result<Instance> {
+        Self::with_options(program, backend, ExecOptions::default())
+    }
+
+    /// [`Instance::new`] with explicit [`ExecOptions`] (thread count
+    /// for the fast path's intra-batch parallelism).
+    pub fn with_options(
+        program: &CompiledProgram,
+        backend: Backend,
+        opts: ExecOptions,
+    ) -> Result<Instance> {
         let runtime = match backend {
             Backend::Pjrt => Some(Runtime::new("artifacts")?),
             _ => None,
         };
-        Self::build(program, backend, runtime)
+        Self::build(program, backend, runtime, opts)
     }
 
     /// A PJRT-backed instance over an explicit artifacts directory —
@@ -222,19 +260,25 @@ impl Instance {
         program: &CompiledProgram,
         artifacts_dir: impl AsRef<std::path::Path>,
     ) -> Result<Instance> {
-        Self::build(program, Backend::Pjrt, Some(Runtime::new(artifacts_dir)?))
+        Self::build(
+            program,
+            Backend::Pjrt,
+            Some(Runtime::new(artifacts_dir)?),
+            ExecOptions::default(),
+        )
     }
 
     /// A PJRT-backed instance over an existing runtime (shares the
     /// runtime's client and artifact cache).
     pub fn with_runtime(program: &CompiledProgram, runtime: Runtime) -> Result<Instance> {
-        Self::build(program, Backend::Pjrt, Some(runtime))
+        Self::build(program, Backend::Pjrt, Some(runtime), ExecOptions::default())
     }
 
     fn build(
         program: &CompiledProgram,
         backend: Backend,
         runtime: Option<Runtime>,
+        opts: ExecOptions,
     ) -> Result<Instance> {
         let dlc = match backend {
             Backend::HandOpt => {
@@ -249,7 +293,7 @@ impl Instance {
             _ => Some(Interp::new(&dlc)?),
         };
         let fast = match backend {
-            Backend::Fast => Some(FastExec::new(program)?),
+            Backend::Fast => Some(FastExec::with_options(program, opts)?),
             _ => None,
         };
         Ok(Instance {
@@ -287,10 +331,12 @@ impl Instance {
         self.runs
     }
 
-    /// For a [`Backend::Fast`] instance: the name of the fused kernel
-    /// `compile_fast` selected (`"general"` means every run takes the
-    /// interpreter fallback). `None` on every other backend. Tests pin
-    /// this so the fused hot path can't silently rot into the fallback.
+    /// For a [`Backend::Fast`] instance: the name of the
+    /// [`KernelSpec`] that `compile_fast` selected from the
+    /// [`KernelRegistry`] (`"general"` means no spec matched and every
+    /// run takes the interpreter fallback). `None` on every other
+    /// backend. Tests pin this so the fused hot path can't silently
+    /// rot into the fallback.
     pub fn fast_kernel(&self) -> Option<&'static str> {
         self.fast.as_ref().map(|f| f.kernel_name())
     }

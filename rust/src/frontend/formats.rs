@@ -1,8 +1,7 @@
 //! Sparse operand formats (paper §4): CSR segments for SLS/SpMM/MP,
-//! flat index lists for KG, blocked index lists for SpAttn — plus
-//! conversion into the `Env` tensors the compiled programs consume.
-
-use crate::data::{Env, Tensor};
+//! flat index lists for KG, blocked index lists for SpAttn.
+//! Conversion into the `Env` tensors the compiled programs consume
+//! lives in [`crate::exec::Bindings`].
 
 /// CSR-encoded sparse matrix rows: `ptrs[b]..ptrs[b+1]` indexes `idxs`
 /// (column ids) and optionally `vals` (non-zero values).
@@ -65,60 +64,28 @@ impl Csr {
         }
         (idxs, lens, vals)
     }
-
-    /// Bind this CSR and an embedding table into an `Env` using the
-    /// canonical memref names of the SLS/SpMM SCF functions.
-    #[deprecated(
-        since = "0.3.0",
-        note = "use `exec::Bindings::sls` / `exec::Bindings::spmm`"
-    )]
-    pub fn bind_sls_env(&self, table: &Tensor, weighted: bool) -> Env {
-        if weighted {
-            crate::exec::Bindings::spmm(self, table).into_env()
-        } else {
-            crate::exec::Bindings::sls(self, table).into_env()
-        }
-    }
 }
 
 /// Flat lookup list (knowledge graphs: exactly one non-zero per row).
+///
+/// Env binding goes through [`crate::exec::Bindings::kg`] (the 0.3
+/// `bind_kg_env` shim was removed in 0.4).
 #[derive(Debug, Clone, PartialEq)]
 pub struct FlatLookups {
     pub idxs: Vec<i32>,
     pub num_rows: usize,
 }
 
-impl FlatLookups {
-    /// The semiring only affects compute handlers, never the operand
-    /// env, so the shim binds through the `PlusTimes` constructor.
-    #[deprecated(since = "0.3.0", note = "use `exec::Bindings::kg`")]
-    pub fn bind_kg_env(&self, table: &Tensor) -> Env {
-        crate::exec::Bindings::kg(crate::frontend::Semiring::PlusTimes, self, table)
-            .into_env()
-    }
-}
-
 /// Blocked gather list (BigBird SpAttn): block ids into a key tensor
 /// partitioned into blocks of `block` consecutive rows.
+///
+/// Env binding goes through [`crate::exec::Bindings::spattn`] (the 0.3
+/// `bind_spattn_env` shim was removed in 0.4).
 #[derive(Debug, Clone, PartialEq)]
 pub struct BlockGathers {
     pub block_idxs: Vec<i32>,
     pub block: usize,
     pub num_key_blocks: usize,
-}
-
-impl BlockGathers {
-    #[deprecated(since = "0.3.0", note = "use `exec::Bindings::spattn`")]
-    pub fn bind_spattn_env(&self, keys: &Tensor) -> Env {
-        crate::exec::Bindings::spattn(self, keys).into_env()
-    }
-}
-
-/// MP (FusedMM message passing) shares the CSR layout; its env also
-/// needs the feature matrix under the `h` name.
-#[deprecated(since = "0.3.0", note = "use `exec::Bindings::mp`")]
-pub fn bind_mp_env(csr: &Csr, feats: &Tensor) -> Env {
-    crate::exec::Bindings::mp(csr, feats).into_env()
 }
 
 #[cfg(test)]
@@ -141,19 +108,5 @@ mod tests {
         assert_eq!(&idxs[0..4], &[1, 2, 3, 0]);
         assert_eq!(&idxs[4..8], &[4, 0, 0, 0]);
         assert_eq!(vals[0], 1.0);
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn sls_env_shim_binds_all() {
-        // the deprecated shim must keep producing a complete env (its
-        // byte-identity to `Bindings::sls` is pinned in tests/api_shims.rs)
-        let csr = Csr::from_rows(4, &[vec![0, 1], vec![2]]);
-        let table = Tensor::f32(vec![4, 2], vec![0.; 8]);
-        let env = csr.bind_sls_env(&table, false);
-        for name in ["ptrs", "idxs", "table", "out"] {
-            assert!(env.tensor(name).is_ok(), "{name}");
-        }
-        assert_eq!(env.sym("num_batches").unwrap(), 2);
     }
 }

@@ -5,8 +5,6 @@ pub mod formats;
 pub mod torch_like;
 
 pub use embedding_ops::{OpClass, Semiring};
-#[allow(deprecated)]
-pub use formats::bind_mp_env;
 pub use formats::{BlockGathers, Csr, FlatLookups};
 pub use torch_like::{BlockGather, EmbeddingBag, GraphAggregate, KgLookup, SparseLengthsSum};
 

@@ -10,59 +10,163 @@
 //! [`FastProgram`] whose dominant patterns execute as **fused
 //! kernels** — flat loops over pre-resolved operand slices in which the
 //! control/data queue traffic of the DLC form degenerates into index
-//! bumps over the CSR arrays themselves:
+//! bumps over the CSR arrays themselves.
+//!
+//! **The kernel registry.** Dispatch mirrors the compiler's
+//! `PassManager`: each fused kernel is a [`KernelSpec`] — a name, a
+//! `matches(&OpClass, &DlcProgram)` predicate over the compiled shape,
+//! a `validate` pass over the operand env, and vectorized / scalar
+//! `run` entry points — registered in a [`KernelRegistry`].
+//! [`compile_fast`] selects the first matching spec;
+//! `Instance::fast_kernel()` reports its name. The builtin registry:
 //!
 //! * `sls-gather` — SLS gather-accumulate (`out[b] += table[idxs[p]]`),
 //! * `spmm-row-gather` — weighted row gather (`out[b] += w[p] * row`),
 //! * `kg-gather` / `kg-gather-maxplus` — flat semiring lookup,
 //! * `block-gather` — SpAttn blocked row copy.
 //!
+//! **Vectorization + parallelism.** The inner `for k in 0..emb_len`
+//! loops run through emb-dim-specialized monomorphic variants (32 /
+//! 64 / 128, fixed-size-array bodies the compiler fully unrolls and
+//! vectorizes) with a lane-blocked generic path plus scalar remainder
+//! for every other width; the next table row is software-prefetched
+//! while the current one reduces. Output rows additionally split
+//! across a scoped thread pool ([`crate::exec::ExecOptions::threads`],
+//! default 1 = serial).
+//!
 //! **Parity guarantee.** A fused kernel replays exactly the per-element
-//! float operations of the interpreted program in the same order (the
-//! accumulation order over lookups `p` is the marshaling order; the
-//! chunking the vectorizer applies never reorders per-element adds), so
-//! its output is byte-identical to [`crate::exec::Backend::Interp`] —
-//! pinned for every op class by `tests/exec_parity.rs`. Kernels
-//! validate all operands (segment bounds, index ranges, dtypes) *before*
-//! touching `out`; any irregularity declines the fused path and the run
-//! falls back to a pooled interpreter, which reproduces the
-//! interpreter's exact behaviour (including its error). Op classes with
-//! cross-element reductions whose order the optimizer may legally
-//! reshuffle (Mp's SDDMM dot) always take the fallback.
+//! float operations of the interpreted program in the same order: the
+//! accumulation order over lookups `p` within a row is the marshaling
+//! order, lanes only split the *independent* per-`k` accumulator
+//! chains (never a `p` sum), and threads own disjoint output rows — so
+//! the output is byte-identical to [`crate::exec::Backend::Interp`] at
+//! every width and thread count, pinned by `tests/exec_parity.rs` and
+//! the width sweep in `tests/kernel_props.rs` (which compares against
+//! the retained scalar reference path, [`KernelSpec::run_reference`]).
+//! Kernels validate all operands (segment bounds, index ranges,
+//! dtypes) *before* touching `out`; any irregularity declines the
+//! fused path and the run falls back to a pooled interpreter, which
+//! reproduces the interpreter's exact behaviour (including its error).
+//! Op classes with cross-element reductions whose order the optimizer
+//! may legally reshuffle (Mp's SDDMM dot) match no spec and always
+//! take the fallback.
 
 use crate::compiler::passes::pipeline::CompiledProgram;
 use crate::data::{Buf, Env, Tensor};
 use crate::error::Result;
+use crate::exec::ExecOptions;
 use crate::frontend::embedding_ops::{OpClass, Semiring};
 use crate::interp::{Interp, NullSink};
 use crate::ir::dlc::{DlcOp, DlcProgram};
 use crate::store::TieredTable;
 
-/// The fused-kernel selection for one compiled program.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Kernel {
-    /// SLS gather-accumulate: `out[b, :] += table[idxs[p], :]`.
-    SlsGather,
-    /// SpMM row gather: `out[b, :] += weights[p] * table[idxs[p], :]`.
-    SpmmRowGather,
-    /// KG flat gather; `maxplus` applies the MaxPlus semiring rectify.
-    KgGather { maxplus: bool },
-    /// SpAttn blocked row copy.
-    BlockGather,
-    /// No fusion pattern matched: run the pooled interpreter.
-    General,
+// ------------------------------------------------------ kernel registry
+
+/// One fused kernel: a declarative entry in the [`KernelRegistry`],
+/// mirroring how a compiler `Pass` registers in the `PassManager`.
+///
+/// `matches` inspects the *compiled* shape (op class + DLC operand
+/// memrefs) at `compile_fast` time; `validate` checks one concrete
+/// operand env without touching `out`; `run` executes vectorized (and,
+/// when [`ExecOptions::threads`] > 1, row-parallel); `run_reference`
+/// is the retained scalar path the property tests pin the vectorized
+/// variants against, byte for byte.
+pub struct KernelSpec {
+    name: &'static str,
+    matches: fn(&OpClass, &DlcProgram) -> bool,
+    validate: fn(&Env, &Tensor) -> bool,
+    run: fn(&Env, &mut Tensor, &ExecOptions) -> bool,
+    reference: fn(&Env, &mut Tensor) -> bool,
 }
 
-impl Kernel {
-    fn name(self) -> &'static str {
-        match self {
-            Kernel::SlsGather => "sls-gather",
-            Kernel::SpmmRowGather => "spmm-row-gather",
-            Kernel::KgGather { maxplus: false } => "kg-gather",
-            Kernel::KgGather { maxplus: true } => "kg-gather-maxplus",
-            Kernel::BlockGather => "block-gather",
-            Kernel::General => "general",
+impl KernelSpec {
+    /// The kernel's registered name (what `Instance::fast_kernel()`
+    /// reports).
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// Whether this spec handles `op` as compiled into `dlc`.
+    pub fn matches(&self, op: &OpClass, dlc: &DlcProgram) -> bool {
+        (self.matches)(op, dlc)
+    }
+
+    /// Whether a concrete operand env passes every precondition
+    /// (symbols bound, dtypes, segment bounds, index ranges). Never
+    /// touches `out`; `run` on a validated env cannot decline.
+    pub fn validate(&self, env: &Env, out: &Tensor) -> bool {
+        (self.validate)(env, out)
+    }
+
+    /// Execute vectorized (+ row-parallel per `opts.threads`); `false`
+    /// means validation declined and `out` is untouched.
+    pub fn run(&self, env: &Env, out: &mut Tensor, opts: &ExecOptions) -> bool {
+        (self.run)(env, out, opts)
+    }
+
+    /// Execute the retained scalar reference loop (single-threaded,
+    /// lane-free) — the oracle the vectorized path is pinned against.
+    pub fn run_reference(&self, env: &Env, out: &mut Tensor) -> bool {
+        (self.reference)(env, out)
+    }
+}
+
+impl std::fmt::Debug for KernelSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("KernelSpec").field("name", &self.name).finish()
+    }
+}
+
+/// Ordered collection of [`KernelSpec`]s; [`compile_fast`] selects the
+/// first spec whose `matches` accepts the compiled program.
+pub struct KernelRegistry {
+    specs: Vec<&'static KernelSpec>,
+}
+
+impl KernelRegistry {
+    /// An empty registry.
+    pub fn new() -> KernelRegistry {
+        KernelRegistry { specs: Vec::new() }
+    }
+
+    /// The builtin kernel set, in selection order.
+    pub fn builtin() -> KernelRegistry {
+        KernelRegistry {
+            specs: vec![
+                &SLS_GATHER,
+                &SPMM_ROW_GATHER,
+                &KG_GATHER,
+                &KG_GATHER_MAXPLUS,
+                &BLOCK_GATHER,
+            ],
         }
+    }
+
+    /// Append a spec (selection order = registration order).
+    pub fn register(&mut self, spec: &'static KernelSpec) -> &mut Self {
+        self.specs.push(spec);
+        self
+    }
+
+    /// The registered specs, in selection order.
+    pub fn specs(&self) -> &[&'static KernelSpec] {
+        &self.specs
+    }
+
+    /// Look a spec up by its registered name.
+    pub fn get(&self, name: &str) -> Option<&'static KernelSpec> {
+        self.specs.iter().copied().find(|s| s.name == name)
+    }
+
+    /// First spec matching `op` as compiled into `dlc`, if any.
+    pub fn select(&self, op: &OpClass, dlc: &DlcProgram) -> Option<&'static KernelSpec> {
+        self.specs.iter().copied().find(|s| s.matches(op, dlc))
+    }
+}
+
+impl Default for KernelRegistry {
+    fn default() -> Self {
+        KernelRegistry::builtin()
     }
 }
 
@@ -71,7 +175,7 @@ impl Kernel {
 #[derive(Debug, Clone)]
 pub struct FastProgram {
     op: OpClass,
-    kernel: Kernel,
+    kernel: Option<&'static KernelSpec>,
 }
 
 impl FastProgram {
@@ -80,14 +184,19 @@ impl FastProgram {
         &self.op
     }
 
+    /// The selected registry spec (`None` = interpreter fallback).
+    pub fn kernel(&self) -> Option<&'static KernelSpec> {
+        self.kernel
+    }
+
     /// Name of the selected kernel (`"general"` = interpreter fallback).
     pub fn kernel_name(&self) -> &'static str {
-        self.kernel.name()
+        self.kernel.map_or("general", |k| k.name)
     }
 
     /// Whether a fused kernel (rather than the fallback) was selected.
     pub fn is_fused(&self) -> bool {
-        self.kernel != Kernel::General
+        self.kernel.is_some()
     }
 }
 
@@ -101,50 +210,105 @@ fn reads_mem(dlc: &DlcProgram, mem: &str) -> bool {
         .any(|op| matches!(op, DlcOp::MemStr { mem: m, .. } if m == mem))
 }
 
-/// Lower a compiled program into its fast-path plan: verify the DLC
-/// still has the canonical shape of its op class (operand memrefs
-/// present, a non-trivial traversal chain) and select the fused kernel;
-/// anything unrecognized lowers to the interpreter fallback.
-pub fn compile_fast(program: &CompiledProgram) -> FastProgram {
-    let dlc = &program.dlc;
-    let csr_shape = has_arg(dlc, "ptrs")
+/// The canonical CSR gather shape: operand memrefs present and a
+/// non-trivial traversal chain.
+fn csr_shape(dlc: &DlcProgram) -> bool {
+    has_arg(dlc, "ptrs")
         && has_arg(dlc, "idxs")
         && reads_mem(dlc, "table")
         && has_arg(dlc, "out")
-        && dlc.loop_chain().len() >= 2;
-    let kernel = match &program.op {
-        OpClass::Sls if csr_shape => Kernel::SlsGather,
-        OpClass::Spmm if csr_shape && has_arg(dlc, "weights") => Kernel::SpmmRowGather,
-        OpClass::Kg(sem)
-            if has_arg(dlc, "idxs") && reads_mem(dlc, "table") && has_arg(dlc, "out") =>
-        {
-            Kernel::KgGather { maxplus: *sem == Semiring::MaxPlus }
-        }
-        OpClass::SpAttn { .. }
-            if has_arg(dlc, "bidx") && reads_mem(dlc, "keys") && has_arg(dlc, "out") =>
-        {
-            Kernel::BlockGather
-        }
-        _ => Kernel::General,
-    };
+        && dlc.loop_chain().len() >= 2
+}
+
+fn kg_shape(dlc: &DlcProgram) -> bool {
+    has_arg(dlc, "idxs") && reads_mem(dlc, "table") && has_arg(dlc, "out")
+}
+
+/// Lower a compiled program into its fast-path plan: select the first
+/// [`KernelRegistry::builtin`] spec whose `matches` accepts the op
+/// class and the DLC's canonical shape; anything unrecognized lowers
+/// to the interpreter fallback (`"general"`).
+pub fn compile_fast(program: &CompiledProgram) -> FastProgram {
+    let kernel = KernelRegistry::builtin().select(&program.op, &program.dlc);
     FastProgram { op: program.op.clone(), kernel }
 }
+
+// ------------------------------------------------------- builtin specs
+
+/// SLS gather-accumulate: `out[b, :] += table[idxs[p], :]`.
+pub static SLS_GATHER: KernelSpec = KernelSpec {
+    name: "sls-gather",
+    matches: |op, dlc| matches!(op, OpClass::Sls) && csr_shape(dlc),
+    validate: |env, out| CsrView::extract(env, out, false).is_some(),
+    run: |env, out, opts| csr_gather(env, out, false, opts),
+    reference: |env, out| csr_gather_reference(env, out, false),
+};
+
+/// SpMM row gather: `out[b, :] += weights[p] * table[idxs[p], :]`.
+pub static SPMM_ROW_GATHER: KernelSpec = KernelSpec {
+    name: "spmm-row-gather",
+    matches: |op, dlc| {
+        matches!(op, OpClass::Spmm) && csr_shape(dlc) && has_arg(dlc, "weights")
+    },
+    validate: |env, out| CsrView::extract(env, out, true).is_some(),
+    run: |env, out, opts| csr_gather(env, out, true, opts),
+    reference: |env, out| csr_gather_reference(env, out, true),
+};
+
+/// KG flat gather, PlusTimes semiring (plain row copy).
+pub static KG_GATHER: KernelSpec = KernelSpec {
+    name: "kg-gather",
+    matches: |op, dlc| matches!(op, OpClass::Kg(Semiring::PlusTimes)) && kg_shape(dlc),
+    validate: |env, out| KgView::extract(env, out).is_some(),
+    run: |env, out, opts| kg_gather(env, out, false, opts),
+    reference: |env, out| kg_gather_reference(env, out, false),
+};
+
+/// KG flat gather, MaxPlus semiring (`max(row, 0.0)` rectify).
+pub static KG_GATHER_MAXPLUS: KernelSpec = KernelSpec {
+    name: "kg-gather-maxplus",
+    matches: |op, dlc| matches!(op, OpClass::Kg(Semiring::MaxPlus)) && kg_shape(dlc),
+    validate: |env, out| KgView::extract(env, out).is_some(),
+    run: |env, out, opts| kg_gather(env, out, true, opts),
+    reference: |env, out| kg_gather_reference(env, out, true),
+};
+
+/// SpAttn blocked row copy.
+pub static BLOCK_GATHER: KernelSpec = KernelSpec {
+    name: "block-gather",
+    matches: |op, dlc| {
+        matches!(op, OpClass::SpAttn { .. })
+            && has_arg(dlc, "bidx")
+            && reads_mem(dlc, "keys")
+            && has_arg(dlc, "out")
+    },
+    validate: |env, out| BlockView::extract(env, out).is_some(),
+    run: block_gather,
+    reference: |env, out| block_gather(env, out, &ExecOptions::default()),
+};
 
 /// Pooled fast-path executor: the plan plus a pooled fallback
 /// interpreter (reset between runs, never rebuilt).
 pub struct FastExec {
     prog: FastProgram,
     fallback: Interp,
+    opts: ExecOptions,
     fused_runs: u64,
     fallback_runs: u64,
 }
 
 impl FastExec {
-    /// Build the fast executor for a compiled program.
+    /// Build the fast executor for a compiled program (serial).
     pub fn new(program: &CompiledProgram) -> Result<FastExec> {
+        Self::with_options(program, ExecOptions::default())
+    }
+
+    /// Build the fast executor with explicit [`ExecOptions`].
+    pub fn with_options(program: &CompiledProgram, opts: ExecOptions) -> Result<FastExec> {
         Ok(FastExec {
             prog: compile_fast(program),
             fallback: Interp::new(&program.dlc)?,
+            opts,
             fused_runs: 0,
             fallback_runs: 0,
         })
@@ -188,27 +352,15 @@ impl FastExec {
     /// while reading the other operands; a kernel that declines has
     /// validated-but-not-touched it.
     fn try_fused(&mut self, env: &mut Env) -> bool {
-        if self.prog.kernel == Kernel::General {
+        let Some(spec) = self.prog.kernel else {
             return false;
-        }
+        };
         let Some(mut out) = env.tensors.remove("out") else {
             return false;
         };
-        let done = run_fused(self.prog.kernel, env, &mut out);
+        let done = spec.run(env, &mut out, &self.opts);
         env.tensors.insert("out".to_string(), out);
         done
-    }
-}
-
-/// Dispatch a fused kernel; `false` means it declined (operands are
-/// untouched and the caller must fall back).
-fn run_fused(kernel: Kernel, env: &Env, out: &mut Tensor) -> bool {
-    match kernel {
-        Kernel::SlsGather => csr_gather(env, out, false),
-        Kernel::SpmmRowGather => csr_gather(env, out, true),
-        Kernel::KgGather { maxplus } => kg_gather(env, out, maxplus),
-        Kernel::BlockGather => block_gather(env, out),
-        Kernel::General => false,
     }
 }
 
@@ -219,87 +371,274 @@ fn sym_usize(env: &Env, name: &str) -> Option<usize> {
     }
 }
 
-/// SLS / SpMM fused kernel. Accumulates `(w *) table[idxs[p], e]` into
-/// `out[b, e]` in marshaling order (increasing `p` within each `b`) —
-/// the exact per-element add sequence of the interpreted program at
-/// every opt level.
-fn csr_gather(env: &Env, out: &mut Tensor, weighted: bool) -> bool {
-    let nb = match sym_usize(env, "num_batches") {
-        Some(v) => v,
-        None => return false,
-    };
-    let el = match sym_usize(env, "emb_len") {
-        Some(v) => v,
-        None => return false,
-    };
-    let ptrs_t = match env.tensor("ptrs") {
-        Ok(t) => t,
-        Err(_) => return false,
-    };
-    let idxs_t = match env.tensor("idxs") {
-        Ok(t) => t,
-        Err(_) => return false,
-    };
-    let table = match env.tensor("table") {
-        Ok(t) => t,
-        Err(_) => return false,
-    };
-    let Buf::I32(ptrs) = &ptrs_t.buf else { return false };
-    let Buf::I32(idxs) = &idxs_t.buf else { return false };
-    let Buf::F32(tdata) = &table.buf else { return false };
-    if table.dims.len() != 2 || out.dims.len() != 2 {
-        return false;
-    }
-    let (trows, tstride) = (table.dims[0], table.dims[1]);
-    let (orows, ostride) = (out.dims[0], out.dims[1]);
-    if el > tstride || el > ostride || nb > orows || ptrs.len() < nb + 1 {
-        return false;
-    }
-    let weights: Option<&Vec<f32>> = if weighted {
-        match env.tensor("weights") {
-            Ok(t) => match &t.buf {
-                Buf::F32(w) => Some(w),
-                _ => return false,
-            },
-            Err(_) => return false,
-        }
-    } else {
-        None
-    };
-    // validate every access before the first write to `out`
-    for b in 0..nb {
-        let (s, e) = (ptrs[b], ptrs[b + 1]);
-        if s < 0 || e < s || e as usize > idxs.len() {
-            return false;
-        }
-        if let Some(w) = weights {
-            if e as usize > w.len() {
-                return false;
+// ------------------------------------------------ lanes / prefetch / pool
+
+/// Advisory prefetch of `data[off..]` into L1 — no architectural
+/// effect, so parity is untouched. The offsets the kernels pass come
+/// from already-validated indices, so the address is always in bounds.
+#[inline(always)]
+fn prefetch_row(data: &[f32], off: usize) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if off < data.len() {
+            // SAFETY: off is within `data`, and prefetch has no
+            // architectural effect regardless.
+            unsafe {
+                std::arch::x86_64::_mm_prefetch(
+                    data.as_ptr().add(off) as *const i8,
+                    std::arch::x86_64::_MM_HINT_T0,
+                )
             }
         }
-        let segment = &idxs[s as usize..e as usize];
-        if segment.iter().any(|&i| i < 0 || i as usize >= trows) {
-            return false;
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        let _ = (data, off);
+    }
+}
+
+/// Split `data[..units * stride]` into per-unit rows and apply `f(unit,
+/// row)` — serially, or across `threads` scoped workers on contiguous
+/// disjoint unit ranges. Every unit is processed exactly once by
+/// exactly one thread, so any per-unit computation is byte-identical
+/// at every thread count.
+fn par_units<F>(data: &mut [f32], units: usize, stride: usize, threads: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    if units == 0 || stride == 0 {
+        return;
+    }
+    let data = &mut data[..units * stride];
+    let threads = threads.clamp(1, units);
+    if threads <= 1 {
+        for (u, row) in data.chunks_mut(stride).enumerate() {
+            f(u, row);
+        }
+        return;
+    }
+    let per = units.div_ceil(threads);
+    let f = &f;
+    std::thread::scope(|s| {
+        for (t, span) in data.chunks_mut(per * stride).enumerate() {
+            s.spawn(move || {
+                for (i, row) in span.chunks_mut(stride).enumerate() {
+                    f(t * per + i, row);
+                }
+            });
+        }
+    });
+}
+
+/// `o[k] += t[k]` over a monomorphic width — the fixed-size-array view
+/// lets the compiler fully unroll and vectorize the lane block.
+#[inline(always)]
+fn add_row_fixed<const N: usize>(o: &mut [f32], t: &[f32], _w: f32) {
+    let o: &mut [f32; N] = o.try_into().unwrap();
+    let t: &[f32; N] = t.try_into().unwrap();
+    for k in 0..N {
+        o[k] += t[k];
+    }
+}
+
+/// `o[k] += w * t[k]` over a monomorphic width.
+#[inline(always)]
+fn axpy_row_fixed<const N: usize>(o: &mut [f32], t: &[f32], w: f32) {
+    let o: &mut [f32; N] = o.try_into().unwrap();
+    let t: &[f32; N] = t.try_into().unwrap();
+    for k in 0..N {
+        o[k] += w * t[k];
+    }
+}
+
+const LANES: usize = 8;
+
+/// Generic-width `o[k] += t[k]`: unrolled 8-lane blocks + scalar
+/// remainder. Per-`k` chains are independent, so blocking never
+/// reorders any element's accumulation.
+#[inline(always)]
+fn add_row_generic(o: &mut [f32], t: &[f32], _w: f32) {
+    let n = o.len();
+    let blocks = n - n % LANES;
+    let (ob, orem) = o.split_at_mut(blocks);
+    let (tb, trem) = t[..n].split_at(blocks);
+    for (oc, tc) in ob.chunks_exact_mut(LANES).zip(tb.chunks_exact(LANES)) {
+        for k in 0..LANES {
+            oc[k] += tc[k];
         }
     }
+    for (ov, tv) in orem.iter_mut().zip(trem) {
+        *ov += *tv;
+    }
+}
+
+/// Generic-width `o[k] += w * t[k]`: unrolled lane blocks + remainder.
+#[inline(always)]
+fn axpy_row_generic(o: &mut [f32], t: &[f32], w: f32) {
+    let n = o.len();
+    let blocks = n - n % LANES;
+    let (ob, orem) = o.split_at_mut(blocks);
+    let (tb, trem) = t[..n].split_at(blocks);
+    for (oc, tc) in ob.chunks_exact_mut(LANES).zip(tb.chunks_exact(LANES)) {
+        for k in 0..LANES {
+            oc[k] += w * tc[k];
+        }
+    }
+    for (ov, tv) in orem.iter_mut().zip(trem) {
+        *ov += w * *tv;
+    }
+}
+
+/// `o[k] = max(t[k], 0.0)` over a monomorphic width.
+#[inline(always)]
+fn relu_row_fixed<const N: usize>(o: &mut [f32], t: &[f32]) {
+    let o: &mut [f32; N] = o.try_into().unwrap();
+    let t: &[f32; N] = t.try_into().unwrap();
+    for k in 0..N {
+        o[k] = t[k].max(0.0);
+    }
+}
+
+/// Generic-width `o[k] = max(t[k], 0.0)`.
+#[inline(always)]
+fn relu_row_generic(o: &mut [f32], t: &[f32]) {
+    for (ov, tv) in o.iter_mut().zip(t) {
+        *ov = tv.max(0.0);
+    }
+}
+
+// -------------------------------------------------------- operand views
+
+/// Pre-resolved, fully validated operands of the CSR gather kernels.
+/// Extraction checks every access *before* the caller's first write to
+/// `out`, so `extract(..).is_some()` doubles as `KernelSpec::validate`.
+struct CsrView<'a> {
+    nb: usize,
+    el: usize,
+    ostride: usize,
+    tstride: usize,
+    ptrs: &'a [i32],
+    idxs: &'a [i32],
+    tdata: &'a [f32],
+    weights: Option<&'a [f32]>,
+}
+
+impl<'a> CsrView<'a> {
+    fn extract(env: &'a Env, out: &Tensor, weighted: bool) -> Option<CsrView<'a>> {
+        let nb = sym_usize(env, "num_batches")?;
+        let el = sym_usize(env, "emb_len")?;
+        let ptrs_t = env.tensor("ptrs").ok()?;
+        let idxs_t = env.tensor("idxs").ok()?;
+        let table = env.tensor("table").ok()?;
+        let Buf::I32(ptrs) = &ptrs_t.buf else { return None };
+        let Buf::I32(idxs) = &idxs_t.buf else { return None };
+        let Buf::F32(tdata) = &table.buf else { return None };
+        if table.dims.len() != 2 || out.dims.len() != 2 {
+            return None;
+        }
+        if !matches!(out.buf, Buf::F32(_)) {
+            return None;
+        }
+        let (trows, tstride) = (table.dims[0], table.dims[1]);
+        let (orows, ostride) = (out.dims[0], out.dims[1]);
+        if el > tstride || el > ostride || nb > orows || ptrs.len() < nb + 1 {
+            return None;
+        }
+        let weights: Option<&[f32]> = if weighted {
+            match env.tensor("weights").ok().map(|t| &t.buf) {
+                Some(Buf::F32(w)) => Some(w),
+                _ => return None,
+            }
+        } else {
+            None
+        };
+        // validate every access before the first write to `out`
+        for b in 0..nb {
+            let (s, e) = (ptrs[b], ptrs[b + 1]);
+            if s < 0 || e < s || e as usize > idxs.len() {
+                return None;
+            }
+            if let Some(w) = weights {
+                if e as usize > w.len() {
+                    return None;
+                }
+            }
+            let segment = &idxs[s as usize..e as usize];
+            if segment.iter().any(|&i| i < 0 || i as usize >= trows) {
+                return None;
+            }
+        }
+        Some(CsrView { nb, el, ostride, tstride, ptrs, idxs, tdata, weights })
+    }
+}
+
+/// The CSR gather hot loop, monomorphized over the per-row lane op.
+/// Accumulates in marshaling order (increasing `p` within each `b`) —
+/// the exact per-element add sequence of the interpreted program —
+/// while prefetching the next gathered row.
+fn csr_rows<F>(v: &CsrView, odata: &mut [f32], threads: usize, rowop: F)
+where
+    F: Fn(&mut [f32], &[f32], f32) + Sync,
+{
+    par_units(odata, v.nb, v.ostride, threads, |b, orow| {
+        let (s, e) = (v.ptrs[b] as usize, v.ptrs[b + 1] as usize);
+        let orow = &mut orow[..v.el];
+        for p in s..e {
+            if p + 1 < e {
+                prefetch_row(v.tdata, v.idxs[p + 1] as usize * v.tstride);
+            }
+            let trow = &v.tdata[v.idxs[p] as usize * v.tstride..][..v.el];
+            let w = v.weights.map_or(1.0, |w| w[p]);
+            rowop(orow, trow, w);
+        }
+    });
+}
+
+/// SLS / SpMM fused kernel: width-specialized dispatch over the
+/// validated view.
+fn csr_gather(env: &Env, out: &mut Tensor, weighted: bool, opts: &ExecOptions) -> bool {
+    let Some(v) = CsrView::extract(env, out, weighted) else {
+        return false;
+    };
     let Buf::F32(odata) = &mut out.buf else { return false };
-    for b in 0..nb {
-        let (s, e) = (ptrs[b] as usize, ptrs[b + 1] as usize);
-        let orow = &mut odata[b * ostride..b * ostride + el];
-        match weights {
+    let th = opts.threads;
+    match (v.el, weighted) {
+        (32, false) => csr_rows(&v, odata, th, add_row_fixed::<32>),
+        (64, false) => csr_rows(&v, odata, th, add_row_fixed::<64>),
+        (128, false) => csr_rows(&v, odata, th, add_row_fixed::<128>),
+        (_, false) => csr_rows(&v, odata, th, add_row_generic),
+        (32, true) => csr_rows(&v, odata, th, axpy_row_fixed::<32>),
+        (64, true) => csr_rows(&v, odata, th, axpy_row_fixed::<64>),
+        (128, true) => csr_rows(&v, odata, th, axpy_row_fixed::<128>),
+        (_, true) => csr_rows(&v, odata, th, axpy_row_generic),
+    }
+    true
+}
+
+/// Retained scalar CSR reference: the pre-vectorization loop, kept as
+/// the byte-identity oracle for the width/thread property sweep.
+fn csr_gather_reference(env: &Env, out: &mut Tensor, weighted: bool) -> bool {
+    let Some(v) = CsrView::extract(env, out, weighted) else {
+        return false;
+    };
+    let Buf::F32(odata) = &mut out.buf else { return false };
+    for b in 0..v.nb {
+        let (s, e) = (v.ptrs[b] as usize, v.ptrs[b + 1] as usize);
+        let orow = &mut odata[b * v.ostride..b * v.ostride + v.el];
+        match v.weights {
             Some(w) => {
                 for p in s..e {
-                    let trow = &tdata[idxs[p] as usize * tstride..][..el];
+                    let trow = &v.tdata[v.idxs[p] as usize * v.tstride..][..v.el];
                     let wp = w[p];
-                    for k in 0..el {
+                    for k in 0..v.el {
                         orow[k] += wp * trow[k];
                     }
                 }
             }
             None => {
                 for p in s..e {
-                    let trow = &tdata[idxs[p] as usize * tstride..][..el];
-                    for k in 0..el {
+                    let trow = &v.tdata[v.idxs[p] as usize * v.tstride..][..v.el];
+                    for k in 0..v.el {
                         orow[k] += trow[k];
                     }
                 }
@@ -309,102 +648,156 @@ fn csr_gather(env: &Env, out: &mut Tensor, weighted: bool) -> bool {
     true
 }
 
+/// Pre-resolved, validated operands of the KG flat gather.
+struct KgView<'a> {
+    nq: usize,
+    el: usize,
+    ostride: usize,
+    tstride: usize,
+    idxs: &'a [i32],
+    tdata: &'a [f32],
+}
+
+impl<'a> KgView<'a> {
+    fn extract(env: &'a Env, out: &Tensor) -> Option<KgView<'a>> {
+        let nq = sym_usize(env, "num_queries")?;
+        let el = sym_usize(env, "emb_len")?;
+        let idxs_t = env.tensor("idxs").ok()?;
+        let table = env.tensor("table").ok()?;
+        let Buf::I32(idxs) = &idxs_t.buf else { return None };
+        let Buf::F32(tdata) = &table.buf else { return None };
+        if table.dims.len() != 2 || out.dims.len() != 2 {
+            return None;
+        }
+        if !matches!(out.buf, Buf::F32(_)) {
+            return None;
+        }
+        let (trows, tstride) = (table.dims[0], table.dims[1]);
+        let (orows, ostride) = (out.dims[0], out.dims[1]);
+        if el > tstride || el > ostride || nq > orows || idxs.len() < nq {
+            return None;
+        }
+        if idxs[..nq].iter().any(|&i| i < 0 || i as usize >= trows) {
+            return None;
+        }
+        Some(KgView { nq, el, ostride, tstride, idxs, tdata })
+    }
+}
+
 /// KG fused kernel: `out[q, e] = table[idxs[q], e]` (PlusTimes) or
 /// `max(table[idxs[q], e], 0.0)` (MaxPlus) — pure per-element stores,
 /// so equality with the interpreted program is exact.
-fn kg_gather(env: &Env, out: &mut Tensor, maxplus: bool) -> bool {
-    let nq = match sym_usize(env, "num_queries") {
-        Some(v) => v,
-        None => return false,
-    };
-    let el = match sym_usize(env, "emb_len") {
-        Some(v) => v,
-        None => return false,
-    };
-    let idxs_t = match env.tensor("idxs") {
-        Ok(t) => t,
-        Err(_) => return false,
-    };
-    let table = match env.tensor("table") {
-        Ok(t) => t,
-        Err(_) => return false,
-    };
-    let Buf::I32(idxs) = &idxs_t.buf else { return false };
-    let Buf::F32(tdata) = &table.buf else { return false };
-    if table.dims.len() != 2 || out.dims.len() != 2 {
+fn kg_gather(env: &Env, out: &mut Tensor, maxplus: bool, opts: &ExecOptions) -> bool {
+    let Some(v) = KgView::extract(env, out) else {
         return false;
-    }
-    let (trows, tstride) = (table.dims[0], table.dims[1]);
-    let (orows, ostride) = (out.dims[0], out.dims[1]);
-    if el > tstride || el > ostride || nq > orows || idxs.len() < nq {
-        return false;
-    }
-    if idxs[..nq].iter().any(|&i| i < 0 || i as usize >= trows) {
-        return false;
-    }
+    };
     let Buf::F32(odata) = &mut out.buf else { return false };
-    for q in 0..nq {
-        let trow = &tdata[idxs[q] as usize * tstride..][..el];
-        let orow = &mut odata[q * ostride..q * ostride + el];
+    let row = |q: usize, orow: &mut [f32]| {
+        if q + 1 < v.nq {
+            prefetch_row(v.tdata, v.idxs[q + 1] as usize * v.tstride);
+        }
+        let trow = &v.tdata[v.idxs[q] as usize * v.tstride..][..v.el];
+        let orow = &mut orow[..v.el];
         if maxplus {
-            for k in 0..el {
+            match v.el {
+                32 => relu_row_fixed::<32>(orow, trow),
+                64 => relu_row_fixed::<64>(orow, trow),
+                128 => relu_row_fixed::<128>(orow, trow),
+                _ => relu_row_generic(orow, trow),
+            }
+        } else {
+            orow.copy_from_slice(trow);
+        }
+    };
+    par_units(odata, v.nq, v.ostride, opts.threads, row);
+    true
+}
+
+/// Retained scalar KG reference (see [`KernelSpec::run_reference`]).
+fn kg_gather_reference(env: &Env, out: &mut Tensor, maxplus: bool) -> bool {
+    let Some(v) = KgView::extract(env, out) else {
+        return false;
+    };
+    let Buf::F32(odata) = &mut out.buf else { return false };
+    for q in 0..v.nq {
+        let trow = &v.tdata[v.idxs[q] as usize * v.tstride..][..v.el];
+        let orow = &mut odata[q * v.ostride..q * v.ostride + v.el];
+        if maxplus {
+            for k in 0..v.el {
                 orow[k] = trow[k].max(0.0);
             }
         } else {
-            orow[..el].copy_from_slice(trow);
+            orow.copy_from_slice(trow);
         }
     }
     true
 }
 
-/// SpAttn fused kernel: copy `block` consecutive key rows per gathered
-/// block id — zero float arithmetic, trivially byte-identical.
-fn block_gather(env: &Env, out: &mut Tensor) -> bool {
-    let ng = match sym_usize(env, "num_gathers") {
-        Some(v) => v,
-        None => return false,
-    };
-    let blk = match sym_usize(env, "block") {
-        Some(v) => v,
-        None => return false,
-    };
-    let el = match sym_usize(env, "emb_len") {
-        Some(v) => v,
-        None => return false,
-    };
-    let bidx_t = match env.tensor("bidx") {
-        Ok(t) => t,
-        Err(_) => return false,
-    };
-    let keys = match env.tensor("keys") {
-        Ok(t) => t,
-        Err(_) => return false,
-    };
-    let Buf::I32(bidx) = &bidx_t.buf else { return false };
-    let Buf::F32(kdata) = &keys.buf else { return false };
-    if keys.dims.len() != 2 || out.dims.len() != 2 {
-        return false;
-    }
-    let (krows, kstride) = (keys.dims[0], keys.dims[1]);
-    let (orows, ostride) = (out.dims[0], out.dims[1]);
-    if el > kstride || el > ostride || ng.saturating_mul(blk) > orows || bidx.len() < ng {
-        return false;
-    }
-    if bidx[..ng]
-        .iter()
-        .any(|&bi| bi < 0 || (bi as usize).saturating_mul(blk) + blk > krows)
-    {
-        return false;
-    }
-    let Buf::F32(odata) = &mut out.buf else { return false };
-    for g in 0..ng {
-        let bi = bidx[g] as usize;
-        for r in 0..blk {
-            let src = (bi * blk + r) * kstride;
-            let dst = (g * blk + r) * ostride;
-            odata[dst..dst + el].copy_from_slice(&kdata[src..src + el]);
+/// Pre-resolved, validated operands of the SpAttn block gather.
+struct BlockView<'a> {
+    ng: usize,
+    blk: usize,
+    el: usize,
+    ostride: usize,
+    kstride: usize,
+    bidx: &'a [i32],
+    kdata: &'a [f32],
+}
+
+impl<'a> BlockView<'a> {
+    fn extract(env: &'a Env, out: &Tensor) -> Option<BlockView<'a>> {
+        let ng = sym_usize(env, "num_gathers")?;
+        let blk = sym_usize(env, "block")?;
+        let el = sym_usize(env, "emb_len")?;
+        let bidx_t = env.tensor("bidx").ok()?;
+        let keys = env.tensor("keys").ok()?;
+        let Buf::I32(bidx) = &bidx_t.buf else { return None };
+        let Buf::F32(kdata) = &keys.buf else { return None };
+        if keys.dims.len() != 2 || out.dims.len() != 2 {
+            return None;
         }
+        if !matches!(out.buf, Buf::F32(_)) {
+            return None;
+        }
+        let (krows, kstride) = (keys.dims[0], keys.dims[1]);
+        let (orows, ostride) = (out.dims[0], out.dims[1]);
+        if el > kstride || el > ostride || ng.saturating_mul(blk) > orows || bidx.len() < ng
+        {
+            return None;
+        }
+        if bidx[..ng]
+            .iter()
+            .any(|&bi| bi < 0 || (bi as usize).saturating_mul(blk) + blk > krows)
+        {
+            return None;
+        }
+        Some(BlockView { ng, blk, el, ostride, kstride, bidx, kdata })
     }
+}
+
+/// SpAttn fused kernel: copy `block` consecutive key rows per gathered
+/// block id — zero float arithmetic, trivially byte-identical. Units of
+/// the thread split are whole blocks (`blk` output rows), so rows never
+/// straddle workers. Doubles as its own scalar reference.
+fn block_gather(env: &Env, out: &mut Tensor, opts: &ExecOptions) -> bool {
+    let Some(v) = BlockView::extract(env, out) else {
+        return false;
+    };
+    let Buf::F32(odata) = &mut out.buf else { return false };
+    if v.blk == 0 {
+        return true;
+    }
+    par_units(odata, v.ng, v.blk * v.ostride, opts.threads, |g, ospan| {
+        if g + 1 < v.ng {
+            prefetch_row(v.kdata, v.bidx[g + 1] as usize * v.blk * v.kstride);
+        }
+        let bi = v.bidx[g] as usize;
+        for r in 0..v.blk {
+            let src = (bi * v.blk + r) * v.kstride;
+            ospan[r * v.ostride..r * v.ostride + v.el]
+                .copy_from_slice(&v.kdata[src..src + v.el]);
+        }
+    });
     true
 }
 
@@ -527,6 +920,41 @@ mod tests {
     }
 
     #[test]
+    fn registry_selects_and_resolves_by_name() {
+        let reg = KernelRegistry::builtin();
+        assert_eq!(reg.specs().len(), 5);
+        for spec in reg.specs() {
+            assert_eq!(reg.get(spec.name()).map(|s| s.name()), Some(spec.name()));
+        }
+        assert!(reg.get("general").is_none(), "the fallback is not a spec");
+        let mut s = EmberSession::default();
+        let p = s.compile(&OpClass::Sls).unwrap();
+        assert_eq!(reg.select(&p.op, &p.dlc).map(|k| k.name()), Some("sls-gather"));
+        let pm = s.compile(&OpClass::Mp).unwrap();
+        assert!(reg.select(&pm.op, &pm.dlc).is_none());
+        // a custom registry mirrors PassManager registration order
+        let mut custom = KernelRegistry::new();
+        custom.register(&BLOCK_GATHER).register(&SLS_GATHER);
+        assert_eq!(custom.specs()[0].name(), "block-gather");
+        assert_eq!(custom.select(&p.op, &p.dlc).map(|k| k.name()), Some("sls-gather"));
+    }
+
+    #[test]
+    fn spec_validate_accepts_good_envs_and_rejects_bad_ones() {
+        let mut rng = Rng::new(9);
+        let table = crate::data::Tensor::f32(vec![16, 8], rng.normal_vec(16 * 8, 1.0));
+        let good = rand_csr(&mut rng, 4, 16, 3);
+        let mut env = Bindings::sls(&good, &table).into_env();
+        let out = env.tensors.remove("out").unwrap();
+        assert!(SLS_GATHER.validate(&env, &out));
+        // out-of-range index: validate declines, out untouched
+        let bad = Csr::from_rows(16, &[vec![99]]);
+        let mut benv = Bindings::sls(&bad, &table).into_env();
+        let bout = benv.tensors.remove("out").unwrap();
+        assert!(!SLS_GATHER.validate(&benv, &bout));
+    }
+
+    #[test]
     fn fused_sls_is_byte_identical_to_interp_at_every_opt_level() {
         let mut rng = Rng::new(31);
         let table = crate::data::Tensor::f32(vec![64, 12], rng.normal_vec(64 * 12, 1.0));
@@ -627,6 +1055,31 @@ mod tests {
             .unwrap()
             .output;
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn threaded_runs_are_byte_identical_to_serial() {
+        let mut s = EmberSession::default();
+        let mut rng = Rng::new(23);
+        // odd width (12) + a width above the lane block (24 rows deep)
+        let table = crate::data::Tensor::f32(vec![128, 12], rng.normal_vec(128 * 12, 1.0));
+        let csr = rand_csr(&mut rng, 24, 128, 9);
+        let p = s.compile(&OpClass::Sls).unwrap();
+        let mut serial = FastExec::new(&p).unwrap();
+        let mut env1 = Bindings::sls(&csr, &table).into_env();
+        serial.run(&mut env1).unwrap();
+        for threads in [2, 4, 7, 64] {
+            let mut par =
+                FastExec::with_options(&p, ExecOptions::with_threads(threads)).unwrap();
+            let mut env2 = Bindings::sls(&csr, &table).into_env();
+            par.run(&mut env2).unwrap();
+            assert_eq!(par.fused_runs(), 1, "threads={threads} must stay fused");
+            assert_eq!(
+                env1.tensor("out").unwrap().as_f32(),
+                env2.tensor("out").unwrap().as_f32(),
+                "threads={threads} diverged from serial"
+            );
+        }
     }
 
     #[test]

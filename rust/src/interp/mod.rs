@@ -857,22 +857,6 @@ fn build_tree(prog: &DlcProgram) -> Result<LoopNode> {
     Ok(collect(prog, root_idx))
 }
 
-/// Convenience: run a program functionally, returning the `out` tensor.
-///
-/// Superseded by the unified executor layer: build an
-/// [`crate::exec::Instance`] on [`crate::exec::Backend::Interp`] (or
-/// call [`crate::session::EmberSession::instantiate`]) and `run` it.
-/// This shim stays byte-identical to that path (`tests/api_shims.rs`).
-#[deprecated(
-    since = "0.3.0",
-    note = "use `exec::Instance` (e.g. `EmberSession::instantiate(op, Backend::Interp)`)"
-)]
-pub fn run_program(prog: &Arc<DlcProgram>, env: &mut Env) -> Result<Vec<f32>> {
-    let mut interp = Interp::new(prog)?;
-    interp.run(env, &mut NullSink)?;
-    Ok(env.tensor("out")?.as_f32())
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -890,8 +874,8 @@ mod tests {
         compile_with_trace(op, opts).map(|(p, _)| p)
     }
 
-    /// Functional run through the executor layer (what the deprecated
-    /// `run_program` shim delegates to numerically).
+    /// Functional run through the executor layer (the replacement for
+    /// the old `run_program` free function, removed in 0.4).
     fn run_functional(
         prog: &CompiledProgram,
         env: &mut Env,

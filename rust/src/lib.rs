@@ -57,4 +57,4 @@ pub use exec::{Backend, Bindings, ExecReport, Executor, Instance};
 pub use frontend::Frontend;
 pub use session::{EmberSession, OpHandle};
 
-pub fn version() -> &'static str { "0.3.0" }
+pub fn version() -> &'static str { "0.4.0" }

@@ -38,9 +38,10 @@ USAGE:
               runs the perf matrix (interp vs fast vs hand-opt), writes BENCH_<date>.json,
               and exits nonzero when --baseline comparison finds a regression
   ember bench --exp <table1..4|fig1|fig3|fig4|fig6|fig7|fig8|fig16..19|all> [--out results] [--seed N]
-  ember serve [--requests N] [--clients C] [--shards S] [--qps Q[,Q..]] [--tables T] [--artifacts artifacts]
-              [--zipf S] [--hot-frac F] [--cold fp16|int8] [--open-loop] [--smoke] [--trace FILE]
-              [--queue-depth N] [--deadline-ms MS] [--shed-policy none|deadline|ewma]
+  ember serve [--requests N] [--clients C] [--shards S] [--threads T] [--qps Q[,Q..]] [--tables T]
+              [--artifacts artifacts] [--zipf S] [--hot-frac F] [--cold fp16|int8] [--open-loop]
+              [--smoke] [--trace FILE] [--queue-depth N] [--deadline-ms MS]
+              [--shed-policy none|deadline|ewma] [--retry-budget N]
               --hot-frac F keeps only an F fraction of each table's rows as fp32 (LRU hot tier)
               over a quantized cold tier (--cold, default fp16) — serve tables bigger than RAM
               --trace writes the request-lifecycle timeline (enqueue -> batch -> embed -> MLP)
@@ -48,17 +49,21 @@ USAGE:
               --qps accepts absolute rates or `Nx` capacity multiples (`0.5x,1x,3x` first runs a
               short unthrottled calibration, then sweeps at those multiples of measured peak);
               --queue-depth bounds the admission queue (reject-on-full), --deadline-ms attaches a
-              per-request latency budget, --shed-policy picks how overload is shed
+              per-request latency budget, --shed-policy picks how overload is shed;
+              --threads T runs each shard worker's fast kernels on T intra-batch threads;
+              --retry-budget N lets the load generator retry a shed request up to N times
+              with jittered exponential backoff before counting it shed
   ember serve --net (--shard-servers N | --shard-sockets P1,P2,..) [--replicate R] [--smoke]
               [--tables T] [--rows R] [--emb E] [--batch B] [--seed S] [--requests N] [--clients C]
-              [--zipf S] [--hot-frac F] [--cold fp16|int8] [--open-loop] [--qps Q] [--trace FILE]
-              [--queue-depth N] [--deadline-ms MS] [--shed-policy none|deadline|ewma]
+              [--threads T] [--zipf S] [--hot-frac F] [--cold fp16|int8] [--open-loop] [--qps Q]
+              [--trace FILE] [--queue-depth N] [--deadline-ms MS]
+              [--shed-policy none|deadline|ewma] [--retry-budget N]
               multi-process serving: fans the embedding stage out to shard-server processes over
               UDS (or tcp:HOST:PORT) and prints a NET_SERVE summary line (store tiering flags are
               forwarded to spawned shard servers); --trace merges every shard-server's buffered
               spans (pulled over the wire) into one multi-process file
   ember shard-server --socket PATH --own T1,T2,.. [--shard-id I] [--tables T] [--rows R] [--emb E]
-              [--batch B] [--seed S] [--hot-frac F] [--cold fp16|int8] [--trace]
+              [--batch B] [--seed S] [--threads T] [--hot-frac F] [--cold fp16|int8] [--trace]
               standalone shard-server process hosting the listed tables (regenerated from --seed);
               --hot-frac/--cold serve them from a tiered store; --trace buffers request spans for
               a frontend to pull via TraceReq
@@ -346,6 +351,40 @@ fn parse_deadline(flags: &HashMap<String, String>) -> Result<Option<Duration>> {
     }
 }
 
+/// Parse `--threads T` into the intra-batch kernel thread count for
+/// the fast backend (default 1 = the serial kernels). In net mode the
+/// value is forwarded to spawned shard-server processes, where the
+/// embedding kernels actually run.
+fn parse_threads(flags: &HashMap<String, String>) -> Result<usize> {
+    match flags.get("threads") {
+        Some(v) if !v.is_empty() => {
+            let t: usize = v
+                .parse()
+                .map_err(|_| EmberError::Parse(format!("bad --threads value `{v}`")))?;
+            if t == 0 {
+                return Err(EmberError::Parse("--threads must be at least 1".into()));
+            }
+            Ok(t)
+        }
+        Some(_) => Err(EmberError::Parse("--threads needs a value".into())),
+        None => Ok(1),
+    }
+}
+
+/// Parse `--retry-budget N`: how many times the load generator may
+/// resubmit a request the server shed (`Overloaded`), with jittered
+/// exponential backoff between attempts. A bare flag picks the
+/// conventional 3 retries; absent = 0 (sheds are final).
+fn parse_retry_budget(flags: &HashMap<String, String>) -> Result<u32> {
+    match flags.get("retry-budget") {
+        Some(v) if !v.is_empty() => v
+            .parse::<u32>()
+            .map_err(|_| EmberError::Parse(format!("bad --retry-budget value `{v}`"))),
+        Some(_) => Ok(3),
+        None => Ok(0),
+    }
+}
+
 /// One `--qps` sweep entry: unthrottled, an absolute rate, or a
 /// multiple of calibrated capacity (`1.5x`, `3x`).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -446,6 +485,8 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let store = parse_store(flags)?;
     let qos = parse_qos(flags)?;
     let deadline = parse_deadline(flags)?;
+    let threads = parse_threads(flags)?;
+    let retry_budget = parse_retry_budget(flags)?;
 
     // model shape: manifest when the PJRT backend can actually execute
     // the artifacts (`can_execute` — the stub build loads artifacts for
@@ -503,7 +544,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     let sink =
         if trace_path.is_some() { TraceSink::enabled() } else { TraceSink::disabled() };
     println!(
-        "serving: {num_tables} tables x {rows} rows, batch {}, {shards} embedding shard(s), {clients} client(s), {dist} indices, {} arrivals\n",
+        "serving: {num_tables} tables x {rows} rows, batch {}, {shards} embedding shard(s) x {threads} kernel thread(s), {clients} client(s), {dist} indices, {} arrivals\n",
         shape.batch,
         if open_loop { "open-loop poisson" } else { "closed-loop" }
     );
@@ -528,7 +569,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         let coord = Coordinator::start_sharded(
             make_model()?,
             artifacts_dir.clone(),
-            ServeOptions { batch: batch_opts, shards, ..Default::default() },
+            ServeOptions { batch: batch_opts, shards, threads, ..Default::default() },
         );
         let spec = LoadSpec {
             clients,
@@ -547,7 +588,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         let coord = Coordinator::start_sharded_traced(
             make_model()?,
             artifacts_dir.clone(),
-            ServeOptions { batch: batch_opts, shards, qos },
+            ServeOptions { batch: batch_opts, shards, qos, threads },
             sink.clone(),
         );
         let report = if open_loop {
@@ -558,6 +599,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
                 collectors: clients,
                 dist,
                 deadline,
+                retry_budget,
             };
             run_open_loop(&coord, spec, |k| {
                 synthetic_request_with(num_tables, rows, dense, max_lookups, dist, 0, k)
@@ -569,6 +611,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
                 target_qps: target,
                 dist,
                 deadline,
+                retry_budget,
             };
             run_closed_loop(&coord, spec, |c, k| {
                 synthetic_request_with(num_tables, rows, dense, max_lookups, dist, c, k)
@@ -630,6 +673,8 @@ fn cmd_serve_net(flags: &HashMap<String, String>) -> Result<()> {
     let store = parse_store(flags)?;
     let qos = parse_qos(flags)?;
     let deadline = parse_deadline(flags)?;
+    let threads = parse_threads(flags)?;
+    let retry_budget = parse_retry_budget(flags)?;
     let qps_spec = parse_qps_list(flags)?[0]; // net mode serves one target per run
     let open_loop = flags.contains_key("open-loop");
     let (max_lookups, dense, hidden) = (32usize, 13usize, 64usize);
@@ -675,6 +720,8 @@ fn cmd_serve_net(flags: &HashMap<String, String>) -> Result<()> {
                     batch.to_string(),
                     "--seed".into(),
                     seed.to_string(),
+                    "--threads".into(),
+                    threads.to_string(),
                 ];
                 if let Some(cfg) = &store {
                     child_args.push("--hot-frac".into());
@@ -804,6 +851,10 @@ fn cmd_serve_net(flags: &HashMap<String, String>) -> Result<()> {
             },
             shards: 1,
             qos,
+            // the frontend coordinator never runs the embedding
+            // kernels itself; --threads rides to the shard-server
+            // children via `child_args` above
+            threads: 1,
         },
         Box::new(frontend),
         sink.clone(),
@@ -816,6 +867,7 @@ fn cmd_serve_net(flags: &HashMap<String, String>) -> Result<()> {
             collectors: clients,
             dist,
             deadline,
+            retry_budget,
         };
         run_open_loop(&coord, spec, |k| {
             synthetic_request_with(tables, rows, dense, max_lookups, dist, 0, k)
@@ -827,6 +879,7 @@ fn cmd_serve_net(flags: &HashMap<String, String>) -> Result<()> {
             target_qps: target,
             dist,
             deadline,
+            retry_budget,
         };
         run_closed_loop(&coord, spec, |c, k| {
             synthetic_request_with(tables, rows, dense, max_lookups, dist, c, k)
@@ -857,9 +910,10 @@ fn cmd_serve_net(flags: &HashMap<String, String>) -> Result<()> {
     // Machine-greppable summary for the CI smoke job. `hit_pct` /
     // `resident_mb` append after the original fields so existing greps
     // on the prefix keep matching (both are 0.00 on dense shards).
-    // `shed` appends after the original fields for the same reason.
+    // `shed` and `retries` append after the original fields for the
+    // same reason.
     println!(
-        "NET_SERVE ok={} errors={} degraded={} alive={} p99_us={} degraded_pct={:.2} hit_pct={:.2} resident_mb={:.2} shed={}",
+        "NET_SERVE ok={} errors={} degraded={} alive={} p99_us={} degraded_pct={:.2} hit_pct={:.2} resident_mb={:.2} shed={} retries={}",
         report.ok,
         report.errors,
         stats.degraded,
@@ -869,6 +923,7 @@ fn cmd_serve_net(flags: &HashMap<String, String>) -> Result<()> {
         shard_store.hit_pct(),
         shard_store.resident_bytes as f64 / (1024.0 * 1024.0),
         report.shed,
+        report.retries,
     );
 
     // Merge the trace before tearing the shards down: a stopped shard
@@ -1005,6 +1060,7 @@ fn cmd_shard_server(flags: &HashMap<String, String>) -> Result<()> {
         seed: flags.get("seed").and_then(|v| v.parse().ok()).unwrap_or(42),
         owned: own.clone(),
         store: parse_store(flags)?,
+        threads: parse_threads(flags)?,
     };
     let ep = Endpoint::parse(socket)?;
     let trace =
@@ -1136,6 +1192,23 @@ mod tests {
         for bad in ["0", "-3", "soon", "inf"] {
             assert!(parse_deadline(&flags(&["--deadline-ms", bad])).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn threads_parse_defaults_and_rejects_zero() {
+        assert_eq!(parse_threads(&flags(&[])).unwrap(), 1);
+        assert_eq!(parse_threads(&flags(&["--threads", "4"])).unwrap(), 4);
+        assert!(parse_threads(&flags(&["--threads", "0"])).is_err());
+        assert!(parse_threads(&flags(&["--threads", "many"])).is_err());
+        assert!(parse_threads(&flags(&["--threads"])).is_err(), "bare --threads needs a value");
+    }
+
+    #[test]
+    fn retry_budget_parses_with_bare_flag_convention() {
+        assert_eq!(parse_retry_budget(&flags(&[])).unwrap(), 0);
+        assert_eq!(parse_retry_budget(&flags(&["--retry-budget", "8"])).unwrap(), 8);
+        assert_eq!(parse_retry_budget(&flags(&["--retry-budget"])).unwrap(), 3);
+        assert!(parse_retry_budget(&flags(&["--retry-budget", "-1"])).is_err());
     }
 
     #[test]

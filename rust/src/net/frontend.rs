@@ -503,6 +503,7 @@ mod tests {
                 seed: SEED,
                 owned,
                 store: None,
+                threads: 1,
             };
             servers.push(ShardServer::spawn(ep.clone(), cfg).unwrap());
             eps.push(ep);
@@ -648,6 +649,7 @@ mod tests {
                 seed: SEED,
                 owned,
                 store: None,
+                threads: 1,
             };
             servers.push(
                 ShardServer::spawn_traced(ep.clone(), cfg, TraceSink::enabled()).unwrap(),
@@ -740,6 +742,7 @@ mod tests {
             seed: SEED,
             owned: placement(TABLES, 1, 0).remove(0),
             store: None,
+            threads: 1,
         };
         let srv = ShardServer::spawn(eps[0].clone(), cfg).unwrap();
         std::thread::sleep(Duration::from_millis(20)); // let backoff expire

@@ -20,7 +20,7 @@ use super::transport::{Endpoint, NetStream};
 use crate::coordinator::stats::LatencyHist;
 use crate::coordinator::{gen_tables, Request};
 use crate::error::{EmberError, Result};
-use crate::exec::{Backend, Bindings, Executor, Instance};
+use crate::exec::{Backend, Bindings, ExecOptions, Executor, Instance};
 use crate::store::{EmbeddingStore, StoreCfg};
 use crate::frontend::embedding_ops::OpClass;
 use crate::session::EmberSession;
@@ -51,6 +51,10 @@ pub struct ShardServerCfg {
     /// pre-store behavior); `Some(cfg)` serves them from a tiered
     /// hot/cold store (`--hot-frac` / `--cold` on `ember shard-server`).
     pub store: Option<StoreCfg>,
+    /// Intra-batch kernel threads per connection executor
+    /// (`--threads` on `ember shard-server`); `1` keeps the fast path
+    /// serial, higher counts stay byte-identical.
+    pub threads: usize,
 }
 
 /// Counters shared across connection threads, shipped in `StatsResp`.
@@ -298,7 +302,8 @@ fn serve_conn(
     }
 
     // Per-connection executor + pre-bound bindings, ShardPool-style.
-    let mut exec = match Instance::new(program, Backend::Fast) {
+    let opts = ExecOptions::with_threads(cfg.threads.max(1));
+    let mut exec = match Instance::with_options(program, Backend::Fast, opts) {
         Ok(i) => i,
         Err(_) => return,
     };
@@ -503,6 +508,7 @@ mod tests {
             seed: 42,
             owned,
             store: None,
+            threads: 1,
         }
     }
 

@@ -28,7 +28,7 @@
 use crate::compiler::pass_manager::{DumpHook, PassTrace};
 use crate::compiler::passes::pipeline::{compile_scf, CompileOptions, CompiledProgram};
 use crate::error::{EmberError, Result};
-use crate::exec::{Backend, Instance};
+use crate::exec::{Backend, ExecOptions, Instance};
 use crate::frontend::embedding_ops::OpClass;
 use crate::frontend::Frontend;
 use crate::ir::scf::ScfFunc;
@@ -147,6 +147,19 @@ impl EmberSession {
     ) -> Result<Instance> {
         let program = self.compile_with(front, opts)?;
         Instance::new(&program, backend)
+    }
+
+    /// [`EmberSession::instantiate`] with explicit [`ExecOptions`]
+    /// (thread count for the fast path's intra-batch parallelism;
+    /// other backends ignore it).
+    pub fn instantiate_opts<F: Frontend + ?Sized>(
+        &mut self,
+        front: &F,
+        backend: Backend,
+        exec_opts: ExecOptions,
+    ) -> Result<Instance> {
+        let program = self.compile(front)?;
+        Instance::with_options(&program, backend, exec_opts)
     }
 
     // -------------------------------------------------- multi-op path

@@ -17,7 +17,7 @@
 //! `BENCH_*.json` files accumulate.
 
 use crate::error::{EmberError, Result};
-use crate::exec::{Backend, Bindings, Executor};
+use crate::exec::{Backend, Bindings, ExecOptions, Executor};
 use crate::frontend::embedding_ops::{OpClass, Semiring};
 use crate::frontend::formats::{BlockGathers, Csr, FlatLookups};
 use crate::session::EmberSession;
@@ -290,11 +290,16 @@ pub struct CellSpec {
     /// run includes row staging / dequantize-on-miss. `None` is the
     /// dense fp32 path, byte-identical to the pre-store matrix.
     pub store: Option<StoreCfg>,
+    /// Intra-batch kernel threads for the fast path (`ExecOptions::
+    /// threads`); `1` is the serial baseline. Cells with `threads > 1`
+    /// get a `/tN` name suffix so they join the baseline as distinct
+    /// workloads instead of overwriting the serial measurement.
+    pub threads: usize,
 }
 
 impl CellSpec {
     pub fn name(&self) -> String {
-        match &self.store {
+        let mut name = match &self.store {
             Some(cfg) => format!(
                 "{}/b{}/r{}/hot{}-{}",
                 self.op.name(),
@@ -304,7 +309,11 @@ impl CellSpec {
                 cfg.cold
             ),
             None => format!("{}/b{}/r{}", self.op.name(), self.batch, self.table_rows),
+        };
+        if self.threads > 1 {
+            name.push_str(&format!("/t{}", self.threads));
         }
+        name
     }
 }
 
@@ -318,10 +327,11 @@ pub struct MatrixSpec {
 }
 
 impl MatrixSpec {
-    /// CI smoke matrix: the one SLS cell the checked-in baseline
-    /// (`ci/bench_baseline.json`) gates on, plus its tiered-store twin
-    /// (new coverage — absent from older baselines, so it measures
-    /// without gating until the baseline is refreshed).
+    /// CI smoke matrix: the SLS cell the checked-in baseline
+    /// (`ci/bench_baseline.json`) gates on, its tiered-store twin, and
+    /// a 4-thread twin exercising the fast path's intra-batch
+    /// parallelism — so the parallel kernels are measured and gated on
+    /// every PR, not just the serial ones.
     pub fn smoke(seed: u64) -> MatrixSpec {
         MatrixSpec {
             seed,
@@ -334,6 +344,7 @@ impl MatrixSpec {
                     emb: 32,
                     lookups_per_row: 32,
                     store: None,
+                    threads: 1,
                 },
                 CellSpec {
                     op: OpClass::Sls,
@@ -342,6 +353,16 @@ impl MatrixSpec {
                     emb: 32,
                     lookups_per_row: 32,
                     store: StoreCfg::new(0.1, crate::store::ColdFormat::Int8).ok(),
+                    threads: 1,
+                },
+                CellSpec {
+                    op: OpClass::Sls,
+                    batch: 32,
+                    table_rows: 2048,
+                    emb: 32,
+                    lookups_per_row: 32,
+                    store: None,
+                    threads: 4,
                 },
             ],
         }
@@ -359,6 +380,7 @@ impl MatrixSpec {
                 emb: 32,
                 lookups_per_row: 32,
                 store: None,
+                threads: 1,
             });
             cells.push(CellSpec {
                 op: OpClass::Spmm,
@@ -367,6 +389,7 @@ impl MatrixSpec {
                 emb: 32,
                 lookups_per_row: 16,
                 store: None,
+                threads: 1,
             });
         }
         cells.push(CellSpec {
@@ -376,6 +399,7 @@ impl MatrixSpec {
             emb: 32,
             lookups_per_row: 64,
             store: None,
+            threads: 1,
         });
         // the big SLS cell again through the tiered store: the cost of
         // staging + dequantize-on-miss is the delta vs the cell above
@@ -386,6 +410,7 @@ impl MatrixSpec {
             emb: 32,
             lookups_per_row: 64,
             store: StoreCfg::new(0.1, crate::store::ColdFormat::Int8).ok(),
+            threads: 1,
         });
         cells.push(CellSpec {
             op: OpClass::Kg(Semiring::PlusTimes),
@@ -394,6 +419,7 @@ impl MatrixSpec {
             emb: 32,
             lookups_per_row: 1,
             store: None,
+            threads: 1,
         });
         cells.push(CellSpec {
             op: OpClass::SpAttn { block: 4 },
@@ -402,6 +428,7 @@ impl MatrixSpec {
             emb: 32,
             lookups_per_row: 4,
             store: None,
+            threads: 1,
         });
         cells.push(CellSpec {
             op: OpClass::Mp,
@@ -410,6 +437,7 @@ impl MatrixSpec {
             emb: 16,
             lookups_per_row: 6,
             store: None,
+            threads: 1,
         });
         MatrixSpec { seed, target: Duration::from_millis(150), cells }
     }
@@ -504,7 +532,11 @@ pub fn run_matrix(spec: &MatrixSpec) -> Result<PerfRecording> {
         let name = cell.name();
         let mut interp_mean_ns = 0.0f64;
         for backend in [Backend::Interp, Backend::Fast, Backend::HandOpt] {
-            let mut exec = session.instantiate(&cell.op, backend)?;
+            let mut exec = session.instantiate_opts(
+                &cell.op,
+                backend,
+                ExecOptions::with_threads(cell.threads.max(1)),
+            )?;
             let mut b = bindings.clone();
             // surface compile/bind errors before timing (also warmup)
             if b.is_store_backed() {
@@ -704,6 +736,7 @@ mod tests {
                 emb: 8,
                 lookups_per_row: 4,
                 store: None,
+                threads: 1,
             }],
         };
         let rec = run_matrix(&spec).unwrap();
@@ -740,6 +773,7 @@ mod tests {
                 store: Some(
                     StoreCfg::new(0.25, crate::store::ColdFormat::Int8).unwrap(),
                 ),
+                threads: 1,
             }],
         };
         let rec = run_matrix(&spec).unwrap();
@@ -754,5 +788,33 @@ mod tests {
         // the tiered resident set must undercut the dense fp32 table
         let dense_bytes = (64 * 8 * std::mem::size_of::<f32>()) as u64;
         assert!(rec.records[0].store_resident_bytes.unwrap() < dense_bytes);
+    }
+
+    /// Threaded cells get distinct workload names (`/tN`) — so they
+    /// join the baseline as their own gated rows — and still run every
+    /// backend (the non-fast backends just ignore the option).
+    #[test]
+    fn threaded_cell_is_named_apart_and_runs() {
+        let cell = CellSpec {
+            op: OpClass::Sls,
+            batch: 4,
+            table_rows: 64,
+            emb: 8,
+            lookups_per_row: 4,
+            store: None,
+            threads: 4,
+        };
+        assert_eq!(cell.name(), "sls/b4/r64/t4");
+        let spec =
+            MatrixSpec { seed: 7, target: Duration::from_millis(3), cells: vec![cell] };
+        let rec = run_matrix(&spec).unwrap();
+        assert_eq!(rec.records.len(), 3);
+        for r in &rec.records {
+            assert_eq!(r.workload, "sls/b4/r64/t4");
+            assert!(r.mean_ns > 0.0, "{r:?}");
+        }
+        // the smoke matrix carries the t4 cell CI gates on
+        let smoke = MatrixSpec::smoke(1);
+        assert!(smoke.cells.iter().any(|c| c.threads == 4 && c.name().ends_with("/t4")));
     }
 }

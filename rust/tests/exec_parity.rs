@@ -64,6 +64,43 @@ fn workloads(seed: u64) -> Vec<(OpClass, Bindings)> {
     out
 }
 
+/// Every op class with a canonical workload at an arbitrary embedding
+/// width — the axis the vectorized kernels specialize on.
+fn workloads_at(seed: u64, emb: usize) -> Vec<(OpClass, Bindings)> {
+    let mut rng = Rng::new(seed ^ ((emb as u64) << 16));
+    let mut out = Vec::new();
+
+    let table = Tensor::f32(vec![48, emb], rng.normal_vec(48 * emb, 1.0));
+    let csr = rand_csr(&mut rng, 7, 48, 6);
+    out.push((OpClass::Sls, Bindings::sls(&csr, &table)));
+
+    let weighted = rand_csr(&mut rng, 6, 48, 5);
+    let vals = rng.normal_vec(weighted.nnz(), 1.0);
+    let weighted = weighted.with_vals(vals);
+    out.push((OpClass::Spmm, Bindings::spmm(&weighted, &table)));
+
+    let feats = Tensor::f32(vec![9, emb], rng.normal_vec(9 * emb, 0.7));
+    let adj = rand_csr(&mut rng, 9, 9, 4);
+    out.push((OpClass::Mp, Bindings::mp(&adj, &feats)));
+
+    for sem in [Semiring::PlusTimes, Semiring::MaxPlus] {
+        let fl = FlatLookups {
+            idxs: (0..11).map(|_| rng.below(48) as i32).collect(),
+            num_rows: 48,
+        };
+        out.push((OpClass::Kg(sem), Bindings::kg(sem, &fl, &table)));
+    }
+
+    let keys = Tensor::f32(vec![10 * 4, emb], rng.normal_vec(10 * 4 * emb, 0.5));
+    let bg = BlockGathers {
+        block_idxs: (0..5).map(|_| rng.below(10) as i32).collect(),
+        block: 4,
+        num_key_blocks: 10,
+    };
+    out.push((OpClass::SpAttn { block: 4 }, Bindings::spattn(&bg, &keys)));
+    out
+}
+
 #[test]
 fn all_backends_agree_for_every_op_class() {
     let mut session = EmberSession::default();
@@ -311,6 +348,32 @@ fn fast_backend_zero_lookup_parity_for_every_op_class() {
     let mut exec = session.instantiate(&OpClass::Mp, Backend::Fast).unwrap();
     let out = exec.run(&mut Bindings::mp(&lonely, &feats)).unwrap().output;
     assert!(out.iter().all(|&v| v == 0.0), "mp on fast: isolated nodes");
+}
+
+#[test]
+fn fast_matches_interp_across_widths_and_thread_counts() {
+    // the tentpole contract: the vectorized/threaded fast kernels stay
+    // byte-identical to the interpreter for every op class, at widths
+    // bracketing the monomorphic 32/64/128 fast paths and the 8-lane
+    // remainder, at 1 thread and at 4
+    use ember::exec::ExecOptions;
+    let mut session = EmberSession::default();
+    for &emb in &[1usize, 7, 8, 31, 32, 33, 64, 127, 128, 129, 257] {
+        for (op, bindings) in workloads_at(11, emb) {
+            let mut interp = session.instantiate(&op, Backend::Interp).unwrap();
+            let want = interp.run(&mut bindings.clone()).unwrap().output;
+            for threads in [1usize, 4] {
+                let mut fast = session
+                    .instantiate_opts(&op, Backend::Fast, ExecOptions::with_threads(threads))
+                    .unwrap();
+                let got = fast.run(&mut bindings.clone()).unwrap().output;
+                assert_eq!(
+                    got, want,
+                    "{op:?} emb={emb} threads={threads}: fast diverged from interp"
+                );
+            }
+        }
+    }
 }
 
 #[test]

@@ -176,3 +176,41 @@ fn compile_cli_pipeline_emits_all_irs() {
     assert!(dlc.contains("loop_tr"));
     assert!(dlc.contains("ctrlQ.pop()"));
 }
+
+#[test]
+fn session_cache_compiles_identical_requests_once() {
+    // compiling the same (OpClass, CompileOptions) twice observes
+    // exactly one PassTrace
+    let mut session = EmberSession::default();
+    let first = session.compile(&OpClass::Sls).unwrap();
+    let second = session.compile(&OpClass::Sls).unwrap();
+    assert!(
+        std::sync::Arc::ptr_eq(&first, &second),
+        "cache must return the same program"
+    );
+    assert_eq!(session.traces().len(), 1, "one pipeline run for two identical requests");
+
+    // a different op class is a miss...
+    session.compile(&OpClass::Mp).unwrap();
+    assert_eq!(session.traces().len(), 2);
+    // ...and so are different options for a cached op class
+    session.compile_with(&OpClass::Sls, CompileOptions::with_opt(OptLevel::O1)).unwrap();
+    assert_eq!(session.traces().len(), 3);
+    assert_eq!(session.cached_programs(), 3);
+}
+
+#[test]
+fn pass_trace_names_follow_the_opt_level() {
+    let mut session = EmberSession::with_options(CompileOptions::with_opt(OptLevel::O2));
+    session.compile(&OpClass::Sls).unwrap();
+    let names: Vec<&str> =
+        session.traces()[0].reports.iter().map(|r| r.pass).collect();
+    assert_eq!(names, vec!["vectorize", "bufferize"]);
+
+    // SpAttn at O3 takes the store-stream path
+    let mut session = EmberSession::with_options(CompileOptions::with_opt(OptLevel::O3));
+    session.compile(&OpClass::SpAttn { block: 4 }).unwrap();
+    let names: Vec<&str> =
+        session.traces()[0].reports.iter().map(|r| r.pass).collect();
+    assert_eq!(names, vec!["vectorize", "store_streams", "queue_align"]);
+}

@@ -1,0 +1,166 @@
+//! Property sweep for the vectorized fast kernels: every registry
+//! kernel, at every embedding width from 1 through 257 (covering the
+//! monomorphic 32/64/128 fast paths, their off-by-one neighbours, and
+//! widths that are not a multiple of the 8-f32 lane block), must be
+//! byte-identical to the retained scalar reference — at 1 thread and
+//! at 4, with empty bags and single-row tables included.
+
+use ember::data::{Env, Tensor};
+use ember::exec::{Bindings, ExecOptions, KernelRegistry, KernelSpec};
+use ember::frontend::embedding_ops::Semiring;
+use ember::frontend::formats::{BlockGathers, Csr, FlatLookups};
+use ember::util::rng::Rng;
+
+/// Widths that bracket every dispatch boundary: the monomorphic
+/// 32/64/128 variants, their neighbours, lane-block multiples, and
+/// odd remainder widths.
+const WIDTHS: &[usize] =
+    &[1, 2, 3, 5, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 65, 127, 128, 129, 255, 256, 257];
+
+const THREADS: &[usize] = &[1, 4];
+
+/// Run one kernel over a fresh env: `threads = None` takes the scalar
+/// reference, `Some(t)` the vectorized path at `t` threads.
+fn run_kernel(spec: &KernelSpec, mut env: Env, threads: Option<usize>) -> Vec<f32> {
+    let mut out = env.tensors.remove("out").expect("bindings always bind `out`");
+    let ok = match threads {
+        None => spec.run_reference(&env, &mut out),
+        Some(t) => spec.run(&env, &mut out, &ExecOptions::with_threads(t)),
+    };
+    assert!(ok, "{}: kernel declined a validated env", spec.name());
+    out.as_f32()
+}
+
+/// Assert vectorized == reference byte-for-byte at every thread count.
+fn assert_parity(spec: &KernelSpec, mk_env: impl Fn() -> Env, what: &str) {
+    let want = run_kernel(spec, mk_env(), None);
+    for &t in THREADS {
+        let got = run_kernel(spec, mk_env(), Some(t));
+        assert_eq!(
+            got,
+            want,
+            "{} ({what}): vectorized t={t} diverged from scalar reference",
+            spec.name()
+        );
+    }
+}
+
+/// Random CSR with a mix of bag sizes, always including an empty bag.
+fn rand_csr(rng: &mut Rng, rows: usize, cols: usize, max_deg: usize) -> Csr {
+    let lists: Vec<Vec<i32>> = (0..rows)
+        .map(|b| {
+            if b == 1 {
+                return Vec::new(); // pinned empty bag
+            }
+            let d = rng.below(max_deg as u64 + 1) as usize;
+            (0..d).map(|_| rng.below(cols as u64) as i32).collect()
+        })
+        .collect();
+    Csr::from_rows(cols, &lists)
+}
+
+#[test]
+fn csr_kernels_match_reference_across_every_width_1_to_257() {
+    let reg = KernelRegistry::builtin();
+    let sls = reg.get("sls-gather").expect("sls-gather registered");
+    let spmm = reg.get("spmm-row-gather").expect("spmm-row-gather registered");
+    for emb in 1..=257usize {
+        let mut rng = Rng::new(0x5E_EDB ^ emb as u64);
+        let trows = 48;
+        let table = Tensor::f32(vec![trows, emb], rng.normal_vec(trows * emb, 1.0));
+        let csr = rand_csr(&mut rng, 8, trows, 6);
+        let weighted = csr.clone().with_vals(rng.normal_vec(csr.nnz(), 1.0));
+        assert_parity(sls, || Bindings::sls(&csr, &table).into_env(), &format!("emb={emb}"));
+        assert_parity(
+            spmm,
+            || Bindings::spmm(&weighted, &table).into_env(),
+            &format!("emb={emb} weighted"),
+        );
+    }
+}
+
+#[test]
+fn kg_kernels_match_reference_across_widths_and_semirings() {
+    let reg = KernelRegistry::builtin();
+    for &emb in WIDTHS {
+        let mut rng = Rng::new(0x26 ^ emb as u64);
+        let trows = 32;
+        // normal values go negative, so MaxPlus rectification is live
+        let table = Tensor::f32(vec![trows, emb], rng.normal_vec(trows * emb, 1.0));
+        let fl = FlatLookups {
+            idxs: (0..9).map(|_| rng.below(trows as u64) as i32).collect(),
+            num_rows: trows,
+        };
+        for (name, semiring) in
+            [("kg-gather", Semiring::PlusTimes), ("kg-gather-maxplus", Semiring::MaxPlus)]
+        {
+            let spec = reg.get(name).expect("kg kernels registered");
+            assert_parity(
+                spec,
+                || Bindings::kg(semiring, &fl, &table).into_env(),
+                &format!("emb={emb}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn block_gather_matches_reference_across_widths() {
+    let spec = KernelRegistry::builtin().get("block-gather").expect("block-gather registered");
+    for &emb in WIDTHS {
+        let mut rng = Rng::new(0xB10C ^ emb as u64);
+        let (blocks, blk) = (6, 4);
+        let keys = Tensor::f32(vec![blocks * blk, emb], rng.normal_vec(blocks * blk * emb, 1.0));
+        let bg = BlockGathers {
+            block_idxs: (0..5).map(|_| rng.below(blocks as u64) as i32).collect(),
+            block: blk,
+            num_key_blocks: blocks,
+        };
+        assert_parity(spec, || Bindings::spattn(&bg, &keys).into_env(), &format!("emb={emb}"));
+    }
+}
+
+#[test]
+fn degenerate_shapes_match_reference() {
+    let reg = KernelRegistry::builtin();
+    let sls = reg.get("sls-gather").unwrap();
+    let spmm = reg.get("spmm-row-gather").unwrap();
+    let kg = reg.get("kg-gather").unwrap();
+    for &emb in &[1usize, 8, 33, 128] {
+        let mut rng = Rng::new(0xDE6 ^ emb as u64);
+
+        // every bag empty: the kernels must leave `out` all-zero
+        let table = Tensor::f32(vec![16, emb], rng.normal_vec(16 * emb, 1.0));
+        let empty = Csr::from_rows(16, &[Vec::new(), Vec::new(), Vec::new()]);
+        assert_parity(sls, || Bindings::sls(&empty, &table).into_env(), "all-empty bags");
+        let zero = run_kernel(sls, Bindings::sls(&empty, &table).into_env(), Some(4));
+        assert!(zero.iter().all(|&v| v == 0.0), "empty bags must stay zero");
+
+        // single-row table: every index is forced to row 0
+        let one_row = Tensor::f32(vec![1, emb], rng.normal_vec(emb, 1.0));
+        let csr = Csr::from_rows(1, &[vec![0, 0, 0], vec![], vec![0]]);
+        let weighted = csr.clone().with_vals(rng.normal_vec(csr.nnz(), 1.0));
+        assert_parity(sls, || Bindings::sls(&csr, &one_row).into_env(), "single-row table");
+        assert_parity(
+            spmm,
+            || Bindings::spmm(&weighted, &one_row).into_env(),
+            "single-row table weighted",
+        );
+        let fl = FlatLookups { idxs: vec![0, 0], num_rows: 1 };
+        assert_parity(kg, || Bindings::kg(Semiring::PlusTimes, &fl, &one_row).into_env(), "single-row kg");
+    }
+}
+
+#[test]
+fn registry_lists_every_builtin_kernel_in_selection_order() {
+    let reg = KernelRegistry::builtin();
+    let names: Vec<&str> = reg.specs().iter().map(|s| s.name()).collect();
+    assert_eq!(
+        names,
+        vec!["sls-gather", "spmm-row-gather", "kg-gather", "kg-gather-maxplus", "block-gather"]
+    );
+    for n in names {
+        assert_eq!(reg.get(n).unwrap().name(), n);
+    }
+    assert!(reg.get("nope").is_none());
+}

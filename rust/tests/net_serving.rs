@@ -50,6 +50,7 @@ fn spawn_servers(name: &str, n: usize, replicas: usize) -> (Vec<ShardServer>, Ve
             seed: SEED,
             owned,
             store: None,
+            threads: 1,
         };
         servers.push(ShardServer::spawn(ep.clone(), cfg).unwrap());
         eps.push(ep);

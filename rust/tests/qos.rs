@@ -46,6 +46,7 @@ fn open_loop_overload_sheds_at_admission_without_errors() {
             },
             shards: 1,
             qos: QosOptions { queue_depth: 1, policy: ShedPolicy::Ewma },
+            threads: 1,
         },
     );
     let spec = OpenLoopSpec {
@@ -92,6 +93,7 @@ fn batch_formation_shedding_preserves_survivor_order() {
             },
             shards: 1,
             qos: QosOptions { queue_depth: 0, policy: ShedPolicy::Deadline },
+            threads: 1,
         },
     );
     let client = coord.client().unwrap();
@@ -150,6 +152,7 @@ fn disabled_qos_is_byte_identical_to_direct_inference() {
             },
             shards: 1,
             qos: QosOptions::default(),
+            threads: 1,
         },
     );
     let rxs: Vec<_> = reqs.iter().map(|r| coord.submit(r.clone()).unwrap()).collect();

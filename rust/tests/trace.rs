@@ -53,6 +53,7 @@ fn spawn_traced_servers(name: &str, n: usize) -> (Vec<ShardServer>, Vec<Endpoint
             seed: SEED,
             owned,
             store: None,
+            threads: 1,
         };
         servers.push(ShardServer::spawn_traced(ep.clone(), cfg, TraceSink::enabled()).unwrap());
         eps.push(ep);
